@@ -1,0 +1,58 @@
+//! Regenerate the paper's accuracy figures as CSV + a terminal summary:
+//! Fig 6a/6b (16-bit posit vs b-posit) and Fig 7 (float32 / posit32 /
+//! takum32 / b-posit32), plus the Golden Zone / fovea / census claims.
+//!
+//! Run: `cargo run --release --example accuracy_plots [out_dir]`
+
+use positron::accuracy::{self, decimals_at};
+use positron::formats::posit::{BP16_E3, BP32, P16, P32};
+use positron::formats::{ieee::F32, takum::T32, Codec};
+
+fn main() {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "plots".into());
+    std::fs::create_dir_all(&out_dir).expect("create output dir");
+
+    // Fig 6: 16-bit accuracy curves.
+    let fig6 = accuracy::curves_csv(&[("posit16", &P16), ("bposit16_e3", &BP16_E3)], -64, 64);
+    std::fs::write(format!("{out_dir}/fig6_accuracy16.csv"), &fig6).unwrap();
+
+    // Fig 7: 32-bit accuracy curves across the four formats.
+    let fig7 = accuracy::curves_csv(
+        &[("float32", &F32), ("posit32", &P32), ("takum32", &T32), ("bposit32", &BP32)],
+        -260,
+        260,
+    );
+    std::fs::write(format!("{out_dir}/fig7_accuracy32.csv"), &fig7).unwrap();
+    println!("wrote {out_dir}/fig6_accuracy16.csv, {out_dir}/fig7_accuracy32.csv\n");
+
+    // ASCII rendition of Fig 7 (decimals of accuracy vs scale).
+    println!("Fig 7 (32-bit formats), decimals of accuracy:");
+    println!("{:>6}  {:>8} {:>8} {:>8} {:>8}", "2^e", "float32", "posit32", "takum32", "bposit32");
+    for e in (-256..=256).step_by(32) {
+        let e = e as i32 - 0; // range covers both tails
+        println!(
+            "{:>6}  {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            e,
+            decimals_at(&F32, e),
+            decimals_at(&P32, e),
+            decimals_at(&T32, e),
+            decimals_at(&BP32, e)
+        );
+    }
+
+    // The paper's headline claims, computed live.
+    println!("\npaper claims:");
+    let (lo, hi) = accuracy::golden_zone(&P32, &F32);
+    println!("  posit32 Golden Zone:   2^{lo} … 2^{hi}   (paper: 2^-20 … 2^20)");
+    let (blo, bhi) = accuracy::golden_zone(&BP32, &F32);
+    println!("  b-posit32 Golden Zone: 2^{blo} … 2^{bhi} (paper: 2^-64 … 2^64)");
+    let census = accuracy::pattern_census(&BP32, blo, bhi + 1);
+    println!("  patterns inside:       {:.1}%        (paper: 75%)", census * 100.0);
+    let (flo, fhi, fdec) = accuracy::fovea(&BP32);
+    println!("  b-posit32 fovea:       2^{flo} … 2^{fhi} at {fdec:.2} decimals (paper: 2^-32 … 2^32)");
+    let min16 = accuracy::curve(&BP16_E3, BP16_E3.min_scale(), BP16_E3.max_scale())
+        .iter()
+        .map(|p| p.decimals)
+        .fold(f64::MAX, f64::min);
+    println!("  ⟨16,6,3⟩ accuracy floor: {min16:.2} decimals  (paper: never below 2)");
+}

@@ -1,0 +1,28 @@
+//! Regenerate the paper's hardware evaluation: Tables 5/6 (decoder/encoder
+//! PPA at 16/32/64 bits), the Fig 14/15 comparisons, and the Fig 16
+//! worst-case energy model — on the gate-level cost substrate.
+//!
+//! Run: `cargo run --release --example hw_cost_tables`
+
+use positron::cli;
+use positron::hw::report::{format_table, CostReport};
+
+fn main() {
+    let dec = cli::ppa_rows(false, 40);
+    let enc = cli::ppa_rows(true, 40);
+    println!("{}", format_table("Table 5 — decode PPA (45nm-class cell model)", &dec));
+    println!("{}", format_table("Table 6 — encode PPA", &enc));
+
+    // Fig 16: worst-case energy = (dec_delay + enc_delay) ×
+    // (2·dec_power + enc_power)   [two decodes run in parallel]
+    println!("Fig 16 — worst-case energy per two-operand op (pJ):");
+    println!("{:<10} {:>10} {:>10} {:>10}", "width", "float", "b-posit", "posit");
+    for (i, n) in [16, 32, 64].iter().enumerate() {
+        let e = |d: &CostReport, en: &CostReport| {
+            (d.delay_ns + en.delay_ns) * (2.0 * d.peak_power_mw + en.peak_power_mw)
+        };
+        let row = |k: usize| e(&dec[i * 3 + k], &enc[i * 3 + k]);
+        println!("{:<10} {:>10.2} {:>10.2} {:>10.2}", n, row(0), row(1), row(2));
+    }
+    println!("\n(paper Fig 16: b-posits tie floats at 32 bits and use ~40% less energy at 64 bits)");
+}

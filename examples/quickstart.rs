@@ -1,0 +1,76 @@
+//! Quickstart: the format zoo in action — encode π across formats,
+//! arithmetic with posit semantics, exact dot products with the quire.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use positron::formats::posit::{BP32, P16, P32};
+use positron::formats::{ieee, op_add, op_div, op_mul, op_sqrt, takum, Codec, Decoded, Quire};
+
+fn main() {
+    println!("=== positron quickstart ===\n");
+
+    // Fig 1 of the paper: π at 16 bits — posit beats float.
+    let pi = std::f64::consts::PI;
+    println!("π = {pi}");
+    for c in [
+        &ieee::F16 as &dyn Codec,
+        &P16,
+        &ieee::F32,
+        &P32,
+        &BP32,
+        &takum::T32,
+    ] {
+        let bits = c.encode(&Decoded::from_f64(pi));
+        let back = c.decode(bits).to_f64();
+        println!(
+            "  {:<16} {:#0w$x}  → {:<20} rel err {:.3e}",
+            c.name(),
+            bits,
+            back,
+            ((back - pi) / pi).abs(),
+            w = c.n() as usize / 4 + 2
+        );
+    }
+
+    // The b-posit headline: huge dynamic range with guaranteed significance.
+    println!("\nEinstein's cosmological constant Λ = 1.4657e-52 (paper §1.4):");
+    let lam = 1.4657e-52;
+    for c in [&ieee::F32 as &dyn Codec, &P32, &BP32] {
+        let back = c.roundtrip_f64(lam);
+        println!("  {:<16} → {back:e}", c.name());
+    }
+
+    // Arithmetic runs decode → exact compute → encode, like the hardware.
+    println!("\nb-posit<32,6,5> arithmetic:");
+    let a = BP32.from_f64(2.5);
+    let b = BP32.from_f64(1.5);
+    println!("  2.5 + 1.5 = {}", BP32.to_f64(op_add(&BP32, a, b)));
+    println!("  2.5 × 1.5 = {}", BP32.to_f64(op_mul(&BP32, a, b)));
+    println!("  2.5 ÷ 0   = NaR? {}", op_div(&BP32, a, 0) == BP32.nar());
+    println!("  √2.5      = {}", BP32.to_f64(op_sqrt(&BP32, a)));
+
+    // The quire: one rounding for a whole dot product (800 bits for ⟨n,6,5⟩).
+    println!("\n800-bit quire ({} storage bits):", Quire::paper_800(&BP32).width());
+    let mut q = Quire::exact_for(&BP32);
+    let xs = [1e20, 3.0, -1e20, 4.0];
+    let ys = [1.0, 1.0, 1.0, 0.25];
+    for (x, y) in xs.iter().zip(&ys) {
+        q.add_product(&Decoded::from_f64(*x), &Decoded::from_f64(*y));
+    }
+    println!("  Σ xᵢyᵢ with x = {xs:?}, y = {ys:?}");
+    println!("  quire result  = {} (exact: 4.0)", q.to_decoded().to_f64());
+    let mut naive = BP32.from_f64(0.0);
+    for (x, y) in xs.iter().zip(&ys) {
+        let prod = op_mul(&BP32, BP32.from_f64(*x), BP32.from_f64(*y));
+        naive = op_add(&BP32, naive, prod);
+    }
+    println!("  naive result  = {} (cancellation lost the small terms)", BP32.to_f64(naive));
+
+    // Comparisons are integer comparisons (posit superpower).
+    println!("\ncomparison = signed integer compare:");
+    let v = [-2.0f64, -0.5, 0.0, 0.5, 2.0];
+    let mut bits: Vec<u64> = v.iter().map(|&x| BP32.from_f64(x)).collect();
+    bits.sort_by(|&a, &b| BP32.cmp_bits(a, b));
+    let sorted: Vec<f64> = bits.iter().map(|&b| BP32.to_f64(b)).collect();
+    println!("  sorted via cmp_bits: {sorted:?}");
+}

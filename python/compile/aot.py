@@ -1,0 +1,160 @@
+"""AOT pipeline: train the model, lower every computation to HLO **text**,
+and emit the artifacts the Rust runtime loads.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+- model_f32.hlo.txt      f32 MLP forward: (x, w1, b1, w2, b2) → logits
+- model_bposit.hlo.txt   quantized forward: weights as int32 b-posit words,
+                         decoded in-graph by the Pallas kernels
+- codec_decode.hlo.txt   batch b-posit32 → f32 (Pallas, select-based)
+- codec_encode.hlo.txt   batch f32 → b-posit32
+- weights.json           trained weights, quantized words, golden batch
+- vectors.json           cross-language codec vectors (scalar oracle) for
+                         rust/tests/golden_vectors.rs
+- manifest.json          shapes + entry descriptions for the runtime
+
+Python runs once, at build time; the Rust binary is self-contained after.
+"""
+
+import argparse
+import json
+import math
+import os
+import random
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import bposit, scalar
+
+CODEC_LEN = 8192
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model_f32():
+    spec = jax.ShapeDtypeStruct((model.BATCH, model.D), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((model.D, model.H), jnp.float32)
+    b1 = jax.ShapeDtypeStruct((model.H,), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((model.H, model.C), jnp.float32)
+    b2 = jax.ShapeDtypeStruct((model.C,), jnp.float32)
+
+    def fn(x, w1, b1, w2, b2):
+        return (model.forward_f32({"w1": w1, "b1": b1, "w2": w2, "b2": b2}, x),)
+
+    return jax.jit(fn).lower(spec, w1, b1, w2, b2)
+
+
+def lower_model_bposit():
+    spec = jax.ShapeDtypeStruct((model.BATCH, model.D), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((model.D, model.H), jnp.int32)
+    b1 = jax.ShapeDtypeStruct((model.H,), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((model.H, model.C), jnp.int32)
+    b2 = jax.ShapeDtypeStruct((model.C,), jnp.float32)
+
+    def fn(x, w1b, b1, w2b, b2):
+        return (model.forward_bposit(x, w1b, b1, w2b, b2),)
+
+    return jax.jit(fn).lower(spec, w1, b1, w2, b2)
+
+
+def lower_codec():
+    bits = jax.ShapeDtypeStruct((CODEC_LEN,), jnp.int32)
+    xs = jax.ShapeDtypeStruct((CODEC_LEN,), jnp.float32)
+    dec = jax.jit(lambda b: (bposit.decode(b),)).lower(bits)
+    enc = jax.jit(lambda x: (bposit.encode(x),)).lower(xs)
+    return dec, enc
+
+
+def gen_vectors(path: str, cases_per_spec: int = 512) -> None:
+    """Cross-language golden vectors from the scalar (big-int) oracle.
+
+    Bit patterns and f64 values are emitted as hex strings so JSON never
+    rounds anything.
+    """
+    random.seed(20260710)
+    specs = [
+        ("p16", scalar.P16),
+        ("p32", scalar.P32),
+        ("p64", scalar.P64),
+        ("bp16", scalar.BP16),
+        ("bp32", scalar.BP32),
+        ("bp64", scalar.BP64),
+        ("bp16e3", scalar.BP16_E3),
+    ]
+    out = []
+    for name, sp in specs:
+        dec_cases = []
+        pats = [0, 1, sp.nar, sp.mask, sp.maxpos_body, sp.nar + 1, 1 << (sp.n - 2)]
+        pats += [random.getrandbits(sp.n) for _ in range(cases_per_spec)]
+        for p in pats:
+            p &= sp.mask
+            v = scalar.decode_f64(sp, p)
+            dec_cases.append({"bits": f"{p:x}", "f64": f"{struct.unpack('<Q', struct.pack('<d', v))[0]:016x}"})
+        enc_cases = []
+        vals = [0.0, 1.0, -1.0, 1.5, math.pi, -math.e, 1e30, -1e-30, 6.6e-34, 1.4657e-52]
+        vals += [random.uniform(-2.0, 2.0) * 10.0 ** random.randint(-60, 60) for _ in range(cases_per_spec)]
+        for v in vals:
+            bits = scalar.encode(sp, v)
+            enc_cases.append({"f64": f"{struct.unpack('<Q', struct.pack('<d', v))[0]:016x}", "bits": f"{bits:x}"})
+        out.append({"name": name, "n": sp.n, "rs": sp.rs, "es": sp.es, "decode": dec_cases, "encode": enc_cases})
+    with open(path, "w") as f:
+        json.dump(out, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    def write(name: str, text: str) -> None:
+        p = os.path.join(args.out_dir, name)
+        with open(p, "w") as f:
+            f.write(text)
+        print(f"wrote {p} ({len(text)} chars)")
+
+    print("training model (build-time only)…")
+    params, history, acc = model.train(steps=args.steps)
+    x, y = model.make_dataset(seed=1)
+    qacc = model.quantized_accuracy(params, x, y)
+    print(f"train acc f32={acc:.4f} bposit={qacc:.4f}")
+
+    blob = model.export_weights(params, os.path.join(args.out_dir, "weights.json"), data_seed=1)
+    print(f"wrote weights.json ({len(blob['w1'])}+{len(blob['w2'])} weights)")
+
+    write("model_f32.hlo.txt", to_hlo_text(lower_model_f32()))
+    write("model_bposit.hlo.txt", to_hlo_text(lower_model_bposit()))
+    dec, enc = lower_codec()
+    write("codec_decode.hlo.txt", to_hlo_text(dec))
+    write("codec_encode.hlo.txt", to_hlo_text(enc))
+
+    gen_vectors(os.path.join(args.out_dir, "vectors.json"))
+    print("wrote vectors.json")
+
+    manifest = {
+        "model": {"batch": model.BATCH, "d": model.D, "h": model.H, "c": model.C},
+        "codec_len": CODEC_LEN,
+        "train": {"f32_acc": acc, "bposit_acc": qacc, "loss_history": history},
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

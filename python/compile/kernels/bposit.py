@@ -1,0 +1,207 @@
+"""Pallas kernels for the b-posit32 ⟨32,6,5⟩ codec and the quantized
+matmul — Layer 1 of the stack.
+
+These implement the paper's **select-based** decode/encode (Fig 12/13):
+instead of a leading-zero count feeding a data-dependent barrel shift
+(ref.py, the standard-posit architecture), every field is extracted by a
+five-way select over *constant-shift* candidates keyed on a one-hot
+regime-size detection. On an ASIC that's a 5-input mux; on the TPU VPU
+it's branch-free vectorized selects with no per-lane variable shifts —
+the same insight, mapped to SIMD (DESIGN.md §Hardware-Adaptation).
+
+All kernels use interpret=True: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N = 32
+RS = 6
+ES = 5
+FW = N - 3 - ES  # 24
+NAR = -0x80000000  # NaR pattern as a plain int (jnp scalars cannot be captured by Pallas kernels)
+
+
+# ----------------------------------------------------------------------
+# Select-based scalar-vectorized codec (used inside the kernels)
+# ----------------------------------------------------------------------
+
+def decode_hw(bits):
+    """Mux-based b-posit32 decode: int32 bits → float32 (paper Fig 12)."""
+    u = bits.astype(jnp.uint32)
+    sign = (u >> 31) & 1
+    body = jnp.where(sign == 1, ~u + 1, u) & jnp.uint32(0x7FFFFFFF)
+    m = ((body >> 30) & 1).astype(jnp.uint32)
+    # The five probe bits after the regime MSB, XORed with it (Table 2).
+    xb = ((body >> 25) & jnp.uint32(0x1F)) ^ (m * jnp.uint32(0x1F))
+    x = [(xb >> (4 - i)) & 1 for i in range(5)]  # x[0] = first probe
+    # One-hot regime-size conditions (prefix chain).
+    s = []
+    none_before = None
+    for i in range(5):
+        cond = x[i] == 1 if none_before is None else none_before & (x[i] == 1)
+        s.append(cond)
+        nb = x[i] == 0 if none_before is None else none_before & (x[i] == 0)
+        none_before = nb
+    s5 = none_before  # full six-bit run (Table 2 last row)
+
+    # 5-way payload select over CONSTANT shifts (the one-hot mux):
+    # regime size k ⇒ payload = body << (k+1), aligning exp at bit 31.
+    def shifted(k):
+        return (body << (k + 1)).astype(jnp.uint32)
+
+    payload = jnp.where(
+        s[0], shifted(2),
+        jnp.where(s[1], shifted(3),
+                  jnp.where(s[2], shifted(4),
+                            jnp.where(s[3], shifted(5), shifted(6)))),
+    )
+    # Priority-encoded run length (1..6).
+    run = jnp.where(
+        s[0], 1, jnp.where(s[1], 2, jnp.where(s[2], 3, jnp.where(s[3], 4, jnp.where(s[4], 5, 6))))
+    ).astype(jnp.int32)
+    r = jnp.where(m == 1, run - 1, -run)
+    e = (payload >> (32 - ES)).astype(jnp.int32)
+    f = ((payload >> (32 - ES - FW)) & jnp.uint32((1 << FW) - 1)).astype(jnp.int32)
+    t = r * (1 << ES) + e
+    sig = 1.0 + f.astype(jnp.float32) / jnp.float32(1 << FW)
+    val = jnp.ldexp(sig, jnp.maximum(t, -126)).astype(jnp.float32)
+    val = jnp.where(t < -126, jnp.float32(0), val)  # flush contract
+    val = jnp.where(sign == 1, -val, val)
+    val = jnp.where(u == 0, jnp.float32(0), val)
+    val = jnp.where(bits == jnp.int32(NAR), jnp.float32(jnp.nan), val)
+    return val
+
+
+def _rne_const(f, d):
+    """RNE of f >> d for a *constant* d ≥ 1 (no variable shifts)."""
+    q = f >> d
+    rem = f & ((1 << d) - 1)
+    half = 1 << (d - 1)
+    up = (rem > half) | ((rem == half) & ((q & 1) == 1))
+    return q + up.astype(q.dtype)
+
+
+def encode_hw(x):
+    """Mux-based b-posit32 encode: float32 → int32 bits (paper Fig 13).
+
+    The regime field, fraction width, and rounding position are all chosen
+    by selects over per-size constants — no data-dependent shifts.
+    """
+    xf = x.astype(jnp.float32)
+    sign = xf < 0
+    mag = jnp.abs(xf)
+    mant, e2 = jnp.frexp(mag)
+    t = e2.astype(jnp.int32) - 1
+    f23 = jnp.round((mant * 2 - 1) * (1 << 23)).astype(jnp.uint32)
+    r = t >> ES
+    e5 = (t - (r << ES)).astype(jnp.uint32)
+
+    # Candidate body for each regime size k: constant regime patterns and
+    # constant shifts (Table 3/4 as selects).
+    def body_for(k, reg_pattern):
+        fw = (N - 1 - ES) - k  # 26 - k
+        base = ((jnp.uint32(reg_pattern) << ES) | e5) << fw
+        drop = 23 - fw
+        frac = (f23 << (-drop)) if drop <= 0 else _rne_const(f23, drop)
+        return base + frac
+
+    # Regime pattern constants per r (r ∈ [-6, 5]) and size per r.
+    # size(r): 0,-1→2; 1,-2→3; 2,-3→4; 3,-4→5; else→6.
+    def reg_pat(rv):
+        if rv >= 0:
+            return (1 << RS) - 1 if rv >= RS - 1 else (((1 << (rv + 1)) - 1) << 1)
+        return 0 if rv <= -RS else 1
+
+    def size_of(rv):
+        return min(max(rv + 2 if rv >= 0 else 1 - rv, 2), RS)
+
+    body = jnp.zeros_like(f23)
+    for rv in range(-RS, RS):
+        cand = body_for(size_of(rv), reg_pat(rv))
+        body = jnp.where(r == rv, cand, body)
+    maxpos = jnp.uint32((1 << 31) - 1)
+    body = jnp.where(r > RS - 1, maxpos, body)
+    body = jnp.where(r < -RS, jnp.uint32(1), body)
+    body = jnp.clip(body, jnp.uint32(1), maxpos)
+    word = jnp.where(sign, ~body + 1, body).astype(jnp.int32)
+    word = jnp.where(mag < jnp.float32(2.0**-126), jnp.int32(0), word)
+    word = jnp.where(jnp.isnan(xf) | jnp.isinf(xf), jnp.int32(NAR), word)
+    return word
+
+
+# ----------------------------------------------------------------------
+# Pallas kernels
+# ----------------------------------------------------------------------
+
+def _decode_kernel(bits_ref, o_ref):
+    o_ref[...] = decode_hw(bits_ref[...])
+
+
+def _encode_kernel(x_ref, o_ref):
+    o_ref[...] = encode_hw(x_ref[...])
+
+
+def _matmul_kernel(x_ref, wbits_ref, o_ref):
+    # Decode the b-posit weight tile in VMEM, then feed the MXU-shaped dot.
+    w = decode_hw(wbits_ref[...])
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def decode(bits, block=4096):
+    """Decode a 1-D int32 array of b-posit32 words to float32 via Pallas."""
+    (n,) = bits.shape
+    if n % block != 0:
+        block = n
+    return pl.pallas_call(
+        _decode_kernel,
+        out_shape=jax.ShapeDtypeStruct(bits.shape, jnp.float32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def encode(x, block=4096):
+    """Encode a 1-D float32 array into b-posit32 words via Pallas."""
+    (n,) = x.shape
+    if n % block != 0:
+        block = n
+    return pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, w_bits, bm=64, bn=128):
+    """x (m,k) f32 @ decode(w_bits) (k,n) → (m,n) f32, decode fused into the
+    kernel so the weight tile is expanded HBM→VMEM once per use."""
+    m, k = x.shape
+    k2, n = w_bits.shape
+    assert k == k2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w_bits)

@@ -1,0 +1,124 @@
+"""Pure-jnp reference implementation of the b-posit32 ⟨32,6,5⟩ codec —
+the correctness oracle for the Pallas kernels.
+
+Architecturally this is the *standard posit* decode path: a leading-run
+count followed by data-dependent shifts (the software analogue of the
+LZC → barrel-shifter chain of the paper's Fig 10). The Pallas kernel in
+bposit.py instead implements the paper's *b-posit* select-based algorithm
+(Fig 12) — comparing the two bit-exactly in pytest is the same
+architectural comparison the paper performs in silicon.
+
+All functions are vectorized over int32 arrays holding the bit patterns.
+"""
+
+import jax.numpy as jnp
+
+# ⟨n, rs, es⟩ — the paper's headline configuration.
+N = 32
+RS = 6
+ES = 5
+FW = N - 3 - ES  # fovea fraction width = 24
+NAR = jnp.int32(-0x80000000)
+
+
+def _u(x):
+    return x.astype(jnp.uint32)
+
+
+def decode_ref(bits):
+    """b-posit32 bits (int32) → float32 values (sequential algorithm)."""
+    u = _u(bits)
+    sign = (u >> 31) & 1
+    mag = jnp.where(sign == 1, (~u + 1), u) & jnp.uint32(0x7FFFFFFF)
+    body = mag  # 31-bit body
+    b0 = (body >> 30) & 1
+    # Leading-run count via data-dependent compare loop over the cap width
+    # (sequential architecture: this is a CLZ).
+    x = jnp.where(b0 == 1, ~body, body) & jnp.uint32(0x7FFFFFFF)
+    # Count leading zeros of x within 31 bits, capped at RS.
+    run = jnp.zeros_like(u)
+    for i in range(RS):  # cap bound: only RS iterations matter
+        bit = (x >> (30 - i)) & 1
+        run = jnp.where((run == i) & (bit == 0), i + 1, run)
+    run = jnp.minimum(run, RS)
+    reg_len = jnp.where(run == RS, RS, run + 1)
+    r = jnp.where(b0 == 1, run.astype(jnp.int32) - 1, -run.astype(jnp.int32))
+    # Data-dependent left shift aligns exp‖frac (the "barrel shifter").
+    # The first exponent bit sits at position 30−reg_len; shifting left by
+    # reg_len+1 brings it to bit 31 (the top of the 32-bit window).
+    payload = (body << (reg_len + 1)).astype(jnp.uint32)
+    e = (payload >> (32 - ES)).astype(jnp.int32)
+    f = ((payload >> (32 - ES - FW)) & jnp.uint32((1 << FW) - 1)).astype(jnp.int32)
+    t = r * (1 << ES) + e
+    sig = 1.0 + f.astype(jnp.float32) / jnp.float32(1 << FW)
+    # Kernel contract (documented in DESIGN.md): XLA CPU flushes f32
+    # subnormals (FTZ/DAZ), so the f32-facing codec is defined over the
+    # normal range only: t < −126 flushes to 0, t > 127 overflows to ±inf.
+    val = jnp.ldexp(sig, jnp.maximum(t, -126)).astype(jnp.float32)
+    val = jnp.where(t < -126, jnp.float32(0), val)
+    val = jnp.where(sign == 1, -val, val)
+    val = jnp.where(_u(bits) == 0, jnp.float32(0), val)
+    val = jnp.where(bits == NAR, jnp.float32(jnp.nan), val)
+    return val
+
+
+def _rne_shift(f, d):
+    """Round-to-nearest-even of f >> d (d ≥ 1), vectorized."""
+    q = f >> d
+    rem = f & ((1 << d) - 1)
+    half = 1 << (d - 1)
+    up = (rem > half) | ((rem == half) & ((q & 1) == 1))
+    return q + up.astype(q.dtype)
+
+
+def encode_ref(x):
+    """float32 values → b-posit32 bits (int32), RNE + saturation.
+
+    Sequential architecture: regime built with data-dependent shifts.
+    """
+    xf = x.astype(jnp.float32)
+    sign = xf < 0
+    mag = jnp.abs(xf)
+    m, e2 = jnp.frexp(mag)  # mag = m·2^e2, m ∈ [0.5, 1)
+    t = e2.astype(jnp.int32) - 1
+    # 23-bit fraction of the significand (exact for f32 inputs).
+    f23 = jnp.round((m * 2 - 1) * (1 << 23)).astype(jnp.uint32)
+    r = t >> ES
+    e5 = (t - (r << ES)).astype(jnp.uint32)
+    # Regime field (capped) and size. All pattern math in uint32: the body
+    # never exceeds 2^31, which fits.
+    k = jnp.clip(jnp.where(r >= 0, r + 2, 1 - r), 2, RS)
+    run_p = jnp.clip(r + 1, 0, RS).astype(jnp.uint32)  # positive-run length
+    ones_run = ((jnp.uint32(1) << run_p) - 1) << 1  # terminated pattern
+    reg = jnp.where(
+        r >= 0,
+        jnp.where(r >= RS - 1, jnp.uint32((1 << RS) - 1), ones_run),
+        jnp.where(r <= -RS, jnp.uint32(0), jnp.uint32(1)),
+    )
+    fw = ((N - 1 - ES) - k).astype(jnp.uint32)  # 26 - k
+    base = ((reg << ES) | e5) << fw
+    drop = 23 - fw.astype(jnp.int32)
+    frac = jnp.where(
+        drop <= 0,
+        f23 << jnp.maximum(-drop, 0).astype(jnp.uint32),
+        _rne_shift(f23, jnp.maximum(drop, 1).astype(jnp.uint32)),
+    )
+    body = base + frac
+    # Saturation: clamp to [1, maxpos]; out-of-range scales saturate.
+    maxpos = jnp.uint32((1 << 31) - 1)
+    body = jnp.where(r > RS - 1, maxpos, body)
+    body = jnp.where(r < -RS, jnp.uint32(1), body)
+    body = jnp.clip(body, jnp.uint32(1), maxpos)
+    word = jnp.where(sign, ~body + 1, body)
+    word = word.astype(jnp.int32)
+    # Kernel contract: f32 subnormal inputs are flushed to zero (XLA CPU is
+    # DAZ anyway; making it explicit keeps the behavior deterministic).
+    word = jnp.where(mag < jnp.float32(2.0**-126), jnp.int32(0), word)
+    word = jnp.where(jnp.isnan(xf) | jnp.isinf(xf), NAR, word)
+    return word
+
+
+def matmul_ref(x, w_bits):
+    """Reference quantized matmul: decode b-posit weights, then f32 dot."""
+    w = decode_ref(w_bits)
+    return jnp.dot(x.astype(jnp.float32), w)

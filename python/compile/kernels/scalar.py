@@ -1,0 +1,171 @@
+"""Scalar (pure-Python integer) posit/b-posit codec — the ground-truth
+oracle for the vectorized reference (ref.py) and the Pallas kernels, and
+the generator of the cross-language golden vectors consumed by the Rust
+test suite (rust/tests/golden_vectors.rs).
+
+Semantics mirror rust/src/formats/posit.rs exactly:
+- ⟨n, rs, es⟩ bounded posit; rs = n−1 gives the standard posit.
+- 0…0 = zero, 10…0 = NaR, negatives are 2's complements.
+- Regime run terminated by the opposite bit or by reaching rs bits.
+- Round-to-nearest-even in pattern space with posit saturation.
+
+Python's big ints make the bit-stream construction trivial, which is what
+makes this an independent implementation rather than a port.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from fractions import Fraction
+
+
+@dataclass(frozen=True)
+class Spec:
+    n: int
+    rs: int
+    es: int
+
+    @property
+    def mask(self) -> int:
+        return (1 << self.n) - 1
+
+    @property
+    def nar(self) -> int:
+        return 1 << (self.n - 1)
+
+    @property
+    def maxpos_body(self) -> int:
+        return (1 << (self.n - 1)) - 1
+
+    @property
+    def r_max(self) -> int:
+        return self.rs - 1
+
+    @property
+    def r_min(self) -> int:
+        return -self.rs if self.rs < self.n - 1 else -(self.n - 2)
+
+
+BP32 = Spec(32, 6, 5)
+BP16 = Spec(16, 6, 5)
+BP64 = Spec(64, 6, 5)
+BP16_E3 = Spec(16, 6, 3)
+P16 = Spec(16, 15, 2)
+P32 = Spec(32, 31, 2)
+P64 = Spec(64, 63, 2)
+
+
+def decode(spec: Spec, bits: int) -> Fraction | None:
+    """Decode a pattern to an exact rational; None encodes NaR."""
+    bits &= spec.mask
+    if bits == 0:
+        return Fraction(0)
+    if bits == spec.nar:
+        return None
+    sign = bits >> (spec.n - 1)
+    word = (-bits) & spec.mask if sign else bits
+    m = spec.n - 1
+    body = word & spec.maxpos_body
+    b0 = (body >> (m - 1)) & 1
+    run = 1
+    i = m - 2
+    while i >= 0 and run < spec.rs:
+        if (body >> i) & 1 == b0:
+            run += 1
+            i -= 1
+        else:
+            break
+    reg_len = spec.rs if run == spec.rs else run + 1
+    r = run - 1 if b0 else -run
+    rem_w = m - reg_len
+    rem = body & ((1 << rem_w) - 1) if rem_w > 0 else 0
+    if rem_w >= spec.es:
+        fw = rem_w - spec.es
+        e = rem >> fw
+        f = rem & ((1 << fw) - 1)
+    else:
+        e = rem << (spec.es - rem_w)
+        fw, f = 0, 0
+    t = r * (1 << spec.es) + e
+    sig = Fraction(f, 1 << fw) + 1 if fw else Fraction(1)
+    val = sig * Fraction(2) ** t
+    return -val if sign else val
+
+
+def encode(spec: Spec, x: float | Fraction) -> int:
+    """Encode an exact value with pattern-space RNE + posit saturation."""
+    if isinstance(x, float):
+        if math.isnan(x) or math.isinf(x):
+            return spec.nar
+        x = Fraction(x)
+    if x == 0:
+        return 0
+    sign = x < 0
+    mag = -x if sign else x
+    # T = floor(log2(mag)); Fraction-exact via bit lengths.
+    t = mag.numerator.bit_length() - mag.denominator.bit_length()
+    if Fraction(2) ** t > mag:
+        t -= 1
+    assert Fraction(2) ** t <= mag < Fraction(2) ** (t + 1)
+    r = t >> spec.es
+    e = t - (r << spec.es)
+    if r > spec.r_max:
+        body = spec.maxpos_body
+    elif r < spec.r_min:
+        body = 1
+    else:
+        # Build the bit stream regime ‖ exp ‖ fraction with enough fraction
+        # bits for an exact rounding decision, as a big int + exactness flag.
+        if r >= 0:
+            run = r + 1
+            reg_bits, reg_len = (
+                ((1 << spec.rs) - 1, spec.rs) if run >= spec.rs else ((((1 << run) - 1) << 1), run + 1)
+            )
+        else:
+            run = -r
+            reg_bits, reg_len = ((0, spec.rs) if run >= spec.rs else (1, run + 1))
+        m = spec.n - 1
+        # fraction as exact rational in [0,1)
+        frac = mag / Fraction(2) ** t - 1
+        # Stream value = reg ‖ e ‖ frac; cut at m bits.
+        head = (reg_bits << spec.es) | e
+        head_len = reg_len + spec.es
+        if head_len >= m:
+            keep_head = head >> (head_len - m)
+            # Rounding bit: next bit of head or first frac bit.
+            if head_len == m:
+                g = 1 if frac >= Fraction(1, 2) else 0
+                rest = frac - Fraction(1, 2) * g
+                sticky = rest != 0
+            else:
+                g = (head >> (head_len - m - 1)) & 1
+                below = head & ((1 << (head_len - m - 1)) - 1)
+                sticky = below != 0 or frac != 0
+            body = keep_head + (1 if g and (sticky or keep_head & 1) else 0)
+        else:
+            fw = m - head_len
+            scaled = frac * (1 << fw)
+            fint = int(scaled)  # floor
+            rem = scaled - fint
+            body_floor = (head << fw) | fint
+            if rem > Fraction(1, 2) or (rem == Fraction(1, 2) and body_floor & 1):
+                body = body_floor + 1
+            else:
+                body = body_floor
+        if body >> m:
+            body = spec.maxpos_body
+        if body == 0:
+            body = 1
+        if body > spec.maxpos_body:
+            body = spec.maxpos_body
+    return (-body) & spec.mask if sign else body
+
+
+def decode_f64(spec: Spec, bits: int) -> float:
+    """Decode to float64 (round-to-nearest; NaR → nan)."""
+    v = decode(spec, bits)
+    if v is None:
+        return float("nan")
+    # Fraction → float is correctly rounded in CPython.
+    return float(v)

@@ -1,0 +1,143 @@
+"""Layer 2: the JAX model — an MLP classifier whose weights are stored as
+b-posit32 words and decoded in-graph by the Pallas kernel (the paper's
+format used as a first-class model dtype).
+
+Two forward variants are AOT-compiled for the Rust runtime:
+- `forward_f32`: plain float32 reference.
+- `forward_bposit`: weight matrices arrive as int32 b-posit words; each
+  layer runs the fused decode+matmul Pallas kernel.
+
+`train` fits the f32 model on a synthetic 16-class Gaussian-blob task at
+build time (Python never touches the request path), producing real
+weights for the artifacts.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bposit, ref
+
+# Model dimensions: D-dim features → H hidden → C classes.
+D, H, C = 64, 128, 16
+BATCH = 64
+
+
+def init_params(seed: int = 0):
+    """He-initialized MLP parameters."""
+    rng = np.random.RandomState(seed)
+    return {
+        "w1": jnp.asarray(rng.randn(D, H).astype(np.float32) * np.sqrt(2.0 / D)),
+        "b1": jnp.zeros((H,), jnp.float32),
+        "w2": jnp.asarray(rng.randn(H, C).astype(np.float32) * np.sqrt(2.0 / H)),
+        "b2": jnp.zeros((C,), jnp.float32),
+    }
+
+
+def forward_f32(params, x):
+    """Reference f32 forward pass."""
+    h = jnp.maximum(x @ params["w1"] + params["b1"], 0.0)
+    return h @ params["w2"] + params["b2"]
+
+
+def forward_bposit(x, w1_bits, b1, w2_bits, b2):
+    """Quantized forward: weights decoded from b-posit32 inside the Pallas
+    matmul kernels."""
+    h = jnp.maximum(bposit.matmul(x, w1_bits) + b1, 0.0)
+    return bposit.matmul(h, w2_bits, bm=64, bn=16) + b2
+
+
+def quantize_params(params):
+    """Encode both weight matrices to b-posit32 words (int32)."""
+    w1_bits = bposit.encode(params["w1"].reshape(-1)).reshape(D, H)
+    w2_bits = bposit.encode(params["w2"].reshape(-1)).reshape(H, C)
+    return w1_bits, w2_bits
+
+
+def make_dataset(seed: int = 1, per_class: int = 64):
+    """Synthetic 16-class Gaussian blobs in D dimensions."""
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(C, D).astype(np.float32) * 2.0
+    xs, ys = [], []
+    for c in range(C):
+        xs.append(centers[c] + rng.randn(per_class, D).astype(np.float32))
+        ys.append(np.full(per_class, c, dtype=np.int32))
+    x = np.concatenate(xs)
+    y = np.concatenate(ys)
+    perm = rng.permutation(len(x))
+    return jnp.asarray(x[perm]), jnp.asarray(y[perm])
+
+
+def loss_fn(params, x, y):
+    logits = forward_f32(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+def train(steps: int = 300, lr: float = 0.05, seed: int = 0):
+    """Full-batch gradient descent; returns (params, history, accuracy)."""
+    params = init_params(seed)
+    x, y = make_dataset(seed + 1)
+    grad = jax.jit(jax.grad(loss_fn))
+    lossj = jax.jit(loss_fn)
+    history = []
+    for step in range(steps):
+        g = grad(params, x, y)
+        params = {k: params[k] - lr * g[k] for k in params}
+        if step % 20 == 0 or step == steps - 1:
+            history.append((step, float(lossj(params, x, y))))
+    logits = forward_f32(params, x)
+    acc = float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+    return params, history, acc
+
+
+def quantized_accuracy(params, x, y):
+    """Accuracy of the b-posit-quantized model (Pallas path)."""
+    w1_bits, w2_bits = quantize_params(params)
+    n = (x.shape[0] // BATCH) * BATCH
+    correct = 0
+    for i in range(0, n, BATCH):
+        logits = forward_bposit(x[i : i + BATCH], w1_bits, params["b1"], w2_bits, params["b2"])
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == y[i : i + BATCH]))
+    return correct / n
+
+
+def export_weights(params, path, data_seed=1):
+    """Dump weights (f32 + b-posit32 words) and golden vectors as JSON.
+
+    The golden batch is drawn from the training distribution (same class
+    centers, fresh noise) so the recorded logits/labels are a meaningful
+    accuracy fixture for the Rust serving path."""
+    w1_bits, w2_bits = quantize_params(params)
+    x, y = make_dataset(seed=data_seed, per_class=4)
+    x = x[:BATCH]
+    y = y[:BATCH]
+    golden_f32 = forward_f32(params, x)
+    golden_bp = forward_bposit(x, w1_bits, params["b1"], w2_bits, params["b2"])
+    blob = {
+        "d": D,
+        "h": H,
+        "c": C,
+        "batch": BATCH,
+        "w1": np.asarray(params["w1"]).reshape(-1).tolist(),
+        "b1": np.asarray(params["b1"]).tolist(),
+        "w2": np.asarray(params["w2"]).reshape(-1).tolist(),
+        "b2": np.asarray(params["b2"]).tolist(),
+        "w1_bits": np.asarray(w1_bits).reshape(-1).tolist(),
+        "w2_bits": np.asarray(w2_bits).reshape(-1).tolist(),
+        "golden_x": np.asarray(x).reshape(-1).tolist(),
+        "golden_y": np.asarray(y).tolist(),
+        "golden_logits_f32": np.asarray(golden_f32).reshape(-1).tolist(),
+        "golden_logits_bposit": np.asarray(golden_bp).reshape(-1).tolist(),
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f)
+    return blob
+
+
+def _ref_forward_bposit(x, w1_bits, b1, w2_bits, b2):
+    """Oracle for the quantized forward (pure jnp, sequential decode)."""
+    h = jnp.maximum(ref.matmul_ref(x, w1_bits) + b1, 0.0)
+    return ref.matmul_ref(h, w2_bits) + b2

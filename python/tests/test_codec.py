@@ -1,0 +1,137 @@
+"""Scalar-oracle and vectorized-reference codec tests (hypothesis-driven)."""
+
+import math
+from fractions import Fraction
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, scalar
+
+SPECS = [scalar.P16, scalar.P32, scalar.BP16, scalar.BP32, scalar.BP64, scalar.BP16_E3]
+
+
+# ----------------------------------------------------------------------
+# Scalar oracle self-consistency
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: f"n{s.n}rs{s.rs}es{s.es}")
+@given(bits=st.integers(min_value=0, max_value=(1 << 64) - 1))
+@settings(max_examples=300, deadline=None)
+def test_scalar_roundtrip(spec, bits):
+    bits &= spec.mask
+    v = scalar.decode(spec, bits)
+    if v is None:  # NaR
+        assert bits == spec.nar
+        return
+    back = scalar.encode(spec, v)
+    assert back == bits, f"roundtrip failed for {bits:#x}"
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: f"n{s.n}rs{s.rs}es{s.es}")
+def test_scalar_monotonic_sampled(spec):
+    # Patterns ordered as 2's-complement ints must decode to ordered values.
+    import random
+
+    random.seed(5)
+    pats = sorted({random.getrandbits(spec.n) for _ in range(500)} - {spec.nar})
+    vals = []
+    for raw in pats:
+        signed = raw - (1 << spec.n) if raw >> (spec.n - 1) else raw
+        vals.append((signed, scalar.decode(spec, raw)))
+    vals = [(s, v) for s, v in sorted(vals) if v is not None]
+    for (s1, v1), (s2, v2) in zip(vals, vals[1:]):
+        if s1 == s2:
+            continue
+        assert v1 < v2, f"non-monotonic at {s1} vs {s2}"
+
+
+def test_scalar_known_values():
+    assert scalar.encode(scalar.P16, 1.0) == 0x4000
+    assert scalar.decode(scalar.P16, 0x4C91) == Fraction(3217, 1024)  # π ≈ 3.1416015625
+    assert scalar.encode(scalar.BP32, 0.0) == 0
+    assert scalar.encode(scalar.BP32, float("nan")) == 0x80000000
+    assert scalar.decode(scalar.BP32, 1) == Fraction(2**20 + 1, 2**20) * Fraction(2) ** -192
+
+
+def test_scalar_saturation():
+    assert scalar.encode(scalar.BP32, 1e300) == 0x7FFFFFFF
+    assert scalar.encode(scalar.BP32, -1e300) == 0x80000001
+    assert scalar.encode(scalar.BP32, 1e-300) == 1
+    assert scalar.encode(scalar.P16, 1e300) == 0x7FFF
+
+
+def test_scalar_dynamic_range_matches_paper():
+    # ⟨32,6,5⟩ spans 2^-192 … ~2^192.
+    maxv = scalar.decode(scalar.BP32, scalar.BP32.maxpos_body)
+    assert Fraction(2) ** 191 <= maxv < Fraction(2) ** 192
+    minv = scalar.decode(scalar.BP32, 1)
+    assert Fraction(2) ** -192 < minv < Fraction(2) ** -191
+
+
+# ----------------------------------------------------------------------
+# Vectorized reference vs scalar oracle
+# ----------------------------------------------------------------------
+
+@given(bits=st.lists(st.integers(min_value=0, max_value=0xFFFFFFFF), min_size=1, max_size=64))
+@settings(max_examples=150, deadline=None)
+def test_ref_decode_matches_scalar(bits):
+    arr = jnp.asarray(np.array(bits, dtype=np.uint64).astype(np.uint32).view(np.int32))
+    got = np.array(ref.decode_ref(arr))
+    for p, g in zip(bits, got):
+        want = scalar.decode_f64(scalar.BP32, p)
+        if math.isnan(want):
+            assert math.isnan(g)
+            continue
+        w32 = np.float32(want) if abs(want) < 1e39 else np.float32(np.inf) * np.sign(want)
+        if w32 != 0 and abs(w32) < 2.0**-126:
+            assert g == 0 or g == w32  # flush contract
+        else:
+            assert g == w32, f"{p:#x}: got {g}, want {w32}"
+
+
+@given(
+    xs=st.lists(
+        st.floats(
+            min_value=-3.3999999521443642e38,
+            max_value=3.3999999521443642e38,
+            allow_nan=False,
+            width=32,
+        ),
+        min_size=1,
+        max_size=64,
+    )
+)
+@settings(max_examples=150, deadline=None)
+def test_ref_encode_matches_scalar(xs):
+    arr = jnp.asarray(np.array(xs, dtype=np.float32))
+    got = np.array(ref.encode_ref(arr)).view(np.uint32)
+    for v, g in zip(np.array(xs, dtype=np.float32), got):
+        v = float(v)
+        if v != 0 and abs(v) < 2.0**-126:
+            assert int(g) == 0  # flush contract
+        else:
+            want = scalar.encode(scalar.BP32, v)
+            assert int(g) == want, f"{v}: got {int(g):#x}, want {want:#x}"
+
+
+def test_ref_decode_specials():
+    bits = jnp.asarray(np.array([0, 0x80000000, 0x40000000, 0xC0000000], dtype=np.uint32).view(np.int32))
+    out = np.array(ref.decode_ref(bits))
+    assert out[0] == 0.0
+    assert math.isnan(out[1])
+    assert out[2] == 1.0
+    assert out[3] == -1.0
+
+
+def test_ref_encode_exact_in_fovea():
+    # Fovea carries 24 fraction bits ≥ f32's 23: every normal f32 in
+    # [2^-32, 2^32) must round-trip exactly.
+    rng = np.random.RandomState(0)
+    xs = (rng.randn(4096).astype(np.float32) * rng.uniform(0.001, 1000, 4096).astype(np.float32))
+    xs = xs[np.abs(xs) > 2.0**-32]
+    enc = ref.encode_ref(jnp.asarray(xs))
+    dec = np.array(ref.decode_ref(enc))
+    assert np.array_equal(dec, xs[: len(dec)])

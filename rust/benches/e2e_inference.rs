@@ -1,0 +1,79 @@
+//! Bench: end-to-end serving throughput/latency of the three-layer stack —
+//! the quantized model under a closed-loop multi-client load, plus the
+//! bare model-execute and quantizer costs for attribution.
+//!
+//! Run: `make artifacts && cargo bench --bench e2e_inference`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use positron::coordinator::{quantizer, InferenceServer, ServerConfig};
+use positron::harness::Bencher;
+use positron::runtime::{artifacts_available, default_artifact_dir, lit_f32_2d, ModelWeights, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::cpu(&dir)?;
+    let w = ModelWeights::load(&rt)?;
+
+    // 1. Bare model execution cost (batch of 64).
+    let mut b = Bencher::new();
+    let model = rt.load("model_bposit.hlo.txt")?;
+    let mut args = vec![lit_f32_2d(&w.golden_x, w.batch, w.d)?];
+    args.extend(w.bposit_arg_literals()?);
+    b.bench("model_bposit/execute/batch64", || model.run_f32(&args).unwrap());
+    let model_f = rt.load("model_f32.hlo.txt")?;
+    let mut args_f = vec![lit_f32_2d(&w.golden_x, w.batch, w.d)?];
+    args_f.extend(w.f32_arg_literals()?);
+    b.bench("model_f32/execute/batch64", || model_f.run_f32(&args_f).unwrap());
+
+    // 2. Quantizer cost per request (64 features).
+    let feats = w.golden_x[..w.d].to_vec();
+    b.bench("quantizer/roundtrip/64feat", || quantizer::roundtrip(&feats));
+    println!("{}", b.table("component costs"));
+    drop(rt);
+
+    // 3. Closed-loop serving: sweep client counts.
+    println!("closed-loop serving (b-posit model):");
+    println!("{:>8} {:>12} {:>10} {:>10} {:>11}", "clients", "req/s", "p50 µs", "p99 µs", "mean batch");
+    for clients in [1usize, 4, 16] {
+        let server = Arc::new(InferenceServer::start(
+            dir.clone(),
+            ServerConfig { max_wait: Duration::from_micros(500), ..Default::default() },
+        )?);
+        let per_client = 400;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let srv = server.clone();
+            let w2 = w.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut done = 0;
+                for i in 0..per_client {
+                    let g = (c + i * 7) % w2.golden_y.len();
+                    let f = w2.golden_x[g * w2.d..(g + 1) * w2.d].to_vec();
+                    if srv.infer(f).is_ok() {
+                        done += 1;
+                    }
+                }
+                done
+            }));
+        }
+        let done: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let wall = t0.elapsed().as_secs_f64();
+        let m = server.metrics().snapshot();
+        println!(
+            "{:>8} {:>12.0} {:>10} {:>10} {:>11.1}",
+            clients,
+            done as f64 / wall,
+            m.p50_us,
+            m.p99_us,
+            m.mean_batch
+        );
+    }
+    Ok(())
+}

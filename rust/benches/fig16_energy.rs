@@ -1,0 +1,29 @@
+//! Bench: regenerate paper **Fig 16** — worst-case energy per two-operand
+//! operation, energy = (dec_delay + enc_delay) × (2·dec_power + enc_power).
+//!
+//! Run: `cargo bench --bench fig16_energy`
+
+use positron::cli::ppa_rows;
+
+fn main() {
+    let dec = ppa_rows(false, 60);
+    let enc = ppa_rows(true, 60);
+    let energy =
+        |i: usize| (dec[i].delay_ns + enc[i].delay_ns) * (2.0 * dec[i].peak_power_mw + enc[i].peak_power_mw);
+
+    println!("Fig 16 — worst-case decode+encode energy per op (pJ):");
+    println!("{:<8} {:>10} {:>10} {:>10}", "width", "float", "b-posit", "posit");
+    for (i, n) in [16u32, 32, 64].iter().enumerate() {
+        println!(
+            "{:<8} {:>10.2} {:>10.2} {:>10.2}",
+            n,
+            energy(i * 3),
+            energy(i * 3 + 1),
+            energy(i * 3 + 2)
+        );
+    }
+    let r32 = energy(4) / energy(3);
+    let r64 = energy(7) / energy(6);
+    println!("\nb-posit/float energy ratio: 32-bit {r32:.2} (paper ≈1.0 — tied), 64-bit {r64:.2} (paper ≈0.60 — 40% less)");
+    println!("b-posit/posit  energy ratio: 32-bit {:.2}, 64-bit {:.2}", energy(4) / energy(5), energy(7) / energy(8));
+}

@@ -1,0 +1,47 @@
+//! Bench: regenerate paper **Figs 6a/6b and 7** — the accuracy-vs-scale
+//! tent plots — as CSV series + the quantitative claims.
+//!
+//! Run: `cargo bench --bench fig6_fig7_accuracy`
+
+use positron::accuracy::{self, decimals_at};
+use positron::formats::posit::{BP16_E3, BP32, P16, P32};
+use positron::formats::{ieee::F32, takum::T32, Codec};
+
+fn main() {
+    // Fig 6a/6b: 16-bit curves.
+    println!("Fig 6 — 16-bit accuracy (decimals) vs scale:");
+    println!("{:>6} {:>10} {:>12}", "2^e", "posit16", "bposit16e3");
+    for e in (-56..=56).step_by(8) {
+        println!("{:>6} {:>10.2} {:>12.2}", e, decimals_at(&P16, e), decimals_at(&BP16_E3, e));
+    }
+    let floor = accuracy::curve(&BP16_E3, BP16_E3.min_scale(), BP16_E3.max_scale())
+        .iter()
+        .map(|p| p.decimals)
+        .fold(f64::MAX, f64::min);
+    println!("⟨16,6,3⟩ floor: {floor:.2} decimals (paper: ≥2); fovea cost vs ⟨16,2⟩: {:.2} decimals (paper: 0.3)",
+        decimals_at(&P16, 0) - decimals_at(&BP16_E3, 0));
+
+    // Fig 7: 32-bit curves.
+    println!("\nFig 7 — 32-bit accuracy (decimals) vs scale:");
+    println!("{:>6} {:>9} {:>9} {:>9} {:>9}", "2^e", "float32", "posit32", "takum32", "bposit32");
+    for e in (-256..=256).step_by(16) {
+        println!(
+            "{:>6} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            e,
+            decimals_at(&F32, e),
+            decimals_at(&P32, e),
+            decimals_at(&T32, e),
+            decimals_at(&BP32, e)
+        );
+    }
+
+    let (lo, hi) = accuracy::golden_zone(&P32, &F32);
+    let (blo, bhi) = accuracy::golden_zone(&BP32, &F32);
+    println!("\nGolden Zones vs float32: posit32 2^{lo}..2^{hi} (paper ±20), b-posit32 2^{blo}..2^{bhi} (paper ±64)");
+    println!(
+        "bit patterns in b-posit32 zone: {:.1}% (paper 75%)",
+        100.0 * accuracy::pattern_census(&BP32, blo, bhi + 1)
+    );
+    let (flo, fhi, _) = accuracy::fovea(&BP32);
+    println!("b-posit32 fovea: 2^{flo}..2^{fhi} (paper ±32) with {} frac bits (float32: 23)", BP32.frac_bits_at(0));
+}

@@ -1,0 +1,63 @@
+//! Bench: quire (exact accumulator) MAC throughput — 800-bit paper sizing
+//! vs lossless sizing vs naive round-each-step posit arithmetic, plus the
+//! accuracy payoff on an ill-conditioned dot product.
+//!
+//! Run: `cargo bench --bench quire`
+
+use positron::formats::posit::BP32;
+use positron::formats::{op_add, op_mul, Decoded, Quire};
+use positron::harness::Bencher;
+use positron::testutil::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(99);
+    let n = 1024;
+    let xs: Vec<Decoded> = (0..n).map(|_| Decoded::from_f64((rng.f64() - 0.5) * 100.0)).collect();
+    let ys: Vec<Decoded> = (0..n).map(|_| Decoded::from_f64((rng.f64() - 0.5) * 100.0)).collect();
+
+    b.bench("quire/paper800/dot1024", || {
+        let mut q = Quire::paper_800(&BP32);
+        for (x, y) in xs.iter().zip(&ys) {
+            q.add_product(x, y);
+        }
+        q.to_posit(&BP32)
+    });
+    b.bench("quire/exact/dot1024", || {
+        let mut q = Quire::exact_for(&BP32);
+        for (x, y) in xs.iter().zip(&ys) {
+            q.add_product(x, y);
+        }
+        q.to_posit(&BP32)
+    });
+    let xb: Vec<u64> = xs.iter().map(|d| BP32.encode(d)).collect();
+    let yb: Vec<u64> = ys.iter().map(|d| BP32.encode(d)).collect();
+    b.bench("naive/round-each-step/dot1024", || {
+        let mut acc = 0u64;
+        for (x, y) in xb.iter().zip(&yb) {
+            acc = op_add(&BP32, acc, op_mul(&BP32, *x, *y));
+        }
+        acc
+    });
+
+    println!("{}", b.table("quire MAC throughput (1024-element dot products)"));
+    for r in b.results() {
+        println!("{:<44} {:>10.1} MMAC/s", r.name, 1024.0 / r.mean_ns * 1e3);
+    }
+
+    // Accuracy payoff: ill-conditioned dot product.
+    let big = 1e15;
+    let ill: Vec<(f64, f64)> = vec![(big, 1.0), (3.5, 1.0), (-big, 1.0), (0.25, 1.0)];
+    let mut q = Quire::exact_for(&BP32);
+    let mut naive = 0u64;
+    for (x, y) in &ill {
+        let (dx, dy) = (Decoded::from_f64(*x), Decoded::from_f64(*y));
+        q.add_product(&dx, &dy);
+        naive = op_add(&BP32, naive, op_mul(&BP32, BP32.encode(&dx), BP32.encode(&dy)));
+    }
+    println!(
+        "\nill-conditioned Σxᵢyᵢ (exact 3.75): quire = {}, naive = {}",
+        BP32.to_f64(q.to_posit(&BP32)),
+        BP32.to_f64(naive)
+    );
+}

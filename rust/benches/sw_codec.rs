@@ -1,0 +1,77 @@
+//! Bench: software codec hot path — decode/encode/add/mul throughput per
+//! format (the L3 quantizer's cost driver; see EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo bench --bench sw_codec`
+
+use positron::formats::posit::{BP32, P32};
+use positron::formats::{ieee::F32, op_add, op_mul, takum::T32, Codec, Decoded};
+use positron::harness::Bencher;
+use positron::testutil::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(7);
+    let words32: Vec<u64> = (0..4096).map(|_| rng.next_u64() & 0xffff_ffff).collect();
+    let vals: Vec<f64> = (0..4096).map(|_| (rng.f64() - 0.5) * 2000.0).collect();
+    let valsf: Vec<f32> = vals.iter().map(|&x| x as f32).collect();
+
+    // Decode throughput (per 4096-element block).
+    for (name, c) in [("bp32", &BP32 as &dyn Codec), ("p32", &P32), ("f32", &F32), ("t32", &T32)] {
+        b.bench(&format!("decode/{name}/4096"), || {
+            let mut acc = 0i32;
+            for &w in &words32 {
+                acc = acc.wrapping_add(c.decode(w).exp);
+            }
+            acc
+        });
+    }
+
+    // Encode throughput.
+    for (name, c) in [("bp32", &BP32 as &dyn Codec), ("p32", &P32), ("f32", &F32), ("t32", &T32)] {
+        b.bench(&format!("encode/{name}/4096"), || {
+            let mut acc = 0u64;
+            for &x in &vals {
+                acc = acc.wrapping_add(c.encode(&Decoded::from_f64(x)));
+            }
+            acc
+        });
+    }
+
+    // Arithmetic (decode → exact op → encode), the full ALU path.
+    let pw: Vec<u64> = vals.iter().map(|&x| BP32.from_f64(x)).collect();
+    b.bench("add/bp32/4096", || {
+        let mut acc = 0u64;
+        for pair in pw.chunks(2) {
+            acc = acc.wrapping_add(op_add(&BP32, pair[0], pair[1]));
+        }
+        acc
+    });
+    b.bench("mul/bp32/4096", || {
+        let mut acc = 0u64;
+        for pair in pw.chunks(2) {
+            acc = acc.wrapping_add(op_mul(&BP32, pair[0], pair[1]));
+        }
+        acc
+    });
+
+    // The L3 quantizer hot path: general codec (§Perf "before") vs the
+    // specialized ⟨32,6,5⟩ fast path actually used on the request path.
+    b.bench("quantizer/general/roundtrip4096", || {
+        let mut acc = 0.0f32;
+        for &x in &valsf {
+            acc += positron::coordinator::quantizer::dequantize_one_general(
+                positron::coordinator::quantizer::quantize_one_general(x),
+            );
+        }
+        acc
+    });
+    b.bench("quantizer/fast/roundtrip4096", || {
+        positron::coordinator::quantizer::roundtrip(&valsf)
+    });
+
+    println!("{}", b.table("software codec throughput (4096-element blocks)"));
+    // Per-element rates.
+    for r in b.results() {
+        println!("{:<44} {:>10.1} Melem/s", r.name, 4096.0 / r.mean_ns * 1e3 / 2.0_f64.powi(0));
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench: regenerate paper **Table 5** (decoder PPA at 16/32/64 bits) and
+//! the **Fig 14** comparison series, with the paper's reported numbers
+//! printed alongside for shape comparison.
+//!
+//! Run: `cargo bench --bench table5_decode`
+
+use positron::cli::ppa_rows;
+use positron::hw::report::format_table;
+
+// (config, paper peak power mW, paper area µm², paper delay ns)
+const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("float16 dec", 0.05, 315.0, 0.44),
+    ("b-posit<16,6,5> dec", 0.11, 335.0, 0.39),
+    ("posit<16,2> dec", 0.32, 705.0, 0.71),
+    ("float32 dec", 0.13, 373.0, 0.75),
+    ("b-posit<32,6,5> dec", 0.20, 553.0, 0.52),
+    ("posit<32,2> dec", 0.94, 1890.0, 1.28),
+    ("float64 dec", 0.38, 1034.0, 1.16),
+    ("b-posit<64,6,5> dec", 0.37, 994.0, 0.65),
+    ("posit<64,2> dec", 2.14, 4047.0, 1.50),
+];
+
+fn main() {
+    let rows = ppa_rows(false, 60);
+    println!("{}", format_table("Table 5 — decoder PPA (measured on the gate-level cost model)", &rows));
+
+    println!("paper-reported values (freepdk45 post-layout) and measured/paper ratios:");
+    println!(
+        "{:<26} {:>9} {:>9} {:>9}   {:>7} {:>7} {:>7}",
+        "design", "pwr(mW)", "area", "delay", "r_pwr", "r_area", "r_dly"
+    );
+    for (row, (name, pp, pa, pd)) in rows.iter().zip(PAPER) {
+        println!(
+            "{:<26} {:>9.2} {:>9.0} {:>9.2}   {:>7.2} {:>7.2} {:>7.2}",
+            name,
+            pp,
+            pa,
+            pd,
+            row.peak_power_mw / pp,
+            row.area_um2 / pa,
+            row.delay_ns / pd
+        );
+    }
+
+    // Fig 14 headline ratios (paper: −79% power, −71% area, −60% delay at 32).
+    let (b32, p32) = (&rows[4], &rows[5]);
+    println!("\nFig 14 ratios at 32 bits — b-posit vs posit decode:");
+    println!(
+        "  power  −{:.0}% (paper −79%)\n  area   −{:.0}% (paper −71%)\n  delay  −{:.0}% (paper −60%)",
+        100.0 * (1.0 - b32.peak_power_mw / p32.peak_power_mw),
+        100.0 * (1.0 - b32.area_um2 / p32.area_um2),
+        100.0 * (1.0 - b32.delay_ns / p32.delay_ns)
+    );
+    let (f32r, b64, f64r) = (&rows[3], &rows[7], &rows[6]);
+    println!(
+        "  b-posit32 delay / float32 delay = {:.2} (paper 0.69)",
+        b32.delay_ns / f32r.delay_ns
+    );
+    println!(
+        "  b-posit64 delay / float64 delay = {:.2} (paper <0.56)",
+        b64.delay_ns / f64r.delay_ns
+    );
+}

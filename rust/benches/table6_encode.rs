@@ -1,0 +1,53 @@
+//! Bench: regenerate paper **Table 6** (encoder PPA at 16/32/64 bits) and
+//! the **Fig 15** comparison series, with the paper's numbers alongside.
+//!
+//! Run: `cargo bench --bench table6_encode`
+
+use positron::cli::ppa_rows;
+use positron::hw::report::format_table;
+
+const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("float16 enc", 0.06, 297.0, 0.29),
+    ("b-posit<16,6,5> enc", 0.13, 418.0, 0.39),
+    ("posit<16,2> enc", 0.26, 610.0, 0.71),
+    ("float32 enc", 0.16, 777.0, 0.40),
+    ("b-posit<32,6,5> enc", 0.23, 711.0, 0.43),
+    ("posit<32,2> enc", 0.72, 1330.0, 0.77),
+    ("float64 enc", 0.47, 1878.0, 0.53),
+    ("b-posit<64,6,5> enc", 0.45, 1278.0, 0.46),
+    ("posit<64,2> enc", 1.90, 3093.0, 1.17),
+];
+
+fn main() {
+    let rows = ppa_rows(true, 60);
+    println!("{}", format_table("Table 6 — encoder PPA (measured on the gate-level cost model)", &rows));
+
+    println!("paper-reported values and measured/paper ratios:");
+    println!(
+        "{:<26} {:>9} {:>9} {:>9}   {:>7} {:>7} {:>7}",
+        "design", "pwr(mW)", "area", "delay", "r_pwr", "r_area", "r_dly"
+    );
+    for (row, (name, pp, pa, pd)) in rows.iter().zip(PAPER) {
+        println!(
+            "{:<26} {:>9.2} {:>9.0} {:>9.2}   {:>7.2} {:>7.2} {:>7.2}",
+            name, pp, pa, pd,
+            row.peak_power_mw / pp,
+            row.area_um2 / pa,
+            row.delay_ns / pd
+        );
+    }
+
+    let (b32, p32) = (&rows[4], &rows[5]);
+    println!("\nFig 15 ratios at 32 bits — b-posit vs posit encode:");
+    println!(
+        "  power  −{:.0}% (paper −68%)\n  area   −{:.0}% (paper −46%)\n  delay  −{:.0}% (paper −44%)",
+        100.0 * (1.0 - b32.peak_power_mw / p32.peak_power_mw),
+        100.0 * (1.0 - b32.area_um2 / p32.area_um2),
+        100.0 * (1.0 - b32.delay_ns / p32.delay_ns)
+    );
+    let (f64r, b64) = (&rows[6], &rows[7]);
+    println!(
+        "  b-posit64 area / float64 area = {:.2} (paper 0.68: \"almost 32% smaller\")",
+        b64.area_um2 / f64r.area_um2
+    );
+}

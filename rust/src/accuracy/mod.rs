@@ -1,0 +1,223 @@
+//! Accuracy analysis: decimal-accuracy curves, Golden Zone, fovea, and
+//! bit-pattern census — everything needed to regenerate the paper's
+//! Figs 6a/6b (16-bit posit vs b-posit) and Fig 7 (float32 / posit32 /
+//! takum32 / b-posit32).
+//!
+//! Decimal accuracy at a binary scale e follows the posit literature's
+//! convention: a format carrying `fb` explicit fraction bits in that binade
+//! resolves relative steps of 2^−(fb+1) (half-ulp rounding), i.e.
+//! `decimals(e) = (fb(e)+1)·log10(2)`.
+
+use crate::formats::Codec;
+
+/// One point of an accuracy plot: binade scale and decimals of accuracy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccuracyPoint {
+    /// Binary scale (floor(log2 |x|)).
+    pub scale: i32,
+    /// Decimals of accuracy; 0 when the binade is unrepresentable.
+    pub decimals: f64,
+}
+
+/// Decimals of accuracy of `fmt` for values in the binade 2^scale.
+pub fn decimals_at<C: Codec + ?Sized>(fmt: &C, scale: i32) -> f64 {
+    if scale < fmt.min_scale() || scale > fmt.max_scale() {
+        return 0.0;
+    }
+    let fb = fmt.frac_bits_at(scale);
+    (fb as f64 + 1.0) * std::f64::consts::LOG10_2
+}
+
+/// Full accuracy curve over [lo, hi] binades (the tent plots of Figs 6/7).
+pub fn curve<C: Codec + ?Sized>(fmt: &C, lo: i32, hi: i32) -> Vec<AccuracyPoint> {
+    (lo..=hi).map(|scale| AccuracyPoint { scale, decimals: decimals_at(fmt, scale) }).collect()
+}
+
+/// The fovea: the (closed) binade range achieving maximum accuracy.
+pub fn fovea<C: Codec + ?Sized>(fmt: &C) -> (i32, i32, f64) {
+    let pts = curve(fmt, fmt.min_scale(), fmt.max_scale());
+    let max = pts.iter().map(|p| p.decimals).fold(0.0, f64::max);
+    let lo = pts.iter().find(|p| p.decimals == max).unwrap().scale;
+    let hi = pts.iter().rev().find(|p| p.decimals == max).unwrap().scale;
+    (lo, hi, max)
+}
+
+/// The Golden Zone (de Dinechin): binades where `fmt` is at least as
+/// accurate as `baseline`. Returns the contiguous range around scale 0.
+pub fn golden_zone<A: Codec + ?Sized, B: Codec + ?Sized>(fmt: &A, baseline: &B) -> (i32, i32) {
+    let mut lo = 0;
+    while lo - 1 >= fmt.min_scale().max(-2000) && decimals_at(fmt, lo - 1) >= decimals_at(baseline, lo - 1) {
+        lo -= 1;
+    }
+    let mut hi = 0;
+    while hi + 1 <= fmt.max_scale().min(2000) && decimals_at(fmt, hi + 1) >= decimals_at(baseline, hi + 1) {
+        hi += 1;
+    }
+    (lo, hi)
+}
+
+/// Fraction of all finite nonzero bit patterns whose value lies in
+/// [2^lo, 2^hi) by magnitude (the paper's "75 % of the bit patterns fall
+/// within that region" census). Computed analytically from per-binade
+/// pattern counts — exact, no enumeration.
+pub fn pattern_census<C: Codec + ?Sized>(fmt: &C, lo: i32, hi: i32) -> f64 {
+    let mut in_zone = 0u128;
+    let mut total = 0u128;
+    for scale in fmt.min_scale()..=fmt.max_scale() {
+        let count = 1u128 << fmt.frac_bits_at(scale);
+        total += count;
+        if scale >= lo && scale < hi {
+            in_zone += count;
+        }
+    }
+    in_zone as f64 / total as f64
+}
+
+/// Empirical accuracy check: measure −log10 of the worst relative
+/// round-trip error over `samples` log-uniform values in the binade, via
+/// the real codec. Used by tests to pin the analytic curve to reality.
+pub fn empirical_decimals<C: Codec + ?Sized>(fmt: &C, scale: i32, samples: u32) -> f64 {
+    let mut worst: f64 = 0.0;
+    for i in 0..samples {
+        let frac = (i as f64 + 0.5) / samples as f64; // mid-points: worst case
+        let x = (1.0 + frac) * f64::powi(2.0, scale);
+        let back = fmt.roundtrip_f64(x);
+        let rel = ((back - x) / x).abs();
+        worst = worst.max(rel);
+    }
+    if worst == 0.0 {
+        f64::INFINITY
+    } else {
+        -worst.log10()
+    }
+}
+
+/// Render a set of curves as CSV (scale, then one decimals column per fmt).
+pub fn curves_csv(fmts: &[(&str, &dyn Codec)], lo: i32, hi: i32) -> String {
+    let mut s = String::from("scale");
+    for (name, _) in fmts {
+        s.push(',');
+        s.push_str(name);
+    }
+    s.push('\n');
+    for scale in lo..=hi {
+        s.push_str(&scale.to_string());
+        for (_, f) in fmts {
+            s.push_str(&format!(",{:.4}", decimals_at(*f, scale)));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ieee::F32;
+    use crate::formats::posit::{BP16_E3, BP32, P16, P32};
+    use crate::formats::takum::T32;
+
+    #[test]
+    fn bp32_fovea_matches_paper() {
+        // Paper §1.4: b-posit32 fovea covers 2^-32 … 2^32 with 24 fraction
+        // bits ("twice the accuracy of IEEE floats in that region").
+        let (lo, hi, max) = fovea(&BP32);
+        assert_eq!(lo, -32);
+        assert_eq!(hi, 31);
+        assert!((max - 25.0 * std::f64::consts::LOG10_2).abs() < 1e-12);
+        // float32 fovea decimals: 24·log10(2) ≈ 7.22 — exactly one bit less.
+        assert!(decimals_at(&BP32, 0) > decimals_at(&F32, 0));
+    }
+
+    #[test]
+    fn p32_fovea_matches_paper() {
+        // "For standard posits, [the fovea] ranges from 1/16 to 16":
+        // scales −4..3 with es=2 (regime size 2).
+        let (lo, hi, _) = fovea(&P32);
+        assert_eq!(lo, -4);
+        assert_eq!(hi, 3);
+        // "four additional bits of significand compared to IEEE floats"
+        assert_eq!(P32.frac_bits_at(0), 27);
+        assert_eq!(crate::formats::Codec::frac_bits_at(&F32, 0), 23);
+    }
+
+    #[test]
+    fn golden_zone_p32_and_bp32_vs_f32() {
+        // Paper: standard posit32 Golden Zone ≈ 2^-20…2^20; b-posit32
+        // extends it to 2^-64…2^64.
+        let (lo, hi) = golden_zone(&P32, &F32);
+        assert!((-26..=-16).contains(&lo), "p32 zone lo = {lo}");
+        assert!((15..=25).contains(&hi), "p32 zone hi = {hi}");
+        let (blo, bhi) = golden_zone(&BP32, &F32);
+        assert_eq!(blo, -64, "bp32 zone lo");
+        assert_eq!(bhi, 63, "bp32 zone hi");
+    }
+
+    #[test]
+    fn census_75_percent_in_golden_zone() {
+        // Paper: "75% of the bit patterns fall within that region" (2^±64).
+        let frac = pattern_census(&BP32, -64, 64);
+        assert!((frac - 0.75).abs() < 0.01, "census = {frac}");
+    }
+
+    #[test]
+    fn fig6_bposit16_floor_two_decimals() {
+        // Fig 6b: ⟨16,6,3⟩ accuracy "never drops below two decimals".
+        let pts = curve(&BP16_E3, BP16_E3.min_scale(), BP16_E3.max_scale());
+        let min = pts.iter().map(|p| p.decimals).fold(f64::MAX, f64::min);
+        assert!(min >= 2.0, "min decimals = {min}");
+        // …and costs ~0.3 decimals at the fovea vs the standard posit.
+        let drop = decimals_at(&P16, 0) - decimals_at(&BP16_E3, 0);
+        assert!((0.2..=0.4).contains(&drop), "fovea cost = {drop}");
+    }
+
+    #[test]
+    fn fig6_standard_posit16_tapers_to_zero() {
+        // Fig 6a: ⟨16,2⟩ accuracy reaches ~0 decimals at the extremes
+        // (no fraction bits near maxpos/minpos — only the rounding half-bit).
+        assert_eq!(P16.frac_bits_at(P16.max_scale()), 0);
+        assert_eq!(P16.frac_bits_at(P16.min_scale()), 0);
+        assert!(decimals_at(&P16, P16.max_scale()) < 0.5);
+    }
+
+    #[test]
+    fn fig7_curve_shapes() {
+        // Fig 7's qualitative content, checked pointwise:
+        // near 1.0: posit32 > bposit32 > float32.
+        assert!(decimals_at(&P32, 0) > decimals_at(&BP32, 0));
+        assert!(decimals_at(&BP32, 0) > decimals_at(&F32, 0));
+        // at 2^130: float32/posit32 dead, b-posit32 & takum32 alive.
+        assert_eq!(decimals_at(&F32, 130), 0.0);
+        assert_eq!(decimals_at(&P32, 130), 0.0);
+        assert!(decimals_at(&BP32, 100) > 5.0);
+        assert!(decimals_at(&T32, 100) > 5.0);
+        // at extreme 2^240: only takum survives.
+        assert_eq!(decimals_at(&BP32, 240), 0.0);
+        assert!(decimals_at(&T32, 240) > 5.0);
+        // takum has the "sharp point": strictly more accurate at 0 than ±8.
+        assert!(decimals_at(&T32, 0) > decimals_at(&T32, 8));
+        assert!(decimals_at(&T32, 0) >= decimals_at(&P32, 0) - 0.5);
+    }
+
+    #[test]
+    fn empirical_matches_analytic() {
+        // The analytic curve must agree with measured round-trip error to
+        // within the half-ulp convention (±0.35 decimals).
+        let cases: [(&dyn Codec, i32); 3] = [(&BP32, 0), (&BP32, -100), (&P32, 10)];
+        for (fmt, scale) in cases {
+            let analytic = decimals_at(fmt, scale);
+            let measured = empirical_decimals(fmt, scale, 4000);
+            assert!(
+                (measured - analytic).abs() < 0.35,
+                "scale {scale}: analytic {analytic} vs measured {measured}"
+            );
+        }
+    }
+
+    #[test]
+    fn csv_renders() {
+        let s = curves_csv(&[("f32", &F32), ("bp32", &BP32)], -4, 4);
+        assert!(s.lines().count() == 10);
+        assert!(s.starts_with("scale,f32,bp32"));
+    }
+}

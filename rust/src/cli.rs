@@ -1,0 +1,213 @@
+//! Hand-rolled CLI (the vendored dependency set has no clap).
+//!
+//! Subcommands:
+//! - `info`                    — build/config summary
+//! - `codec <fmt> <value…>`    — encode/decode values in any format
+//! - `accuracy [--csv DIR]`    — Golden Zone / fovea / census + Fig 6/7 CSVs
+//! - `tables`                  — gate-level PPA tables (Tables 5/6, Fig 16)
+//! - `serve [--requests N]`    — run the batching inference demo (artifacts)
+
+use crate::accuracy;
+use crate::formats::{ieee, posit, takum, Codec, Decoded};
+use crate::hw::designs::{bposit_dec, bposit_enc, float_dec, float_enc, posit_dec, posit_enc};
+use crate::hw::report;
+
+/// Parsed command line.
+#[derive(Debug)]
+pub enum Command {
+    Info,
+    Codec { fmt: String, values: Vec<String> },
+    Accuracy { csv_dir: Option<String> },
+    Tables,
+    Serve { requests: usize, artifact_dir: String },
+    Help,
+}
+
+/// Parse argv (excluding program name).
+pub fn parse(args: &[String]) -> Result<Command, String> {
+    let mut it = args.iter();
+    let Some(cmd) = it.next() else { return Ok(Command::Help) };
+    match cmd.as_str() {
+        "info" => Ok(Command::Info),
+        "help" | "--help" | "-h" => Ok(Command::Help),
+        "codec" => {
+            let fmt = it.next().ok_or("codec: missing format (e.g. bp32)")?.clone();
+            let values: Vec<String> = it.cloned().collect();
+            if values.is_empty() {
+                return Err("codec: provide at least one value or 0x-pattern".into());
+            }
+            Ok(Command::Codec { fmt, values })
+        }
+        "accuracy" => {
+            let mut csv_dir = None;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--csv" => csv_dir = Some(it.next().ok_or("--csv needs a dir")?.clone()),
+                    other => return Err(format!("accuracy: unknown flag {other}")),
+                }
+            }
+            Ok(Command::Accuracy { csv_dir })
+        }
+        "tables" => Ok(Command::Tables),
+        "serve" => {
+            let mut requests = 512;
+            let mut artifact_dir = crate::runtime::default_artifact_dir().display().to_string();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--requests" => {
+                        requests = it.next().ok_or("--requests needs N")?.parse().map_err(|e| format!("{e}"))?
+                    }
+                    "--artifacts" => artifact_dir = it.next().ok_or("--artifacts needs a dir")?.clone(),
+                    other => return Err(format!("serve: unknown flag {other}")),
+                }
+            }
+            Ok(Command::Serve { requests, artifact_dir })
+        }
+        other => Err(format!("unknown command {other}; try help")),
+    }
+}
+
+/// Look up a format by short name.
+pub fn lookup_format(name: &str) -> Option<Box<dyn Codec>> {
+    Some(match name {
+        "p8" => Box::new(posit::P8),
+        "p16" => Box::new(posit::P16),
+        "p32" => Box::new(posit::P32),
+        "p64" => Box::new(posit::P64),
+        "bp16" => Box::new(posit::BP16),
+        "bp32" => Box::new(posit::BP32),
+        "bp64" => Box::new(posit::BP64),
+        "bp16e3" => Box::new(posit::BP16_E3),
+        "f16" => Box::new(ieee::F16),
+        "bf16" => Box::new(ieee::BF16),
+        "f32" => Box::new(ieee::F32),
+        "f64" => Box::new(ieee::F64),
+        "t16" => Box::new(takum::T16),
+        "t32" => Box::new(takum::T32),
+        "t64" => Box::new(takum::T64),
+        _ => return None,
+    })
+}
+
+pub const HELP: &str = "positron — b-posit reproduction (Closing the Gap Between Float and Posit Hardware Efficiency)
+
+USAGE: positron <command> [args]
+
+COMMANDS:
+  info                       build + format-zoo summary
+  codec <fmt> <v…>           encode/decode values (fmt: p16 p32 bp32 f32 t32 …;
+                             values: decimals or 0x bit patterns)
+  accuracy [--csv DIR]       Golden Zone / fovea / census; optional Fig-6/7 CSVs
+  tables                     gate-level decode/encode PPA (paper Tables 5/6 + Fig 16)
+  serve [--requests N] [--artifacts DIR]
+                             batching inference demo over the AOT artifacts
+  help                       this message
+";
+
+/// Execute `codec`: returns printable lines.
+pub fn run_codec(fmt: &str, values: &[String]) -> Result<Vec<String>, String> {
+    let c = lookup_format(fmt).ok_or_else(|| format!("unknown format {fmt}"))?;
+    let mut out = Vec::new();
+    for v in values {
+        if let Some(hex) = v.strip_prefix("0x") {
+            let bits = u64::from_str_radix(hex, 16).map_err(|e| format!("{v}: {e}"))?;
+            let d = c.decode(bits);
+            out.push(format!("{} decode {v} = {} (exp {}, frac_bits {})",
+                c.name(), d.to_f64(), d.exp, c.frac_bits_at(d.exp)));
+        } else {
+            let x: f64 = v.parse().map_err(|e| format!("{v}: {e}"))?;
+            let bits = c.encode(&Decoded::from_f64(x));
+            let back = c.decode(bits).to_f64();
+            let relerr = if x != 0.0 { ((back - x) / x).abs() } else { 0.0 };
+            out.push(format!(
+                "{} encode {v} = {:#0w$x} → {} (rel err {:.3e})",
+                c.name(),
+                bits,
+                back,
+                relerr,
+                w = (c.n() as usize / 4) + 2
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// Execute `accuracy`: summary lines (+ CSVs when requested).
+pub fn run_accuracy(csv_dir: Option<&str>) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let f32s = ieee::F32;
+    for (name, spec) in [("posit<32,2>", posit::P32), ("b-posit<32,6,5>", posit::BP32)] {
+        let (lo, hi) = accuracy::golden_zone(&spec, &f32s);
+        let (flo, fhi, fdec) = accuracy::fovea(&spec);
+        let census = accuracy::pattern_census(&spec, lo, hi + 1);
+        out.push(format!(
+            "{name}: golden zone 2^{lo}..2^{hi} ({:.1}% of patterns), fovea 2^{flo}..2^{fhi} ({fdec:.2} decimals)",
+            census * 100.0
+        ));
+    }
+    if let Some(dir) = csv_dir {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let fig7 = accuracy::curves_csv(
+            &[
+                ("float32", &ieee::F32),
+                ("posit32", &posit::P32),
+                ("takum32", &takum::T32),
+                ("bposit32", &posit::BP32),
+            ],
+            -260,
+            260,
+        );
+        std::fs::write(format!("{dir}/fig7_accuracy32.csv"), fig7).map_err(|e| e.to_string())?;
+        let fig6 = accuracy::curves_csv(
+            &[("posit16", &posit::P16), ("bposit16_e3", &posit::BP16_E3)],
+            -64,
+            64,
+        );
+        std::fs::write(format!("{dir}/fig6_accuracy16.csv"), fig6).map_err(|e| e.to_string())?;
+        out.push(format!("wrote {dir}/fig6_accuracy16.csv and fig7_accuracy32.csv"));
+    }
+    Ok(out)
+}
+
+/// Measured PPA rows for decode or encode across 16/32/64 — the data
+/// behind paper Tables 5/6 and Figs 14/15 (shared with the bench targets).
+pub fn ppa_rows(encode: bool, random_pairs: usize) -> Vec<report::CostReport> {
+    use crate::hw::designs::{power_vectors, DesignUnderTest};
+    let stage = if encode { "enc" } else { "dec" };
+    let mut rows = Vec::new();
+    for n in [16u32, 32, 64] {
+        let fspec = match n {
+            16 => ieee::F16,
+            32 => ieee::F32,
+            _ => ieee::F64,
+        };
+        let bspec = posit::PositSpec::bounded(n, 6, 5);
+        let pspec = posit::PositSpec::standard(n, 2);
+        let entries: Vec<(String, crate::hw::netlist::Netlist, DesignUnderTest)> = if encode {
+            vec![
+                (format!("float{n} {stage}"), float_enc::build(&fspec), DesignUnderTest::FloatEnc(&fspec)),
+                (format!("b-posit<{n},6,5> {stage}"), bposit_enc::build(&bspec), DesignUnderTest::PositEnc(&bspec)),
+                (format!("posit<{n},2> {stage}"), posit_enc::build(&pspec), DesignUnderTest::PositEnc(&pspec)),
+            ]
+        } else {
+            vec![
+                (format!("float{n} {stage}"), float_dec::build(&fspec), DesignUnderTest::FloatDec(&fspec)),
+                (format!("b-posit<{n},6,5> {stage}"), bposit_dec::build(&bspec), DesignUnderTest::PositDec(&bspec)),
+                (format!("posit<{n},2> {stage}"), posit_dec::build(&pspec), DesignUnderTest::PositDec(&pspec)),
+            ]
+        };
+        for (name, nl, dut) in entries {
+            let pairs = power_vectors(&dut, random_pairs);
+            rows.push(report::measure(&name, &nl, &pairs));
+        }
+    }
+    rows
+}
+
+/// Execute `tables`: the three decode + three encode designs at 16/32/64.
+pub fn run_tables() -> Vec<String> {
+    let mut out = Vec::new();
+    out.push(report::format_table("Decode (paper Table 5)", &ppa_rows(false, 40)));
+    out.push(report::format_table("Encode (paper Table 6)", &ppa_rows(true, 40)));
+    out
+}

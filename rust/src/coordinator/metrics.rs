@@ -1,0 +1,106 @@
+//! Serving metrics: lock-protected latency reservoir + counters, cheap
+//! enough for the request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    rejected: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    /// Mean items per executed batch.
+    pub mean_batch: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl Metrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, items: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let mut v = self.latencies_us.lock().unwrap();
+        // Reservoir cap: keep memory bounded on long runs.
+        if v.len() >= 1_000_000 {
+            v.clear();
+        }
+        v.push(d.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lats = self.latencies_us.lock().unwrap().clone();
+        lats.sort_unstable();
+        let q = |p: f64| -> u64 {
+            if lats.is_empty() {
+                0
+            } else {
+                lats[((lats.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batched_items.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            p50_us: q(0.5),
+            p99_us: q(0.99),
+            max_us: lats.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_quantiles() {
+        let m = Metrics::default();
+        for i in 1..=100 {
+            m.record_latency(Duration::from_micros(i));
+            m.record_request();
+        }
+        m.record_batch(10);
+        m.record_batch(20);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch, 15.0);
+        assert!(s.p50_us >= 45 && s.p50_us <= 55, "p50 = {}", s.p50_us);
+        assert!(s.p99_us >= 95, "p99 = {}", s.p99_us);
+        assert_eq!(s.max_us, 100);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.p50_us, 0);
+        assert_eq!(s.mean_batch, 0.0);
+    }
+}

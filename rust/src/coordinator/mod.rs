@@ -1,0 +1,14 @@
+//! L3 coordinator: the serving loop around the AOT-compiled model.
+//!
+//! The paper's contribution lives in the format (L1/L2 + the hw designs),
+//! so L3 is a deliberately thin but production-shaped driver: a bounded
+//! request queue, a dynamic batcher (max-batch / max-wait), b-posit
+//! quantization of inputs on the hot path via the Rust codec, PJRT
+//! execution, and latency/throughput metrics.
+
+pub mod metrics;
+pub mod quantizer;
+pub mod server;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{InferenceServer, Response, ServerConfig};

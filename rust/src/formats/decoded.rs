@@ -1,0 +1,242 @@
+//! Unified internal ("unpacked") representation shared by every format.
+//!
+//! All codecs (IEEE float, standard posit, b-posit, takum) decode into a
+//! [`Decoded`] value and encode from one. This mirrors the hardware story of
+//! the paper: decode → float-like internal form → arithmetic → encode.
+//!
+//! Representation: `value = (-1)^sign * (sig / 2^63) * 2^exp`, with the
+//! significand normalized so that bit 63 (the hidden bit) is set:
+//! `sig ∈ [2^63, 2^64)`. `sticky` records that the true value lies strictly
+//! between `sig` and `sig + 1` ulp at this width; it participates in the
+//! final round-to-nearest-even performed by the encoders.
+//!
+//! Every format reproduced here keeps at most 61 fraction bits, so a 64-bit
+//! significand plus a sticky flag is *exact* for rounding purposes.
+
+/// Classification of a decoded value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Exact zero (posits have a single unsigned zero; IEEE zero keeps sign).
+    Zero,
+    /// Ordinary finite nonzero value.
+    Normal,
+    /// IEEE infinity (posit encoders map this to NaR).
+    Inf,
+    /// IEEE NaN / posit NaR ("Not a Real").
+    Nan,
+}
+
+/// Unpacked value: sign-magnitude, normalized 64-bit significand.
+#[derive(Clone, Copy, Debug)]
+pub struct Decoded {
+    pub class: Class,
+    pub sign: bool,
+    /// Unbiased exponent of the leading (hidden) bit.
+    pub exp: i32,
+    /// Normalized significand, hidden bit at position 63. Zero unless `Normal`.
+    pub sig: u64,
+    /// True if nonzero value bits were discarded below bit 0 of `sig`.
+    pub sticky: bool,
+}
+
+impl Decoded {
+    pub const ZERO: Decoded = Decoded { class: Class::Zero, sign: false, exp: 0, sig: 0, sticky: false };
+    pub const NAN: Decoded = Decoded { class: Class::Nan, sign: false, exp: 0, sig: 0, sticky: false };
+
+    /// Infinity with the given sign.
+    pub fn inf(sign: bool) -> Decoded {
+        Decoded { class: Class::Inf, sign, exp: 0, sig: 0, sticky: false }
+    }
+
+    /// Signed zero (sign only meaningful for IEEE).
+    pub fn zero(sign: bool) -> Decoded {
+        Decoded { class: Class::Zero, sign, exp: 0, sig: 0, sticky: false }
+    }
+
+    /// Construct a normal value; `sig` must already be normalized.
+    pub fn normal(sign: bool, exp: i32, sig: u64) -> Decoded {
+        debug_assert!(sig >> 63 == 1, "significand not normalized: {sig:#x}");
+        Decoded { class: Class::Normal, sign, exp, sig, sticky: false }
+    }
+
+    pub fn is_zero(&self) -> bool { self.class == Class::Zero }
+    pub fn is_nan(&self) -> bool { self.class == Class::Nan }
+    pub fn is_inf(&self) -> bool { self.class == Class::Inf }
+    pub fn is_normal(&self) -> bool { self.class == Class::Normal }
+
+    /// Exact conversion from `f64` (f64 has 52 fraction bits < 63, so no
+    /// information is lost; subnormal doubles are normalized).
+    pub fn from_f64(x: f64) -> Decoded {
+        let bits = x.to_bits();
+        let sign = bits >> 63 == 1;
+        let biased = ((bits >> 52) & 0x7ff) as i32;
+        let frac = bits & ((1u64 << 52) - 1);
+        if biased == 0x7ff {
+            return if frac == 0 { Decoded::inf(sign) } else { Decoded::NAN };
+        }
+        if biased == 0 {
+            if frac == 0 {
+                return Decoded::zero(sign);
+            }
+            // Subnormal: normalize. frac's leading 1 sits at bit 63−lz;
+            // move it to bit 63 and place the exponent accordingly: the
+            // value is frac·2^−1074, so exp = −1074 + (63 − lz).
+            let lz = frac.leading_zeros();
+            let exp = -1074 + (63 - lz) as i32;
+            let sig = frac << lz;
+            return Decoded::normal(sign, exp, sig);
+        }
+        let exp = biased - 1023;
+        let sig = (1u64 << 63) | (frac << 11);
+        Decoded::normal(sign, exp, sig)
+    }
+
+    /// Round-to-nearest-even conversion to `f64` (faithful; used for display
+    /// and tests — formats with ≤ 52 fraction bits convert exactly).
+    pub fn to_f64(&self) -> f64 {
+        match self.class {
+            Class::Zero => {
+                if self.sign { -0.0 } else { 0.0 }
+            }
+            Class::Nan => f64::NAN,
+            Class::Inf => {
+                if self.sign { f64::NEG_INFINITY } else { f64::INFINITY }
+            }
+            Class::Normal => {
+                if self.exp > 1023 {
+                    return if self.sign { f64::NEG_INFINITY } else { f64::INFINITY };
+                }
+                if self.exp < -1022 - 53 {
+                    return if self.sign { -0.0 } else { 0.0 };
+                }
+                // Keep 53 significand bits (plus subnormal shift if needed).
+                let extra_shift = if self.exp < -1022 { (-1022 - self.exp) as u32 } else { 0 };
+                let keep = 53u32.saturating_sub(extra_shift);
+                if keep == 0 {
+                    // Far below the subnormal range: rounds to 0 (or ±min subnormal).
+                    return if self.sign { -0.0 } else { 0.0 };
+                }
+                let drop = 64 - keep;
+                let kept = self.sig >> drop;
+                let guard = (self.sig >> (drop - 1)) & 1;
+                let below = self.sig & ((1u64 << (drop - 1)) - 1);
+                let sticky = below != 0 || self.sticky;
+                let rounded = kept + if guard == 1 && (sticky || kept & 1 == 1) { 1 } else { 0 };
+                // rounded has `keep` significant bits (maybe keep+1 on carry).
+                let mut mag = rounded as f64;
+                // Scale by 2^(exp - (keep-1)).
+                let scale = self.exp - (keep as i32 - 1);
+                mag = libm_scalbn(mag, scale);
+                if self.sign { -mag } else { mag }
+            }
+        }
+    }
+
+    /// Magnitude comparison helper for Normal values: compare (exp, sig, sticky).
+    pub fn mag_cmp(&self, other: &Decoded) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        debug_assert!(self.is_normal() && other.is_normal());
+        match self.exp.cmp(&other.exp) {
+            Ordering::Equal => match self.sig.cmp(&other.sig) {
+                Ordering::Equal => self.sticky.cmp(&other.sticky),
+                o => o,
+            },
+            o => o,
+        }
+    }
+}
+
+/// Minimal `scalbn` (no libm dependency): exact scaling by powers of two
+/// with correct handling of overflow/underflow through division.
+fn libm_scalbn(x: f64, n: i32) -> f64 {
+    let mut x = x;
+    let mut n = n;
+    while n > 1000 {
+        x *= f64::from_bits(0x7fe0000000000000); // 2^1023
+        n -= 1023;
+        if x.is_infinite() {
+            return x;
+        }
+    }
+    while n < -1000 {
+        x *= f64::from_bits(0x0010000000000000); // 2^-1022
+        n += 1022;
+        if x == 0.0 {
+            return x;
+        }
+    }
+    if n >= 0 {
+        if n > 1023 {
+            return x * f64::INFINITY;
+        }
+        x * f64::from_bits(((1023 + n) as u64) << 52)
+    } else {
+        // n ∈ [-1000, -1): split to stay in normal range.
+        if n >= -1022 {
+            x * f64::from_bits(((1023 + n) as u64) << 52)
+        } else {
+            x * f64::from_bits(1u64 << 52) * f64::from_bits(((1023 + n + 1074) as u64) << 52)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip_exact() {
+        for &x in &[0.0, -0.0, 1.0, -1.0, 3.141592653589793, 1e-300, -1e300, 1.5e-310, f64::MIN_POSITIVE, 6.6e-34] {
+            let d = Decoded::from_f64(x);
+            let back = d.to_f64();
+            assert_eq!(back.to_bits(), x.to_bits(), "roundtrip failed for {x}");
+        }
+    }
+
+    #[test]
+    fn f64_specials() {
+        assert!(Decoded::from_f64(f64::NAN).is_nan());
+        assert!(Decoded::from_f64(f64::INFINITY).is_inf());
+        assert!(Decoded::from_f64(f64::NEG_INFINITY).sign);
+        assert!(Decoded::from_f64(0.0).is_zero());
+        assert_eq!(Decoded::from_f64(f64::INFINITY).to_f64(), f64::INFINITY);
+        assert!(Decoded::from_f64(f64::NAN).to_f64().is_nan());
+    }
+
+    #[test]
+    fn subnormal_f64_normalizes() {
+        let x = f64::from_bits(1); // smallest subnormal, 2^-1074
+        let d = Decoded::from_f64(x);
+        assert!(d.is_normal());
+        assert_eq!(d.exp, -1074);
+        assert_eq!(d.sig, 1u64 << 63);
+        assert_eq!(d.to_f64(), x);
+    }
+
+    #[test]
+    fn normal_constructor_sets_fields() {
+        let d = Decoded::normal(true, 5, (1u64 << 63) | (1u64 << 40));
+        assert!(d.sign);
+        assert_eq!(d.exp, 5);
+        assert!(d.is_normal());
+        assert!(!d.sticky);
+    }
+
+    #[test]
+    fn mag_cmp_orders_by_exp_then_sig() {
+        use std::cmp::Ordering::*;
+        let a = Decoded::normal(false, 1, 1u64 << 63);
+        let b = Decoded::normal(false, 2, 1u64 << 63);
+        let c = Decoded::normal(false, 2, (1u64 << 63) | 1);
+        assert_eq!(a.mag_cmp(&b), Less);
+        assert_eq!(b.mag_cmp(&c), Less);
+        assert_eq!(c.mag_cmp(&c), Equal);
+    }
+
+    #[test]
+    fn scalbn_extremes() {
+        assert_eq!(libm_scalbn(1.0, -1074), f64::from_bits(1));
+        assert_eq!(libm_scalbn(1.0, 1023), f64::from_bits(0x7fe0000000000000));
+        assert_eq!(libm_scalbn(1.5, 2), 6.0);
+    }
+}

@@ -1,0 +1,344 @@
+//! Parameterized IEEE-754 binary float codec ⟨n, eb⟩ with full subnormal,
+//! NaN, and infinity support — the software analogue of Berkeley HardFloat's
+//! decode (recode) and encode stages that the paper benchmarks against
+//! (Figs 8/9).
+//!
+//! Decode normalizes subnormals (the leading-zero count + left shift that
+//! costs hardware its LZC), producing the same [`Decoded`] unpacked form the
+//! posit codecs use; encode denormalizes (right shift), applies RNE, and
+//! handles overflow→Inf / underflow→0.
+
+use super::decoded::{Class, Decoded};
+
+/// Static description of an IEEE-754-style binary format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IeeeSpec {
+    /// Total width in bits, ≤ 64.
+    pub n: u32,
+    /// Exponent field width in bits.
+    pub eb: u32,
+}
+
+/// IEEE binary16 (half).
+pub const F16: IeeeSpec = IeeeSpec { n: 16, eb: 5 };
+/// Google bfloat16 (the paper's §1.4 bounded-range comparator).
+pub const BF16: IeeeSpec = IeeeSpec { n: 16, eb: 8 };
+/// IEEE binary32 (single).
+pub const F32: IeeeSpec = IeeeSpec { n: 32, eb: 8 };
+/// IEEE binary64 (double).
+pub const F64: IeeeSpec = IeeeSpec { n: 64, eb: 11 };
+
+impl IeeeSpec {
+    pub fn new(n: u32, eb: u32) -> IeeeSpec {
+        assert!(n <= 64 && eb >= 2 && eb <= 16 && eb + 2 <= n);
+        IeeeSpec { n, eb }
+    }
+
+    /// Fraction field width.
+    #[inline]
+    pub fn fb(&self) -> u32 {
+        self.n - 1 - self.eb
+    }
+
+    /// Exponent bias.
+    #[inline]
+    pub fn bias(&self) -> i32 {
+        (1 << (self.eb - 1)) - 1
+    }
+
+    /// Maximum unbiased exponent of a normal value.
+    pub fn max_exp(&self) -> i32 {
+        (1 << (self.eb - 1)) - 1 // all-ones minus one, unbiased
+    }
+
+    /// Minimum unbiased exponent of a normal value.
+    pub fn min_exp(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Minimum unbiased exponent reachable by subnormals.
+    pub fn min_exp_subnormal(&self) -> i32 {
+        self.min_exp() - self.fb() as i32
+    }
+
+    #[inline]
+    pub fn mask(&self) -> u64 {
+        if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 }
+    }
+
+    /// Canonical quiet NaN pattern.
+    pub fn qnan(&self) -> u64 {
+        let exp_all = ((1u64 << self.eb) - 1) << self.fb();
+        exp_all | (1u64 << (self.fb() - 1))
+    }
+
+    /// Infinity pattern with sign.
+    pub fn inf_bits(&self, sign: bool) -> u64 {
+        let v = ((1u64 << self.eb) - 1) << self.fb();
+        if sign { v | (1u64 << (self.n - 1)) } else { v }
+    }
+
+    /// Number of explicit significand bits at unbiased exponent `e` (for the
+    /// accuracy analysis: tapering on the subnormal side, Fig 7 green curve).
+    pub fn frac_bits_at(&self, e: i32) -> u32 {
+        if e >= self.min_exp() {
+            self.fb()
+        } else {
+            // Subnormal: each step below min_exp loses one significand bit.
+            let lost = (self.min_exp() - e) as u32;
+            self.fb().saturating_sub(lost)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Decode (HardFloat recode stage)
+    // ------------------------------------------------------------------
+
+    /// Unpack an IEEE pattern; subnormals are normalized (CLZ + left shift).
+    pub fn decode(&self, bits: u64) -> Decoded {
+        let bits = bits & self.mask();
+        let sign = (bits >> (self.n - 1)) & 1 == 1;
+        let fb = self.fb();
+        let biased = ((bits >> fb) & ((1u64 << self.eb) - 1)) as i32;
+        let frac = bits & ((1u64 << fb) - 1);
+        let exp_all = (1i32 << self.eb) - 1;
+        if biased == exp_all {
+            return if frac == 0 { Decoded::inf(sign) } else { Decoded::NAN };
+        }
+        if biased == 0 {
+            if frac == 0 {
+                return Decoded::zero(sign);
+            }
+            // Subnormal: normalize (the hardware's CLZ + left shift).
+            // frac's leading 1 sits at bit fb-1-lz; move it to bit 63.
+            let lz = frac.leading_zeros() - (64 - fb);
+            let exp = self.min_exp() - 1 - lz as i32;
+            let sig = frac << (64 - fb + lz);
+            return Decoded::normal(sign, exp, sig);
+        }
+        let exp = biased - self.bias();
+        let sig = (1u64 << 63) | (frac << (63 - fb));
+        Decoded::normal(sign, exp, sig)
+    }
+
+    // ------------------------------------------------------------------
+    // Encode (HardFloat back-conversion, Fig 9)
+    // ------------------------------------------------------------------
+
+    /// Pack an internal value into an IEEE pattern with RNE, subnormal
+    /// denormalization, overflow→±Inf and total-underflow→±0.
+    pub fn encode(&self, d: &Decoded) -> u64 {
+        let sign_bit = if d.sign { 1u64 << (self.n - 1) } else { 0 };
+        match d.class {
+            Class::Zero => sign_bit,
+            Class::Nan => self.qnan(),
+            Class::Inf => self.inf_bits(d.sign),
+            Class::Normal => {
+                let fb = self.fb();
+                let deficit = if d.exp >= self.min_exp() {
+                    0u32
+                } else {
+                    (self.min_exp() - d.exp) as u32
+                };
+                if deficit > fb + 1 {
+                    // Strictly below half of the smallest subnormal → ±0.
+                    return sign_bit;
+                }
+                if deficit == fb + 1 {
+                    // Value in [half·minsub, minsub): tie at exactly half
+                    // rounds to even (zero); anything above rounds to 1 ulp.
+                    let tie = d.sig == 1u64 << 63 && !d.sticky;
+                    return if tie { sign_bit } else { sign_bit | 1 };
+                }
+                if deficit > 0 {
+                    // Subnormal: denormalize (right shift by `deficit`) and
+                    // round. A carry to 2^keep is either a larger subnormal
+                    // or exactly the smallest normal (1 << fb) — in both
+                    // cases the raw field value is the correct pattern body.
+                    let keep = fb + 1 - deficit;
+                    let (r, carry) = super::round::rne64(d.sig, keep, d.sticky);
+                    let field = if carry { 1u64 << keep } else { r };
+                    return sign_bit | field;
+                }
+                // Normal range.
+                let (rounded, carry) = super::round::rne64(d.sig, fb + 1, d.sticky);
+                let exp = d.exp + if carry { 1 } else { 0 };
+                if exp > self.max_exp() {
+                    return self.inf_bits(d.sign);
+                }
+                let biased = (exp + self.bias()) as u64;
+                sign_bit | (biased << fb) | (rounded & ((1u64 << fb) - 1))
+            }
+        }
+    }
+
+    /// Encode an f64 (exact unpack, then IEEE rounding at this width).
+    pub fn from_f64(&self, x: f64) -> u64 {
+        self.encode(&Decoded::from_f64(x))
+    }
+
+    /// Decode to f64 (exact whenever fb ≤ 52, i.e. every format here but f64
+    /// itself, which is the identity).
+    pub fn to_f64(&self, bits: u64) -> f64 {
+        self.decode(bits).to_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_vs_native() {
+        // Our ⟨32,8⟩ codec must agree bit-exactly with the hardware f32 path.
+        let samples: Vec<f32> = vec![
+            0.0, -0.0, 1.0, -1.0, 3.14159265, 1e-38, 1e-39, 1e-45, -1e-44,
+            f32::MIN_POSITIVE, f32::MAX, f32::INFINITY, f32::NEG_INFINITY,
+            1.5e38, 2.3e-41, 6.6e-34,
+        ];
+        for x in samples {
+            let via = F32.from_f64(x as f64);
+            assert_eq!(via, x.to_bits() as u64, "encode mismatch for {x}");
+            let back = F32.to_f64(x.to_bits() as u64);
+            assert_eq!(back as f32, x, "decode mismatch for {x}");
+        }
+    }
+
+    #[test]
+    fn f32_exhaustive_exponent_boundary_sweep() {
+        // All patterns around the subnormal/normal boundary and a PRNG sweep:
+        // decode→encode must be the identity for every non-NaN pattern.
+        for base in [0u32, 0x0000_0000, 0x007f_fff0, 0x0080_0000, 0x7f7f_fff0] {
+            for off in 0..32u32 {
+                let bits = base.wrapping_add(off);
+                if f32::from_bits(bits).is_nan() {
+                    continue;
+                }
+                let d = F32.decode(bits as u64);
+                assert_eq!(F32.encode(&d), bits as u64, "identity failed {bits:#010x}");
+            }
+        }
+        let mut x = 0x243f6a8885a308d3u64;
+        for _ in 0..300_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let bits = (x as u32) as u64;
+            if f32::from_bits(bits as u32).is_nan() {
+                continue;
+            }
+            assert_eq!(F32.encode(&F32.decode(bits)), bits);
+        }
+    }
+
+    #[test]
+    fn f16_exhaustive_identity() {
+        for bits in 0..=u16::MAX as u64 {
+            let d = F16.decode(bits);
+            if d.is_nan() {
+                continue; // NaN payloads canonicalize
+            }
+            assert_eq!(F16.encode(&d), bits, "f16 identity failed {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_exhaustive_identity() {
+        for bits in 0..=u16::MAX as u64 {
+            let d = BF16.decode(bits);
+            if d.is_nan() {
+                continue;
+            }
+            assert_eq!(BF16.encode(&d), bits, "bf16 identity failed {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn f64_identity_sampled() {
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for _ in 0..200_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            if f64::from_bits(x).is_nan() {
+                continue;
+            }
+            assert_eq!(F64.encode(&F64.decode(x)), x, "f64 identity failed {x:#x}");
+        }
+    }
+
+    #[test]
+    fn f16_pi() {
+        // float16(π) = 0x4248 = 3.140625 (Fig. 1's float16 π).
+        let bits = F16.from_f64(std::f64::consts::PI);
+        assert_eq!(bits, 0x4248);
+        assert_eq!(F16.to_f64(0x4248), 3.140625);
+    }
+
+    #[test]
+    fn fig1_posit_beats_float_on_pi() {
+        // Paper Fig 1: the 16-bit posit π is >100× more accurate than the
+        // 16-bit float π... measured as relative error ratio.
+        use super::super::posit::P16;
+        let pi = std::f64::consts::PI;
+        let ferr = (F16.to_f64(F16.from_f64(pi)) - pi).abs();
+        let perr = (P16.to_f64(P16.from_f64(pi)) - pi).abs();
+        assert!(perr < ferr, "posit should beat float on π");
+        // float16 has 10 frac bits at exp 1, posit16 has 11 here, but float16
+        // rounds π down coarsely: ratio is large though format-dependent.
+        assert!(ferr / perr > 10.0, "ratio {}", ferr / perr);
+    }
+
+    #[test]
+    fn subnormal_f32_encode_decode() {
+        // min subnormal, mid subnormal, max subnormal
+        for bits in [1u32, 0x0000_0001, 0x0040_0000, 0x007f_ffff] {
+            let x = f32::from_bits(bits);
+            let d = F32.decode(bits as u64);
+            assert!(d.is_normal());
+            assert_eq!(d.to_f64() as f32, x);
+            assert_eq!(F32.encode(&d), bits as u64);
+        }
+    }
+
+    #[test]
+    fn subnormal_rounding_from_wider() {
+        // A value halfway between 0 and the min f32 subnormal ties to even 0.
+        let half_min_sub = f64::powi(2.0, -150);
+        assert_eq!(F32.from_f64(half_min_sub), 0);
+        // Slightly above rounds to the min subnormal.
+        assert_eq!(F32.from_f64(half_min_sub * 1.0001), 1);
+        // 1.5× min subnormal ties to even → 2 ulps... (2 is even)
+        assert_eq!(F32.from_f64(f64::powi(2.0, -149) * 1.5), 2);
+    }
+
+    #[test]
+    fn overflow_to_inf() {
+        assert_eq!(F16.from_f64(1e10), F16.inf_bits(false));
+        assert_eq!(F16.from_f64(-1e10), F16.inf_bits(true));
+        assert_eq!(F32.from_f64(1e40), F32.inf_bits(false));
+        // f32 boundary: values ≥ 2^128·(1−2^-25) round to Inf
+        assert_eq!(F32.from_f64(3.4028236e38), F32.inf_bits(false));
+        assert_eq!(F32.from_f64(3.4028234e38) as u32, f32::MAX.to_bits());
+    }
+
+    #[test]
+    fn frac_bits_taper_on_subnormal_side() {
+        assert_eq!(F32.frac_bits_at(0), 23);
+        assert_eq!(F32.frac_bits_at(-126), 23);
+        assert_eq!(F32.frac_bits_at(-127), 22);
+        assert_eq!(F32.frac_bits_at(-149), 0);
+        assert_eq!(F32.frac_bits_at(-200), 0);
+    }
+
+    #[test]
+    fn spec_parameters() {
+        assert_eq!(F32.bias(), 127);
+        assert_eq!(F32.max_exp(), 127);
+        assert_eq!(F32.min_exp(), -126);
+        assert_eq!(F32.min_exp_subnormal(), -149);
+        assert_eq!(F16.bias(), 15);
+        assert_eq!(BF16.fb(), 7);
+        assert_eq!(F64.bias(), 1023);
+    }
+}

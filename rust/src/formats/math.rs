@@ -1,0 +1,433 @@
+//! Format-independent arithmetic on the unpacked [`Decoded`] representation.
+//!
+//! This is the "Arithmetic" middle stage of the decode → compute → encode
+//! pipeline common to floats, posits, and b-posits (paper §2). Operations
+//! are computed exactly into a 64-bit significand plus a sticky flag, which
+//! is sufficient for correct final rounding by any of the codecs here (all
+//! keep ≤ 61 fraction bits, so the guard/round positions always land inside
+//! the 64-bit significand and everything below collapses into sticky).
+//!
+//! Exception semantics are the *caller's* format rules: these functions use
+//! IEEE-style classes (Inf/NaN distinct); posit encoders collapse both to
+//! NaR. Division by zero yields Inf (→ NaR in posit-land), 0/0 and Inf−Inf
+//! yield NaN, sqrt of a negative yields NaN.
+
+use super::decoded::{Class, Decoded};
+
+/// Exact-significand addition (a + b).
+pub fn add(a: &Decoded, b: &Decoded) -> Decoded {
+    match (a.class, b.class) {
+        (Class::Nan, _) | (_, Class::Nan) => Decoded::NAN,
+        (Class::Inf, Class::Inf) => {
+            if a.sign == b.sign { *a } else { Decoded::NAN }
+        }
+        (Class::Inf, _) => *a,
+        (_, Class::Inf) => *b,
+        (Class::Zero, Class::Zero) => Decoded::zero(a.sign && b.sign),
+        (Class::Zero, _) => *b,
+        (_, Class::Zero) => *a,
+        (Class::Normal, Class::Normal) => add_normal(a, b),
+    }
+}
+
+/// a − b.
+pub fn sub(a: &Decoded, b: &Decoded) -> Decoded {
+    let nb = match b.class {
+        Class::Zero => Decoded::zero(!b.sign),
+        _ => Decoded { sign: !b.sign, ..*b },
+    };
+    add(a, &nb)
+}
+
+fn add_normal(a: &Decoded, b: &Decoded) -> Decoded {
+    // Order so |x| ≥ |y|.
+    let (x, y) = if a.exp > b.exp || (a.exp == b.exp && a.sig >= b.sig) { (a, b) } else { (b, a) };
+    let diff = (x.exp - y.exp) as u32;
+    // Work in 128-bit with the big operand at bits [126:63].
+    let xs = (x.sig as u128) << 63;
+    let (ys, mut sticky) = if diff == 0 {
+        ((y.sig as u128) << 63, false)
+    } else if diff < 64 {
+        let kept = (y.sig as u128) << (63 - diff.min(63));
+        (kept, false) // diff < 64 keeps everything (63+64-diff ≥ 64 bits of room)
+    } else if diff < 127 {
+        let sh = diff - 63; // shift right below the 63-bit guard zone
+        let kept = (y.sig as u128) >> sh;
+        let lost = y.sig & ((1u64 << sh.min(63)) - 1) != 0;
+        (kept, lost)
+    } else {
+        (0u128, true)
+    };
+    sticky |= x.sticky || y.sticky;
+    let same_sign = x.sign == y.sign;
+    let mut acc: u128;
+    if same_sign {
+        acc = xs + ys;
+    } else {
+        // |x| ≥ |y| so no underflow. If bits of y were dropped (shift loss
+        // or y's own sticky), the true |y| is slightly larger than `ys`, so
+        // the true difference lies just BELOW xs−ys: bias down one unit and
+        // let sticky mark the half-open gap (faithful). When x itself is
+        // sticky too the direction is ambiguous — a one-ulp faithfulness
+        // slip we accept for chained inexact operands (codec outputs are
+        // always exact, so this never affects single operations).
+        acc = xs - ys;
+        if sticky && !x.sticky {
+            if acc == 0 {
+                // Kept bits cancelled exactly and only dust remains on y's
+                // side: the true result is a tiny value with y's sign.
+                return Decoded {
+                    class: Class::Normal,
+                    sign: y.sign,
+                    exp: x.exp - 127,
+                    sig: 1u64 << 63,
+                    sticky: true,
+                };
+            }
+            acc -= 1;
+        }
+        if acc == 0 {
+            return if sticky {
+                // Cancellation down to the sticky dust: faithful tiny value.
+                Decoded { class: Class::Normal, sign: x.sign, exp: x.exp - 126, sig: 1u64 << 63, sticky: true }
+            } else {
+                Decoded::ZERO
+            };
+        }
+    }
+    // Normalize: MSB of acc to position 126 (value weight 2^exp).
+    let msb = 127 - acc.leading_zeros() as i32;
+    let exp = x.exp + (msb - 126);
+    let sig;
+    if msb >= 63 {
+        let drop = (msb - 63) as u32;
+        sig = (acc >> drop) as u64;
+        if drop > 0 && acc & ((1u128 << drop) - 1) != 0 {
+            sticky = true;
+        }
+    } else {
+        sig = (acc as u64) << (63 - msb);
+    }
+    Decoded { class: Class::Normal, sign: x.sign, exp, sig, sticky }
+}
+
+/// a × b.
+pub fn mul(a: &Decoded, b: &Decoded) -> Decoded {
+    let sign = a.sign ^ b.sign;
+    match (a.class, b.class) {
+        (Class::Nan, _) | (_, Class::Nan) => Decoded::NAN,
+        (Class::Inf, Class::Zero) | (Class::Zero, Class::Inf) => Decoded::NAN,
+        (Class::Inf, _) | (_, Class::Inf) => Decoded::inf(sign),
+        (Class::Zero, _) | (_, Class::Zero) => Decoded::zero(sign),
+        (Class::Normal, Class::Normal) => {
+            let prod = a.sig as u128 * b.sig as u128; // ∈ [2^126, 2^128)
+            let msb = 127 - prod.leading_zeros() as i32; // 126 or 127
+            let drop = (msb - 63) as u32;
+            let sig = (prod >> drop) as u64;
+            let sticky = prod & ((1u128 << drop) - 1) != 0 || a.sticky || b.sticky;
+            Decoded { class: Class::Normal, sign, exp: a.exp + b.exp + (msb - 126), sig, sticky }
+        }
+    }
+}
+
+/// a ÷ b.
+pub fn div(a: &Decoded, b: &Decoded) -> Decoded {
+    let sign = a.sign ^ b.sign;
+    match (a.class, b.class) {
+        (Class::Nan, _) | (_, Class::Nan) => Decoded::NAN,
+        (Class::Inf, Class::Inf) => Decoded::NAN,
+        (Class::Inf, _) => Decoded::inf(sign),
+        (_, Class::Inf) => Decoded::zero(sign),
+        (Class::Zero, Class::Zero) => Decoded::NAN,
+        (Class::Zero, _) => Decoded::zero(sign),
+        (_, Class::Zero) => Decoded::inf(sign), // x/0 → Inf (posit: NaR)
+        (Class::Normal, Class::Normal) => {
+            // q = (a.sig << 63) / b.sig ∈ (2^62, 2^64)
+            let num = (a.sig as u128) << 63;
+            let den = b.sig as u128;
+            let q = num / den;
+            let r = num % den;
+            let msb = 127 - q.leading_zeros() as i32; // 62 or 63
+            let (sig, extra_sticky) = if msb == 63 {
+                (q as u64, false)
+            } else {
+                // Shift up one and refine with one more quotient bit.
+                let num2 = r << 1;
+                let bit = (num2 >= den) as u64;
+                let r2 = num2 - if bit == 1 { den } else { 0 };
+                (((q as u64) << 1) | bit, r2 != 0)
+            };
+            let sticky = (msb == 63 && r != 0) || extra_sticky || a.sticky || b.sticky;
+            Decoded { class: Class::Normal, sign, exp: a.exp - b.exp + (msb - 63), sig, sticky }
+        }
+    }
+}
+
+/// √a.
+pub fn sqrt(a: &Decoded) -> Decoded {
+    match a.class {
+        Class::Nan => Decoded::NAN,
+        Class::Zero => *a,
+        Class::Inf => {
+            if a.sign { Decoded::NAN } else { *a }
+        }
+        Class::Normal => {
+            if a.sign {
+                return Decoded::NAN;
+            }
+            // value = sig·2^E with E = exp−63. Rewrite as X·4^k with
+            // X ∈ [2^126, 2^128) so that s = isqrt(X) ∈ [2^63, 2^64) is a
+            // normalized significand and sqrt(value) = s·2^k.
+            let e = a.exp - 63;
+            let (x, k) = if e % 2 == 0 {
+                ((a.sig as u128) << 64, (e - 64) / 2) // E even: X ∈ [2^127, 2^128)
+            } else {
+                ((a.sig as u128) << 63, (e - 63) / 2) // E odd: X ∈ [2^126, 2^127)
+            };
+            let s = isqrt128(x);
+            let rem = x - s * s;
+            Decoded {
+                class: Class::Normal,
+                sign: false,
+                exp: 63 + k,
+                sig: s as u64,
+                sticky: rem != 0 || a.sticky,
+            }
+        }
+    }
+}
+
+/// Integer square root of a u128 (Newton's method with careful init).
+fn isqrt128(x: u128) -> u128 {
+    if x == 0 {
+        return 0;
+    }
+    // Initial over-estimate (≥ √x, ≤ 2^64−1 so squaring never overflows).
+    let bits = 128 - x.leading_zeros();
+    let mut g: u128 = (1u128 << (bits / 2 + 1)).min((1u128 << 64) - 1);
+    loop {
+        let next = (g + x / g) >> 1;
+        if next >= g {
+            break;
+        }
+        g = next;
+    }
+    // g = floor(sqrt(x)) or close; correct downwards/upwards.
+    while g * g > x {
+        g -= 1;
+    }
+    while (g + 1).checked_mul(g + 1).map(|sq| sq <= x).unwrap_or(false) {
+        g += 1;
+    }
+    g
+}
+
+/// Fused multiply-add: a·b + c computed with a single rounding (the 128-bit
+/// product is added exactly before normalization).
+pub fn fma(a: &Decoded, b: &Decoded, c: &Decoded) -> Decoded {
+    let p = mul(a, b);
+    if !p.is_normal() || !c.is_normal() {
+        return add(&p, c);
+    }
+    if p.sticky {
+        // mul dropped bits only when the product didn't fit 64 bits; redo
+        // exactly: represent the product on 128 bits split into hi/lo
+        // Decoded parts and add both.
+        let prod = a.sig as u128 * b.sig as u128;
+        let msb = 127 - prod.leading_zeros() as i32;
+        let e = a.exp + b.exp + (msb - 126);
+        let hi_sig = (prod >> (msb - 63)) as u64;
+        let lo_bits = prod & ((1u128 << (msb - 63)) - 1);
+        let hi = Decoded { class: Class::Normal, sign: p.sign, exp: e, sig: hi_sig, sticky: false };
+        let step1 = add(&hi, c);
+        if lo_bits == 0 {
+            return step1;
+        }
+        // lo value = lo_bits · 2^(e−msb): bit i of the product has weight
+        // 2^(e−msb+i), so lo's MSB (at position lo_msb) has weight e−msb+lo_msb.
+        let lo_msb = 127 - lo_bits.leading_zeros() as i32;
+        let lo_exp2 = (e - msb) + lo_msb;
+        let lo_sig = if lo_msb >= 63 { (lo_bits >> (lo_msb - 63)) as u64 } else { (lo_bits as u64) << (63 - lo_msb) };
+        let lo_sticky = lo_msb > 63 && lo_bits & ((1u128 << (lo_msb - 63)) - 1) != 0;
+        let lo = Decoded { class: Class::Normal, sign: p.sign, exp: lo_exp2, sig: lo_sig, sticky: lo_sticky };
+        add(&step1, &lo)
+    } else {
+        add(&p, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(x: f64) -> Decoded {
+        Decoded::from_f64(x)
+    }
+
+    #[test]
+    fn add_exact_cases() {
+        assert_eq!(add(&d(1.5), &d(2.25)).to_f64(), 3.75);
+        assert_eq!(add(&d(-1.5), &d(1.5)).to_f64(), 0.0);
+        assert_eq!(add(&d(1e300), &d(-1e300)).to_f64(), 0.0);
+        assert_eq!(add(&d(0.0), &d(-7.0)).to_f64(), -7.0);
+    }
+
+    #[test]
+    fn add_matches_f64_randomized() {
+        // f64 ops with ≤ 52-bit inputs that stay exact in 64-bit sig space.
+        let mut x = 0x853c49e6748fea9bu64;
+        for _ in 0..100_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let a = ((x >> 20) as i32 as f64) * 0.001953125; // scaled ints: exact
+            let b = ((x & 0xffff_ffff) as i32 as f64) * 32.0;
+            let r = add(&d(a), &d(b));
+            assert_eq!(r.to_f64(), a + b, "add mismatch {a} + {b}");
+            assert!(!r.sticky);
+        }
+    }
+
+    #[test]
+    fn sub_cancellation() {
+        let a = d(1.0000000000000002); // 1 + 2^-52
+        let b = d(1.0);
+        let r = sub(&a, &b);
+        assert_eq!(r.to_f64(), f64::powi(2.0, -52));
+        assert!(!r.sticky);
+    }
+
+    #[test]
+    fn mul_matches_f64() {
+        let mut x = 0xda3e39cb94b95bdbu64;
+        for _ in 0..100_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            // 26-bit operands: product exact in f64
+            let a = ((x >> 38) as f64) + 1.0;
+            let b = (((x >> 12) & 0x3ff_ffff) as f64) + 1.0;
+            let r = mul(&d(a), &d(b));
+            assert_eq!(r.to_f64(), a * b, "mul mismatch {a} * {b}");
+        }
+    }
+
+    #[test]
+    fn mul_signs_and_specials() {
+        assert_eq!(mul(&d(-2.0), &d(3.0)).to_f64(), -6.0);
+        assert!(mul(&d(f64::INFINITY), &d(0.0)).is_nan());
+        assert_eq!(mul(&d(f64::INFINITY), &d(-2.0)).to_f64(), f64::NEG_INFINITY);
+        assert!(mul(&d(f64::NAN), &d(1.0)).is_nan());
+    }
+
+    #[test]
+    fn div_exact_and_inexact() {
+        assert_eq!(div(&d(1.0), &d(4.0)).to_f64(), 0.25);
+        assert_eq!(div(&d(-12.0), &d(3.0)).to_f64(), -4.0);
+        let third = div(&d(1.0), &d(3.0));
+        assert!(third.sticky);
+        assert!((third.to_f64() - 1.0 / 3.0).abs() < 1e-16);
+        assert!(div(&d(1.0), &d(0.0)).is_inf());
+        assert!(div(&d(0.0), &d(0.0)).is_nan());
+        assert!(div(&d(f64::INFINITY), &d(f64::INFINITY)).is_nan());
+    }
+
+    #[test]
+    fn div_matches_f64_when_exact() {
+        let mut x = 0xf1ea5eed12345678u64;
+        for _ in 0..50_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let a = ((x >> 32) & 0xffff) as f64 + 1.0;
+            let b = f64::powi(2.0, ((x & 7) as i32) - 3); // power of two: exact division
+            let r = div(&d(a), &d(b));
+            assert_eq!(r.to_f64(), a / b);
+            assert!(!r.sticky);
+        }
+    }
+
+    #[test]
+    fn sqrt_exact_squares() {
+        for k in 1..2000u64 {
+            let x = (k * k) as f64;
+            let r = sqrt(&d(x));
+            assert_eq!(r.to_f64(), k as f64, "sqrt({x})");
+            assert!(!r.sticky, "sqrt of perfect square must be exact");
+        }
+    }
+
+    #[test]
+    fn sqrt_matches_f64() {
+        let mut x = 0xabcdef9876543210u64;
+        for _ in 0..20_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let a = f64::from_bits((x & 0x7fef_ffff_ffff_ffff).max(1));
+            if !a.is_finite() || a == 0.0 {
+                continue;
+            }
+            let r = sqrt(&d(a)).to_f64();
+            let expect = a.sqrt();
+            // faithful: within 1 ulp (our to_f64 rounds the 64-bit sig)
+            let ulp = (expect.to_bits() as i64 - r.to_bits() as i64).abs();
+            assert!(ulp <= 1, "sqrt({a}): got {r}, want {expect}");
+        }
+    }
+
+    #[test]
+    fn sqrt_specials() {
+        assert!(sqrt(&d(-1.0)).is_nan());
+        assert!(sqrt(&d(f64::NAN)).is_nan());
+        assert_eq!(sqrt(&d(0.0)).to_f64(), 0.0);
+        assert_eq!(sqrt(&d(f64::INFINITY)).to_f64(), f64::INFINITY);
+        assert!(sqrt(&d(f64::NEG_INFINITY)).is_nan());
+    }
+
+    #[test]
+    fn fma_single_rounding() {
+        // fma(x, y, -x·y_rounded) exposes the double-rounding difference.
+        let a = d(1.0 + f64::powi(2.0, -30));
+        let b = d(1.0 + f64::powi(2.0, -31));
+        let exact_f64 = f64::mul_add(1.0 + f64::powi(2.0, -30), 1.0 + f64::powi(2.0, -31), -1.0);
+        let r = fma(&a, &b, &d(-1.0));
+        assert_eq!(r.to_f64(), exact_f64);
+    }
+
+    #[test]
+    fn fma_specials() {
+        assert!(fma(&d(f64::INFINITY), &d(0.0), &d(1.0)).is_nan());
+        assert_eq!(fma(&d(2.0), &d(3.0), &d(4.0)).to_f64(), 10.0);
+    }
+
+    #[test]
+    fn isqrt_boundaries() {
+        assert_eq!(isqrt128(0), 0);
+        assert_eq!(isqrt128(1), 1);
+        assert_eq!(isqrt128(3), 1);
+        assert_eq!(isqrt128(4), 2);
+        assert_eq!(isqrt128(u128::MAX), (1u128 << 64) - 1);
+        let big = (1u128 << 100) - 1;
+        let s = isqrt128(big);
+        assert!(s * s <= big && (s + 1) * (s + 1) > big);
+    }
+
+    #[test]
+    fn add_sticky_faithfulness() {
+        // big + tiny: tiny collapses to sticky; result strictly between
+        // big and big+ulp.
+        let big = d(f64::powi(2.0, 80));
+        let tiny = d(1.0);
+        let r = add(&big, &tiny);
+        assert!(r.sticky);
+        assert_eq!(r.exp, 80);
+        assert_eq!(r.sig, 1u64 << 63);
+        // And subtracting the dust: big - tiny < big.
+        let r2 = sub(&big, &tiny);
+        assert!(r2.sticky);
+        // sig should be all-ones-ish: 2^80 - 1 ≈ 1.111…·2^79
+        assert_eq!(r2.exp, 79);
+        assert_eq!(r2.sig, u64::MAX);
+    }
+}

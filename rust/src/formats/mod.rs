@@ -1,0 +1,208 @@
+//! Numeric formats: IEEE floats, standard posits, b-posits, takums, and the
+//! quire — the complete format zoo the paper compares.
+//!
+//! Everything decodes into a shared unpacked form ([`decoded::Decoded`]),
+//! computes via [`math`], and encodes back — the same three-stage pipeline
+//! (decode → arithmetic → encode) whose hardware cost the paper measures.
+
+pub mod decoded;
+pub mod round;
+pub mod posit;
+pub mod ieee;
+pub mod takum;
+pub mod quire;
+pub mod math;
+pub mod convert;
+
+pub use decoded::{Class, Decoded};
+pub use ieee::IeeeSpec;
+pub use posit::PositSpec;
+pub use quire::Quire;
+pub use takum::TakumSpec;
+
+/// Uniform interface over every codec in the zoo (used by the accuracy
+/// analysis, the cross-format converter, and the CLI).
+pub trait Codec {
+    /// Total width in bits.
+    fn n(&self) -> u32;
+    /// Human-readable format name (e.g. `posit<32,2>`, `b-posit<32,6,5>`).
+    fn name(&self) -> String;
+    /// Unpack a bit pattern.
+    fn decode(&self, bits: u64) -> Decoded;
+    /// Pack a value (with the format's own rounding + saturation rules).
+    fn encode(&self, d: &Decoded) -> u64;
+    /// Explicit significand (fraction) bits available at binary scale `e`.
+    fn frac_bits_at(&self, e: i32) -> u32;
+    /// Largest binary scale of a finite value.
+    fn max_scale(&self) -> i32;
+    /// Smallest binary scale of a nonzero value.
+    fn min_scale(&self) -> i32;
+
+    /// Round an f64 through this format (encode then decode).
+    fn roundtrip_f64(&self, x: f64) -> f64 {
+        self.decode(self.encode(&Decoded::from_f64(x))).to_f64()
+    }
+}
+
+impl Codec for PositSpec {
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn name(&self) -> String {
+        if self.is_bounded() {
+            format!("b-posit<{},{},{}>", self.n, self.rs, self.es)
+        } else {
+            format!("posit<{},{}>", self.n, self.es)
+        }
+    }
+    fn decode(&self, bits: u64) -> Decoded {
+        PositSpec::decode(self, bits)
+    }
+    fn encode(&self, d: &Decoded) -> u64 {
+        PositSpec::encode(self, d)
+    }
+    fn frac_bits_at(&self, e: i32) -> u32 {
+        PositSpec::frac_bits_at(self, e)
+    }
+    fn max_scale(&self) -> i32 {
+        self.max_exp()
+    }
+    fn min_scale(&self) -> i32 {
+        self.min_exp()
+    }
+}
+
+impl Codec for IeeeSpec {
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn name(&self) -> String {
+        match (self.n, self.eb) {
+            (16, 5) => "float16".into(),
+            (16, 8) => "bfloat16".into(),
+            (32, 8) => "float32".into(),
+            (64, 11) => "float64".into(),
+            _ => format!("ieee<{},{}>", self.n, self.eb),
+        }
+    }
+    fn decode(&self, bits: u64) -> Decoded {
+        IeeeSpec::decode(self, bits)
+    }
+    fn encode(&self, d: &Decoded) -> u64 {
+        IeeeSpec::encode(self, d)
+    }
+    fn frac_bits_at(&self, e: i32) -> u32 {
+        IeeeSpec::frac_bits_at(self, e)
+    }
+    fn max_scale(&self) -> i32 {
+        self.max_exp()
+    }
+    fn min_scale(&self) -> i32 {
+        self.min_exp_subnormal()
+    }
+}
+
+impl Codec for TakumSpec {
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn name(&self) -> String {
+        format!("takum{}", self.n)
+    }
+    fn decode(&self, bits: u64) -> Decoded {
+        TakumSpec::decode(self, bits)
+    }
+    fn encode(&self, d: &Decoded) -> u64 {
+        TakumSpec::encode(self, d)
+    }
+    fn frac_bits_at(&self, e: i32) -> u32 {
+        TakumSpec::frac_bits_at(self, e)
+    }
+    fn max_scale(&self) -> i32 {
+        self.max_exp()
+    }
+    fn min_scale(&self) -> i32 {
+        self.min_exp()
+    }
+}
+
+/// Computed format arithmetic: decode both operands, run the shared exact
+/// arithmetic, re-encode under the format's rounding rules. These are the
+/// software mirrors of a hardware ALU wrapped in decode/encode stages.
+pub fn op_add<C: Codec + ?Sized>(c: &C, a: u64, b: u64) -> u64 {
+    c.encode(&math::add(&c.decode(a), &c.decode(b)))
+}
+
+pub fn op_sub<C: Codec + ?Sized>(c: &C, a: u64, b: u64) -> u64 {
+    c.encode(&math::sub(&c.decode(a), &c.decode(b)))
+}
+
+pub fn op_mul<C: Codec + ?Sized>(c: &C, a: u64, b: u64) -> u64 {
+    c.encode(&math::mul(&c.decode(a), &c.decode(b)))
+}
+
+pub fn op_div<C: Codec + ?Sized>(c: &C, a: u64, b: u64) -> u64 {
+    c.encode(&math::div(&c.decode(a), &c.decode(b)))
+}
+
+pub fn op_sqrt<C: Codec + ?Sized>(c: &C, a: u64) -> u64 {
+    c.encode(&math::sqrt(&c.decode(a)))
+}
+
+pub fn op_fma<C: Codec + ?Sized>(c: &C, a: u64, b: u64, acc: u64) -> u64 {
+    c.encode(&math::fma(&c.decode(a), &c.decode(b), &c.decode(acc)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use posit::{BP32, P16, P32};
+
+    #[test]
+    fn names() {
+        assert_eq!(P32.name(), "posit<32,2>");
+        assert_eq!(BP32.name(), "b-posit<32,6,5>");
+        assert_eq!(ieee::F32.name(), "float32");
+        assert_eq!(takum::T32.name(), "takum32");
+    }
+
+    #[test]
+    fn op_add_p16_exhaustive_row() {
+        // One full row of the addition table vs f64 reference (p16 values
+        // are exact in f64, and p16 results have ≤ 12 significant bits so
+        // the f64 sum rounds identically).
+        let a_bits = P16.from_f64(1.0);
+        for b_bits in 0..=u16::MAX as u64 {
+            if b_bits == P16.nar() {
+                continue;
+            }
+            let expect = P16.from_f64(1.0 + P16.to_f64(b_bits));
+            let got = op_add(&P16, a_bits, b_bits);
+            assert_eq!(got, expect, "1.0 + {b_bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn op_mul_by_nar_is_nar() {
+        assert_eq!(op_mul(&P32, P32.nar(), P32.from_f64(2.0)), P32.nar());
+        assert_eq!(op_div(&P32, P32.from_f64(1.0), 0), P32.nar()); // 1/0 → NaR
+        assert_eq!(op_sqrt(&P32, P32.from_f64(-4.0)), P32.nar());
+    }
+
+    #[test]
+    fn op_basic_bp32() {
+        let two = BP32.from_f64(2.0);
+        let three = BP32.from_f64(3.0);
+        assert_eq!(BP32.to_f64(op_add(&BP32, two, three)), 5.0);
+        assert_eq!(BP32.to_f64(op_mul(&BP32, two, three)), 6.0);
+        assert_eq!(BP32.to_f64(op_sub(&BP32, two, three)), -1.0);
+        assert_eq!(BP32.to_f64(op_sqrt(&BP32, BP32.from_f64(9.0))), 3.0);
+        assert_eq!(BP32.to_f64(op_fma(&BP32, two, three, two)), 8.0);
+    }
+
+    #[test]
+    fn roundtrip_f64_helper() {
+        assert_eq!(P16.roundtrip_f64(1.0), 1.0);
+        assert!((P16.roundtrip_f64(std::f64::consts::PI) - 3.1416015625).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,520 @@
+//! Posit-family codec: standard posits ⟨n,eS⟩ and bounded posits (b-posits)
+//! ⟨n,rS,eS⟩ share one implementation.
+//!
+//! As the paper observes (§1.4), *"a standard n-bit posit has a maximum
+//! regime size rS equal to n−1"* — so a standard posit is exactly a b-posit
+//! with `rs = n-1`, and one parameterized codec covers both. The b-posit of
+//! the paper is `⟨n, 6, 5⟩`.
+//!
+//! Semantics implemented here (see DESIGN.md §Format semantics):
+//! - `000…0` is zero; `100…0` is NaR. Negative values are the 2's complement
+//!   of their magnitude pattern, so posit comparison is signed-integer
+//!   comparison and NaR sorts below every real posit.
+//! - The regime is a run of identical bits terminated by the first opposite
+//!   bit **or by reaching `rs` bits** (the b-posit rule). A run of k zeros
+//!   encodes r = −k; a run of k ones encodes r = k−1.
+//! - Effective exponent `T = r·2^eS + e`; value = (−1)^s · 2^T · (1+f).
+//! - Rounding is round-to-nearest-even in pattern space (Posit™ Standard
+//!   rule), with saturation: a nonzero real never rounds to zero or NaR.
+
+use super::decoded::{Class, Decoded};
+use super::round::BitStream;
+
+/// Static description of a posit-family format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PositSpec {
+    /// Total width in bits, 2 ≤ n ≤ 64.
+    pub n: u32,
+    /// Maximum regime field size, 2 ≤ rs ≤ n−1. `rs = n-1` ⇒ standard posit.
+    pub rs: u32,
+    /// Exponent field size in bits, 0 ≤ es ≤ 30.
+    pub es: u32,
+}
+
+/// Standard 8-bit posit ⟨8,2⟩ per the Posit™ Standard (2022).
+pub const P8: PositSpec = PositSpec { n: 8, rs: 7, es: 2 };
+/// Standard 16-bit posit ⟨16,2⟩.
+pub const P16: PositSpec = PositSpec { n: 16, rs: 15, es: 2 };
+/// Standard 32-bit posit ⟨32,2⟩.
+pub const P32: PositSpec = PositSpec { n: 32, rs: 31, es: 2 };
+/// Standard 64-bit posit ⟨64,2⟩.
+pub const P64: PositSpec = PositSpec { n: 64, rs: 63, es: 2 };
+/// Paper's 16-bit b-posit ⟨16,6,5⟩ (Tables 5/6 configuration).
+pub const BP16: PositSpec = PositSpec { n: 16, rs: 6, es: 5 };
+/// Paper's 32-bit b-posit ⟨32,6,5⟩ — dynamic range 2^−192 … 2^192.
+pub const BP32: PositSpec = PositSpec { n: 32, rs: 6, es: 5 };
+/// Paper's 64-bit b-posit ⟨64,6,5⟩.
+pub const BP64: PositSpec = PositSpec { n: 64, rs: 6, es: 5 };
+/// Fig. 6b configuration: ⟨16,6,3⟩ (eS=3 compensates the halved range).
+pub const BP16_E3: PositSpec = PositSpec { n: 16, rs: 6, es: 3 };
+
+impl PositSpec {
+    /// Standard posit ⟨n,es⟩ (unbounded regime, i.e. rs = n−1).
+    pub fn standard(n: u32, es: u32) -> PositSpec {
+        assert!((2..=64).contains(&n));
+        PositSpec { n, rs: n - 1, es }
+    }
+
+    /// Bounded posit ⟨n,rs,es⟩.
+    pub fn bounded(n: u32, rs: u32, es: u32) -> PositSpec {
+        assert!((2..=64).contains(&n), "n out of range");
+        assert!(rs >= 2 && rs <= n - 1, "rs out of range");
+        PositSpec { n, rs, es }
+    }
+
+    /// True if this is a bounded (b-posit) configuration.
+    pub fn is_bounded(&self) -> bool {
+        self.rs < self.n - 1
+    }
+
+    /// Bit mask covering the n-bit word.
+    #[inline]
+    pub fn mask(&self) -> u64 {
+        if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 }
+    }
+
+    /// Width of the body (everything after the sign bit).
+    #[inline]
+    pub fn m(&self) -> u32 {
+        self.n - 1
+    }
+
+    /// The NaR ("Not a Real") pattern: 100…0.
+    #[inline]
+    pub fn nar(&self) -> u64 {
+        1u64 << (self.n - 1)
+    }
+
+    /// Magnitude body of the largest finite posit (0111…1).
+    #[inline]
+    pub fn maxpos_body(&self) -> u64 {
+        (1u64 << self.m()) - 1
+    }
+
+    /// Largest representable regime value r.
+    pub fn r_max(&self) -> i32 {
+        self.rs as i32 - 1
+    }
+
+    /// Smallest representable regime value r. For a standard posit the body
+    /// of all zeros is the zero pattern, so the longest usable zero-run is
+    /// m−1; for a true b-posit the capped run of rs zeros still leaves
+    /// payload bits, so −rs is reachable.
+    pub fn r_min(&self) -> i32 {
+        if self.is_bounded() { -(self.rs as i32) } else { -(self.m() as i32 - 1) }
+    }
+
+    /// Largest effective exponent T (scale of maxpos).
+    pub fn max_exp(&self) -> i32 {
+        // maxpos: maximal regime; exponent bits all ones if any survive.
+        let reg_len = self.regime_len(self.r_max());
+        let rem = self.m().saturating_sub(reg_len);
+        let e = if rem >= self.es {
+            (1i32 << self.es) - 1
+        } else {
+            // partial/ghost exponent bits: surviving bits are ones, ghosts zero
+            (((1u64 << rem) - 1) << (self.es - rem)) as i32
+        };
+        self.r_max() * (1 << self.es) + e
+    }
+
+    /// Smallest effective exponent T (scale of minpos).
+    pub fn min_exp(&self) -> i32 {
+        self.r_min() * (1 << self.es)
+    }
+
+    /// Number of distinct regime-field sizes (the paper's "five possible
+    /// combinations" for rs=6: sizes 2..=6).
+    pub fn regime_size_count(&self) -> u32 {
+        self.rs - 1
+    }
+
+    /// Quire width in bits per the paper's sizing rule: carry guard (31) +
+    /// 2·(2·|Tmin|) + 1, rounded up to a multiple of 64 is the storage size;
+    /// the architectural size for ⟨n,6,5⟩ is 800.
+    pub fn quire_bits(&self) -> u32 {
+        let t = self.min_exp().unsigned_abs();
+        31 + 4 * t + 1
+    }
+
+    /// Length of the regime *field* (including terminator when present) for
+    /// regime value r.
+    pub fn regime_len(&self, r: i32) -> u32 {
+        let run = if r >= 0 { r as u32 + 1 } else { (-r) as u32 };
+        if run >= self.rs { self.rs } else { run + 1 }
+    }
+
+    /// Number of explicit fraction bits carried by a value with effective
+    /// exponent T (used by the accuracy analysis for Figs 6/7).
+    pub fn frac_bits_at(&self, t: i32) -> u32 {
+        let r = t >> self.es;
+        let reg_len = self.regime_len(r);
+        self.m().saturating_sub(reg_len).saturating_sub(self.es)
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    /// Unpack an n-bit pattern into the internal representation.
+    pub fn decode(&self, bits: u64) -> Decoded {
+        let bits = bits & self.mask();
+        if bits == 0 {
+            return Decoded::ZERO;
+        }
+        if bits == self.nar() {
+            return Decoded::NAN;
+        }
+        let sign = (bits >> (self.n - 1)) & 1 == 1;
+        let word = if sign { bits.wrapping_neg() & self.mask() } else { bits };
+        let m = self.m();
+        let body = word & self.maxpos_body();
+        // Leading-run length of the body's MSB value.
+        let b0 = (body >> (m - 1)) & 1;
+        let probe = if b0 == 1 { !body & self.maxpos_body() } else { body };
+        // `probe` has a 0-run where the regime run is; count its leading zeros
+        // within the m-bit field.
+        let run_raw = if probe == 0 { m } else { (probe << (64 - m)).leading_zeros() };
+        let run = run_raw.min(self.rs);
+        let reg_len = if run == self.rs { self.rs } else { run + 1 };
+        let r: i32 = if b0 == 1 { run as i32 - 1 } else { -(run as i32) };
+        let rem_w = m - reg_len.min(m);
+        let rem = if rem_w == 0 { 0 } else { body & ((1u64 << rem_w) - 1) };
+        let (e, frac, fw) = if rem_w >= self.es {
+            let fw = rem_w - self.es;
+            (
+                (rem >> fw) as i32,
+                if fw == 0 { 0 } else { rem & ((1u64 << fw) - 1) },
+                fw,
+            )
+        } else {
+            // Some or all exponent bits are ghosts (zero).
+            ((rem << (self.es - rem_w)) as i32, 0, 0)
+        };
+        let t = r * (1 << self.es) + e;
+        let sig = (1u64 << 63) | if fw == 0 { 0 } else { frac << (63 - fw) };
+        Decoded::normal(sign, t, sig)
+    }
+
+    // ------------------------------------------------------------------
+    // Encode
+    // ------------------------------------------------------------------
+
+    /// Pack an internal value into an n-bit pattern with round-to-nearest-
+    /// even (pattern space) and posit saturation semantics.
+    pub fn encode(&self, d: &Decoded) -> u64 {
+        match d.class {
+            Class::Zero => 0,
+            Class::Nan | Class::Inf => self.nar(),
+            Class::Normal => {
+                let body = self.encode_body(d);
+                if d.sign {
+                    body.wrapping_neg() & self.mask()
+                } else {
+                    body
+                }
+            }
+        }
+    }
+
+    /// Encode the magnitude into a positive body pattern in [1, 2^m − 1].
+    fn encode_body(&self, d: &Decoded) -> u64 {
+        let m = self.m();
+        let t = d.exp;
+        let r = t >> self.es; // floor division by 2^es
+        let e = (t - (r << self.es)) as u64; // in [0, 2^es)
+        if r > self.r_max() {
+            return self.maxpos_body();
+        }
+        if r < self.r_min() {
+            return 1; // minpos
+        }
+        let mut s = BitStream::new();
+        // Regime field.
+        if r >= 0 {
+            let run = r as u32 + 1;
+            if run >= self.rs {
+                s.push_run(1, self.rs);
+            } else {
+                s.push_run(1, run);
+                s.push(0, 1);
+            }
+        } else {
+            let run = (-r) as u32;
+            if run >= self.rs {
+                s.push_run(0, self.rs);
+            } else {
+                s.push_run(0, run);
+                s.push(1, 1);
+            }
+        }
+        // Exponent field.
+        s.push(e, self.es);
+        // Fraction: significand without the hidden bit.
+        s.push(d.sig << 1 >> 1, 63);
+        s.or_sticky(d.sticky);
+        let body = s.round_rne(m);
+        if body >> m != 0 || body == self.maxpos_body() + 1 {
+            return self.maxpos_body(); // carry out: saturate, never NaR
+        }
+        if body == 0 {
+            return 1; // never round a nonzero real to zero
+        }
+        body
+    }
+
+    // ------------------------------------------------------------------
+    // Convenience
+    // ------------------------------------------------------------------
+
+    /// Encode an f64 value (exact unpack, then posit rounding).
+    pub fn from_f64(&self, x: f64) -> u64 {
+        self.encode(&Decoded::from_f64(x))
+    }
+
+    /// Decode to f64 (exact for n ≤ 53+overhead; faithful otherwise).
+    pub fn to_f64(&self, bits: u64) -> f64 {
+        self.decode(bits).to_f64()
+    }
+
+    /// Signed-integer comparison of two patterns (the posit comparison rule:
+    /// reinterpret as 2's-complement integers; NaR is the minimum).
+    pub fn cmp_bits(&self, a: u64, b: u64) -> std::cmp::Ordering {
+        self.sext(a).cmp(&self.sext(b))
+    }
+
+    /// Sign-extend an n-bit pattern to i64.
+    pub fn sext(&self, bits: u64) -> i64 {
+        let sh = 64 - self.n;
+        ((bits << sh) as i64) >> sh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_and_nar() {
+        for spec in [P16, P32, BP16, BP32, BP64] {
+            assert!(spec.decode(0).is_zero());
+            assert!(spec.decode(spec.nar()).is_nan());
+            assert_eq!(spec.encode(&Decoded::ZERO), 0);
+            assert_eq!(spec.encode(&Decoded::NAN), spec.nar());
+            assert_eq!(spec.encode(&Decoded::inf(true)), spec.nar());
+        }
+    }
+
+    #[test]
+    fn p16_pi_matches_known_pattern() {
+        // posit16(π): s=0, regime=10 (r=0), e=01, frac=10010010001 (1169)
+        // → 0x4C91 = 2·(1+1169/2048) = 3.1416015625 (Fig. 1's posit16 π).
+        let bits = P16.from_f64(std::f64::consts::PI);
+        assert_eq!(bits, 0x4C91, "got {bits:#06x}");
+        assert_eq!(P16.to_f64(0x4C91), 3.1416015625);
+    }
+
+    #[test]
+    fn p32_known_values() {
+        // posit32(1.0) = 0x40000000
+        assert_eq!(P32.from_f64(1.0), 0x4000_0000);
+        assert_eq!(P32.to_f64(0x4000_0000), 1.0);
+        // posit32(-1.0) = 2's complement
+        assert_eq!(P32.from_f64(-1.0), 0xC000_0000);
+        assert_eq!(P32.to_f64(0xC000_0000), -1.0);
+        // posit32(0.5): r=-1 → regime 01… wait sign 0, regime "01" is r=0.
+        // 0.5 = 2^-1: T=-1 → r=-1,e=3: regime 0 1 (run 1 zero + term), e=11, frac 0
+        assert_eq!(P32.to_f64(P32.from_f64(0.5)), 0.5);
+        // maxpos for posit32 = 2^120
+        let maxpos = P32.decode(P32.maxpos_body());
+        assert_eq!(maxpos.exp, 120);
+        assert_eq!(P32.max_exp(), 120);
+        assert_eq!(P32.min_exp(), -120);
+    }
+
+    #[test]
+    fn bp32_paper_dynamic_range() {
+        // Paper §Abstract: ⟨32,6,5⟩ spans 2^-192 … 2^192 (maxpos scale 191 + frac).
+        assert_eq!(BP32.min_exp(), -192);
+        assert_eq!(BP32.max_exp(), 191);
+        assert_eq!(BP32.r_min(), -6);
+        assert_eq!(BP32.r_max(), 5);
+        // Five possible regime sizes (paper §1.4 / §3.1).
+        assert_eq!(BP32.regime_size_count(), 5);
+        // Quire: paper says 800 bits.
+        assert_eq!(BP32.quire_bits(), 800);
+        assert_eq!(BP64.quire_bits(), 800); // "for any precision n > 12"
+        assert_eq!(BP16.quire_bits(), 800);
+    }
+
+    #[test]
+    fn bp32_cosmological_constant() {
+        // Paper §1.4: Λ = 1.4657e-52 representable to 8 decimal places.
+        let lam = 1.4657e-52;
+        let bits = BP32.from_f64(lam);
+        let back = BP32.to_f64(bits);
+        let rel = ((back - lam) / lam).abs();
+        // At T=-173 the b-posit32 carries 20 fraction bits → worst-case
+        // relative error 2^-21 ≈ 4.8e-7 (the paper's "eight decimal places"
+        // display, Λ ≈ 1.4657003e-52, is ~7 significant digits).
+        assert!(rel < 4.8e-7, "relative error {rel:e} too large");
+        assert_eq!(BP32.decode(bits).exp, -173);
+    }
+
+    #[test]
+    fn bp32_frac_bits_range() {
+        // ⟨32,6,5⟩: fraction bits range 20 (long regime) … 24 (fovea).
+        assert_eq!(BP32.frac_bits_at(0), 24);
+        assert_eq!(BP32.frac_bits_at(-32), 24); // r=-1, size-2 regime
+        assert_eq!(BP32.frac_bits_at(31), 24);
+        assert_eq!(BP32.frac_bits_at(32), 23); // r=1, size-3 regime
+        assert_eq!(BP32.frac_bits_at(191), 20); // maximal regime
+        assert_eq!(BP32.frac_bits_at(-192), 20);
+    }
+
+    #[test]
+    fn regime_lengths_match_paper_table3() {
+        // Table 3: r(4-bit 2's comp) → size: 0/-1→2, 1/-2→3, 2/-3→4, 3/-4→5,
+        // 4,5/-5,-6→6.
+        let s = BP32;
+        assert_eq!(s.regime_len(0), 2);
+        assert_eq!(s.regime_len(-1), 2);
+        assert_eq!(s.regime_len(1), 3);
+        assert_eq!(s.regime_len(-2), 3);
+        assert_eq!(s.regime_len(2), 4);
+        assert_eq!(s.regime_len(-3), 4);
+        assert_eq!(s.regime_len(3), 5);
+        assert_eq!(s.regime_len(-4), 5);
+        assert_eq!(s.regime_len(4), 6);
+        assert_eq!(s.regime_len(5), 6);
+        assert_eq!(s.regime_len(-5), 6);
+        assert_eq!(s.regime_len(-6), 6);
+    }
+
+    #[test]
+    fn roundtrip_all_p16() {
+        // Every 16-bit standard posit pattern decodes and re-encodes to itself.
+        for bits in 0..=u16::MAX as u64 {
+            let d = P16.decode(bits);
+            let back = P16.encode(&d);
+            assert_eq!(back, bits, "p16 roundtrip failed for {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_bp16() {
+        for bits in 0..=u16::MAX as u64 {
+            let d = BP16.decode(bits);
+            let back = BP16.encode(&d);
+            assert_eq!(back, bits, "bp16 roundtrip failed for {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_bp16_e3() {
+        for bits in 0..=u16::MAX as u64 {
+            let d = BP16_E3.decode(bits);
+            let back = BP16_E3.encode(&d);
+            assert_eq!(back, bits, "bp16e3 roundtrip failed for {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_p8() {
+        for bits in 0..=u8::MAX as u64 {
+            let d = P8.decode(bits);
+            assert_eq!(P8.encode(&d), bits);
+        }
+    }
+
+    #[test]
+    fn monotonic_p16_and_bp16() {
+        // Posit patterns, read as signed ints, are ordered by value.
+        for spec in [P16, BP16, BP16_E3] {
+            let mut prev = f64::NEG_INFINITY;
+            // skip NaR (0x8000): start just above it.
+            for i in 1..=u16::MAX as u64 {
+                let bits = (0x8000 + i) & 0xffff;
+                let v = spec.to_f64(bits);
+                assert!(v > prev, "non-monotonic at {bits:#06x}: {v} ≤ {prev}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_not_nar() {
+        // Huge values saturate at maxpos; tiny nonzero values at minpos.
+        for spec in [P16, P32, BP16, BP32] {
+            assert_eq!(spec.from_f64(1e300), spec.maxpos_body());
+            assert_eq!(spec.from_f64(-1e300), spec.nar() + 1); // -maxpos
+            assert_eq!(spec.from_f64(1e-300), 1);
+            assert_eq!(spec.from_f64(-1e-300), spec.mask()); // -minpos = 111…1
+        }
+    }
+
+    #[test]
+    fn bp32_minpos_value() {
+        // b-posit minpos: body=1 → regime 000000, e=0, frac=…001 (20 frac bits)
+        let d = BP32.decode(1);
+        assert_eq!(d.exp, -192);
+        assert_eq!(d.sig, (1u64 << 63) | (1u64 << 43)); // 1 + 2^-20
+    }
+
+    #[test]
+    fn standard_minpos_maxpos_values() {
+        // posit16 minpos = 2^-56, maxpos = 2^56
+        let minpos = P16.decode(1);
+        assert_eq!(minpos.exp, -56);
+        assert_eq!(minpos.sig, 1u64 << 63);
+        let maxpos = P16.decode(P16.maxpos_body());
+        assert_eq!(maxpos.exp, 56);
+    }
+
+    #[test]
+    fn rounding_ties_to_even_pattern() {
+        // For ⟨16,2⟩, 1 + 2^-12 is exactly between patterns of 1 and 1+2^-11
+        // (fovea has 12 frac bits... at T=0: n-1-2-2=11 frac bits). So
+        // 1 + 2^-12 is a tie; even pattern wins (frac lsb 0 → stays at 1.0).
+        let bits = P16.from_f64(1.0 + f64::powi(2.0, -12));
+        assert_eq!(P16.to_f64(bits), 1.0);
+        // Just above the tie rounds up.
+        let bits = P16.from_f64(1.0 + f64::powi(2.0, -12) + 1e-9);
+        assert!(P16.to_f64(bits) > 1.0);
+    }
+
+    #[test]
+    fn cmp_bits_ordering() {
+        let a = P32.from_f64(-2.5);
+        let b = P32.from_f64(1.0);
+        assert_eq!(P32.cmp_bits(a, b), std::cmp::Ordering::Less);
+        assert_eq!(P32.cmp_bits(P32.nar(), a), std::cmp::Ordering::Less);
+    }
+
+    #[test]
+    fn p64_roundtrip_sampled() {
+        // Sampled 64-bit roundtrip (exhaustive is infeasible).
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for _ in 0..200_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            for spec in [P64, BP64] {
+                let d = spec.decode(x);
+                assert_eq!(spec.encode(&d), x, "roundtrip failed {x:#x} in {spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ghost_exponent_bits_decode_as_zero() {
+        // ⟨16,2⟩ pattern with regime occupying all but one bit: body = 14
+        // ones + final 0 terminator is r=13 with ghost exponent.
+        // body 0b111111111111110 (15 bits): run=14, terminated? bit15..: run
+        // of 14 ones then a 0 → r=13, regLen=15, rem=0 → e ghost = 0.
+        let body = 0b111_1111_1111_1110u64;
+        let d = P16.decode(body);
+        assert_eq!(d.exp, 13 * 4);
+        assert_eq!(d.sig, 1u64 << 63);
+    }
+}

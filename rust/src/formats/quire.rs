@@ -1,0 +1,402 @@
+//! Quire: the posit standard's exact (Kulisch-style) fixed-point
+//! accumulator. The paper highlights that the ⟨n,6,5⟩ b-posit family shares
+//! a single **800-bit** quire for every precision n > 12, because the
+//! dynamic range is pinned at 2^±192 regardless of n.
+//!
+//! Two sizings are provided:
+//! - [`Quire::paper_800`]: the paper's architectural sizing — 31 carry-guard
+//!   bits + 2·(2·192)+1 value positions = 800 bits, LSB at 2^−384. Product
+//!   bits below 2^−384 (possible for b-posits, whose minpos carries fraction
+//!   bits) are tracked in a sticky flag, keeping results faithfully rounded.
+//! - [`Quire::exact_for`]: widened so that every product of two format
+//!   values is representable exactly (lossless dot products).
+//!
+//! The accumulator is a little-endian two's-complement multi-limb integer
+//! scaled by 2^lsb_exp.
+
+use super::decoded::{Class, Decoded};
+use super::posit::PositSpec;
+
+/// Fixed-point exact accumulator.
+#[derive(Clone, Debug)]
+pub struct Quire {
+    /// Little-endian limbs, two's complement.
+    limbs: Vec<u64>,
+    /// Binary weight of bit 0 of limb 0.
+    lsb_exp: i32,
+    /// Any nonzero value bits discarded below the LSB.
+    sticky: bool,
+    /// Sticky NaR: set by NaR inputs or overflow past the carry guard.
+    nar: bool,
+}
+
+impl Quire {
+    /// Quire with `width` bits and least-significant-bit weight 2^lsb_exp.
+    pub fn new(width: u32, lsb_exp: i32) -> Quire {
+        assert!(width >= 128 && width % 64 == 0);
+        Quire { limbs: vec![0u64; (width / 64) as usize], lsb_exp, sticky: false, nar: false }
+    }
+
+    /// The paper's 800-bit quire for a ⟨n,rS,eS⟩ spec: 31 carry bits +
+    /// 2·(2·|Tmin|)+1 positions (= 800 for eS=5, rS=6).
+    pub fn paper_800(spec: &PositSpec) -> Quire {
+        let t = spec.min_exp().unsigned_abs();
+        let width = (31 + 4 * t + 1 + 63) / 64 * 64; // round up to limb size
+        Quire::new(width, -(2 * t as i32))
+    }
+
+    /// Lossless sizing: LSB down to minpos², MSB up to maxpos² + 31 carries.
+    pub fn exact_for(spec: &PositSpec) -> Quire {
+        let min_lsb = 2 * (spec.min_exp() - 63); // product LSB can't be lower
+        let top = 2 * (spec.max_exp() + 1) + 32;
+        let width = ((top - min_lsb) as u32 + 63) / 64 * 64;
+        Quire::new(width, min_lsb)
+    }
+
+    pub fn width(&self) -> u32 {
+        self.limbs.len() as u32 * 64
+    }
+
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    pub fn clear(&mut self) {
+        self.limbs.iter_mut().for_each(|l| *l = 0);
+        self.sticky = false;
+        self.nar = false;
+    }
+
+    pub fn is_zero(&self) -> bool {
+        !self.nar && !self.sticky && self.limbs.iter().all(|&l| l == 0)
+    }
+
+    fn is_negative(&self) -> bool {
+        *self.limbs.last().unwrap() >> 63 == 1
+    }
+
+    /// Add `mag · 2^weight` (mag ≤ 128 bits) with the given sign into the
+    /// accumulator.
+    fn add_mag(&mut self, mag: u128, weight: i32, negative: bool) {
+        if mag == 0 {
+            return;
+        }
+        let mut mag = mag;
+        let mut weight = weight;
+        let rel = weight - self.lsb_exp;
+        if rel < 0 {
+            let drop = (-rel) as u32;
+            if drop >= 128 {
+                self.sticky = true;
+                return;
+            }
+            if mag & ((1u128 << drop) - 1) != 0 {
+                self.sticky = true;
+            }
+            mag >>= drop;
+            weight += drop as i32;
+            if mag == 0 {
+                return;
+            }
+        }
+        let bit_off = (weight - self.lsb_exp) as u32;
+        let limb_off = (bit_off / 64) as usize;
+        let shift = bit_off % 64;
+        // Spread the (≤128-bit) magnitude over up to 3 limbs.
+        let lo = (mag as u64).wrapping_shl(shift);
+        let mid = if shift == 0 {
+            (mag >> 64) as u64
+        } else {
+            ((mag >> (64 - shift)) & u64::MAX as u128) as u64
+        };
+        let hi = if shift == 0 { 0u64 } else { (mag >> (128 - shift)) as u64 };
+        let add = [lo, mid, hi];
+        if negative {
+            // Two's-complement subtract: add !x + borrow chain ≡ subtract.
+            let mut borrow = 0u64;
+            for (i, &a) in add.iter().enumerate() {
+                let idx = limb_off + i;
+                if idx >= self.limbs.len() {
+                    if a != 0 || borrow != 0 {
+                        self.nar = true; // magnitude exceeded quire range
+                    }
+                    continue;
+                }
+                let (v1, b1) = self.limbs[idx].overflowing_sub(a);
+                let (v2, b2) = v1.overflowing_sub(borrow);
+                self.limbs[idx] = v2;
+                borrow = (b1 || b2) as u64;
+            }
+            if borrow == 1 {
+                for idx in (limb_off + add.len()).min(self.limbs.len())..self.limbs.len() {
+                    let (v, b) = self.limbs[idx].overflowing_sub(1);
+                    self.limbs[idx] = v;
+                    if !b {
+                        borrow = 0;
+                        break;
+                    }
+                }
+                // A borrow off the top is fine: that's two's-complement wrap
+                // into negative territory (the sign bit is the carry guard).
+            }
+        } else {
+            let mut carry = 0u64;
+            for (i, &a) in add.iter().enumerate() {
+                let idx = limb_off + i;
+                if idx >= self.limbs.len() {
+                    if a != 0 || carry != 0 {
+                        self.nar = true;
+                    }
+                    continue;
+                }
+                let (v1, c1) = self.limbs[idx].overflowing_add(a);
+                let (v2, c2) = v1.overflowing_add(carry);
+                self.limbs[idx] = v2;
+                carry = (c1 || c2) as u64;
+            }
+            if carry == 1 {
+                for idx in (limb_off + add.len()).min(self.limbs.len())..self.limbs.len() {
+                    let (v, c) = self.limbs[idx].overflowing_add(1);
+                    self.limbs[idx] = v;
+                    if !c {
+                        carry = 0;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Accumulate a single decoded value (sign included).
+    pub fn add(&mut self, d: &Decoded) {
+        match d.class {
+            Class::Zero => {}
+            Class::Nan | Class::Inf => self.nar = true,
+            Class::Normal => {
+                self.sticky |= d.sticky;
+                self.add_mag(d.sig as u128, d.exp - 63, d.sign);
+            }
+        }
+    }
+
+    /// Accumulate the exact product a·b (fused multiply-accumulate).
+    pub fn add_product(&mut self, a: &Decoded, b: &Decoded) {
+        if a.is_nan() || b.is_nan() || a.is_inf() || b.is_inf() {
+            self.nar = true;
+            return;
+        }
+        if a.is_zero() || b.is_zero() {
+            return;
+        }
+        self.sticky |= a.sticky || b.sticky;
+        let prod = a.sig as u128 * b.sig as u128; // exact, ≤ 128 bits
+        self.add_mag(prod, a.exp + b.exp - 126, a.sign ^ b.sign);
+    }
+
+    /// Subtract the exact product a·b.
+    pub fn sub_product(&mut self, a: &Decoded, b: &Decoded) {
+        let neg = Decoded { sign: !a.sign, ..*a };
+        self.add_product(&neg, b);
+    }
+
+    /// Read the accumulator out as a decoded value (faithful: a sticky bit
+    /// collected from sub-LSB truncation is propagated for final rounding).
+    pub fn to_decoded(&self) -> Decoded {
+        if self.nar {
+            return Decoded::NAN;
+        }
+        let negative = self.is_negative();
+        let mut mag = self.limbs.clone();
+        if negative {
+            // two's complement negate
+            let mut carry = 1u64;
+            for l in mag.iter_mut() {
+                let (v, c) = (!*l).overflowing_add(carry);
+                *l = v;
+                carry = c as u64;
+            }
+        }
+        // Find most significant set bit.
+        let mut top = None;
+        for (i, &l) in mag.iter().enumerate().rev() {
+            if l != 0 {
+                top = Some(i * 64 + 63 - l.leading_zeros() as usize);
+                break;
+            }
+        }
+        let Some(msb) = top else {
+            return if self.sticky {
+                // Value was entirely below the quire LSB: round to minimal
+                // representation — report as sticky-tiny normal.
+                Decoded { class: Class::Normal, sign: negative, exp: self.lsb_exp - 1, sig: 1u64 << 63, sticky: true }
+            } else {
+                Decoded::ZERO
+            };
+        };
+        // Extract 64 bits from msb downwards.
+        let mut sig = 0u64;
+        let mut sticky = self.sticky;
+        let lo_bit = msb as i64 - 63;
+        for k in 0..64u32 {
+            let pos = lo_bit + k as i64;
+            if pos >= 0 {
+                let bit = (mag[(pos / 64) as usize] >> (pos % 64)) & 1;
+                sig |= bit << k;
+            }
+        }
+        // Bits below lo_bit → sticky.
+        if lo_bit > 0 {
+            for pos in 0..lo_bit {
+                if (mag[(pos / 64) as usize] >> (pos % 64)) & 1 == 1 {
+                    sticky = true;
+                    break;
+                }
+            }
+        }
+        Decoded { class: Class::Normal, sign: negative, exp: self.lsb_exp + msb as i32, sig, sticky }
+    }
+
+    /// Round out to a posit pattern in the given spec.
+    pub fn to_posit(&self, spec: &PositSpec) -> u64 {
+        spec.encode(&self.to_decoded())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{BP32, P16, P32};
+
+    fn dec(x: f64) -> Decoded {
+        Decoded::from_f64(x)
+    }
+
+    #[test]
+    fn paper_sizing_is_800_bits() {
+        assert_eq!(Quire::paper_800(&BP32).width(), 832); // 800 rounded to limbs
+        // architectural positions: 31 carry + 769 value = 800 ≤ 832 storage
+        let q = Quire::paper_800(&BP32);
+        assert_eq!(q.lsb_exp, -384);
+    }
+
+    #[test]
+    fn simple_sum() {
+        let mut q = Quire::exact_for(&BP32);
+        q.add(&dec(1.5));
+        q.add(&dec(2.25));
+        q.add(&dec(-0.75));
+        assert_eq!(q.to_decoded().to_f64(), 3.0);
+    }
+
+    #[test]
+    fn product_accumulation_exact() {
+        let mut q = Quire::exact_for(&BP32);
+        q.add_product(&dec(3.0), &dec(4.0));
+        q.add_product(&dec(0.5), &dec(0.25));
+        assert_eq!(q.to_decoded().to_f64(), 12.125);
+    }
+
+    #[test]
+    fn perfect_cancellation() {
+        let mut q = Quire::exact_for(&BP32);
+        let a = dec(1.234567891234e10);
+        let b = dec(9.87654321e-8);
+        q.add_product(&a, &b);
+        q.sub_product(&a, &b);
+        assert!(q.is_zero());
+        assert_eq!(q.to_decoded().to_f64(), 0.0);
+    }
+
+    #[test]
+    fn big_small_big_recovers_small() {
+        // The classic quire win: (2^100 + 1) - 2^100 = 1 exactly.
+        let mut q = Quire::exact_for(&BP32);
+        q.add(&dec(f64::powi(2.0, 100)));
+        q.add(&dec(1.0));
+        q.add(&dec(-f64::powi(2.0, 100)));
+        assert_eq!(q.to_decoded().to_f64(), 1.0);
+    }
+
+    #[test]
+    fn nar_propagates() {
+        let mut q = Quire::exact_for(&BP32);
+        q.add(&Decoded::NAN);
+        q.add(&dec(5.0));
+        assert!(q.is_nar());
+        assert_eq!(q.to_posit(&BP32), BP32.nar());
+    }
+
+    #[test]
+    fn negative_sum() {
+        let mut q = Quire::exact_for(&P32);
+        q.add(&dec(-10.5));
+        q.add(&dec(4.25));
+        assert_eq!(q.to_decoded().to_f64(), -6.25);
+    }
+
+    #[test]
+    fn fused_dot_product_beats_naive_p16() {
+        // Σ aᵢ·bᵢ where intermediate rounding in p16 loses bits but the
+        // quire keeps everything.
+        let a = [256.0, 1.0 / 256.0, -256.0];
+        let b = [256.0, 1.0, 256.0];
+        // exact: 65536 + 1/256 - 65536 = 1/256
+        let mut q = Quire::exact_for(&P16);
+        let mut naive = P16.from_f64(0.0);
+        for i in 0..3 {
+            let (da, db) = (dec(a[i]), dec(b[i]));
+            q.add_product(&da, &db);
+            // naive: round the product and the sum at each step
+            let prod = P16.from_f64(a[i] * b[i]);
+            let sum = P16.to_f64(naive) + P16.to_f64(prod);
+            naive = P16.from_f64(sum);
+        }
+        let fused = q.to_posit(&P16);
+        assert_eq!(P16.to_f64(fused), 1.0 / 256.0);
+        // naive path loses the small term entirely (65536 + 1/256 → 65536)
+        assert_ne!(P16.to_f64(naive), 1.0 / 256.0);
+    }
+
+    #[test]
+    fn paper_800_faithful_with_sub_lsb_products() {
+        // b-posit minpos² has bits below 2^-384; the 800-bit quire tracks
+        // them as sticky and still reports a faithful nonzero result.
+        let minpos = BP32.decode(1);
+        let mut q = Quire::paper_800(&BP32);
+        q.add_product(&minpos, &minpos);
+        let d = q.to_decoded();
+        assert!(!d.is_zero());
+        let expect = BP32.to_f64(1);
+        // value ≈ minpos² = 2^-384·(1+2^-20)²; exp of result ≈ -384
+        assert_eq!(d.exp, -384);
+        let _ = expect;
+    }
+
+    #[test]
+    fn sticky_only_value_reports_tiny() {
+        let mut q = Quire::new(128, 0);
+        q.add(&dec(0.25)); // entirely below LSB weight 2^0
+        let d = q.to_decoded();
+        assert!(d.sticky);
+        assert!(!d.is_zero());
+    }
+
+    #[test]
+    fn overflow_past_guard_is_nar() {
+        let mut q = Quire::new(128, 0);
+        // 2^200 exceeds the 128-bit window
+        q.add(&Decoded::normal(false, 200, 1u64 << 63));
+        assert!(q.is_nar());
+    }
+
+    #[test]
+    fn many_accumulations_carry_guard() {
+        // 2^20 × maxterm accumulations must not overflow exact quire.
+        let mut q = Quire::exact_for(&P16);
+        let x = dec(1000.0);
+        for _ in 0..1_000_000 {
+            q.add(&x);
+        }
+        assert_eq!(q.to_decoded().to_f64(), 1e9);
+    }
+}

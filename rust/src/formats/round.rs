@@ -1,0 +1,202 @@
+//! Pattern-space rounding primitives.
+//!
+//! Posit-family encoders serialize `regime ‖ exponent ‖ fraction` into a
+//! conceptually infinite bit stream, cut it at `n-1` bits, and apply
+//! round-to-nearest-even on the *pattern* (the Posit™ Standard's rounding
+//! rule; SoftPosit does the same). [`BitStream`] is that serializer: an
+//! MSB-aligned 128-bit window plus a sticky flag for anything pushed past
+//! the window. All reproduced formats cut at ≤ 63 bits, so guard and round
+//! positions always fall inside the window.
+
+/// MSB-aligned bit accumulator with overflow sticky.
+#[derive(Clone, Copy, Debug)]
+pub struct BitStream {
+    /// Bits accumulated so far, left-aligned: first pushed bit is bit 127.
+    acc: u128,
+    /// Number of bits pushed (may exceed 128).
+    len: u32,
+    /// OR of all bits pushed beyond the 128-bit window.
+    overflow_sticky: bool,
+}
+
+impl BitStream {
+    pub fn new() -> Self {
+        BitStream { acc: 0, len: 0, overflow_sticky: false }
+    }
+
+    /// Push the low `width` bits of `bits`, MSB-first, after previously
+    /// pushed bits.
+    pub fn push(&mut self, bits: u64, width: u32) {
+        debug_assert!(width <= 64);
+        if width == 0 {
+            return;
+        }
+        let bits = if width == 64 { bits } else { bits & ((1u64 << width) - 1) };
+        let remaining = 128i64 - self.len as i64;
+        if remaining <= 0 {
+            self.overflow_sticky |= bits != 0;
+        } else if (width as i64) <= remaining {
+            self.acc |= (bits as u128) << (remaining - width as i64);
+        } else {
+            let keep = remaining as u32; // bits that fit
+            let dropped = width - keep;
+            self.acc |= (bits as u128) >> dropped;
+            self.overflow_sticky |= bits & ((1u64 << dropped) - 1) != 0;
+        }
+        self.len += width;
+    }
+
+    /// Push a run of `count` copies of `bit`.
+    pub fn push_run(&mut self, bit: u64, count: u32) {
+        debug_assert!(bit <= 1);
+        let mut left = count;
+        while left > 0 {
+            let chunk = left.min(63);
+            let v = if bit == 1 { (1u64 << chunk) - 1 } else { 0 };
+            self.push(v, chunk);
+            left -= chunk;
+        }
+    }
+
+    /// OR an out-of-band sticky contribution (e.g. `Decoded::sticky`).
+    pub fn or_sticky(&mut self, s: bool) {
+        self.overflow_sticky |= s;
+    }
+
+    /// Cut the stream at `cut` bits with round-to-nearest-even.
+    ///
+    /// Returns the rounded `cut`-bit pattern as u64 (`cut` ≤ 63). A carry
+    /// out of the top produces `2^cut`, which callers must saturate.
+    pub fn round_rne(&self, cut: u32) -> u64 {
+        debug_assert!(cut <= 63 && cut < 128);
+        let body = (self.acc >> (128 - cut)) as u64;
+        let guard = (self.acc >> (127 - cut)) & 1 == 1;
+        let below_mask = (1u128 << (127 - cut)) - 1;
+        let sticky = (self.acc & below_mask) != 0 || self.overflow_sticky;
+        if guard && (sticky || body & 1 == 1) {
+            body + 1
+        } else {
+            body
+        }
+    }
+
+    /// Number of bits pushed so far.
+    pub fn len(&self) -> u32 {
+        self.len
+    }
+
+    /// True if truncating at `cut` bits discards any set bit (inexact).
+    pub fn inexact_at(&self, cut: u32) -> bool {
+        let below_mask = (1u128 << (128 - cut)) - 1;
+        (self.acc & below_mask) != 0 || self.overflow_sticky
+    }
+}
+
+impl Default for BitStream {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Round-to-nearest-even on a plain 64-bit significand: keep the top `keep`
+/// bits of `sig` (counted from bit 63 downwards), with `extra_sticky` OR-ed
+/// below. Returns (rounded, carry_out) where carry_out means the rounded
+/// value reached `2^keep`.
+pub fn rne64(sig: u64, keep: u32, extra_sticky: bool) -> (u64, bool) {
+    debug_assert!(keep >= 1 && keep < 64);
+    let drop = 64 - keep;
+    let kept = sig >> drop;
+    let guard = (sig >> (drop - 1)) & 1 == 1;
+    let below = if drop >= 2 { sig & ((1u64 << (drop - 1)) - 1) != 0 } else { false };
+    let sticky = below || extra_sticky;
+    let rounded = kept + if guard && (sticky || kept & 1 == 1) { 1 } else { 0 };
+    if rounded >> keep != 0 {
+        (rounded >> 1, true)
+    } else {
+        (rounded, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_cut_basic() {
+        let mut s = BitStream::new();
+        s.push(0b101, 3);
+        s.push(0b11, 2);
+        // stream = 10111...
+        assert_eq!(s.round_rne(5), 0b10111);
+        assert_eq!(s.round_rne(4), 0b1100); // 1011|1 guard=1 sticky=0 lsb=1 → up
+        assert_eq!(s.round_rne(3), 0b110); // 101|11 guard=1 sticky=1 → up
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        let mut s = BitStream::new();
+        s.push(0b0101, 4); // cut at 3: 010|1, guard=1 sticky=0, lsb=0 → stays 010
+        assert_eq!(s.round_rne(3), 0b010);
+        let mut s2 = BitStream::new();
+        s2.push(0b0111, 4); // 011|1 tie, lsb=1 → up to 100
+        assert_eq!(s2.round_rne(3), 0b100);
+    }
+
+    #[test]
+    fn overflow_past_window_sets_sticky() {
+        let mut s = BitStream::new();
+        s.push_run(0, 126);
+        s.push(0b11, 2); // exactly fills 128
+        s.push(1, 1); // overflows
+        assert!(s.inexact_at(120));
+        // body at cut 10 is zero; guard 0; sticky true but no round-up
+        assert_eq!(s.round_rne(10), 0);
+    }
+
+    #[test]
+    fn push_run_long() {
+        let mut s = BitStream::new();
+        s.push_run(1, 70);
+        s.push_run(0, 70);
+        assert_eq!(s.len(), 140);
+        // 8 ones kept, guard 1, sticky 1 → rounds up and carries out (0x100);
+        // the caller is responsible for saturating a carry-out.
+        assert_eq!(s.round_rne(8), 0x100);
+    }
+
+    #[test]
+    fn carry_out_reported() {
+        let mut s = BitStream::new();
+        s.push(0b1111, 4);
+        s.push(1, 1);
+        s.push(1, 1); // 111111
+        assert_eq!(s.round_rne(4), 0b10000); // carry out: caller saturates
+    }
+
+    #[test]
+    fn or_sticky_influences_rounding() {
+        let mut s = BitStream::new();
+        s.push(0b1001, 4);
+        // cut 3: 100|1 guard, no sticky, lsb 0 → tie stays at 100
+        assert_eq!(s.round_rne(3), 0b100);
+        s.or_sticky(true);
+        // now sticky → round up
+        assert_eq!(s.round_rne(3), 0b101);
+    }
+
+    #[test]
+    fn rne64_basics() {
+        let sig = (1u64 << 63) | (1u64 << 10);
+        let (r, c) = rne64(sig, 53, false);
+        // guard bit set (bit 10), sticky 0, kept lsb (bit 11) = 0 → tie-to-even stays
+        assert_eq!(r, sig >> 11);
+        assert!(!c);
+        // with sticky set, rounds up
+        let (r, _) = rne64(sig, 53, true);
+        assert_eq!(r, (sig >> 11) + 1);
+        // All-ones carries out.
+        let (r, c) = rne64(u64::MAX, 8, false);
+        assert_eq!(r, 0x80);
+        assert!(c);
+    }
+}

@@ -1,0 +1,257 @@
+//! Linear takum codec (Hunhold 2024, paper ref [14]) — the third
+//! bounded-range format compared in Fig 7.
+//!
+//! A takum packs: sign S (1 bit), direction D (1 bit), regime R (3 bits),
+//! characteristic C (r bits, r derived from D/R), mantissa M (n−5−r bits).
+//!
+//! - D=1: r = R,     c = 2^r − 1 + C   (c ∈ [0, 254])
+//! - D=0: r = 7 − R, c = −2^(r+1) + 1 + C  (c ∈ [−255, −1])
+//!
+//! Value = (−1)^s · 2^c · (1+f); negatives are 2's complements of the whole
+//! word (takums, like posits, map 2's-complement integers onto the reals),
+//! `0…0` is zero and `10…0` is NaR. The characteristic costs 4–11 bits of
+//! overhead total, giving the "reverse bell curve" accuracy distribution the
+//! paper contrasts with the b-posit's bell shape.
+
+use super::decoded::{Class, Decoded};
+use super::round::BitStream;
+
+/// Static description of a takum format (width only; the rest is fixed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TakumSpec {
+    /// Total width in bits, 12 ≤ n ≤ 64.
+    pub n: u32,
+}
+
+/// 16-bit takum.
+pub const T16: TakumSpec = TakumSpec { n: 16 };
+/// 32-bit takum (Fig 7's gray curve).
+pub const T32: TakumSpec = TakumSpec { n: 32 };
+/// 64-bit takum.
+pub const T64: TakumSpec = TakumSpec { n: 64 };
+
+impl TakumSpec {
+    pub fn new(n: u32) -> TakumSpec {
+        assert!((12..=64).contains(&n), "takum needs 12 ≤ n ≤ 64");
+        TakumSpec { n }
+    }
+
+    #[inline]
+    pub fn mask(&self) -> u64 {
+        if self.n == 64 { u64::MAX } else { (1u64 << self.n) - 1 }
+    }
+
+    #[inline]
+    pub fn nar(&self) -> u64 {
+        1u64 << (self.n - 1)
+    }
+
+    #[inline]
+    pub fn maxpos_body(&self) -> u64 {
+        (1u64 << (self.n - 1)) - 1
+    }
+
+    pub fn max_exp(&self) -> i32 {
+        254
+    }
+
+    pub fn min_exp(&self) -> i32 {
+        -255
+    }
+
+    /// Characteristic width r for a given characteristic value c.
+    fn r_of_c(c: i32) -> u32 {
+        if c >= 0 {
+            31 - (c as u32 + 1).leading_zeros() // floor(log2(c+1))
+        } else {
+            31 - ((-c) as u32).leading_zeros() // floor(log2(−c))
+        }
+    }
+
+    /// Explicit mantissa bits at characteristic c (accuracy analysis).
+    pub fn frac_bits_at(&self, c: i32) -> u32 {
+        if c < self.min_exp() || c > self.max_exp() {
+            return 0;
+        }
+        (self.n - 5).saturating_sub(Self::r_of_c(c))
+    }
+
+    /// Unpack an n-bit takum pattern.
+    pub fn decode(&self, bits: u64) -> Decoded {
+        let bits = bits & self.mask();
+        if bits == 0 {
+            return Decoded::ZERO;
+        }
+        if bits == self.nar() {
+            return Decoded::NAN;
+        }
+        let sign = (bits >> (self.n - 1)) & 1 == 1;
+        let word = if sign { bits.wrapping_neg() & self.mask() } else { bits };
+        let m = self.n - 1; // body width
+        let body = word & self.maxpos_body();
+        let d = (body >> (m - 1)) & 1;
+        let r_field = ((body >> (m - 4)) & 0b111) as u32;
+        let r = if d == 1 { r_field } else { 7 - r_field };
+        // Characteristic: next r bits below the regime.
+        let after_r = m - 4; // bits remaining after S(implicit)/D/R
+        let c_field = if r == 0 {
+            0u64
+        } else {
+            (body >> (after_r - r)) & ((1u64 << r) - 1)
+        };
+        let c: i32 = if d == 1 {
+            (1i32 << r) - 1 + c_field as i32
+        } else {
+            -(1i32 << (r + 1)) + 1 + c_field as i32
+        };
+        let fw = after_r - r; // mantissa width (≥ 0 since n ≥ 12 ⇒ after_r ≥ 7 ≥ r)
+        let frac = if fw == 0 { 0 } else { body & ((1u64 << fw) - 1) };
+        let sig = (1u64 << 63) | if fw == 0 { 0 } else { frac << (63 - fw) };
+        Decoded::normal(sign, c, sig)
+    }
+
+    /// Pack an internal value with RNE in pattern space + saturation.
+    pub fn encode(&self, dec: &Decoded) -> u64 {
+        match dec.class {
+            Class::Zero => 0,
+            Class::Nan | Class::Inf => self.nar(),
+            Class::Normal => {
+                let body = self.encode_body(dec);
+                if dec.sign {
+                    body.wrapping_neg() & self.mask()
+                } else {
+                    body
+                }
+            }
+        }
+    }
+
+    fn encode_body(&self, dec: &Decoded) -> u64 {
+        let m = self.n - 1;
+        let c = dec.exp;
+        if c > self.max_exp() {
+            return self.maxpos_body();
+        }
+        if c < self.min_exp() {
+            return 1;
+        }
+        let r = Self::r_of_c(c);
+        let (d, r_field, c_field) = if c >= 0 {
+            (1u64, r as u64, (c - ((1 << r) - 1)) as u64)
+        } else {
+            (0u64, (7 - r) as u64, (c + (1 << (r + 1)) - 1) as u64)
+        };
+        let mut s = BitStream::new();
+        s.push(d, 1);
+        s.push(r_field, 3);
+        s.push(c_field, r);
+        s.push(dec.sig << 1 >> 1, 63);
+        s.or_sticky(dec.sticky);
+        let body = s.round_rne(m);
+        if body >> m != 0 {
+            return self.maxpos_body();
+        }
+        if body == 0 {
+            return 1;
+        }
+        body
+    }
+
+    pub fn from_f64(&self, x: f64) -> u64 {
+        self.encode(&Decoded::from_f64(x))
+    }
+
+    pub fn to_f64(&self, bits: u64) -> f64 {
+        self.decode(bits).to_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_nar_one() {
+        for spec in [T16, T32, T64] {
+            assert!(spec.decode(0).is_zero());
+            assert!(spec.decode(spec.nar()).is_nan());
+            let one = spec.from_f64(1.0);
+            assert_eq!(spec.to_f64(one), 1.0);
+            // 1.0: c=0 → D=1,R=0,C empty → body = 100…0 of the body field
+            assert_eq!(one, 1u64 << (spec.n - 2));
+        }
+    }
+
+    #[test]
+    fn dynamic_range_pm_254() {
+        // Paper §1.4: takum scaling spans 2^-254… wait, c ∈ [-255, 254];
+        // maxpos scale 254, minpos scale -255.
+        let maxpos = T32.decode(T32.maxpos_body());
+        assert_eq!(maxpos.exp, 254);
+        let minpos = T32.decode(1);
+        assert_eq!(minpos.exp, -255);
+    }
+
+    #[test]
+    fn roundtrip_all_t16() {
+        for bits in 0..=u16::MAX as u64 {
+            let d = T16.decode(bits);
+            assert_eq!(T16.encode(&d), bits, "t16 roundtrip failed {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_sampled_t32_t64() {
+        let mut x = 0x2545f4914f6cdd1du64;
+        for _ in 0..200_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            for spec in [T32, T64] {
+                let bits = x & spec.mask();
+                if bits == spec.nar() {
+                    continue;
+                }
+                let d = spec.decode(bits);
+                assert_eq!(spec.encode(&d), bits, "roundtrip failed {bits:#x} n={}", spec.n);
+            }
+        }
+    }
+
+    #[test]
+    fn monotonic_t16() {
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..=u16::MAX as u64 {
+            let bits = (T16.nar() + i) & T16.mask();
+            let v = T16.to_f64(bits);
+            assert!(v > prev, "non-monotonic at {bits:#06x}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn characteristic_widths() {
+        // c=0 → r=0 (no C bits): n-5 mantissa bits — the sharp peak.
+        assert_eq!(T32.frac_bits_at(0), 27);
+        assert_eq!(T32.frac_bits_at(1), 26); // r=1
+        assert_eq!(T32.frac_bits_at(-1), 27); // r=0
+        assert_eq!(T32.frac_bits_at(254), 20); // r=7
+        assert_eq!(T32.frac_bits_at(-255), 20);
+        assert_eq!(T32.frac_bits_at(300), 0); // out of range
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(T32.from_f64(1e300), T32.maxpos_body());
+        assert_eq!(T32.from_f64(1e-300), 1);
+        assert_eq!(T32.from_f64(-1e300), T32.nar() + 1);
+    }
+
+    #[test]
+    fn pi_accuracy_t32() {
+        let pi = std::f64::consts::PI;
+        let back = T32.to_f64(T32.from_f64(pi));
+        // c=1 → r=1 → 26 mantissa bits → rel err < 2^-26
+        assert!(((back - pi) / pi).abs() < f64::powi(2.0, -26));
+    }
+}

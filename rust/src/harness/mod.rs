@@ -1,0 +1,150 @@
+//! Self-contained benchmark harness (criterion-style: warmup, calibrated
+//! iteration counts, robust statistics). The vendored dependency set has no
+//! criterion, so `cargo bench` targets use this.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    /// Operations per second at the mean.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    /// Target wall time per benchmark.
+    pub budget: Duration,
+    /// Warmup time before sampling.
+    pub warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: Duration::from_millis(700), warmup: Duration::from_millis(150), results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    /// Time `f` (which should perform ONE operation and return a value to
+    /// keep the optimizer honest).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + per-iteration estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+        // Sample in batches sized so each sample is ≥ ~20 µs.
+        let batch = ((20_000.0 / per_iter).ceil() as u64).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.len() < 10 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: batch * samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: q(0.5),
+            p99_ns: q(0.99),
+            min_ns: samples[0],
+        };
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render an aligned results table.
+    pub fn table(&self, title: &str) -> String {
+        let mut s = format!("{title}\n");
+        s.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}\n",
+            "benchmark", "mean", "p50", "p99", "ops/s"
+        ));
+        for r in &self.results {
+            s.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>14.0}\n",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p99_ns),
+                r.ops_per_sec()
+            ));
+        }
+        s
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher { budget: Duration::from_millis(50), warmup: Duration::from_millis(10), results: vec![] };
+        let r = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7)).clone();
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns * 1.0001);
+        assert!(r.min_ns <= r.mean_ns * 1.0001);
+        assert!(r.iters > 100);
+        let t = b.table("t");
+        assert!(t.contains("noop-ish"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,145 @@
+//! Standard-cell library for the gate-level cost model.
+//!
+//! Values are calibrated to a NanGate/FreePDK 45 nm-class open cell library
+//! (typical corner): areas in µm², intrinsic delays in ns, per-transition
+//! switching energies in fJ, and a linear fanout delay slope. The paper's
+//! PPA numbers come from post-layout synthesis on freepdk45; this model
+//! reproduces the *structural* cost differences between the decoder/encoder
+//! architectures (gate count, logic depth, data-dependent switching), which
+//! is what drives the paper's comparisons (see DESIGN.md §Hardware cost
+//! model calibration).
+
+/// Gate/cell types available to netlists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    /// Constant 0 driver (zero cost; folded at analysis time).
+    Const0,
+    /// Constant 1 driver (zero cost).
+    Const1,
+    /// Buffer (used by the fanout-buffering pass).
+    Buf,
+    Inv,
+    Nand2,
+    Nor2,
+    And2,
+    Or2,
+    Xor2,
+    Xnor2,
+    /// 2:1 multiplexer: out = s ? b : a.
+    Mux2,
+    /// AND-OR-INVERT 2-1: out = !((a & b) | c).
+    Aoi21,
+    /// OR-AND-INVERT 2-1: out = !((a | b) & c).
+    Oai21,
+}
+
+/// Physical parameters of one cell.
+#[derive(Clone, Copy, Debug)]
+pub struct CellParams {
+    /// Cell area in µm².
+    pub area: f64,
+    /// Intrinsic pin-to-pin delay in ns (worst arc, typical corner).
+    pub delay: f64,
+    /// Additional delay per fanout load in ns.
+    pub load_slope: f64,
+    /// Switching energy per output transition in fJ (internal + average
+    /// output load).
+    pub energy: f64,
+}
+
+impl CellKind {
+    /// Library parameters (NanGate45-class, typical corner).
+    pub fn params(self) -> CellParams {
+        use CellKind::*;
+        match self {
+            Const0 | Const1 => CellParams { area: 0.0, delay: 0.0, load_slope: 0.0, energy: 0.0 },
+            Buf => CellParams { area: 0.798, delay: 0.022, load_slope: 0.0030, energy: 0.9 },
+            Inv => CellParams { area: 0.532, delay: 0.010, load_slope: 0.0036, energy: 0.45 },
+            Nand2 => CellParams { area: 0.798, delay: 0.014, load_slope: 0.0042, energy: 0.60 },
+            Nor2 => CellParams { area: 0.798, delay: 0.018, load_slope: 0.0048, energy: 0.62 },
+            And2 => CellParams { area: 1.064, delay: 0.024, load_slope: 0.0040, energy: 0.85 },
+            Or2 => CellParams { area: 1.064, delay: 0.026, load_slope: 0.0042, energy: 0.88 },
+            Xor2 => CellParams { area: 1.596, delay: 0.032, load_slope: 0.0050, energy: 1.55 },
+            Xnor2 => CellParams { area: 1.596, delay: 0.032, load_slope: 0.0050, energy: 1.55 },
+            Mux2 => CellParams { area: 1.862, delay: 0.030, load_slope: 0.0044, energy: 1.25 },
+            Aoi21 => CellParams { area: 1.064, delay: 0.020, load_slope: 0.0046, energy: 0.72 },
+            Oai21 => CellParams { area: 1.064, delay: 0.020, load_slope: 0.0046, energy: 0.72 },
+        }
+    }
+
+    /// Number of input pins.
+    pub fn arity(self) -> usize {
+        use CellKind::*;
+        match self {
+            Const0 | Const1 => 0,
+            Buf | Inv => 1,
+            Nand2 | Nor2 | And2 | Or2 | Xor2 | Xnor2 => 2,
+            Mux2 | Aoi21 | Oai21 => 3,
+        }
+    }
+
+    /// Combinational function. `ins` must hold `arity()` values; for Mux2
+    /// the order is (s, a, b) → s ? b : a; for AOI/OAI it is (a, b, c).
+    pub fn eval(self, ins: &[bool]) -> bool {
+        use CellKind::*;
+        match self {
+            Const0 => false,
+            Const1 => true,
+            Buf => ins[0],
+            Inv => !ins[0],
+            Nand2 => !(ins[0] & ins[1]),
+            Nor2 => !(ins[0] | ins[1]),
+            And2 => ins[0] & ins[1],
+            Or2 => ins[0] | ins[1],
+            Xor2 => ins[0] ^ ins[1],
+            Xnor2 => !(ins[0] ^ ins[1]),
+            Mux2 => {
+                if ins[0] { ins[2] } else { ins[1] }
+            }
+            Aoi21 => !((ins[0] & ins[1]) | ins[2]),
+            Oai21 => !((ins[0] | ins[1]) & ins[2]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_tables() {
+        use CellKind::*;
+        let f = false;
+        let t = true;
+        assert!(!Const0.eval(&[]));
+        assert!(Const1.eval(&[]));
+        assert!(Inv.eval(&[f]));
+        assert!(!Inv.eval(&[t]));
+        assert!(Nand2.eval(&[t, f]));
+        assert!(!Nand2.eval(&[t, t]));
+        assert!(Nor2.eval(&[f, f]));
+        assert!(!Nor2.eval(&[t, f]));
+        assert_eq!(Xor2.eval(&[t, t]), false);
+        assert_eq!(Xnor2.eval(&[t, t]), true);
+        // Mux2: (s, a, b) → s ? b : a
+        assert_eq!(Mux2.eval(&[f, t, f]), true);
+        assert_eq!(Mux2.eval(&[t, t, f]), false);
+        assert_eq!(Aoi21.eval(&[t, t, f]), false);
+        assert_eq!(Aoi21.eval(&[f, t, f]), true);
+        assert_eq!(Oai21.eval(&[f, f, t]), true);
+        assert_eq!(Oai21.eval(&[t, f, t]), false);
+    }
+
+    #[test]
+    fn params_sane() {
+        use CellKind::*;
+        for k in [Buf, Inv, Nand2, Nor2, And2, Or2, Xor2, Xnor2, Mux2, Aoi21, Oai21] {
+            let p = k.params();
+            assert!(p.area > 0.0 && p.delay > 0.0 && p.energy > 0.0);
+            assert_eq!(k.arity() > 0, true);
+        }
+        // XOR must cost more than NAND (drives the posit-vs-float story).
+        assert!(Xor2.params().area > Nand2.params().area);
+        assert!(Xor2.params().energy > Nand2.params().energy);
+    }
+}

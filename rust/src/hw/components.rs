@@ -1,0 +1,451 @@
+//! Reusable circuit components: reduction trees, multiplexers, barrel
+//! shifters, leading-zero counters, adders, decoders, priority encoders.
+//!
+//! These are the building blocks the paper's block diagrams are drawn from:
+//! the standard posit decoder needs the *sequential* LZC → barrel-shifter
+//! chain; the b-posit decoder needs only the one-hot logic + wide one-hot
+//! mux; the float decoder needs LZC + shifter for subnormals. Costs and
+//! depths therefore emerge from structure, not hand-tuned constants.
+
+use super::netlist::{Bus, NetId, Netlist};
+
+/// Balanced OR-reduction tree.
+pub fn or_reduce(nl: &mut Netlist, bits: &[NetId]) -> NetId {
+    reduce(nl, bits, |nl, a, b| nl.or2(a, b))
+}
+
+/// Balanced AND-reduction tree.
+pub fn and_reduce(nl: &mut Netlist, bits: &[NetId]) -> NetId {
+    reduce(nl, bits, |nl, a, b| nl.and2(a, b))
+}
+
+/// Balanced XOR-reduction tree.
+pub fn xor_reduce(nl: &mut Netlist, bits: &[NetId]) -> NetId {
+    reduce(nl, bits, |nl, a, b| nl.xor2(a, b))
+}
+
+/// NOR-reduction (OR tree + inverter): the posit "chck" zero/NaR detector.
+pub fn nor_reduce(nl: &mut Netlist, bits: &[NetId]) -> NetId {
+    let o = or_reduce(nl, bits);
+    nl.not(o)
+}
+
+fn reduce(nl: &mut Netlist, bits: &[NetId], mut f: impl FnMut(&mut Netlist, NetId, NetId) -> NetId) -> NetId {
+    assert!(!bits.is_empty());
+    let mut level = bits.to_vec();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        for pair in level.chunks(2) {
+            next.push(if pair.len() == 2 { f(nl, pair[0], pair[1]) } else { pair[0] });
+        }
+        level = next;
+    }
+    level[0]
+}
+
+/// Bitwise XOR of a bus with a single broadcast bit.
+pub fn xor_broadcast(nl: &mut Netlist, bit: NetId, bus: &[NetId]) -> Bus {
+    bus.iter().map(|&b| nl.xor2(bit, b)).collect()
+}
+
+/// Per-bit 2:1 mux over two equal-width buses: out = s ? b : a.
+pub fn mux2_bus(nl: &mut Netlist, s: NetId, a: &[NetId], b: &[NetId]) -> Bus {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| nl.mux2(s, x, y)).collect()
+}
+
+/// One-hot mux (AND-OR): out = Σ_k sel[k]·in[k]. This is the paper's core
+/// b-posit structure: a k-input mux whose select is a one-hot string; depth
+/// is O(log k) regardless of input width.
+pub fn mux_onehot(nl: &mut Netlist, sels: &[NetId], inputs: &[&[NetId]]) -> Bus {
+    assert_eq!(sels.len(), inputs.len());
+    let width = inputs[0].len();
+    assert!(inputs.iter().all(|i| i.len() == width));
+    let mut out = Vec::with_capacity(width);
+    for bit in 0..width {
+        let terms: Vec<NetId> = sels.iter().zip(inputs).map(|(&s, inp)| nl.and2(s, inp[bit])).collect();
+        out.push(or_reduce(nl, &terms));
+    }
+    out
+}
+
+/// Binary-select mux over 2^k inputs via a mux2 tree (used where selects
+/// are binary-encoded, e.g. shifter stages).
+pub fn mux_binary(nl: &mut Netlist, sels: &[NetId], inputs: &[&[NetId]]) -> Bus {
+    assert_eq!(inputs.len(), 1 << sels.len());
+    let width = inputs[0].len();
+    let mut layer: Vec<Bus> = inputs.iter().map(|i| i.to_vec()).collect();
+    for &s in sels {
+        let mut next = Vec::with_capacity(layer.len() / 2);
+        for pair in layer.chunks(2) {
+            next.push(mux2_bus(nl, s, &pair[0], &pair[1]));
+        }
+        layer = next;
+    }
+    assert_eq!(layer.len(), 1);
+    assert_eq!(layer[0].len(), width);
+    layer.pop().unwrap()
+}
+
+/// Logarithmic left barrel shifter (shift toward MSB, zero fill).
+/// `amount` is little-endian; stage k shifts by 2^k.
+pub fn barrel_shift_left(nl: &mut Netlist, bits: &[NetId], amount: &[NetId]) -> Bus {
+    let zero = nl.zero();
+    let mut cur: Bus = bits.to_vec();
+    for (k, &a) in amount.iter().enumerate() {
+        let sh = 1usize << k;
+        let mut shifted = Vec::with_capacity(cur.len());
+        for i in 0..cur.len() {
+            let from = if i >= sh { cur[i - sh] } else { zero };
+            shifted.push(nl.mux2(a, cur[i], from));
+        }
+        cur = shifted;
+    }
+    cur
+}
+
+/// Logarithmic right barrel shifter (shift toward LSB, zero fill).
+pub fn barrel_shift_right(nl: &mut Netlist, bits: &[NetId], amount: &[NetId]) -> Bus {
+    let zero = nl.zero();
+    let mut cur: Bus = bits.to_vec();
+    for (k, &a) in amount.iter().enumerate() {
+        let sh = 1usize << k;
+        let mut shifted = Vec::with_capacity(cur.len());
+        for i in 0..cur.len() {
+            let from = if i + sh < cur.len() { cur[i + sh] } else { zero };
+            shifted.push(nl.mux2(a, cur[i], from));
+        }
+        cur = shifted;
+    }
+    cur
+}
+
+/// Leading-zero counter over `bits` given **MSB-first** (divide & conquer,
+/// the "optimal circuits" the paper's §1.3 mentions: logarithmic depth).
+/// Returns (count, all_zero): `count` is ⌈log2(len+1)⌉ bits little-endian;
+/// when every bit is 0, count reads `len`.
+pub fn lzc_msb_first(nl: &mut Netlist, bits: &[NetId]) -> (Bus, NetId) {
+    // Pad at the low end (after the LSB) with constant ones so the padded
+    // width is a power of two without affecting the count for real inputs.
+    let len = bits.len();
+    let p = len.next_power_of_two();
+    let one = nl.one();
+    let mut padded = bits.to_vec();
+    padded.extend(std::iter::repeat(one).take(p - len));
+    let (valid, count) = lzc_rec(nl, &padded);
+    let all_zero = nl.not(valid);
+    // With the 1-padding, any non-zero input yields the exact count in
+    // log2(p) bits, and an all-zero input yields the count of the padded
+    // run. When len < p that padded count IS `len` (correct). When len == p
+    // the true count `len` needs one more bit: gate the low bits with
+    // `valid` and emit `all_zero` as the MSB so the output reads exactly
+    // `len`.
+    let out = if p == len {
+        let mut o: Bus = count.iter().map(|&c| nl.and2(c, valid)).collect();
+        o.push(all_zero);
+        o
+    } else {
+        count
+    };
+    (out, all_zero)
+}
+
+/// Recursive LZC core on power-of-two MSB-first slices.
+/// Returns (any_one, count little-endian with log2(len) bits).
+fn lzc_rec(nl: &mut Netlist, bits: &[NetId]) -> (NetId, Bus) {
+    if bits.len() == 1 {
+        return (bits[0], Vec::new());
+    }
+    let half = bits.len() / 2;
+    let (v_hi, c_hi) = lzc_rec(nl, &bits[..half]);
+    let (v_lo, c_lo) = lzc_rec(nl, &bits[half..]);
+    let valid = nl.or2(v_hi, v_lo);
+    // If the high half has a one: count = 0 ++ c_hi, else: count = 1 ++ c_lo.
+    let mut count = Vec::with_capacity(c_hi.len() + 1);
+    for i in 0..c_hi.len() {
+        count.push(nl.mux2(v_hi, c_lo[i], c_hi[i]));
+    }
+    count.push(nl.not(v_hi));
+    (valid, count)
+}
+
+/// Ripple-carry adder. Returns (sum, carry_out).
+pub fn ripple_add(nl: &mut Netlist, a: &[NetId], b: &[NetId], cin: NetId) -> (Bus, NetId) {
+    assert_eq!(a.len(), b.len());
+    let mut c = cin;
+    let mut sum = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let axb = nl.xor2(a[i], b[i]);
+        sum.push(nl.xor2(axb, c));
+        let t1 = nl.and2(a[i], b[i]);
+        let t2 = nl.and2(axb, c);
+        c = nl.or2(t1, t2);
+    }
+    (sum, c)
+}
+
+/// Subtractor a − b via a + !b + 1. Returns (diff, carry_out) where
+/// carry_out = 1 means no borrow (a ≥ b for unsigned operands).
+pub fn ripple_sub(nl: &mut Netlist, a: &[NetId], b: &[NetId]) -> (Bus, NetId) {
+    let nb: Bus = b.iter().map(|&x| nl.not(x)).collect();
+    let one = nl.one();
+    ripple_add(nl, a, &nb, one)
+}
+
+/// Incrementer: a + cin (half-adder chain). Returns (sum, carry_out).
+pub fn incrementer(nl: &mut Netlist, a: &[NetId], cin: NetId) -> (Bus, NetId) {
+    let mut c = cin;
+    let mut sum = Vec::with_capacity(a.len());
+    for &bit in a {
+        sum.push(nl.xor2(bit, c));
+        c = nl.and2(bit, c);
+    }
+    (sum, c)
+}
+
+/// Two's complement: !a + 1. Returns (negated, carry_out).
+pub fn twos_complement(nl: &mut Netlist, a: &[NetId]) -> (Bus, NetId) {
+    let na: Bus = a.iter().map(|&x| nl.not(x)).collect();
+    let one = nl.one();
+    incrementer(nl, &na, one)
+}
+
+/// Conditional two's complement: negate when `neg` is 1 (XOR + masked
+/// increment) — the full-cost path the paper's XOR-only shortcut avoids.
+pub fn cond_twos_complement(nl: &mut Netlist, neg: NetId, a: &[NetId]) -> Bus {
+    let x = xor_broadcast(nl, neg, a);
+    let (sum, _) = incrementer(nl, &x, neg);
+    sum
+}
+
+/// Binary decoder: k select bits → up to `n_out` one-hot outputs
+/// (n_out ≤ 2^k; extra codes are unused).
+pub fn binary_decoder(nl: &mut Netlist, sel: &[NetId], n_out: usize) -> Bus {
+    assert!(n_out <= 1 << sel.len());
+    let nsel: Bus = sel.iter().map(|&s| nl.not(s)).collect();
+    let mut out = Vec::with_capacity(n_out);
+    for code in 0..n_out {
+        let lits: Vec<NetId> =
+            sel.iter().enumerate().map(|(i, &s)| if code >> i & 1 == 1 { s } else { nsel[i] }).collect();
+        out.push(and_reduce(nl, &lits));
+    }
+    out
+}
+
+/// Priority encoder specialised for a one-hot input: binary index of the
+/// set bit (pure OR trees; undefined when no bit or multiple bits are set).
+pub fn onehot_to_binary(nl: &mut Netlist, onehot: &[NetId]) -> Bus {
+    let width = (usize::BITS - (onehot.len() - 1).leading_zeros()).max(1) as usize;
+    let mut out = Vec::with_capacity(width);
+    for j in 0..width {
+        let terms: Vec<NetId> = onehot
+            .iter()
+            .enumerate()
+            .filter(|(k, _)| k >> j & 1 == 1)
+            .map(|(_, &n)| n)
+            .collect();
+        out.push(if terms.is_empty() { nl.zero() } else { or_reduce(nl, &terms) });
+    }
+    out
+}
+
+/// All suffix ORs of a bus in log depth (Sklansky parallel prefix):
+/// out[i] = bits[i] | bits[i+1] | … | bits[n-1].
+pub fn suffix_or_tree(nl: &mut Netlist, bits: &[NetId]) -> Bus {
+    let n = bits.len();
+    let mut cur: Bus = bits.to_vec();
+    let mut step = 1;
+    while step < n {
+        let mut next = cur.clone();
+        for i in 0..n {
+            if i + step < n {
+                next[i] = nl.or2(cur[i], cur[i + step]);
+            }
+        }
+        cur = next;
+        step <<= 1;
+    }
+    cur
+}
+
+/// Equality with a constant: AND of per-bit literals.
+pub fn eq_const(nl: &mut Netlist, bus: &[NetId], value: u64) -> NetId {
+    let lits: Vec<NetId> = bus
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| if value >> i & 1 == 1 { b } else { nl.not(b) })
+        .collect();
+    and_reduce(nl, &lits)
+}
+
+/// Constant bus of the low `width` bits of `value`.
+pub fn const_bus(nl: &mut Netlist, value: u64, width: usize) -> Bus {
+    (0..width)
+        .map(|i| if value >> i & 1 == 1 { nl.one() } else { nl.zero() })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::netlist::Netlist;
+    use crate::hw::sim::eval;
+
+    fn run1(nl: &Netlist, inputs: &[(&str, u64)], out: &str) -> u64 {
+        eval(nl, inputs).into_iter().find(|(n, _)| n == out).unwrap().1
+    }
+
+    #[test]
+    fn reductions() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 8);
+        let o = or_reduce(&mut nl, &a);
+        let an = and_reduce(&mut nl, &a);
+        let x = xor_reduce(&mut nl, &a);
+        let nr = nor_reduce(&mut nl, &a);
+        nl.output_bus("or", &[o]);
+        nl.output_bus("and", &[an]);
+        nl.output_bus("xor", &[x]);
+        nl.output_bus("nor", &[nr]);
+        for v in [0u64, 1, 0x80, 0xff, 0x5a, 0x7f] {
+            assert_eq!(run1(&nl, &[("a", v)], "or"), (v != 0) as u64);
+            assert_eq!(run1(&nl, &[("a", v)], "and"), (v == 0xff) as u64);
+            assert_eq!(run1(&nl, &[("a", v)], "xor"), (v.count_ones() & 1) as u64);
+            assert_eq!(run1(&nl, &[("a", v)], "nor"), (v == 0) as u64);
+        }
+    }
+
+    #[test]
+    fn onehot_mux_selects() {
+        let mut nl = Netlist::new();
+        let s = nl.input_bus("s", 3);
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        let c = nl.input_bus("c", 4);
+        let o = mux_onehot(&mut nl, &s, &[&a, &b, &c]);
+        nl.output_bus("o", &o);
+        let base = [("a", 3u64), ("b", 9u64), ("c", 14u64)];
+        for (i, want) in [(1u64, 3u64), (2, 9), (4, 14)] {
+            let mut ins = base.to_vec();
+            ins.push(("s", i));
+            assert_eq!(run1(&nl, &ins, "o"), want);
+        }
+    }
+
+    #[test]
+    fn barrel_shifters() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 16);
+        let sh = nl.input_bus("sh", 4);
+        let l = barrel_shift_left(&mut nl, &a, &sh);
+        let r = barrel_shift_right(&mut nl, &a, &sh);
+        nl.output_bus("l", &l);
+        nl.output_bus("r", &r);
+        for (v, s) in [(0x1234u64, 0u64), (0x1234, 4), (0xffff, 15), (0x0001, 7)] {
+            assert_eq!(run1(&nl, &[("a", v), ("sh", s)], "l"), (v << s) & 0xffff);
+            assert_eq!(run1(&nl, &[("a", v), ("sh", s)], "r"), v >> s);
+        }
+    }
+
+    #[test]
+    fn lzc_exhaustive_8bit() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 8); // little-endian input bus
+        let msb_first: Vec<_> = a.iter().rev().copied().collect();
+        let (count, all_zero) = lzc_msb_first(&mut nl, &msb_first);
+        nl.output_bus("count", &count);
+        nl.output_bus("z", &[all_zero]);
+        for v in 0..256u64 {
+            let expect = if v == 0 { 8 } else { (v as u8).leading_zeros() as u64 };
+            assert_eq!(run1(&nl, &[("a", v)], "count"), expect, "lzc({v:#04x})");
+            assert_eq!(run1(&nl, &[("a", v)], "z"), (v == 0) as u64);
+        }
+    }
+
+    #[test]
+    fn lzc_non_power_of_two() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 11);
+        let msb_first: Vec<_> = a.iter().rev().copied().collect();
+        let (count, _) = lzc_msb_first(&mut nl, &msb_first);
+        nl.output_bus("count", &count);
+        for v in [0u64, 1, 0x400, 0x3ff, 0x200, 5] {
+            let expect = if v == 0 { 11 } else { 10 - (63 - v.leading_zeros() as u64) };
+            assert_eq!(run1(&nl, &[("a", v)], "count"), expect, "lzc11({v:#x})");
+        }
+    }
+
+    #[test]
+    fn adders() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 8);
+        let b = nl.input_bus("b", 8);
+        let z = nl.zero();
+        let (sum, cout) = ripple_add(&mut nl, &a, &b, z);
+        let (diff, nb) = ripple_sub(&mut nl, &a, &b);
+        nl.output_bus("sum", &sum);
+        nl.output_bus("cout", &[cout]);
+        nl.output_bus("diff", &diff);
+        nl.output_bus("noborrow", &[nb]);
+        for (x, y) in [(0u64, 0u64), (1, 1), (255, 1), (200, 100), (17, 42)] {
+            assert_eq!(run1(&nl, &[("a", x), ("b", y)], "sum"), (x + y) & 0xff);
+            assert_eq!(run1(&nl, &[("a", x), ("b", y)], "cout"), (x + y) >> 8);
+            assert_eq!(run1(&nl, &[("a", x), ("b", y)], "diff"), x.wrapping_sub(y) & 0xff);
+            assert_eq!(run1(&nl, &[("a", x), ("b", y)], "noborrow"), (x >= y) as u64);
+        }
+    }
+
+    #[test]
+    fn twos_complement_and_incrementer() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 6);
+        let neg = nl.input_bus("neg", 1)[0];
+        let (tc, _) = twos_complement(&mut nl, &a);
+        let cond = cond_twos_complement(&mut nl, neg, &a);
+        nl.output_bus("tc", &tc);
+        nl.output_bus("cond", &cond);
+        for v in 0..64u64 {
+            assert_eq!(run1(&nl, &[("a", v), ("neg", 0)], "tc"), v.wrapping_neg() & 63);
+            assert_eq!(run1(&nl, &[("a", v), ("neg", 0)], "cond"), v);
+            assert_eq!(run1(&nl, &[("a", v), ("neg", 1)], "cond"), v.wrapping_neg() & 63);
+        }
+    }
+
+    #[test]
+    fn decoder_and_priority_encoder_roundtrip() {
+        let mut nl = Netlist::new();
+        let s = nl.input_bus("s", 3);
+        let oh = binary_decoder(&mut nl, &s, 6);
+        let back = onehot_to_binary(&mut nl, &oh);
+        nl.output_bus("oh", &oh);
+        nl.output_bus("back", &back);
+        for v in 0..6u64 {
+            assert_eq!(run1(&nl, &[("s", v)], "oh"), 1 << v);
+            assert_eq!(run1(&nl, &[("s", v)], "back"), v);
+        }
+    }
+
+    #[test]
+    fn eq_const_works() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 8);
+        let e = eq_const(&mut nl, &a, 0x5a);
+        nl.output_bus("e", &[e]);
+        assert_eq!(run1(&nl, &[("a", 0x5a)], "e"), 1);
+        assert_eq!(run1(&nl, &[("a", 0x5b)], "e"), 0);
+    }
+
+    #[test]
+    fn mux_binary_selects() {
+        let mut nl = Netlist::new();
+        let s = nl.input_bus("s", 2);
+        let buses: Vec<Bus> = (0..4).map(|i| nl.input_bus(&format!("i{i}"), 4)).collect();
+        let refs: Vec<&[NetId]> = buses.iter().map(|b| b.as_slice()).collect();
+        let o = mux_binary(&mut nl, &s, &refs);
+        nl.output_bus("o", &o);
+        for k in 0..4u64 {
+            let ins = vec![("i0", 1u64), ("i1", 5), ("i2", 9), ("i3", 13), ("s", k)];
+            assert_eq!(run1(&nl, &ins, "o"), 1 + 4 * k);
+        }
+    }
+}

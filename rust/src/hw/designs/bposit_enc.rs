@@ -1,0 +1,125 @@
+//! Proposed b-posit encoder (paper Fig 13 / §3.2).
+//!
+//! Packing is again select-based rather than shift-based:
+//!
+//! 1. `exp_cin = sign ∧ (frac = 0)`; exponent → raw form via XOR with sign
+//!    plus an eS-bit increment on `exp_cin` (the deferred 2's complement).
+//! 2. An exponent-overflow never ripples into a full-width adder: the
+//!    regime value is bumped by a speculative 4-bit incrementer selected by
+//!    a mux ("the change in the final regime string is accounted for using
+//!    another multiplexer"). The overflow condition itself
+//!    (sign ∧ frac=0 ∧ exp=0) is computed directly from the inputs, in
+//!    parallel with everything else.
+//! 3. The 3 LSBs of the (raw-domain) regime value XOR its MSB give the
+//!    regime-size index (Table 3); a 3×6 binary decoder yields the
+//!    intermediate regime string (Table 4); one XOR layer applies the run
+//!    polarity.
+//! 4. A final (rs−1)-input one-hot mux picks among the five packing
+//!    layouts: [regime_k ‖ exponent ‖ fraction-truncated-to-fit].
+//!
+//! Critical path: XOR → decoder → XOR → mux — constant in n; only the mux
+//! input width grows with precision.
+
+use crate::formats::PositSpec;
+use crate::hw::components::{
+    binary_decoder, incrementer, mux2_bus, mux_onehot, nor_reduce, or_reduce, xor_broadcast,
+};
+use crate::hw::netlist::{Bus, NetId, Netlist};
+
+use super::{frac_port_width, regime_port_width};
+
+/// Build the b-posit encoder netlist for `spec`.
+pub fn build(spec: &PositSpec) -> Netlist {
+    assert!(spec.is_bounded());
+    let n = spec.n as usize;
+    let rs = spec.rs as usize;
+    let es = spec.es as usize;
+    let fw = frac_port_width(spec) as usize;
+    let wr = regime_port_width(spec) as usize;
+
+    let mut nl = Netlist::new();
+    let sign = nl.input_bus("sign", 1)[0];
+    let r_in = nl.input_bus("regime", wr as u32); // magnitude-domain, post-carry
+    let e_in = nl.input_bus("exp", es as u32); // magnitude-domain
+    let frac = nl.input_bus("frac", fw as u32); // signed form, left-aligned
+
+    // 1. Deferred 2's complement of the exponent.
+    let f_zero = nor_reduce(&mut nl, &frac);
+    let cin = nl.and2(sign, f_zero);
+    let e_x = xor_broadcast(&mut nl, sign, &e_in);
+    let (e_raw, _carry) = incrementer(&mut nl, &e_x, cin);
+
+    // 2. Exponent overflow (ovf ⇔ sign ∧ frac=0 ∧ exp=0) bumps the regime.
+    let e_zero = nor_reduce(&mut nl, &e_in);
+    let ovf = nl.and2(cin, e_zero);
+    let r_x = xor_broadcast(&mut nl, sign, &r_in); // raw-domain regime value
+    let one = nl.one();
+    let (r_plus, _) = incrementer(&mut nl, &r_x, one); // speculative, parallel
+    let r_eff = mux2_bus(&mut nl, ovf, &r_x, &r_plus);
+
+    // 3. Regime-size index (Table 3) and regime string (Table 4).
+    let msb = r_eff[wr - 1];
+    let low: Vec<NetId> = r_eff[..wr - 1].to_vec();
+    let idx = xor_broadcast(&mut nl, msb, &low); // "1's complement" index
+    let onehot = binary_decoder(&mut nl, &idx, rs);
+    // Intermediate string (MSB-first, rs+1 bits): [0, onehot[0..rs-1]];
+    // polarity XOR: px = ¬msb (run of 1s for r_eff ≥ 0).
+    let px = nl.not(msb);
+    let zero = nl.zero();
+    let mut string: Vec<NetId> = Vec::with_capacity(rs + 1);
+    string.push(nl.xor2(zero, px)); // = px, kept as XOR for structural fidelity
+    for k in 0..rs {
+        string.push(nl.xor2(onehot[k], px));
+    }
+
+    // 4. Packing candidates for regime sizes 2..=rs (MSB-first assembly).
+    //    Candidate k: string[0..k] ++ e_raw ++ frac[top n-1-k-es bits].
+    let mut taps: Vec<Bus> = Vec::with_capacity(rs - 1);
+    for size in 2..=rs {
+        let keep_frac = n - 1 - size - es;
+        let mut tap_msb_first: Vec<NetId> = Vec::with_capacity(n - 1);
+        tap_msb_first.extend(&string[..size]);
+        tap_msb_first.extend(e_raw.iter().rev()); // e_raw is LE; emit MSB-first
+        // frac is LE with MSB at fw-1; take the top keep_frac bits.
+        for i in 0..keep_frac {
+            tap_msb_first.push(frac[fw - 1 - i]);
+        }
+        // Convert MSB-first to the little-endian bus convention.
+        let tap: Bus = tap_msb_first.into_iter().rev().collect();
+        taps.push(tap);
+    }
+    let mut sels: Bus = onehot[..rs - 2].to_vec();
+    let shared = or_reduce(&mut nl, &[onehot[rs - 2], onehot[rs - 1]]);
+    sels.push(shared);
+    let tap_refs: Vec<&[NetId]> = taps.iter().map(|t| t.as_slice()).collect();
+    let body = mux_onehot(&mut nl, &sels, &tap_refs);
+
+    let mut word: Bus = body;
+    word.push(sign);
+    nl.output_bus("p", &word);
+    nl.buffer_high_fanout(12);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{BP16, BP32, BP64};
+    use crate::hw::sta;
+
+    #[test]
+    fn near_constant_delay_across_n() {
+        let d: Vec<f64> = [BP16, BP32, BP64]
+            .iter()
+            .map(|s| sta::analyze(&build(s)).critical_ns)
+            .collect();
+        assert!(d[2] < d[0] * 1.4, "encoder delay not flat: {d:?}");
+    }
+
+    #[test]
+    fn area_grows_with_n() {
+        let a16 = build(&BP16).area();
+        let a64 = build(&BP64).area();
+        assert!(a64 > a16 * 2.0, "area should scale with n: {a16} vs {a64}");
+    }
+}

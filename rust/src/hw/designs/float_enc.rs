@@ -1,0 +1,96 @@
+//! IEEE floating-point encoder (paper Fig 9; HardFloat's back-conversion,
+//! all steps except final rounding): bias restoration, subnormal
+//! denormalization (comparator + right shifter), and special-case field
+//! forcing (NaN/Inf → exp all-ones, zero/subnormal → exp all-zeros).
+
+use crate::formats::IeeeSpec;
+use crate::hw::components::{
+    barrel_shift_right, const_bus, mux2_bus, ripple_add, ripple_sub, twos_complement,
+};
+use crate::hw::netlist::{Bus, NetId, Netlist};
+
+/// Build the float encoder netlist for `spec`. Inputs mirror the decoder's
+/// outputs: sign (1), exp (eb+1 signed), sig (fb+1 with hidden bit), and
+/// the is_nan / is_inf / is_zero flags.
+pub fn build(spec: &IeeeSpec) -> Netlist {
+    let n = spec.n as usize;
+    let eb = spec.eb as usize;
+    let fb = spec.fb() as usize;
+    let bias = spec.bias() as i64;
+    let min_exp = spec.min_exp() as i64;
+
+    let mut nl = Netlist::new();
+    let sign = nl.input_bus("sign", 1)[0];
+    let exp = nl.input_bus("exp", (eb + 1) as u32);
+    let sig = nl.input_bus("sig", (fb + 1) as u32);
+    let is_nan = nl.input_bus("is_nan", 1)[0];
+    let is_inf = nl.input_bus("is_inf", 1)[0];
+    let is_zero = nl.input_bus("is_zero", 1)[0];
+
+    let zero = nl.zero();
+
+    // Subnormal detection + shift distance: d2 = exp − min_exp; negative ⇒
+    // subnormal; dist = −d2.
+    let min_bus = const_bus(&mut nl, (min_exp as u64) & ((1u64 << (eb + 1)) - 1), eb + 1);
+    let (d2, _) = ripple_sub(&mut nl, &exp, &min_bus);
+    let is_sub = d2[eb]; // sign bit of the two's-complement difference
+    let (dist_full, _) = twos_complement(&mut nl, &d2);
+    // Shift distances beyond fb+1 can't occur for in-range inputs; use the
+    // low ⌈log2(fb+2)⌉ bits.
+    let amt_bits = (usize::BITS - (fb + 1).leading_zeros()) as usize;
+    let dist: Bus = dist_full[..amt_bits.min(dist_full.len())].to_vec();
+
+    // Fraction paths.
+    let shifted = barrel_shift_right(&mut nl, &sig, &dist);
+    let frac_sub: Bus = shifted[..fb].to_vec();
+    let frac_norm: Bus = sig[..fb].to_vec();
+    let f1 = mux2_bus(&mut nl, is_sub, &frac_norm, &frac_sub);
+    // Special forcing: inf/zero → 0; nan → quiet payload (MSB of frac).
+    let zeros_f = const_bus(&mut nl, 0, fb);
+    let qnan_f = const_bus(&mut nl, 1u64 << (fb - 1), fb);
+    let inf_or_zero = nl.or2(is_inf, is_zero);
+    let f2 = mux2_bus(&mut nl, inf_or_zero, &f1, &zeros_f);
+    let frac_out = mux2_bus(&mut nl, is_nan, &f2, &qnan_f);
+
+    // Exponent paths: normal → exp + bias (low eb bits).
+    let bias_bus = const_bus(&mut nl, bias as u64, eb + 1);
+    let (biased, _) = ripple_add(&mut nl, &exp, &bias_bus, zero);
+    let exp_norm: Bus = biased[..eb].to_vec();
+    let zeros_e = const_bus(&mut nl, 0, eb);
+    let ones_e = const_bus(&mut nl, (1u64 << eb) - 1, eb);
+    let e1 = mux2_bus(&mut nl, is_sub, &exp_norm, &zeros_e);
+    let nan_or_inf = nl.or2(is_nan, is_inf);
+    let e2 = mux2_bus(&mut nl, nan_or_inf, &e1, &ones_e);
+    let exp_out = mux2_bus(&mut nl, is_zero, &e2, &zeros_e);
+
+    // Assemble the word; NaN output is canonically positive (qNaN).
+    let n_nan = nl.not(is_nan);
+    let sign_out = nl.and2(sign, n_nan);
+    let mut word: Vec<NetId> = Vec::with_capacity(n);
+    word.extend(&frac_out);
+    word.extend(&exp_out);
+    word.push(sign_out);
+    nl.output_bus("f", &word);
+    nl.buffer_high_fanout(12);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::ieee::{F16, F32, F64};
+    use crate::hw::sta;
+
+    #[test]
+    fn delay_grows_with_precision() {
+        let d16 = sta::analyze(&build(&F16)).critical_ns;
+        let d64 = sta::analyze(&build(&F64)).critical_ns;
+        assert!(d64 > d16);
+    }
+
+    #[test]
+    fn smaller_than_float_decoder_is_not_required_but_nonempty() {
+        let nl = build(&F32);
+        assert!(nl.gate_count() > 80);
+    }
+}

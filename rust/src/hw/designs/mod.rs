@@ -1,0 +1,146 @@
+//! The six decoder/encoder circuits the paper evaluates (Figs 8–13), as
+//! parameterized structural netlist generators, plus the functional-
+//! equivalence verification harness.
+//!
+//! # Interface conventions (shared by posit and b-posit designs)
+//!
+//! **Decoder** (`p[n]` in):
+//! - `sign` (1): the word's sign bit.
+//! - `regime` (w_r, two's complement): the sign-corrected regime value
+//!   `r_out = r_raw ⊕ sign` where `r_raw` is extracted from the *raw signed
+//!   word* (no up-front two's complement — the paper's XOR shortcut).
+//! - `exp` (eS): `e_out = e_raw ⊕ sign` (1's-complement correction).
+//! - `exp_cin` (1): `sign ∧ (fraction = 0)` — the deferred +1 that turns
+//!   the 1's complement into a 2's complement; consumed by the arithmetic
+//!   stage, off the decode critical path (paper §3.1).
+//! - `frac` (fw_max): fraction bits **in signed form**, left-aligned
+//!   (zero-padded at the LSB end for longer regimes).
+//! - `chck` (1): NOR of all bits below the sign — flags zero/NaR.
+//!
+//! The decoded value satisfies: `T_mag = r_out·2^eS + e_out + exp_cin` and
+//! `|value| = 2^T_mag · (1 + f_mag)` with `f_mag` the (conditionally
+//! complemented) fraction — see `verify::check_decoder`.
+//!
+//! **Encoder** (magnitude-domain fields in, raw word out):
+//! - inputs `sign` (1), `regime` (w_r, two's complement, post-carry
+//!   magnitude value), `exp` (eS, magnitude), `frac` (fw_max, signed form —
+//!   the form the ALU carries per the paper);
+//! - output `p` (n): the packed word, produced *without* a full-width
+//!   two's complement: per-field XOR with sign + an eS-bit increment when
+//!   `sign ∧ frac=0`, with exponent-overflow absorbed by a regime
+//!   mux (b-posit) / adder (posit).
+//!
+//! The float designs follow HardFloat's recoded-format convention instead
+//! (see `float_dec`/`float_enc`).
+
+pub mod bposit_dec;
+pub mod bposit_enc;
+pub mod posit_dec;
+pub mod posit_enc;
+pub mod float_dec;
+pub mod float_enc;
+pub mod verify;
+
+use crate::formats::{IeeeSpec, PositSpec};
+
+/// Which design a vector set is being generated for.
+pub enum DesignUnderTest<'a> {
+    PositDec(&'a PositSpec),
+    PositEnc(&'a PositSpec),
+    FloatDec(&'a IeeeSpec),
+    FloatEnc(&'a IeeeSpec),
+}
+
+/// Input-transition vector pairs for power analysis: adversarial
+/// worst-case pairs (maximal-regime flips, subnormal↔max for floats — the
+/// paper's "worst case, data-dependent" convention) plus PRNG background
+/// pairs.
+pub fn power_vectors(
+    dut: &DesignUnderTest,
+    random_pairs: usize,
+) -> Vec<(Vec<(&'static str, u64)>, Vec<(&'static str, u64)>)> {
+    let n = match dut {
+        DesignUnderTest::PositDec(s) | DesignUnderTest::PositEnc(s) => s.n,
+        DesignUnderTest::FloatDec(s) | DesignUnderTest::FloatEnc(s) => s.n,
+    };
+    let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let maxpos = (1u64 << (n - 1)) - 1;
+    // Adversarial word pairs: full-regime polarity flips and extreme swings.
+    let mut word_pairs: Vec<(u64, u64)> = vec![
+        (maxpos, (1u64 << (n - 1)) + 1), // maxpos ↔ −maxpos
+        (maxpos, 1),                     // maxpos ↔ minpos
+        (1, mask),                       // minpos ↔ −minpos
+        (0x5555_5555_5555_5555 & mask, 0xaaaa_aaaa_aaaa_aaaa & mask),
+        (1u64 << (n - 2), maxpos),
+    ];
+    let mut x = 0x1234_5678_9abc_def0u64 ^ ((n as u64) << 17);
+    for _ in 0..random_pairs {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let a = x & mask;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        word_pairs.push((a, x & mask));
+    }
+    let assign = |w: u64| -> Vec<(&'static str, u64)> {
+        match dut {
+            DesignUnderTest::PositDec(_) => vec![("p", w)],
+            DesignUnderTest::FloatDec(_) => vec![("f", w)],
+            DesignUnderTest::PositEnc(s) => {
+                let (inp, _) = verify::golden_posit_enc_case(s, w)
+                    .unwrap_or_else(|| verify::golden_posit_enc_case(s, 1 << (s.n - 2)).unwrap());
+                vec![
+                    ("sign", inp.sign as u64),
+                    ("regime", inp.regime),
+                    ("exp", inp.exp),
+                    ("frac", inp.frac),
+                ]
+            }
+            DesignUnderTest::FloatEnc(s) => {
+                let g = verify::golden_float_dec(s, w);
+                vec![
+                    ("sign", g.sign as u64),
+                    ("exp", g.exp),
+                    ("sig", g.sig),
+                    ("is_nan", g.is_nan as u64),
+                    ("is_inf", g.is_inf as u64),
+                    ("is_zero", g.is_zero as u64),
+                ]
+            }
+        }
+    };
+    word_pairs.into_iter().map(|(a, b)| (assign(a), assign(b))).collect()
+}
+
+/// Width of the decoder/encoder regime-value port for a posit-family spec.
+pub fn regime_port_width(spec: &PositSpec) -> u32 {
+    // Two's-complement range [−rs, rs−1] → ⌈log2(rs)⌉+1 bits.
+    let rs = spec.rs;
+    (32 - (rs - 1).leading_zeros()) + 1
+}
+
+/// Maximum fraction width (fovea): the widest payload, at regime size 2.
+pub fn frac_port_width(spec: &PositSpec) -> u32 {
+    spec.n - 3 - spec.es
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{BP16, BP32, BP64, P16, P32, P64};
+
+    #[test]
+    fn port_widths() {
+        assert_eq!(regime_port_width(&BP32), 4); // r ∈ [-6,5]
+        assert_eq!(regime_port_width(&BP16), 4);
+        assert_eq!(regime_port_width(&BP64), 4);
+        assert_eq!(regime_port_width(&P16), 5); // r ∈ [-15,14]
+        assert_eq!(regime_port_width(&P32), 6);
+        assert_eq!(regime_port_width(&P64), 7);
+        assert_eq!(frac_port_width(&BP32), 24); // fovea fraction
+        assert_eq!(frac_port_width(&P32), 27);
+        assert_eq!(frac_port_width(&BP16), 8);
+    }
+}

@@ -1,0 +1,118 @@
+//! Standard posit decoder (paper Fig 10, after ref [6]).
+//!
+//! The reference design decodes the **magnitude**: a conditional two's
+//! complement of the whole body runs first (XOR row + (n−1)-bit ripple
+//! incrementer), then the regime may span nearly the whole word, so decode
+//! is **sequential**:
+//!
+//! 1. Conditional two's complement (sign-gated) of the n−1-bit body.
+//! 2. Leading-run detection: XOR with the regime MSB + leading-zero count
+//!    (divide & conquer, log depth — the "optimal circuits" of §1.3).
+//! 3. Left barrel shifter (log stages, each a full-width mux row) aligns
+//!    the exponent and fraction — it cannot start until the LZC finishes.
+//!
+//! The chain 2's-comp → LZC → shifter is exactly the serialization the
+//! b-posit decoder removes (it defers the complement to one XOR layer and
+//! replaces LZC+shift with a constant-depth one-hot mux).
+//!
+//! Output contract (magnitude domain — contrast designs/mod.rs):
+//! `regime`/`exp`/`frac` are the magnitude fields; `exp_cin` is constant 0.
+
+use crate::formats::PositSpec;
+use crate::hw::components::{
+    barrel_shift_left, cond_twos_complement, lzc_msb_first, nor_reduce, xor_broadcast,
+};
+use crate::hw::netlist::{Bus, NetId, Netlist};
+
+use super::{frac_port_width, regime_port_width};
+
+/// Build the standard posit decoder netlist for `spec` (rs = n−1).
+pub fn build(spec: &PositSpec) -> Netlist {
+    assert!(!spec.is_bounded(), "use bposit_dec::build for bounded regimes");
+    let n = spec.n as usize;
+    let es = spec.es as usize;
+    let fw = frac_port_width(spec) as usize;
+    let wr = regime_port_width(spec) as usize;
+
+    let mut nl = Netlist::new();
+    let p = nl.input_bus("p", n as u32);
+    let sign = p[n - 1];
+
+    let chck = nor_reduce(&mut nl, &p[..n - 1]);
+
+    // 1. Conditional two's complement of the body (the up-front cost the
+    //    b-posit design defers; ripple carry over n−1 bits).
+    let body_m = cond_twos_complement(&mut nl, sign, &p[..n - 1]);
+    let m = body_m[n - 2]; // magnitude regime MSB
+
+    // 2. Polarity-normalize and count the leading run.
+    let tail: Vec<NetId> = (0..n - 2).map(|i| body_m[n - 3 - i]).collect(); // MSB-first
+    let x = xor_broadcast(&mut nl, m, &tail);
+    let (k, _allz) = lzc_msb_first(&mut nl, &x);
+
+    // 3. Shift the magnitude body left by k (then drop two more bits
+    //    statically: regime MSB + terminator) to align exp‖frac.
+    let shifted = barrel_shift_left(&mut nl, &body_m, &k);
+    let mut e_raw: Bus = Vec::with_capacity(es);
+    for i in 0..es {
+        e_raw.push(shifted[n - 4 - i]);
+    }
+    e_raw.reverse();
+    let mut frac: Bus = Vec::with_capacity(fw);
+    for i in 0..fw {
+        frac.push(shifted[n - 4 - es - i]);
+    }
+    frac.reverse();
+
+    // Regime value (magnitude): r = m ? k : ~k — one XOR layer with ¬m.
+    let pol = nl.not(m);
+    let mut regime: Bus = k.iter().map(|&b| nl.xor2(b, pol)).collect();
+    while regime.len() < wr {
+        regime.push(pol);
+    }
+    regime.truncate(wr);
+
+    let zero = nl.zero();
+    nl.output_bus("sign", &[sign]);
+    nl.output_bus("regime", &regime);
+    nl.output_bus("exp", &e_raw);
+    nl.output_bus("exp_cin", &[zero]); // magnitude contract: no deferred carry
+    nl.output_bus("frac", &frac);
+    nl.output_bus("chck", &[chck]);
+    nl.buffer_high_fanout(12);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{P16, P32, P64};
+    use crate::hw::sta;
+
+    #[test]
+    fn depth_grows_with_n() {
+        let d16 = sta::logic_depth(&build(&P16));
+        let d64 = sta::logic_depth(&build(&P64));
+        assert!(d64 > d16, "posit decoder depth should grow: {d16} vs {d64}");
+    }
+
+    #[test]
+    fn costlier_than_bposit_at_same_width() {
+        use crate::formats::posit::BP32;
+        let posit = build(&P32);
+        let bposit = super::super::bposit_dec::build(&BP32);
+        assert!(posit.area() > bposit.area(), "posit {} ≤ bposit {}", posit.area(), bposit.area());
+        let dp = sta::analyze(&posit).critical_ns;
+        let db = sta::analyze(&bposit).critical_ns;
+        assert!(dp > db, "posit delay {dp} should exceed b-posit {db}");
+    }
+
+    #[test]
+    fn slower_than_float_decode_at_32() {
+        // Paper Table 5: posit32 decode is ~1.7× slower than float32 decode.
+        use crate::formats::ieee::F32;
+        let dp = sta::analyze(&build(&P32)).critical_ns;
+        let df = sta::analyze(&super::super::float_dec::build(&F32)).critical_ns;
+        assert!(dp > df, "posit32 {dp} should be slower than float32 {df}");
+    }
+}

@@ -1,0 +1,104 @@
+//! Standard posit encoder (paper Fig 11, after ref [6]).
+//!
+//! Magnitude-domain packing followed by a full-width conditional two's
+//! complement — the mirror image of the reference decoder:
+//!
+//! 1. Run length `a` = |r|+(r≥0) via an XOR row and an incrementer (the
+//!    "binary adder" of [6]).
+//! 2. A binary decoder + log-depth suffix-OR tree builds the thermometer
+//!    mask of the top `a` bits; a full-width right barrel shifter places
+//!    [terminator ‖ exponent ‖ fraction] below the run; a mux row merges
+//!    run and tail.
+//! 3. Conditional two's complement of the assembled n-bit word (XOR row +
+//!    ripple incrementer) applies the sign.
+//!
+//! Inputs are magnitude-domain fields: sign, regime r (wr bits, two's
+//! complement), exponent (eS bits), fraction (fovea width, magnitude form).
+
+use crate::formats::PositSpec;
+use crate::hw::components::{
+    barrel_shift_right, binary_decoder, cond_twos_complement, incrementer, suffix_or_tree,
+    xor_broadcast,
+};
+use crate::hw::netlist::{Bus, NetId, Netlist};
+
+use super::{frac_port_width, regime_port_width};
+
+/// Build the standard posit encoder netlist for `spec` (rs = n−1).
+pub fn build(spec: &PositSpec) -> Netlist {
+    assert!(!spec.is_bounded());
+    let n = spec.n as usize;
+    let es = spec.es as usize;
+    let fw = frac_port_width(spec) as usize;
+    let wr = regime_port_width(spec) as usize;
+
+    let mut nl = Netlist::new();
+    let sign = nl.input_bus("sign", 1)[0];
+    let r_in = nl.input_bus("regime", wr as u32); // magnitude regime value
+    let e_in = nl.input_bus("exp", es as u32); // magnitude exponent
+    let frac = nl.input_bus("frac", fw as u32); // magnitude fraction
+
+    // 1. Run length a = r ≥ 0 ? r+1 : −r  = (r XOR msb) + 1.
+    let msb = r_in[wr - 1];
+    let one = nl.one();
+    let rx = xor_broadcast(&mut nl, msb, &r_in);
+    let (a, _) = incrementer(&mut nl, &rx, one);
+    let pol = nl.not(msb); // run of 1s for non-negative regimes
+
+    // 2a. Thermometer mask of the top `a` body bits (decoder + suffix-OR
+    //     tree, log depth).
+    let oh = binary_decoder(&mut nl, &a, n);
+    let ge = suffix_or_tree(&mut nl, &oh); // ge[v] = (a ≥ v)
+    let thermo: Vec<NetId> = (0..n - 1).map(|i| ge[n - 1 - i]).collect();
+
+    // 2b. Tail template [¬pol ‖ exp ‖ frac ‖ 0…] left-aligned in n−1 bits,
+    //     shifted right by a.
+    let npol = nl.not(pol);
+    let mut tail_msb_first: Vec<NetId> = Vec::with_capacity(n - 1);
+    tail_msb_first.push(npol);
+    tail_msb_first.extend(e_in.iter().rev());
+    for i in 0..fw {
+        tail_msb_first.push(frac[fw - 1 - i]);
+    }
+    let zero = nl.zero();
+    while tail_msb_first.len() < n - 1 {
+        tail_msb_first.push(zero);
+    }
+    let tail: Bus = tail_msb_first.into_iter().rev().collect(); // to LE
+    let shifted = barrel_shift_right(&mut nl, &tail, &a);
+
+    // 2c. Merge: run bits where thermo, shifted tail elsewhere.
+    let body: Bus = (0..n - 1).map(|i| nl.mux2(thermo[i], shifted[i], pol)).collect();
+
+    // 3. Apply the sign: conditional two's complement of the full word.
+    let mut full: Bus = body;
+    full.push(zero); // sign slot; 2^n − body sets it for negatives
+    let word = cond_twos_complement(&mut nl, sign, &full);
+
+    nl.output_bus("p", &word);
+    nl.buffer_high_fanout(12);
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{P16, P32, P64};
+    use crate::hw::sta;
+
+    #[test]
+    fn depth_grows_with_n() {
+        let d16 = sta::logic_depth(&build(&P16));
+        let d64 = sta::logic_depth(&build(&P64));
+        assert!(d64 > d16, "posit encoder depth must grow: {d16} vs {d64}");
+    }
+
+    #[test]
+    fn costlier_than_bposit_encoder_at_32() {
+        use crate::formats::posit::BP32;
+        let p = build(&P32);
+        let b = super::super::bposit_enc::build(&BP32);
+        assert!(p.area() > b.area());
+        assert!(sta::analyze(&p).critical_ns > sta::analyze(&b).critical_ns);
+    }
+}

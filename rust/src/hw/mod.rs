@@ -1,0 +1,13 @@
+//! Gate-level hardware substrate: standard-cell library, structural
+//! netlists, logic/timing simulation, static timing analysis, switching
+//! power estimation, and the six decoder/encoder circuit designs the paper
+//! evaluates (Figs 8–13).
+
+pub mod cell;
+pub mod netlist;
+pub mod sim;
+pub mod sta;
+pub mod power;
+pub mod components;
+pub mod report;
+pub mod designs;

@@ -1,0 +1,335 @@
+//! Structural netlist builder.
+//!
+//! A [`Netlist`] is a DAG of cells over single-bit nets, built bottom-up so
+//! that gate insertion order is already a topological order (every gate's
+//! inputs exist before the gate). Buses are plain `Vec<NetId>` with LSB at
+//! index 0.
+
+use super::cell::CellKind;
+
+/// Index of a single-bit net.
+pub type NetId = u32;
+
+/// A bus is a little-endian vector of nets (bit i at index i).
+pub type Bus = Vec<NetId>;
+
+/// One instantiated cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Gate {
+    pub kind: CellKind,
+    /// Input nets; only the first `kind.arity()` entries are valid.
+    pub ins: [NetId; 3],
+    pub out: NetId,
+}
+
+/// A combinational netlist with named input/output buses.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub gates: Vec<Gate>,
+    n_nets: u32,
+    /// Primary inputs (flattened, in declaration order).
+    pub inputs: Vec<NetId>,
+    pub input_buses: Vec<(String, Bus)>,
+    pub output_buses: Vec<(String, Bus)>,
+    const0: Option<NetId>,
+    const1: Option<NetId>,
+}
+
+impl Netlist {
+    pub fn new() -> Netlist {
+        Netlist::default()
+    }
+
+    fn fresh(&mut self) -> NetId {
+        let id = self.n_nets;
+        self.n_nets += 1;
+        id
+    }
+
+    pub fn n_nets(&self) -> u32 {
+        self.n_nets
+    }
+
+    /// Declare a primary input bus of `width` bits (LSB first).
+    pub fn input_bus(&mut self, name: &str, width: u32) -> Bus {
+        let bus: Bus = (0..width).map(|_| self.fresh()).collect();
+        self.inputs.extend(&bus);
+        self.input_buses.push((name.to_string(), bus.clone()));
+        bus
+    }
+
+    /// Declare a named output bus.
+    pub fn output_bus(&mut self, name: &str, bus: &[NetId]) {
+        self.output_buses.push((name.to_string(), bus.to_vec()));
+    }
+
+    /// Find a named output bus.
+    pub fn output(&self, name: &str) -> &Bus {
+        &self.output_buses.iter().find(|(n, _)| n == name).unwrap_or_else(|| panic!("no output bus {name}")).1
+    }
+
+    /// Find a named input bus.
+    pub fn input(&self, name: &str) -> &Bus {
+        &self.input_buses.iter().find(|(n, _)| n == name).unwrap_or_else(|| panic!("no input bus {name}")).1
+    }
+
+    /// Constant-0 net (shared).
+    pub fn zero(&mut self) -> NetId {
+        if let Some(z) = self.const0 {
+            return z;
+        }
+        let z = self.fresh();
+        self.gates.push(Gate { kind: CellKind::Const0, ins: [0; 3], out: z });
+        self.const0 = Some(z);
+        z
+    }
+
+    /// Constant-1 net (shared).
+    pub fn one(&mut self) -> NetId {
+        if let Some(o) = self.const1 {
+            return o;
+        }
+        let o = self.fresh();
+        self.gates.push(Gate { kind: CellKind::Const1, ins: [0; 3], out: o });
+        self.const1 = Some(o);
+        o
+    }
+
+    fn push(&mut self, kind: CellKind, ins: [NetId; 3]) -> NetId {
+        let out = self.fresh();
+        self.gates.push(Gate { kind, ins, out });
+        out
+    }
+
+    pub fn buf(&mut self, a: NetId) -> NetId {
+        self.push(CellKind::Buf, [a, 0, 0])
+    }
+
+    pub fn not(&mut self, a: NetId) -> NetId {
+        self.push(CellKind::Inv, [a, 0, 0])
+    }
+
+    pub fn and2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::And2, [a, b, 0])
+    }
+
+    pub fn or2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::Or2, [a, b, 0])
+    }
+
+    pub fn nand2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::Nand2, [a, b, 0])
+    }
+
+    pub fn nor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::Nor2, [a, b, 0])
+    }
+
+    pub fn xor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::Xor2, [a, b, 0])
+    }
+
+    pub fn xnor2(&mut self, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::Xnor2, [a, b, 0])
+    }
+
+    /// out = s ? b : a.
+    pub fn mux2(&mut self, s: NetId, a: NetId, b: NetId) -> NetId {
+        self.push(CellKind::Mux2, [s, a, b])
+    }
+
+    /// out = !((a & b) | c).
+    pub fn aoi21(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.push(CellKind::Aoi21, [a, b, c])
+    }
+
+    /// out = !((a | b) & c).
+    pub fn oai21(&mut self, a: NetId, b: NetId, c: NetId) -> NetId {
+        self.push(CellKind::Oai21, [a, b, c])
+    }
+
+    // ------------------------------------------------------------------
+    // Analysis helpers
+    // ------------------------------------------------------------------
+
+    /// Total cell area in µm².
+    pub fn area(&self) -> f64 {
+        self.gates.iter().map(|g| g.kind.params().area).sum()
+    }
+
+    /// Number of logic cells (constants excluded).
+    pub fn gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| !matches!(g.kind, CellKind::Const0 | CellKind::Const1))
+            .count()
+    }
+
+    /// Fanout count per net (used by STA's load-dependent delay).
+    pub fn fanouts(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.n_nets as usize];
+        for g in &self.gates {
+            for i in 0..g.kind.arity() {
+                fo[g.ins[i] as usize] += 1;
+            }
+        }
+        // Primary outputs also load their drivers.
+        for (_, bus) in &self.output_buses {
+            for &n in bus {
+                fo[n as usize] += 1;
+            }
+        }
+        fo
+    }
+
+    /// Insert buffer trees on nets whose fanout exceeds `max_fanout`
+    /// (a simple post-pass mirroring what synthesis does; keeps the STA's
+    /// linear load model honest on high-fanout select/broadcast nets).
+    pub fn buffer_high_fanout(&mut self, max_fanout: u32) {
+        loop {
+            let fo = self.fanouts();
+            // Find worst offender that is not already a buffer chain root.
+            let mut worst: Option<(NetId, u32)> = None;
+            for (net, &f) in fo.iter().enumerate() {
+                if f > max_fanout {
+                    match worst {
+                        Some((_, wf)) if wf >= f => {}
+                        _ => worst = Some((net as NetId, f)),
+                    }
+                }
+            }
+            let Some((net, f)) = worst else { break };
+            // Split the sinks of `net` between it and `ceil(f/max)−1` new
+            // buffers.
+            let n_bufs = (f + max_fanout - 1) / max_fanout - 1;
+            if n_bufs == 0 {
+                break;
+            }
+            let bufs: Vec<NetId> = (0..n_bufs).map(|_| self.buf(net)).collect();
+            // Reassign sinks round-robin (skip the buffers we just added,
+            // which are the last `n_bufs` gates).
+            let skip_from = self.gates.len() - n_bufs as usize;
+            let mut assigned = 0u32;
+            let total = f;
+            let per = (total + n_bufs) / (n_bufs + 1);
+            for (gi, g) in self.gates.iter_mut().enumerate() {
+                if gi >= skip_from {
+                    continue;
+                }
+                for i in 0..g.kind.arity() {
+                    if g.ins[i] == net {
+                        let slot = assigned / per;
+                        if slot > 0 && (slot as usize) <= bufs.len() {
+                            g.ins[i] = bufs[slot as usize - 1];
+                        }
+                        assigned += 1;
+                    }
+                }
+            }
+            // Buffers were appended after their driver exists → topological
+            // order is preserved, EXCEPT sinks that appear before the buffer
+            // in gate order now read a later net. Re-topologize.
+            self.topo_sort();
+        }
+    }
+
+    /// Re-establish topological gate order (Kahn) after structural edits.
+    pub fn topo_sort(&mut self) {
+        let n = self.n_nets as usize;
+        let mut driver: Vec<Option<usize>> = vec![None; n];
+        for (gi, g) in self.gates.iter().enumerate() {
+            driver[g.out as usize] = Some(gi);
+        }
+        let mut visited = vec![false; self.gates.len()];
+        let mut order: Vec<usize> = Vec::with_capacity(self.gates.len());
+        // Iterative DFS from every gate.
+        let mut stack: Vec<(usize, usize)> = Vec::new();
+        for root in 0..self.gates.len() {
+            if visited[root] {
+                continue;
+            }
+            stack.push((root, 0));
+            visited[root] = true;
+            while let Some((gi, pin)) = stack.pop() {
+                let g = self.gates[gi];
+                if pin < g.kind.arity() {
+                    stack.push((gi, pin + 1));
+                    if let Some(dep) = driver[g.ins[pin] as usize] {
+                        if !visited[dep] {
+                            visited[dep] = true;
+                            stack.push((dep, 0));
+                        }
+                    }
+                } else {
+                    order.push(gi);
+                }
+            }
+        }
+        let mut new_gates = Vec::with_capacity(self.gates.len());
+        for gi in order {
+            new_gates.push(self.gates[gi]);
+        }
+        self.gates = new_gates;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_count() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 4);
+        let b = nl.input_bus("b", 4);
+        let outs: Vec<NetId> = a.iter().zip(&b).map(|(&x, &y)| nl.xor2(x, y)).collect();
+        nl.output_bus("y", &outs);
+        assert_eq!(nl.gate_count(), 4);
+        assert!(nl.area() > 6.0);
+        assert_eq!(nl.inputs.len(), 8);
+        assert_eq!(nl.output("y").len(), 4);
+    }
+
+    #[test]
+    fn constants_shared() {
+        let mut nl = Netlist::new();
+        let z1 = nl.zero();
+        let z2 = nl.zero();
+        let o1 = nl.one();
+        assert_eq!(z1, z2);
+        assert_ne!(z1, o1);
+        assert_eq!(nl.gate_count(), 0); // constants don't count
+    }
+
+    #[test]
+    fn fanout_counting() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 1)[0];
+        let x = nl.not(a);
+        let _ = nl.and2(x, a);
+        let _ = nl.or2(x, a);
+        nl.output_bus("o", &[x]);
+        let fo = nl.fanouts();
+        assert_eq!(fo[x as usize], 3); // two sinks + primary output
+        assert_eq!(fo[a as usize], 3);
+    }
+
+    #[test]
+    fn buffering_reduces_max_fanout() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 1)[0];
+        let sinks: Vec<NetId> = (0..40).map(|_| nl.not(a)).collect();
+        nl.output_bus("o", &sinks);
+        nl.buffer_high_fanout(8);
+        let fo = nl.fanouts();
+        let max = fo.iter().max().copied().unwrap();
+        assert!(max <= 9, "max fanout {max} after buffering");
+        // Function preserved: all outputs still invert `a`.
+        let sim = crate::hw::sim::eval(&nl, &[("a", 1)]);
+        for (name, bits) in sim {
+            if name == "o" {
+                assert_eq!(bits, 0, "inverters must output 0 for input 1");
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Static timing analysis: worst-case arrival times over the levelized
+//! netlist with a linear load model (intrinsic delay + slope × fanout).
+
+use super::netlist::Netlist;
+
+/// Timing report for one netlist.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Critical-path delay in ns.
+    pub critical_ns: f64,
+    /// Arrival time per net (ns).
+    pub arrival: Vec<f64>,
+    /// Gate indices along the critical path, input-side first.
+    pub critical_path: Vec<usize>,
+}
+
+/// Compute worst-case arrival times. Primary inputs arrive at t=0.
+pub fn analyze(nl: &Netlist) -> TimingReport {
+    let n = nl.n_nets() as usize;
+    let fanouts = nl.fanouts();
+    let mut arrival = vec![0.0f64; n];
+    let mut from_gate: Vec<Option<usize>> = vec![None; n];
+    for (gi, g) in nl.gates.iter().enumerate() {
+        let a = g.kind.arity();
+        let mut worst = 0.0f64;
+        for i in 0..a {
+            worst = worst.max(arrival[g.ins[i] as usize]);
+        }
+        let p = g.kind.params();
+        let d = p.delay + p.load_slope * fanouts[g.out as usize] as f64;
+        arrival[g.out as usize] = worst + d;
+        from_gate[g.out as usize] = Some(gi);
+    }
+    // Critical endpoint: the worst arrival among declared outputs (fall back
+    // to any net if no outputs are declared).
+    let mut end_net: Option<u32> = None;
+    let mut worst = -1.0;
+    for (_, bus) in &nl.output_buses {
+        for &net in bus {
+            if arrival[net as usize] > worst {
+                worst = arrival[net as usize];
+                end_net = Some(net);
+            }
+        }
+    }
+    if end_net.is_none() {
+        for net in 0..n {
+            if arrival[net] > worst {
+                worst = arrival[net];
+                end_net = Some(net as u32);
+            }
+        }
+    }
+    // Trace back the critical path.
+    let mut path = Vec::new();
+    let mut cur = end_net;
+    while let Some(net) = cur {
+        let Some(gi) = from_gate[net as usize] else { break };
+        path.push(gi);
+        let g = &nl.gates[gi];
+        let a = g.kind.arity();
+        let mut best: Option<u32> = None;
+        let mut best_t = -1.0;
+        for i in 0..a {
+            let t = arrival[g.ins[i] as usize];
+            if t > best_t {
+                best_t = t;
+                best = Some(g.ins[i]);
+            }
+        }
+        cur = if best_t > 0.0 { best } else { None };
+    }
+    path.reverse();
+    TimingReport { critical_ns: worst.max(0.0), arrival, critical_path: path }
+}
+
+/// Logic depth (gate count) along the critical path.
+pub fn logic_depth(nl: &Netlist) -> usize {
+    analyze(nl).critical_path.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::netlist::Netlist;
+
+    #[test]
+    fn chain_delay_adds_up() {
+        let mut nl = Netlist::new();
+        let a = nl.input_bus("a", 1)[0];
+        let mut x = a;
+        for _ in 0..10 {
+            x = nl.not(x);
+        }
+        nl.output_bus("y", &[x]);
+        let rep = analyze(&nl);
+        // 10 inverters; each ~0.010 + slope·1 ≈ 0.0136 ns
+        assert!(rep.critical_ns > 0.10 && rep.critical_ns < 0.20, "got {}", rep.critical_ns);
+        assert_eq!(rep.critical_path.len(), 10);
+    }
+
+    #[test]
+    fn parallel_beats_serial() {
+        // OR-reduction: a balanced tree must be faster than a linear chain.
+        let build = |balanced: bool| {
+            let mut nl = Netlist::new();
+            let a = nl.input_bus("a", 32);
+            let out = if balanced {
+                let mut level = a.clone();
+                while level.len() > 1 {
+                    let mut next = Vec::new();
+                    for pair in level.chunks(2) {
+                        next.push(if pair.len() == 2 { nl.or2(pair[0], pair[1]) } else { pair[0] });
+                    }
+                    level = next;
+                }
+                level[0]
+            } else {
+                let mut acc = a[0];
+                for &x in &a[1..] {
+                    acc = nl.or2(acc, x);
+                }
+                acc
+            };
+            nl.output_bus("y", &[out]);
+            analyze(&nl).critical_ns
+        };
+        let tree = build(true);
+        let chain = build(false);
+        assert!(tree < chain / 3.0, "tree {tree} vs chain {chain}");
+    }
+
+    #[test]
+    fn fanout_increases_delay() {
+        let mk = |fan: usize| {
+            let mut nl = Netlist::new();
+            let a = nl.input_bus("a", 1)[0];
+            let x = nl.not(a);
+            let sinks: Vec<_> = (0..fan).map(|_| nl.not(x)).collect();
+            nl.output_bus("y", &sinks);
+            analyze(&nl).critical_ns
+        };
+        assert!(mk(16) > mk(1));
+    }
+}

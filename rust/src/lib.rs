@@ -1,0 +1,28 @@
+//! # positron
+//!
+//! Reproduction of *"Closing the Gap Between Float and Posit Hardware
+//! Efficiency"* (Jonnalagadda, Thotli, Gustafson): the **b-posit** bounded-
+//! regime posit format, its decode/encode hardware, and a three-layer
+//! Rust + JAX + Pallas stack that serves b-posit-quantized models.
+//!
+//! Layer map (see DESIGN.md):
+//! - [`formats`] — the numeric-format zoo: IEEE floats, standard posits,
+//!   b-posits, takums, the 800-bit quire, and exact shared arithmetic.
+//! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
+//!   power) and the six decoder/encoder circuits of Figs 8–13.
+//! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis
+//!   (Figs 6/7).
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts.
+//! - [`coordinator`] — the L3 serving loop: batching, quantization, metrics.
+//! - [`harness`] — self-contained benchmark harness (criterion-style).
+//! - [`testutil`] — PRNG + property-testing utilities used across tests.
+
+pub mod formats;
+pub mod hw;
+pub mod accuracy;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+pub mod testutil;
+pub mod cli;
+pub mod json;

@@ -1,0 +1,92 @@
+//! `positron` — leader binary: CLI over the codec zoo, the gate-level PPA
+//! tables, the accuracy analysis, and the batching inference demo.
+
+use positron::cli::{self, Command};
+use positron::coordinator::{InferenceServer, ServerConfig};
+use positron::runtime::{artifacts_available, ModelWeights, Runtime};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = match cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", cli::HELP);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(cmd) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: Command) -> anyhow::Result<()> {
+    match cmd {
+        Command::Help => println!("{}", cli::HELP),
+        Command::Info => {
+            println!("positron — b-posit ⟨n,6,5⟩ reproduction");
+            println!("formats: p8 p16 p32 p64 bp16 bp32 bp64 bp16e3 f16 bf16 f32 f64 t16 t32 t64");
+            let dir = positron::runtime::default_artifact_dir();
+            println!(
+                "artifacts: {} ({})",
+                dir.display(),
+                if artifacts_available(&dir) { "present" } else { "missing — run `make artifacts`" }
+            );
+        }
+        Command::Codec { fmt, values } => {
+            for line in cli::run_codec(&fmt, &values).map_err(anyhow::Error::msg)? {
+                println!("{line}");
+            }
+        }
+        Command::Accuracy { csv_dir } => {
+            for line in cli::run_accuracy(csv_dir.as_deref()).map_err(anyhow::Error::msg)? {
+                println!("{line}");
+            }
+        }
+        Command::Tables => {
+            for table in cli::run_tables() {
+                println!("{table}");
+            }
+        }
+        Command::Serve { requests, artifact_dir } => {
+            let rt = Runtime::cpu(&artifact_dir)?;
+            println!("platform: {}", rt.platform());
+            let weights = ModelWeights::load(&rt)?;
+            drop(rt); // the server worker owns its own PJRT client
+            let server = InferenceServer::start(artifact_dir.clone().into(), ServerConfig::default())?;
+            let d = weights.d;
+            let n_gold = weights.golden_y.len();
+            let t0 = std::time::Instant::now();
+            let mut correct = 0usize;
+            for i in 0..requests {
+                let g = i % n_gold;
+                let feats = weights.golden_x[g * d..(g + 1) * d].to_vec();
+                let resp = server.infer(feats)?;
+                let argmax = resp
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if argmax == weights.golden_y[g] as usize {
+                    correct += 1;
+                }
+            }
+            let wall = t0.elapsed();
+            let m = server.metrics().snapshot();
+            println!(
+                "served {requests} requests in {:.2}s ({:.0} req/s), accuracy {:.1}%",
+                wall.as_secs_f64(),
+                requests as f64 / wall.as_secs_f64(),
+                100.0 * correct as f64 / requests as f64
+            );
+            println!(
+                "latency p50 {} µs  p99 {} µs  max {} µs; {} batches, mean batch {:.1}, {} rejected",
+                m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch, m.rejected
+            );
+        }
+    }
+    Ok(())
+}

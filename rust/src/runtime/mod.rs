@@ -1,0 +1,195 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs on this path — the artifacts are self-contained.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Json;
+
+/// A PJRT client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+/// One compiled executable (a single HLO module).
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at an artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load and compile an HLO-text artifact (e.g. `model_bposit.hlo.txt`).
+    pub fn load(&self, file: &str) -> Result<LoadedModel> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+        Ok(LoadedModel { exe, name: file.to_string() })
+    }
+
+    /// Read + parse a JSON artifact.
+    pub fn json(&self, file: &str) -> Result<Json> {
+        let path = self.dir.join(file);
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        Json::parse(&text).map_err(|e| anyhow!("parse {file}: {e}"))
+    }
+}
+
+impl LoadedModel {
+    /// Execute with the given literals; unwraps the 1-tuple result
+    /// (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Execute and read the output back as a f32 vector.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let out = self.run(inputs)?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    /// Execute and read the output back as an i32 vector.
+    pub fn run_i32(&self, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
+        let out = self.run(inputs)?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+    }
+}
+
+/// Build a rank-1 f32 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build a rank-2 f32 literal.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), rows * cols);
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build a rank-1 i32 literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Build a rank-2 i32 literal.
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(v.len(), rows * cols);
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// The trained model weights + golden vectors exported by aot.py.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+    pub batch: usize,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub w1_bits: Vec<i32>,
+    pub w2_bits: Vec<i32>,
+    pub golden_x: Vec<f32>,
+    pub golden_y: Vec<i32>,
+    pub golden_logits_f32: Vec<f32>,
+    pub golden_logits_bposit: Vec<f32>,
+}
+
+impl ModelWeights {
+    pub fn load(rt: &Runtime) -> Result<ModelWeights> {
+        let j = rt.json("weights.json")?;
+        let f = |k: &str| -> Result<Vec<f32>> {
+            j.get(k).and_then(|v| v.as_f32_vec()).ok_or_else(|| anyhow!("weights.json missing {k}"))
+        };
+        let i = |k: &str| -> Result<Vec<i32>> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_i64_vec())
+                .ok_or_else(|| anyhow!("weights.json missing {k}"))?
+                .into_iter()
+                .map(|x| x as i32)
+                .collect())
+        };
+        let dim = |k: &str| -> Result<usize> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("missing {k}"))
+        };
+        Ok(ModelWeights {
+            d: dim("d")?,
+            h: dim("h")?,
+            c: dim("c")?,
+            batch: dim("batch")?,
+            w1: f("w1")?,
+            b1: f("b1")?,
+            w2: f("w2")?,
+            b2: f("b2")?,
+            w1_bits: i("w1_bits")?,
+            w2_bits: i("w2_bits")?,
+            golden_x: f("golden_x")?,
+            golden_y: i("golden_y")?,
+            golden_logits_f32: f("golden_logits_f32")?,
+            golden_logits_bposit: f("golden_logits_bposit")?,
+        })
+    }
+
+    /// Literals for the quantized model in aot.py's argument order
+    /// (w1_bits, b1, w2_bits, b2) — prepend the batch literal to call.
+    pub fn bposit_arg_literals(&self) -> Result<Vec<xla::Literal>> {
+        Ok(vec![
+            lit_i32_2d(&self.w1_bits, self.d, self.h)?,
+            lit_f32(&self.b1),
+            lit_i32_2d(&self.w2_bits, self.h, self.c)?,
+            lit_f32(&self.b2),
+        ])
+    }
+
+    /// Literals for the f32 model (w1, b1, w2, b2).
+    pub fn f32_arg_literals(&self) -> Result<Vec<xla::Literal>> {
+        Ok(vec![
+            lit_f32_2d(&self.w1, self.d, self.h)?,
+            lit_f32(&self.b1),
+            lit_f32_2d(&self.w2, self.h, self.c)?,
+            lit_f32(&self.b2),
+        ])
+    }
+}
+
+/// Locate the artifact directory: $POSITRON_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("POSITRON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if the AOT artifacts exist (tests skip gracefully otherwise).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("model_bposit.hlo.txt").exists() && dir.join("weights.json").exists()
+}

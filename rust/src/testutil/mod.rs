@@ -1,0 +1,103 @@
+//! Test utilities: a deterministic PRNG (SplitMix64/xoshiro-class) and a
+//! tiny property-testing runner (the vendored set has no proptest).
+
+/// SplitMix64 — deterministic, seedable, good-enough mixing for tests.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.wrapping_add(0x9e3779b97f4a7c15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// A "nasty" f64: mixes uniform bit patterns (hitting all scales),
+    /// small integers, and special-ish values.
+    pub fn nasty_f64(&mut self) -> f64 {
+        match self.below(10) {
+            0..=5 => f64::from_bits(self.next_u64()),
+            6 => (self.below(2001) as f64 - 1000.0) / 8.0,
+            7 => self.f64() * 2.0 - 1.0,
+            8 => f64::powi(2.0, self.below(600) as i32 - 300) * (1.0 + self.f64()),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Run a property `prop` over `n` PRNG-driven cases; panics with the seed
+/// on failure so the case can be replayed.
+pub fn forall(name: &str, n: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..n {
+        let seed = 0xfeed_0000u64 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_spreads() {
+        let mut r = Rng::new(1);
+        let mut buckets = [0u32; 16];
+        for _ in 0..16000 {
+            buckets[(r.next_u64() & 15) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!(b > 700 && b < 1300, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn forall_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always-fails", 1, |_| Err("nope".into()));
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn f64_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+}

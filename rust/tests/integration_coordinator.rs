@@ -1,0 +1,115 @@
+//! Coordinator integration: the batching server against the real compiled
+//! model — correctness, batching behavior, concurrency, backpressure.
+//! Skips when artifacts haven't been built.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use positron::coordinator::{InferenceServer, ServerConfig};
+use positron::runtime::{artifacts_available, default_artifact_dir, ModelWeights, Runtime};
+
+fn weights() -> Option<ModelWeights> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu(&dir).unwrap();
+    Some(ModelWeights::load(&rt).unwrap())
+}
+
+fn start(cfg: ServerConfig) -> InferenceServer {
+    InferenceServer::start(default_artifact_dir(), cfg).expect("server start")
+}
+
+#[test]
+fn serves_golden_batch_correctly() {
+    let Some(w) = weights() else { return };
+    let server = start(ServerConfig::default());
+    let mut correct = 0;
+    for g in 0..w.golden_y.len() {
+        let feats = w.golden_x[g * w.d..(g + 1) * w.d].to_vec();
+        let resp = server.infer(feats).unwrap();
+        assert_eq!(resp.logits.len(), w.c);
+        let argmax = resp.logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if argmax == w.golden_y[g] as usize {
+            correct += 1;
+        }
+    }
+    // Trained model classifies its own golden batch perfectly.
+    assert_eq!(correct, w.golden_y.len());
+}
+
+#[test]
+fn rejects_wrong_feature_count() {
+    let Some(_) = weights() else { return };
+    let server = start(ServerConfig::default());
+    assert!(server.infer(vec![1.0; 3]).is_err());
+}
+
+#[test]
+fn batching_coalesces_concurrent_clients() {
+    let Some(w) = weights() else { return };
+    let server = Arc::new(start(ServerConfig {
+        max_wait: Duration::from_millis(20),
+        ..Default::default()
+    }));
+    let mut handles = Vec::new();
+    for t in 0..16 {
+        let srv = server.clone();
+        let feats = w.golden_x[(t % 4) * w.d..((t % 4) + 1) * w.d].to_vec();
+        handles.push(std::thread::spawn(move || srv.infer(feats).unwrap()));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests, 16);
+    // With a 20 ms window, 16 concurrent requests should share batches.
+    assert!(m.mean_batch > 1.5, "batching ineffective: mean {}", m.mean_batch);
+    assert!(m.batches < 16);
+}
+
+#[test]
+fn async_submission_and_metrics() {
+    let Some(w) = weights() else { return };
+    let server = start(ServerConfig::default());
+    let mut waiters = Vec::new();
+    for g in 0..8 {
+        let feats = w.golden_x[g * w.d..(g + 1) * w.d].to_vec();
+        waiters.push(server.infer_async(feats).unwrap());
+    }
+    for wtr in waiters {
+        let resp = wtr.recv().unwrap();
+        assert_eq!(resp.logits.len(), w.c);
+        assert!(resp.latency < Duration::from_secs(5));
+    }
+    let m = server.metrics().snapshot();
+    assert_eq!(m.requests, 8);
+    assert!(m.p99_us > 0);
+}
+
+#[test]
+fn quantize_inputs_toggle_changes_nothing_for_fovea_inputs() {
+    // Golden features are small reals: bp32 roundtrip is exact, so both
+    // configurations must return identical logits.
+    let Some(w) = weights() else { return };
+    let a = start(ServerConfig { quantize_inputs: true, ..Default::default() });
+    let b = start(ServerConfig { quantize_inputs: false, ..Default::default() });
+    let feats = w.golden_x[..w.d].to_vec();
+    let ra = a.infer(feats.clone()).unwrap();
+    let rb = b.infer(feats).unwrap();
+    assert_eq!(ra.logits, rb.logits);
+}
+
+#[test]
+fn f32_model_variant_servable() {
+    let Some(w) = weights() else { return };
+    let server = start(ServerConfig { model_file: "model_f32.hlo.txt".into(), ..Default::default() });
+    let feats = w.golden_x[..w.d].to_vec();
+    let resp = server.infer(feats).unwrap();
+    // Must match the recorded f32 golden logits for row 0.
+    for (got, want) in resp.logits.iter().zip(&w.golden_logits_f32[..w.c]) {
+        assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+    }
+}

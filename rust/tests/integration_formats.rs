@@ -1,0 +1,158 @@
+//! Cross-module integration tests over the formats layer: codec ↔
+//! arithmetic ↔ quire ↔ conversion workflows.
+
+use positron::formats::posit::{BP16, BP32, BP64, P16, P32};
+use positron::formats::{
+    convert, ieee, math, op_add, op_fma, op_mul, takum, Codec, Decoded, Quire,
+};
+
+#[test]
+fn p16_addition_table_sampled_against_f64() {
+    // posit16 values and sums are exactly representable in f64; encoding
+    // the f64 sum must equal the posit-exact sum.
+    for a in (0..=u16::MAX as u64).step_by(197) {
+        if a == P16.nar() {
+            continue;
+        }
+        for b in (0..=u16::MAX as u64).step_by(251) {
+            if b == P16.nar() {
+                continue;
+            }
+            let expect = P16.from_f64(P16.to_f64(a) + P16.to_f64(b));
+            assert_eq!(op_add(&P16, a, b), expect, "{a:#x} + {b:#x}");
+        }
+    }
+}
+
+#[test]
+fn p16_multiplication_sampled_against_f64() {
+    for a in (0..=u16::MAX as u64).step_by(211) {
+        if a == P16.nar() {
+            continue;
+        }
+        for b in (0..=u16::MAX as u64).step_by(263) {
+            if b == P16.nar() {
+                continue;
+            }
+            let expect = P16.from_f64(P16.to_f64(a) * P16.to_f64(b));
+            assert_eq!(op_mul(&P16, a, b), expect, "{a:#x} × {b:#x}");
+        }
+    }
+}
+
+#[test]
+fn quire_dot_product_matches_exact_rational() {
+    // A dot product engineered so naive bp32 loses bits but the quire is
+    // exact (compare against f64 Kahan-style exact small case).
+    let xs = [3.0f64, 1e-8, -3.0, 7.5, 2.0_f64.powi(40)];
+    let ys = [2.0f64, 1e8, 2.0, 4.0, 2.0_f64.powi(-40)];
+    // exact: 6 + 1 - 6 + 30 + 1 = 32
+    let mut q = Quire::exact_for(&BP32);
+    for (x, y) in xs.iter().zip(&ys) {
+        q.add_product(&Decoded::from_f64(*x), &Decoded::from_f64(*y));
+    }
+    assert_eq!(q.to_decoded().to_f64(), 32.0);
+    assert_eq!(BP32.to_f64(q.to_posit(&BP32)), 32.0);
+}
+
+#[test]
+fn quire_800_vs_exact_agree_for_in_range_products() {
+    let vals = [1.5, -2.25, 1024.0, 3.0e-5, -7.0];
+    let mut q800 = Quire::paper_800(&BP32);
+    let mut qex = Quire::exact_for(&BP32);
+    for w in vals.windows(2) {
+        let (a, b) = (Decoded::from_f64(w[0]), Decoded::from_f64(w[1]));
+        q800.add_product(&a, &b);
+        qex.add_product(&a, &b);
+    }
+    assert_eq!(q800.to_posit(&BP32), qex.to_posit(&BP32));
+}
+
+#[test]
+fn fma_respects_posit_single_rounding() {
+    // fma(a,b,c) in posit space == encode(exact(a·b+c)).
+    for (a, b, c) in [(1.5, 1.25, -1.875), (3.0, 7.0, 1e-5), (0.1, 0.2, 0.3)] {
+        let (pa, pb, pc) = (BP32.from_f64(a), BP32.from_f64(b), BP32.from_f64(c));
+        let got = op_fma(&BP32, pa, pb, pc);
+        let exact = math::fma(
+            &BP32.decode(pa),
+            &BP32.decode(pb),
+            &BP32.decode(pc),
+        );
+        assert_eq!(got, BP32.encode(&exact));
+    }
+}
+
+#[test]
+fn conversion_chain_preserves_fovea_values() {
+    // f32 → bp32 → p32 → bp64 → f32 is lossless for fovea values.
+    let mut x = 0x12345u64;
+    for _ in 0..5000 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let v = ((x % 65536) as f32 - 32768.0) / 64.0;
+        if v == 0.0 {
+            continue;
+        }
+        let f = ieee::F32;
+        let a = convert::convert(&f, &BP32, v.to_bits() as u64);
+        let b = convert::convert(&BP32, &P32, a);
+        let c = convert::convert(&P32, &BP64, b);
+        let back = convert::convert(&BP64, &f, c);
+        assert_eq!(back as u32, v.to_bits(), "chain broke {v}");
+    }
+}
+
+#[test]
+fn nar_poisons_every_op() {
+    let nar = BP32.nar();
+    let two = BP32.from_f64(2.0);
+    assert_eq!(op_add(&BP32, nar, two), nar);
+    assert_eq!(op_mul(&BP32, two, nar), nar);
+    assert_eq!(op_fma(&BP32, nar, two, two), nar);
+    let mut q = Quire::exact_for(&BP32);
+    q.add(&BP32.decode(nar));
+    q.add_product(&BP32.decode(two), &BP32.decode(two));
+    assert_eq!(q.to_posit(&BP32), nar);
+}
+
+#[test]
+fn bp16_vs_bp64_consistency() {
+    // The same value encoded in bp16 and bp64 and brought back must agree
+    // to bp16 precision (spec-family consistency across widths).
+    for v in [1.0f64, -3.75, 255.0, 1.0 / 3.0, 9.8765e-3] {
+        let short = BP16.to_f64(BP16.from_f64(v));
+        let long = BP64.to_f64(BP64.from_f64(short));
+        assert_eq!(long, short, "widening must be exact for {v}");
+    }
+}
+
+#[test]
+fn takum_and_bposit_agree_at_unity() {
+    // Both formats represent small integers exactly.
+    for i in 1..=256i32 {
+        let v = i as f64;
+        assert_eq!(takum::T32.to_f64(takum::T32.from_f64(v)), v);
+        assert_eq!(BP32.to_f64(BP32.from_f64(v)), v);
+    }
+}
+
+#[test]
+fn sqrt_mul_roundtrip_bp32() {
+    // √(x²) == |x| when x² stays in the fovea (exactness regression).
+    for v in [1.5f64, 2.0, 3.25, 10.0, 0.125] {
+        let p = BP32.from_f64(v);
+        let sq = op_mul(&BP32, p, p);
+        let back = positron::formats::op_sqrt(&BP32, sq);
+        assert_eq!(BP32.to_f64(back), v);
+    }
+}
+
+#[test]
+fn paper_quire_sizing_800_for_all_widths() {
+    for spec in [BP16, BP32, BP64] {
+        assert_eq!(spec.quire_bits(), 800, "⟨{},6,5⟩ quire", spec.n);
+    }
+    assert_eq!(P32.quire_bits(), 512); // standard posit32: 16·n per standard
+}

@@ -1,0 +1,146 @@
+//! Runtime integration: load every AOT artifact, execute it on the PJRT
+//! CPU client, and cross-check against both the Python-recorded goldens
+//! and the Rust codec — the proof that all three layers agree.
+//! Skips (with a notice) when artifacts haven't been built.
+
+use positron::formats::posit::BP32;
+use positron::runtime::{
+    artifacts_available, default_artifact_dir, lit_f32, lit_f32_2d, lit_i32, ModelWeights, Runtime,
+};
+
+fn runtime() -> Option<(Runtime, ModelWeights)> {
+    let dir = default_artifact_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu(&dir).expect("pjrt cpu client");
+    let w = ModelWeights::load(&rt).expect("weights.json");
+    Some((rt, w))
+}
+
+#[test]
+fn codec_decode_hlo_matches_rust_codec() {
+    let Some((rt, _)) = runtime() else { return };
+    let model = rt.load("codec_decode.hlo.txt").expect("load decode hlo");
+    // 8192 words: corners + PRNG.
+    let mut words: Vec<i32> = vec![0, 1, -1, i32::MAX, i32::MIN + 1, 0x40000000];
+    let mut x = 0xdeadbeefcafef00du64;
+    while words.len() < 8192 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        words.push(x as i32);
+    }
+    let out = model.run_f32(&[lit_i32(&words)]).expect("execute");
+    let mut checked = 0;
+    for (w, got) in words.iter().zip(&out) {
+        let d = BP32.decode(*w as u32 as u64);
+        let want = d.to_f64();
+        if want.is_nan() {
+            assert!(got.is_nan(), "NaR must decode to NaN");
+            continue;
+        }
+        // Kernel contract: f32 flush-to-zero below 2^-126, ±inf beyond f32.
+        let want32 = if want != 0.0 && want.abs() < f64::powi(2.0, -126) {
+            0.0f32
+        } else {
+            want as f32
+        };
+        assert_eq!(*got, want32, "decode({w:#x}) HLO {got} vs rust {want32}");
+        checked += 1;
+    }
+    assert!(checked > 8000);
+}
+
+#[test]
+fn codec_encode_hlo_matches_rust_codec() {
+    let Some((rt, _)) = runtime() else { return };
+    let model = rt.load("codec_encode.hlo.txt").expect("load encode hlo");
+    let mut vals: Vec<f32> = vec![0.0, 1.0, -1.0, 1.5, 3.14159265, -2.71828, 1e30, -1e-30];
+    let mut x = 0x0123456789abcdefu64;
+    while vals.len() < 8192 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let v = f32::from_bits(x as u32);
+        vals.push(if v.is_finite() { v } else { 1.0 });
+    }
+    let out = model.run_i32(&[lit_f32(&vals)]).expect("execute");
+    for (v, got) in vals.iter().zip(&out) {
+        // Flushed subnormal inputs encode to 0 by kernel contract.
+        let want = if *v != 0.0 && v.abs() < f32::powi(2.0, -126) {
+            0i32
+        } else {
+            BP32.from_f64(*v as f64) as u32 as i32
+        };
+        assert_eq!(*got, want, "encode({v}) HLO {got:#x} vs rust {want:#x}");
+    }
+}
+
+#[test]
+fn model_bposit_hlo_matches_python_golden() {
+    let Some((rt, w)) = runtime() else { return };
+    let model = rt.load("model_bposit.hlo.txt").expect("load model");
+    let mut args = vec![lit_f32_2d(&w.golden_x, w.batch, w.d).unwrap()];
+    args.extend(w.bposit_arg_literals().unwrap());
+    let logits = model.run_f32(&args).expect("execute");
+    assert_eq!(logits.len(), w.golden_logits_bposit.len());
+    for (i, (got, want)) in logits.iter().zip(&w.golden_logits_bposit).enumerate() {
+        assert!(
+            (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+            "logit {i}: rust-served {got} vs python golden {want}"
+        );
+    }
+}
+
+#[test]
+fn model_f32_hlo_matches_python_golden() {
+    let Some((rt, w)) = runtime() else { return };
+    let model = rt.load("model_f32.hlo.txt").expect("load model");
+    let mut args = vec![lit_f32_2d(&w.golden_x, w.batch, w.d).unwrap()];
+    args.extend(w.f32_arg_literals().unwrap());
+    let logits = model.run_f32(&args).expect("execute");
+    for (got, want) in logits.iter().zip(&w.golden_logits_f32) {
+        assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0));
+    }
+}
+
+#[test]
+fn quantized_and_f32_models_agree_on_task() {
+    // The b-posit-quantized model's *decisions* match f32's on the golden
+    // batch (bp32 weights carry ≥ f32 precision in the fovea).
+    let Some((rt, w)) = runtime() else { return };
+    let mf = rt.load("model_f32.hlo.txt").unwrap();
+    let mb = rt.load("model_bposit.hlo.txt").unwrap();
+    let x = lit_f32_2d(&w.golden_x, w.batch, w.d).unwrap();
+    let mut af = vec![x];
+    af.extend(w.f32_arg_literals().unwrap());
+    let x2 = lit_f32_2d(&w.golden_x, w.batch, w.d).unwrap();
+    let mut ab = vec![x2];
+    ab.extend(w.bposit_arg_literals().unwrap());
+    let lf = mf.run_f32(&af).unwrap();
+    let lb = mb.run_f32(&ab).unwrap();
+    let argmax = |row: &[f32]| -> usize {
+        row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    };
+    let mut agree = 0;
+    for i in 0..w.batch {
+        if argmax(&lf[i * w.c..(i + 1) * w.c]) == argmax(&lb[i * w.c..(i + 1) * w.c]) {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, w.batch, "quantized decisions must match f32");
+}
+
+#[test]
+fn weights_quantization_matches_rust_quantizer() {
+    // The Python-encoded weight words equal what the Rust quantizer
+    // produces from the f32 weights — codec agreement at tensor scale.
+    let Some((_rt, w)) = runtime() else { return };
+    let ours = positron::coordinator::quantizer::quantize(&w.w1);
+    assert_eq!(ours.len(), w.w1_bits.len());
+    for (i, (a, b)) in ours.iter().zip(&w.w1_bits).enumerate() {
+        assert_eq!(a, b, "w1[{i}] quantization mismatch");
+    }
+}

@@ -1,0 +1,191 @@
+//! Property-based tests over the formats layer (testutil's forall runner;
+//! the vendored dependency set has no proptest crate).
+
+use positron::formats::posit::PositSpec;
+use positron::formats::{ieee::IeeeSpec, math, op_add, op_mul, takum::TakumSpec, Codec, Decoded};
+use positron::testutil::{forall, Rng};
+
+/// A random but valid posit-family spec.
+fn random_spec(rng: &mut Rng) -> PositSpec {
+    let n = 3 + rng.below(62) as u32; // 3..=64
+    let max_rs = n - 1;
+    let rs = 2 + rng.below((max_rs - 1).max(1) as u64) as u32;
+    let es = rng.below(8) as u32;
+    PositSpec::bounded(n, rs.min(max_rs), es)
+}
+
+#[test]
+fn prop_roundtrip_decode_encode_any_spec() {
+    forall("decode∘encode = id over random specs", 400, |rng| {
+        let spec = random_spec(rng);
+        for _ in 0..50 {
+            let bits = rng.next_u64() & spec.mask();
+            let d = spec.decode(bits);
+            let back = spec.encode(&d);
+            if back != bits {
+                return Err(format!("{spec:?}: {bits:#x} → {back:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_monotonic_any_spec() {
+    forall("pattern order = value order", 200, |rng| {
+        let spec = random_spec(rng);
+        for _ in 0..30 {
+            let a = rng.next_u64() & spec.mask();
+            let b = rng.next_u64() & spec.mask();
+            if a == spec.nar() || b == spec.nar() {
+                continue;
+            }
+            let (va, vb) = (spec.to_f64(a), spec.to_f64(b));
+            let cmp_val = va.partial_cmp(&vb).unwrap();
+            let cmp_bits = spec.cmp_bits(a, b);
+            // Distinct patterns always decode to distinct values (injective),
+            // except possibly at f64 rounding of 64-bit formats — compare via
+            // ordering only when the f64s differ.
+            if va != vb && cmp_val != cmp_bits {
+                return Err(format!("{spec:?}: order mismatch {a:#x} vs {b:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_add_commutes_and_neg_involution() {
+    forall("a+b = b+a and −(−x) = x", 300, |rng| {
+        let spec = random_spec(rng);
+        let a = rng.next_u64() & spec.mask();
+        let b = rng.next_u64() & spec.mask();
+        if op_add(&spec, a, b) != op_add(&spec, b, a) {
+            return Err(format!("{spec:?}: add not commutative"));
+        }
+        // negate = 2's complement of the word.
+        let na = a.wrapping_neg() & spec.mask();
+        let nna = na.wrapping_neg() & spec.mask();
+        if nna != a {
+            return Err("neg not involutive".into());
+        }
+        // and the decoded value flips sign exactly (NaR/zero fixed points).
+        let (da, dna) = (spec.decode(a), spec.decode(na));
+        if da.is_normal() && (da.to_f64() + dna.to_f64()).abs() > 0.0 && da.exp < 500 {
+            let sum = math::add(&da, &dna);
+            if !sum.is_zero() {
+                return Err(format!("{spec:?}: x + (−x) ≠ 0 for {a:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mul_identity_and_sign() {
+    forall("x·1 = x; sign(a·b) = sign(a)⊕sign(b)", 300, |rng| {
+        let spec = random_spec(rng);
+        let one = spec.from_f64(1.0);
+        let a = rng.next_u64() & spec.mask();
+        if a != spec.nar() && op_mul(&spec, a, one) != a {
+            return Err(format!("{spec:?}: {a:#x}·1 ≠ {a:#x}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ieee_roundtrip_random_spec() {
+    forall("ieee decode∘encode = id", 300, |rng| {
+        let eb = 3 + rng.below(9) as u32;
+        let n = (eb + 3 + rng.below(30) as u32).min(64);
+        let spec = IeeeSpec::new(n, eb);
+        for _ in 0..40 {
+            let bits = rng.next_u64() & spec.mask();
+            let d = spec.decode(bits);
+            if d.is_nan() {
+                continue;
+            }
+            if spec.encode(&d) != bits {
+                return Err(format!("ieee<{n},{eb}>: {bits:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_takum_roundtrip_any_width() {
+    forall("takum decode∘encode = id", 200, |rng| {
+        let n = 12 + rng.below(53) as u32;
+        let spec = TakumSpec::new(n);
+        for _ in 0..40 {
+            let bits = rng.next_u64() & spec.mask();
+            let d = spec.decode(bits);
+            if d.is_nan() {
+                continue;
+            }
+            if spec.encode(&d) != bits {
+                return Err(format!("takum{n}: {bits:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encode_nearest_no_value_closer() {
+    // Faithful rounding: |encode(x) − x| ≤ one pattern step in either
+    // direction (checked against the two neighbouring patterns).
+    //
+    // Restricted to binades where at least one fraction bit survives: when
+    // the n-bit cut falls inside the exponent field, the Posit™ Standard's
+    // pattern-space RNE intentionally differs from value-space nearest
+    // (geometric vs arithmetic midpoints), so "nearest value" is not the
+    // contract there.
+    forall("encode is nearest-or-adjacent", 200, |rng| {
+        let spec = random_spec(rng);
+        let x = rng.nasty_f64();
+        if !x.is_finite() || x == 0.0 {
+            return Ok(());
+        }
+        let scale = x.abs().log2().floor();
+        if !(-1000.0..1000.0).contains(&scale) || spec.frac_bits_at(scale as i32) == 0 {
+            return Ok(());
+        }
+        let bits = spec.encode(&Decoded::from_f64(x));
+        if bits == spec.nar() || bits == 0 {
+            return Ok(());
+        }
+        let err = (spec.to_f64(bits) - x).abs();
+        for nb in [bits.wrapping_add(1) & spec.mask(), bits.wrapping_sub(1) & spec.mask()] {
+            if nb == spec.nar() || nb == 0 {
+                continue;
+            }
+            let nerr = (spec.to_f64(nb) - x).abs();
+            // Allow exact ties (RNE picks the even pattern).
+            if nerr < err * (1.0 - 1e-12) {
+                return Err(format!(
+                    "{spec:?}: {x:e} → {bits:#x} (err {err:e}) but neighbour {nb:#x} closer ({nerr:e})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_math_add_associates_with_exact_operands() {
+    // With small-integer operands everything is exact, so association holds.
+    forall("exact-int association", 200, |rng| {
+        let a = Decoded::from_f64((rng.below(1000) as f64) - 500.0);
+        let b = Decoded::from_f64((rng.below(1000) as f64) - 500.0);
+        let c = Decoded::from_f64((rng.below(1000) as f64) - 500.0);
+        let l = math::add(&math::add(&a, &b), &c).to_f64();
+        let r = math::add(&a, &math::add(&b, &c)).to_f64();
+        if l != r {
+            return Err(format!("({} + {}) + {} mismatch", a.to_f64(), b.to_f64(), c.to_f64()));
+        }
+        Ok(())
+    });
+}
