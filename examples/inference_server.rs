@@ -14,7 +14,7 @@ use std::time::Instant;
 use positron::coordinator::{InferenceServer, ServerConfig};
 use positron::runtime::{artifacts_available, default_artifact_dir, ModelWeights, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> positron::error::Result<()> {
     let dir = default_artifact_dir();
     if !artifacts_available(&dir) {
         eprintln!("artifacts missing in {} — run `make artifacts` first", dir.display());

@@ -1,0 +1,55 @@
+"""Pure-stdlib tests of the big-int scalar oracle (compile/kernels/
+scalar.py) — the cross-language ground truth the Rust codecs (general,
+scalar-fast, and vector lane) are all verified against. No jax/numpy
+needed, so these run everywhere, including the bare-interpreter CI job."""
+
+import math
+
+from compile.kernels import scalar
+
+
+def test_roundtrip_all_p16():
+    spec = scalar.P16
+    for bits in range(1 << 16):
+        v = scalar.decode(spec, bits)
+        if v is None:
+            assert bits == spec.nar
+            continue
+        assert scalar.encode(spec, v) == bits, hex(bits)
+
+
+def test_roundtrip_all_bp16():
+    spec = scalar.BP16
+    for bits in range(1 << 16):
+        v = scalar.decode(spec, bits)
+        if v is None:
+            continue
+        assert scalar.encode(spec, v) == bits, hex(bits)
+
+
+def test_bp32_known_patterns():
+    spec = scalar.BP32
+    assert scalar.encode(spec, 1.0) == 0x40000000
+    assert scalar.encode(spec, -1.0) == 0xC0000000
+    assert scalar.decode(spec, 0x40000000) == 1
+    assert scalar.decode(spec, 0) == 0
+    assert scalar.decode(spec, spec.nar) is None
+    assert scalar.encode(spec, float("nan")) == spec.nar
+    assert scalar.encode(spec, float("inf")) == spec.nar
+
+
+def test_bp32_dynamic_range():
+    spec = scalar.BP32
+    # minpos scale 2^-192·(1+2^-20); maxpos just under 2^192.
+    minpos = scalar.decode(spec, 1)
+    assert math.isclose(float(minpos), 2.0**-192, rel_tol=1e-5)
+    maxpos = scalar.decode(spec, spec.maxpos_body)
+    assert 2.0**191 <= float(maxpos) < 2.0**192
+
+
+def test_saturation_never_nar():
+    for spec in (scalar.P16, scalar.BP16, scalar.BP32, scalar.P32):
+        assert scalar.encode(spec, 1e300) == spec.maxpos_body
+        assert scalar.encode(spec, -1e300) == (spec.nar + 1) & spec.mask
+        assert scalar.encode(spec, 1e-300) == 1
+        assert scalar.encode(spec, -1e-300) == spec.mask

@@ -11,7 +11,7 @@ use positron::coordinator::{quantizer, InferenceServer, ServerConfig};
 use positron::harness::Bencher;
 use positron::runtime::{artifacts_available, default_artifact_dir, lit_f32_2d, ModelWeights, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> positron::error::Result<()> {
     let dir = default_artifact_dir();
     if !artifacts_available(&dir) {
         eprintln!("artifacts missing — run `make artifacts` first");

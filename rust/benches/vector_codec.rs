@@ -1,0 +1,25 @@
+//! Bench: branch-free vector codec vs the scalar fast path / general
+//! codec, plus the dot-kernel family — the serving hot path's throughput
+//! sweep. Emits `BENCH_vector_codec.json` (elems/s + per-stage speedups).
+//!
+//! Run: `cargo bench --bench vector_codec`
+
+fn main() {
+    // Sweep block sizes: cache-resident, L2-scale, and streaming.
+    for len in [4096usize, 65536, 1 << 20] {
+        // Only the canonical 64k block writes the JSON artifact.
+        let json = if len == 65536 { Some("BENCH_vector_codec.json") } else { None };
+        match positron::cli::run_vector_bench(len, json) {
+            Ok(lines) => {
+                for l in lines {
+                    println!("{l}");
+                }
+            }
+            Err(e) => {
+                eprintln!("vector-bench failed at len {len}: {e}");
+                std::process::exit(1);
+            }
+        }
+        println!();
+    }
+}

@@ -5,6 +5,8 @@
 //! - `codec <fmt> <value…>`    — encode/decode values in any format
 //! - `accuracy [--csv DIR]`    — Golden Zone / fovea / census + Fig 6/7 CSVs
 //! - `tables`                  — gate-level PPA tables (Tables 5/6, Fig 16)
+//! - `vector-bench`            — scalar vs vector codec + kernel throughput,
+//!                               emitted as BENCH_vector_codec.json
 //! - `serve [--requests N]`    — run the batching inference demo (artifacts)
 
 use crate::accuracy;
@@ -19,6 +21,7 @@ pub enum Command {
     Codec { fmt: String, values: Vec<String> },
     Accuracy { csv_dir: Option<String> },
     Tables,
+    VectorBench { len: usize, json: Option<String> },
     Serve { requests: usize, artifact_dir: String },
     Help,
 }
@@ -49,6 +52,24 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
             Ok(Command::Accuracy { csv_dir })
         }
         "tables" => Ok(Command::Tables),
+        "vector-bench" => {
+            let mut len = 65536usize;
+            let mut json = Some("BENCH_vector_codec.json".to_string());
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--len" => {
+                        len = it.next().ok_or("--len needs N")?.parse().map_err(|e| format!("{e}"))?
+                    }
+                    "--json" => json = Some(it.next().ok_or("--json needs a path")?.clone()),
+                    "--no-json" => json = None,
+                    other => return Err(format!("vector-bench: unknown flag {other}")),
+                }
+            }
+            if len == 0 {
+                return Err("vector-bench: --len must be positive".into());
+            }
+            Ok(Command::VectorBench { len, json })
+        }
         "serve" => {
             let mut requests = 512;
             let mut artifact_dir = crate::runtime::default_artifact_dir().display().to_string();
@@ -99,6 +120,9 @@ COMMANDS:
                              values: decimals or 0x bit patterns)
   accuracy [--csv DIR]       Golden Zone / fovea / census; optional Fig-6/7 CSVs
   tables                     gate-level decode/encode PPA (paper Tables 5/6 + Fig 16)
+  vector-bench [--len N] [--json PATH | --no-json]
+                             scalar vs vector codec + dot-kernel throughput;
+                             writes BENCH_vector_codec.json by default
   serve [--requests N] [--artifacts DIR]
                              batching inference demo over the AOT artifacts
   help                       this message
@@ -210,4 +234,143 @@ pub fn run_tables() -> Vec<String> {
     out.push(report::format_table("Decode (paper Table 5)", &ppa_rows(false, 40)));
     out.push(report::format_table("Encode (paper Table 6)", &ppa_rows(true, 40)));
     out
+}
+
+/// Execute `vector-bench`: scalar vs branch-free-vector codec throughput
+/// (BP32 + P32 + the f32⇄bits floor) and the dot-kernel family, over
+/// `len`-element mixed-scale blocks. Shared by the CLI and the
+/// `vector_codec` bench target; optionally writes `BENCH_vector_codec.json`.
+pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<String>, String> {
+    use crate::coordinator::quantizer;
+    use crate::harness::Bencher;
+    use crate::testutil::Rng;
+    use crate::vector::{codec, kernels};
+
+    let mut rng = Rng::new(0x5eed);
+    // Mixed-scale finite values spanning every regime length — worst case
+    // for the branchy scalar path (mispredicts), steady state for the lane
+    // path (always the same straight-line code).
+    let xs: Vec<f32> = (0..len)
+        .map(|_| {
+            let mag = (rng.f64() + 0.5) * f64::powi(2.0, rng.below(61) as i32 - 30);
+            if rng.below(2) == 0 {
+                mag as f32
+            } else {
+                -mag as f32
+            }
+        })
+        .collect();
+    let words = codec::bp32_encode(&xs);
+    let p32_words = {
+        let mut w = vec![0u32; len];
+        codec::p32_encode_into(&xs, &mut w);
+        w
+    };
+    let ys: Vec<f32> = (0..len).map(|_| (rng.f64() - 0.5) as f32 * 4.0).collect();
+    let mut out_w = vec![0u32; len];
+    let mut out_f = vec![0f32; len];
+
+    let mut b = Bencher::new();
+
+    // --- b-posit32: the serving format ---
+    b.bench(&format!("bp32_encode/scalar/{len}"), || {
+        let mut acc = 0u32;
+        for &x in &xs {
+            acc = acc.wrapping_add(quantizer::fast_bp32_encode(x));
+        }
+        acc
+    });
+    b.bench(&format!("bp32_encode/vector/{len}"), || {
+        codec::bp32_encode_into(&xs, &mut out_w);
+        out_w[0]
+    });
+    b.bench(&format!("bp32_decode/scalar/{len}"), || {
+        let mut acc = 0f32;
+        for &w in &words {
+            acc += quantizer::fast_bp32_decode(w);
+        }
+        acc
+    });
+    b.bench(&format!("bp32_decode/vector/{len}"), || {
+        codec::bp32_decode_into(&words, &mut out_f);
+        out_f[0]
+    });
+    b.bench(&format!("bp32_roundtrip/scalar/{len}"), || {
+        let mut acc = 0f32;
+        for &x in &xs {
+            acc += quantizer::dequantize_one(quantizer::quantize_one(x));
+        }
+        acc
+    });
+    b.bench(&format!("bp32_roundtrip/vector/{len}"), || {
+        out_f.copy_from_slice(&xs);
+        codec::bp32_roundtrip_in_place(&mut out_f);
+        out_f[0]
+    });
+
+    // --- posit<32,2>: general codec vs lane codec ---
+    b.bench(&format!("p32_encode/scalar/{len}"), || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(posit::P32.from_f64(x as f64));
+        }
+        acc
+    });
+    b.bench(&format!("p32_encode/vector/{len}"), || {
+        codec::p32_encode_into(&xs, &mut out_w);
+        out_w[0]
+    });
+    b.bench(&format!("p32_decode/scalar/{len}"), || {
+        let mut acc = 0f64;
+        for &w in &p32_words {
+            acc += posit::P32.to_f64(w as u64);
+        }
+        acc
+    });
+    b.bench(&format!("p32_decode/vector/{len}"), || {
+        codec::p32_decode_into(&p32_words, &mut out_f);
+        out_f[0]
+    });
+
+    // --- f32⇄bits: the memcpy-speed floor for the sweep ---
+    b.bench(&format!("f32_bits/vector/{len}"), || {
+        codec::f32_to_bits_into(&xs, &mut out_w);
+        out_w[0]
+    });
+
+    // --- dot kernels (the serving workload) ---
+    b.bench(&format!("dot/f32_fast/{len}"), || kernels::dot_f32(&xs, &ys));
+    b.bench(&format!("dot/bp32_weights_fast/{len}"), || kernels::dot_bp32_weights_fast(&words, &ys));
+    let mut qd = kernels::QuireDot::new();
+    b.bench(&format!("dot/quire_exact/{len}"), || qd.dot_f32(&xs, &ys));
+
+    let mut out = Vec::new();
+    out.push(b.table(&format!("vector codec throughput ({len}-element blocks)")));
+    for r in b.results() {
+        out.push(format!("{:<44} {:>10.1} Melem/s", r.name, len as f64 / r.mean_ns * 1e3));
+    }
+
+    // Speedups: scalar mean / vector mean per codec stage.
+    let mean = |prefix: &str| -> f64 {
+        b.results().iter().find(|r| r.name.starts_with(prefix)).map(|r| r.mean_ns).unwrap_or(f64::NAN)
+    };
+    let stages =
+        ["bp32_encode", "bp32_decode", "bp32_roundtrip", "p32_encode", "p32_decode"];
+    let mut speedup_json = Vec::new();
+    for s in stages {
+        let sp = mean(&format!("{s}/scalar")) / mean(&format!("{s}/vector"));
+        out.push(format!("speedup {s:<16} {sp:>6.2}x (vector vs scalar)"));
+        speedup_json.push(format!("\"{s}\":{sp:.3}"));
+    }
+
+    if let Some(path) = json_path {
+        let json = format!(
+            "{{\"bench\":\"vector_codec\",\"len\":{len},\"speedup\":{{{}}},\"results\":{}}}",
+            speedup_json.join(","),
+            b.results_json()
+        );
+        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+        out.push(format!("wrote {path}"));
+    }
+    Ok(out)
 }

@@ -1,5 +1,7 @@
 //! Serving metrics: lock-protected latency reservoir + counters, cheap
-//! enough for the request path.
+//! enough for the request path. Quantize/dequantize (codec) time and model
+//! execute time are tracked separately so `/metrics` output attributes
+//! batch cost to the right stage.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -12,6 +14,10 @@ pub struct Metrics {
     batches: AtomicU64,
     batched_items: AtomicU64,
     rejected: AtomicU64,
+    /// Total nanoseconds spent in the b-posit codec (quantize/dequantize).
+    codec_ns: AtomicU64,
+    /// Total nanoseconds spent executing the model.
+    execute_ns: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -26,6 +32,10 @@ pub struct MetricsSnapshot {
     pub p50_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    /// Total codec (quantize/dequantize) nanoseconds across all batches.
+    pub codec_ns: u64,
+    /// Total model-execute nanoseconds across all batches.
+    pub execute_ns: u64,
 }
 
 impl Metrics {
@@ -40,6 +50,16 @@ impl Metrics {
     pub fn record_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    /// Add one batch's codec (quantize/dequantize) time.
+    pub fn record_codec(&self, d: Duration) {
+        self.codec_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Add one batch's model-execute time.
+    pub fn record_execute(&self, d: Duration) {
+        self.execute_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -71,7 +91,39 @@ impl Metrics {
             p50_us: q(0.5),
             p99_us: q(0.99),
             max_us: lats.last().copied().unwrap_or(0),
+            codec_ns: self.codec_ns.load(Ordering::Relaxed),
+            execute_ns: self.execute_ns.load(Ordering::Relaxed),
         }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Mean codec nanoseconds per executed batch.
+    pub fn codec_ns_per_batch(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.codec_ns as f64 / self.batches as f64 }
+    }
+
+    /// Mean execute nanoseconds per executed batch.
+    pub fn execute_ns_per_batch(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.execute_ns as f64 / self.batches as f64 }
+    }
+
+    /// Render in a Prometheus-style text format — the server's `/metrics`
+    /// output, with codec time attributed separately from execute time.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("positron_requests_total {}\n", self.requests));
+        s.push_str(&format!("positron_rejected_total {}\n", self.rejected));
+        s.push_str(&format!("positron_batches_total {}\n", self.batches));
+        s.push_str(&format!("positron_batch_mean_items {:.3}\n", self.mean_batch));
+        s.push_str(&format!("positron_latency_p50_us {}\n", self.p50_us));
+        s.push_str(&format!("positron_latency_p99_us {}\n", self.p99_us));
+        s.push_str(&format!("positron_latency_max_us {}\n", self.max_us));
+        s.push_str(&format!("positron_codec_ns_total {}\n", self.codec_ns));
+        s.push_str(&format!("positron_codec_ns_per_batch {:.0}\n", self.codec_ns_per_batch()));
+        s.push_str(&format!("positron_execute_ns_total {}\n", self.execute_ns));
+        s.push_str(&format!("positron_execute_ns_per_batch {:.0}\n", self.execute_ns_per_batch()));
+        s
     }
 }
 
@@ -102,5 +154,27 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.codec_ns, 0);
+        assert_eq!(s.execute_ns, 0);
+        assert_eq!(s.codec_ns_per_batch(), 0.0);
+    }
+
+    #[test]
+    fn codec_and_execute_time_split() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_codec(Duration::from_nanos(1_500));
+        m.record_execute(Duration::from_nanos(40_000));
+        m.record_batch(4);
+        m.record_codec(Duration::from_nanos(2_500));
+        m.record_execute(Duration::from_nanos(60_000));
+        let s = m.snapshot();
+        assert_eq!(s.codec_ns, 4_000);
+        assert_eq!(s.execute_ns, 100_000);
+        assert_eq!(s.codec_ns_per_batch(), 2_000.0);
+        assert_eq!(s.execute_ns_per_batch(), 50_000.0);
+        let text = s.render();
+        assert!(text.contains("positron_codec_ns_total 4000"), "{text}");
+        assert!(text.contains("positron_execute_ns_total 100000"), "{text}");
     }
 }

@@ -1,31 +1,66 @@
 //! f32 ⇄ b-posit32 tensor quantization on the request path (Rust codec,
 //! no Python). This is the hot path profiled in EXPERIMENTS.md §Perf.
 //!
-//! The general [`PositSpec`] codec routes through the 128-bit BitStream
-//! serializer (exact for every ⟨n,rs,es⟩); for the fixed ⟨32,6,5⟩ request
-//! path we use a specialized branch-light u32 implementation (~4× faster,
-//! see §Perf) verified exhaustively against the general codec in tests.
+//! Three codec tiers, fastest first:
+//! - **Vector** ([`crate::vector::codec`]): branch-free 8-lane batched
+//!   encode/decode — every slice-level entry point here routes through it,
+//!   and the `_into`/`_in_place` variants reuse caller buffers so the
+//!   steady-state serving path performs zero per-request heap allocation.
+//! - **Scalar fast path** ([`fast_bp32_encode`]/[`fast_bp32_decode`]): the
+//!   specialized branch-light ⟨32,6,5⟩ pair, kept as the per-element API
+//!   and as the independent implementation the vector codec is tested
+//!   against (bit-identical on every input).
+//! - **General codec** ([`quantize_one_general`]): the exact
+//!   [`PositSpec`]-driven reference via the 128-bit BitStream serializer —
+//!   the parity oracle and the §Perf "before" baseline.
+//!
+//! # Contract (all tiers, same as the Pallas kernel)
+//! - Encode: f32 subnormal inputs (|x| < 2^−126) quantize to 0 — the f32
+//!   pipeline is FTZ/DAZ end-to-end. NaN/Inf → NaR.
+//! - Decode: results below the f32 normal range flush to ±0; above it ±∞;
+//!   NaR → NaN.
 
 use crate::formats::posit::BP32;
 use crate::formats::Decoded;
+use crate::vector::codec;
 
-/// Quantize a f32 slice to b-posit32 words (as i32 bit patterns).
+/// Quantize a f32 slice to b-posit32 words (as i32 bit patterns) through
+/// the vector codec.
 pub fn quantize(xs: &[f32]) -> Vec<i32> {
-    xs.iter().map(|&x| quantize_one(x)).collect()
+    let mut out = Vec::new();
+    quantize_into(xs, &mut out);
+    out
 }
 
-/// Quantize one value (specialized ⟨32,6,5⟩ fast path).
+/// Quantize into a reused buffer (cleared + refilled; no allocation once
+/// the buffer has grown to the steady-state batch size). The lane encoder
+/// is branch-free, so this plain map compiles to the same straight-line
+/// inner loop as the chunked drivers in [`codec`].
+pub fn quantize_into(xs: &[f32], out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| codec::bp32_encode_lane(x) as i32));
+}
+
+/// Quantize one value (specialized ⟨32,6,5⟩ scalar fast path).
 #[inline]
 pub fn quantize_one(x: f32) -> i32 {
     fast_bp32_encode(x) as i32
 }
 
-/// Dequantize b-posit32 words back to f32.
+/// Dequantize b-posit32 words back to f32 through the vector codec.
 pub fn dequantize(bits: &[i32]) -> Vec<f32> {
-    bits.iter().map(|&b| dequantize_one(b)).collect()
+    let mut out = Vec::new();
+    dequantize_into(bits, &mut out);
+    out
 }
 
-/// Dequantize one word (specialized ⟨32,6,5⟩ fast path).
+/// Dequantize into a reused buffer.
+pub fn dequantize_into(bits: &[i32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(bits.iter().map(|&b| codec::bp32_decode_lane(b as u32)));
+}
+
+/// Dequantize one word (specialized ⟨32,6,5⟩ scalar fast path).
 #[inline]
 pub fn dequantize_one(bits: i32) -> f32 {
     fast_bp32_decode(bits as u32)
@@ -33,18 +68,48 @@ pub fn dequantize_one(bits: i32) -> f32 {
 
 /// Reference (general-codec) quantize — kept for parity tests and as the
 /// §Perf "before" baseline.
+///
+/// Applies the same FTZ contract as the fast path (f32 subnormal inputs
+/// quantize to 0), so general/fast parity is exact on *every* f32 input,
+/// not just normals.
 #[inline]
 pub fn quantize_one_general(x: f32) -> i32 {
+    if x.abs() < f32::MIN_POSITIVE {
+        // Covers ±0 and all subnormals; NaN compares false and falls through.
+        return 0;
+    }
     BP32.encode(&Decoded::from_f64(x as f64)) as i32
 }
 
-/// Reference (general-codec) dequantize.
+/// Reference (general-codec) dequantize, with the same f32-facing contract
+/// as the fast path: sub-f32-normal magnitudes flush to ±0 (the plain
+/// `as f32` cast would keep them as f32 subnormals), out-of-range
+/// magnitudes become ±∞ via the cast.
 #[inline]
 pub fn dequantize_one_general(bits: i32) -> f32 {
-    BP32.decode(bits as u32 as u64).to_f64() as f32
+    let v = BP32.decode(bits as u32 as u64).to_f64() as f32;
+    if v != 0.0 && v.abs() < f32::MIN_POSITIVE {
+        return if v < 0.0 { -0.0 } else { 0.0 };
+    }
+    v
 }
 
-/// Specialized b-posit⟨32,6,5⟩ encoder for f32 inputs.
+/// Round a f32 tensor through b-posit32 (quantize + dequantize) — what the
+/// server does to inputs so the CPU model sees exactly the values a
+/// b-posit datapath would.
+pub fn roundtrip(xs: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; xs.len()];
+    codec::bp32_roundtrip_into(xs, &mut out);
+    out
+}
+
+/// In-place roundtrip over a caller buffer — the server's per-batch path
+/// (fused encode+decode, no intermediate buffer, no allocation).
+pub fn roundtrip_in_place(xs: &mut [f32]) {
+    codec::bp32_roundtrip_in_place(xs);
+}
+
+/// Specialized b-posit⟨32,6,5⟩ encoder for f32 inputs (scalar fast path).
 ///
 /// Mirrors the Pallas kernel's contract exactly: f32 subnormal inputs
 /// (|x| < 2^−126) quantize to 0 (the f32 pipeline is FTZ/DAZ end-to-end),
@@ -94,8 +159,9 @@ pub fn fast_bp32_encode(x: f32) -> u32 {
     }
 }
 
-/// Specialized b-posit⟨32,6,5⟩ decoder to f32 (select-based, mirrors the
-/// Pallas kernel; FTZ contract below 2^−126, ±Inf above f32 range).
+/// Specialized b-posit⟨32,6,5⟩ decoder to f32 (scalar fast path;
+/// select-based, mirrors the Pallas kernel; FTZ contract below 2^−126,
+/// ±Inf above f32 range).
 #[inline]
 pub fn fast_bp32_decode(word: u32) -> f32 {
     if word == 0 {
@@ -133,13 +199,6 @@ pub fn fast_bp32_decode(word: u32) -> f32 {
     f32::from_bits((sign << 31) | (((t + 127) as u32) << 23) | frac)
 }
 
-/// Round a f32 tensor through b-posit32 (quantize + dequantize) — what the
-/// server does to inputs so the CPU model sees exactly the values a
-/// b-posit datapath would.
-pub fn roundtrip(xs: &[f32]) -> Vec<f32> {
-    xs.iter().map(|&x| dequantize_one(quantize_one(x))).collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,7 +206,8 @@ mod tests {
     #[test]
     fn fast_encode_parity_with_general_codec() {
         // Exhaustive-grade PRNG sweep + corners: the fast path must agree
-        // bit-for-bit with the general codec on every normal f32.
+        // bit-for-bit with the general codec on every f32 — including
+        // subnormals, now that the general path applies the FTZ contract.
         let mut x = 0x853c49e6748fea9bu64;
         let mut checked = 0u32;
         for _ in 0..2_000_000 {
@@ -156,10 +216,6 @@ mod tests {
             x ^= x << 17;
             let v = f32::from_bits(x as u32);
             if !v.is_finite() {
-                continue;
-            }
-            if v != 0.0 && v.abs() < f32::MIN_POSITIVE {
-                assert_eq!(fast_bp32_encode(v), 0, "FTZ contract for {v}");
                 continue;
             }
             assert_eq!(
@@ -182,7 +238,22 @@ mod tests {
     }
 
     #[test]
+    fn general_codec_ftz_contract() {
+        // The satellite contract: subnormal f32 inputs quantize to 0 in the
+        // general path too, so general/fast parity is exact everywhere.
+        for bits in [1u32, 0x0000_0001, 0x007f_ffff, 0x807f_ffff, 0x8000_0001] {
+            let v = f32::from_bits(bits);
+            assert!(v == 0.0 || v.abs() < f32::MIN_POSITIVE);
+            assert_eq!(quantize_one_general(v), 0, "FTZ for {bits:#010x}");
+            assert_eq!(quantize_one_general(v), quantize_one(v), "parity for {bits:#010x}");
+        }
+        assert_eq!(quantize_one_general(f32::NAN) as u32, 0x8000_0000);
+    }
+
+    #[test]
     fn fast_decode_parity_with_general_codec() {
+        // With the FTZ contract applied on both sides, decode parity is
+        // direct equality (NaN excepted).
         let mut x = 0x2545f4914f6cdd1du64;
         for _ in 0..2_000_000 {
             x ^= x << 13;
@@ -195,9 +266,7 @@ mod tests {
                 assert!(fast.is_nan());
                 continue;
             }
-            // FTZ contract: sub-f32-normal magnitudes flush.
-            let want = if gen != 0.0 && gen.abs() < f32::MIN_POSITIVE { 0.0 } else { gen };
-            assert_eq!(fast, want, "fast/general decode mismatch for {w:#010x}");
+            assert_eq!(fast, gen, "fast/general decode mismatch for {w:#010x}");
         }
     }
 
@@ -230,5 +299,48 @@ mod tests {
         let v = vec![1.5f32; 100];
         assert_eq!(quantize(&v).len(), 100);
         assert_eq!(dequantize(&quantize(&v)), v);
+    }
+
+    #[test]
+    fn batch_apis_match_scalar_fast_path() {
+        // The vector-codec-backed slice APIs must agree element-for-element
+        // with the scalar fast path (which itself matches the general codec).
+        let mut rng = crate::testutil::Rng::new(0xfeed);
+        let xs: Vec<f32> = (0..1000)
+            .map(|_| {
+                let v = f32::from_bits(rng.next_u32());
+                if v.is_finite() { v } else { 1.0 }
+            })
+            .collect();
+        let batch = quantize(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(batch[i], quantize_one(x), "quantize lane {i}");
+        }
+        let back = dequantize(&batch);
+        for (i, &b) in batch.iter().enumerate() {
+            assert_eq!(back[i].to_bits(), dequantize_one(b).to_bits(), "dequantize lane {i}");
+        }
+        let rt = roundtrip(&xs);
+        let mut rt_ip = xs.clone();
+        roundtrip_in_place(&mut rt_ip);
+        for i in 0..xs.len() {
+            assert_eq!(rt[i].to_bits(), rt_ip[i].to_bits());
+            assert_eq!(rt[i].to_bits(), dequantize_one(quantize_one(xs[i])).to_bits());
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let xs = vec![2.5f32; 40];
+        let mut bits = Vec::new();
+        quantize_into(&xs, &mut bits);
+        let cap = bits.capacity();
+        let mut back = Vec::new();
+        dequantize_into(&bits, &mut back);
+        assert_eq!(back, xs);
+        // Re-running with the same size must not reallocate.
+        quantize_into(&xs, &mut bits);
+        assert_eq!(bits.capacity(), cap);
+        assert_eq!(bits.len(), 40);
     }
 }

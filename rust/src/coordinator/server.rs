@@ -6,6 +6,11 @@
 //! batches (up to the model's static batch, or until `max_wait` expires),
 //! rounds inputs through b-posit32 (the format under test), executes, and
 //! fans results back out. A full queue rejects with `Busy` — backpressure.
+//!
+//! Steady-state allocation discipline: the batch staging buffer and the
+//! input literal are built once and reused every iteration; quantization
+//! runs through the vector codec *in place* on the staging buffer. The
+//! codec and model-execute stages are timed separately into [`Metrics`].
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -13,11 +18,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::error::{anyhow, Result};
 
 use super::metrics::Metrics;
 use super::quantizer;
-use crate::runtime::{lit_f32_2d, ModelWeights, Runtime};
+use crate::runtime::{lit_f32_2d, Literal, ModelWeights, Runtime};
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -72,7 +77,8 @@ pub struct InferenceServer {
 impl InferenceServer {
     /// Spawn the worker; it opens the PJRT runtime on `artifact_dir`,
     /// compiles `cfg.model_file`, and reports readiness before this
-    /// returns.
+    /// returns. Without the `runtime` cargo feature this fails fast with
+    /// the "runtime disabled" error.
     pub fn start(artifact_dir: PathBuf, cfg: ServerConfig) -> Result<InferenceServer> {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
@@ -168,7 +174,7 @@ fn worker_loop(
     let model_batch = weights.batch;
     let max_batch = cfg.max_batch.min(model_batch);
     // Argument literals are built once and reused: execute() only borrows
-    // them. Slot 0 (the batch input) is replaced each iteration.
+    // them. Slot 0 (the batch input) is refreshed in place each iteration.
     let weight_lits = match if cfg.model_file.contains("f32") {
         weights.f32_arg_literals()
     } else {
@@ -180,8 +186,12 @@ fn worker_loop(
             return;
         }
     };
-    let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + weight_lits.len());
-    match lit_f32_2d(&vec![0f32; model_batch * d], model_batch, d) {
+    // Persistent staging buffer (model_batch × d) + input literal: the
+    // steady-state loop below performs no per-request heap allocation on
+    // the quantize path.
+    let mut x = vec![0f32; model_batch * d];
+    let mut args: Vec<Literal> = Vec::with_capacity(1 + weight_lits.len());
+    match lit_f32_2d(&x, model_batch, d) {
         Ok(l) => args.push(l),
         Err(e) => {
             eprintln!("initial literal failed: {e}");
@@ -210,20 +220,25 @@ fn worker_loop(
         }
         metrics.record_batch(batch.len());
 
-        // Assemble the (model_batch × d) input, zero-padded.
-        let mut x = vec![0f32; model_batch * d];
+        // Stage the (model_batch × d) input: fill the live prefix, zero the
+        // padding rows, then quantize the prefix in place (vector codec).
+        // Only the quantize pass counts as codec time — staging memcpys and
+        // the literal refresh are batching overhead, not codec cost.
         for (i, r) in batch.iter().enumerate() {
-            let row = if cfg.quantize_inputs {
-                quantizer::roundtrip(&r.features)
-            } else {
-                r.features.clone()
-            };
-            x[i * d..(i + 1) * d].copy_from_slice(&row);
+            x[i * d..(i + 1) * d].copy_from_slice(&r.features);
         }
-        args[0] = match lit_f32_2d(&x, model_batch, d) {
-            Ok(l) => l,
-            Err(_) => continue,
-        };
+        x[batch.len() * d..].fill(0.0);
+        if cfg.quantize_inputs {
+            let t_codec = Instant::now();
+            quantizer::roundtrip_in_place(&mut x[..batch.len() * d]);
+            metrics.record_codec(t_codec.elapsed());
+        }
+        if let Err(e) = args[0].copy_from_f32(&x) {
+            eprintln!("input literal refresh failed: {e}");
+            continue;
+        }
+
+        let t_exec = Instant::now();
         let out = match model.run_f32(&args) {
             Ok(o) => o,
             Err(e) => {
@@ -231,6 +246,7 @@ fn worker_loop(
                 continue;
             }
         };
+        metrics.record_execute(t_exec.elapsed());
         for (i, r) in batch.into_iter().enumerate() {
             let logits = out[i * c..(i + 1) * c].to_vec();
             let latency = r.submitted.elapsed();
@@ -239,3 +255,20 @@ fn worker_loop(
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The satellite contract for builds without libxla: starting the
+    /// server fails fast with the documented "runtime disabled" error
+    /// instead of panicking or hanging.
+    #[test]
+    #[cfg(not(feature = "runtime"))]
+    fn start_without_runtime_feature_fails_with_clear_error() {
+        let err = InferenceServer::start(PathBuf::from("artifacts"), ServerConfig::default())
+            .unwrap_err();
+        assert!(format!("{err}").contains("runtime disabled"), "{err}");
+    }
+}
+

@@ -1,0 +1,101 @@
+//! Minimal `anyhow`-style error handling (the offline dependency set has no
+//! anyhow crate): a string-backed [`Error`], a [`Result`] alias, the
+//! [`anyhow!`] macro, and a [`Context`] extension trait. The API surface
+//! mirrors the subset of anyhow the runtime/coordinator layers use, so the
+//! code reads identically to the anyhow-based original.
+
+use std::fmt;
+
+/// String-backed error; cheap to construct, formats as its message.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything stringable (mirror of `anyhow::Error::msg`).
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// `?` conversion from any std error. `Error` itself deliberately does not
+// implement `std::error::Error`, which keeps this blanket impl coherent
+// (the same trick anyhow uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Result alias defaulting the error type (mirror of `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string (mirror of `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+pub use crate::anyhow;
+
+/// Attach context to an error (mirror of `anyhow::Context`).
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_show_message() {
+        let e = anyhow!("bad thing {}", 42);
+        assert_eq!(format!("{e}"), "bad thing 42");
+        assert_eq!(format!("{e:?}"), "bad thing 42");
+        assert_eq!(format!("{e:#}"), "bad thing 42"); // alternate flag tolerated
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer: inner");
+        let r2: std::result::Result<(), String> = Err("inner".into());
+        let e2 = r2.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e2}"), "outer 1: inner");
+    }
+}

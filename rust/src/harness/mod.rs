@@ -20,6 +20,21 @@ impl BenchResult {
     pub fn ops_per_sec(&self) -> f64 {
         1e9 / self.mean_ns
     }
+
+    /// One JSON object for `BENCH_*.json` artifacts (in-tree formatter;
+    /// the offline dependency set has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.2},\"p50_ns\":{:.2},\"p99_ns\":{:.2},\"min_ns\":{:.2},\"ops_per_sec\":{:.2}}}",
+            self.name,
+            self.iters,
+            self.mean_ns,
+            self.p50_ns,
+            self.p99_ns,
+            self.min_ns,
+            self.ops_per_sec()
+        )
+    }
 }
 
 /// Benchmark runner with a global time budget per benchmark.
@@ -90,6 +105,12 @@ impl Bencher {
         &self.results
     }
 
+    /// JSON array of all results so far.
+    pub fn results_json(&self) -> String {
+        let items: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
+        format!("[{}]", items.join(","))
+    }
+
     /// Render an aligned results table.
     pub fn table(&self, title: &str) -> String {
         let mut s = format!("{title}\n");
@@ -146,5 +167,21 @@ mod tests {
         assert!(fmt_ns(5e3).contains("µs"));
         assert!(fmt_ns(5e6).contains("ms"));
         assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_output_parses() {
+        let mut b = Bencher { budget: Duration::from_millis(20), warmup: Duration::from_millis(5), results: vec![] };
+        b.bench("a/b/1", || 1u32);
+        b.bench("c", || 2u32);
+        let doc = crate::json::Json::parse(&b.results_json()).expect("valid JSON");
+        match doc {
+            crate::json::Json::Arr(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[0].get("name"), Some(&crate::json::Json::Str("a/b/1".into())));
+                assert!(items[0].get("mean_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
     }
 }

@@ -8,16 +8,26 @@
 //! Layer map (see DESIGN.md):
 //! - [`formats`] — the numeric-format zoo: IEEE floats, standard posits,
 //!   b-posits, takums, the 800-bit quire, and exact shared arithmetic.
+//! - [`vector`] — branch-free batched codecs (lane-parallel encode/decode
+//!   over slices, the software mirror of the paper's fixed-mux insight) and
+//!   quire-exact dot/axpy/gemv kernels: the serving hot path's data plane.
 //! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
 //!   power) and the six decoder/encoder circuits of Figs 8–13.
 //! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis
 //!   (Figs 6/7).
-//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts.
-//! - [`coordinator`] — the L3 serving loop: batching, quantization, metrics.
-//! - [`harness`] — self-contained benchmark harness (criterion-style).
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts
+//!   (behind the `runtime` cargo feature; a stub with a clear "disabled"
+//!   error path otherwise, so offline builds need no libxla).
+//! - [`coordinator`] — the L3 serving loop: batching, quantization through
+//!   the vector codec with buffer reuse, codec/execute-split metrics.
+//! - [`harness`] — self-contained benchmark harness (criterion-style) with
+//!   JSON emission for `BENCH_*.json` artifacts.
+//! - [`error`] — in-tree anyhow-style error type (offline dependency set).
 //! - [`testutil`] — PRNG + property-testing utilities used across tests.
 
+pub mod error;
 pub mod formats;
+pub mod vector;
 pub mod hw;
 pub mod accuracy;
 pub mod runtime;

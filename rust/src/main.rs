@@ -21,12 +21,20 @@ fn main() {
     }
 }
 
-fn run(cmd: Command) -> anyhow::Result<()> {
+fn run(cmd: Command) -> positron::error::Result<()> {
     match cmd {
         Command::Help => println!("{}", cli::HELP),
         Command::Info => {
             println!("positron — b-posit ⟨n,6,5⟩ reproduction");
             println!("formats: p8 p16 p32 p64 bp16 bp32 bp64 bp16e3 f16 bf16 f32 f64 t16 t32 t64");
+            println!(
+                "runtime: {}",
+                if positron::runtime::runtime_enabled() {
+                    "enabled (PJRT/XLA)"
+                } else {
+                    "disabled (build with --features runtime)"
+                }
+            );
             let dir = positron::runtime::default_artifact_dir();
             println!(
                 "artifacts: {} ({})",
@@ -35,18 +43,23 @@ fn run(cmd: Command) -> anyhow::Result<()> {
             );
         }
         Command::Codec { fmt, values } => {
-            for line in cli::run_codec(&fmt, &values).map_err(anyhow::Error::msg)? {
+            for line in cli::run_codec(&fmt, &values).map_err(positron::error::Error::msg)? {
                 println!("{line}");
             }
         }
         Command::Accuracy { csv_dir } => {
-            for line in cli::run_accuracy(csv_dir.as_deref()).map_err(anyhow::Error::msg)? {
+            for line in cli::run_accuracy(csv_dir.as_deref()).map_err(positron::error::Error::msg)? {
                 println!("{line}");
             }
         }
         Command::Tables => {
             for table in cli::run_tables() {
                 println!("{table}");
+            }
+        }
+        Command::VectorBench { len, json } => {
+            for line in cli::run_vector_bench(len, json.as_deref()).map_err(positron::error::Error::msg)? {
+                println!("{line}");
             }
         }
         Command::Serve { requests, artifact_dir } => {
@@ -86,6 +99,13 @@ fn run(cmd: Command) -> anyhow::Result<()> {
                 "latency p50 {} µs  p99 {} µs  max {} µs; {} batches, mean batch {:.1}, {} rejected",
                 m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch, m.rejected
             );
+            println!(
+                "codec {:.1} µs/batch, execute {:.1} µs/batch (codec share {:.2}%)",
+                m.codec_ns_per_batch() / 1e3,
+                m.execute_ns_per_batch() / 1e3,
+                100.0 * m.codec_ns as f64 / (m.codec_ns + m.execute_ns).max(1) as f64
+            );
+            println!("--- /metrics ---\n{}", m.render());
         }
     }
     Ok(())

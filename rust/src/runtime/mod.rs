@@ -1,34 +1,137 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
-//! Python never runs on this path — the artifacts are self-contained.
+//! Runtime layer: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them. Python never runs on this
+//! path — the artifacts are self-contained.
+//!
+//! The actual executor is PJRT/XLA-backed and lives in [`pjrt`], compiled
+//! only with the `runtime` cargo feature (it needs the `xla` crate and a
+//! libxla install; see rust/Cargo.toml). Default builds get a stub whose
+//! constructors return a clear "runtime disabled" error, so every other
+//! layer — formats, vector codec, coordinator codec path, CLI, benches —
+//! builds and tests fully offline.
+//!
+//! [`Literal`] is the backend-agnostic host tensor exchanged with the
+//! executor; it owns its buffer so the serving loop can reuse allocations
+//! across batches ([`Literal::copy_from_f32`]).
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{anyhow, Context, Result};
 use crate::json::Json;
+
+#[cfg(feature = "runtime")]
+mod pjrt;
+
+/// Error message for every entry point that needs the PJRT backend.
+pub const RUNTIME_DISABLED: &str = "PJRT runtime disabled at build time: rebuild with `cargo build \
+     --release --features runtime` (requires the `xla` crate and libxla; see rust/Cargo.toml)";
+
+/// True when this build carries the PJRT/XLA backend.
+pub fn runtime_enabled() -> bool {
+    cfg!(feature = "runtime")
+}
+
+/// Backend-agnostic host tensor: typed buffer + dims. The buffer is plain
+/// host memory; the PJRT backend converts on execute.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Literal {
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Overwrite an existing f32 literal in place (no reallocation) —
+    /// the serving loop's per-batch input refresh.
+    pub fn copy_from_f32(&mut self, src: &[f32]) -> Result<()> {
+        match self {
+            Literal::F32 { data, .. } if data.len() == src.len() => {
+                data.copy_from_slice(src);
+                Ok(())
+            }
+            Literal::F32 { data, .. } => {
+                Err(anyhow!("literal length mismatch: have {}, got {}", data.len(), src.len()))
+            }
+            Literal::I32 { .. } => Err(anyhow!("copy_from_f32 on an i32 literal")),
+        }
+    }
+}
+
+/// Build a rank-1 f32 literal.
+pub fn lit_f32(v: &[f32]) -> Literal {
+    Literal::F32 { data: v.to_vec(), dims: vec![v.len()] }
+}
+
+/// Build a rank-2 f32 literal.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+    if v.len() != rows * cols {
+        return Err(anyhow!("lit_f32_2d: {} elements for {rows}x{cols}", v.len()));
+    }
+    Ok(Literal::F32 { data: v.to_vec(), dims: vec![rows, cols] })
+}
+
+/// Build a rank-1 i32 literal.
+pub fn lit_i32(v: &[i32]) -> Literal {
+    Literal::I32 { data: v.to_vec(), dims: vec![v.len()] }
+}
+
+/// Build a rank-2 i32 literal.
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<Literal> {
+    if v.len() != rows * cols {
+        return Err(anyhow!("lit_i32_2d: {} elements for {rows}x{cols}", v.len()));
+    }
+    Ok(Literal::I32 { data: v.to_vec(), dims: vec![rows, cols] })
+}
 
 /// A PJRT client plus the artifact directory.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    #[cfg(feature = "runtime")]
+    backend: pjrt::Backend,
     dir: PathBuf,
 }
 
 /// One compiled executable (a single HLO module).
 pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
+    #[cfg(feature = "runtime")]
+    exe: pjrt::Executable,
     pub name: String,
 }
 
 impl Runtime {
-    /// CPU PJRT client rooted at an artifact directory.
+    /// CPU PJRT client rooted at an artifact directory. Errors with
+    /// [`RUNTIME_DISABLED`] when built without the `runtime` feature.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime { client, dir: artifact_dir.as_ref().to_path_buf() })
+        let dir = artifact_dir.as_ref().to_path_buf();
+        #[cfg(feature = "runtime")]
+        {
+            Ok(Runtime { backend: pjrt::Backend::cpu()?, dir })
+        }
+        #[cfg(not(feature = "runtime"))]
+        {
+            let _ = dir;
+            Err(anyhow!("{RUNTIME_DISABLED}"))
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "runtime")]
+        {
+            self.backend.platform()
+        }
+        #[cfg(not(feature = "runtime"))]
+        {
+            "disabled".to_string()
+        }
     }
 
     pub fn dir(&self) -> &Path {
@@ -37,14 +140,16 @@ impl Runtime {
 
     /// Load and compile an HLO-text artifact (e.g. `model_bposit.hlo.txt`).
     pub fn load(&self, file: &str) -> Result<LoadedModel> {
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {file}: {e:?}"))?;
-        Ok(LoadedModel { exe, name: file.to_string() })
+        #[cfg(feature = "runtime")]
+        {
+            let exe = self.backend.compile(&self.dir.join(file))?;
+            Ok(LoadedModel { exe, name: file.to_string() })
+        }
+        #[cfg(not(feature = "runtime"))]
+        {
+            let _ = file;
+            Err(anyhow!("{RUNTIME_DISABLED}"))
+        }
     }
 
     /// Read + parse a JSON artifact.
@@ -56,54 +161,31 @@ impl Runtime {
 }
 
 impl LoadedModel {
-    /// Execute with the given literals; unwraps the 1-tuple result
-    /// (aot.py lowers with return_tuple=True).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
-        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
-    }
-
     /// Execute and read the output back as a f32 vector.
-    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
-        let out = self.run(inputs)?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        #[cfg(feature = "runtime")]
+        {
+            self.exe.run_f32(inputs).with_context(|| format!("execute {}", self.name))
+        }
+        #[cfg(not(feature = "runtime"))]
+        {
+            let _ = inputs;
+            Err(anyhow!("{RUNTIME_DISABLED}"))
+        }
     }
 
     /// Execute and read the output back as an i32 vector.
-    pub fn run_i32(&self, inputs: &[xla::Literal]) -> Result<Vec<i32>> {
-        let out = self.run(inputs)?;
-        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+    pub fn run_i32(&self, inputs: &[Literal]) -> Result<Vec<i32>> {
+        #[cfg(feature = "runtime")]
+        {
+            self.exe.run_i32(inputs).with_context(|| format!("execute {}", self.name))
+        }
+        #[cfg(not(feature = "runtime"))]
+        {
+            let _ = inputs;
+            Err(anyhow!("{RUNTIME_DISABLED}"))
+        }
     }
-}
-
-/// Build a rank-1 f32 literal.
-pub fn lit_f32(v: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-/// Build a rank-2 f32 literal.
-pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    assert_eq!(v.len(), rows * cols);
-    xla::Literal::vec1(v)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
-
-/// Build a rank-1 i32 literal.
-pub fn lit_i32(v: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-/// Build a rank-2 i32 literal.
-pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    assert_eq!(v.len(), rows * cols);
-    xla::Literal::vec1(v)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape: {e:?}"))
 }
 
 /// The trained model weights + golden vectors exported by aot.py.
@@ -162,7 +244,7 @@ impl ModelWeights {
 
     /// Literals for the quantized model in aot.py's argument order
     /// (w1_bits, b1, w2_bits, b2) — prepend the batch literal to call.
-    pub fn bposit_arg_literals(&self) -> Result<Vec<xla::Literal>> {
+    pub fn bposit_arg_literals(&self) -> Result<Vec<Literal>> {
         Ok(vec![
             lit_i32_2d(&self.w1_bits, self.d, self.h)?,
             lit_f32(&self.b1),
@@ -172,7 +254,7 @@ impl ModelWeights {
     }
 
     /// Literals for the f32 model (w1, b1, w2, b2).
-    pub fn f32_arg_literals(&self) -> Result<Vec<xla::Literal>> {
+    pub fn f32_arg_literals(&self) -> Result<Vec<Literal>> {
         Ok(vec![
             lit_f32_2d(&self.w1, self.d, self.h)?,
             lit_f32(&self.b1),
@@ -192,4 +274,36 @@ pub fn default_artifact_dir() -> PathBuf {
 /// True if the AOT artifacts exist (tests skip gracefully otherwise).
 pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("model_bposit.hlo.txt").exists() && dir.join("weights.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_copy() {
+        let mut l = lit_f32_2d(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        assert_eq!(l.len(), 4);
+        l.copy_from_f32(&[5.0, 6.0, 7.0, 8.0]).unwrap();
+        match &l {
+            Literal::F32 { data, dims } => {
+                assert_eq!(data, &vec![5.0, 6.0, 7.0, 8.0]);
+                assert_eq!(dims, &vec![2, 2]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert!(l.copy_from_f32(&[1.0]).is_err());
+        assert!(lit_i32(&[1]).len() == 1);
+        assert!(lit_f32_2d(&[1.0], 2, 2).is_err());
+        assert!(lit_i32_2d(&[1], 2, 2).is_err());
+    }
+
+    #[test]
+    fn stub_reports_disabled() {
+        if runtime_enabled() {
+            return; // real backend present; covered by integration tests
+        }
+        let err = Runtime::cpu("artifacts").unwrap_err();
+        assert!(format!("{err}").contains("runtime disabled"), "{err}");
+    }
 }

@@ -1,0 +1,78 @@
+//! XLA/PJRT-backed executor — compiled only with `--features runtime`.
+//! Requires the `xla` crate (xla-rs) and a libxla install; see
+//! rust/Cargo.toml for how to vendor it. Everything xla-typed stays inside
+//! this module so the rest of the crate is backend-agnostic.
+
+use std::path::Path;
+
+use super::Literal;
+use crate::error::{anyhow, Result};
+
+/// CPU PJRT client.
+pub struct Backend {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Backend {
+    pub fn cpu() -> Result<Backend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Backend { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Parse + compile an HLO-text artifact.
+    pub fn compile(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// Convert a backend-agnostic literal to an xla literal.
+fn to_xla(l: &Literal) -> Result<xla::Literal> {
+    let (lit, dims) = match l {
+        Literal::F32 { data, dims } => (xla::Literal::vec1(data.as_slice()), dims),
+        Literal::I32 { data, dims } => (xla::Literal::vec1(data.as_slice()), dims),
+    };
+    if dims.len() <= 1 {
+        return Ok(lit);
+    }
+    let shape: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&shape).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+impl Executable {
+    /// Execute with the given literals; unwraps the 1-tuple result
+    /// (aot.py lowers with return_tuple=True).
+    fn run(&self, inputs: &[Literal]) -> Result<xla::Literal> {
+        let args: Vec<xla::Literal> = inputs.iter().map(to_xla).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e:?}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    pub fn run_f32(&self, inputs: &[Literal]) -> Result<Vec<f32>> {
+        let out = self.run(inputs)?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    }
+
+    pub fn run_i32(&self, inputs: &[Literal]) -> Result<Vec<i32>> {
+        let out = self.run(inputs)?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))
+    }
+}

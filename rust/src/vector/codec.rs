@@ -1,0 +1,411 @@
+//! Branch-free batched posit-family codecs.
+//!
+//! The paper's core hardware insight — bounding the regime to `rs` bits
+//! turns variable-shift/LZC decode into fixed mux selection — has a direct
+//! software analogue: with the regime bounded, every lane of a batch runs
+//! the *same* straight-line instruction sequence, so encode/decode over a
+//! slice becomes branch-free, mispredict-free, and autovectorizer-friendly.
+//! This module is that lane codec: chunked (8-lane) encode/decode for
+//! b-posit⟨32,6,5⟩, posit⟨32,2⟩, any ⟨n≤32, rs, 1≤es≤8⟩ spec, and the
+//! trivial f32⇄bits pair, over `&[f32]`/`&[u32]` slices with in-place
+//! (`_into`) variants for buffer reuse on the serving hot path.
+//!
+//! ## Contract (identical to the scalar fast path in
+//! [`crate::coordinator::quantizer`] and the Pallas kernel)
+//! - Encode: f32 subnormal inputs (|x| < 2^−126) quantize to 0 (FTZ/DAZ
+//!   end-to-end); NaN/Inf → NaR.
+//! - Decode: values below the f32 normal range flush to ±0; above it,
+//!   ±∞; NaR → canonical quiet NaN.
+//!
+//! Verified against the general pattern-space-RNE codec exhaustively for
+//! 16-bit formats and by stratified 2^20 sweeps for BP32/P32 (see
+//! rust/tests/vector_parity.rs), and bit-identical to the scalar
+//! `fast_bp32_*` pair on all inputs.
+
+use crate::formats::posit::PositSpec;
+
+/// Lane width of the chunked loops. 8 × u32 = one AVX2 register; the inner
+/// loops carry no cross-lane dependency, so narrower ISAs still profit via
+/// unrolled ILP.
+pub const LANES: usize = 8;
+
+const F32_NAN_BITS: u32 = 0x7fc0_0000;
+
+/// True when the branch-free lane codec supports this spec (the general
+/// [`PositSpec`] codec in `formats::posit` covers everything else).
+pub fn spec_supported(spec: &PositSpec) -> bool {
+    (3..=32).contains(&spec.n) && spec.rs >= 2 && spec.rs <= spec.n - 1 && (1..=8).contains(&spec.es)
+}
+
+// ----------------------------------------------------------------------
+// Lane primitives: straight-line, no data-dependent branches. The `if`
+// expressions below are pure value selects (both arms side-effect free);
+// LLVM lowers them to cmov/blend, never to control flow.
+// ----------------------------------------------------------------------
+
+/// Encode one f32 into an n-bit posit/b-posit word (see module contract).
+#[inline(always)]
+fn encode_lane(n: u32, rs: u32, es: u32, x: f32) -> u32 {
+    debug_assert!((3..=32).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
+    let m = n - 1;
+    let mask_n: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+    let nar: u32 = 1u32 << m;
+    let maxpos: u64 = (1u64 << m) - 1;
+    let bounded = rs < m;
+    let r_max: i32 = rs as i32 - 1;
+    let r_min: i32 = if bounded { -(rs as i32) } else { -(n as i32 - 2) };
+
+    let bits = x.to_bits();
+    let sign = bits >> 31;
+    let biased = ((bits >> 23) & 0xff) as i32;
+    let f23 = (bits & 0x7f_ffff) as u64;
+    let is_zero_or_sub = biased == 0; // zero and FTZ'd subnormals
+    let is_special = biased == 0xff; // NaN/Inf → NaR
+    let t = biased - 127;
+    let r = t >> es; // floor(t / 2^es)
+    let e = (t & ((1i32 << es) - 1)) as u64; // t mod 2^es, in [0, 2^es)
+    let sat_hi = r > r_max;
+    let sat_lo = r < r_min;
+    let rc = r.clamp(r_min, r_max); // keep shifts in range; sat masks win below
+    let run: u32 = if rc >= 0 { (rc + 1) as u32 } else { (-rc) as u32 };
+    let capped = run >= rs; // regime hits the bound: no terminator bit
+    let w_reg = if capped { rs } else { run + 1 };
+    // Regime field value in w_reg bits: a run of ones/zeros plus the
+    // terminator when not capped.
+    let reg_val: u64 = if rc >= 0 { ((1u64 << w_reg) - 1) - ((!capped) as u64) } else { (!capped) as u64 };
+    // Serialize regime ‖ exponent ‖ fraction MSB-first into a u64 stream
+    // (w_reg + es + 23 ≤ 31 + 8 + 23 ≤ 62 bits: shifts never underflow).
+    let sh_reg = 64 - w_reg;
+    let sh_exp = sh_reg - es;
+    let sh_frac = sh_exp - 23;
+    let s = (reg_val << sh_reg) | (e << sh_exp) | (f23 << sh_frac);
+    // Cut at m bits with round-to-nearest-even: rem+lsb>half ⟺ RNE up.
+    let cut = 64 - m; // 33..=61
+    let q = s >> cut;
+    let rem = s & ((1u64 << cut) - 1);
+    let half = 1u64 << (cut - 1);
+    let up = (rem + (q & 1) > half) as u64;
+    // Carry-out saturates to maxpos (never NaR); a nonzero real never
+    // rounds to the zero pattern (min clamp to minpos).
+    let body = (q + up).min(maxpos).max(1);
+    let body = if sat_hi { maxpos } else { body };
+    let body = if sat_lo { 1 } else { body };
+    let body32 = body as u32;
+    let word = (if sign == 1 { body32.wrapping_neg() } else { body32 }) & mask_n;
+    let word = if is_zero_or_sub { 0 } else { word };
+    if is_special {
+        nar
+    } else {
+        word
+    }
+}
+
+/// Decode one n-bit posit/b-posit word to f32 (see module contract).
+#[inline(always)]
+fn decode_lane(n: u32, rs: u32, es: u32, word: u32) -> f32 {
+    debug_assert!((3..=32).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
+    let m = n - 1;
+    let mask_n: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+    let body_mask: u32 = (1u32 << m) - 1;
+    let nar: u32 = 1u32 << m;
+
+    let word = word & mask_n;
+    let is_zero = word == 0;
+    let is_nar = word == nar;
+    let sign = (word >> m) & 1;
+    let mag = (if sign == 1 { word.wrapping_neg() } else { word }) & body_mask;
+    let b0 = (mag >> (m - 1)) & 1;
+    // Leading-run length within the m-bit body, capped at rs.
+    let probe = (if b0 == 1 { !mag } else { mag }) & body_mask;
+    let lz = (probe << (32 - m)).leading_zeros(); // probe == 0 ⇒ 32 ≥ m
+    let run = lz.min(m).min(rs);
+    let reg_len = run + (run != rs) as u32; // +terminator unless capped
+    let r: i32 = if b0 == 1 { run as i32 - 1 } else { -(run as i32) };
+    // Align the first post-regime bit to bit 63 of a u64 (the two-step
+    // shift keeps the amount ≤ 63 even when reg_len = m). Ghost exponent
+    // bits and the empty fraction fall out as zeros automatically.
+    let pay = ((mag as u64) << (63 - m + reg_len)) << 1;
+    let e = (pay >> (64 - es)) as i32;
+    let frac_top = pay << es; // fraction, MSB-aligned at bit 63
+    let t = r * (1i32 << es) + e;
+    // RNE the (≤ 29-bit) fraction to 23 f32 bits; guard/sticky live in the
+    // low 41 bits of frac_top.
+    let q = (frac_top >> 41) as u32;
+    let rem = frac_top & ((1u64 << 41) - 1);
+    let up = (rem + (q & 1) as u64 > (1u64 << 40)) as u32;
+    let frac = q + up;
+    let tt = t + (frac >> 23) as i32; // rounding carry bumps the scale
+    let frac = frac & 0x7f_ffff;
+    let underflow = tt < -126; // FTZ contract (keeps the sign)
+    let overflow = tt > 127;
+    let ttc = tt.clamp(-126, 127);
+    let fbits = (sign << 31) | (((ttc + 127) as u32) << 23) | frac;
+    let fbits = if underflow { sign << 31 } else { fbits };
+    let fbits = if overflow { (sign << 31) | 0x7f80_0000 } else { fbits };
+    let fbits = if is_zero { 0 } else { fbits };
+    let fbits = if is_nar { F32_NAN_BITS } else { fbits };
+    f32::from_bits(fbits)
+}
+
+// ----------------------------------------------------------------------
+// Chunked slice drivers. The spec parameters are loop-invariant constants
+// at every call site below, so each wrapper monomorphizes to a dedicated
+// straight-line inner loop.
+// ----------------------------------------------------------------------
+
+#[inline(always)]
+fn encode_slice(n: u32, rs: u32, es: u32, xs: &[f32], out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
+    let split = xs.len() - xs.len() % LANES;
+    let (xh, xt) = xs.split_at(split);
+    let (oh, ot) = out.split_at_mut(split);
+    for (xc, oc) in xh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            oc[l] = encode_lane(n, rs, es, xc[l]);
+        }
+    }
+    for (x, o) in xt.iter().zip(ot.iter_mut()) {
+        *o = encode_lane(n, rs, es, *x);
+    }
+}
+
+#[inline(always)]
+fn decode_slice(n: u32, rs: u32, es: u32, ws: &[u32], out: &mut [f32]) {
+    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
+    let split = ws.len() - ws.len() % LANES;
+    let (wh, wt) = ws.split_at(split);
+    let (oh, ot) = out.split_at_mut(split);
+    for (wc, oc) in wh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            oc[l] = decode_lane(n, rs, es, wc[l]);
+        }
+    }
+    for (w, o) in wt.iter().zip(ot.iter_mut()) {
+        *o = decode_lane(n, rs, es, *w);
+    }
+}
+
+// ---------------- b-posit⟨32,6,5⟩ (the serving format) ----------------
+
+/// Encode one f32 → b-posit32 word (branch-free lane form).
+#[inline]
+pub fn bp32_encode_lane(x: f32) -> u32 {
+    encode_lane(32, 6, 5, x)
+}
+
+/// Decode one b-posit32 word → f32 (branch-free lane form).
+#[inline]
+pub fn bp32_decode_lane(w: u32) -> f32 {
+    decode_lane(32, 6, 5, w)
+}
+
+/// Batched encode into a caller-owned buffer (`out.len() == xs.len()`).
+pub fn bp32_encode_into(xs: &[f32], out: &mut [u32]) {
+    encode_slice(32, 6, 5, xs, out);
+}
+
+/// Batched decode into a caller-owned buffer.
+pub fn bp32_decode_into(ws: &[u32], out: &mut [f32]) {
+    decode_slice(32, 6, 5, ws, out);
+}
+
+/// Allocating batched encode.
+pub fn bp32_encode(xs: &[f32]) -> Vec<u32> {
+    let mut out = vec![0u32; xs.len()];
+    bp32_encode_into(xs, &mut out);
+    out
+}
+
+/// Allocating batched decode.
+pub fn bp32_decode(ws: &[u32]) -> Vec<f32> {
+    let mut out = vec![0f32; ws.len()];
+    bp32_decode_into(ws, &mut out);
+    out
+}
+
+/// Fused quantize+dequantize of a buffer in place — what the server does
+/// to a batch so the model sees exactly b-posit-representable values.
+/// No intermediate word buffer, no allocation.
+pub fn bp32_roundtrip_in_place(xs: &mut [f32]) {
+    let split = xs.len() - xs.len() % LANES;
+    let (head, tail) = xs.split_at_mut(split);
+    for c in head.chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            c[l] = decode_lane(32, 6, 5, encode_lane(32, 6, 5, c[l]));
+        }
+    }
+    for x in tail.iter_mut() {
+        *x = decode_lane(32, 6, 5, encode_lane(32, 6, 5, *x));
+    }
+}
+
+/// Fused roundtrip into a separate output buffer.
+pub fn bp32_roundtrip_into(xs: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), out.len(), "roundtrip: input/output length mismatch");
+    out.copy_from_slice(xs);
+    bp32_roundtrip_in_place(out);
+}
+
+// ---------------- posit⟨32,2⟩ (standard-posit comparison) ----------------
+
+/// Encode one f32 → posit⟨32,2⟩ word.
+#[inline]
+pub fn p32_encode_lane(x: f32) -> u32 {
+    encode_lane(32, 31, 2, x)
+}
+
+/// Decode one posit⟨32,2⟩ word → f32.
+#[inline]
+pub fn p32_decode_lane(w: u32) -> f32 {
+    decode_lane(32, 31, 2, w)
+}
+
+/// Batched posit⟨32,2⟩ encode into a caller-owned buffer.
+pub fn p32_encode_into(xs: &[f32], out: &mut [u32]) {
+    encode_slice(32, 31, 2, xs, out);
+}
+
+/// Batched posit⟨32,2⟩ decode into a caller-owned buffer.
+pub fn p32_decode_into(ws: &[u32], out: &mut [f32]) {
+    decode_slice(32, 31, 2, ws, out);
+}
+
+// ---------------- any supported spec (parity + small formats) ----------------
+
+/// Encode one f32 under any supported spec (see [`spec_supported`]).
+pub fn encode_word(spec: &PositSpec, x: f32) -> u32 {
+    assert!(spec_supported(spec), "lane codec does not support {spec:?}");
+    encode_lane(spec.n, spec.rs, spec.es, x)
+}
+
+/// Decode one word under any supported spec.
+pub fn decode_word(spec: &PositSpec, w: u32) -> f32 {
+    assert!(spec_supported(spec), "lane codec does not support {spec:?}");
+    decode_lane(spec.n, spec.rs, spec.es, w)
+}
+
+/// Batched encode under any supported spec.
+pub fn encode_slice_into(spec: &PositSpec, xs: &[f32], out: &mut [u32]) {
+    assert!(spec_supported(spec), "lane codec does not support {spec:?}");
+    encode_slice(spec.n, spec.rs, spec.es, xs, out);
+}
+
+/// Batched decode under any supported spec.
+pub fn decode_slice_into(spec: &PositSpec, ws: &[u32], out: &mut [f32]) {
+    assert!(spec_supported(spec), "lane codec does not support {spec:?}");
+    decode_slice(spec.n, spec.rs, spec.es, ws, out);
+}
+
+// ---------------- f32 ⇄ bits (baseline lane for the bench sweep) ----------------
+
+/// Batched f32 → raw bits (the no-op codec: memcpy-speed upper bound).
+pub fn f32_to_bits_into(xs: &[f32], out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = x.to_bits();
+    }
+}
+
+/// Batched raw bits → f32.
+pub fn bits_to_f32_into(ws: &[u32], out: &mut [f32]) {
+    assert_eq!(ws.len(), out.len());
+    for (o, &w) in out.iter_mut().zip(ws) {
+        *o = f32::from_bits(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{BP32, P32};
+
+    #[test]
+    fn bp32_known_patterns() {
+        assert_eq!(bp32_encode_lane(1.0), 0x4000_0000);
+        assert_eq!(bp32_encode_lane(-1.0), 0xC000_0000);
+        assert_eq!(bp32_decode_lane(0x4000_0000), 1.0);
+        assert_eq!(bp32_encode_lane(0.0), 0);
+        assert_eq!(bp32_encode_lane(f32::NAN), 0x8000_0000);
+        assert_eq!(bp32_encode_lane(f32::INFINITY), 0x8000_0000);
+        assert!(bp32_decode_lane(0x8000_0000).is_nan());
+        assert_eq!(bp32_decode_lane(0).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn bp32_ftz_contract() {
+        // Subnormal f32 inputs flush to the zero pattern.
+        let sub = f32::from_bits(1); // 2^-149
+        assert_eq!(bp32_encode_lane(sub), 0);
+        assert_eq!(bp32_encode_lane(-sub), 0);
+        // minpos (2^-192-scale) decodes below the f32 normal range → ±0.
+        assert_eq!(bp32_decode_lane(1).to_bits(), 0.0f32.to_bits());
+        assert_eq!(bp32_decode_lane(1u32.wrapping_neg()).to_bits(), (-0.0f32).to_bits());
+        // maxpos (2^191-scale) overflows f32 → ±inf.
+        assert_eq!(bp32_decode_lane(0x7fff_ffff), f32::INFINITY);
+        assert_eq!(bp32_decode_lane(0x8000_0001), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn p32_matches_general_codec_on_knowns() {
+        for x in [1.0f32, -1.0, 0.5, 3.25, 1e30, -1e-30, 123456.78] {
+            assert_eq!(
+                p32_encode_lane(x) as u64,
+                P32.from_f64(x as f64),
+                "p32 encode {x}"
+            );
+        }
+        for w in [0x4000_0000u32, 0xC000_0000, 1, 0x7fff_ffff, 12345] {
+            assert_eq!(p32_decode_lane(w), P32.to_f64(w as u64) as f32, "p32 decode {w:#x}");
+        }
+    }
+
+    #[test]
+    fn slice_paths_match_lane_paths() {
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 1.73).collect();
+        let mut words = vec![0u32; xs.len()];
+        bp32_encode_into(&xs, &mut words);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(words[i], bp32_encode_lane(x));
+        }
+        let mut back = vec![0f32; xs.len()];
+        bp32_decode_into(&words, &mut back);
+        assert_eq!(back, xs, "fovea values survive the roundtrip exactly");
+
+        let mut rt = xs.clone();
+        bp32_roundtrip_in_place(&mut rt);
+        assert_eq!(rt, xs);
+        let mut rt2 = vec![0f32; xs.len()];
+        bp32_roundtrip_into(&xs, &mut rt2);
+        assert_eq!(rt2, xs);
+
+        assert_eq!(bp32_encode(&xs), words);
+        assert_eq!(bp32_decode(&words), xs);
+    }
+
+    #[test]
+    fn generic_entry_points_agree_with_specialized() {
+        let xs: Vec<f32> = (0..23).map(|i| (i as f32) * 0.37 - 4.0).collect();
+        let mut a = vec![0u32; xs.len()];
+        let mut b = vec![0u32; xs.len()];
+        bp32_encode_into(&xs, &mut a);
+        encode_slice_into(&BP32, &xs, &mut b);
+        assert_eq!(a, b);
+        let mut fa = vec![0f32; xs.len()];
+        let mut fb = vec![0f32; xs.len()];
+        bp32_decode_into(&a, &mut fa);
+        decode_slice_into(&BP32, &a, &mut fb);
+        assert_eq!(fa, fb);
+        assert!(spec_supported(&BP32) && spec_supported(&P32));
+        assert!(!spec_supported(&crate::formats::posit::P64));
+    }
+
+    #[test]
+    fn f32_bits_roundtrip() {
+        let xs = [0.0f32, -1.5, 3.25, f32::INFINITY];
+        let mut w = [0u32; 4];
+        let mut back = [0f32; 4];
+        f32_to_bits_into(&xs, &mut w);
+        bits_to_f32_into(&w, &mut back);
+        assert_eq!(xs, back);
+    }
+}

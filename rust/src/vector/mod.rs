@@ -1,0 +1,20 @@
+//! Vector layer: the serving hot path's data plane.
+//!
+//! Two halves:
+//! - [`codec`] — branch-free, chunked (8-lane) batched encode/decode for
+//!   b-posit⟨32,6,5⟩, posit⟨32,2⟩, any ⟨n≤32,rs,es⟩ spec, and f32⇄bits,
+//!   with in-place variants for zero-allocation buffer reuse. This is the
+//!   software mirror of the paper's bounded-regime ⇒ fixed-mux insight.
+//! - [`kernels`] — batched `dot`, `axpy`, and `gemv` with 800-bit
+//!   [`crate::formats::Quire`]-exact accumulation plus rounded f32 fast
+//!   paths: the repo's first linear-algebra workload, and the layer later
+//!   scaling work (explicit SIMD, sharding, GEMM) plugs into.
+//!
+//! The coordinator's quantizer routes every batch through [`codec`];
+//! `positron vector-bench` and `cargo bench --bench vector_codec` measure
+//! the scalar-vs-vector throughput and emit `BENCH_vector_codec.json`.
+
+pub mod codec;
+pub mod kernels;
+
+pub use codec::LANES;

@@ -1,6 +1,9 @@
 //! Coordinator integration: the batching server against the real compiled
 //! model — correctness, batching behavior, concurrency, backpressure.
 //! Skips when artifacts haven't been built.
+//!
+//! Feature-gated: needs the PJRT/XLA backend (`--features runtime`).
+#![cfg(feature = "runtime")]
 
 use std::sync::Arc;
 use std::time::Duration;

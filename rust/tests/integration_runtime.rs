@@ -2,6 +2,9 @@
 //! CPU client, and cross-check against both the Python-recorded goldens
 //! and the Rust codec — the proof that all three layers agree.
 //! Skips (with a notice) when artifacts haven't been built.
+//!
+//! Feature-gated: needs the PJRT/XLA backend (`--features runtime`).
+#![cfg(feature = "runtime")]
 
 use positron::formats::posit::BP32;
 use positron::runtime::{

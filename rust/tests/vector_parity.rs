@@ -1,0 +1,298 @@
+//! Vector-codec parity: the branch-free lane codec (rust/src/vector) vs
+//! the scalar codecs it mirrors.
+//!
+//! Coverage (the ISSUE-1 test satellite):
+//! - exhaustive 2^16-pattern parity for posit⟨16,2⟩ and b-posit⟨16,6,5⟩
+//!   (decode of every pattern; encode of every pattern's value and of
+//!   random f32s, exercising the saturation paths);
+//! - stratified-random 2^20-sample parity for BP32 and P32 (every stratum
+//!   of the top 20 pattern/value bits visited once);
+//! - bit-identity of the BP32 lane codec against the scalar fast path;
+//! - quire-exact dot/gemv vs an f64-Kahan reference.
+//!
+//! The f32-facing contract shared by all codecs here: encode flushes f32
+//! subnormal inputs to 0 and maps NaN/Inf to NaR; decode flushes
+//! sub-f32-normal magnitudes to ±0 and saturates beyond f32 to ±∞.
+
+use positron::coordinator::quantizer;
+use positron::formats::posit::{PositSpec, BP16, BP32, P16, P32};
+use positron::formats::Decoded;
+use positron::testutil::Rng;
+use positron::vector::{codec, kernels};
+
+/// f64 → f32 under the vector-codec contract (cast, then FTZ keeping sign).
+fn to_f32_contract(v: f64) -> f32 {
+    let f = v as f32;
+    if f != 0.0 && f.abs() < f32::MIN_POSITIVE {
+        if f < 0.0 {
+            -0.0
+        } else {
+            0.0
+        }
+    } else {
+        f
+    }
+}
+
+/// Scalar-reference encode under the contract (general pattern-space codec).
+fn scalar_encode(spec: &PositSpec, x: f32) -> u32 {
+    if !x.is_finite() {
+        return spec.nar() as u32;
+    }
+    if x == 0.0 || x.abs() < f32::MIN_POSITIVE {
+        return 0;
+    }
+    spec.encode(&Decoded::from_f64(x as f64)) as u32
+}
+
+/// Scalar-reference decode under the contract.
+fn scalar_decode(spec: &PositSpec, w: u32) -> f32 {
+    to_f32_contract(spec.decode(w as u64).to_f64())
+}
+
+fn assert_bits_eq(got: f32, want: f32, ctx: &str) {
+    if want.is_nan() {
+        assert!(got.is_nan(), "{ctx}: got {got}, want NaN");
+    } else {
+        assert_eq!(got.to_bits(), want.to_bits(), "{ctx}: got {got} ({:#010x}), want {want} ({:#010x})", got.to_bits(), want.to_bits());
+    }
+}
+
+fn exhaustive_16bit(spec: PositSpec) {
+    // Decode: every 16-bit pattern.
+    for w in 0..=u16::MAX as u32 {
+        let got = codec::decode_word(&spec, w);
+        let want = scalar_decode(&spec, w);
+        assert_bits_eq(got, want, &format!("{spec:?} decode {w:#06x}"));
+    }
+    // Encode: every pattern's value that is representable under the f32
+    // contract (b-posit16 spans 2^±192, so extremes overflow f32 — skip).
+    let mut checked = 0u32;
+    for w in 0..=u16::MAX as u32 {
+        let v = spec.decode(w as u64).to_f64();
+        if v.is_nan() || v == 0.0 {
+            continue;
+        }
+        let x = to_f32_contract(v);
+        if !x.is_finite() || x == 0.0 {
+            continue; // outside the f32-facing contract
+        }
+        let got = codec::encode_word(&spec, x);
+        let want = scalar_encode(&spec, x);
+        assert_eq!(got, want, "{spec:?} encode {x} (from {w:#06x}): {got:#06x} vs {want:#06x}");
+        checked += 1;
+    }
+    assert!(checked > 60_000, "{spec:?}: only {checked} encode cases checked");
+    // Encode: random f32s spanning every scale — exercises saturation.
+    let mut rng = Rng::new(0x16b_u64 + spec.rs as u64);
+    for _ in 0..100_000 {
+        let x = f32::from_bits(rng.next_u32());
+        let got = codec::encode_word(&spec, x);
+        let want = scalar_encode(&spec, x);
+        assert_eq!(got, want, "{spec:?} encode {x} ({:#010x}): {got:#06x} vs {want:#06x}", x.to_bits());
+    }
+}
+
+#[test]
+fn p16_exhaustive_parity() {
+    exhaustive_16bit(P16);
+}
+
+#[test]
+fn bp16_exhaustive_parity() {
+    exhaustive_16bit(BP16); // the paper's ⟨16,6,5⟩
+}
+
+/// Stratified-random sweep: one sample per stratum of the top 20 bits, so
+/// all 2^20 strata of the 32-bit pattern/value space are visited exactly
+/// once with random low bits.
+fn stratified_32bit(spec: PositSpec) {
+    let mut rng = Rng::new(0x20_000 + spec.rs as u64);
+    for stratum in 0..(1u32 << 20) {
+        let low = rng.next_u32() & 0xfff;
+        // Decode parity on the stratified pattern.
+        let w = (stratum << 12) | low;
+        let got = codec::decode_word(&spec, w);
+        let want = scalar_decode(&spec, w);
+        assert_bits_eq(got, want, &format!("{spec:?} decode {w:#010x}"));
+        // Encode parity on the same bits reinterpreted as an f32 value —
+        // stratifying sign, exponent, and the top mantissa bits.
+        let x = f32::from_bits(w);
+        let got = codec::encode_word(&spec, x);
+        let want = scalar_encode(&spec, x);
+        assert_eq!(got, want, "{spec:?} encode {x} ({w:#010x}): {got:#010x} vs {want:#010x}");
+    }
+}
+
+#[test]
+fn bp32_stratified_parity_2_20() {
+    stratified_32bit(BP32);
+}
+
+#[test]
+fn p32_stratified_parity_2_20() {
+    stratified_32bit(P32);
+}
+
+#[test]
+fn bp32_lane_bit_identical_to_scalar_fast_path() {
+    // The acceptance bar: vector BP32 encode/decode is bit-identical to the
+    // scalar fast path on all test vectors (corners + PRNG sweep), and the
+    // slice drivers agree with the lane functions.
+    let corners: [u32; 10] = [
+        0,
+        1,
+        u32::MAX,
+        0x8000_0000,
+        0x8000_0001,
+        0x7fff_ffff,
+        0x4000_0000,
+        0xC000_0000,
+        0x0080_0000,
+        0x7f80_0000,
+    ];
+    for w in corners {
+        assert_bits_eq(
+            codec::bp32_decode_lane(w),
+            quantizer::fast_bp32_decode(w),
+            &format!("decode corner {w:#010x}"),
+        );
+        let x = f32::from_bits(w);
+        assert_eq!(codec::bp32_encode_lane(x), quantizer::fast_bp32_encode(x), "encode corner {w:#010x}");
+    }
+    let mut rng = Rng::new(42);
+    let mut words = Vec::with_capacity(1 << 16);
+    let mut vals = Vec::with_capacity(1 << 16);
+    for _ in 0..(1 << 16) {
+        let w = rng.next_u32();
+        words.push(w);
+        vals.push(f32::from_bits(w));
+        assert_bits_eq(
+            codec::bp32_decode_lane(w),
+            quantizer::fast_bp32_decode(w),
+            &format!("decode {w:#010x}"),
+        );
+        let x = f32::from_bits(w);
+        assert_eq!(codec::bp32_encode_lane(x), quantizer::fast_bp32_encode(x), "encode {w:#010x}");
+    }
+    // Slice drivers lane-for-lane.
+    let mut enc = vec![0u32; vals.len()];
+    codec::bp32_encode_into(&vals, &mut enc);
+    let mut dec = vec![0f32; words.len()];
+    codec::bp32_decode_into(&words, &mut dec);
+    for i in 0..vals.len() {
+        assert_eq!(enc[i], codec::bp32_encode_lane(vals[i]), "slice encode lane {i}");
+        assert_bits_eq(dec[i], codec::bp32_decode_lane(words[i]), &format!("slice decode lane {i}"));
+    }
+}
+
+// ----------------------------------------------------------------------
+// Quire kernels vs f64-Kahan reference
+// ----------------------------------------------------------------------
+
+/// Kahan-compensated f64 summation of the products aᵢ·bᵢ (each product is
+/// exact in f64 for f32 inputs).
+fn kahan_dot(a: &[f32], b: &[f32]) -> f64 {
+    let mut sum = 0.0f64;
+    let mut c = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let term = x as f64 * y as f64 - c;
+        let t = sum + term;
+        c = (t - sum) - term;
+        sum = t;
+    }
+    sum
+}
+
+#[test]
+fn quire_dot_matches_kahan_on_mixed_scales() {
+    let mut rng = Rng::new(0xd07);
+    let mut q = kernels::QuireDot::new();
+    for trial in 0..20 {
+        let n = 64 + (trial * 97) % 1000;
+        let a: Vec<f32> = (0..n)
+            .map(|_| {
+                let m = (rng.f64() - 0.5) * f64::powi(2.0, rng.below(41) as i32 - 20);
+                m as f32
+            })
+            .collect();
+        let b: Vec<f32> = (0..n)
+            .map(|_| {
+                let m = (rng.f64() - 0.5) * f64::powi(2.0, rng.below(41) as i32 - 20);
+                m as f32
+            })
+            .collect();
+        let exact = q.dot_f32(&a, &b);
+        let kahan = kahan_dot(&a, &b);
+        // The quire is exact; Kahan's worst-case error is ~2ε·Σ|aᵢbᵢ|, so
+        // scale the tolerance by the magnitude sum (not the cancelled
+        // result) with generous headroom.
+        let sum_abs: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        let tol = 1e-9 * sum_abs.max(1.0);
+        assert!(
+            (exact - kahan).abs() <= tol,
+            "trial {trial}: quire {exact} vs kahan {kahan} (n={n}, tol {tol:e})"
+        );
+    }
+}
+
+#[test]
+fn quire_dot_exact_where_kahan_breaks() {
+    // Σ over pairs (2^40, 1, -2^40): plain and even compensated f32 paths
+    // lose the ±1 terms; the quire returns the exact integer.
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for i in 0..100 {
+        let big = f32::powi(2.0, 40 + (i % 3));
+        a.push(big);
+        b.push(1.0f32);
+        a.push(1.0);
+        b.push(1.0);
+        a.push(big);
+        b.push(-1.0);
+    }
+    let mut q = kernels::QuireDot::new();
+    let exact = q.dot_f32(&a, &b);
+    assert_eq!(exact, 100.0, "quire must recover the cancelled units");
+    // The f64-Kahan reference also gets this one right — agreement check.
+    assert_eq!(kahan_dot(&a, &b), 100.0);
+    // The rounded f32 fast path demonstrably cannot (2^40 + 1 rounds away).
+    let fast = kernels::dot_f32(&a, &b);
+    assert_ne!(fast, 100.0);
+}
+
+#[test]
+fn gemv_quire_matches_kahan_rows() {
+    let mut rng = Rng::new(0x6e3);
+    let (rows, cols) = (17, 129);
+    let a: Vec<f32> = (0..rows * cols).map(|_| (rng.f64() - 0.5) as f32 * 8.0).collect();
+    let x: Vec<f32> = (0..cols).map(|_| (rng.f64() - 0.5) as f32 * 8.0).collect();
+    let mut q = kernels::QuireDot::new();
+    let mut y = vec![0f32; rows];
+    q.gemv_f32(&a, &x, &mut y);
+    for r in 0..rows {
+        let want = kahan_dot(&a[r * cols..(r + 1) * cols], &x) as f32;
+        // Quire row is exactly rounded; Kahan may differ by a final ulp
+        // when its f64 error straddles an f32 rounding boundary.
+        assert!(
+            (y[r] - want).abs() <= f32::EPSILON * want.abs().max(1.0),
+            "row {r}: quire {} vs kahan {want}",
+            y[r]
+        );
+    }
+}
+
+#[test]
+fn quire_dot_bp32_words_matches_f32_dot_on_exact_data() {
+    // Integer-valued data: both the bp32 fused dot and the f64 reference
+    // are exact, so the rounded bp32 result equals the true dot.
+    let mut rng = Rng::new(0xabc);
+    let a: Vec<f32> = (0..512).map(|_| (rng.below(2001) as f32) - 1000.0).collect();
+    let b: Vec<f32> = (0..512).map(|_| (rng.below(65) as f32) - 32.0).collect();
+    let a_bits: Vec<u32> = a.iter().map(|&v| codec::bp32_encode_lane(v)).collect();
+    let b_bits: Vec<u32> = b.iter().map(|&v| codec::bp32_encode_lane(v)).collect();
+    let mut q = kernels::QuireDot::new();
+    let fused = codec::bp32_decode_lane(q.dot_bp32(&a_bits, &b_bits));
+    let want = kahan_dot(&a, &b);
+    assert_eq!(fused as f64, want, "bp32 fused dot vs exact integer dot");
+}
