@@ -29,7 +29,9 @@ fn main() -> positron::error::Result<()> {
     let d = weights.d;
     let n_gold = weights.golden_y.len();
 
-    for (label, model_file) in [("f32 reference", "model_f32.hlo.txt"), ("b-posit quantized", "model_bposit.hlo.txt")] {
+    let variants =
+        [("f32 reference", "model_f32.hlo.txt"), ("b-posit quantized", "model_bposit.hlo.txt")];
+    for (label, model_file) in variants {
         let cfg = ServerConfig { model_file: model_file.into(), ..Default::default() };
         let server = Arc::new(InferenceServer::start(dir.clone(), cfg)?);
 

@@ -9,7 +9,9 @@ use std::time::{Duration, Instant};
 
 use positron::coordinator::{quantizer, InferenceServer, ServerConfig};
 use positron::harness::Bencher;
-use positron::runtime::{artifacts_available, default_artifact_dir, lit_f32_2d, ModelWeights, Runtime};
+use positron::runtime::{
+    artifacts_available, default_artifact_dir, lit_f32_2d, ModelWeights, Runtime,
+};
 
 fn main() -> positron::error::Result<()> {
     let dir = default_artifact_dir();
@@ -39,7 +41,10 @@ fn main() -> positron::error::Result<()> {
 
     // 3. Closed-loop serving: sweep client counts.
     println!("closed-loop serving (b-posit model):");
-    println!("{:>8} {:>12} {:>10} {:>10} {:>11}", "clients", "req/s", "p50 µs", "p99 µs", "mean batch");
+    println!(
+        "{:>8} {:>12} {:>10} {:>10} {:>11}",
+        "clients", "req/s", "p50 µs", "p99 µs", "mean batch"
+    );
     for clients in [1usize, 4, 16] {
         let server = Arc::new(InferenceServer::start(
             dir.clone(),

@@ -9,7 +9,10 @@ fn main() {
     let dec = ppa_rows(false, 60);
     let enc = ppa_rows(true, 60);
     let energy =
-        |i: usize| (dec[i].delay_ns + enc[i].delay_ns) * (2.0 * dec[i].peak_power_mw + enc[i].peak_power_mw);
+        |i: usize| {
+            (dec[i].delay_ns + enc[i].delay_ns)
+                * (2.0 * dec[i].peak_power_mw + enc[i].peak_power_mw)
+        };
 
     println!("Fig 16 — worst-case decode+encode energy per op (pJ):");
     println!("{:<8} {:>10} {:>10} {:>10}", "width", "float", "b-posit", "posit");
@@ -25,5 +28,9 @@ fn main() {
     let r32 = energy(4) / energy(3);
     let r64 = energy(7) / energy(6);
     println!("\nb-posit/float energy ratio: 32-bit {r32:.2} (paper ≈1.0 — tied), 64-bit {r64:.2} (paper ≈0.60 — 40% less)");
-    println!("b-posit/posit  energy ratio: 32-bit {:.2}, 64-bit {:.2}", energy(4) / energy(5), energy(7) / energy(8));
+    println!(
+        "b-posit/posit  energy ratio: 32-bit {:.2}, 64-bit {:.2}",
+        energy(4) / energy(5),
+        energy(7) / energy(8)
+    );
 }

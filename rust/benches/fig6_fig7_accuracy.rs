@@ -43,5 +43,8 @@ fn main() {
         100.0 * accuracy::pattern_census(&BP32, blo, bhi + 1)
     );
     let (flo, fhi, _) = accuracy::fovea(&BP32);
-    println!("b-posit32 fovea: 2^{flo}..2^{fhi} (paper ±32) with {} frac bits (float32: 23)", BP32.frac_bits_at(0));
+    println!(
+        "b-posit32 fovea: 2^{flo}..2^{fhi} (paper ±32) with {} frac bits (float32: 23)",
+        BP32.frac_bits_at(0)
+    );
 }

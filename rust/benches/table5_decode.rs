@@ -22,7 +22,8 @@ const PAPER: &[(&str, f64, f64, f64)] = &[
 
 fn main() {
     let rows = ppa_rows(false, 60);
-    println!("{}", format_table("Table 5 — decoder PPA (measured on the gate-level cost model)", &rows));
+    let title = "Table 5 — decoder PPA (measured on the gate-level cost model)";
+    println!("{}", format_table(title, &rows));
 
     println!("paper-reported values (freepdk45 post-layout) and measured/paper ratios:");
     println!(

@@ -20,7 +20,8 @@ const PAPER: &[(&str, f64, f64, f64)] = &[
 
 fn main() {
     let rows = ppa_rows(true, 60);
-    println!("{}", format_table("Table 6 — encoder PPA (measured on the gate-level cost model)", &rows));
+    let title = "Table 6 — encoder PPA (measured on the gate-level cost model)";
+    println!("{}", format_table(title, &rows));
 
     println!("paper-reported values and measured/paper ratios:");
     println!(

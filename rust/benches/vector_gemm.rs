@@ -1,0 +1,20 @@
+//! Bench: serial vs sharded (PALLAS_THREADS) blocked GEMM — the f32 fast
+//! path, the decode-fused quantized-weight path, and the 800-bit
+//! quire-exact path — with GFLOP-equivalents and a serial/sharded
+//! bit-identity check. Emits `BENCH_vector_gemm.json`.
+//!
+//! Run: `cargo bench --bench vector_gemm`
+
+fn main() {
+    match positron::cli::run_gemm_bench(&[64, 128, 256, 512], 128, Some("BENCH_vector_gemm.json")) {
+        Ok(lines) => {
+            for l in lines {
+                println!("{l}");
+            }
+        }
+        Err(e) => {
+            eprintln!("gemm-bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -46,11 +46,15 @@ pub fn fovea<C: Codec + ?Sized>(fmt: &C) -> (i32, i32, f64) {
 /// accurate as `baseline`. Returns the contiguous range around scale 0.
 pub fn golden_zone<A: Codec + ?Sized, B: Codec + ?Sized>(fmt: &A, baseline: &B) -> (i32, i32) {
     let mut lo = 0;
-    while lo - 1 >= fmt.min_scale().max(-2000) && decimals_at(fmt, lo - 1) >= decimals_at(baseline, lo - 1) {
+    while lo - 1 >= fmt.min_scale().max(-2000)
+        && decimals_at(fmt, lo - 1) >= decimals_at(baseline, lo - 1)
+    {
         lo -= 1;
     }
     let mut hi = 0;
-    while hi + 1 <= fmt.max_scale().min(2000) && decimals_at(fmt, hi + 1) >= decimals_at(baseline, hi + 1) {
+    while hi + 1 <= fmt.max_scale().min(2000)
+        && decimals_at(fmt, hi + 1) >= decimals_at(baseline, hi + 1)
+    {
         hi += 1;
     }
     (lo, hi)

@@ -7,7 +7,14 @@
 //! - `tables`                  — gate-level PPA tables (Tables 5/6, Fig 16)
 //! - `vector-bench`            — scalar vs vector codec + kernel throughput,
 //!                               emitted as BENCH_vector_codec.json
+//! - `gemm-bench`              — serial vs sharded blocked GEMM (quire +
+//!                               f32 paths), emitted as BENCH_vector_gemm.json
 //! - `serve [--requests N]`    — run the batching inference demo (artifacts)
+//!
+//! Bench subcommands validate the output JSON path *before* running (a
+//! long bench that dies on the final write is wasted work) and report
+//! unwritable paths as clean errors — the binary exits non-zero, never
+//! panics.
 
 use crate::accuracy;
 use crate::formats::{ieee, posit, takum, Codec, Decoded};
@@ -22,6 +29,7 @@ pub enum Command {
     Accuracy { csv_dir: Option<String> },
     Tables,
     VectorBench { len: usize, json: Option<String> },
+    GemmBench { sizes: Vec<usize>, quire_max: usize, json: Option<String> },
     Serve { requests: usize, artifact_dir: String },
     Help,
 }
@@ -58,7 +66,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--len" => {
-                        len = it.next().ok_or("--len needs N")?.parse().map_err(|e| format!("{e}"))?
+                        len = it.next().ok_or("--len needs N")?.parse().map_err(|e| e.to_string())?
                     }
                     "--json" => json = Some(it.next().ok_or("--json needs a path")?.clone()),
                     "--no-json" => json = None,
@@ -70,15 +78,47 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
             }
             Ok(Command::VectorBench { len, json })
         }
+        "gemm-bench" => {
+            let mut sizes = vec![64usize, 128, 256, 512];
+            let mut quire_max = 128usize;
+            let mut json = Some("BENCH_vector_gemm.json".to_string());
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--sizes" => {
+                        let list = it.next().ok_or("--sizes needs a comma list (e.g. 64,128)")?;
+                        sizes = list
+                            .split(',')
+                            .map(|s| {
+                                s.trim().parse::<usize>().map_err(|e| format!("--sizes {s}: {e}"))
+                            })
+                            .collect::<Result<Vec<usize>, String>>()?;
+                    }
+                    "--quire-max" => {
+                        let arg = it.next().ok_or("--quire-max needs N")?;
+                        quire_max = arg.parse().map_err(|e| e.to_string())?
+                    }
+                    "--json" => json = Some(it.next().ok_or("--json needs a path")?.clone()),
+                    "--no-json" => json = None,
+                    other => return Err(format!("gemm-bench: unknown flag {other}")),
+                }
+            }
+            if sizes.is_empty() || sizes.contains(&0) {
+                return Err("gemm-bench: --sizes must be a non-empty list of positive sizes".into());
+            }
+            Ok(Command::GemmBench { sizes, quire_max, json })
+        }
         "serve" => {
             let mut requests = 512;
             let mut artifact_dir = crate::runtime::default_artifact_dir().display().to_string();
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--requests" => {
-                        requests = it.next().ok_or("--requests needs N")?.parse().map_err(|e| format!("{e}"))?
+                        let arg = it.next().ok_or("--requests needs N")?;
+                        requests = arg.parse().map_err(|e| e.to_string())?
                     }
-                    "--artifacts" => artifact_dir = it.next().ok_or("--artifacts needs a dir")?.clone(),
+                    "--artifacts" => {
+                        artifact_dir = it.next().ok_or("--artifacts needs a dir")?.clone()
+                    }
                     other => return Err(format!("serve: unknown flag {other}")),
                 }
             }
@@ -123,6 +163,10 @@ COMMANDS:
   vector-bench [--len N] [--json PATH | --no-json]
                              scalar vs vector codec + dot-kernel throughput;
                              writes BENCH_vector_codec.json by default
+  gemm-bench [--sizes N,N,…] [--quire-max N] [--json PATH | --no-json]
+                             serial vs sharded (PALLAS_THREADS) blocked GEMM,
+                             f32 + quire-exact paths, GFLOP-equivalents;
+                             writes BENCH_vector_gemm.json by default
   serve [--requests N] [--artifacts DIR]
                              batching inference demo over the AOT artifacts
   help                       this message
@@ -209,15 +253,39 @@ pub fn ppa_rows(encode: bool, random_pairs: usize) -> Vec<report::CostReport> {
         let pspec = posit::PositSpec::standard(n, 2);
         let entries: Vec<(String, crate::hw::netlist::Netlist, DesignUnderTest)> = if encode {
             vec![
-                (format!("float{n} {stage}"), float_enc::build(&fspec), DesignUnderTest::FloatEnc(&fspec)),
-                (format!("b-posit<{n},6,5> {stage}"), bposit_enc::build(&bspec), DesignUnderTest::PositEnc(&bspec)),
-                (format!("posit<{n},2> {stage}"), posit_enc::build(&pspec), DesignUnderTest::PositEnc(&pspec)),
+                (
+                    format!("float{n} {stage}"),
+                    float_enc::build(&fspec),
+                    DesignUnderTest::FloatEnc(&fspec),
+                ),
+                (
+                    format!("b-posit<{n},6,5> {stage}"),
+                    bposit_enc::build(&bspec),
+                    DesignUnderTest::PositEnc(&bspec),
+                ),
+                (
+                    format!("posit<{n},2> {stage}"),
+                    posit_enc::build(&pspec),
+                    DesignUnderTest::PositEnc(&pspec),
+                ),
             ]
         } else {
             vec![
-                (format!("float{n} {stage}"), float_dec::build(&fspec), DesignUnderTest::FloatDec(&fspec)),
-                (format!("b-posit<{n},6,5> {stage}"), bposit_dec::build(&bspec), DesignUnderTest::PositDec(&bspec)),
-                (format!("posit<{n},2> {stage}"), posit_dec::build(&pspec), DesignUnderTest::PositDec(&pspec)),
+                (
+                    format!("float{n} {stage}"),
+                    float_dec::build(&fspec),
+                    DesignUnderTest::FloatDec(&fspec),
+                ),
+                (
+                    format!("b-posit<{n},6,5> {stage}"),
+                    bposit_dec::build(&bspec),
+                    DesignUnderTest::PositDec(&bspec),
+                ),
+                (
+                    format!("posit<{n},2> {stage}"),
+                    posit_dec::build(&pspec),
+                    DesignUnderTest::PositDec(&pspec),
+                ),
             ]
         };
         for (name, nl, dut) in entries {
@@ -230,10 +298,25 @@ pub fn ppa_rows(encode: bool, random_pairs: usize) -> Vec<report::CostReport> {
 
 /// Execute `tables`: the three decode + three encode designs at 16/32/64.
 pub fn run_tables() -> Vec<String> {
-    let mut out = Vec::new();
-    out.push(report::format_table("Decode (paper Table 5)", &ppa_rows(false, 40)));
-    out.push(report::format_table("Encode (paper Table 6)", &ppa_rows(true, 40)));
-    out
+    vec![
+        report::format_table("Decode (paper Table 5)", &ppa_rows(false, 40)),
+        report::format_table("Encode (paper Table 6)", &ppa_rows(true, 40)),
+    ]
+}
+
+/// Fail fast on an unwritable bench-JSON destination: probe the path
+/// before any benchmarking so a bad `--json` argument surfaces as an
+/// immediate clean error (non-zero exit) instead of a panic or a failure
+/// after minutes of measurement. The probe opens without truncating, so
+/// an existing artifact survives intact if the run later fails; only the
+/// final `fs::write` replaces it.
+fn ensure_json_writable(path: &str) -> Result<(), String> {
+    std::fs::OpenOptions::new()
+        .write(true)
+        .create(true)
+        .open(path)
+        .map(|_| ())
+        .map_err(|e| format!("cannot write bench JSON to {path}: {e}"))
 }
 
 /// Execute `vector-bench`: scalar vs branch-free-vector codec throughput
@@ -246,6 +329,9 @@ pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<Strin
     use crate::testutil::Rng;
     use crate::vector::{codec, kernels};
 
+    if let Some(path) = json_path {
+        ensure_json_writable(path)?;
+    }
     let mut rng = Rng::new(0x5eed);
     // Mixed-scale finite values spanning every regime length — worst case
     // for the branchy scalar path (mispredicts), steady state for the lane
@@ -340,19 +426,24 @@ pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<Strin
 
     // --- dot kernels (the serving workload) ---
     b.bench(&format!("dot/f32_fast/{len}"), || kernels::dot_f32(&xs, &ys));
-    b.bench(&format!("dot/bp32_weights_fast/{len}"), || kernels::dot_bp32_weights_fast(&words, &ys));
+    b.bench(&format!("dot/bp32_weights_fast/{len}"), || {
+        kernels::dot_bp32_weights_fast(&words, &ys)
+    });
     let mut qd = kernels::QuireDot::new();
     b.bench(&format!("dot/quire_exact/{len}"), || qd.dot_f32(&xs, &ys));
 
-    let mut out = Vec::new();
-    out.push(b.table(&format!("vector codec throughput ({len}-element blocks)")));
+    let mut out = vec![b.table(&format!("vector codec throughput ({len}-element blocks)"))];
     for r in b.results() {
         out.push(format!("{:<44} {:>10.1} Melem/s", r.name, len as f64 / r.mean_ns * 1e3));
     }
 
     // Speedups: scalar mean / vector mean per codec stage.
     let mean = |prefix: &str| -> f64 {
-        b.results().iter().find(|r| r.name.starts_with(prefix)).map(|r| r.mean_ns).unwrap_or(f64::NAN)
+        b.results()
+            .iter()
+            .find(|r| r.name.starts_with(prefix))
+            .map(|r| r.mean_ns)
+            .unwrap_or(f64::NAN)
     };
     let stages =
         ["bp32_encode", "bp32_decode", "bp32_roundtrip", "p32_encode", "p32_decode"];
@@ -373,4 +464,178 @@ pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<Strin
         out.push(format!("wrote {path}"));
     }
     Ok(out)
+}
+
+/// Execute `gemm-bench`: serial vs sharded blocked GEMM across `sizes`
+/// (square m=k=n), on the f32 fast path, the decode-fused quantized-weight
+/// fast path, and (up to `quire_max`) the 800-bit quire-exact paths.
+/// Reports GFLOP-equivalents (2·n³ flops per GEMM), verifies that every
+/// sharded result is bit-identical to its serial counterpart, and
+/// optionally writes `BENCH_vector_gemm.json` (schema in
+/// rust/benches/README.md). Shared by the CLI and the `vector_gemm`
+/// bench target.
+pub fn run_gemm_bench(
+    sizes: &[usize],
+    quire_max: usize,
+    json_path: Option<&str>,
+) -> Result<Vec<String>, String> {
+    use crate::harness::Bencher;
+    use crate::testutil::Rng;
+    use crate::vector::{codec, gemm, parallel};
+
+    if let Some(path) = json_path {
+        ensure_json_writable(path)?;
+    }
+    let threads = parallel::num_threads();
+    let mut b = Bencher::new();
+    let mut out = Vec::new();
+    let mut bit_identical = true;
+    let mut speedup_json = Vec::new();
+    let mut gflops_json = Vec::new();
+    let mut rng = Rng::new(0x6e44);
+
+    for &s in sizes {
+        let (m, k, n) = (s, s, s);
+        // Mixed-scale finite values (|x| ∈ [2^-16, 2^16]): exercises every
+        // regime length without overflowing f32 partial sums.
+        let a = crate::testutil::mixed_scale_f32(&mut rng, m * k, 33);
+        let bm = crate::testutil::mixed_scale_f32(&mut rng, k * n, 33);
+        let a_bits: Vec<u32> = {
+            let mut w = vec![0u32; a.len()];
+            codec::bp32_encode_into(&a, &mut w);
+            w
+        };
+        let mut c = vec![0f32; m * n];
+        let flops = 2.0 * (m as f64) * (k as f64) * (n as f64);
+
+        // Serial-vs-sharded bit-identity, checked once per path before
+        // timing (the acceptance contract, not just a bench).
+        let mut c_ref = vec![0f32; m * n];
+        gemm::gemm_f32(&a, &bm, &mut c_ref, m, k, n);
+        gemm::par_gemm_f32_with(threads, &a, &bm, &mut c, m, k, n);
+        bit_identical &= c_ref.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits());
+        gemm::gemm_bp32_weights_fast(&a_bits, &bm, &mut c_ref, m, k, n);
+        gemm::par_gemm_bp32_weights_fast_with(threads, &a_bits, &bm, &mut c, m, k, n);
+        bit_identical &= c_ref.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits());
+
+        let mut pairs: Vec<(String, f64, f64)> = Vec::new(); // (path, serial, par)
+        let t0 = b.bench(&format!("gemm_f32/serial/{s}"), || {
+            gemm::gemm_f32(&a, &bm, &mut c, m, k, n);
+            c[0]
+        });
+        let serial_ns = t0.mean_ns;
+        let t1 = b.bench(&format!("gemm_f32/par{threads}/{s}"), || {
+            gemm::par_gemm_f32_with(threads, &a, &bm, &mut c, m, k, n);
+            c[0]
+        });
+        pairs.push(("f32".into(), serial_ns, t1.mean_ns));
+
+        let t2 = b.bench(&format!("gemm_bp32_fast/serial/{s}"), || {
+            gemm::gemm_bp32_weights_fast(&a_bits, &bm, &mut c, m, k, n);
+            c[0]
+        });
+        let serial_w_ns = t2.mean_ns;
+        let t3 = b.bench(&format!("gemm_bp32_fast/par{threads}/{s}"), || {
+            gemm::par_gemm_bp32_weights_fast_with(threads, &a_bits, &bm, &mut c, m, k, n);
+            c[0]
+        });
+        pairs.push(("bp32_fast".into(), serial_w_ns, t3.mean_ns));
+
+        if s <= quire_max {
+            gemm::gemm_quire_f32(&a, &bm, &mut c_ref, m, k, n);
+            gemm::par_gemm_quire_f32_with(threads, &a, &bm, &mut c, m, k, n);
+            bit_identical &= c_ref.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits());
+            let q0 = b.bench(&format!("gemm_quire/serial/{s}"), || {
+                gemm::gemm_quire_f32(&a, &bm, &mut c, m, k, n);
+                c[0]
+            });
+            let serial_q_ns = q0.mean_ns;
+            let q1 = b.bench(&format!("gemm_quire/par{threads}/{s}"), || {
+                gemm::par_gemm_quire_f32_with(threads, &a, &bm, &mut c, m, k, n);
+                c[0]
+            });
+            pairs.push(("quire".into(), serial_q_ns, q1.mean_ns));
+        }
+
+        for (path, ser, par) in pairs {
+            let sp = ser / par;
+            out.push(format!(
+                "{s:>5}³ {path:<10} serial {:>8.2} GF-eq  sharded×{threads} {:>8.2} GF-eq  speedup {sp:>5.2}x",
+                flops / ser,
+                flops / par
+            ));
+            speedup_json.push(format!("\"{path}_{s}\":{sp:.3}"));
+            gflops_json.push(format!("\"{path}_serial_{s}\":{:.3}", flops / ser));
+            gflops_json.push(format!("\"{path}_par_{s}\":{:.3}", flops / par));
+        }
+    }
+
+    out.insert(0, b.table(&format!("blocked GEMM throughput ({threads} threads available)")));
+    out.push(format!(
+        "sharded results bit-identical to serial: {}",
+        if bit_identical { "yes" } else { "NO — BUG" }
+    ));
+    if !bit_identical {
+        let msg = "sharded GEMM result differs from serial — bit-identity contract broken";
+        return Err(msg.into());
+    }
+
+    if let Some(path) = json_path {
+        let sizes_list: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+        let json = format!(
+            "{{\"bench\":\"vector_gemm\",\"threads\":{threads},\"sizes\":[{}],\"bit_identical\":{bit_identical},\"speedup\":{{{}}},\"gflops\":{{{}}},\"results\":{}}}",
+            sizes_list.join(","),
+            speedup_json.join(","),
+            gflops_json.join(","),
+            b.results_json()
+        );
+        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+        out.push(format!("wrote {path}"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_gemm_bench_flags() {
+        let args: Vec<String> =
+            ["gemm-bench", "--sizes", "8,16", "--quire-max", "8", "--no-json"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        match parse(&args).unwrap() {
+            Command::GemmBench { sizes, quire_max, json } => {
+                assert_eq!(sizes, vec![8, 16]);
+                assert_eq!(quire_max, 8);
+                assert!(json.is_none());
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        assert!(parse(&["gemm-bench".into(), "--sizes".into(), "0".into()]).is_err());
+        assert!(parse(&["gemm-bench".into(), "--sizes".into(), "x".into()]).is_err());
+        assert!(parse(&["gemm-bench".into(), "--bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn bench_json_path_fails_fast_when_unwritable() {
+        // The bugfix contract: an unwritable --json destination is a clean
+        // error before any benchmarking happens (this test would take
+        // minutes if the benches ran first), never a panic.
+        let bad = "/nonexistent-dir-for-positron-test/out.json";
+        let err = run_gemm_bench(&[4], 0, Some(bad)).unwrap_err();
+        assert!(err.contains(bad), "{err}");
+        let err = run_vector_bench(16, Some(bad)).unwrap_err();
+        assert!(err.contains(bad), "{err}");
+    }
+
+    #[test]
+    fn gemm_bench_smoke_tiny() {
+        // One tiny size, no JSON: exercises the full bench path (including
+        // the bit-identity verification) in a few seconds of bench budget.
+        let lines = run_gemm_bench(&[4], 4, None).expect("tiny gemm-bench runs");
+        assert!(lines.iter().any(|l| l.contains("bit-identical to serial: yes")), "{lines:?}");
+    }
 }

@@ -18,6 +18,8 @@ pub struct Metrics {
     codec_ns: AtomicU64,
     /// Total nanoseconds spent executing the model.
     execute_ns: AtomicU64,
+    /// Worker threads available to the sharded codec (0 = not reported).
+    codec_threads: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -36,6 +38,8 @@ pub struct MetricsSnapshot {
     pub codec_ns: u64,
     /// Total model-execute nanoseconds across all batches.
     pub execute_ns: u64,
+    /// Worker threads available to the sharded codec (0 = not reported).
+    pub codec_threads: u64,
 }
 
 impl Metrics {
@@ -60,6 +64,12 @@ impl Metrics {
     /// Add one batch's model-execute time.
     pub fn record_execute(&self, d: Duration) {
         self.execute_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record the worker-thread count the sharded codec runs with (set
+    /// once at server startup; a gauge, not a counter).
+    pub fn set_codec_threads(&self, threads: usize) {
+        self.codec_threads.store(threads as u64, Ordering::Relaxed);
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -93,6 +103,7 @@ impl Metrics {
             max_us: lats.last().copied().unwrap_or(0),
             codec_ns: self.codec_ns.load(Ordering::Relaxed),
             execute_ns: self.execute_ns.load(Ordering::Relaxed),
+            codec_threads: self.codec_threads.load(Ordering::Relaxed),
         }
     }
 }
@@ -119,6 +130,7 @@ impl MetricsSnapshot {
         s.push_str(&format!("positron_latency_p50_us {}\n", self.p50_us));
         s.push_str(&format!("positron_latency_p99_us {}\n", self.p99_us));
         s.push_str(&format!("positron_latency_max_us {}\n", self.max_us));
+        s.push_str(&format!("positron_codec_threads {}\n", self.codec_threads));
         s.push_str(&format!("positron_codec_ns_total {}\n", self.codec_ns));
         s.push_str(&format!("positron_codec_ns_per_batch {:.0}\n", self.codec_ns_per_batch()));
         s.push_str(&format!("positron_execute_ns_total {}\n", self.execute_ns));
@@ -156,6 +168,7 @@ mod tests {
         assert_eq!(s.mean_batch, 0.0);
         assert_eq!(s.codec_ns, 0);
         assert_eq!(s.execute_ns, 0);
+        assert_eq!(s.codec_threads, 0);
         assert_eq!(s.codec_ns_per_batch(), 0.0);
     }
 
@@ -168,13 +181,16 @@ mod tests {
         m.record_batch(4);
         m.record_codec(Duration::from_nanos(2_500));
         m.record_execute(Duration::from_nanos(60_000));
+        m.set_codec_threads(3);
         let s = m.snapshot();
         assert_eq!(s.codec_ns, 4_000);
         assert_eq!(s.execute_ns, 100_000);
+        assert_eq!(s.codec_threads, 3);
         assert_eq!(s.codec_ns_per_batch(), 2_000.0);
         assert_eq!(s.execute_ns_per_batch(), 50_000.0);
         let text = s.render();
         assert!(text.contains("positron_codec_ns_total 4000"), "{text}");
         assert!(text.contains("positron_execute_ns_total 100000"), "{text}");
+        assert!(text.contains("positron_codec_threads 3"), "{text}");
     }
 }

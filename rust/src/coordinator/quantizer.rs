@@ -2,10 +2,15 @@
 //! no Python). This is the hot path profiled in EXPERIMENTS.md §Perf.
 //!
 //! Three codec tiers, fastest first:
-//! - **Vector** ([`crate::vector::codec`]): branch-free 8-lane batched
+//! - **Vector** ([`crate::vector::codec`], sharded across worker threads
+//!   by [`crate::vector::parallel`]): branch-free 8-lane batched
 //!   encode/decode — every slice-level entry point here routes through it,
 //!   and the `_into`/`_in_place` variants reuse caller buffers so the
 //!   steady-state serving path performs zero per-request heap allocation.
+//!   Batches big enough to amortize a fork-join (see
+//!   [`parallel::CODEC_MIN_SHARD`]) are split into contiguous blocks over
+//!   up to `PALLAS_THREADS` workers; results are bit-identical to serial
+//!   for any thread count, so sharding is transparent to callers.
 //! - **Scalar fast path** ([`fast_bp32_encode`]/[`fast_bp32_decode`]): the
 //!   specialized branch-light ⟨32,6,5⟩ pair, kept as the per-element API
 //!   and as the independent implementation the vector codec is tested
@@ -22,7 +27,7 @@
 
 use crate::formats::posit::BP32;
 use crate::formats::Decoded;
-use crate::vector::codec;
+use crate::vector::{codec, parallel};
 
 /// Quantize a f32 slice to b-posit32 words (as i32 bit patterns) through
 /// the vector codec.
@@ -34,11 +39,19 @@ pub fn quantize(xs: &[f32]) -> Vec<i32> {
 
 /// Quantize into a reused buffer (cleared + refilled; no allocation once
 /// the buffer has grown to the steady-state batch size). The lane encoder
-/// is branch-free, so this plain map compiles to the same straight-line
-/// inner loop as the chunked drivers in [`codec`].
+/// is branch-free, so each shard compiles to the same straight-line inner
+/// loop as the chunked drivers in [`codec`]; batches past the fork-join
+/// threshold are sharded across worker threads (bit-identical results).
 pub fn quantize_into(xs: &[f32], out: &mut Vec<i32>) {
-    out.clear();
-    out.extend(xs.iter().map(|&x| codec::bp32_encode_lane(x) as i32));
+    // resize alone (no clear) keeps the steady-state same-size call from
+    // re-zeroing a buffer the codec is about to overwrite anyway.
+    out.resize(xs.len(), 0);
+    let shards = parallel::auto_shards(xs.len(), parallel::CODEC_MIN_SHARD);
+    parallel::for_each_block(shards, &mut out[..], |off, block| {
+        for (o, &x) in block.iter_mut().zip(&xs[off..off + block.len()]) {
+            *o = codec::bp32_encode_lane(x) as i32;
+        }
+    });
 }
 
 /// Quantize one value (specialized ⟨32,6,5⟩ scalar fast path).
@@ -54,10 +67,15 @@ pub fn dequantize(bits: &[i32]) -> Vec<f32> {
     out
 }
 
-/// Dequantize into a reused buffer.
+/// Dequantize into a reused buffer (sharded past the fork-join threshold).
 pub fn dequantize_into(bits: &[i32], out: &mut Vec<f32>) {
-    out.clear();
-    out.extend(bits.iter().map(|&b| codec::bp32_decode_lane(b as u32)));
+    out.resize(bits.len(), 0.0);
+    let shards = parallel::auto_shards(bits.len(), parallel::CODEC_MIN_SHARD);
+    parallel::for_each_block(shards, &mut out[..], |off, block| {
+        for (o, &b) in block.iter_mut().zip(&bits[off..off + block.len()]) {
+            *o = codec::bp32_decode_lane(b as u32);
+        }
+    });
 }
 
 /// Dequantize one word (specialized ⟨32,6,5⟩ scalar fast path).
@@ -98,15 +116,16 @@ pub fn dequantize_one_general(bits: i32) -> f32 {
 /// server does to inputs so the CPU model sees exactly the values a
 /// b-posit datapath would.
 pub fn roundtrip(xs: &[f32]) -> Vec<f32> {
-    let mut out = vec![0f32; xs.len()];
-    codec::bp32_roundtrip_into(xs, &mut out);
+    let mut out = xs.to_vec();
+    parallel::bp32_roundtrip_in_place(&mut out);
     out
 }
 
 /// In-place roundtrip over a caller buffer — the server's per-batch path
-/// (fused encode+decode, no intermediate buffer, no allocation).
+/// (fused encode+decode, no intermediate buffer, no allocation; sharded
+/// across worker threads past the fork-join threshold).
 pub fn roundtrip_in_place(xs: &mut [f32]) {
-    codec::bp32_roundtrip_in_place(xs);
+    parallel::bp32_roundtrip_in_place(xs);
 }
 
 /// Specialized b-posit⟨32,6,5⟩ encoder for f32 inputs (scalar fast path).

@@ -9,8 +9,11 @@
 //!
 //! Steady-state allocation discipline: the batch staging buffer and the
 //! input literal are built once and reused every iteration; quantization
-//! runs through the vector codec *in place* on the staging buffer. The
-//! codec and model-execute stages are timed separately into [`Metrics`].
+//! runs through the vector codec *in place* on the staging buffer, and
+//! batches past the fork-join threshold are sharded across worker threads
+//! (`PALLAS_THREADS`, auto default) with bit-identical results. The codec
+//! and model-execute stages are timed separately into [`Metrics`], which
+//! also exports the sharded-codec thread count.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -173,6 +176,7 @@ fn worker_loop(
     let c = weights.c;
     let model_batch = weights.batch;
     let max_batch = cfg.max_batch.min(model_batch);
+    metrics.set_codec_threads(crate::vector::parallel::num_threads());
     // Argument literals are built once and reused: execute() only borrows
     // them. Slot 0 (the batch input) is refreshed in place each iteration.
     let weight_lits = match if cfg.model_file.contains("f32") {
@@ -268,7 +272,7 @@ mod tests {
     fn start_without_runtime_feature_fails_with_clear_error() {
         let err = InferenceServer::start(PathBuf::from("artifacts"), ServerConfig::default())
             .unwrap_err();
-        assert!(format!("{err}").contains("runtime disabled"), "{err}");
+        assert!(err.to_string().contains("runtime disabled"), "{err}");
     }
 }
 

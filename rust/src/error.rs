@@ -75,7 +75,7 @@ mod tests {
     #[test]
     fn display_and_debug_show_message() {
         let e = anyhow!("bad thing {}", 42);
-        assert_eq!(format!("{e}"), "bad thing 42");
+        assert_eq!(e.to_string(), "bad thing 42");
         assert_eq!(format!("{e:?}"), "bad thing 42");
         assert_eq!(format!("{e:#}"), "bad thing 42"); // alternate flag tolerated
     }
@@ -93,7 +93,7 @@ mod tests {
     fn context_wraps() {
         let r: std::result::Result<(), String> = Err("inner".into());
         let e = r.context("outer").unwrap_err();
-        assert_eq!(format!("{e}"), "outer: inner");
+        assert_eq!(e.to_string(), "outer: inner");
         let r2: std::result::Result<(), String> = Err("inner".into());
         let e2 = r2.with_context(|| format!("outer {}", 1)).unwrap_err();
         assert_eq!(format!("{e2}"), "outer 1: inner");

@@ -48,7 +48,8 @@ mod tests {
             x ^= x << 17;
             let f = f32::from_bits((x as u32 & 0x3fff_ffff) | 0x2000_0000); // exp ∈ fovea-ish
             let v = f as f64;
-            if !v.is_finite() || v == 0.0 || v.abs() < f64::powi(2.0, -32) || v.abs() >= f64::powi(2.0, 32) {
+            let out_of_range = v.abs() < f64::powi(2.0, -32) || v.abs() >= f64::powi(2.0, 32);
+            if !v.is_finite() || v == 0.0 || out_of_range {
                 continue;
             }
             let bp = convert(&F32, &BP32, f.to_bits() as u64);

@@ -40,8 +40,10 @@ pub struct Decoded {
 }
 
 impl Decoded {
-    pub const ZERO: Decoded = Decoded { class: Class::Zero, sign: false, exp: 0, sig: 0, sticky: false };
-    pub const NAN: Decoded = Decoded { class: Class::Nan, sign: false, exp: 0, sig: 0, sticky: false };
+    pub const ZERO: Decoded =
+        Decoded { class: Class::Zero, sign: false, exp: 0, sig: 0, sticky: false };
+    pub const NAN: Decoded =
+        Decoded { class: Class::Nan, sign: false, exp: 0, sig: 0, sticky: false };
 
     /// Infinity with the given sign.
     pub fn inf(sign: bool) -> Decoded {
@@ -186,7 +188,11 @@ mod tests {
 
     #[test]
     fn f64_roundtrip_exact() {
-        for &x in &[0.0, -0.0, 1.0, -1.0, 3.141592653589793, 1e-300, -1e300, 1.5e-310, f64::MIN_POSITIVE, 6.6e-34] {
+        let cases = [
+            0.0, -0.0, 1.0, -1.0, std::f64::consts::PI, 1e-300, -1e300, 1.5e-310,
+            f64::MIN_POSITIVE, 6.6e-34,
+        ];
+        for &x in &cases {
             let d = Decoded::from_f64(x);
             let back = d.to_f64();
             assert_eq!(back.to_bits(), x.to_bits(), "roundtrip failed for {x}");

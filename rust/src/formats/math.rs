@@ -89,7 +89,13 @@ fn add_normal(a: &Decoded, b: &Decoded) -> Decoded {
         if acc == 0 {
             return if sticky {
                 // Cancellation down to the sticky dust: faithful tiny value.
-                Decoded { class: Class::Normal, sign: x.sign, exp: x.exp - 126, sig: 1u64 << 63, sticky: true }
+                Decoded {
+                    class: Class::Normal,
+                    sign: x.sign,
+                    exp: x.exp - 126,
+                    sig: 1u64 << 63,
+                    sticky: true,
+                }
             } else {
                 Decoded::ZERO
             };
@@ -247,9 +253,19 @@ pub fn fma(a: &Decoded, b: &Decoded, c: &Decoded) -> Decoded {
         // 2^(e−msb+i), so lo's MSB (at position lo_msb) has weight e−msb+lo_msb.
         let lo_msb = 127 - lo_bits.leading_zeros() as i32;
         let lo_exp2 = (e - msb) + lo_msb;
-        let lo_sig = if lo_msb >= 63 { (lo_bits >> (lo_msb - 63)) as u64 } else { (lo_bits as u64) << (63 - lo_msb) };
+        let lo_sig = if lo_msb >= 63 {
+            (lo_bits >> (lo_msb - 63)) as u64
+        } else {
+            (lo_bits as u64) << (63 - lo_msb)
+        };
         let lo_sticky = lo_msb > 63 && lo_bits & ((1u128 << (lo_msb - 63)) - 1) != 0;
-        let lo = Decoded { class: Class::Normal, sign: p.sign, exp: lo_exp2, sig: lo_sig, sticky: lo_sticky };
+        let lo = Decoded {
+            class: Class::Normal,
+            sign: p.sign,
+            exp: lo_exp2,
+            sig: lo_sig,
+            sticky: lo_sticky,
+        };
         add(&step1, &lo)
     } else {
         add(&p, c)

@@ -228,7 +228,13 @@ impl Quire {
             return if self.sticky {
                 // Value was entirely below the quire LSB: round to minimal
                 // representation — report as sticky-tiny normal.
-                Decoded { class: Class::Normal, sign: negative, exp: self.lsb_exp - 1, sig: 1u64 << 63, sticky: true }
+                Decoded {
+                    class: Class::Normal,
+                    sign: negative,
+                    exp: self.lsb_exp - 1,
+                    sig: 1u64 << 63,
+                    sticky: true,
+                }
             } else {
                 Decoded::ZERO
             };
@@ -253,7 +259,13 @@ impl Quire {
                 }
             }
         }
-        Decoded { class: Class::Normal, sign: negative, exp: self.lsb_exp + msb as i32, sig, sticky }
+        Decoded {
+            class: Class::Normal,
+            sign: negative,
+            exp: self.lsb_exp + msb as i32,
+            sig,
+            sticky,
+        }
     }
 
     /// Round out to a posit pattern in the given spec.

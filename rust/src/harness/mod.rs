@@ -48,7 +48,11 @@ pub struct Bencher {
 
 impl Default for Bencher {
     fn default() -> Self {
-        Bencher { budget: Duration::from_millis(700), warmup: Duration::from_millis(150), results: Vec::new() }
+        Bencher {
+            budget: Duration::from_millis(700),
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
     }
 }
 
@@ -151,7 +155,11 @@ mod tests {
 
     #[test]
     fn bench_produces_sane_stats() {
-        let mut b = Bencher { budget: Duration::from_millis(50), warmup: Duration::from_millis(10), results: vec![] };
+        let mut b = Bencher {
+            budget: Duration::from_millis(50),
+            warmup: Duration::from_millis(10),
+            results: vec![],
+        };
         let r = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7)).clone();
         assert!(r.mean_ns > 0.0);
         assert!(r.p50_ns <= r.p99_ns * 1.0001);
@@ -171,7 +179,11 @@ mod tests {
 
     #[test]
     fn json_output_parses() {
-        let mut b = Bencher { budget: Duration::from_millis(20), warmup: Duration::from_millis(5), results: vec![] };
+        let mut b = Bencher {
+            budget: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            results: vec![],
+        };
         b.bench("a/b/1", || 1u32);
         b.bench("c", || 2u32);
         let doc = crate::json::Json::parse(&b.results_json()).expect("valid JSON");

@@ -30,7 +30,11 @@ pub fn nor_reduce(nl: &mut Netlist, bits: &[NetId]) -> NetId {
     nl.not(o)
 }
 
-fn reduce(nl: &mut Netlist, bits: &[NetId], mut f: impl FnMut(&mut Netlist, NetId, NetId) -> NetId) -> NetId {
+fn reduce(
+    nl: &mut Netlist,
+    bits: &[NetId],
+    mut f: impl FnMut(&mut Netlist, NetId, NetId) -> NetId,
+) -> NetId {
     assert!(!bits.is_empty());
     let mut level = bits.to_vec();
     while level.len() > 1 {
@@ -63,7 +67,8 @@ pub fn mux_onehot(nl: &mut Netlist, sels: &[NetId], inputs: &[&[NetId]]) -> Bus 
     assert!(inputs.iter().all(|i| i.len() == width));
     let mut out = Vec::with_capacity(width);
     for bit in 0..width {
-        let terms: Vec<NetId> = sels.iter().zip(inputs).map(|(&s, inp)| nl.and2(s, inp[bit])).collect();
+        let terms: Vec<NetId> =
+            sels.iter().zip(inputs).map(|(&s, inp)| nl.and2(s, inp[bit])).collect();
         out.push(or_reduce(nl, &terms));
     }
     out
@@ -226,7 +231,10 @@ pub fn binary_decoder(nl: &mut Netlist, sel: &[NetId], n_out: usize) -> Bus {
     let mut out = Vec::with_capacity(n_out);
     for code in 0..n_out {
         let lits: Vec<NetId> =
-            sel.iter().enumerate().map(|(i, &s)| if code >> i & 1 == 1 { s } else { nsel[i] }).collect();
+            sel.iter()
+                .enumerate()
+                .map(|(i, &s)| if code >> i & 1 == 1 { s } else { nsel[i] })
+                .collect();
         out.push(and_reduce(nl, &lits));
     }
     out

@@ -140,7 +140,11 @@ mod tests {
 
     #[test]
     fn area_scales_with_n_but_delay_does_not() {
-        let specs = [PositSpec::bounded(16, 6, 5), PositSpec::bounded(32, 6, 5), PositSpec::bounded(64, 6, 5)];
+        let specs = [
+            PositSpec::bounded(16, 6, 5),
+            PositSpec::bounded(32, 6, 5),
+            PositSpec::bounded(64, 6, 5),
+        ];
         let mut prev_area = 0.0;
         let mut delays = Vec::new();
         for s in &specs {

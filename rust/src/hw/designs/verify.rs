@@ -282,7 +282,10 @@ pub fn check_float_decoder(spec: &IeeeSpec, nl: &Netlist, word: u64) -> Result<(
     ] {
         let got = get(name);
         if got != want {
-            return Err(format!("float{}: {name} mismatch for {word:#x}: got {got:#x} want {want:#x}", spec.n));
+            return Err(format!(
+                "float{}: {name} mismatch for {word:#x}: got {got:#x} want {want:#x}",
+                spec.n
+            ));
         }
     }
     // Semantic: recoded fields must match the software codec for finite
@@ -324,7 +327,10 @@ pub fn check_float_loopback(spec: &IeeeSpec, enc: &Netlist, word: u64) -> Result
     let got = outs.iter().find(|(n, _)| n == "f").unwrap().1;
     let want = if g.is_nan { spec.qnan() } else { word };
     if got != want {
-        return Err(format!("float{} encoder loopback failed for {word:#x}: got {got:#x} want {want:#x}", spec.n));
+        return Err(format!(
+            "float{} encoder loopback failed for {word:#x}: got {got:#x} want {want:#x}",
+            spec.n
+        ));
     }
     Ok(())
 }

@@ -65,12 +65,14 @@ impl Netlist {
 
     /// Find a named output bus.
     pub fn output(&self, name: &str) -> &Bus {
-        &self.output_buses.iter().find(|(n, _)| n == name).unwrap_or_else(|| panic!("no output bus {name}")).1
+        let bus = self.output_buses.iter().find(|(n, _)| n == name);
+        &bus.unwrap_or_else(|| panic!("no output bus {name}")).1
     }
 
     /// Find a named input bus.
     pub fn input(&self, name: &str) -> &Bus {
-        &self.input_buses.iter().find(|(n, _)| n == name).unwrap_or_else(|| panic!("no input bus {name}")).1
+        let bus = self.input_buses.iter().find(|(n, _)| n == name);
+        &bus.unwrap_or_else(|| panic!("no input bus {name}")).1
     }
 
     /// Constant-0 net (shared).

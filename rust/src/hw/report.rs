@@ -28,7 +28,11 @@ pub struct CostReport {
 /// `pairs` should include the adversarial worst-case vectors for the design
 /// (max-length regimes, subnormal floats) plus random background pairs — the
 /// same "various input vectors" convention as the paper's §4.
-pub fn measure(name: &str, nl: &Netlist, pairs: &[(Vec<(&str, u64)>, Vec<(&str, u64)>)]) -> CostReport {
+pub fn measure(
+    name: &str,
+    nl: &Netlist,
+    pairs: &[(Vec<(&str, u64)>, Vec<(&str, u64)>)],
+) -> CostReport {
     let timing = sta::analyze(nl);
     let p: PowerReport = power::analyze(nl, pairs);
     CostReport {

@@ -62,7 +62,11 @@ pub struct TransitionReport {
 /// Timing simulation: apply `from` inputs until stable, then switch to
 /// `to` inputs and count every gate-output transition (glitches included)
 /// until the network settles. Gate delays are quantized to 1 ps ticks.
-pub fn simulate_transition(nl: &Netlist, from: &[(&str, u64)], to: &[(&str, u64)]) -> TransitionReport {
+pub fn simulate_transition(
+    nl: &Netlist,
+    from: &[(&str, u64)],
+    to: &[(&str, u64)],
+) -> TransitionReport {
     let n = nl.n_nets() as usize;
     let stable = eval_nets(nl, from);
     let mut vals = stable;
@@ -183,11 +187,19 @@ mod tests {
     fn transition_counting() {
         let nl = adder1();
         // 0,0,0 → 1,1,1 switches everything.
-        let rep = simulate_transition(&nl, &[("a", 0), ("b", 0), ("cin", 0)], &[("a", 1), ("b", 1), ("cin", 1)]);
+        let rep = simulate_transition(
+            &nl,
+            &[("a", 0), ("b", 0), ("cin", 0)],
+            &[("a", 1), ("b", 1), ("cin", 1)],
+        );
         assert!(rep.transitions >= 3, "expected several transitions, got {}", rep.transitions);
         assert!(rep.energy_fj > 0.0);
         // No input change → no transitions.
-        let rep0 = simulate_transition(&nl, &[("a", 1), ("b", 0), ("cin", 0)], &[("a", 1), ("b", 0), ("cin", 0)]);
+        let rep0 = simulate_transition(
+            &nl,
+            &[("a", 1), ("b", 0), ("cin", 0)],
+            &[("a", 1), ("b", 0), ("cin", 0)],
+        );
         assert_eq!(rep0.transitions, 0);
     }
 

@@ -156,7 +156,8 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4]).map_err(|_| "bad \\u")?;
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| "bad \\u")?;
                             let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
                             self.i += 4;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
@@ -173,7 +174,8 @@ impl<'a> Parser<'a> {
                         }
                         self.i += 1;
                     }
-                    out.push_str(std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?);
+                    let run = std::str::from_utf8(&self.b[start..self.i]);
+                    out.push_str(run.map_err(|e| e.to_string())?);
                 }
             }
         }

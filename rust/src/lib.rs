@@ -8,9 +8,13 @@
 //! Layer map (see DESIGN.md):
 //! - [`formats`] — the numeric-format zoo: IEEE floats, standard posits,
 //!   b-posits, takums, the 800-bit quire, and exact shared arithmetic.
-//! - [`vector`] — branch-free batched codecs (lane-parallel encode/decode
-//!   over slices, the software mirror of the paper's fixed-mux insight) and
-//!   quire-exact dot/axpy/gemv kernels: the serving hot path's data plane.
+//! - [`vector`] — the serving hot path's data plane: branch-free batched
+//!   codecs (lane-parallel encode/decode over slices, the software mirror
+//!   of the paper's fixed-mux insight), quire-exact dot/axpy/gemv kernels,
+//!   register/L1-blocked GEMM (f32 fast + 800-bit quire-exact +
+//!   quantized-weight paths), and a zero-dependency scoped fork-join pool
+//!   (`PALLAS_THREADS`) that shards codecs and row-blocked kernels across
+//!   cores with bit-identical results.
 //! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
 //!   power) and the six decoder/encoder circuits of Figs 8–13.
 //! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis

@@ -39,7 +39,11 @@ fn run(cmd: Command) -> positron::error::Result<()> {
             println!(
                 "artifacts: {} ({})",
                 dir.display(),
-                if artifacts_available(&dir) { "present" } else { "missing — run `make artifacts`" }
+                if artifacts_available(&dir) {
+                    "present"
+                } else {
+                    "missing — run `make artifacts`"
+                }
             );
         }
         Command::Codec { fmt, values } => {
@@ -48,7 +52,8 @@ fn run(cmd: Command) -> positron::error::Result<()> {
             }
         }
         Command::Accuracy { csv_dir } => {
-            for line in cli::run_accuracy(csv_dir.as_deref()).map_err(positron::error::Error::msg)? {
+            let lines = cli::run_accuracy(csv_dir.as_deref());
+            for line in lines.map_err(positron::error::Error::msg)? {
                 println!("{line}");
             }
         }
@@ -58,7 +63,15 @@ fn run(cmd: Command) -> positron::error::Result<()> {
             }
         }
         Command::VectorBench { len, json } => {
-            for line in cli::run_vector_bench(len, json.as_deref()).map_err(positron::error::Error::msg)? {
+            let lines = cli::run_vector_bench(len, json.as_deref());
+            for line in lines.map_err(positron::error::Error::msg)? {
+                println!("{line}");
+            }
+        }
+        Command::GemmBench { sizes, quire_max, json } => {
+            for line in cli::run_gemm_bench(&sizes, quire_max, json.as_deref())
+                .map_err(positron::error::Error::msg)?
+            {
                 println!("{line}");
             }
         }
@@ -67,7 +80,8 @@ fn run(cmd: Command) -> positron::error::Result<()> {
             println!("platform: {}", rt.platform());
             let weights = ModelWeights::load(&rt)?;
             drop(rt); // the server worker owns its own PJRT client
-            let server = InferenceServer::start(artifact_dir.clone().into(), ServerConfig::default())?;
+            let server =
+                InferenceServer::start(artifact_dir.clone().into(), ServerConfig::default())?;
             let d = weights.d;
             let n_gold = weights.golden_y.len();
             let t0 = std::time::Instant::now();

@@ -304,6 +304,6 @@ mod tests {
             return; // real backend present; covered by integration tests
         }
         let err = Runtime::cpu("artifacts").unwrap_err();
-        assert!(format!("{err}").contains("runtime disabled"), "{err}");
+        assert!(err.to_string().contains("runtime disabled"), "{err}");
     }
 }

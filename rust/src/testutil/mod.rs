@@ -47,6 +47,25 @@ impl Rng {
     }
 }
 
+/// Mixed-scale finite f32s: |x| ∈ (0.5, 1.5)·2^±(scale_bits/2) with a
+/// random sign — exercises every posit regime length without overflowing
+/// f32 partial sums for moderate reductions. The one shared generator
+/// behind the GEMM bench and the vector-layer test suites, so the
+/// distribution can only be changed in one place.
+pub fn mixed_scale_f32(rng: &mut Rng, len: usize, scale_bits: u64) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            let exp = rng.below(scale_bits) as i32 - (scale_bits as i32 / 2);
+            let mag = (rng.f64() + 0.5) * f64::powi(2.0, exp);
+            if rng.below(2) == 0 {
+                mag as f32
+            } else {
+                -mag as f32
+            }
+        })
+        .collect()
+}
+
 /// Run a property `prop` over `n` PRNG-driven cases; panics with the seed
 /// on failure so the case can be replayed.
 pub fn forall(name: &str, n: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {

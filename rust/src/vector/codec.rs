@@ -34,7 +34,10 @@ const F32_NAN_BITS: u32 = 0x7fc0_0000;
 /// True when the branch-free lane codec supports this spec (the general
 /// [`PositSpec`] codec in `formats::posit` covers everything else).
 pub fn spec_supported(spec: &PositSpec) -> bool {
-    (3..=32).contains(&spec.n) && spec.rs >= 2 && spec.rs <= spec.n - 1 && (1..=8).contains(&spec.es)
+    (3..=32).contains(&spec.n)
+        && spec.rs >= 2
+        && spec.rs <= spec.n - 1
+        && (1..=8).contains(&spec.es)
 }
 
 // ----------------------------------------------------------------------
@@ -72,7 +75,8 @@ fn encode_lane(n: u32, rs: u32, es: u32, x: f32) -> u32 {
     let w_reg = if capped { rs } else { run + 1 };
     // Regime field value in w_reg bits: a run of ones/zeros plus the
     // terminator when not capped.
-    let reg_val: u64 = if rc >= 0 { ((1u64 << w_reg) - 1) - ((!capped) as u64) } else { (!capped) as u64 };
+    let reg_ones = (1u64 << w_reg) - 1;
+    let reg_val: u64 = if rc >= 0 { reg_ones - ((!capped) as u64) } else { (!capped) as u64 };
     // Serialize regime ‖ exponent ‖ fraction MSB-first into a u64 stream
     // (w_reg + es + 23 ≤ 31 + 8 + 23 ≤ 62 bits: shifts never underflow).
     let sh_reg = 64 - w_reg;

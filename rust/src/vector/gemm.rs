@@ -1,0 +1,488 @@
+//! Register/L1-blocked GEMM over the serving formats — the quantized
+//! matmul workload at tensor scale.
+//!
+//! All matrices are dense row-major: `C (m×n) = A (m×k) · B (k×n)`.
+//! Three kernel families, each with a serial and a sharded (`par_*`)
+//! entry point:
+//! - **f32 fast path** ([`gemm_f32`]): BLIS-style blocking — B packed
+//!   into `KC×NC` blocks of `NR`-wide panels (L1/L2 resident), an
+//!   `MR×NR` register-tile microkernel with one scalar accumulator
+//!   chain per output element. Because each element's adds run in plain
+//!   ascending-`p` order (the C tile is reloaded across `KC` blocks),
+//!   the blocked result is **bit-identical to the naive triple loop**
+//!   — blocking buys cache locality and ILP without reassociation.
+//! - **800-bit quire-exact path** ([`gemm_quire_f32`]): per-tile column
+//!   packing (`NR` columns of B made contiguous per tile), then one
+//!   [`Quire`] accumulation per output element, rounded once at
+//!   readout — the posit standard's fused dot product, at GEMM shape.
+//!   Exactness makes the result independent of accumulation order.
+//! - **quantized-weight path** ([`gemm_bp32_weights`] /
+//!   [`gemm_bp32_weights_fast`]): A is b-posit32 words (the stored
+//!   model weights), B is f32 activations — the serving matmul. The
+//!   fast variant lane-decodes A row-blocks into a scratch panel and
+//!   reuses the f32 microkernel; the exact variant decodes into the
+//!   quire accumulation.
+//!
+//! Sharding ([`par_gemm_f32`] etc.) splits C into contiguous row
+//! blocks via [`super::parallel`]; every row is produced by the same
+//! serial kernel regardless of the split, so `par_*` results are
+//! bit-identical to serial for any thread count.
+
+use super::codec;
+use super::parallel;
+use crate::formats::posit::BP32;
+use crate::formats::{Decoded, Quire};
+
+/// Microkernel rows (register tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register tile width; one 8-lane vector).
+pub const NR: usize = 8;
+/// k-dimension block (B panel rows kept L1-resident).
+pub const KC: usize = 256;
+/// n-dimension block (packed B block kept L2-resident).
+pub const NC: usize = 128;
+
+fn check_shape(a_len: usize, b_len: usize, c_len: usize, m: usize, k: usize, n: usize) {
+    assert_eq!(a_len, m * k, "gemm: A must be m×k");
+    assert_eq!(b_len, k * n, "gemm: B must be k×n");
+    assert_eq!(c_len, m * n, "gemm: C must be m×n");
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` into `NR`-wide panels: panel `pi`
+/// holds `kc` rows of `NR` contiguous values (zero-padded past `nc`).
+fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
+    let panels = nc.div_ceil(NR);
+    bpack[..panels * kc * NR].fill(0.0);
+    for (pi, jr) in (0..nc).step_by(NR).enumerate() {
+        let nr = NR.min(nc - jr);
+        let dst_base = pi * kc * NR;
+        for p in 0..kc {
+            let src = (pc + p) * ldb + jc + jr;
+            let dst = dst_base + p * NR;
+            bpack[dst..dst + nr].copy_from_slice(&b[src..src + nr]);
+        }
+    }
+}
+
+/// `MR×NR` register-tile microkernel: loads the C tile, accumulates
+/// `kc` products per element in ascending-`p` order (one scalar chain
+/// per element — no reassociation), stores it back. The full-`NR`
+/// inner loop over the zero-padded panel is branch-free and
+/// autovectorizer-friendly; only the live `nr` columns are stored.
+#[inline(always)]
+fn micro_f32(
+    a: &[f32],
+    lda: usize,
+    a_off: usize,
+    bpanel: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    c_off: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    for i in 0..mr {
+        for j in 0..nr {
+            acc[i][j] = c[c_off + i * ldc + j];
+        }
+    }
+    for p in 0..kc {
+        let brow = &bpanel[p * NR..p * NR + NR];
+        for (i, acc_i) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[a_off + i * lda + p];
+            for j in 0..NR {
+                acc_i[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..mr {
+        for j in 0..nr {
+            c[c_off + i * ldc + j] = acc[i][j];
+        }
+    }
+}
+
+/// Blocked f32 GEMM: `C ← A·B` (C is overwritten). Bit-identical to the
+/// naive ascending-`p` triple loop (see module docs).
+pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    c.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut bpack = vec![0f32; NC.div_ceil(NR) * KC * NR];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b, &mut bpack, pc, jc, kc, nc, n);
+            for ic in (0..m).step_by(MR) {
+                let mr = MR.min(m - ic);
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    let panel = (jr / NR) * kc * NR;
+                    micro_f32(
+                        a,
+                        k,
+                        ic * k + pc,
+                        &bpack[panel..panel + kc * NR],
+                        c,
+                        n,
+                        ic * n + jc + jr,
+                        mr,
+                        nr,
+                        kc,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Sharded blocked f32 GEMM with an explicit thread count.
+pub fn par_gemm_f32_with(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        gemm_f32(&a[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
+    });
+}
+
+/// Sharded blocked f32 GEMM (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    par_gemm_f32_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+}
+
+/// Quire-exact GEMM: every `C[i,j]` is an exact 800-bit accumulation of
+/// its k products, rounded once to f32 at readout.
+pub fn gemm_quire_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    quire_rows_f32(a, b, c, k, n);
+}
+
+/// Sharded quire-exact GEMM with an explicit thread count (each shard
+/// owns its own quire and column-pack scratch).
+pub fn par_gemm_quire_f32_with(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        quire_rows_f32(&a[r0 * k..(r0 + rows) * k], b, cb, k, n);
+    });
+}
+
+/// Sharded quire-exact GEMM (auto thread count).
+pub fn par_gemm_quire_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    par_gemm_quire_f32_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+}
+
+/// Quire GEMM worker over a row slab: per `NR`-column tile, pack the B
+/// columns contiguously, then run one exact accumulation per element.
+fn quire_rows_f32(a_rows: &[f32], b: &[f32], c_rows: &mut [f32], k: usize, n: usize) {
+    if n == 0 || c_rows.is_empty() {
+        return;
+    }
+    let rows = c_rows.len() / n;
+    let mut q = Quire::paper_800(&BP32);
+    let mut colpack = vec![0f32; k * NR];
+    for jc in (0..n).step_by(NR) {
+        let nr = NR.min(n - jc);
+        for j in 0..nr {
+            for p in 0..k {
+                colpack[j * k + p] = b[p * n + jc + j];
+            }
+        }
+        for i in 0..rows {
+            let arow = &a_rows[i * k..(i + 1) * k];
+            for j in 0..nr {
+                let col = &colpack[j * k..(j + 1) * k];
+                q.clear();
+                for p in 0..k {
+                    q.add_product(
+                        &Decoded::from_f64(arow[p] as f64),
+                        &Decoded::from_f64(col[p] as f64),
+                    );
+                }
+                c_rows[i * n + jc + j] = q.to_decoded().to_f64() as f32;
+            }
+        }
+    }
+}
+
+/// Quire-exact quantized-weight GEMM: `A` is m×k b-posit32 words (the
+/// stored model weights), `B` is k×n f32 activations; each output is an
+/// exact fused dot rounded once to f32 — the serving matmul's reference
+/// semantics.
+pub fn gemm_bp32_weights(a_bits: &[u32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    quire_rows_bp32(a_bits, b, c, k, n);
+}
+
+/// Sharded quire-exact quantized-weight GEMM with an explicit thread count.
+pub fn par_gemm_bp32_weights_with(
+    threads: usize,
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        quire_rows_bp32(&a_bits[r0 * k..(r0 + rows) * k], b, cb, k, n);
+    });
+}
+
+/// Sharded quire-exact quantized-weight GEMM (auto thread count).
+pub fn par_gemm_bp32_weights(
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp32_weights_with(
+        parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
+        a_bits,
+        b,
+        c,
+        m,
+        k,
+        n,
+    );
+}
+
+fn quire_rows_bp32(a_rows: &[u32], b: &[f32], c_rows: &mut [f32], k: usize, n: usize) {
+    if n == 0 || c_rows.is_empty() {
+        return;
+    }
+    let rows = c_rows.len() / n;
+    let mut q = Quire::paper_800(&BP32);
+    let mut colpack = vec![0f32; k * NR];
+    // One decode pass per (row, tile) amortizes weight decode over NR
+    // output columns.
+    let mut adec: Vec<Decoded> = vec![Decoded::ZERO; k];
+    for jc in (0..n).step_by(NR) {
+        let nr = NR.min(n - jc);
+        for j in 0..nr {
+            for p in 0..k {
+                colpack[j * k + p] = b[p * n + jc + j];
+            }
+        }
+        for i in 0..rows {
+            for (p, d) in adec.iter_mut().enumerate() {
+                *d = BP32.decode(a_rows[i * k + p] as u64);
+            }
+            for j in 0..nr {
+                let col = &colpack[j * k..(j + 1) * k];
+                q.clear();
+                for p in 0..k {
+                    q.add_product(&adec[p], &Decoded::from_f64(col[p] as f64));
+                }
+                c_rows[i * n + jc + j] = q.to_decoded().to_f64() as f32;
+            }
+        }
+    }
+}
+
+/// Rounded fast path for quantized weights: lane-decode each A row block
+/// into an f32 scratch panel, then run the blocked f32 GEMM on it —
+/// decode-then-GEMM with the decode amortized at panel granularity.
+pub fn gemm_bp32_weights_fast(
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    let mut a = vec![0f32; a_bits.len()];
+    codec::bp32_decode_into(a_bits, &mut a);
+    gemm_f32(&a, b, c, m, k, n);
+}
+
+/// Sharded fast quantized-weight GEMM with an explicit thread count
+/// (each shard decodes only its own row slab).
+pub fn par_gemm_bp32_weights_fast_with(
+    threads: usize,
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        gemm_bp32_weights_fast(&a_bits[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
+    });
+}
+
+/// Sharded fast quantized-weight GEMM (auto thread count).
+pub fn par_gemm_bp32_weights_fast(
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp32_weights_fast_with(
+        parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
+        a_bits,
+        b,
+        c,
+        m,
+        k,
+        n,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive ascending-`p` triple loop: one scalar accumulator chain per
+    /// element — the order the blocked kernel must reproduce exactly.
+    fn naive_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn mixed(rng: &mut crate::testutil::Rng, len: usize) -> Vec<f32> {
+        crate::testutil::mixed_scale_f32(rng, len, 31)
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise_on_edge_shapes() {
+        let mut rng = crate::testutil::Rng::new(0x9e44);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 300, 9), (17, 129, 33), (33, 1, 2)]
+        {
+            let a = mixed(&mut rng, m * k);
+            let b = mixed(&mut rng, k * n);
+            let mut c = vec![0f32; m * n];
+            gemm_f32(&a, &b, &mut c, m, k, n);
+            let r = naive_f32(&a, &b, m, k, n);
+            assert_eq!(
+                c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn quire_gemm_recovers_cancellation_the_fast_path_loses() {
+        // Row · column of [2^24, 1, -2^24]·[2^24, 1, 2^24]: exact result 1,
+        // f32 accumulation loses it entirely.
+        let a = [16777216.0f32, 1.0, -16777216.0];
+        let b = [16777216.0f32, 1.0, 16777216.0]; // 3×1 column, row-major
+        let mut c_fast = [0f32; 1];
+        gemm_f32(&a, &b, &mut c_fast, 1, 3, 1);
+        assert_eq!(c_fast[0], 0.0);
+        let mut c_exact = [0f32; 1];
+        gemm_quire_f32(&a, &b, &mut c_exact, 1, 3, 1);
+        assert_eq!(c_exact[0], 1.0);
+    }
+
+    #[test]
+    fn bp32_weight_paths_agree_with_gemv_kernels() {
+        use crate::vector::kernels;
+        let mut rng = crate::testutil::Rng::new(0xbeef);
+        let (m, k) = (6, 17);
+        let w: Vec<f32> = mixed(&mut rng, m * k);
+        let w_bits: Vec<u32> = w.iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+        let x = mixed(&mut rng, k);
+        // n = 1 GEMM ≡ gemv.
+        let mut c = vec![0f32; m];
+        gemm_bp32_weights(&w_bits, &x, &mut c, m, k, 1);
+        let mut y = vec![0f32; m];
+        let mut q = kernels::QuireDot::new();
+        q.gemv_bp32_weights(&w_bits, &x, &mut y);
+        assert_eq!(c, y);
+        let mut cf = vec![0f32; m];
+        gemm_bp32_weights_fast(&w_bits, &x, &mut cf, m, k, 1);
+        for r in 0..m {
+            let fast = kernels::dot_bp32_weights_fast(&w_bits[r * k..(r + 1) * k], &x);
+            assert_eq!(cf[r], fast, "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_paths_bit_identical_to_serial() {
+        let mut rng = crate::testutil::Rng::new(0x600d);
+        let (m, k, n) = (13, 37, 11);
+        let a = mixed(&mut rng, m * k);
+        let b = mixed(&mut rng, k * n);
+        let a_bits: Vec<u32> = a.iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+        let mut serial = vec![0f32; m * n];
+        gemm_f32(&a, &b, &mut serial, m, k, n);
+        let mut serial_q = vec![0f32; m * n];
+        gemm_quire_f32(&a, &b, &mut serial_q, m, k, n);
+        let mut serial_w = vec![0f32; m * n];
+        gemm_bp32_weights(&a_bits, &b, &mut serial_w, m, k, n);
+        for t in [1usize, 2, 7, 32] {
+            let mut c = vec![0f32; m * n];
+            par_gemm_f32_with(t, &a, &b, &mut c, m, k, n);
+            assert_eq!(c, serial, "f32 t={t}");
+            par_gemm_quire_f32_with(t, &a, &b, &mut c, m, k, n);
+            assert_eq!(c, serial_q, "quire t={t}");
+            par_gemm_bp32_weights_with(t, &a_bits, &b, &mut c, m, k, n);
+            assert_eq!(c, serial_w, "bp32 t={t}");
+        }
+    }
+
+    #[test]
+    fn zero_sized_dimensions_are_noops() {
+        let mut c: Vec<f32> = Vec::new();
+        gemm_f32(&[], &[], &mut c, 0, 0, 0);
+        gemm_quire_f32(&[], &[], &mut c, 0, 5, 0);
+        par_gemm_f32_with(4, &[], &[], &mut c, 0, 0, 0);
+        let mut c1 = vec![7f32; 2];
+        gemm_f32(&[], &[], &mut c1, 2, 0, 1);
+        assert_eq!(c1, vec![0.0, 0.0], "k=0 zeroes C");
+    }
+}

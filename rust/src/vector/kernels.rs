@@ -11,6 +11,7 @@
 //! across calls, so steady-state serving allocates nothing.
 
 use super::codec;
+use super::parallel;
 use crate::formats::posit::BP32;
 use crate::formats::{Decoded, Quire};
 
@@ -78,6 +79,58 @@ pub fn dot_bp32_weights_fast(w_bits: &[u32], x: &[f32]) -> f32 {
         i += 1;
     }
     s
+}
+
+// ----------------------------------------------------------------------
+// Row-sharded gemv (par_* entry points). Each shard covers a contiguous
+// block of output rows and runs the serial kernel on it (quire shards own
+// a private quire), so results are bit-identical to serial for any thread
+// count.
+// ----------------------------------------------------------------------
+
+/// Sharded f32 gemv with an explicit thread count.
+pub fn par_gemv_f32_with(threads: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
+        gemv_f32(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+    });
+}
+
+/// Sharded f32 gemv (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+    par_gemv_f32_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+}
+
+/// Sharded quire-exact gemv with an explicit thread count.
+pub fn par_gemv_quire_f32_with(threads: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
+        let mut q = QuireDot::new();
+        q.gemv_f32(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+    });
+}
+
+/// Sharded quire-exact gemv (auto thread count).
+pub fn par_gemv_quire_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+    par_gemv_quire_f32_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+}
+
+/// Sharded quire-exact quantized-weight gemv with an explicit thread count.
+pub fn par_gemv_bp32_weights_with(threads: usize, w_bits: &[u32], x: &[f32], y: &mut [f32]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
+    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
+        let mut q = QuireDot::new();
+        q.gemv_bp32_weights(&w_bits[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+    });
+}
+
+/// Sharded quire-exact quantized-weight gemv (auto thread count).
+pub fn par_gemv_bp32_weights(w_bits: &[u32], x: &[f32], y: &mut [f32]) {
+    let shards = parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD);
+    par_gemv_bp32_weights_with(shards, w_bits, x, y);
 }
 
 /// Reusable 800-bit quire context for exact dot/axpy/gemv. One allocation
@@ -181,8 +234,10 @@ mod tests {
 
     #[test]
     fn quire_dot_bp32_fused() {
-        let a: Vec<u32> = [256.0f32, 1.0 / 256.0, -256.0].iter().map(|&x| codec::bp32_encode_lane(x)).collect();
-        let b: Vec<u32> = [256.0f32, 1.0, 256.0].iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+        let a: Vec<u32> =
+            [256.0f32, 1.0 / 256.0, -256.0].iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+        let b: Vec<u32> =
+            [256.0f32, 1.0, 256.0].iter().map(|&x| codec::bp32_encode_lane(x)).collect();
         let mut q = QuireDot::new();
         let out = q.dot_bp32(&a, &b);
         assert_eq!(codec::bp32_decode_lane(out), 1.0 / 256.0);
@@ -219,6 +274,31 @@ mod tests {
     }
 
     #[test]
+    fn par_gemv_bit_identical_to_serial() {
+        let mut rng = crate::testutil::Rng::new(0x9e37);
+        let (rows, cols) = (19usize, 23usize);
+        let a: Vec<f32> = (0..rows * cols).map(|_| (rng.f64() - 0.5) as f32 * 8.0).collect();
+        let x: Vec<f32> = (0..cols).map(|_| (rng.f64() - 0.5) as f32 * 8.0).collect();
+        let w_bits: Vec<u32> = a.iter().map(|&v| codec::bp32_encode_lane(v)).collect();
+        let mut y_fast = vec![0f32; rows];
+        gemv_f32(&a, &x, &mut y_fast);
+        let mut q = QuireDot::new();
+        let mut y_quire = vec![0f32; rows];
+        q.gemv_f32(&a, &x, &mut y_quire);
+        let mut y_w = vec![0f32; rows];
+        q.gemv_bp32_weights(&w_bits, &x, &mut y_w);
+        for t in [1usize, 2, 7] {
+            let mut y = vec![0f32; rows];
+            par_gemv_f32_with(t, &a, &x, &mut y);
+            assert_eq!(y, y_fast, "f32 t={t}");
+            par_gemv_quire_f32_with(t, &a, &x, &mut y);
+            assert_eq!(y, y_quire, "quire t={t}");
+            par_gemv_bp32_weights_with(t, &w_bits, &x, &mut y);
+            assert_eq!(y, y_w, "bp32 t={t}");
+        }
+    }
+
+    #[test]
     fn axpy_paths() {
         let x = [1.0f32, 2.0, 3.0];
         let mut y = [10.0f32, 20.0, 30.0];
@@ -226,8 +306,10 @@ mod tests {
         assert_eq!(y, [12.0, 24.0, 36.0]);
 
         let alpha = codec::bp32_encode_lane(2.0);
-        let xb: Vec<u32> = [3.0f32, -1.5, 0.0].iter().map(|&v| codec::bp32_encode_lane(v)).collect();
-        let mut yb: Vec<u32> = [1.0f32, 1.0, 7.0].iter().map(|&v| codec::bp32_encode_lane(v)).collect();
+        let xb: Vec<u32> =
+            [3.0f32, -1.5, 0.0].iter().map(|&v| codec::bp32_encode_lane(v)).collect();
+        let mut yb: Vec<u32> =
+            [1.0f32, 1.0, 7.0].iter().map(|&v| codec::bp32_encode_lane(v)).collect();
         let mut q = QuireDot::new();
         q.axpy_bp32(alpha, &xb, &mut yb);
         let back: Vec<f32> = yb.iter().map(|&w| codec::bp32_decode_lane(w)).collect();

@@ -1,20 +1,30 @@
 //! Vector layer: the serving hot path's data plane.
 //!
-//! Two halves:
+//! Four parts:
 //! - [`codec`] — branch-free, chunked (8-lane) batched encode/decode for
 //!   b-posit⟨32,6,5⟩, posit⟨32,2⟩, any ⟨n≤32,rs,es⟩ spec, and f32⇄bits,
 //!   with in-place variants for zero-allocation buffer reuse. This is the
 //!   software mirror of the paper's bounded-regime ⇒ fixed-mux insight.
 //! - [`kernels`] — batched `dot`, `axpy`, and `gemv` with 800-bit
 //!   [`crate::formats::Quire`]-exact accumulation plus rounded f32 fast
-//!   paths: the repo's first linear-algebra workload, and the layer later
-//!   scaling work (explicit SIMD, sharding, GEMM) plugs into.
+//!   paths, and `par_gemv_*` row-sharded variants.
+//! - [`gemm`] — register/L1-blocked GEMM (f32 fast path, quire-exact
+//!   path, quantized-weight serving path), serial and row-sharded; the
+//!   quantized-matmul workload at tensor scale.
+//! - [`parallel`] — zero-dependency scoped fork-join sharding over
+//!   `std::thread` workers (`PALLAS_THREADS`, auto default), used by the
+//!   batched codec, gemv, and GEMM. Shards are contiguous row/element
+//!   blocks, so every `par_*` result is bit-identical to serial for any
+//!   thread count.
 //!
-//! The coordinator's quantizer routes every batch through [`codec`];
-//! `positron vector-bench` and `cargo bench --bench vector_codec` measure
-//! the scalar-vs-vector throughput and emit `BENCH_vector_codec.json`.
+//! The coordinator's quantizer routes every batch through the sharded
+//! codec; `positron vector-bench` / `gemm-bench` and the `vector_codec` /
+//! `vector_gemm` bench targets measure throughput and emit
+//! `BENCH_vector_codec.json` / `BENCH_vector_gemm.json`.
 
 pub mod codec;
+pub mod gemm;
 pub mod kernels;
+pub mod parallel;
 
 pub use codec::LANES;

@@ -1,0 +1,254 @@
+//! Zero-dependency scoped fork-join pool for the vector layer.
+//!
+//! The vendored dependency set has no rayon, so multi-core sharding is
+//! built directly on [`std::thread::scope`]: each call forks `t − 1`
+//! scoped workers, runs the last shard on the caller thread, and joins
+//! before returning — no persistent pool state, no channels, no unsafe.
+//! Work is always split into **contiguous** blocks (whole rows for
+//! matrix kernels), so every output element is produced by exactly the
+//! same instruction sequence as in the serial path and results are
+//! **bit-identical for any thread count**.
+//!
+//! Thread count resolution (see [`num_threads`]): the `PALLAS_THREADS`
+//! environment variable when set to a positive integer, otherwise
+//! [`std::thread::available_parallelism`]. Small batches stay serial via
+//! [`auto_shards`], which caps the shard count so each worker gets at
+//! least a threshold's worth of elements — forking threads for a batch
+//! that encodes in microseconds would be pure overhead.
+
+use super::codec;
+use crate::formats::posit::PositSpec;
+
+/// Hard cap on worker threads (sanity bound for absurd `PALLAS_THREADS`).
+pub const MAX_THREADS: usize = 256;
+
+/// Minimum elements per shard for the batched codec entry points: below
+/// `threads × this`, the sharded wrappers degrade to the serial codec.
+/// ~16k lane-codec elements is a few microseconds of work — comparable to
+/// a thread spawn, so smaller shards cannot win.
+pub const CODEC_MIN_SHARD: usize = 16 * 1024;
+
+/// Minimum output rows per shard for GEMM/gemv row-block sharding. Rows
+/// are whole dot products, so even one row is substantial work; 8 keeps
+/// shard bookkeeping negligible.
+pub const ROWS_MIN_SHARD: usize = 8;
+
+/// Worker count: `PALLAS_THREADS` if set to a positive integer (clamped
+/// to [`MAX_THREADS`]), else the machine's available parallelism, else 1.
+/// Invalid or zero values fall back to the auto default. The env var is
+/// re-read on every call (so tests and operators can change it live);
+/// the auto default is probed once per process — `available_parallelism`
+/// is a syscall and this sits on the per-batch serving path.
+pub fn num_threads() -> usize {
+    match std::env::var("PALLAS_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(t) if t >= 1 => t.min(MAX_THREADS),
+            _ => auto_threads(),
+        },
+        Err(_) => auto_threads(),
+    }
+}
+
+fn auto_threads() -> usize {
+    static AUTO: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(MAX_THREADS)
+    })
+}
+
+/// Shard count for a `len`-element batch: [`num_threads`], but never so
+/// many that a shard falls below `min_per_shard` elements (and never 0).
+pub fn auto_shards(len: usize, min_per_shard: usize) -> usize {
+    num_threads().min(len / min_per_shard.max(1)).max(1)
+}
+
+/// Fork-join over contiguous row blocks of `data` (`rows × width`,
+/// row-major): splits the rows into at most `threads` near-equal
+/// contiguous blocks and runs `f(first_row, block)` for each, the last on
+/// the caller thread. `f` must produce each row independently of the
+/// split, which every caller in this crate satisfies by construction
+/// (one output row = one serial kernel invocation).
+pub fn for_each_row_block<T, F>(threads: usize, rows: usize, width: usize, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), rows * width, "row sharding: shape mismatch");
+    let t = threads.clamp(1, rows.max(1));
+    if t <= 1 {
+        f(0, data);
+        return;
+    }
+    let base = rows / t;
+    let rem = rows % t;
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest = data;
+        let mut row0 = 0usize;
+        for i in 0..t {
+            let nrows = base + usize::from(i < rem);
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(nrows * width);
+            rest = tail;
+            let r0 = row0;
+            row0 += nrows;
+            if i == t - 1 {
+                fr(r0, block);
+            } else {
+                s.spawn(move || fr(r0, block));
+            }
+        }
+    });
+}
+
+/// Fork-join over contiguous element blocks of `out`: `f(offset, block)`.
+pub fn for_each_block<T, F>(threads: usize, out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = out.len();
+    for_each_row_block(threads, len, 1, out, f);
+}
+
+// ----------------------------------------------------------------------
+// Sharded batch codec: the coordinator's quantize/dequantize entry points.
+// Each wrapper splits the batch into contiguous blocks and runs the
+// serial vector codec on every block, so results are bit-identical to the
+// serial path for any thread count (the codec is elementwise).
+// ----------------------------------------------------------------------
+
+/// Sharded batched b-posit32 encode with an explicit shard count.
+pub fn bp32_encode_into_with(threads: usize, xs: &[f32], out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec::bp32_encode_into(&xs[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched b-posit32 encode (auto thread count).
+pub fn bp32_encode_into(xs: &[f32], out: &mut [u32]) {
+    bp32_encode_into_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs, out);
+}
+
+/// Sharded batched b-posit32 decode with an explicit shard count.
+pub fn bp32_decode_into_with(threads: usize, ws: &[u32], out: &mut [f32]) {
+    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec::bp32_decode_into(&ws[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched b-posit32 decode (auto thread count).
+pub fn bp32_decode_into(ws: &[u32], out: &mut [f32]) {
+    bp32_decode_into_with(auto_shards(ws.len(), CODEC_MIN_SHARD), ws, out);
+}
+
+/// Sharded fused quantize+dequantize in place with an explicit shard
+/// count — the server's staged-buffer batch path.
+pub fn bp32_roundtrip_in_place_with(threads: usize, xs: &mut [f32]) {
+    for_each_block(threads, xs, |_, block| codec::bp32_roundtrip_in_place(block));
+}
+
+/// Sharded fused roundtrip in place (auto thread count).
+pub fn bp32_roundtrip_in_place(xs: &mut [f32]) {
+    bp32_roundtrip_in_place_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs);
+}
+
+/// Sharded batched encode under any lane-codec-supported spec.
+pub fn encode_slice_into_with(threads: usize, spec: &PositSpec, xs: &[f32], out: &mut [u32]) {
+    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec::encode_slice_into(spec, &xs[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched decode under any lane-codec-supported spec.
+pub fn decode_slice_into_with(threads: usize, spec: &PositSpec, ws: &[u32], out: &mut [f32]) {
+    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec::decode_slice_into(spec, &ws[off..off + block.len()], block);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_blocks_cover_exactly_once() {
+        // Every element written exactly once with the right row index, for
+        // thread counts below, at, and above the row count.
+        for t in [1usize, 2, 3, 7, 16] {
+            let (rows, width) = (13usize, 5usize);
+            let mut data = vec![0u32; rows * width];
+            for_each_row_block(t, rows, width, &mut data, |r0, block| {
+                let nrows = block.len() / width;
+                for r in 0..nrows {
+                    for c in 0..width {
+                        block[r * width + c] += ((r0 + r) * width + c) as u32 + 1;
+                    }
+                }
+            });
+            let expect: Vec<u32> = (1..=(rows * width) as u32).collect();
+            assert_eq!(data, expect, "t={t}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_block(4, &mut empty, |_, _| {});
+        let mut one = vec![7u32];
+        for_each_block(4, &mut one, |off, b| {
+            assert_eq!(off, 0);
+            b[0] += 1;
+        });
+        assert_eq!(one, vec![8]);
+    }
+
+    #[test]
+    fn sharded_codec_bit_identical_to_serial() {
+        let mut rng = crate::testutil::Rng::new(0x7a11a5);
+        let xs: Vec<f32> = (0..4097)
+            .map(|_| {
+                let v = f32::from_bits(rng.next_u32());
+                if v.is_finite() {
+                    v
+                } else {
+                    2.5
+                }
+            })
+            .collect();
+        let mut serial_w = vec![0u32; xs.len()];
+        codec::bp32_encode_into(&xs, &mut serial_w);
+        let mut serial_f = vec![0f32; xs.len()];
+        codec::bp32_decode_into(&serial_w, &mut serial_f);
+        for t in [1usize, 2, 7] {
+            let mut w = vec![0u32; xs.len()];
+            bp32_encode_into_with(t, &xs, &mut w);
+            assert_eq!(w, serial_w, "encode t={t}");
+            let mut f = vec![0f32; xs.len()];
+            bp32_decode_into_with(t, &w, &mut f);
+            assert_eq!(
+                f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "decode t={t}"
+            );
+            let mut rt = xs.clone();
+            bp32_roundtrip_in_place_with(t, &mut rt);
+            assert_eq!(
+                rt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "roundtrip t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_shards_keeps_small_batches_serial() {
+        assert_eq!(auto_shards(0, CODEC_MIN_SHARD), 1);
+        assert_eq!(auto_shards(CODEC_MIN_SHARD - 1, CODEC_MIN_SHARD), 1);
+        assert!(auto_shards(usize::MAX, CODEC_MIN_SHARD) >= 1);
+        assert!(num_threads() >= 1 && num_threads() <= MAX_THREADS);
+    }
+}

@@ -34,7 +34,8 @@ fn serves_golden_batch_correctly() {
         let feats = w.golden_x[g * w.d..(g + 1) * w.d].to_vec();
         let resp = server.infer(feats).unwrap();
         assert_eq!(resp.logits.len(), w.c);
-        let argmax = resp.logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let argmax =
+            resp.logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
         if argmax == w.golden_y[g] as usize {
             correct += 1;
         }
@@ -108,7 +109,8 @@ fn quantize_inputs_toggle_changes_nothing_for_fovea_inputs() {
 #[test]
 fn f32_model_variant_servable() {
     let Some(w) = weights() else { return };
-    let server = start(ServerConfig { model_file: "model_f32.hlo.txt".into(), ..Default::default() });
+    let server =
+        start(ServerConfig { model_file: "model_f32.hlo.txt".into(), ..Default::default() });
     let feats = w.golden_x[..w.d].to_vec();
     let resp = server.infer(feats).unwrap();
     // Must match the recorded f32 golden logits for row 0.

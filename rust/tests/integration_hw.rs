@@ -21,9 +21,12 @@ fn dec_rows() -> Vec<CostReport> {
         };
         let b = PositSpec::bounded(n, 6, 5);
         let p = PositSpec::standard(n, 2);
-        rows.push(measure(&format!("f{n}"), &float_dec::build(&f), &power_vectors(&DesignUnderTest::FloatDec(&f), 12)));
-        rows.push(measure(&format!("b{n}"), &bposit_dec::build(&b), &power_vectors(&DesignUnderTest::PositDec(&b), 12)));
-        rows.push(measure(&format!("p{n}"), &posit_dec::build(&p), &power_vectors(&DesignUnderTest::PositDec(&p), 12)));
+        let vf = power_vectors(&DesignUnderTest::FloatDec(&f), 12);
+        rows.push(measure(&format!("f{n}"), &float_dec::build(&f), &vf));
+        let vb = power_vectors(&DesignUnderTest::PositDec(&b), 12);
+        rows.push(measure(&format!("b{n}"), &bposit_dec::build(&b), &vb));
+        let vp = power_vectors(&DesignUnderTest::PositDec(&p), 12);
+        rows.push(measure(&format!("p{n}"), &posit_dec::build(&p), &vp));
     }
     rows
 }
@@ -34,7 +37,12 @@ fn table5_shape_claims() {
     let (f, b, p) = (&r[3], &r[4], &r[5]); // 32-bit row triplet
     // b-posit32 decode beats posit32 decode on every axis (paper: −79%
     // power, −71% area, −60% delay; we demand the direction + ≥30%).
-    assert!(b.peak_power_mw < 0.7 * p.peak_power_mw, "power {} vs {}", b.peak_power_mw, p.peak_power_mw);
+    assert!(
+        b.peak_power_mw < 0.7 * p.peak_power_mw,
+        "power {} vs {}",
+        b.peak_power_mw,
+        p.peak_power_mw
+    );
     assert!(b.area_um2 < 0.7 * p.area_um2);
     assert!(b.delay_ns < 0.6 * p.delay_ns);
     // Paper: "the decoding of the b-posit is 39% faster than the IEEE float
@@ -61,9 +69,12 @@ fn table6_shape_claims() {
         };
         let b = PositSpec::bounded(n, 6, 5);
         let p = PositSpec::standard(n, 2);
-        rows.push(measure("f", &float_enc::build(&f), &power_vectors(&DesignUnderTest::FloatEnc(&f), 12)));
-        rows.push(measure("b", &bposit_enc::build(&b), &power_vectors(&DesignUnderTest::PositEnc(&b), 12)));
-        rows.push(measure("p", &posit_enc::build(&p), &power_vectors(&DesignUnderTest::PositEnc(&p), 12)));
+        let vf = power_vectors(&DesignUnderTest::FloatEnc(&f), 12);
+        rows.push(measure("f", &float_enc::build(&f), &vf));
+        let vb = power_vectors(&DesignUnderTest::PositEnc(&b), 12);
+        rows.push(measure("b", &bposit_enc::build(&b), &vb));
+        let vp = power_vectors(&DesignUnderTest::PositEnc(&p), 12);
+        rows.push(measure("p", &posit_enc::build(&p), &vp));
     }
     let (b32, p32) = (&rows[4], &rows[5]);
     // Paper at 32: −68% power, −46% area, −44% delay vs posit encoder.
@@ -90,13 +101,18 @@ fn fig16_energy_claims() {
             };
             let b = PositSpec::bounded(n, 6, 5);
             let p = PositSpec::standard(n, 2);
-            rows.push(measure("f", &float_enc::build(&f), &power_vectors(&DesignUnderTest::FloatEnc(&f), 12)));
-            rows.push(measure("b", &bposit_enc::build(&b), &power_vectors(&DesignUnderTest::PositEnc(&b), 12)));
-            rows.push(measure("p", &posit_enc::build(&p), &power_vectors(&DesignUnderTest::PositEnc(&p), 12)));
+            let vf = power_vectors(&DesignUnderTest::FloatEnc(&f), 12);
+            rows.push(measure("f", &float_enc::build(&f), &vf));
+            let vb = power_vectors(&DesignUnderTest::PositEnc(&b), 12);
+            rows.push(measure("b", &bposit_enc::build(&b), &vb));
+            let vp = power_vectors(&DesignUnderTest::PositEnc(&p), 12);
+            rows.push(measure("p", &posit_enc::build(&p), &vp));
         }
         rows
     };
-    let energy = |i: usize| (dec[i].delay_ns + enc[i].delay_ns) * (2.0 * dec[i].peak_power_mw + enc[i].peak_power_mw);
+    let energy = |i: usize| {
+        (dec[i].delay_ns + enc[i].delay_ns) * (2.0 * dec[i].peak_power_mw + enc[i].peak_power_mw)
+    };
     // 64-bit: b-posit (idx 7) uses markedly less energy than float (6) and
     // posit (8) — the paper's headline "40% less than IEEE floats".
     assert!(energy(7) < 0.8 * energy(6), "b {} vs f {}", energy(7), energy(6));

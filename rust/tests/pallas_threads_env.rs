@@ -1,0 +1,37 @@
+//! `PALLAS_THREADS` environment-variable resolution. This test binary
+//! owns the variable: integration-test binaries run as separate
+//! processes, and this is the only test in the binary, so the process
+//! env mutation cannot race another test.
+
+use positron::vector::parallel;
+
+#[test]
+fn pallas_threads_env_resolution() {
+    // Unset → auto default: at least 1, at most the cap.
+    std::env::remove_var("PALLAS_THREADS");
+    let auto = parallel::num_threads();
+    assert!((1..=parallel::MAX_THREADS).contains(&auto), "auto = {auto}");
+
+    // Explicit positive value is honored verbatim (clamped to the cap).
+    std::env::set_var("PALLAS_THREADS", "7");
+    assert_eq!(parallel::num_threads(), 7);
+    std::env::set_var("PALLAS_THREADS", "1");
+    assert_eq!(parallel::num_threads(), 1);
+    std::env::set_var("PALLAS_THREADS", "999999");
+    assert_eq!(parallel::num_threads(), parallel::MAX_THREADS);
+
+    // Invalid and zero values fall back to the auto default.
+    for bad in ["0", "-3", "lots", ""] {
+        std::env::set_var("PALLAS_THREADS", bad);
+        assert_eq!(parallel::num_threads(), auto, "fallback for {bad:?}");
+    }
+
+    // The sharded entry points run correctly under an env-set count —
+    // the end-to-end path the env var exists for.
+    std::env::set_var("PALLAS_THREADS", "3");
+    let xs: Vec<f32> = (0..40_000).map(|i| (i as f32 - 20_000.0) * 0.125).collect();
+    let mut rt = xs.clone();
+    positron::vector::parallel::bp32_roundtrip_in_place(&mut rt);
+    assert_eq!(rt, xs, "fovea values survive the sharded roundtrip exactly");
+    std::env::remove_var("PALLAS_THREADS");
+}

@@ -1,0 +1,272 @@
+//! Blocked-GEMM parity and sharding bit-identity (the ISSUE-2 test
+//! satellite):
+//! - the blocked f32 fast path vs a naive ascending-`p` triple loop:
+//!   **bitwise** equality (blocking must buy locality, not reassociation);
+//! - the blocked quire path vs an independent naive triple-loop quire
+//!   reference built directly on `formats::Quire`, on random mixed-scale
+//!   and adversarial cancellation-heavy matrices;
+//! - `PALLAS_THREADS ∈ {1, 2, 7}`-style bit-identity for the sharded
+//!   codec, `par_gemv_*`, and every `par_gemm_*` path (via the explicit
+//!   `_with` thread-count entry points, which is what the env var feeds).
+
+use positron::formats::posit::BP32;
+use positron::formats::{Decoded, Quire};
+use positron::testutil::Rng;
+use positron::vector::{codec, gemm, kernels, parallel};
+
+/// Independent reference: naive triple-loop GEMM with one 800-bit quire
+/// accumulation per output element, built straight on the formats layer
+/// (no vector:: code involved).
+fn naive_quire_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut q = Quire::paper_800(&BP32);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            q.clear();
+            for p in 0..k {
+                q.add_product(
+                    &Decoded::from_f64(a[i * k + p] as f64),
+                    &Decoded::from_f64(b[p * n + j] as f64),
+                );
+            }
+            c[i * n + j] = q.to_decoded().to_f64() as f32;
+        }
+    }
+    c
+}
+
+/// Independent reference for the quantized-weight path.
+fn naive_quire_gemm_bp32(a_bits: &[u32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut q = Quire::paper_800(&BP32);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            q.clear();
+            for p in 0..k {
+                q.add_product(
+                    &BP32.decode(a_bits[i * k + p] as u64),
+                    &Decoded::from_f64(b[p * n + j] as f64),
+                );
+            }
+            c[i * n + j] = q.to_decoded().to_f64() as f32;
+        }
+    }
+    c
+}
+
+fn naive_f32_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+use positron::testutil::mixed_scale_f32 as mixed;
+
+/// Cancellation-heavy matrices: consecutive (big, tiny, −big) triples per
+/// row/column so the f32 path loses the tiny terms and the quire must not.
+fn adversarial(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let big = 16777216.0f32; // 2^24, exact in f32; big² = 2^48
+    let mut a = vec![0f32; m * k];
+    let mut b = vec![0f32; k * n];
+    for i in 0..m {
+        for p in 0..k {
+            a[i * k + p] = match p % 3 {
+                0 => big,
+                1 => 1.0 + (i % 7) as f32,
+                _ => -big,
+            };
+        }
+    }
+    for p in 0..k {
+        for j in 0..n {
+            b[p * n + j] = match p % 3 {
+                0 => big,
+                1 => 1.0 / 256.0 * (1 + (j % 5)) as f32,
+                _ => big,
+            };
+        }
+    }
+    (a, b)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn blocked_f32_matches_naive_bitwise_across_blocking_boundaries() {
+    let mut rng = Rng::new(0x61e8);
+    // Shapes straddling MR/NR/KC/NC boundaries, including non-multiples.
+    let shapes = [(1, 1, 1), (4, 8, 8), (5, 300, 9), (7, 513, 17), (33, 129, 131), (2, 1024, 3)];
+    for (m, k, n) in shapes {
+        let a = mixed(&mut rng, m * k, 31);
+        let b = mixed(&mut rng, k * n, 31);
+        let mut c = vec![0f32; m * n];
+        gemm::gemm_f32(&a, &b, &mut c, m, k, n);
+        assert_eq!(bits(&c), bits(&naive_f32_gemm(&a, &b, m, k, n)), "{m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn blocked_quire_matches_naive_quire_reference_random() {
+    let mut rng = Rng::new(0x9a11);
+    for (m, k, n) in [(3, 5, 7), (8, 33, 12), (13, 257, 9)] {
+        let a = mixed(&mut rng, m * k, 41);
+        let b = mixed(&mut rng, k * n, 41);
+        let mut c = vec![0f32; m * n];
+        gemm::gemm_quire_f32(&a, &b, &mut c, m, k, n);
+        assert_eq!(bits(&c), bits(&naive_quire_gemm(&a, &b, m, k, n)), "{m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn blocked_quire_survives_adversarial_cancellation() {
+    let (m, k, n) = (6, 24, 10);
+    let (a, b) = adversarial(m, k, n);
+    let mut c = vec![0f32; m * n];
+    gemm::gemm_quire_f32(&a, &b, &mut c, m, k, n);
+    let reference = naive_quire_gemm(&a, &b, m, k, n);
+    assert_eq!(bits(&c), bits(&reference));
+    // And the cancellation actually bites: the f32 path must disagree
+    // (the tiny recovered terms are below f32 accumulation resolution).
+    let fast = naive_f32_gemm(&a, &b, m, k, n);
+    assert_ne!(bits(&fast), bits(&reference), "adversarial data too tame");
+    // Exactness sanity on one element: k/3 triples of (2^48 + tiny - 2^48)
+    // leave exactly the sum of the tiny cross terms.
+    assert!(c.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn quantized_weight_gemm_matches_naive_reference() {
+    let mut rng = Rng::new(0x0eed);
+    let (m, k, n) = (5, 19, 6);
+    let w = mixed(&mut rng, m * k, 21);
+    let w_bits: Vec<u32> = w.iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+    let b = mixed(&mut rng, k * n, 21);
+    let mut c = vec![0f32; m * n];
+    gemm::gemm_bp32_weights(&w_bits, &b, &mut c, m, k, n);
+    assert_eq!(bits(&c), bits(&naive_quire_gemm_bp32(&w_bits, &b, m, k, n)));
+}
+
+#[test]
+fn thread_count_bit_identity_gemm_and_gemv() {
+    let mut rng = Rng::new(0x1dea);
+    let (m, k, n) = (29, 65, 23);
+    let a = mixed(&mut rng, m * k, 31);
+    let b = mixed(&mut rng, k * n, 31);
+    let a_bits: Vec<u32> = a.iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+    let x = mixed(&mut rng, k, 31);
+
+    let mut c_f32 = vec![0f32; m * n];
+    gemm::gemm_f32(&a, &b, &mut c_f32, m, k, n);
+    let mut c_quire = vec![0f32; m * n];
+    gemm::gemm_quire_f32(&a, &b, &mut c_quire, m, k, n);
+    let mut c_w = vec![0f32; m * n];
+    gemm::gemm_bp32_weights(&a_bits, &b, &mut c_w, m, k, n);
+    let mut c_wf = vec![0f32; m * n];
+    gemm::gemm_bp32_weights_fast(&a_bits, &b, &mut c_wf, m, k, n);
+
+    let mut y_f32 = vec![0f32; m];
+    kernels::gemv_f32(&a[..m * k], &x, &mut y_f32);
+    let mut q = kernels::QuireDot::new();
+    let mut y_quire = vec![0f32; m];
+    q.gemv_f32(&a[..m * k], &x, &mut y_quire);
+    let mut y_w = vec![0f32; m];
+    q.gemv_bp32_weights(&a_bits[..m * k], &x, &mut y_w);
+
+    for t in [1usize, 2, 7] {
+        let mut c = vec![0f32; m * n];
+        gemm::par_gemm_f32_with(t, &a, &b, &mut c, m, k, n);
+        assert_eq!(bits(&c), bits(&c_f32), "gemm f32 t={t}");
+        gemm::par_gemm_quire_f32_with(t, &a, &b, &mut c, m, k, n);
+        assert_eq!(bits(&c), bits(&c_quire), "gemm quire t={t}");
+        gemm::par_gemm_bp32_weights_with(t, &a_bits, &b, &mut c, m, k, n);
+        assert_eq!(bits(&c), bits(&c_w), "gemm bp32 t={t}");
+        gemm::par_gemm_bp32_weights_fast_with(t, &a_bits, &b, &mut c, m, k, n);
+        assert_eq!(bits(&c), bits(&c_wf), "gemm bp32 fast t={t}");
+
+        let mut y = vec![0f32; m];
+        kernels::par_gemv_f32_with(t, &a[..m * k], &x, &mut y);
+        assert_eq!(bits(&y), bits(&y_f32), "gemv f32 t={t}");
+        kernels::par_gemv_quire_f32_with(t, &a[..m * k], &x, &mut y);
+        assert_eq!(bits(&y), bits(&y_quire), "gemv quire t={t}");
+        kernels::par_gemv_bp32_weights_with(t, &a_bits[..m * k], &x, &mut y);
+        assert_eq!(bits(&y), bits(&y_w), "gemv bp32 t={t}");
+    }
+}
+
+#[test]
+fn thread_count_bit_identity_sharded_codec() {
+    let mut rng = Rng::new(0xc0dec);
+    let xs: Vec<f32> = (0..10_007)
+        .map(|_| {
+            let v = f32::from_bits(rng.next_u32());
+            if v.is_finite() {
+                v
+            } else {
+                -3.25
+            }
+        })
+        .collect();
+    let mut w_serial = vec![0u32; xs.len()];
+    codec::bp32_encode_into(&xs, &mut w_serial);
+    let mut f_serial = vec![0f32; xs.len()];
+    codec::bp32_decode_into(&w_serial, &mut f_serial);
+    for t in [1usize, 2, 7] {
+        let mut w = vec![0u32; xs.len()];
+        parallel::bp32_encode_into_with(t, &xs, &mut w);
+        assert_eq!(w, w_serial, "encode t={t}");
+        let mut f = vec![0f32; xs.len()];
+        parallel::bp32_decode_into_with(t, &w, &mut f);
+        assert_eq!(bits(&f), bits(&f_serial), "decode t={t}");
+        let mut rt = xs.clone();
+        parallel::bp32_roundtrip_in_place_with(t, &mut rt);
+        assert_eq!(bits(&rt), bits(&f_serial), "roundtrip t={t}");
+    }
+}
+
+#[test]
+fn quantizer_batch_apis_unchanged_by_sharding() {
+    // The coordinator contract: routing the batch APIs through the sharded
+    // codec must not change a single bit vs the scalar fast path.
+    use positron::coordinator::quantizer;
+    let mut rng = Rng::new(0xba7c4);
+    let xs: Vec<f32> = (0..50_000)
+        .map(|_| {
+            let v = f32::from_bits(rng.next_u32());
+            if v.is_finite() {
+                v
+            } else {
+                0.5
+            }
+        })
+        .collect();
+    let batch = quantizer::quantize(&xs);
+    for (i, &x) in xs.iter().enumerate() {
+        assert_eq!(batch[i], quantizer::quantize_one(x), "quantize lane {i}");
+    }
+    let back = quantizer::dequantize(&batch);
+    for (i, &w) in batch.iter().enumerate() {
+        let want = quantizer::dequantize_one(w).to_bits();
+        assert_eq!(back[i].to_bits(), want, "dequantize lane {i}");
+    }
+    let rt = quantizer::roundtrip(&xs);
+    let mut rt_ip = xs.clone();
+    quantizer::roundtrip_in_place(&mut rt_ip);
+    assert_eq!(bits(&rt), bits(&rt_ip));
+    for i in 0..xs.len() {
+        assert_eq!(
+            rt[i].to_bits(),
+            quantizer::dequantize_one(quantizer::quantize_one(xs[i])).to_bits(),
+            "roundtrip lane {i}"
+        );
+    }
+}

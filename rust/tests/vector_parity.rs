@@ -54,7 +54,13 @@ fn assert_bits_eq(got: f32, want: f32, ctx: &str) {
     if want.is_nan() {
         assert!(got.is_nan(), "{ctx}: got {got}, want NaN");
     } else {
-        assert_eq!(got.to_bits(), want.to_bits(), "{ctx}: got {got} ({:#010x}), want {want} ({:#010x})", got.to_bits(), want.to_bits());
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "{ctx}: got {got} ({:#010x}), want {want} ({:#010x})",
+            got.to_bits(),
+            want.to_bits()
+        );
     }
 }
 
@@ -89,7 +95,12 @@ fn exhaustive_16bit(spec: PositSpec) {
         let x = f32::from_bits(rng.next_u32());
         let got = codec::encode_word(&spec, x);
         let want = scalar_encode(&spec, x);
-        assert_eq!(got, want, "{spec:?} encode {x} ({:#010x}): {got:#06x} vs {want:#06x}", x.to_bits());
+        assert_eq!(
+            got,
+            want,
+            "{spec:?} encode {x} ({:#010x}): {got:#06x} vs {want:#06x}",
+            x.to_bits()
+        );
     }
 }
 
@@ -158,7 +169,8 @@ fn bp32_lane_bit_identical_to_scalar_fast_path() {
             &format!("decode corner {w:#010x}"),
         );
         let x = f32::from_bits(w);
-        assert_eq!(codec::bp32_encode_lane(x), quantizer::fast_bp32_encode(x), "encode corner {w:#010x}");
+        let want = quantizer::fast_bp32_encode(x);
+        assert_eq!(codec::bp32_encode_lane(x), want, "encode corner {w:#010x}");
     }
     let mut rng = Rng::new(42);
     let mut words = Vec::with_capacity(1 << 16);
@@ -182,7 +194,8 @@ fn bp32_lane_bit_identical_to_scalar_fast_path() {
     codec::bp32_decode_into(&words, &mut dec);
     for i in 0..vals.len() {
         assert_eq!(enc[i], codec::bp32_encode_lane(vals[i]), "slice encode lane {i}");
-        assert_bits_eq(dec[i], codec::bp32_decode_lane(words[i]), &format!("slice decode lane {i}"));
+        let lane = codec::bp32_decode_lane(words[i]);
+        assert_bits_eq(dec[i], lane, &format!("slice decode lane {i}"));
     }
 }
 
