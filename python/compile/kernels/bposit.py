@@ -25,6 +25,20 @@ ES = 5
 FW = N - 3 - ES  # 24
 NAR = -0x80000000  # NaR pattern as a plain int (jnp scalars cannot be captured by Pallas kernels)
 
+N64 = 64
+FW64 = N64 - 3 - ES  # 56 explicit fraction bits in the b-posit64 fovea
+NAR64 = -0x8000000000000000
+
+
+def _require_x64() -> None:
+    """The 64-bit kernels need uint64/float64 lanes; fail with a clear
+    message instead of silently truncating when jax x64 is off."""
+    if not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "b-posit64 kernels need 64-bit lanes: run with JAX_ENABLE_X64=1 "
+            "or jax.config.update('jax_enable_x64', True)"
+        )
+
 
 # ----------------------------------------------------------------------
 # Select-based scalar-vectorized codec (used inside the kernels)
@@ -135,6 +149,111 @@ def encode_hw(x):
 
 
 # ----------------------------------------------------------------------
+# 64-bit variants: b-posit64 ⟨64,6,5⟩ over int64/float64 lanes
+# ----------------------------------------------------------------------
+#
+# Same five-way select structure (the regime bound rS=6 is width-
+# independent — the paper's scalability claim), with two 64-bit-specific
+# simplifications proven by the scalar oracle (compile/kernels/scalar.py):
+# - encode never rounds: every regime size k ≤ 6 leaves fw = 58−k ≥ 52
+#   fraction bits, so the 52-bit f64 mantissa always fits;
+# - decode rounds once: the 56-bit fovea fraction is RNE'd to 52 bits as
+#   an integer *before* the exact float conversion (a single rounding,
+#   matching the Rust lane codec bit-for-bit).
+
+
+def decode_hw64(bits):
+    """Mux-based b-posit64 decode: int64 bits → float64."""
+    _require_x64()
+    u = bits.astype(jnp.uint64)
+    sign = (u >> 63) & 1
+    body = jnp.where(sign == 1, ~u + 1, u) & jnp.uint64(0x7FFFFFFFFFFFFFFF)
+    m = ((body >> 62) & 1).astype(jnp.uint64)
+    # The five probe bits after the regime MSB, XORed with it (Table 2).
+    xb = ((body >> 57) & jnp.uint64(0x1F)) ^ (m * jnp.uint64(0x1F))
+    x = [(xb >> (4 - i)) & 1 for i in range(5)]
+    s = []
+    none_before = None
+    for i in range(5):
+        cond = x[i] == 1 if none_before is None else none_before & (x[i] == 1)
+        s.append(cond)
+        nb = x[i] == 0 if none_before is None else none_before & (x[i] == 0)
+        none_before = nb
+
+    def shifted(k):
+        return (body << (k + 1)).astype(jnp.uint64)
+
+    payload = jnp.where(
+        s[0], shifted(2),
+        jnp.where(s[1], shifted(3),
+                  jnp.where(s[2], shifted(4),
+                            jnp.where(s[3], shifted(5), shifted(6)))),
+    )
+    run = jnp.where(
+        s[0], 1, jnp.where(s[1], 2, jnp.where(s[2], 3, jnp.where(s[3], 4, jnp.where(s[4], 5, 6))))
+    ).astype(jnp.int64)
+    r = jnp.where(m == 1, run - 1, -run)
+    e = (payload >> (64 - ES)).astype(jnp.int64)
+    f = ((payload >> (64 - ES - FW64)) & jnp.uint64((1 << FW64) - 1)).astype(jnp.int64)
+    t = r * (1 << ES) + e
+    # Integer RNE 56 → 52 fraction bits; the carry bumps the scale.
+    f52 = _rne_const(f, FW64 - 52)
+    t = t + (f52 >> 52)
+    f52 = f52 & jnp.int64((1 << 52) - 1)
+    sig = 1.0 + f52.astype(jnp.float64) / jnp.float64(1 << 52)
+    val = jnp.ldexp(sig, jnp.maximum(t, -1022)).astype(jnp.float64)
+    val = jnp.where(t < -1022, jnp.float64(0), val)  # flush contract
+    val = jnp.where(sign == 1, -val, val)
+    val = jnp.where(u == 0, jnp.float64(0), val)
+    val = jnp.where(bits == jnp.int64(NAR64), jnp.float64(jnp.nan), val)
+    return val
+
+
+def encode_hw64(x):
+    """Mux-based b-posit64 encode: float64 → int64 bits.
+
+    Unlike the 32-bit path, f64 exponents overrun the rS=6 regime bound
+    (t ∈ [−1022, 1023] vs the ⟨64,6,5⟩ range 2^±192), so the saturation
+    selects are live, and no fraction rounding ever happens (fw ≥ 52).
+    """
+    _require_x64()
+    xf = x.astype(jnp.float64)
+    sign = xf < 0
+    mag = jnp.abs(xf)
+    mant, e2 = jnp.frexp(mag)
+    t = e2.astype(jnp.int64) - 1
+    f52 = jnp.round((mant * 2 - 1) * (1 << 52)).astype(jnp.uint64)
+    r = t >> ES
+    e5 = (t - (r << ES)).astype(jnp.uint64)
+
+    def body_for(k, reg_pattern):
+        fw = (N64 - 1 - ES) - k  # 58 - k ≥ 52: fraction always fits
+        base = ((jnp.uint64(reg_pattern) << ES) | e5) << fw
+        return base + (f52 << (fw - 52))
+
+    def reg_pat(rv):
+        if rv >= 0:
+            return (1 << RS) - 1 if rv >= RS - 1 else (((1 << (rv + 1)) - 1) << 1)
+        return 0 if rv <= -RS else 1
+
+    def size_of(rv):
+        return min(max(rv + 2 if rv >= 0 else 1 - rv, 2), RS)
+
+    body = jnp.zeros_like(f52)
+    for rv in range(-RS, RS):
+        cand = body_for(size_of(rv), reg_pat(rv))
+        body = jnp.where(r == rv, cand, body)
+    maxpos = jnp.uint64((1 << 63) - 1)
+    body = jnp.where(r > RS - 1, maxpos, body)
+    body = jnp.where(r < -RS, jnp.uint64(1), body)
+    body = jnp.clip(body, jnp.uint64(1), maxpos)
+    word = jnp.where(sign, ~body + 1, body).astype(jnp.int64)
+    word = jnp.where(mag < jnp.float64(2.0**-1022), jnp.int64(0), word)
+    word = jnp.where(jnp.isnan(xf) | jnp.isinf(xf), jnp.int64(NAR64), word)
+    return word
+
+
+# ----------------------------------------------------------------------
 # Pallas kernels
 # ----------------------------------------------------------------------
 
@@ -182,6 +301,76 @@ def encode(x, block=4096):
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         interpret=True,
     )(x)
+
+
+def _decode64_kernel(bits_ref, o_ref):
+    o_ref[...] = decode_hw64(bits_ref[...])
+
+
+def _encode64_kernel(x_ref, o_ref):
+    o_ref[...] = encode_hw64(x_ref[...])
+
+
+def _matmul64_kernel(x_ref, wbits_ref, o_ref):
+    w = decode_hw64(wbits_ref[...])
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float64)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def decode64(bits, block=4096):
+    """Decode a 1-D int64 array of b-posit64 words to float64 via Pallas."""
+    _require_x64()
+    (n,) = bits.shape
+    if n % block != 0:
+        block = n
+    return pl.pallas_call(
+        _decode64_kernel,
+        out_shape=jax.ShapeDtypeStruct(bits.shape, jnp.float64),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(bits)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def encode64(x, block=4096):
+    """Encode a 1-D float64 array into b-posit64 words via Pallas."""
+    _require_x64()
+    (n,) = x.shape
+    if n % block != 0:
+        block = n
+    return pl.pallas_call(
+        _encode64_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int64),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul64(x, w_bits, bm=64, bn=128):
+    """x (m,k) f64 @ decode64(w_bits) (k,n) → (m,n) f64, decode fused."""
+    _require_x64()
+    m, k = x.shape
+    k2, n = w_bits.shape
+    assert k == k2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        _matmul64_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float64),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w_bits)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn"))

@@ -16,6 +16,7 @@ makes this an independent implementation rather than a port.
 from __future__ import annotations
 
 import math
+import struct
 from dataclasses import dataclass
 from fractions import Fraction
 
@@ -169,3 +170,174 @@ def decode_f64(spec: Spec, bits: int) -> float:
         return float("nan")
     # Fraction → float is correctly rounded in CPython.
     return float(v)
+
+
+# ----------------------------------------------------------------------
+# f64-facing contract layer (the vector lane codec's semantics)
+# ----------------------------------------------------------------------
+#
+# The Rust 64-bit lane codec (rust/src/vector/codec64.rs) exposes posit
+# patterns through f64 streams under a fixed contract:
+# - encode: f64 subnormal inputs (|x| < 2^-1022) quantize to 0 (FTZ/DAZ),
+#   NaN/Inf → NaR;
+# - decode: values whose 52-bit-rounded scale falls below the f64 normal
+#   range flush to ±0 (keeping the sign), values above it saturate to ±inf,
+#   NaR → canonical quiet NaN.
+#
+# For every lane-supported spec (n ≤ 64, es ≥ 1) the fraction width near
+# the f64 range boundaries is ≤ 52 bits, so "round exactly to f64, then
+# flush subnormals / saturate" is identical to the lane algorithm's
+# "round the fraction to 52 bits, then test the scale" — which is what
+# lets the big-int oracle below stay independent of the bit-level stream
+# construction.
+
+F64_MIN_NORMAL = 2.0**-1022
+
+
+def f64_to_bits(x: float) -> int:
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def bits_to_f64(b: int) -> float:
+    return struct.unpack("<d", struct.pack("<Q", b & ((1 << 64) - 1)))[0]
+
+
+def encode_f64_contract(spec: Spec, x: float) -> int:
+    """Big-int-oracle encode of an f64 under the lane-codec contract."""
+    if math.isnan(x) or math.isinf(x):
+        return spec.nar
+    if x == 0.0 or abs(x) < F64_MIN_NORMAL:
+        return 0  # FTZ/DAZ: f64 subnormals quantize to the zero pattern
+    return encode(spec, Fraction(x))
+
+
+def decode_f64_contract(spec: Spec, bits: int) -> float:
+    """Big-int-oracle decode to f64 under the lane-codec contract."""
+    v = decode(spec, bits)
+    if v is None:
+        return float("nan")
+    if v == 0:
+        return 0.0
+    try:
+        f = float(v)  # correctly rounded in CPython
+    except OverflowError:
+        f = math.inf if v > 0 else -math.inf
+    if f != 0.0 and abs(f) < F64_MIN_NORMAL:
+        return -0.0 if f < 0 else 0.0  # flush below the f64 normal range
+    return f
+
+
+# ----------------------------------------------------------------------
+# Branch-free lane-codec mirror (the algorithm ported to Rust)
+# ----------------------------------------------------------------------
+#
+# `lane_encode`/`lane_decode` mirror rust/src/vector/codec64.rs exactly:
+# u64 words, u128 intermediate streams (emulated here by masking big
+# ints), pure value selects, one pattern-space RNE cut. They are the
+# *implementation under test*; `encode_f64_contract`/`decode_f64_contract`
+# above are the independent ground truth (Fraction arithmetic, loopy
+# regime scan — no shared structure). test_scalar_oracle64.py and the
+# PR-time validation sweeps prove them equal on every lane-supported spec.
+
+_M64 = (1 << 64) - 1
+_M128 = (1 << 128) - 1
+
+
+def lane_supported(spec: Spec) -> bool:
+    """Specs covered by the 64-bit lane codec (and this mirror)."""
+    return 3 <= spec.n <= 64 and 2 <= spec.rs <= spec.n - 1 and 1 <= spec.es <= 8
+
+
+def lane_encode(spec: Spec, x: float) -> int:
+    """Branch-free encode mirror: f64 → n-bit posit word (see contract)."""
+    assert lane_supported(spec)
+    n, rs, es = spec.n, spec.rs, spec.es
+    m = n - 1
+    mask_n = (1 << n) - 1
+    maxpos = (1 << m) - 1
+    bounded = rs < m
+    r_max = rs - 1
+    r_min = -rs if bounded else -(n - 2)
+
+    bits = f64_to_bits(x)
+    sign = bits >> 63
+    biased = (bits >> 52) & 0x7FF
+    f52 = bits & ((1 << 52) - 1)
+    if biased == 0x7FF:
+        return spec.nar  # NaN/Inf → NaR
+    if biased == 0:
+        return 0  # zero and FTZ'd subnormals
+    t = biased - 1023
+    r = t >> es  # floor(t / 2^es)
+    e = t & ((1 << es) - 1)
+    sat_hi = r > r_max
+    sat_lo = r < r_min
+    rc = min(max(r, r_min), r_max)
+    run = rc + 1 if rc >= 0 else -rc
+    capped = run >= rs
+    w_reg = rs if capped else run + 1
+    reg_ones = (1 << w_reg) - 1
+    reg_val = (reg_ones - (0 if capped else 1)) if rc >= 0 else (0 if capped else 1)
+    # Serialize regime ‖ exponent ‖ fraction MSB-first into a u128 stream
+    # (w_reg + es + 52 ≤ 63 + 8 + 52 = 123 bits: shifts never underflow).
+    sh_reg = 128 - w_reg
+    sh_exp = sh_reg - es
+    sh_frac = sh_exp - 52
+    s = ((reg_val << sh_reg) | (e << sh_exp) | (f52 << sh_frac)) & _M128
+    # Cut at m bits with round-to-nearest-even: rem+lsb>half ⟺ RNE up.
+    cut = 128 - m  # 65..=126
+    q = s >> cut
+    rem = s & ((1 << cut) - 1)
+    half = 1 << (cut - 1)
+    up = 1 if rem + (q & 1) > half else 0
+    body = max(min(q + up, maxpos), 1)
+    if sat_hi:
+        body = maxpos
+    if sat_lo:
+        body = 1
+    return (-body) & mask_n if sign else body
+
+
+def lane_decode(spec: Spec, word: int) -> float:
+    """Branch-free decode mirror: n-bit posit word → f64 (see contract)."""
+    assert lane_supported(spec)
+    n, rs, es = spec.n, spec.rs, spec.es
+    m = n - 1
+    body_mask = (1 << m) - 1
+    word &= spec.mask
+    if word == 0:
+        return 0.0
+    if word == spec.nar:
+        return float("nan")
+    sign = (word >> m) & 1
+    mag = ((-word) if sign else word) & body_mask
+    b0 = (mag >> (m - 1)) & 1
+    # Leading-run length within the m-bit body, capped at rs.
+    probe = ((~mag) if b0 else mag) & body_mask
+    p64 = (probe << (64 - m)) & _M64
+    lz = 64 - p64.bit_length()  # u64 leading_zeros (probe == 0 ⇒ 64 ≥ m)
+    run = min(lz, m, rs)
+    reg_len = run + (1 if run != rs else 0)  # +terminator unless capped
+    r = run - 1 if b0 else -run
+    # Align the first post-regime bit to bit 127 of a u128 (two-step shift
+    # keeps the amount ≤ 127 even when reg_len = m). Ghost exponent bits
+    # and the empty fraction fall out as zeros automatically.
+    pay = ((mag << (127 - m + reg_len)) << 1) & _M128
+    e = pay >> (128 - es)
+    frac_top = (pay << es) & _M128  # fraction, MSB-aligned at bit 127
+    t = r * (1 << es) + e
+    # RNE the (≤ 60-bit) fraction to 52 f64 bits; guard/sticky live in the
+    # low 76 bits of frac_top.
+    q = frac_top >> 76
+    rem = frac_top & ((1 << 76) - 1)
+    up = 1 if rem + (q & 1) > (1 << 75) else 0
+    frac = q + up
+    tt = t + (frac >> 52)  # rounding carry bumps the scale
+    frac &= (1 << 52) - 1
+    if tt < -1022:
+        fbits = sign << 63  # FTZ contract (keeps the sign)
+    elif tt > 1023:
+        fbits = (sign << 63) | (0x7FF << 52)  # ±inf
+    else:
+        fbits = (sign << 63) | ((tt + 1023) << 52) | frac
+    return bits_to_f64(fbits)

@@ -1,0 +1,26 @@
+//! Bench: the 64-bit lane codec (BP64/P64 over u64 streams) vs the
+//! general codec, plus the f64 dot-kernel family — the 64-bit rung of
+//! the serving throughput sweep. Emits `BENCH_vector_codec64.json`
+//! (elems/s + per-stage speedups + sharded bit-identity flag).
+//!
+//! Run: `cargo bench --bench vector_codec64`
+
+fn main() {
+    // Sweep block sizes: cache-resident, L2-scale, and streaming.
+    for len in [4096usize, 65536, 1 << 20] {
+        // Only the canonical 64k block writes the JSON artifact.
+        let json = if len == 65536 { Some("BENCH_vector_codec64.json") } else { None };
+        match positron::cli::run_vector_bench64(len, json) {
+            Ok(lines) => {
+                for l in lines {
+                    println!("{l}");
+                }
+            }
+            Err(e) => {
+                eprintln!("vector-bench64 failed at len {len}: {e}");
+                std::process::exit(1);
+            }
+        }
+        println!();
+    }
+}

@@ -28,7 +28,7 @@ pub enum Command {
     Codec { fmt: String, values: Vec<String> },
     Accuracy { csv_dir: Option<String> },
     Tables,
-    VectorBench { len: usize, json: Option<String> },
+    VectorBench { len: usize, bits: u32, json: Option<String> },
     GemmBench { sizes: Vec<usize>, quire_max: usize, json: Option<String> },
     Serve { requests: usize, artifact_dir: String },
     Help,
@@ -62,21 +62,40 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
         "tables" => Ok(Command::Tables),
         "vector-bench" => {
             let mut len = 65536usize;
-            let mut json = Some("BENCH_vector_codec.json".to_string());
+            let mut bits = 32u32;
+            let mut json: Option<Option<String>> = None; // None = default for the width
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--len" => {
                         len = it.next().ok_or("--len needs N")?.parse().map_err(|e| e.to_string())?
                     }
-                    "--json" => json = Some(it.next().ok_or("--json needs a path")?.clone()),
-                    "--no-json" => json = None,
+                    "--bits" => {
+                        bits = it
+                            .next()
+                            .ok_or("--bits needs 32 or 64")?
+                            .parse()
+                            .map_err(|e: std::num::ParseIntError| e.to_string())?;
+                        if bits != 32 && bits != 64 {
+                            return Err("vector-bench: --bits must be 32 or 64".into());
+                        }
+                    }
+                    "--json" => {
+                        json = Some(Some(it.next().ok_or("--json needs a path")?.clone()))
+                    }
+                    "--no-json" => json = Some(None),
                     other => return Err(format!("vector-bench: unknown flag {other}")),
                 }
             }
             if len == 0 {
                 return Err("vector-bench: --len must be positive".into());
             }
-            Ok(Command::VectorBench { len, json })
+            let json = json.unwrap_or_else(|| {
+                Some(
+                    if bits == 64 { "BENCH_vector_codec64.json" } else { "BENCH_vector_codec.json" }
+                        .to_string(),
+                )
+            });
+            Ok(Command::VectorBench { len, bits, json })
         }
         "gemm-bench" => {
             let mut sizes = vec![64usize, 128, 256, 512];
@@ -160,9 +179,12 @@ COMMANDS:
                              values: decimals or 0x bit patterns)
   accuracy [--csv DIR]       Golden Zone / fovea / census; optional Fig-6/7 CSVs
   tables                     gate-level decode/encode PPA (paper Tables 5/6 + Fig 16)
-  vector-bench [--len N] [--json PATH | --no-json]
+  vector-bench [--len N] [--bits 32|64] [--json PATH | --no-json]
                              scalar vs vector codec + dot-kernel throughput;
-                             writes BENCH_vector_codec.json by default
+                             writes BENCH_vector_codec.json by default, or
+                             BENCH_vector_codec64.json in --bits 64 mode
+                             (BP64/P64 lanes, f64 kernels, sharded codec
+                             bit-identity verified)
   gemm-bench [--sizes N,N,…] [--quire-max N] [--json PATH | --no-json]
                              serial vs sharded (PALLAS_THREADS) blocked GEMM,
                              f32 + quire-exact paths, GFLOP-equivalents;
@@ -466,6 +488,175 @@ pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<Strin
     Ok(out)
 }
 
+/// Execute `vector-bench --bits 64`: the 64-bit lane stack — general
+/// codec vs branch-free BP64/P64 lanes, the f64⇄bits floor, and the f64
+/// dot-kernel family — over `len`-element mixed-scale blocks. Also
+/// verifies that the sharded 64-bit codec is bit-identical to serial for
+/// t ∈ {1, 2, 7} (recorded as `bit_identical` in the JSON, gated in CI).
+/// Shared by the CLI and the `vector_codec64` bench target; optionally
+/// writes `BENCH_vector_codec64.json`.
+pub fn run_vector_bench64(len: usize, json_path: Option<&str>) -> Result<Vec<String>, String> {
+    use crate::harness::Bencher;
+    use crate::testutil::Rng;
+    use crate::vector::{codec64, kernels, parallel};
+
+    if let Some(path) = json_path {
+        ensure_json_writable(path)?;
+    }
+    let mut rng = Rng::new(0x5eed64);
+    // Mixed-scale finite f64s spanning regimes *and* both saturation zones
+    // of the 2^±192 formats — worst case for the branchy general codec.
+    let xs: Vec<f64> = (0..len)
+        .map(|_| {
+            let mag = (rng.f64() + 0.5) * f64::powi(2.0, rng.below(441) as i32 - 220);
+            if rng.below(2) == 0 {
+                mag
+            } else {
+                -mag
+            }
+        })
+        .collect();
+    let words = codec64::bp64_encode(&xs);
+    let p64_words = {
+        let mut w = vec![0u64; len];
+        codec64::p64_encode_into(&xs, &mut w);
+        w
+    };
+    let ys: Vec<f64> = (0..len).map(|_| (rng.f64() - 0.5) * 4.0).collect();
+    let mut out_w = vec![0u64; len];
+    let mut out_f = vec![0f64; len];
+
+    // Sharded-vs-serial bit-identity: the acceptance contract, checked
+    // before any timing (and gated on in CI via the JSON flag).
+    let mut bit_identical = true;
+    for t in [1usize, 2, 7] {
+        let mut w = vec![0u64; len];
+        parallel::bp64_encode_into_with(t, &xs, &mut w);
+        bit_identical &= w == words;
+        let mut f = vec![0f64; len];
+        parallel::bp64_decode_into_with(t, &words, &mut f);
+        codec64::bp64_decode_into(&words, &mut out_f);
+        bit_identical &= f.iter().zip(&out_f).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+
+    let mut b = Bencher::new();
+
+    // --- b-posit64: the 64-bit serving format ---
+    b.bench(&format!("bp64_encode/scalar/{len}"), || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(posit::BP64.from_f64(x));
+        }
+        acc
+    });
+    b.bench(&format!("bp64_encode/vector/{len}"), || {
+        codec64::bp64_encode_into(&xs, &mut out_w);
+        out_w[0]
+    });
+    b.bench(&format!("bp64_decode/scalar/{len}"), || {
+        let mut acc = 0f64;
+        for &w in &words {
+            acc += posit::BP64.to_f64(w);
+        }
+        acc
+    });
+    b.bench(&format!("bp64_decode/vector/{len}"), || {
+        codec64::bp64_decode_into(&words, &mut out_f);
+        out_f[0]
+    });
+    b.bench(&format!("bp64_roundtrip/scalar/{len}"), || {
+        let mut acc = 0f64;
+        for &x in &xs {
+            acc += posit::BP64.to_f64(posit::BP64.from_f64(x));
+        }
+        acc
+    });
+    b.bench(&format!("bp64_roundtrip/vector/{len}"), || {
+        out_f.copy_from_slice(&xs);
+        codec64::bp64_roundtrip_in_place(&mut out_f);
+        out_f[0]
+    });
+
+    // --- posit<64,2>: general codec vs lane codec ---
+    b.bench(&format!("p64_encode/scalar/{len}"), || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(posit::P64.from_f64(x));
+        }
+        acc
+    });
+    b.bench(&format!("p64_encode/vector/{len}"), || {
+        codec64::p64_encode_into(&xs, &mut out_w);
+        out_w[0]
+    });
+    b.bench(&format!("p64_decode/scalar/{len}"), || {
+        let mut acc = 0f64;
+        for &w in &p64_words {
+            acc += posit::P64.to_f64(w);
+        }
+        acc
+    });
+    b.bench(&format!("p64_decode/vector/{len}"), || {
+        codec64::p64_decode_into(&p64_words, &mut out_f);
+        out_f[0]
+    });
+
+    // --- f64⇄bits: the memcpy-speed floor for the sweep ---
+    b.bench(&format!("f64_bits/vector/{len}"), || {
+        codec64::f64_to_bits_into(&xs, &mut out_w);
+        out_w[0]
+    });
+
+    // --- f64 dot kernels (the 64-bit serving workload) ---
+    b.bench(&format!("dot/f64_fast/{len}"), || kernels::dot_f64(&xs, &ys));
+    b.bench(&format!("dot/bp64_weights_fast/{len}"), || {
+        kernels::dot_bp64_weights_fast(&words, &ys)
+    });
+    let mut qd = kernels::QuireDotF64::new();
+    b.bench(&format!("dot/quire_exact_f64/{len}"), || qd.dot_f64(&xs, &ys));
+
+    let mut out =
+        vec![b.table(&format!("64-bit vector codec throughput ({len}-element blocks)"))];
+    for r in b.results() {
+        out.push(format!("{:<44} {:>10.1} Melem/s", r.name, len as f64 / r.mean_ns * 1e3));
+    }
+
+    let mean = |prefix: &str| -> f64 {
+        b.results()
+            .iter()
+            .find(|r| r.name.starts_with(prefix))
+            .map(|r| r.mean_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let stages =
+        ["bp64_encode", "bp64_decode", "bp64_roundtrip", "p64_encode", "p64_decode"];
+    let mut speedup_json = Vec::new();
+    for s in stages {
+        let sp = mean(&format!("{s}/scalar")) / mean(&format!("{s}/vector"));
+        out.push(format!("speedup {s:<16} {sp:>6.2}x (vector vs scalar)"));
+        speedup_json.push(format!("\"{s}\":{sp:.3}"));
+    }
+    out.push(format!(
+        "sharded codec64 bit-identical to serial: {}",
+        if bit_identical { "yes" } else { "NO — BUG" }
+    ));
+    if !bit_identical {
+        return Err("sharded 64-bit codec differs from serial — bit-identity broken".into());
+    }
+
+    if let Some(path) = json_path {
+        let json = format!(
+            "{{\"bench\":\"vector_codec64\",\"len\":{len},\"bit_identical\":{bit_identical},\
+             \"speedup\":{{{}}},\"results\":{}}}",
+            speedup_json.join(","),
+            b.results_json()
+        );
+        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+        out.push(format!("wrote {path}"));
+    }
+    Ok(out)
+}
+
 /// Execute `gemm-bench`: serial vs sharded blocked GEMM across `sizes`
 /// (square m=k=n), on the f32 fast path, the decode-fused quantized-weight
 /// fast path, and (up to `quire_max`) the 800-bit quire-exact paths.
@@ -629,6 +820,51 @@ mod tests {
         assert!(err.contains(bad), "{err}");
         let err = run_vector_bench(16, Some(bad)).unwrap_err();
         assert!(err.contains(bad), "{err}");
+        let err = run_vector_bench64(16, Some(bad)).unwrap_err();
+        assert!(err.contains(bad), "{err}");
+    }
+
+    #[test]
+    fn parse_vector_bench_bits_flag() {
+        let parse_vb = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            parse(&v).unwrap()
+        };
+        match parse_vb(&["vector-bench", "--bits", "64", "--len", "128"]) {
+            Command::VectorBench { len, bits, json } => {
+                assert_eq!((len, bits), (128, 64));
+                assert_eq!(json.as_deref(), Some("BENCH_vector_codec64.json"));
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        match parse_vb(&["vector-bench"]) {
+            Command::VectorBench { bits, json, .. } => {
+                assert_eq!(bits, 32);
+                assert_eq!(json.as_deref(), Some("BENCH_vector_codec.json"));
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        // Explicit --json wins regardless of width; --no-json disables.
+        match parse_vb(&["vector-bench", "--bits", "64", "--json", "x.json"]) {
+            Command::VectorBench { json, .. } => assert_eq!(json.as_deref(), Some("x.json")),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        match parse_vb(&["vector-bench", "--bits", "64", "--no-json"]) {
+            Command::VectorBench { json, .. } => assert!(json.is_none()),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        assert!(parse(&["vector-bench".into(), "--bits".into(), "48".into()]).is_err());
+    }
+
+    #[test]
+    fn vector_bench64_smoke_tiny() {
+        // Tiny block, no JSON: exercises the full 64-bit bench path
+        // including the sharded bit-identity verification.
+        let lines = run_vector_bench64(64, None).expect("tiny vector-bench64 runs");
+        assert!(
+            lines.iter().any(|l| l.contains("bit-identical to serial: yes")),
+            "{lines:?}"
+        );
     }
 
     #[test]

@@ -25,9 +25,9 @@
 //! - Decode: results below the f32 normal range flush to ±0; above it ±∞;
 //!   NaR → NaN.
 
-use crate::formats::posit::BP32;
+use crate::formats::posit::{BP32, BP64};
 use crate::formats::Decoded;
-use crate::vector::{codec, parallel};
+use crate::vector::{codec, codec64, parallel};
 
 /// Quantize a f32 slice to b-posit32 words (as i32 bit patterns) through
 /// the vector codec.
@@ -126,6 +126,97 @@ pub fn roundtrip(xs: &[f32]) -> Vec<f32> {
 /// across worker threads past the fork-join threshold).
 pub fn roundtrip_in_place(xs: &mut [f32]) {
     parallel::bp32_roundtrip_in_place(xs);
+}
+
+// ----------------------------------------------------------------------
+// b-posit64 batch APIs (the 64-bit serving tier). Same shape as the BP32
+// family: i64 bit patterns on the wire, vector codec underneath, buffers
+// reusable, sharding transparent. Contract: f64 subnormals FTZ to 0,
+// NaN/Inf → NaR; in-range f64s are *exactly* representable in ⟨64,6,5⟩
+// (≥ 52 fraction bits at every scale), so quantize64 is lossless on the
+// format's 2^±192 range.
+// ----------------------------------------------------------------------
+
+/// Quantize an f64 slice to b-posit64 words (as i64 bit patterns).
+pub fn quantize64(xs: &[f64]) -> Vec<i64> {
+    let mut out = Vec::new();
+    quantize64_into(xs, &mut out);
+    out
+}
+
+/// Quantize into a reused buffer (sharded past the fork-join threshold).
+pub fn quantize64_into(xs: &[f64], out: &mut Vec<i64>) {
+    out.resize(xs.len(), 0);
+    let shards = parallel::auto_shards(xs.len(), parallel::CODEC_MIN_SHARD);
+    parallel::for_each_block(shards, &mut out[..], |off, block| {
+        for (o, &x) in block.iter_mut().zip(&xs[off..off + block.len()]) {
+            *o = codec64::bp64_encode_lane(x) as i64;
+        }
+    });
+}
+
+/// Quantize one f64 (b-posit64 lane codec).
+#[inline]
+pub fn quantize64_one(x: f64) -> i64 {
+    codec64::bp64_encode_lane(x) as i64
+}
+
+/// Dequantize b-posit64 words back to f64 through the vector codec.
+pub fn dequantize64(bits: &[i64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    dequantize64_into(bits, &mut out);
+    out
+}
+
+/// Dequantize into a reused buffer (sharded past the fork-join threshold).
+pub fn dequantize64_into(bits: &[i64], out: &mut Vec<f64>) {
+    out.resize(bits.len(), 0.0);
+    let shards = parallel::auto_shards(bits.len(), parallel::CODEC_MIN_SHARD);
+    parallel::for_each_block(shards, &mut out[..], |off, block| {
+        for (o, &b) in block.iter_mut().zip(&bits[off..off + block.len()]) {
+            *o = codec64::bp64_decode_lane(b as u64);
+        }
+    });
+}
+
+/// Dequantize one b-posit64 word.
+#[inline]
+pub fn dequantize64_one(bits: i64) -> f64 {
+    codec64::bp64_decode_lane(bits as u64)
+}
+
+/// Reference (general-codec) b-posit64 quantize — the parity oracle for
+/// the lane path, with the same FTZ contract.
+#[inline]
+pub fn quantize64_one_general(x: f64) -> i64 {
+    if x.abs() < f64::MIN_POSITIVE {
+        // Covers ±0 and all subnormals; NaN compares false and falls through.
+        return 0;
+    }
+    BP64.encode(&Decoded::from_f64(x)) as i64
+}
+
+/// Reference (general-codec) b-posit64 dequantize with the f64-facing
+/// contract (sub-normal-range magnitudes flush to ±0).
+#[inline]
+pub fn dequantize64_one_general(bits: i64) -> f64 {
+    let v = BP64.decode(bits as u64).to_f64();
+    if v != 0.0 && v.abs() < f64::MIN_POSITIVE {
+        return if v < 0.0 { -0.0 } else { 0.0 };
+    }
+    v
+}
+
+/// Round an f64 tensor through b-posit64 (quantize + dequantize).
+pub fn roundtrip64(xs: &[f64]) -> Vec<f64> {
+    let mut out = xs.to_vec();
+    parallel::bp64_roundtrip_in_place(&mut out);
+    out
+}
+
+/// In-place b-posit64 roundtrip over a caller buffer (fused, sharded).
+pub fn roundtrip64_in_place(xs: &mut [f64]) {
+    parallel::bp64_roundtrip_in_place(xs);
 }
 
 /// Specialized b-posit⟨32,6,5⟩ encoder for f32 inputs (scalar fast path).
@@ -346,6 +437,68 @@ mod tests {
             assert_eq!(rt[i].to_bits(), rt_ip[i].to_bits());
             assert_eq!(rt[i].to_bits(), dequantize_one(quantize_one(xs[i])).to_bits());
         }
+    }
+
+    #[test]
+    fn bp64_batch_apis_match_general_codec() {
+        let mut rng = crate::testutil::Rng::new(0xfee64);
+        let xs: Vec<f64> = (0..2000)
+            .map(|_| {
+                let v = f64::from_bits(rng.next_u64());
+                if v.is_finite() { v } else { 1.0 }
+            })
+            .collect();
+        let batch = quantize64(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(batch[i], quantize64_one(x), "lane {i}");
+            assert_eq!(batch[i], quantize64_one_general(x), "general parity {i}");
+        }
+        let back = dequantize64(&batch);
+        for (i, &b) in batch.iter().enumerate() {
+            assert_eq!(back[i].to_bits(), dequantize64_one(b).to_bits(), "lane {i}");
+            assert_eq!(
+                back[i].to_bits(),
+                dequantize64_one_general(b).to_bits(),
+                "general parity {i}"
+            );
+        }
+        let rt = roundtrip64(&xs);
+        let mut rt_ip = xs.clone();
+        roundtrip64_in_place(&mut rt_ip);
+        for i in 0..xs.len() {
+            assert_eq!(rt[i].to_bits(), rt_ip[i].to_bits());
+            assert_eq!(rt[i].to_bits(), dequantize64_one(quantize64_one(xs[i])).to_bits());
+        }
+    }
+
+    #[test]
+    fn bp64_quantize_is_lossless_in_range() {
+        // ⟨64,6,5⟩ carries ≥ 52 fraction bits everywhere: quantize64 of
+        // any f64 in the 2^±192 range roundtrips exactly.
+        let xs = [1.5e100f64, -std::f64::consts::PI, 2.0f64.powi(-190), 1.0 + f64::EPSILON];
+        let rt = roundtrip64(&xs);
+        for (a, b) in xs.iter().zip(&rt) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // FTZ + NaR specials.
+        assert_eq!(quantize64_one(0.0), 0);
+        assert_eq!(quantize64_one(f64::from_bits(1)), 0);
+        assert_eq!(quantize64_one(f64::NAN) as u64, 1u64 << 63);
+        assert!(dequantize64_one(i64::MIN).is_nan());
+    }
+
+    #[test]
+    fn bp64_into_variants_reuse_buffers() {
+        let xs = vec![2.5f64; 40];
+        let mut bits = Vec::new();
+        quantize64_into(&xs, &mut bits);
+        let cap = bits.capacity();
+        let mut back = Vec::new();
+        dequantize64_into(&bits, &mut back);
+        assert_eq!(back, xs);
+        quantize64_into(&xs, &mut bits);
+        assert_eq!(bits.capacity(), cap);
+        assert_eq!(bits.len(), 40);
     }
 
     #[test]

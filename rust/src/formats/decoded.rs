@@ -115,8 +115,14 @@ impl Decoded {
                 let extra_shift = if self.exp < -1022 { (-1022 - self.exp) as u32 } else { 0 };
                 let keep = 53u32.saturating_sub(extra_shift);
                 if keep == 0 {
-                    // Far below the subnormal range: rounds to 0 (or ±min subnormal).
-                    return if self.sign { -0.0 } else { 0.0 };
+                    // exp == -1075 exactly (anything lower returned ±0
+                    // above): the value lies in [2^-1075, 2^-1074). RNE
+                    // against the min subnormal: the exact midpoint
+                    // 2^-1075 (sig = 2^63, no sticky) ties to even 0;
+                    // everything above rounds to ±2^-1074.
+                    let up = self.sig > (1u64 << 63) || self.sticky;
+                    let mag = if up { f64::from_bits(1) } else { 0.0 };
+                    return if self.sign { -mag } else { mag };
                 }
                 let drop = 64 - keep;
                 let kept = self.sig >> drop;
@@ -217,6 +223,32 @@ mod tests {
         assert_eq!(d.exp, -1074);
         assert_eq!(d.sig, 1u64 << 63);
         assert_eq!(d.to_f64(), x);
+    }
+
+    #[test]
+    fn to_f64_rne_at_the_min_subnormal_boundary() {
+        // Values in (2^-1075, 2^-1074) round UP to the min subnormal;
+        // exactly 2^-1075 is the tie and goes to even (0). This boundary
+        // is live for quire readouts (e.g. 2^-500 · 1.5·2^-575).
+        let above = Decoded::normal(false, -1075, (1u64 << 63) | (1u64 << 62));
+        assert_eq!(above.to_f64().to_bits(), f64::from_bits(1).to_bits());
+        let neg = Decoded::normal(true, -1075, (1u64 << 63) | 1);
+        assert_eq!(neg.to_f64().to_bits(), (-f64::from_bits(1)).to_bits());
+        let tie = Decoded::normal(false, -1075, 1u64 << 63);
+        assert_eq!(tie.to_f64().to_bits(), 0.0f64.to_bits());
+        let sticky_tie =
+            Decoded { sticky: true, ..Decoded::normal(false, -1075, 1u64 << 63) };
+        assert_eq!(sticky_tie.to_f64().to_bits(), f64::from_bits(1).to_bits());
+        // Below the boundary still flushes to ±0.
+        let below = Decoded::normal(false, -1076, u64::MAX);
+        assert_eq!(below.to_f64(), 0.0);
+        // And the kernel-level symptom: exact dot 2^-500 · 1.5·2^-575.
+        let mut q = crate::formats::Quire::exact_f64();
+        q.add_product(
+            &Decoded::from_f64(f64::powi(2.0, -500)),
+            &Decoded::from_f64(1.5 * f64::powi(2.0, -575)),
+        );
+        assert_eq!(q.to_decoded().to_f64(), f64::from_bits(1));
     }
 
     #[test]

@@ -53,6 +53,18 @@ impl Quire {
         Quire::new(width, min_lsb)
     }
 
+    /// Lossless sizing for the full f64 range: every product of two f64
+    /// values (subnormals included) accumulates exactly. Product bits
+    /// reach down to 2·(−1074) − 126 = −2274 (two min-subnormal
+    /// significands at [`Decoded`]'s 63-bit alignment) and up past
+    /// 2·1023 + 32 carry-guard bits — 4416 bits of storage. This is the
+    /// f64 analogue of [`Quire::paper_800`] for the 64-bit vector
+    /// kernels: software-sized rather than architectural, since f64's
+    /// 2^±1022 range has no posit-style pinning.
+    pub fn exact_f64() -> Quire {
+        Quire::new(4416, -2274)
+    }
+
     pub fn width(&self) -> u32 {
         self.limbs.len() as u32 * 64
     }
@@ -382,6 +394,34 @@ mod tests {
         // value ≈ minpos² = 2^-384·(1+2^-20)²; exp of result ≈ -384
         assert_eq!(d.exp, -384);
         let _ = expect;
+    }
+
+    #[test]
+    fn exact_f64_covers_the_full_double_range() {
+        let mut q = Quire::exact_f64();
+        // Largest-magnitude products: no overflow, exact readout.
+        let big = dec(f64::MAX);
+        q.add_product(&big, &big);
+        assert!(!q.is_nar());
+        q.sub_product(&big, &big);
+        assert!(q.is_zero());
+        // Smallest-magnitude products: min-subnormal² accumulates exactly
+        // (no sticky), and cancels exactly.
+        let tiny = dec(f64::from_bits(1)); // 2^-1074
+        q.add_product(&tiny, &tiny);
+        let d = q.to_decoded();
+        assert!(!d.is_zero() && !d.sticky);
+        assert_eq!(d.exp, -2148);
+        q.sub_product(&tiny, &tiny);
+        assert!(q.is_zero());
+        // Mixed extreme scales in one accumulation: the classic quire win
+        // at f64 scale.
+        q.clear();
+        q.add_product(&dec(f64::powi(2.0, 1000)), &dec(f64::powi(2.0, 20)));
+        q.add_product(&tiny, &tiny);
+        q.add_product(&dec(-f64::powi(2.0, 1000)), &dec(f64::powi(2.0, 20)));
+        let d = q.to_decoded();
+        assert_eq!(d.exp, -2148, "tiny term recovered after 2^1020 cancellation");
     }
 
     #[test]

@@ -9,12 +9,13 @@
 //! - [`formats`] — the numeric-format zoo: IEEE floats, standard posits,
 //!   b-posits, takums, the 800-bit quire, and exact shared arithmetic.
 //! - [`vector`] — the serving hot path's data plane: branch-free batched
-//!   codecs (lane-parallel encode/decode over slices, the software mirror
-//!   of the paper's fixed-mux insight), quire-exact dot/axpy/gemv kernels,
-//!   register/L1-blocked GEMM (f32 fast + 800-bit quire-exact +
-//!   quantized-weight paths), and a zero-dependency scoped fork-join pool
-//!   (`PALLAS_THREADS`) that shards codecs and row-blocked kernels across
-//!   cores with bit-identical results.
+//!   codecs at 32- and 64-bit lane widths (u32/f32 and u64/f64 streams —
+//!   the software mirror of the paper's fixed-mux insight, including its
+//!   64-bit scalability claim), quire-exact dot/axpy/gemv kernels over
+//!   f32 and f64, register/L1-blocked GEMM (fast + quire-exact +
+//!   quantized-weight paths at both widths), and a zero-dependency scoped
+//!   fork-join pool (`PALLAS_THREADS`) that shards codecs and row-blocked
+//!   kernels across cores with bit-identical results.
 //! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
 //!   power) and the six decoder/encoder circuits of Figs 8–13.
 //! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis

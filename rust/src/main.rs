@@ -62,8 +62,12 @@ fn run(cmd: Command) -> positron::error::Result<()> {
                 println!("{table}");
             }
         }
-        Command::VectorBench { len, json } => {
-            let lines = cli::run_vector_bench(len, json.as_deref());
+        Command::VectorBench { len, bits, json } => {
+            let lines = if bits == 64 {
+                cli::run_vector_bench64(len, json.as_deref())
+            } else {
+                cli::run_vector_bench(len, json.as_deref())
+            };
             for line in lines.map_err(positron::error::Error::msg)? {
                 println!("{line}");
             }

@@ -66,6 +66,18 @@ pub fn mixed_scale_f32(rng: &mut Rng, len: usize, scale_bits: u64) -> Vec<f32> {
         .collect()
 }
 
+/// Mixed-scale finite f64s: the f64 analogue of [`mixed_scale_f32`],
+/// shared by the 64-bit GEMM bench and the vector-layer test suites.
+pub fn mixed_scale_f64(rng: &mut Rng, len: usize, scale_bits: u64) -> Vec<f64> {
+    (0..len)
+        .map(|_| {
+            let exp = rng.below(scale_bits) as i32 - (scale_bits as i32 / 2);
+            let mag = (rng.f64() + 0.5) * f64::powi(2.0, exp);
+            if rng.below(2) == 0 { mag } else { -mag }
+        })
+        .collect()
+}
+
 /// Run a property `prop` over `n` PRNG-driven cases; panics with the seed
 /// on failure so the case can be replayed.
 pub fn forall(name: &str, n: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {

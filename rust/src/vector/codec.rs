@@ -31,8 +31,10 @@ pub const LANES: usize = 8;
 
 const F32_NAN_BITS: u32 = 0x7fc0_0000;
 
-/// True when the branch-free lane codec supports this spec (the general
-/// [`PositSpec`] codec in `formats::posit` covers everything else).
+/// True when the branch-free 32-bit lane codec supports this spec.
+/// Wider specs (32 < n ≤ 64) are served by [`super::codec64`]; the
+/// general [`PositSpec`] codec in `formats::posit` covers the rest —
+/// see [`super::route_spec`].
 pub fn spec_supported(spec: &PositSpec) -> bool {
     (3..=32).contains(&spec.n)
         && spec.rs >= 2
@@ -400,7 +402,25 @@ mod tests {
         decode_slice_into(&BP32, &a, &mut fb);
         assert_eq!(fa, fb);
         assert!(spec_supported(&BP32) && spec_supported(&P32));
-        assert!(!spec_supported(&crate::formats::posit::P64));
+    }
+
+    #[test]
+    fn wide_specs_route_to_the_64bit_codec() {
+        // Formerly a dead end (`!spec_supported(&P64)` full stop); now the
+        // 64-bit lane codec picks up everything this codec rejects for
+        // width, and the router proves the dispatch.
+        use crate::formats::posit::{BP64, P64};
+        use crate::vector::{route_spec, CodecRoute};
+        for spec in [P64, BP64, crate::formats::posit::PositSpec::bounded(48, 6, 5)] {
+            assert!(!spec_supported(&spec), "{spec:?} is beyond the 32-bit lanes");
+            assert!(crate::vector::codec64::spec_supported(&spec));
+            assert_eq!(route_spec(&spec), CodecRoute::Lane64, "{spec:?}");
+        }
+        assert_eq!(route_spec(&BP32), CodecRoute::Lane32);
+        assert_eq!(route_spec(&P32), CodecRoute::Lane32);
+        // es = 0 stays on the general pattern-space codec.
+        let es0 = crate::formats::posit::PositSpec { n: 16, rs: 15, es: 0 };
+        assert_eq!(route_spec(&es0), CodecRoute::General);
     }
 
     #[test]

@@ -1,0 +1,505 @@
+//! Branch-free batched 64-bit lane codec: posit-family words up to
+//! `n = 64` over `&[f64]`/`&[u64]` streams with u128 intermediates.
+//!
+//! This is the 64-bit rung of the paper's scalability claim ("even
+//! greater advantages at 64-bit"): the bounded regime keeps the decode a
+//! fixed mux at any width, so the lane structure of [`super::codec`]
+//! carries over unchanged — 8-lane chunks, pure value selects (both
+//! arms of every `if` below are side-effect free, so LLVM lowers them to
+//! cmov/blend, never control flow), `_into` variants for buffer reuse.
+//! The only width-specific change is the intermediate stream: the
+//! regime ‖ exponent ‖ fraction serialization and the pattern-space RNE
+//! cut run in u128 (w_reg + es + 52 ≤ 123 bits).
+//!
+//! ## Contract (the f64 mirror of the 32-bit codec's contract)
+//! - Encode: f64 subnormal inputs (|x| < 2^−1022) quantize to 0 (FTZ/DAZ
+//!   end-to-end); NaN/Inf → NaR.
+//! - Decode: values whose 52-bit-rounded scale falls below the f64
+//!   normal range flush to ±0 (keeping the sign); above it, ±∞; NaR →
+//!   canonical quiet NaN. For every supported spec the fraction width
+//!   near the f64 range boundaries is ≤ 52 bits, so this is identical to
+//!   "round the exact posit value to f64, then flush subnormals" — the
+//!   form the big-int oracle checks.
+//!
+//! Two named fast paths: `bp64_*` for the paper's b-posit⟨64,6,5⟩ and
+//! `p64_*` for the standard posit⟨64,2⟩. Because ⟨64,6,5⟩ carries ≥ 52
+//! fraction bits at every scale, **every in-range f64 is exactly a
+//! b-posit64 value**: `bp64_encode` never rounds and decode∘encode is
+//! the identity on |x| ∈ [2^−192, 2^192).
+//!
+//! Verified against the Python big-int oracle (python/compile/kernels/
+//! scalar.py `lane_encode`/`lane_decode`, themselves proven against the
+//! Fraction-exact codec): exhaustive 16-bit sweeps across (rs, es)
+//! corners, stratified 2^20-sample sweeps for BP64/P64, boundary and
+//! RNE-tie strata — see python/tests/test_scalar_oracle64.py and
+//! rust/tests/vector_parity64.rs.
+
+use super::codec::LANES;
+use crate::formats::posit::PositSpec;
+
+const F64_NAN_BITS: u64 = 0x7ff8_0000_0000_0000;
+
+/// True when the 64-bit lane codec supports this spec. Strict superset
+/// of [`super::codec::spec_supported`]: everything that codec handles
+/// plus widths 33..=64.
+pub fn spec_supported(spec: &PositSpec) -> bool {
+    (3..=64).contains(&spec.n)
+        && spec.rs >= 2
+        && spec.rs <= spec.n - 1
+        && (1..=8).contains(&spec.es)
+}
+
+// ----------------------------------------------------------------------
+// Lane primitives
+// ----------------------------------------------------------------------
+
+/// Encode one f64 into an n-bit posit/b-posit word (see module contract).
+#[inline(always)]
+fn encode_lane(n: u32, rs: u32, es: u32, x: f64) -> u64 {
+    debug_assert!((3..=64).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
+    let m = n - 1;
+    let mask_n: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let nar: u64 = 1u64 << m;
+    let maxpos: u128 = (1u128 << m) - 1;
+    let bounded = rs < m;
+    let r_max: i32 = rs as i32 - 1;
+    let r_min: i32 = if bounded { -(rs as i32) } else { -(n as i32 - 2) };
+
+    let bits = x.to_bits();
+    let sign = bits >> 63;
+    let biased = ((bits >> 52) & 0x7ff) as i32;
+    let f52 = (bits & ((1u64 << 52) - 1)) as u128;
+    let is_zero_or_sub = biased == 0; // zero and FTZ'd subnormals
+    let is_special = biased == 0x7ff; // NaN/Inf → NaR
+    let t = biased - 1023;
+    let r = t >> es; // floor(t / 2^es)
+    let e = (t & ((1i32 << es) - 1)) as u128; // t mod 2^es, in [0, 2^es)
+    let sat_hi = r > r_max;
+    let sat_lo = r < r_min;
+    let rc = r.clamp(r_min, r_max); // keep shifts in range; sat masks win below
+    let run: u32 = if rc >= 0 { (rc + 1) as u32 } else { (-rc) as u32 };
+    let capped = run >= rs; // regime hits the bound: no terminator bit
+    let w_reg = if capped { rs } else { run + 1 };
+    let reg_ones = (1u128 << w_reg) - 1;
+    let reg_val: u128 = if rc >= 0 { reg_ones - ((!capped) as u128) } else { (!capped) as u128 };
+    // Serialize regime ‖ exponent ‖ fraction MSB-first into a u128 stream
+    // (w_reg + es + 52 ≤ 63 + 8 + 52 = 123 bits: shifts never underflow).
+    let sh_reg = 128 - w_reg;
+    let sh_exp = sh_reg - es;
+    let sh_frac = sh_exp - 52;
+    let s = (reg_val << sh_reg) | (e << sh_exp) | (f52 << sh_frac);
+    // Cut at m bits with round-to-nearest-even: rem+lsb>half ⟺ RNE up.
+    let cut = 128 - m; // 65..=126
+    let q = s >> cut;
+    let rem = s & ((1u128 << cut) - 1);
+    let half = 1u128 << (cut - 1);
+    let up = (rem + (q & 1) > half) as u128;
+    // Carry-out saturates to maxpos (never NaR); a nonzero real never
+    // rounds to the zero pattern (min clamp to minpos).
+    let body = (q + up).min(maxpos).max(1);
+    let body = if sat_hi { maxpos } else { body };
+    let body = if sat_lo { 1 } else { body };
+    let body64 = body as u64;
+    let word = (if sign == 1 { body64.wrapping_neg() } else { body64 }) & mask_n;
+    let word = if is_zero_or_sub { 0 } else { word };
+    if is_special {
+        nar
+    } else {
+        word
+    }
+}
+
+/// Decode one n-bit posit/b-posit word to f64 (see module contract).
+#[inline(always)]
+fn decode_lane(n: u32, rs: u32, es: u32, word: u64) -> f64 {
+    debug_assert!((3..=64).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
+    let m = n - 1;
+    let mask_n: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let body_mask: u64 = (1u64 << m) - 1;
+    let nar: u64 = 1u64 << m;
+
+    let word = word & mask_n;
+    let is_zero = word == 0;
+    let is_nar = word == nar;
+    let sign = (word >> m) & 1;
+    let mag = (if sign == 1 { word.wrapping_neg() } else { word }) & body_mask;
+    let b0 = (mag >> (m - 1)) & 1;
+    // Leading-run length within the m-bit body, capped at rs.
+    let probe = (if b0 == 1 { !mag } else { mag }) & body_mask;
+    let lz = (probe << (64 - m)).leading_zeros(); // probe == 0 ⇒ 64 ≥ m
+    let run = lz.min(m).min(rs);
+    let reg_len = run + (run != rs) as u32; // +terminator unless capped
+    let r: i32 = if b0 == 1 { run as i32 - 1 } else { -(run as i32) };
+    // Align the first post-regime bit to bit 127 of a u128 (the two-step
+    // shift keeps the amount ≤ 127 even when reg_len = m). Ghost exponent
+    // bits and the empty fraction fall out as zeros automatically.
+    let pay = ((mag as u128) << (127 - m + reg_len)) << 1;
+    let e = (pay >> (128 - es)) as i32;
+    let frac_top = pay << es; // fraction, MSB-aligned at bit 127
+    let t = r * (1i32 << es) + e;
+    // RNE the (≤ 60-bit) fraction to 52 f64 bits; guard/sticky live in
+    // the low 76 bits of frac_top.
+    let q = (frac_top >> 76) as u64;
+    let rem = frac_top & ((1u128 << 76) - 1);
+    let up = (rem + (q & 1) as u128 > (1u128 << 75)) as u64;
+    let frac = q + up;
+    let tt = t + (frac >> 52) as i32; // rounding carry bumps the scale
+    let frac = frac & ((1u64 << 52) - 1);
+    let underflow = tt < -1022; // FTZ contract (keeps the sign)
+    let overflow = tt > 1023;
+    let ttc = tt.clamp(-1022, 1023);
+    let fbits = (sign << 63) | (((ttc + 1023) as u64) << 52) | frac;
+    let fbits = if underflow { sign << 63 } else { fbits };
+    let fbits = if overflow { (sign << 63) | (0x7ffu64 << 52) } else { fbits };
+    let fbits = if is_zero { 0 } else { fbits };
+    let fbits = if is_nar { F64_NAN_BITS } else { fbits };
+    f64::from_bits(fbits)
+}
+
+// ----------------------------------------------------------------------
+// Chunked slice drivers (monomorphized straight-line inner loops at every
+// call site: the spec parameters are loop-invariant constants).
+// ----------------------------------------------------------------------
+
+#[inline(always)]
+fn encode_slice(n: u32, rs: u32, es: u32, xs: &[f64], out: &mut [u64]) {
+    assert_eq!(xs.len(), out.len(), "encode64: input/output length mismatch");
+    let split = xs.len() - xs.len() % LANES;
+    let (xh, xt) = xs.split_at(split);
+    let (oh, ot) = out.split_at_mut(split);
+    for (xc, oc) in xh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            oc[l] = encode_lane(n, rs, es, xc[l]);
+        }
+    }
+    for (x, o) in xt.iter().zip(ot.iter_mut()) {
+        *o = encode_lane(n, rs, es, *x);
+    }
+}
+
+#[inline(always)]
+fn decode_slice(n: u32, rs: u32, es: u32, ws: &[u64], out: &mut [f64]) {
+    assert_eq!(ws.len(), out.len(), "decode64: input/output length mismatch");
+    let split = ws.len() - ws.len() % LANES;
+    let (wh, wt) = ws.split_at(split);
+    let (oh, ot) = out.split_at_mut(split);
+    for (wc, oc) in wh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            oc[l] = decode_lane(n, rs, es, wc[l]);
+        }
+    }
+    for (w, o) in wt.iter().zip(ot.iter_mut()) {
+        *o = decode_lane(n, rs, es, *w);
+    }
+}
+
+// ---------------- b-posit⟨64,6,5⟩ (the 64-bit serving format) ----------------
+
+/// Encode one f64 → b-posit64 word (branch-free lane form).
+#[inline]
+pub fn bp64_encode_lane(x: f64) -> u64 {
+    encode_lane(64, 6, 5, x)
+}
+
+/// Decode one b-posit64 word → f64 (branch-free lane form).
+#[inline]
+pub fn bp64_decode_lane(w: u64) -> f64 {
+    decode_lane(64, 6, 5, w)
+}
+
+/// Batched encode into a caller-owned buffer (`out.len() == xs.len()`).
+pub fn bp64_encode_into(xs: &[f64], out: &mut [u64]) {
+    encode_slice(64, 6, 5, xs, out);
+}
+
+/// Batched decode into a caller-owned buffer.
+pub fn bp64_decode_into(ws: &[u64], out: &mut [f64]) {
+    decode_slice(64, 6, 5, ws, out);
+}
+
+/// Allocating batched encode.
+pub fn bp64_encode(xs: &[f64]) -> Vec<u64> {
+    let mut out = vec![0u64; xs.len()];
+    bp64_encode_into(xs, &mut out);
+    out
+}
+
+/// Allocating batched decode.
+pub fn bp64_decode(ws: &[u64]) -> Vec<f64> {
+    let mut out = vec![0f64; ws.len()];
+    bp64_decode_into(ws, &mut out);
+    out
+}
+
+/// Fused quantize+dequantize of a buffer in place (no word buffer, no
+/// allocation). For b-posit64 this is FTZ + NaR-canonicalization +
+/// saturation only: in-range f64s are exactly representable.
+pub fn bp64_roundtrip_in_place(xs: &mut [f64]) {
+    let split = xs.len() - xs.len() % LANES;
+    let (head, tail) = xs.split_at_mut(split);
+    for c in head.chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            c[l] = decode_lane(64, 6, 5, encode_lane(64, 6, 5, c[l]));
+        }
+    }
+    for x in tail.iter_mut() {
+        *x = decode_lane(64, 6, 5, encode_lane(64, 6, 5, *x));
+    }
+}
+
+/// Fused roundtrip into a separate output buffer.
+pub fn bp64_roundtrip_into(xs: &[f64], out: &mut [f64]) {
+    assert_eq!(xs.len(), out.len(), "roundtrip64: input/output length mismatch");
+    out.copy_from_slice(xs);
+    bp64_roundtrip_in_place(out);
+}
+
+// ---------------- posit⟨64,2⟩ (standard-posit comparison) ----------------
+
+/// Encode one f64 → posit⟨64,2⟩ word.
+#[inline]
+pub fn p64_encode_lane(x: f64) -> u64 {
+    encode_lane(64, 63, 2, x)
+}
+
+/// Decode one posit⟨64,2⟩ word → f64.
+#[inline]
+pub fn p64_decode_lane(w: u64) -> f64 {
+    decode_lane(64, 63, 2, w)
+}
+
+/// Batched posit⟨64,2⟩ encode into a caller-owned buffer.
+pub fn p64_encode_into(xs: &[f64], out: &mut [u64]) {
+    encode_slice(64, 63, 2, xs, out);
+}
+
+/// Batched posit⟨64,2⟩ decode into a caller-owned buffer.
+pub fn p64_decode_into(ws: &[u64], out: &mut [f64]) {
+    decode_slice(64, 63, 2, ws, out);
+}
+
+// ---------------- any supported spec ----------------
+
+/// Encode one f64 under any supported spec (see [`spec_supported`]).
+pub fn encode_word(spec: &PositSpec, x: f64) -> u64 {
+    assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
+    encode_lane(spec.n, spec.rs, spec.es, x)
+}
+
+/// Decode one word under any supported spec.
+pub fn decode_word(spec: &PositSpec, w: u64) -> f64 {
+    assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
+    decode_lane(spec.n, spec.rs, spec.es, w)
+}
+
+/// Batched encode under any supported spec.
+pub fn encode_slice_into(spec: &PositSpec, xs: &[f64], out: &mut [u64]) {
+    assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
+    encode_slice(spec.n, spec.rs, spec.es, xs, out);
+}
+
+/// Batched decode under any supported spec.
+pub fn decode_slice_into(spec: &PositSpec, ws: &[u64], out: &mut [f64]) {
+    assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
+    decode_slice(spec.n, spec.rs, spec.es, ws, out);
+}
+
+// ---------------- f64 ⇄ bits (baseline lane for the bench sweep) ----------------
+
+/// Batched f64 → raw bits (the no-op codec: memcpy-speed upper bound).
+pub fn f64_to_bits_into(xs: &[f64], out: &mut [u64]) {
+    assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = x.to_bits();
+    }
+}
+
+/// Batched raw bits → f64.
+pub fn bits_to_f64_into(ws: &[u64], out: &mut [f64]) {
+    assert_eq!(ws.len(), out.len());
+    for (o, &w) in out.iter_mut().zip(ws) {
+        *o = f64::from_bits(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{BP16, BP32, BP64, P16, P32, P64};
+    use crate::formats::Decoded;
+
+    #[test]
+    fn bp64_known_patterns() {
+        assert_eq!(bp64_encode_lane(1.0), 0x4000_0000_0000_0000);
+        assert_eq!(bp64_encode_lane(-1.0), 0xC000_0000_0000_0000);
+        assert_eq!(bp64_decode_lane(0x4000_0000_0000_0000), 1.0);
+        assert_eq!(bp64_encode_lane(0.0), 0);
+        assert_eq!(bp64_encode_lane(f64::NAN), 0x8000_0000_0000_0000);
+        assert_eq!(bp64_encode_lane(f64::INFINITY), 0x8000_0000_0000_0000);
+        assert!(bp64_decode_lane(0x8000_0000_0000_0000).is_nan());
+        assert_eq!(bp64_decode_lane(0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(p64_encode_lane(1.0), 0x4000_0000_0000_0000);
+        assert_eq!(p64_decode_lane(0x4000_0000_0000_0000), 1.0);
+    }
+
+    #[test]
+    fn bp64_ftz_and_saturation_contract() {
+        // Subnormal f64 inputs flush to the zero pattern.
+        let sub = f64::from_bits(1); // 2^-1074
+        assert_eq!(bp64_encode_lane(sub), 0);
+        assert_eq!(bp64_encode_lane(-sub), 0);
+        // Beyond the ⟨64,6,5⟩ range: saturate to ±maxpos, never NaR.
+        assert_eq!(bp64_encode_lane(1e300), (1u64 << 63) - 1);
+        assert_eq!(bp64_encode_lane(-1e300), (1u64 << 63) + 1);
+        assert_eq!(bp64_encode_lane(1e-300), 1);
+        assert_eq!(bp64_encode_lane(-1e-300), u64::MAX);
+        // BP64 minpos (2^-192 scale) is within f64 range: no flush.
+        assert!(bp64_decode_lane(1) > 0.0);
+        // P64 minpos = 2^-248 exactly.
+        assert_eq!(p64_decode_lane(1), f64::powi(2.0, -248));
+        assert_eq!(p64_decode_lane(1u64.wrapping_neg()), -f64::powi(2.0, -248));
+    }
+
+    #[test]
+    fn named_paths_match_general_codec_on_knowns() {
+        for x in [1.0f64, -1.0, 0.5, 3.25, 1e30, -1e-30, 123456.78, 2.0f64.powi(150)] {
+            assert_eq!(p64_encode_lane(x), P64.from_f64(x), "p64 encode {x}");
+            assert_eq!(bp64_encode_lane(x), BP64.from_f64(x), "bp64 encode {x}");
+        }
+        for w in [0x4000_0000_0000_0000u64, 0xC000_0000_0000_0000, 12345, 1u64 << 62] {
+            assert_eq!(p64_decode_lane(w), P64.to_f64(w), "p64 decode {w:#x}");
+            assert_eq!(bp64_decode_lane(w), BP64.to_f64(w), "bp64 decode {w:#x}");
+        }
+    }
+
+    #[test]
+    fn bp64_in_range_f64_grid_is_exact() {
+        // ⟨64,6,5⟩ carries ≥ 52 fraction bits at every scale, so every
+        // in-range f64 roundtrips exactly (encode never rounds).
+        let mut rng = crate::testutil::Rng::new(0x64f);
+        let mut checked = 0u32;
+        for _ in 0..200_000 {
+            let x = f64::from_bits(rng.next_u64());
+            if !x.is_finite() || x == 0.0 {
+                continue;
+            }
+            let a = x.abs();
+            if !(f64::powi(2.0, -192)..f64::powi(2.0, 191)).contains(&a) {
+                continue;
+            }
+            let w = bp64_encode_lane(x);
+            assert_eq!(bp64_decode_lane(w).to_bits(), x.to_bits(), "{x:e}");
+            checked += 1;
+        }
+        // ~19% of random f64 bit patterns fall in the 2^±192 range.
+        assert!(checked > 25_000, "only {checked} in-range samples");
+    }
+
+    #[test]
+    fn generic_matches_named_fast_paths() {
+        let mut rng = crate::testutil::Rng::new(0x9164);
+        for _ in 0..50_000 {
+            let w = rng.next_u64();
+            let x = f64::from_bits(w);
+            assert_eq!(encode_word(&BP64, x), bp64_encode_lane(x));
+            assert_eq!(encode_word(&P64, x), p64_encode_lane(x));
+            let (a, b) = (decode_word(&BP64, w), bp64_decode_lane(w));
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()));
+            let (a, b) = (decode_word(&P64, w), p64_decode_lane(w));
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()));
+        }
+    }
+
+    #[test]
+    fn generic_agrees_with_32bit_lane_codec_on_narrow_specs() {
+        // The 64-bit generic path is a superset: on n ≤ 32 specs it must
+        // agree with the 32-bit lane codec (modulo the f32 vs f64 contract
+        // window, so compare through the general codec on f64 inputs).
+        for spec in [BP16, P16, BP32, P32] {
+            for w in 0..=u16::MAX as u64 {
+                let got = decode_word(&spec, w);
+                let v = spec.decode(w & spec.mask());
+                let want = if v.is_nan() {
+                    f64::NAN
+                } else {
+                    let f = v.to_f64();
+                    if f != 0.0 && f.abs() < f64::MIN_POSITIVE {
+                        if f < 0.0 {
+                            -0.0
+                        } else {
+                            0.0
+                        }
+                    } else {
+                        f
+                    }
+                };
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "{spec:?} decode {w:#x}: {got} vs {want}"
+                );
+            }
+            let mut rng = crate::testutil::Rng::new(spec.n as u64);
+            for _ in 0..20_000 {
+                let x = f64::from_bits(rng.next_u64());
+                let want = if !x.is_finite() {
+                    spec.nar()
+                } else if x == 0.0 || x.abs() < f64::MIN_POSITIVE {
+                    0
+                } else {
+                    spec.encode(&Decoded::from_f64(x))
+                };
+                assert_eq!(encode_word(&spec, x), want, "{spec:?} encode {x:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_paths_match_lane_paths() {
+        let xs: Vec<f64> = (0..37).map(|i| (i as f64 - 18.0) * 1.73).collect();
+        let mut words = vec![0u64; xs.len()];
+        bp64_encode_into(&xs, &mut words);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(words[i], bp64_encode_lane(x));
+        }
+        let mut back = vec![0f64; xs.len()];
+        bp64_decode_into(&words, &mut back);
+        assert_eq!(back, xs, "fovea values survive the roundtrip exactly");
+
+        let mut rt = xs.clone();
+        bp64_roundtrip_in_place(&mut rt);
+        assert_eq!(rt, xs);
+        let mut rt2 = vec![0f64; xs.len()];
+        bp64_roundtrip_into(&xs, &mut rt2);
+        assert_eq!(rt2, xs);
+
+        assert_eq!(bp64_encode(&xs), words);
+        assert_eq!(bp64_decode(&words), xs);
+
+        let mut pw = vec![0u64; xs.len()];
+        p64_encode_into(&xs, &mut pw);
+        let mut pb = vec![0f64; xs.len()];
+        p64_decode_into(&pw, &mut pb);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(pw[i], p64_encode_lane(x));
+            assert_eq!(pb[i].to_bits(), p64_decode_lane(pw[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn supported_specs() {
+        assert!(spec_supported(&BP64) && spec_supported(&P64));
+        assert!(spec_supported(&BP32) && spec_supported(&P32) && spec_supported(&BP16));
+        assert!(!spec_supported(&PositSpec { n: 64, rs: 63, es: 0 }));
+        assert!(!spec_supported(&PositSpec { n: 2, rs: 1, es: 1 }));
+    }
+
+    #[test]
+    fn f64_bits_roundtrip() {
+        let xs = [0.0f64, -1.5, 3.25, f64::INFINITY];
+        let mut w = [0u64; 4];
+        let mut back = [0f64; 4];
+        f64_to_bits_into(&xs, &mut w);
+        bits_to_f64_into(&w, &mut back);
+        assert_eq!(xs, back);
+    }
+}

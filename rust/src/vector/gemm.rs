@@ -29,8 +29,9 @@
 //! bit-identical to serial for any thread count.
 
 use super::codec;
+use super::codec64;
 use super::parallel;
-use crate::formats::posit::BP32;
+use crate::formats::posit::{BP32, BP64};
 use crate::formats::{Decoded, Quire};
 
 /// Microkernel rows (register tile height).
@@ -288,9 +289,10 @@ fn quire_rows_bp32(a_rows: &[u32], b: &[f32], c_rows: &mut [f32], k: usize, n: u
     let rows = c_rows.len() / n;
     let mut q = Quire::paper_800(&BP32);
     let mut colpack = vec![0f32; k * NR];
-    // One decode pass per (row, tile) amortizes weight decode over NR
-    // output columns.
-    let mut adec: Vec<Decoded> = vec![Decoded::ZERO; k];
+    // Decode the whole row slab once up front (the expensive general-
+    // codec path), not once per NR-column tile — same scratch-size
+    // tradeoff as the fast path's f64 panel, ceil(n/NR)× less decoding.
+    let adec: Vec<Decoded> = a_rows.iter().map(|&w| BP32.decode(w as u64)).collect();
     for jc in (0..n).step_by(NR) {
         let nr = NR.min(n - jc);
         for j in 0..nr {
@@ -299,14 +301,12 @@ fn quire_rows_bp32(a_rows: &[u32], b: &[f32], c_rows: &mut [f32], k: usize, n: u
             }
         }
         for i in 0..rows {
-            for (p, d) in adec.iter_mut().enumerate() {
-                *d = BP32.decode(a_rows[i * k + p] as u64);
-            }
+            let arow = &adec[i * k..(i + 1) * k];
             for j in 0..nr {
                 let col = &colpack[j * k..(j + 1) * k];
                 q.clear();
                 for p in 0..k {
-                    q.add_product(&adec[p], &Decoded::from_f64(col[p] as f64));
+                    q.add_product(&arow[p], &Decoded::from_f64(col[p] as f64));
                 }
                 c_rows[i * n + jc + j] = q.to_decoded().to_f64() as f32;
             }
@@ -362,6 +362,325 @@ pub fn par_gemm_bp32_weights_fast(
     n: usize,
 ) {
     par_gemm_bp32_weights_fast_with(
+        parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
+        a_bits,
+        b,
+        c,
+        m,
+        k,
+        n,
+    );
+}
+
+// ----------------------------------------------------------------------
+// f64 GEMM family (the 64-bit lane stack), on the same MR×NR microkernel
+// geometry. Same bit-identity contract: the blocked f64 fast path equals
+// the naive ascending-`p` triple loop bitwise, and every par_* entry
+// point equals its serial counterpart for any thread count.
+// ----------------------------------------------------------------------
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` into `NR`-wide f64 panels.
+fn pack_b64(b: &[f64], bpack: &mut [f64], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
+    let panels = nc.div_ceil(NR);
+    bpack[..panels * kc * NR].fill(0.0);
+    for (pi, jr) in (0..nc).step_by(NR).enumerate() {
+        let nr = NR.min(nc - jr);
+        let dst_base = pi * kc * NR;
+        for p in 0..kc {
+            let src = (pc + p) * ldb + jc + jr;
+            let dst = dst_base + p * NR;
+            bpack[dst..dst + nr].copy_from_slice(&b[src..src + nr]);
+        }
+    }
+}
+
+/// `MR×NR` f64 register-tile microkernel (one scalar accumulator chain
+/// per element, ascending-`p` order — no reassociation).
+#[inline(always)]
+fn micro_f64(
+    a: &[f64],
+    lda: usize,
+    a_off: usize,
+    bpanel: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    c_off: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+) {
+    let mut acc = [[0f64; NR]; MR];
+    for i in 0..mr {
+        for j in 0..nr {
+            acc[i][j] = c[c_off + i * ldc + j];
+        }
+    }
+    for p in 0..kc {
+        let brow = &bpanel[p * NR..p * NR + NR];
+        for (i, acc_i) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[a_off + i * lda + p];
+            for j in 0..NR {
+                acc_i[j] += av * brow[j];
+            }
+        }
+    }
+    for i in 0..mr {
+        for j in 0..nr {
+            c[c_off + i * ldc + j] = acc[i][j];
+        }
+    }
+}
+
+/// Blocked f64 GEMM: `C ← A·B` (C is overwritten). Bit-identical to the
+/// naive ascending-`p` triple loop.
+pub fn gemm_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    c.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut bpack = vec![0f64; NC.div_ceil(NR) * KC * NR];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b64(b, &mut bpack, pc, jc, kc, nc, n);
+            for ic in (0..m).step_by(MR) {
+                let mr = MR.min(m - ic);
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    let panel = (jr / NR) * kc * NR;
+                    micro_f64(
+                        a,
+                        k,
+                        ic * k + pc,
+                        &bpack[panel..panel + kc * NR],
+                        c,
+                        n,
+                        ic * n + jc + jr,
+                        mr,
+                        nr,
+                        kc,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Sharded blocked f64 GEMM with an explicit thread count.
+pub fn par_gemm_f64_with(
+    threads: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        gemm_f64(&a[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
+    });
+}
+
+/// Sharded blocked f64 GEMM (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemm_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    par_gemm_f64_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+}
+
+/// Quire-exact f64 GEMM: every `C[i,j]` is an exact accumulation of its
+/// k products in an [`Quire::exact_f64`]-sized quire, rounded once at
+/// readout — order-independent by construction.
+pub fn gemm_quire_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    quire_rows_f64(a, b, c, k, n);
+}
+
+/// Sharded quire-exact f64 GEMM with an explicit thread count.
+pub fn par_gemm_quire_f64_with(
+    threads: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        quire_rows_f64(&a[r0 * k..(r0 + rows) * k], b, cb, k, n);
+    });
+}
+
+/// Sharded quire-exact f64 GEMM (auto thread count).
+pub fn par_gemm_quire_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    par_gemm_quire_f64_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+}
+
+fn quire_rows_f64(a_rows: &[f64], b: &[f64], c_rows: &mut [f64], k: usize, n: usize) {
+    if n == 0 || c_rows.is_empty() {
+        return;
+    }
+    let rows = c_rows.len() / n;
+    let mut q = Quire::exact_f64();
+    let mut colpack = vec![0f64; k * NR];
+    for jc in (0..n).step_by(NR) {
+        let nr = NR.min(n - jc);
+        for j in 0..nr {
+            for p in 0..k {
+                colpack[j * k + p] = b[p * n + jc + j];
+            }
+        }
+        for i in 0..rows {
+            let arow = &a_rows[i * k..(i + 1) * k];
+            for j in 0..nr {
+                let col = &colpack[j * k..(j + 1) * k];
+                q.clear();
+                for p in 0..k {
+                    q.add_product(&Decoded::from_f64(arow[p]), &Decoded::from_f64(col[p]));
+                }
+                c_rows[i * n + jc + j] = q.to_decoded().to_f64();
+            }
+        }
+    }
+}
+
+/// Quire-exact bp64-quantized-weight GEMM: `A` is m×k b-posit64 words,
+/// `B` is k×n f64 activations; each output is an exact fused dot rounded
+/// once to f64.
+pub fn gemm_bp64_weights(a_bits: &[u64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    quire_rows_bp64(a_bits, b, c, k, n);
+}
+
+/// Sharded quire-exact bp64-quantized-weight GEMM, explicit thread count.
+pub fn par_gemm_bp64_weights_with(
+    threads: usize,
+    a_bits: &[u64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        quire_rows_bp64(&a_bits[r0 * k..(r0 + rows) * k], b, cb, k, n);
+    });
+}
+
+/// Sharded quire-exact bp64-quantized-weight GEMM (auto thread count).
+pub fn par_gemm_bp64_weights(
+    a_bits: &[u64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp64_weights_with(
+        parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
+        a_bits,
+        b,
+        c,
+        m,
+        k,
+        n,
+    );
+}
+
+fn quire_rows_bp64(a_rows: &[u64], b: &[f64], c_rows: &mut [f64], k: usize, n: usize) {
+    if n == 0 || c_rows.is_empty() {
+        return;
+    }
+    let rows = c_rows.len() / n;
+    let mut q = Quire::exact_f64();
+    let mut colpack = vec![0f64; k * NR];
+    // Decode the whole row slab once up front (the expensive general-
+    // codec path), not once per NR-column tile — same scratch-size
+    // tradeoff as the fast path's f64 panel, ceil(n/NR)× less decoding.
+    let adec: Vec<Decoded> = a_rows.iter().map(|&w| BP64.decode(w)).collect();
+    for jc in (0..n).step_by(NR) {
+        let nr = NR.min(n - jc);
+        for j in 0..nr {
+            for p in 0..k {
+                colpack[j * k + p] = b[p * n + jc + j];
+            }
+        }
+        for i in 0..rows {
+            let arow = &adec[i * k..(i + 1) * k];
+            for j in 0..nr {
+                let col = &colpack[j * k..(j + 1) * k];
+                q.clear();
+                for p in 0..k {
+                    q.add_product(&arow[p], &Decoded::from_f64(col[p]));
+                }
+                c_rows[i * n + jc + j] = q.to_decoded().to_f64();
+            }
+        }
+    }
+}
+
+/// Rounded fast path for bp64 weights: lane-decode A into an f64 scratch
+/// panel, then run the blocked f64 GEMM on it.
+pub fn gemm_bp64_weights_fast(
+    a_bits: &[u64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    let mut a = vec![0f64; a_bits.len()];
+    codec64::bp64_decode_into(a_bits, &mut a);
+    gemm_f64(&a, b, c, m, k, n);
+}
+
+/// Sharded fast bp64-weight GEMM with an explicit thread count (each
+/// shard decodes only its own row slab).
+pub fn par_gemm_bp64_weights_fast_with(
+    threads: usize,
+    a_bits: &[u64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
+    if n == 0 {
+        return;
+    }
+    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
+        let rows = cb.len() / n;
+        gemm_bp64_weights_fast(&a_bits[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
+    });
+}
+
+/// Sharded fast bp64-weight GEMM (auto thread count).
+pub fn par_gemm_bp64_weights_fast(
+    a_bits: &[u64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp64_weights_fast_with(
         parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
         a_bits,
         b,
@@ -473,6 +792,117 @@ mod tests {
             par_gemm_bp32_weights_with(t, &a_bits, &b, &mut c, m, k, n);
             assert_eq!(c, serial_w, "bp32 t={t}");
         }
+    }
+
+    fn naive_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn mixed64(rng: &mut crate::testutil::Rng, len: usize) -> Vec<f64> {
+        crate::testutil::mixed_scale_f64(rng, len, 61)
+    }
+
+    #[test]
+    fn blocked_f64_matches_naive_bitwise_on_edge_shapes() {
+        let mut rng = crate::testutil::Rng::new(0x9e64);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 300, 9), (17, 129, 33), (33, 1, 2)]
+        {
+            let a = mixed64(&mut rng, m * k);
+            let b = mixed64(&mut rng, k * n);
+            let mut c = vec![0f64; m * n];
+            gemm_f64(&a, &b, &mut c, m, k, n);
+            let r = naive_f64(&a, &b, m, k, n);
+            assert_eq!(
+                c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn quire_f64_gemm_recovers_cancellation_the_fast_path_loses() {
+        let big = f64::powi(2.0, 53);
+        let a = [big, 1.0, -big];
+        let b = [big, 1.0, big];
+        let mut c_fast = [0f64; 1];
+        gemm_f64(&a, &b, &mut c_fast, 1, 3, 1);
+        assert_eq!(c_fast[0], 0.0);
+        let mut c_exact = [0f64; 1];
+        gemm_quire_f64(&a, &b, &mut c_exact, 1, 3, 1);
+        assert_eq!(c_exact[0], 1.0);
+    }
+
+    #[test]
+    fn bp64_weight_paths_agree_with_gemv_kernels() {
+        use crate::vector::kernels;
+        let mut rng = crate::testutil::Rng::new(0xbe64);
+        let (m, k) = (6, 17);
+        let w: Vec<f64> = mixed64(&mut rng, m * k);
+        let w_bits: Vec<u64> = w.iter().map(|&x| codec64::bp64_encode_lane(x)).collect();
+        let x = mixed64(&mut rng, k);
+        // n = 1 GEMM ≡ gemv.
+        let mut c = vec![0f64; m];
+        gemm_bp64_weights(&w_bits, &x, &mut c, m, k, 1);
+        let mut y = vec![0f64; m];
+        let mut q = kernels::QuireDotF64::new();
+        q.gemv_bp64_weights(&w_bits, &x, &mut y);
+        assert_eq!(c, y);
+        let mut cf = vec![0f64; m];
+        gemm_bp64_weights_fast(&w_bits, &x, &mut cf, m, k, 1);
+        for r in 0..m {
+            let fast = kernels::dot_bp64_weights_fast(&w_bits[r * k..(r + 1) * k], &x);
+            assert_eq!(cf[r], fast, "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_f64_paths_bit_identical_to_serial() {
+        let mut rng = crate::testutil::Rng::new(0x6064);
+        let (m, k, n) = (13, 37, 11);
+        let a = mixed64(&mut rng, m * k);
+        let b = mixed64(&mut rng, k * n);
+        let a_bits: Vec<u64> = a.iter().map(|&x| codec64::bp64_encode_lane(x)).collect();
+        let mut serial = vec![0f64; m * n];
+        gemm_f64(&a, &b, &mut serial, m, k, n);
+        let mut serial_q = vec![0f64; m * n];
+        gemm_quire_f64(&a, &b, &mut serial_q, m, k, n);
+        let mut serial_w = vec![0f64; m * n];
+        gemm_bp64_weights(&a_bits, &b, &mut serial_w, m, k, n);
+        let mut serial_wf = vec![0f64; m * n];
+        gemm_bp64_weights_fast(&a_bits, &b, &mut serial_wf, m, k, n);
+        for t in [1usize, 2, 7, 32] {
+            let mut c = vec![0f64; m * n];
+            par_gemm_f64_with(t, &a, &b, &mut c, m, k, n);
+            assert_eq!(c, serial, "f64 t={t}");
+            par_gemm_quire_f64_with(t, &a, &b, &mut c, m, k, n);
+            assert_eq!(c, serial_q, "quire t={t}");
+            par_gemm_bp64_weights_with(t, &a_bits, &b, &mut c, m, k, n);
+            assert_eq!(c, serial_w, "bp64 t={t}");
+            par_gemm_bp64_weights_fast_with(t, &a_bits, &b, &mut c, m, k, n);
+            assert_eq!(c, serial_wf, "bp64 fast t={t}");
+        }
+    }
+
+    #[test]
+    fn zero_sized_dimensions_are_noops_f64() {
+        let mut c: Vec<f64> = Vec::new();
+        gemm_f64(&[], &[], &mut c, 0, 0, 0);
+        gemm_quire_f64(&[], &[], &mut c, 0, 5, 0);
+        par_gemm_f64_with(4, &[], &[], &mut c, 0, 0, 0);
+        let mut c1 = vec![7f64; 2];
+        gemm_f64(&[], &[], &mut c1, 2, 0, 1);
+        assert_eq!(c1, vec![0.0, 0.0], "k=0 zeroes C");
     }
 
     #[test]

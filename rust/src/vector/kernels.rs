@@ -11,8 +11,9 @@
 //! across calls, so steady-state serving allocates nothing.
 
 use super::codec;
+use super::codec64;
 use super::parallel;
-use crate::formats::posit::BP32;
+use crate::formats::posit::{BP32, BP64};
 use crate::formats::{Decoded, Quire};
 
 /// Rounded f32 dot product (fast path): 8 independent accumulators keep
@@ -133,6 +134,120 @@ pub fn par_gemv_bp32_weights(w_bits: &[u32], x: &[f32], y: &mut [f32]) {
     par_gemv_bp32_weights_with(shards, w_bits, x, y);
 }
 
+// ----------------------------------------------------------------------
+// f64 kernels (the 64-bit lane stack: BP64/P64 words, f64 activations)
+// ----------------------------------------------------------------------
+
+/// Rounded f64 dot product (fast path): 8 independent accumulators keep
+/// the loop free of a serial fadd chain.
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    let n = a.len();
+    let chunks = n - n % 8;
+    let mut acc = [0.0f64; 8];
+    let mut i = 0;
+    while i < chunks {
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// Rounded f64 axpy: y ← y + α·x (elementwise, vectorizable).
+pub fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Rounded f64 gemv: y ← A·x with A row-major `y.len() × x.len()`.
+pub fn gemv_f64(a: &[f64], x: &[f64], y: &mut [f64]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+    for r in 0..rows {
+        y[r] = dot_f64(&a[r * cols..(r + 1) * cols], x);
+    }
+}
+
+/// Fast path over quantized weights: chunked lane-decode of b-posit64
+/// words fused with the f64 multiply-add, zero heap allocation.
+pub fn dot_bp64_weights_fast(w_bits: &[u64], x: &[f64]) -> f64 {
+    assert_eq!(w_bits.len(), x.len(), "dot: length mismatch");
+    let n = x.len();
+    let chunks = n - n % 8;
+    let mut acc = [0.0f64; 8];
+    let mut buf = [0.0f64; 8];
+    let mut i = 0;
+    while i < chunks {
+        for l in 0..8 {
+            buf[l] = codec64::bp64_decode_lane(w_bits[i + l]);
+        }
+        for l in 0..8 {
+            acc[l] += buf[l] * x[i + l];
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    while i < n {
+        s += codec64::bp64_decode_lane(w_bits[i]) * x[i];
+        i += 1;
+    }
+    s
+}
+
+/// Sharded f64 gemv with an explicit thread count.
+pub fn par_gemv_f64_with(threads: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
+        gemv_f64(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+    });
+}
+
+/// Sharded f64 gemv (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemv_f64(a: &[f64], x: &[f64], y: &mut [f64]) {
+    par_gemv_f64_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+}
+
+/// Sharded quire-exact f64 gemv with an explicit thread count.
+pub fn par_gemv_quire_f64_with(threads: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
+        let mut q = QuireDotF64::new();
+        q.gemv_f64(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+    });
+}
+
+/// Sharded quire-exact f64 gemv (auto thread count).
+pub fn par_gemv_quire_f64(a: &[f64], x: &[f64], y: &mut [f64]) {
+    par_gemv_quire_f64_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+}
+
+/// Sharded quire-exact bp64-quantized-weight gemv, explicit thread count.
+pub fn par_gemv_bp64_weights_with(threads: usize, w_bits: &[u64], x: &[f64], y: &mut [f64]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
+    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
+        let mut q = QuireDotF64::new();
+        q.gemv_bp64_weights(&w_bits[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+    });
+}
+
+/// Sharded quire-exact bp64-quantized-weight gemv (auto thread count).
+pub fn par_gemv_bp64_weights(w_bits: &[u64], x: &[f64], y: &mut [f64]) {
+    let shards = parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD);
+    par_gemv_bp64_weights_with(shards, w_bits, x, y);
+}
+
 /// Reusable 800-bit quire context for exact dot/axpy/gemv. One allocation
 /// at construction; every call clears and reuses it.
 pub struct QuireDot {
@@ -212,6 +327,99 @@ impl QuireDot {
             self.q.add(&BP32.decode(*yi as u64));
             self.q.add_product(&alpha, &BP32.decode(xi as u64));
             *yi = self.q.to_posit(&BP32) as u32;
+        }
+    }
+
+    /// Exact dot over b-posit64 words, rounded once to a b-posit64 word.
+    /// The same 800-bit quire serves every ⟨n,6,5⟩ precision — the
+    /// paper's shared-quire sizing, exercised at its widest n here.
+    pub fn dot_bp64(&mut self, a_bits: &[u64], b_bits: &[u64]) -> u64 {
+        assert_eq!(a_bits.len(), b_bits.len(), "dot: length mismatch");
+        self.q.clear();
+        for (&x, &y) in a_bits.iter().zip(b_bits) {
+            self.q.add_product(&BP64.decode(x), &BP64.decode(y));
+        }
+        self.q.to_posit(&BP64)
+    }
+
+    /// Elementwise exact FMA in b-posit64: yᵢ ← round_bp64(yᵢ + α·xᵢ).
+    pub fn axpy_bp64(&mut self, alpha_bits: u64, x_bits: &[u64], y_bits: &mut [u64]) {
+        assert_eq!(x_bits.len(), y_bits.len(), "axpy: length mismatch");
+        let alpha = BP64.decode(alpha_bits);
+        for (yi, &xi) in y_bits.iter_mut().zip(x_bits) {
+            self.q.clear();
+            self.q.add(&BP64.decode(*yi));
+            self.q.add_product(&alpha, &BP64.decode(xi));
+            *yi = self.q.to_posit(&BP64);
+        }
+    }
+}
+
+/// Reusable quire context for exact f64 dot/axpy/gemv. The accumulator is
+/// [`Quire::exact_f64`]-sized (f64's 2^±1022 range overruns the 800-bit
+/// posit quire), so every product of two f64 values — subnormals included
+/// — accumulates exactly and the single readout rounding is the only
+/// rounding in the whole reduction.
+pub struct QuireDotF64 {
+    q: Quire,
+}
+
+impl Default for QuireDotF64 {
+    fn default() -> Self {
+        QuireDotF64::new()
+    }
+}
+
+impl QuireDotF64 {
+    pub fn new() -> QuireDotF64 {
+        QuireDotF64 { q: Quire::exact_f64() }
+    }
+
+    /// Exact dot of two f64 slices, rounded once (RNE) at readout.
+    pub fn dot_f64(&mut self, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len(), "dot: length mismatch");
+        self.q.clear();
+        for (&x, &y) in a.iter().zip(b) {
+            self.q.add_product(&Decoded::from_f64(x), &Decoded::from_f64(y));
+        }
+        self.q.to_decoded().to_f64()
+    }
+
+    /// Exact f64 FMA per element: yᵢ ← round_f64(yᵢ + α·xᵢ) — fused
+    /// multiply-add semantics without a hardware fma.
+    pub fn axpy_f64(&mut self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), y.len(), "axpy: length mismatch");
+        let da = Decoded::from_f64(alpha);
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            self.q.clear();
+            self.q.add(&Decoded::from_f64(*yi));
+            self.q.add_product(&da, &Decoded::from_f64(xi));
+            *yi = self.q.to_decoded().to_f64();
+        }
+    }
+
+    /// Quire-exact f64 gemv: y ← A·x, one exact row-dot per output,
+    /// each rounded once to f64.
+    pub fn gemv_f64(&mut self, a: &[f64], x: &[f64], y: &mut [f64]) {
+        let (rows, cols) = (y.len(), x.len());
+        assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+        for r in 0..rows {
+            y[r] = self.dot_f64(&a[r * cols..(r + 1) * cols], x);
+        }
+    }
+
+    /// Quire-exact gemv over quantized weights (b-posit64 words) with
+    /// f64 activations — the 64-bit serving layout's matmul row
+    /// primitive.
+    pub fn gemv_bp64_weights(&mut self, w_bits: &[u64], x: &[f64], y: &mut [f64]) {
+        let (rows, cols) = (y.len(), x.len());
+        assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
+        for r in 0..rows {
+            self.q.clear();
+            for c in 0..cols {
+                self.q.add_product(&BP64.decode(w_bits[r * cols + c]), &Decoded::from_f64(x[c]));
+            }
+            y[r] = self.q.to_decoded().to_f64();
         }
     }
 }
@@ -296,6 +504,118 @@ mod tests {
             par_gemv_bp32_weights_with(t, &w_bits, &x, &mut y);
             assert_eq!(y, y_w, "bp32 t={t}");
         }
+    }
+
+    #[test]
+    fn quire_dot_f64_recovers_cancelled_term() {
+        // 2^53·2^53 = 2^106 is exact in the quire; the rounded f64 path
+        // loses the +1 (2^106 + 1 isn't an f64), the quire keeps it.
+        let big = f64::powi(2.0, 53);
+        let a = [big, 1.0, -big];
+        let b = [big, 1.0, big];
+        assert_eq!(dot_f64(&a, &b), 0.0);
+        let mut q = QuireDotF64::new();
+        assert_eq!(q.dot_f64(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn quire_dot_f64_full_range() {
+        // Products spanning max-f64 down to subnormal² in one reduction.
+        let a = [f64::MAX, f64::from_bits(1), -f64::MAX];
+        let b = [f64::MAX, f64::from_bits(1), f64::MAX];
+        let mut q = QuireDotF64::new();
+        let exact = q.dot_f64(&a, &b);
+        // Exact value is 2^-2148, below f64 range: rounds to 0 at readout
+        // — but crucially not NaR/Inf (no overflow in the accumulator).
+        assert_eq!(exact, 0.0);
+        // Without the cancellation the readout saturates cleanly.
+        assert_eq!(q.dot_f64(&[f64::MAX, f64::MAX], &[f64::MAX, f64::MAX]), f64::INFINITY);
+    }
+
+    #[test]
+    fn quire_dot_bp64_fused() {
+        let a: Vec<u64> =
+            [256.0f64, 1.0 / 256.0, -256.0].iter().map(|&x| codec64::bp64_encode_lane(x)).collect();
+        let b: Vec<u64> =
+            [256.0f64, 1.0, 256.0].iter().map(|&x| codec64::bp64_encode_lane(x)).collect();
+        let mut q = QuireDot::new();
+        let out = q.dot_bp64(&a, &b);
+        assert_eq!(codec64::bp64_decode_lane(out), 1.0 / 256.0);
+    }
+
+    #[test]
+    fn gemv_f64_consistent_with_dot_and_weights_fast_path() {
+        let a: Vec<f64> = (0..20).map(|i| (i as f64 - 10.0) * 0.5).collect();
+        let x: Vec<f64> = (0..5).map(|i| 1.0 + i as f64).collect();
+        let mut y_fast = vec![0f64; 4];
+        gemv_f64(&a, &x, &mut y_fast);
+        for r in 0..4 {
+            assert_eq!(y_fast[r], dot_f64(&a[r * 5..(r + 1) * 5], &x));
+        }
+        let mut q = QuireDotF64::new();
+        let mut y_exact = vec![0f64; 4];
+        q.gemv_f64(&a, &x, &mut y_exact);
+        assert_eq!(y_fast, y_exact, "small exact-integer-ish data: both paths agree");
+
+        let w_bits: Vec<u64> = a.iter().map(|&v| codec64::bp64_encode_lane(v)).collect();
+        let mut y_w = vec![0f64; 4];
+        q.gemv_bp64_weights(&w_bits, &x, &mut y_w);
+        for r in 0..4 {
+            let fast = dot_bp64_weights_fast(&w_bits[r * 5..(r + 1) * 5], &x);
+            assert_eq!(y_w[r], fast, "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_gemv_f64_bit_identical_to_serial() {
+        let mut rng = crate::testutil::Rng::new(0x9e64);
+        let (rows, cols) = (19usize, 23usize);
+        let a: Vec<f64> = (0..rows * cols).map(|_| (rng.f64() - 0.5) * 8.0).collect();
+        let x: Vec<f64> = (0..cols).map(|_| (rng.f64() - 0.5) * 8.0).collect();
+        let w_bits: Vec<u64> = a.iter().map(|&v| codec64::bp64_encode_lane(v)).collect();
+        let mut y_fast = vec![0f64; rows];
+        gemv_f64(&a, &x, &mut y_fast);
+        let mut q = QuireDotF64::new();
+        let mut y_quire = vec![0f64; rows];
+        q.gemv_f64(&a, &x, &mut y_quire);
+        let mut y_w = vec![0f64; rows];
+        q.gemv_bp64_weights(&w_bits, &x, &mut y_w);
+        for t in [1usize, 2, 7] {
+            let mut y = vec![0f64; rows];
+            par_gemv_f64_with(t, &a, &x, &mut y);
+            assert_eq!(y, y_fast, "f64 t={t}");
+            par_gemv_quire_f64_with(t, &a, &x, &mut y);
+            assert_eq!(y, y_quire, "quire t={t}");
+            par_gemv_bp64_weights_with(t, &w_bits, &x, &mut y);
+            assert_eq!(y, y_w, "bp64 t={t}");
+        }
+    }
+
+    #[test]
+    fn axpy_f64_paths() {
+        let x = [1.0f64, 2.0, 3.0];
+        let mut y = [10.0f64, 20.0, 30.0];
+        axpy_f64(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+        // Quire axpy fuses the rounding: (1 + 2^-60·2^7)·… — use a case
+        // where two roundings differ from one. y + α·x with α·x exact:
+        // 1.0 + 2^-53 + 2^-53 under two roundings stays 1.0 twice; the
+        // fused add of (y=1.0, α=2.0, x=2^-53) gives the RNE of
+        // 1 + 2^-52 = 1 + 2^-52 exactly.
+        let mut q = QuireDotF64::new();
+        let mut y2 = [1.0f64];
+        q.axpy_f64(2.0, &[f64::powi(2.0, -53)], &mut y2);
+        assert_eq!(y2[0], 1.0 + f64::powi(2.0, -52));
+
+        let alpha = codec64::bp64_encode_lane(2.0);
+        let xb: Vec<u64> =
+            [3.0f64, -1.5, 0.0].iter().map(|&v| codec64::bp64_encode_lane(v)).collect();
+        let mut yb: Vec<u64> =
+            [1.0f64, 1.0, 7.0].iter().map(|&v| codec64::bp64_encode_lane(v)).collect();
+        let mut qd = QuireDot::new();
+        qd.axpy_bp64(alpha, &xb, &mut yb);
+        let back: Vec<f64> = yb.iter().map(|&w| codec64::bp64_decode_lane(w)).collect();
+        assert_eq!(back, vec![7.0, -2.0, 7.0]);
     }
 
     #[test]

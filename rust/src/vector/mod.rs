@@ -1,30 +1,64 @@
 //! Vector layer: the serving hot path's data plane.
 //!
-//! Four parts:
+//! Five parts:
 //! - [`codec`] — branch-free, chunked (8-lane) batched encode/decode for
 //!   b-posit⟨32,6,5⟩, posit⟨32,2⟩, any ⟨n≤32,rs,es⟩ spec, and f32⇄bits,
 //!   with in-place variants for zero-allocation buffer reuse. This is the
 //!   software mirror of the paper's bounded-regime ⇒ fixed-mux insight.
-//! - [`kernels`] — batched `dot`, `axpy`, and `gemv` with 800-bit
-//!   [`crate::formats::Quire`]-exact accumulation plus rounded f32 fast
-//!   paths, and `par_gemv_*` row-sharded variants.
-//! - [`gemm`] — register/L1-blocked GEMM (f32 fast path, quire-exact
-//!   path, quantized-weight serving path), serial and row-sharded; the
-//!   quantized-matmul workload at tensor scale.
+//! - [`codec64`] — the 64-bit rung of the same lane structure: any
+//!   ⟨n≤64,rs,es⟩ spec over `&[f64]`/`&[u64]` streams with u128
+//!   intermediates, plus `bp64_*`/`p64_*` named fast paths — the paper's
+//!   "greater advantages at 64-bit" scalability claim, in software.
+//! - [`kernels`] — batched `dot`, `axpy`, and `gemv` over f32 *and* f64
+//!   with quire-exact accumulation ([`crate::formats::Quire`]: the
+//!   800-bit posit quire, plus an f64-range exact sizing) and rounded
+//!   fast paths, and `par_gemv_*` row-sharded variants.
+//! - [`gemm`] — register/L1-blocked GEMM (fast, quire-exact, and
+//!   quantized-weight paths at both widths on the same MR×NR
+//!   microkernel), serial and row-sharded.
 //! - [`parallel`] — zero-dependency scoped fork-join sharding over
 //!   `std::thread` workers (`PALLAS_THREADS`, auto default), used by the
-//!   batched codec, gemv, and GEMM. Shards are contiguous row/element
+//!   batched codecs, gemv, and GEMM. Shards are contiguous row/element
 //!   blocks, so every `par_*` result is bit-identical to serial for any
 //!   thread count.
 //!
 //! The coordinator's quantizer routes every batch through the sharded
-//! codec; `positron vector-bench` / `gemm-bench` and the `vector_codec` /
-//! `vector_gemm` bench targets measure throughput and emit
-//! `BENCH_vector_codec.json` / `BENCH_vector_gemm.json`.
+//! codecs; `positron vector-bench` (32- and 64-bit modes) / `gemm-bench`
+//! and the `vector_codec` / `vector_codec64` / `vector_gemm` bench
+//! targets measure throughput and emit `BENCH_vector_codec.json` /
+//! `BENCH_vector_codec64.json` / `BENCH_vector_gemm.json`.
 
 pub mod codec;
+pub mod codec64;
 pub mod gemm;
 pub mod kernels;
 pub mod parallel;
 
 pub use codec::LANES;
+
+use crate::formats::posit::PositSpec;
+
+/// Which batched codec implementation serves a spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecRoute {
+    /// 32-bit lane codec ([`codec`]): n ≤ 32 over u32/f32 streams.
+    Lane32,
+    /// 64-bit lane codec ([`codec64`]): 32 < n ≤ 64 over u64/f64 streams.
+    Lane64,
+    /// General pattern-space codec in `formats::posit` (es = 0, n = 2, …).
+    General,
+}
+
+/// Route a spec to its batched codec tier: the narrowest lane codec that
+/// supports it, else the general codec. Narrow specs (n ≤ 32) are also
+/// valid for [`codec64`] — its generic path is a strict superset — but
+/// the 32-bit lanes are the faster stream type for them.
+pub fn route_spec(spec: &PositSpec) -> CodecRoute {
+    if codec::spec_supported(spec) {
+        CodecRoute::Lane32
+    } else if codec64::spec_supported(spec) {
+        CodecRoute::Lane64
+    } else {
+        CodecRoute::General
+    }
+}

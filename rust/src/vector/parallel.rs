@@ -17,6 +17,7 @@
 //! that encodes in microseconds would be pure overhead.
 
 use super::codec;
+use super::codec64;
 use crate::formats::posit::PositSpec;
 
 /// Hard cap on worker threads (sanity bound for absurd `PALLAS_THREADS`).
@@ -170,6 +171,65 @@ pub fn decode_slice_into_with(threads: usize, spec: &PositSpec, ws: &[u32], out:
     });
 }
 
+// ----------------------------------------------------------------------
+// Sharded 64-bit batch codec (b-posit64 serving format + any codec64
+// spec): same contiguous-block construction, so every entry point is
+// bit-identical to the serial codec64 path for any thread count.
+// ----------------------------------------------------------------------
+
+/// Sharded batched b-posit64 encode with an explicit shard count.
+pub fn bp64_encode_into_with(threads: usize, xs: &[f64], out: &mut [u64]) {
+    assert_eq!(xs.len(), out.len(), "encode64: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec64::bp64_encode_into(&xs[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched b-posit64 encode (auto thread count).
+pub fn bp64_encode_into(xs: &[f64], out: &mut [u64]) {
+    bp64_encode_into_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs, out);
+}
+
+/// Sharded batched b-posit64 decode with an explicit shard count.
+pub fn bp64_decode_into_with(threads: usize, ws: &[u64], out: &mut [f64]) {
+    assert_eq!(ws.len(), out.len(), "decode64: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec64::bp64_decode_into(&ws[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched b-posit64 decode (auto thread count).
+pub fn bp64_decode_into(ws: &[u64], out: &mut [f64]) {
+    bp64_decode_into_with(auto_shards(ws.len(), CODEC_MIN_SHARD), ws, out);
+}
+
+/// Sharded fused b-posit64 quantize+dequantize in place with an explicit
+/// shard count.
+pub fn bp64_roundtrip_in_place_with(threads: usize, xs: &mut [f64]) {
+    for_each_block(threads, xs, |_, block| codec64::bp64_roundtrip_in_place(block));
+}
+
+/// Sharded fused b-posit64 roundtrip in place (auto thread count).
+pub fn bp64_roundtrip_in_place(xs: &mut [f64]) {
+    bp64_roundtrip_in_place_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs);
+}
+
+/// Sharded batched encode under any 64-bit-lane-supported spec.
+pub fn encode64_slice_into_with(threads: usize, spec: &PositSpec, xs: &[f64], out: &mut [u64]) {
+    assert_eq!(xs.len(), out.len(), "encode64: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec64::encode_slice_into(spec, &xs[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched decode under any 64-bit-lane-supported spec.
+pub fn decode64_slice_into_with(threads: usize, spec: &PositSpec, ws: &[u64], out: &mut [f64]) {
+    assert_eq!(ws.len(), out.len(), "decode64: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        codec64::decode_slice_into(spec, &ws[off..off + block.len()], block);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +301,57 @@ mod tests {
                 serial_f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 "roundtrip t={t}"
             );
+        }
+    }
+
+    #[test]
+    fn sharded_codec64_bit_identical_to_serial() {
+        let mut rng = crate::testutil::Rng::new(0x7a64);
+        let xs: Vec<f64> = (0..4097)
+            .map(|_| {
+                let v = f64::from_bits(rng.next_u64());
+                if v.is_finite() {
+                    v
+                } else {
+                    2.5
+                }
+            })
+            .collect();
+        let mut serial_w = vec![0u64; xs.len()];
+        codec64::bp64_encode_into(&xs, &mut serial_w);
+        let mut serial_f = vec![0f64; xs.len()];
+        codec64::bp64_decode_into(&serial_w, &mut serial_f);
+        for t in [1usize, 2, 7] {
+            let mut w = vec![0u64; xs.len()];
+            bp64_encode_into_with(t, &xs, &mut w);
+            assert_eq!(w, serial_w, "encode t={t}");
+            let mut f = vec![0f64; xs.len()];
+            bp64_decode_into_with(t, &w, &mut f);
+            assert_eq!(
+                f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "decode t={t}"
+            );
+            let mut rt = xs.clone();
+            bp64_roundtrip_in_place_with(t, &mut rt);
+            assert_eq!(
+                rt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "roundtrip t={t}"
+            );
+            // Generic 64-bit spec entry points route through codec64.
+            let mut wg = vec![0u64; xs.len()];
+            encode64_slice_into_with(t, &crate::formats::posit::P64, &xs, &mut wg);
+            let mut fg = vec![0f64; xs.len()];
+            decode64_slice_into_with(t, &crate::formats::posit::P64, &wg, &mut fg);
+            for (i, &w1) in wg.iter().enumerate() {
+                assert_eq!(w1, codec64::p64_encode_lane(xs[i]), "p64 encode lane {i} t={t}");
+                assert_eq!(
+                    fg[i].to_bits(),
+                    codec64::p64_decode_lane(w1).to_bits(),
+                    "p64 decode lane {i} t={t}"
+                );
+            }
         }
     }
 

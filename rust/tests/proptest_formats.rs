@@ -174,6 +174,139 @@ fn prop_encode_nearest_no_value_closer() {
     });
 }
 
+// ----------------------------------------------------------------------
+// Format-generic lane-codec properties (ISSUE-3 satellite), parameterized
+// over the named serving formats at every width. All five run through the
+// 64-bit generic lane path (`vector::codec64`), whose n ≤ 32 behavior is
+// separately pinned to the 32-bit lanes — so one property covers the
+// whole family.
+// ----------------------------------------------------------------------
+
+use positron::vector::codec64;
+
+const NAMED_SPECS: [PositSpec; 5] = [
+    positron::formats::posit::BP16,
+    positron::formats::posit::BP32,
+    positron::formats::posit::P32,
+    positron::formats::posit::BP64,
+    positron::formats::posit::P64,
+];
+
+#[test]
+fn prop_named_roundtrip_error_within_half_ulp() {
+    // |decode(encode(x)) − x| ≤ ½ ulp of the *decoded* spec value, where
+    // ulp(w) = 2^(T − frac_bits_at(T)). Restricted to the interior of the
+    // format's range (no saturation) — and when the format out-resolves
+    // f64 (frac_bits > 52) the f64 input is exactly representable, so the
+    // error is 0 by construction.
+    forall("named-spec half-ulp roundtrip", 300, |rng| {
+        for spec in NAMED_SPECS {
+            for _ in 0..40 {
+                let x = rng.nasty_f64();
+                if !x.is_finite() || x == 0.0 || x.abs() < f64::MIN_POSITIVE {
+                    continue;
+                }
+                let t = x.abs().log2().floor() as i32;
+                // Interior only: one full regime step away from the ends.
+                let step = 1 << spec.es;
+                if t <= spec.min_exp() + step || t >= spec.max_exp() - step {
+                    continue;
+                }
+                let w = codec64::encode_word(&spec, x);
+                let d = spec.decode(w);
+                let fb = spec.frac_bits_at(d.exp) as i32;
+                if fb == 0 {
+                    continue; // exponent-field cut: pattern-space ≠ value-space
+                }
+                let y = codec64::decode_word(&spec, w);
+                let half_ulp = f64::powi(2.0, d.exp - fb - 1);
+                let err = (y - x).abs();
+                if err > half_ulp * (1.0 + 1e-12) {
+                    return Err(format!(
+                        "{spec:?}: {x:e} → {w:#x} → {y:e}, err {err:e} > ½ulp {half_ulp:e}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_named_sign_symmetry() {
+    // encode(−x) is the two's complement of encode(x); decode of the
+    // two's complement is −decode (posits have one unsigned zero and one
+    // NaR, both fixed points of negation).
+    forall("named-spec sign symmetry", 300, |rng| {
+        for spec in NAMED_SPECS {
+            let x = rng.nasty_f64();
+            if !x.is_nan() {
+                let pos = codec64::encode_word(&spec, x);
+                let neg = codec64::encode_word(&spec, -x);
+                if neg != pos.wrapping_neg() & spec.mask() && pos != spec.nar() {
+                    return Err(format!("{spec:?}: encode(−{x:e}) ≠ ⁻encode({x:e})"));
+                }
+            }
+            let w = rng.next_u64() & spec.mask();
+            if w != 0 && w != spec.nar() {
+                let a = codec64::decode_word(&spec, w);
+                let b = codec64::decode_word(&spec, w.wrapping_neg() & spec.mask());
+                if a.is_nan() != b.is_nan() {
+                    return Err(format!("{spec:?}: NaN asymmetry at {w:#x}"));
+                }
+                if !a.is_nan() && b.to_bits() != (-a).to_bits() {
+                    return Err(format!("{spec:?}: decode(⁻{w:#x}) = {b:e} ≠ −{a:e}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_named_nar_uniqueness() {
+    // Exactly one pattern decodes to NaR; encode produces it only for
+    // NaN/Inf inputs.
+    forall("named-spec NaR uniqueness", 300, |rng| {
+        for spec in NAMED_SPECS {
+            let w = rng.next_u64() & spec.mask();
+            let is_nan = codec64::decode_word(&spec, w).is_nan();
+            if is_nan != (w == spec.nar()) {
+                return Err(format!("{spec:?}: NaR/NaN mismatch at {w:#x}"));
+            }
+            let x = rng.nasty_f64();
+            let enc = codec64::encode_word(&spec, x);
+            if x.is_finite() && enc == spec.nar() {
+                return Err(format!("{spec:?}: finite {x:e} encoded to NaR"));
+            }
+            if !x.is_finite() && enc != spec.nar() {
+                return Err(format!("{spec:?}: non-finite {x:e} missed NaR"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_named_order_preserved_under_twos_complement_compare() {
+    forall("named-spec ordering", 300, |rng| {
+        for spec in NAMED_SPECS {
+            let a = rng.next_u64() & spec.mask();
+            let b = rng.next_u64() & spec.mask();
+            if a == spec.nar() || b == spec.nar() {
+                continue;
+            }
+            let (va, vb) = (codec64::decode_word(&spec, a), codec64::decode_word(&spec, b));
+            // Compare only when the f64 images differ (64-bit formats can
+            // collapse neighbours onto one f64).
+            if va != vb && va.partial_cmp(&vb).unwrap() != spec.cmp_bits(a, b) {
+                return Err(format!("{spec:?}: order mismatch {a:#x} vs {b:#x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_math_add_associates_with_exact_operands() {
     // With small-integer operands everything is exact, so association holds.

@@ -1,0 +1,424 @@
+//! 64-bit lane-codec and f64-kernel parity (the ISSUE-3 test satellite):
+//! - BP64/P64 decode∘encode idempotence (and exactness where the format
+//!   out-resolves f64);
+//! - encode monotonicity over sorted f64 grids (posit order = two's-
+//!   complement integer order);
+//! - bit-exact agreement between the `codec64` generic path and the
+//!   named BP64/P64 fast paths, lane and slice;
+//! - quire-exact f64 dot/gemv/GEMM vs a Kahan-f64 estimate, an i128
+//!   exact-integer reference, and an independent naive-quire reference
+//!   built straight on `formats::Quire`, on random mixed-scale and
+//!   cancellation-adversarial inputs;
+//! - thread bit-identity t ∈ {1, 2, 7} for the sharded codec and every
+//!   par_* f64 kernel.
+//!
+//! The deeper cross-language evidence (exhaustive 16-bit, stratified
+//! 2^20 BP64/P64 vs the Python big-int oracle) lives in
+//! python/tests/test_scalar_oracle64.py; these tests pin the Rust port
+//! to the same behavior in-tree.
+
+use positron::coordinator::quantizer;
+use positron::formats::posit::{PositSpec, BP64, P64};
+use positron::formats::{Decoded, Quire};
+use positron::testutil::{mixed_scale_f64, Rng};
+use positron::vector::{codec64, gemm, kernels, parallel};
+
+fn assert_bits_eq64(got: f64, want: f64, ctx: &str) {
+    if want.is_nan() {
+        assert!(got.is_nan(), "{ctx}: got {got}, want NaN");
+    } else {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "{ctx}: got {got:e} ({:#018x}), want {want:e} ({:#018x})",
+            got.to_bits(),
+            want.to_bits()
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// Codec properties
+// ----------------------------------------------------------------------
+
+#[test]
+fn decode_encode_idempotent_bp64_p64() {
+    // decode∘encode projects f64 onto the format's value set; applying it
+    // twice must be a fixed point bitwise. (Plain word-level roundtrip
+    // does NOT hold for n = 64: P64's fovea out-resolves f64, so decode
+    // loses bits by design — idempotence is the right invariant.)
+    let mut rng = Rng::new(0x1de64);
+    for spec in [BP64, P64] {
+        for _ in 0..200_000 {
+            let x = f64::from_bits(rng.next_u64());
+            if x.is_nan() {
+                continue;
+            }
+            let w = codec64::encode_word(&spec, x);
+            let y = codec64::decode_word(&spec, w);
+            let w2 = codec64::encode_word(&spec, y);
+            let y2 = codec64::decode_word(&spec, w2);
+            assert_bits_eq64(y2, y, &format!("{spec:?} idempotence at {x:e}"));
+        }
+        // Words whose value is f64-exact roundtrip at the word level too:
+        // mask the fraction down to ≤ 52 significant bits.
+        for _ in 0..100_000 {
+            let w = rng.next_u64() & !0xff; // clear low bits: frac ≤ 52 sig bits
+            let y = codec64::decode_word(&spec, w);
+            if y.is_nan() || y == 0.0 {
+                continue;
+            }
+            assert_eq!(
+                codec64::encode_word(&spec, y),
+                w,
+                "{spec:?}: f64-exact word {w:#x} must roundtrip"
+            );
+        }
+    }
+}
+
+#[test]
+fn bp64_exact_on_in_range_f64() {
+    // ⟨64,6,5⟩ keeps ≥ 52 fraction bits at every scale: the whole
+    // in-range f64 grid is representable, so encode is lossless.
+    let mut rng = Rng::new(0xb64);
+    let mut checked = 0;
+    for _ in 0..300_000 {
+        let x = f64::from_bits(rng.next_u64());
+        if !x.is_finite() || x == 0.0 {
+            continue;
+        }
+        if !(f64::powi(2.0, -192)..f64::powi(2.0, 191)).contains(&x.abs()) {
+            continue;
+        }
+        let y = codec64::bp64_decode_lane(codec64::bp64_encode_lane(x));
+        assert_eq!(y.to_bits(), x.to_bits(), "{x:e}");
+        checked += 1;
+    }
+    // ~19% of random f64 bit patterns fall in the 2^±192 range.
+    assert!(checked > 40_000, "only {checked} in-range samples");
+}
+
+#[test]
+fn encode_monotone_over_sorted_f64_grids() {
+    // Posit patterns read as signed integers are ordered by value, so
+    // encode must be monotone over any sorted f64 grid (FTZ'd subnormals
+    // collapse onto 0, saturated tails onto ±maxpos — still monotone).
+    let mut rng = Rng::new(0x5047);
+    for spec in [BP64, P64] {
+        let mut xs: Vec<f64> = (0..60_000)
+            .map(|_| f64::from_bits(rng.next_u64()))
+            .filter(|x| !x.is_nan())
+            .collect();
+        xs.extend([0.0, -0.0, f64::MAX, f64::MIN, f64::MIN_POSITIVE, -f64::MIN_POSITIVE]);
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = i64::MIN;
+        for &x in &xs {
+            if x.is_infinite() {
+                continue; // Inf maps to NaR, outside the order
+            }
+            let w = codec64::encode_word(&spec, x) as i64; // n = 64: sext = id
+            assert!(
+                w >= prev,
+                "{spec:?}: encode not monotone at {x:e} ({w:#x} after {prev:#x})"
+            );
+            prev = w;
+        }
+    }
+}
+
+#[test]
+fn generic_path_bit_identical_to_named_fast_paths() {
+    let mut rng = Rng::new(0x64fa57);
+    let mut xs = Vec::with_capacity(1 << 14);
+    let mut ws = Vec::with_capacity(1 << 14);
+    for _ in 0..(1 << 14) {
+        let w = rng.next_u64();
+        ws.push(w);
+        xs.push(f64::from_bits(w));
+    }
+    for (&w, &x) in ws.iter().zip(&xs) {
+        assert_eq!(codec64::encode_word(&BP64, x), codec64::bp64_encode_lane(x));
+        assert_eq!(codec64::encode_word(&P64, x), codec64::p64_encode_lane(x));
+        assert_bits_eq64(
+            codec64::decode_word(&BP64, w),
+            codec64::bp64_decode_lane(w),
+            "bp64 decode",
+        );
+        assert_bits_eq64(codec64::decode_word(&P64, w), codec64::p64_decode_lane(w), "p64 decode");
+    }
+    // Slice drivers lane-for-lane (generic vs named).
+    let clean: Vec<f64> = xs.iter().map(|&v| if v.is_nan() { 1.0 } else { v }).collect();
+    let mut a = vec![0u64; clean.len()];
+    let mut b = vec![0u64; clean.len()];
+    codec64::bp64_encode_into(&clean, &mut a);
+    codec64::encode_slice_into(&BP64, &clean, &mut b);
+    assert_eq!(a, b);
+    let mut fa = vec![0f64; ws.len()];
+    let mut fb = vec![0f64; ws.len()];
+    codec64::bp64_decode_into(&ws, &mut fa);
+    codec64::decode_slice_into(&BP64, &ws, &mut fb);
+    for i in 0..ws.len() {
+        assert_bits_eq64(fb[i], fa[i], &format!("slice lane {i}"));
+    }
+}
+
+#[test]
+fn quantizer_bp64_matches_lane_and_general() {
+    let mut rng = Rng::new(0xba64);
+    for _ in 0..50_000 {
+        let x = f64::from_bits(rng.next_u64());
+        let lane = quantizer::quantize64_one(x);
+        assert_eq!(lane, quantizer::quantize64_one_general(x), "encode {x:e}");
+        let w = rng.next_u64() as i64;
+        let a = quantizer::dequantize64_one(w);
+        let b = quantizer::dequantize64_one_general(w);
+        assert_bits_eq64(a, b, &format!("decode {w:#x}"));
+    }
+}
+
+// ----------------------------------------------------------------------
+// Quire-f64 kernels vs independent references
+// ----------------------------------------------------------------------
+
+/// Kahan-compensated f64 dot (approximate: f64 products round, unlike the
+/// quire) — a sanity envelope, not a bit oracle.
+fn kahan_dot64(a: &[f64], b: &[f64]) -> f64 {
+    let mut sum = 0.0f64;
+    let mut c = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let term = x * y - c;
+        let t = sum + term;
+        c = (t - sum) - term;
+        sum = t;
+    }
+    sum
+}
+
+/// Independent naive-quire dot built straight on `formats::Quire` — the
+/// bit-level oracle for the f64 kernel family.
+fn naive_quire_dot64(a: &[f64], b: &[f64]) -> f64 {
+    let mut q = Quire::exact_f64();
+    for (&x, &y) in a.iter().zip(b) {
+        q.add_product(&Decoded::from_f64(x), &Decoded::from_f64(y));
+    }
+    q.to_decoded().to_f64()
+}
+
+/// Cancellation-adversarial vectors: (big, tiny, −big) triples so plain
+/// f64 accumulation loses every tiny term.
+fn adversarial64(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut a = Vec::with_capacity(3 * n);
+    let mut b = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        let big = f64::powi(2.0, 500 + (i % 7) as i32);
+        let tiny = f64::powi(2.0, -400 - (i % 11) as i32) * (1.0 + rng.f64());
+        a.push(big);
+        b.push(big);
+        a.push(tiny);
+        b.push(1.0);
+        a.push(big);
+        b.push(-big);
+    }
+    (a, b)
+}
+
+#[test]
+fn quire_dot_f64_matches_naive_quire_and_i128_exact() {
+    // Exact-integer data: Σ aᵢ·bᵢ fits in i128, giving a third,
+    // arithmetic-free reference.
+    let mut rng = Rng::new(0x1289);
+    let mut q = kernels::QuireDotF64::new();
+    for trial in 0..50 {
+        let n = 16 + (trial * 37) % 500;
+        let a: Vec<f64> = (0..n).map(|_| (rng.below(1 << 26) as i64 - (1 << 25)) as f64).collect();
+        let b: Vec<f64> = (0..n).map(|_| (rng.below(1 << 26) as i64 - (1 << 25)) as f64).collect();
+        let exact_i128: i128 =
+            a.iter().zip(&b).map(|(&x, &y)| (x as i128) * (y as i128)).sum();
+        let got = q.dot_f64(&a, &b);
+        assert_eq!(got, exact_i128 as f64, "trial {trial} vs i128");
+        assert_eq!(got.to_bits(), naive_quire_dot64(&a, &b).to_bits(), "trial {trial} vs naive");
+    }
+}
+
+#[test]
+fn quire_dot_f64_random_and_adversarial_vs_references() {
+    let mut rng = Rng::new(0xd064);
+    let mut q = kernels::QuireDotF64::new();
+    // Random mixed-scale: bit-identical to the naive quire, within Kahan's
+    // error envelope of the compensated estimate.
+    for trial in 0..20 {
+        let n = 64 + (trial * 97) % 800;
+        let a = mixed_scale_f64(&mut rng, n, 81);
+        let b = mixed_scale_f64(&mut rng, n, 81);
+        let exact = q.dot_f64(&a, &b);
+        assert_eq!(exact.to_bits(), naive_quire_dot64(&a, &b).to_bits(), "trial {trial}");
+        let kahan = kahan_dot64(&a, &b);
+        let sum_abs: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y).abs()).sum();
+        let tol = 1e-9 * sum_abs.max(1.0);
+        assert!(
+            (exact - kahan).abs() <= tol,
+            "trial {trial}: quire {exact:e} vs kahan {kahan:e} (tol {tol:e})"
+        );
+    }
+    // Adversarial: the fast f64 path provably loses the tiny terms; the
+    // quire and the naive reference agree bitwise and keep them.
+    let (a, b) = adversarial64(40, 0xadf);
+    let exact = q.dot_f64(&a, &b);
+    assert_eq!(exact.to_bits(), naive_quire_dot64(&a, &b).to_bits());
+    let tiny_sum: f64 = a
+        .iter()
+        .zip(&b)
+        .filter(|(&x, _)| x.abs() < 1.0)
+        .map(|(&x, &y)| x * y)
+        .sum();
+    assert!(exact != 0.0 && (exact - tiny_sum).abs() <= 1e-12 * tiny_sum.abs());
+    // The fast path absorbs the 2^-400-scale terms into 2^1000-scale
+    // accumulators, so it cannot reproduce the exact result.
+    assert_ne!(kernels::dot_f64(&a, &b), exact, "fast path must lose the tiny terms");
+}
+
+#[test]
+fn quire_gemv_gemm_f64_match_naive_reference_for_all_thread_counts() {
+    let mut rng = Rng::new(0x6e64);
+    let (m, k, n) = (11, 57, 9);
+    for adversarial in [false, true] {
+        let (a, b) = if adversarial {
+            let (mut av, mut bv) = (Vec::new(), Vec::new());
+            let (ra, rb) = adversarial64(m * k / 3 + 1, 0x6e3);
+            av.extend_from_slice(&ra[..m * k]);
+            bv.extend_from_slice(&rb[..k * n.min(ra.len() / k)]);
+            bv.resize(k * n, 1.0);
+            (av, bv)
+        } else {
+            (mixed_scale_f64(&mut rng, m * k, 61), mixed_scale_f64(&mut rng, k * n, 61))
+        };
+        // Naive per-element quire reference (no vector:: code).
+        let mut c_ref = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let col: Vec<f64> = (0..k).map(|p| b[p * n + j]).collect();
+                c_ref[i * n + j] = naive_quire_dot64(&a[i * k..(i + 1) * k], &col);
+            }
+        }
+        let mut c = vec![0f64; m * n];
+        gemm::gemm_quire_f64(&a, &b, &mut c, m, k, n);
+        assert_eq!(
+            c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "serial quire GEMM (adversarial={adversarial})"
+        );
+        let x = &b[..k];
+        let mut y_ref = vec![0f64; m];
+        for i in 0..m {
+            y_ref[i] = naive_quire_dot64(&a[i * k..(i + 1) * k], x);
+        }
+        let mut q = kernels::QuireDotF64::new();
+        let mut y = vec![0f64; m];
+        q.gemv_f64(&a, x, &mut y);
+        assert_eq!(
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "serial quire gemv (adversarial={adversarial})"
+        );
+        for t in [1usize, 2, 7] {
+            let mut ct = vec![0f64; m * n];
+            gemm::par_gemm_quire_f64_with(t, &a, &b, &mut ct, m, k, n);
+            assert_eq!(
+                ct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                c_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "gemm t={t} (adversarial={adversarial})"
+            );
+            let mut yt = vec![0f64; m];
+            kernels::par_gemv_quire_f64_with(t, &a, x, &mut yt);
+            assert_eq!(
+                yt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y_ref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "gemv t={t} (adversarial={adversarial})"
+            );
+        }
+    }
+}
+
+#[test]
+fn thread_bit_identity_codec64_and_f64_kernels() {
+    let mut rng = Rng::new(0xc64ec);
+    let xs: Vec<f64> = (0..10_007)
+        .map(|_| {
+            let v = f64::from_bits(rng.next_u64());
+            if v.is_finite() {
+                v
+            } else {
+                -3.25
+            }
+        })
+        .collect();
+    let mut w_serial = vec![0u64; xs.len()];
+    codec64::bp64_encode_into(&xs, &mut w_serial);
+    let mut f_serial = vec![0f64; xs.len()];
+    codec64::bp64_decode_into(&w_serial, &mut f_serial);
+    let (m, k) = (29usize, 65usize);
+    let a = &xs[..m * k];
+    let x = &xs[m * k..m * k + k];
+    let w_bits = &w_serial[..m * k];
+    let mut y_fast = vec![0f64; m];
+    kernels::gemv_f64(a, x, &mut y_fast);
+    let mut q = kernels::QuireDotF64::new();
+    let mut y_w = vec![0f64; m];
+    q.gemv_bp64_weights(w_bits, x, &mut y_w);
+    for t in [1usize, 2, 7] {
+        let mut w = vec![0u64; xs.len()];
+        parallel::bp64_encode_into_with(t, &xs, &mut w);
+        assert_eq!(w, w_serial, "encode t={t}");
+        let mut f = vec![0f64; xs.len()];
+        parallel::bp64_decode_into_with(t, &w_serial, &mut f);
+        for i in 0..f.len() {
+            assert_bits_eq64(f[i], f_serial[i], &format!("decode t={t} lane {i}"));
+        }
+        let mut rt = xs.clone();
+        parallel::bp64_roundtrip_in_place_with(t, &mut rt);
+        for i in 0..rt.len() {
+            assert_bits_eq64(rt[i], f_serial[i], &format!("roundtrip t={t} lane {i}"));
+        }
+        let mut y = vec![0f64; m];
+        kernels::par_gemv_f64_with(t, a, x, &mut y);
+        assert_eq!(
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_fast.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "gemv f64 t={t}"
+        );
+        kernels::par_gemv_bp64_weights_with(t, w_bits, x, &mut y);
+        assert_eq!(
+            y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "gemv bp64 t={t}"
+        );
+    }
+}
+
+// A generic-width smoke: the codec64 generic path serves odd widths the
+// 32-bit lanes reject (routing coverage beyond the named formats).
+#[test]
+fn odd_width_specs_roundtrip_through_codec64() {
+    let mut rng = Rng::new(0x0dd);
+    for spec in [
+        PositSpec::bounded(48, 6, 5),
+        PositSpec::bounded(40, 8, 3),
+        PositSpec::standard(64, 4),
+        PositSpec::bounded(33, 6, 5),
+    ] {
+        assert!(codec64::spec_supported(&spec));
+        for _ in 0..20_000 {
+            let x = f64::from_bits(rng.next_u64());
+            if x.is_nan() {
+                continue;
+            }
+            let w = codec64::encode_word(&spec, x);
+            let y = codec64::decode_word(&spec, w);
+            let w2 = codec64::encode_word(&spec, y);
+            let y2 = codec64::decode_word(&spec, w2);
+            assert_bits_eq64(y2, y, &format!("{spec:?} idempotence at {x:e}"));
+        }
+    }
+}
