@@ -1,38 +1,45 @@
 //! End-to-end driver: the full three-layer stack on a real workload.
 //!
-//! Loads the AOT-compiled b-posit-quantized MLP (trained at build time on
-//! the synthetic 16-class task), serves batched requests through the L3
-//! coordinator with concurrent clients, and reports accuracy vs the f32
-//! reference plus latency/throughput — the serving-paper-style validation
-//! required by DESIGN.md.
+//! Loads the MLP trained at build time on the synthetic 16-class task
+//! (`weights.json`), serves batched requests through the L3 coordinator
+//! with concurrent clients on the **native** blocked-GEMM backend (f32
+//! baseline vs b-posit32-quantized weights), and — when this build
+//! carries the `runtime` feature — the PJRT backend over the compiled
+//! HLO artifact for comparison. Reports accuracy plus
+//! latency/throughput — the serving-paper-style validation required by
+//! DESIGN.md.
 //!
 //! Run: `make artifacts && cargo run --release --example inference_server`
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use positron::coordinator::{InferenceServer, ServerConfig};
-use positron::runtime::{artifacts_available, default_artifact_dir, ModelWeights, Runtime};
+use positron::coordinator::{BackendKind, InferenceServer, ServerConfig, WeightFormat};
+use positron::runtime::{
+    artifacts_available, default_artifact_dir, runtime_enabled, weights_available, ModelWeights,
+};
 
 fn main() -> positron::error::Result<()> {
     let dir = default_artifact_dir();
-    if !artifacts_available(&dir) {
-        eprintln!("artifacts missing in {} — run `make artifacts` first", dir.display());
+    if !weights_available(&dir) {
+        eprintln!("weights.json missing in {} — run `make artifacts` first", dir.display());
         std::process::exit(1);
     }
 
-    // Load golden data through a throwaway runtime (the server builds its own).
-    let weights = {
-        let rt = Runtime::cpu(&dir)?;
-        ModelWeights::load(&rt)?
-    };
+    let weights = ModelWeights::load_from_dir(&dir)?;
     let d = weights.d;
     let n_gold = weights.golden_y.len();
 
-    let variants =
-        [("f32 reference", "model_f32.hlo.txt"), ("b-posit quantized", "model_bposit.hlo.txt")];
-    for (label, model_file) in variants {
-        let cfg = ServerConfig { model_file: model_file.into(), ..Default::default() };
+    let mut variants = vec![
+        ("native f32 baseline", BackendKind::Native, WeightFormat::F32),
+        ("native b-posit quantized", BackendKind::Native, WeightFormat::Bp32),
+        ("native b-posit64 tier", BackendKind::Native, WeightFormat::Bp64),
+    ];
+    if runtime_enabled() && artifacts_available(&dir) {
+        variants.push(("pjrt b-posit quantized", BackendKind::Pjrt, WeightFormat::Bp32));
+    }
+    for (label, backend, format) in variants {
+        let cfg = ServerConfig { backend, ..ServerConfig::for_format(format) };
         let server = Arc::new(InferenceServer::start(dir.clone(), cfg)?);
 
         // 4 concurrent clients × 512 requests each.
@@ -81,7 +88,7 @@ fn main() -> positron::error::Result<()> {
         }
         let wall = t0.elapsed();
         let m = server.metrics().snapshot();
-        println!("== {label} ({model_file}) ==");
+        println!("== {label} ({} backend, {} weights) ==", backend.name(), format.name());
         println!(
             "  {done} requests in {:.2}s → {:.0} req/s, accuracy {:.1}%",
             wall.as_secs_f64(),

@@ -1,0 +1,130 @@
+"""Mirror of the Rust native serving backend's forward pass
+(rust/src/coordinator/backend.rs) against the scalar reference
+(`reference_forward`), pure stdlib.
+
+The native backend runs the two-layer MLP in a *transposed* layout so the
+quantized-weight GEMM can keep weights as the A matrix:
+
+    Xᵀ (d×rows)   staged per batch
+    H  (h×rows) = W1ᵀ (h×d) · Xᵀ      then per-row bias + ReLU
+    L  (c×rows) = W2ᵀ (c×h) · H       then per-row bias
+    out[j][q]   = L[q][j]             readout back to request-major
+
+The scalar reference computes each request independently:
+
+    hid[i] = relu(Σ_p w1[p·h+i]·x[p] + b1[i])   (ascending p)
+    out[q] = Σ_i w2[i·c+q]·hid[i] + b2[q]       (ascending i)
+
+Both are implemented here with the *exact* index formulas of the Rust
+code and compared for exact float equality: every output element is the
+same ascending-index accumulation chain in both formulations (the Rust
+blocked GEMM is bitwise-identical to the naive triple loop — proven by
+rust/tests/vector_gemm.rs — so naive GEMM is the faithful mirror), and
+Python floats make any index slip or reassociation show up as a hard
+inequality.
+
+ReLU is mirrored as `v if v > 0.0 else 0.0` — the explicit select the
+Rust side uses (not `max`, whose −0.0 behavior is platform-defined).
+"""
+
+import random
+import unittest
+
+
+def reference_forward(w1, b1, w2, b2, x, d, h, c):
+    """Per-request scalar forward (mirrors backend.rs::reference_forward)."""
+    hid = []
+    for i in range(h):
+        acc = 0.0
+        for p in range(d):
+            acc += w1[p * h + i] * x[p]
+        v = acc + b1[i]
+        hid.append(v if v > 0.0 else 0.0)
+    out = []
+    for q in range(c):
+        acc = 0.0
+        for i in range(h):
+            acc += w2[i * c + q] * hid[i]
+        out.append(acc + b2[q])
+    return out
+
+
+def transpose(src, rows, cols):
+    """dst (cols×rows) ← src (rows×cols), mirrors vector::gemm::transpose."""
+    dst = [0.0] * (rows * cols)
+    for i in range(rows):
+        for j in range(cols):
+            dst[j * rows + i] = src[i * cols + j]
+    return dst
+
+
+def naive_gemm(a, b, m, k, n):
+    """C (m×n) = A (m×k) · B (k×n), one ascending-p chain per element —
+    the accumulation order the Rust blocked GEMM provably reproduces."""
+    cm = [0.0] * (m * n)
+    for i in range(m):
+        for j in range(n):
+            acc = 0.0
+            for p in range(k):
+                acc += a[i * k + p] * b[p * n + j]
+            cm[i * n + j] = acc
+    return cm
+
+
+def native_forward(w1, b1, w2, b2, xs, rows, d, h, c):
+    """Batch forward in the transposed layout (mirrors NativeBackend::run)."""
+    wt1 = transpose(w1, d, h)  # h×d
+    wt2 = transpose(w2, h, c)  # c×h
+    xt = transpose(xs, rows, d)  # d×rows
+    ht = naive_gemm(wt1, xt, h, d, rows)
+    for i in range(h):  # bias_relu_rows
+        for j in range(rows):
+            v = ht[i * rows + j] + b1[i]
+            ht[i * rows + j] = v if v > 0.0 else 0.0
+    lt = naive_gemm(wt2, ht, c, h, rows)
+    for q in range(c):  # bias_rows
+        for j in range(rows):
+            lt[q * rows + j] += b2[q]
+    out = [0.0] * (rows * c)
+    for q in range(c):  # readout transpose
+        for j in range(rows):
+            out[j * c + q] = lt[q * rows + j]
+    return out
+
+
+class NativeForwardMirror(unittest.TestCase):
+    def test_transposed_batch_equals_per_request_reference_exactly(self):
+        rng = random.Random(0x5E47)
+        for d, h, c, rows in [(1, 1, 1, 1), (5, 7, 3, 4), (8, 16, 4, 1), (16, 24, 8, 33)]:
+            w1 = [rng.uniform(-0.5, 0.5) for _ in range(d * h)]
+            b1 = [rng.uniform(-0.2, 0.2) for _ in range(h)]
+            w2 = [rng.uniform(-0.5, 0.5) for _ in range(h * c)]
+            b2 = [rng.uniform(-0.2, 0.2) for _ in range(c)]
+            xs = [rng.uniform(-2.0, 2.0) for _ in range(rows * d)]
+            got = native_forward(w1, b1, w2, b2, xs, rows, d, h, c)
+            for g in range(rows):
+                want = reference_forward(w1, b1, w2, b2, xs[g * d : (g + 1) * d], d, h, c)
+                self.assertEqual(
+                    got[g * c : (g + 1) * c],
+                    want,
+                    f"d={d} h={h} c={c} rows={rows} row {g}: exact mismatch",
+                )
+
+    def test_relu_select_handles_negative_zero_and_dead_units(self):
+        # A unit whose pre-activation is exactly 0.0 or negative must
+        # emit +0.0 through both formulations.
+        d, h, c, rows = 2, 2, 1, 2
+        w1 = [1.0, -1.0, -1.0, 1.0]
+        b1 = [0.0, -10.0]
+        w2 = [0.5, 0.25]
+        b2 = [0.125]
+        xs = [1.0, 1.0, 0.5, 0.5]  # x·w1 column 0 = 0 exactly
+        got = native_forward(w1, b1, w2, b2, xs, rows, d, h, c)
+        for g in range(rows):
+            want = reference_forward(w1, b1, w2, b2, xs[g * d : (g + 1) * d], d, h, c)
+            self.assertEqual(got[g * c : (g + 1) * c], want)
+            self.assertEqual(want, [0.125])  # both units dead → bias only
+
+
+if __name__ == "__main__":
+    unittest.main()

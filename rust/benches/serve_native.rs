@@ -1,0 +1,29 @@
+//! Bench target: end-to-end native serving (`positron serve-bench`) —
+//! logits-parity gate + HTTP round-trip + closed-loop throughput over
+//! the in-tree blocked-GEMM backend. No artifacts or libxla needed.
+//!
+//! Run: `cargo bench --bench serve_native`
+
+use positron::cli::{run_serve_bench, ServeBenchOpts};
+use positron::coordinator::WeightFormat;
+
+fn main() {
+    let opts = ServeBenchOpts {
+        requests: 4096,
+        clients: 4,
+        format: WeightFormat::Bp32,
+        small: false,
+        json: Some("BENCH_serve_native.json".to_string()),
+    };
+    match run_serve_bench(&opts) {
+        Ok(lines) => {
+            for line in lines {
+                println!("{line}");
+            }
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -9,7 +9,11 @@
 //!                               emitted as BENCH_vector_codec.json
 //! - `gemm-bench`              — serial vs sharded blocked GEMM (quire +
 //!                               f32 paths), emitted as BENCH_vector_gemm.json
-//! - `serve [--requests N]`    — run the batching inference demo (artifacts)
+//! - `serve`                   — run the inference server (native backend by
+//!                               default; `--http ADDR` exposes /metrics and
+//!                               /infer over a real listener)
+//! - `serve-bench`             — e2e native-serving benchmark with a logits
+//!                               parity gate, emitted as BENCH_serve_native.json
 //!
 //! Bench subcommands validate the output JSON path *before* running (a
 //! long bench that dies on the final write is wasted work) and report
@@ -17,9 +21,36 @@
 //! panics.
 
 use crate::accuracy;
+use crate::coordinator::backend::{BackendKind, WeightFormat};
 use crate::formats::{ieee, posit, takum, Codec, Decoded};
 use crate::hw::designs::{bposit_dec, bposit_enc, float_dec, float_enc, posit_dec, posit_enc};
 use crate::hw::report;
+
+/// `serve` options (native serving is the default everywhere).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub requests: usize,
+    pub artifact_dir: String,
+    pub backend: BackendKind,
+    pub format: WeightFormat,
+    /// Bind a real HTTP listener here (e.g. `127.0.0.1:8080`) and serve
+    /// until killed instead of running the self-driving demo loop.
+    pub http: Option<String>,
+    pub deadline_ms: Option<u64>,
+    /// Serve a deterministic synthetic model (no artifacts needed).
+    pub synthetic: bool,
+}
+
+/// `serve-bench` options.
+#[derive(Clone, Debug)]
+pub struct ServeBenchOpts {
+    pub requests: usize,
+    pub clients: usize,
+    pub format: WeightFormat,
+    /// Small model + few requests: the CI smoke configuration.
+    pub small: bool,
+    pub json: Option<String>,
+}
 
 /// Parsed command line.
 #[derive(Debug)]
@@ -30,7 +61,8 @@ pub enum Command {
     Tables,
     VectorBench { len: usize, bits: u32, json: Option<String> },
     GemmBench { sizes: Vec<usize>, quire_max: usize, json: Option<String> },
-    Serve { requests: usize, artifact_dir: String },
+    Serve(ServeOpts),
+    ServeBench(ServeBenchOpts),
     Help,
 }
 
@@ -127,21 +159,85 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
             Ok(Command::GemmBench { sizes, quire_max, json })
         }
         "serve" => {
-            let mut requests = 512;
-            let mut artifact_dir = crate::runtime::default_artifact_dir().display().to_string();
+            let mut o = ServeOpts {
+                requests: 512,
+                artifact_dir: crate::runtime::default_artifact_dir().display().to_string(),
+                backend: BackendKind::Native,
+                format: WeightFormat::Bp32,
+                http: None,
+                deadline_ms: None,
+                synthetic: false,
+            };
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--requests" => {
                         let arg = it.next().ok_or("--requests needs N")?;
-                        requests = arg.parse().map_err(|e| e.to_string())?
+                        o.requests = arg.parse().map_err(|e| e.to_string())?
                     }
                     "--artifacts" => {
-                        artifact_dir = it.next().ok_or("--artifacts needs a dir")?.clone()
+                        o.artifact_dir = it.next().ok_or("--artifacts needs a dir")?.clone()
                     }
+                    "--backend" => {
+                        o.backend = BackendKind::parse(it.next().ok_or("--backend needs a name")?)?
+                    }
+                    "--format" => {
+                        o.format = WeightFormat::parse(it.next().ok_or("--format needs a name")?)?
+                    }
+                    "--http" => o.http = Some(it.next().ok_or("--http needs ADDR:PORT")?.clone()),
+                    "--deadline-ms" => {
+                        let arg = it.next().ok_or("--deadline-ms needs N")?;
+                        o.deadline_ms = Some(arg.parse().map_err(|e| e.to_string())?)
+                    }
+                    "--synthetic" => o.synthetic = true,
                     other => return Err(format!("serve: unknown flag {other}")),
                 }
             }
-            Ok(Command::Serve { requests, artifact_dir })
+            if o.synthetic && o.backend == BackendKind::Pjrt {
+                return Err("serve: --synthetic implies the native backend".into());
+            }
+            Ok(Command::Serve(o))
+        }
+        "serve-bench" => {
+            let mut o = ServeBenchOpts {
+                requests: 2048,
+                clients: 4,
+                format: WeightFormat::Bp32,
+                small: false,
+                json: Some("BENCH_serve_native.json".to_string()),
+            };
+            let mut requests_explicit = false;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--requests" => {
+                        let arg = it.next().ok_or("--requests needs N")?;
+                        o.requests = arg.parse().map_err(|e| e.to_string())?;
+                        requests_explicit = true;
+                    }
+                    "--clients" => {
+                        let arg = it.next().ok_or("--clients needs N")?;
+                        o.clients = arg.parse().map_err(|e| e.to_string())?
+                    }
+                    "--format" => {
+                        o.format = WeightFormat::parse(it.next().ok_or("--format needs a name")?)?
+                    }
+                    "--small" => o.small = true,
+                    "--json" => {
+                        o.json = Some(it.next().ok_or("--json needs a path")?.clone())
+                    }
+                    "--no-json" => o.json = None,
+                    other => return Err(format!("serve-bench: unknown flag {other}")),
+                }
+            }
+            // Applied after the loop so the result is flag-order
+            // independent: --small lowers the default request count but
+            // never overrides an explicit --requests.
+            if o.small && !requests_explicit {
+                o.requests = o.requests.min(256);
+            }
+            if o.requests == 0 || o.clients == 0 {
+                return Err("serve-bench: --requests and --clients must be positive".into());
+            }
+            Ok(Command::ServeBench(o))
         }
         other => Err(format!("unknown command {other}; try help")),
     }
@@ -189,8 +285,19 @@ COMMANDS:
                              serial vs sharded (PALLAS_THREADS) blocked GEMM,
                              f32 + quire-exact paths, GFLOP-equivalents;
                              writes BENCH_vector_gemm.json by default
-  serve [--requests N] [--artifacts DIR]
-                             batching inference demo over the AOT artifacts
+  serve [--requests N] [--artifacts DIR] [--backend native|pjrt]
+        [--format bp32|f32|bp64] [--http ADDR:PORT] [--deadline-ms N] [--synthetic]
+                             inference server on the in-tree native backend
+                             (default; needs only weights.json) or PJRT;
+                             --http serves GET /metrics, GET /healthz and
+                             POST /infer on a real listener; --synthetic
+                             serves a deterministic model with no artifacts
+  serve-bench [--requests N] [--clients N] [--format bp32|f32|bp64] [--small]
+        [--json PATH | --no-json]
+                             e2e native serving bench: in-process + HTTP
+                             logits parity vs the scalar reference (hard
+                             gate), then closed-loop throughput; writes
+                             BENCH_serve_native.json by default
   help                       this message
 ";
 
@@ -786,6 +893,162 @@ pub fn run_gemm_bench(
     Ok(out)
 }
 
+/// Execute `serve-bench`: the end-to-end native serving benchmark.
+///
+/// Starts the server on the native backend over a deterministic
+/// synthetic model (no artifacts required — the same path CI uses), then:
+/// 1. **Parity gate** — every golden row is inferred in-process and the
+///    logits must be *bit-identical* to the scalar reference forward
+///    pass ([`crate::coordinator::backend::reference_forward`]).
+/// 2. **HTTP round-trip** — a real listener on an ephemeral port serves
+///    `POST /infer` (logits must survive the JSON round-trip bit-exactly)
+///    and `GET /metrics` (must report a non-zero batch count).
+/// 3. **Closed-loop throughput** — `clients` threads × `requests` total,
+///    reported as req/s with latency quantiles and the codec/execute
+///    split.
+///
+/// Either gate failing is a hard error (non-zero exit), and both flags
+/// are recorded in `BENCH_serve_native.json` for the CI bench gate.
+pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
+    use crate::coordinator::{backend, http, InferenceServer, ServerConfig};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    if let Some(path) = &o.json {
+        ensure_json_writable(path)?;
+    }
+    let (d, h, c, batch) = if o.small { (16, 24, 8, 32) } else { (64, 128, 16, 64) };
+    let w = backend::synth_weights(d, h, c, batch, 0x5e7e);
+    let cfg = ServerConfig {
+        max_wait: Duration::from_micros(500),
+        ..ServerConfig::for_format(o.format)
+    };
+    let server =
+        Arc::new(InferenceServer::start_native(w.clone(), cfg).map_err(|e| format!("{e:#}"))?);
+    let mut out = Vec::new();
+
+    // 1. In-process logits parity vs the scalar reference.
+    let mut parity = true;
+    for g in 0..batch {
+        let x = w.golden_x[g * d..(g + 1) * d].to_vec();
+        let want = backend::reference_forward(&w, o.format, &backend::stage_inputs(o.format, &x));
+        let got = server.infer(x).map_err(|e| format!("{e:#}"))?;
+        parity &= got.logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+    out.push(format!(
+        "logits parity vs scalar reference ({} rows, {}): {}",
+        batch,
+        o.format.name(),
+        if parity { "bit-identical" } else { "MISMATCH — BUG" }
+    ));
+
+    // 2. HTTP round-trip on an ephemeral port.
+    let listener =
+        http::serve("127.0.0.1:0", server.clone()).map_err(|e| format!("{e:#}"))?;
+    let addr = listener.local_addr();
+    let mut http_ok = true;
+    for g in 0..batch.min(8) {
+        let x = &w.golden_x[g * d..(g + 1) * d];
+        let body = format!(
+            "{{\"features\":[{}]}}",
+            x.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(",")
+        );
+        let (status, resp) = http::http_request(&addr, "POST", "/infer", &body)?;
+        if status != 200 {
+            http_ok = false;
+            continue;
+        }
+        let logits = crate::json::Json::parse(&resp)
+            .ok()
+            .and_then(|j| j.get("logits").and_then(|l| l.as_f32_vec()))
+            .unwrap_or_default();
+        let want = backend::reference_forward(&w, o.format, &backend::stage_inputs(o.format, x));
+        http_ok &= logits.len() == want.len()
+            && logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+    let (mstatus, mbody) = http::http_request(&addr, "GET", "/metrics", "")?;
+    http_ok &= mstatus == 200
+        && http::metric_value(&mbody, "positron_batches_total").is_some_and(|v| v >= 1.0);
+    out.push(format!(
+        "HTTP round-trip on {addr} (/infer bit-exact + /metrics live): {}",
+        if http_ok { "ok" } else { "FAILED" }
+    ));
+    drop(listener);
+
+    // 3. Closed-loop throughput.
+    let per_client = o.requests.div_ceil(o.clients);
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for cid in 0..o.clients {
+            let srv = server.clone();
+            let wref = &w;
+            handles.push(s.spawn(move || {
+                let mut ok = 0usize;
+                for i in 0..per_client {
+                    let g = (cid * 31 + i) % wref.batch;
+                    let feats = wref.golden_x[g * d..(g + 1) * d].to_vec();
+                    if srv.infer(feats).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        for hnd in handles {
+            done += hnd.join().unwrap();
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics().snapshot();
+    let req_per_s = done as f64 / wall.max(1e-9);
+    out.push(format!(
+        "closed loop: {done} requests, {} clients, {req_per_s:.0} req/s \
+         (p50 {} µs, p99 {} µs, max {} µs, mean batch {:.1})",
+        o.clients, snap.p50_us, snap.p99_us, snap.max_us, snap.mean_batch
+    ));
+    out.push(format!(
+        "codec {:.1} µs/batch, execute {:.1} µs/batch over {} batches",
+        snap.codec_ns_per_batch() / 1e3,
+        snap.execute_ns_per_batch() / 1e3,
+        snap.batches
+    ));
+
+    if let Some(path) = &o.json {
+        let json = format!(
+            "{{\"bench\":\"serve_native\",\"format\":\"{}\",\"small\":{},\"d\":{d},\"h\":{h},\
+             \"c\":{c},\"requests\":{},\"clients\":{},\"parity\":{parity},\
+             \"http_roundtrip\":{http_ok},\"req_per_s\":{req_per_s:.1},\
+             \"p50_us\":{},\"p99_us\":{},\"max_us\":{},\"mean_batch\":{:.3},\
+             \"batches\":{},\"rejected\":{},\"codec_ns_per_batch\":{:.0},\
+             \"execute_ns_per_batch\":{:.0},\"threads\":{}}}",
+            o.format.name(),
+            o.small,
+            done,
+            o.clients,
+            snap.p50_us,
+            snap.p99_us,
+            snap.max_us,
+            snap.mean_batch,
+            snap.batches,
+            snap.rejected,
+            snap.codec_ns_per_batch(),
+            snap.execute_ns_per_batch(),
+            snap.codec_threads,
+        );
+        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+        out.push(format!("wrote {path}"));
+    }
+    if !parity {
+        return Err("native backend logits differ from scalar reference — parity broken".into());
+    }
+    if !http_ok {
+        return Err("HTTP round-trip failed (status, parity, or /metrics)".into());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -854,6 +1117,116 @@ mod tests {
             other => panic!("unexpected parse: {other:?}"),
         }
         assert!(parse(&["vector-bench".into(), "--bits".into(), "48".into()]).is_err());
+    }
+
+    #[test]
+    fn parse_serve_and_serve_bench_flags() {
+        let args: Vec<String> = [
+            "serve",
+            "--backend",
+            "native",
+            "--format",
+            "bp64",
+            "--http",
+            "127.0.0.1:0",
+            "--deadline-ms",
+            "250",
+            "--synthetic",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        match parse(&args).unwrap() {
+            Command::Serve(o) => {
+                assert_eq!(o.backend, BackendKind::Native);
+                assert_eq!(o.format, WeightFormat::Bp64);
+                assert_eq!(o.http.as_deref(), Some("127.0.0.1:0"));
+                assert_eq!(o.deadline_ms, Some(250));
+                assert!(o.synthetic);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        // Defaults: native backend, bp32 weights, no listener.
+        match parse(&["serve".to_string()]).unwrap() {
+            Command::Serve(o) => {
+                assert_eq!(o.backend, BackendKind::Native);
+                assert_eq!(o.format, WeightFormat::Bp32);
+                assert!(o.http.is_none() && o.deadline_ms.is_none() && !o.synthetic);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        assert!(parse(&["serve".into(), "--backend".into(), "gpu".into()]).is_err());
+        assert!(parse(&["serve".into(), "--format".into(), "fp8".into()]).is_err());
+        assert!(
+            parse(&["serve".into(), "--synthetic".into(), "--backend".into(), "pjrt".into()])
+                .is_err()
+        );
+        let args: Vec<String> = ["serve-bench", "--small", "--format", "f32", "--no-json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        match parse(&args).unwrap() {
+            Command::ServeBench(o) => {
+                assert!(o.small);
+                assert_eq!(o.format, WeightFormat::F32);
+                assert!(o.json.is_none());
+                assert!(o.requests <= 256);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        match parse(&["serve-bench".to_string()]).unwrap() {
+            Command::ServeBench(o) => {
+                assert_eq!(o.json.as_deref(), Some("BENCH_serve_native.json"));
+                assert_eq!(o.format, WeightFormat::Bp32);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        // --small and --requests compose flag-order-independently.
+        for args in [["serve-bench", "--small", "--requests", "1000"],
+            ["serve-bench", "--requests", "1000", "--small"]]
+        {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            match parse(&v).unwrap() {
+                Command::ServeBench(o) => {
+                    assert!(o.small);
+                    assert_eq!(o.requests, 1000, "{args:?}");
+                }
+                other => panic!("unexpected parse: {other:?}"),
+            }
+        }
+        assert!(parse(&["serve-bench".into(), "--requests".into(), "0".into()]).is_err());
+    }
+
+    #[test]
+    fn serve_bench_smoke_small() {
+        // The CI smoke in-process: small synthetic model, no JSON. The
+        // parity and HTTP gates are hard errors, so success here means
+        // the native serving stack answered real HTTP requests with
+        // logits bit-identical to the scalar reference.
+        let o = ServeBenchOpts {
+            requests: 32,
+            clients: 2,
+            format: WeightFormat::Bp32,
+            small: true,
+            json: None,
+        };
+        let lines = run_serve_bench(&o).expect("small serve-bench runs");
+        assert!(lines.iter().any(|l| l.contains("bit-identical")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("ok")), "{lines:?}");
+    }
+
+    #[test]
+    fn serve_bench_json_path_fails_fast_when_unwritable() {
+        let bad = "/nonexistent-dir-for-positron-test/serve.json";
+        let o = ServeBenchOpts {
+            requests: 8,
+            clients: 1,
+            format: WeightFormat::Bp32,
+            small: true,
+            json: Some(bad.to_string()),
+        };
+        let err = run_serve_bench(&o).unwrap_err();
+        assert!(err.contains(bad), "{err}");
     }
 
     #[test]

@@ -1,0 +1,698 @@
+//! Execution backends for the inference server.
+//!
+//! [`InferenceBackend`] abstracts "run a staged f32 batch through the
+//! model" so the serving loop is backend-agnostic:
+//!
+//! - [`NativeBackend`] — the default. Executes the two-layer MLP entirely
+//!   in-tree on the blocked quantized-weight GEMM
+//!   ([`gemm::par_gemm_bp32_weights_fast`] for b-posit32 weights, the f32
+//!   fast path for the float baseline, the b-posit64 path via `codec64`
+//!   for the 64-bit tier). Needs only `weights.json` — no libxla, no
+//!   `runtime` feature — so the full serving stack runs in default
+//!   builds and CI.
+//! - [`PjrtBackend`] — the original PJRT/XLA executor over the
+//!   AOT-compiled HLO artifacts (requires the `runtime` cargo feature
+//!   and a libxla install; errors clearly otherwise).
+//!
+//! # Native layout: weights as A
+//!
+//! The quantized-weight GEMM family stores *weights* as the A matrix
+//! (`C (m×n) = A_bits (m×k) · B (k×n)` with B the f32 activations), so
+//! the native backend keeps everything transposed: weights are
+//! transposed **once at load** — through the process-wide
+//! quantized-weight cache keyed by tensor content hash
+//! ([`quantizer::cached_weights_u32`] and friends), so reloading a model
+//! skips the transpose/encode entirely — and activations are staged
+//! `d×rows` per batch. Layer 1 computes `H (h×rows) = W1ᵀ · Xᵀ`, the
+//! bias+ReLU epilogue broadcasts per *row* (contiguous), layer 2 maps
+//! `L (c×rows) = W2ᵀ · H`, and the readout transposes back to
+//! request-major.
+//!
+//! # Bit-exactness contract
+//!
+//! Every native path is **bit-identical to [`reference_forward`]**, the
+//! naive scalar forward pass: the blocked GEMM reproduces the naive
+//! ascending-`p` accumulation chain exactly (see `vector::gemm`), the
+//! lane decode matches the scalar decode bit-for-bit, and the ReLU is an
+//! explicit compare (not `max`, whose −0.0 handling is
+//! platform-defined). Tests and `serve-bench` gate on this.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{anyhow, Result};
+use crate::runtime::{lit_f32_2d, Literal, LoadedModel, ModelWeights, Runtime};
+use crate::testutil::Rng;
+use crate::vector::{gemm, kernels};
+
+use super::quantizer;
+
+/// How the served model's weight tensors are stored and multiplied.
+/// Replaces the old `model_file.contains("f32")` string sniffing with an
+/// explicit, shared enum (BP32 is the paper's serving format and the
+/// default).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WeightFormat {
+    /// b-posit⟨32,6,5⟩ words (the format under test); decode fused into
+    /// the GEMM.
+    #[default]
+    Bp32,
+    /// Plain f32 weights — the float baseline.
+    F32,
+    /// b-posit⟨64,6,5⟩ words over the f64 kernel family (the 64-bit
+    /// serving tier; in-range f32 weights encode losslessly).
+    Bp64,
+}
+
+impl WeightFormat {
+    pub fn parse(s: &str) -> std::result::Result<WeightFormat, String> {
+        match s {
+            "bp32" => Ok(WeightFormat::Bp32),
+            "f32" => Ok(WeightFormat::F32),
+            "bp64" => Ok(WeightFormat::Bp64),
+            other => Err(format!("unknown weight format {other:?} (expected bp32, f32 or bp64)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightFormat::Bp32 => "bp32",
+            WeightFormat::F32 => "f32",
+            WeightFormat::Bp64 => "bp64",
+        }
+    }
+
+    /// The HLO artifact the PJRT backend compiles for this format.
+    pub fn model_file(&self) -> &'static str {
+        match self {
+            WeightFormat::F32 => "model_f32.hlo.txt",
+            _ => "model_bposit.hlo.txt",
+        }
+    }
+}
+
+/// Which executor the server worker builds at startup.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// In-tree blocked-GEMM executor (default; no libxla).
+    #[default]
+    Native,
+    /// PJRT/XLA executor over the AOT artifacts (`runtime` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> std::result::Result<BackendKind, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend {other:?} (expected native or pjrt)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// A model executor owned by the server's worker thread. `x` is the
+/// staged row-major `rows×d` input batch (already input-quantized by the
+/// server when configured); `run` returns the row-major `rows×c` logits
+/// borrowed from backend-owned storage — the native backend reuses its
+/// scratch across batches (zero per-batch allocation on that path),
+/// while the PJRT backend stores whatever buffer the runtime's readback
+/// hands it.
+///
+/// Deliberately **not** `Send`: backends are *created on* the worker
+/// thread by a `Send` factory (PJRT handles cannot cross threads) and
+/// never leave it.
+pub trait InferenceBackend {
+    fn name(&self) -> &'static str;
+    /// (features, classes) of the served model.
+    fn dims(&self) -> (usize, usize);
+    /// Largest `rows` a single `run` accepts.
+    fn max_batch(&self) -> usize;
+    fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]>;
+}
+
+/// Weight tensors in their format-specific transposed encodings (shared
+/// via the content-hash cache), each variant carrying its biases at the
+/// precision its kernel family consumes.
+enum Layers {
+    Bp32 { wt1: Arc<Vec<u32>>, wt2: Arc<Vec<u32>>, b1: Vec<f32>, b2: Vec<f32> },
+    F32 { wt1: Arc<Vec<f32>>, wt2: Arc<Vec<f32>>, b1: Vec<f32>, b2: Vec<f32> },
+    Bp64 { wt1: Arc<Vec<u64>>, wt2: Arc<Vec<u64>>, b1: Vec<f64>, b2: Vec<f64> },
+}
+
+/// The in-tree executor: dense layers on the blocked (and row-sharded)
+/// quantized-weight GEMM, per-layer bias/ReLU epilogues, transposed
+/// staging buffers reused across batches.
+pub struct NativeBackend {
+    format: WeightFormat,
+    d: usize,
+    h: usize,
+    c: usize,
+    layers: Layers,
+    // Reused scratch: activations (d×rows), hidden (h×rows), logits
+    // (c×rows) in the transposed layout, plus the request-major readout.
+    xt: Vec<f32>,
+    ht: Vec<f32>,
+    lt: Vec<f32>,
+    xt64: Vec<f64>,
+    ht64: Vec<f64>,
+    lt64: Vec<f64>,
+    out: Vec<f32>,
+}
+
+fn transpose_bits_u32(bits: &[i32], rows: usize, cols: usize) -> Vec<u32> {
+    let src: Vec<u32> = bits.iter().map(|&b| b as u32).collect();
+    let mut t = vec![0u32; src.len()];
+    gemm::transpose(&src, &mut t, rows, cols);
+    t
+}
+
+fn transpose_f32(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut t = vec![0f32; w.len()];
+    gemm::transpose(w, &mut t, rows, cols);
+    t
+}
+
+fn encode_bp64_transposed(w: &[f32], rows: usize, cols: usize) -> Vec<u64> {
+    let t = transpose_f32(w, rows, cols);
+    t.iter().map(|&v| quantizer::quantize64_one(v as f64) as u64).collect()
+}
+
+impl NativeBackend {
+    /// Build from an artifact directory (`weights.json` only).
+    pub fn load(dir: &Path, format: WeightFormat) -> Result<NativeBackend> {
+        Self::from_weights(&ModelWeights::load_from_dir(dir)?, format)
+    }
+
+    /// Build from already-loaded weights. Transposed/encoded weight
+    /// tensors come from the process-wide content-hash cache, so loading
+    /// the same model twice encodes once.
+    pub fn from_weights(w: &ModelWeights, format: WeightFormat) -> Result<NativeBackend> {
+        let (d, h, c) = (w.d, w.h, w.c);
+        let check = |name: &str, len: usize, want: usize| -> Result<()> {
+            if len == want {
+                Ok(())
+            } else {
+                Err(anyhow!("weights: {name} has {len} elements, want {want}"))
+            }
+        };
+        check("w1", w.w1.len(), d * h)?;
+        check("b1", w.b1.len(), h)?;
+        check("w2", w.w2.len(), h * c)?;
+        check("b2", w.b2.len(), c)?;
+        let layers = match format {
+            WeightFormat::Bp32 => {
+                check("w1_bits", w.w1_bits.len(), d * h)?;
+                check("w2_bits", w.w2_bits.len(), h * c)?;
+                let wt1 = quantizer::cached_weights_u32(
+                    quantizer::tensor_key_i32("bp32/w1t", d, h, &w.w1_bits),
+                    || transpose_bits_u32(&w.w1_bits, d, h),
+                );
+                let wt2 = quantizer::cached_weights_u32(
+                    quantizer::tensor_key_i32("bp32/w2t", h, c, &w.w2_bits),
+                    || transpose_bits_u32(&w.w2_bits, h, c),
+                );
+                Layers::Bp32 { wt1, wt2, b1: w.b1.clone(), b2: w.b2.clone() }
+            }
+            WeightFormat::F32 => {
+                let wt1 = quantizer::cached_weights_f32(
+                    quantizer::tensor_key_f32("f32/w1t", d, h, &w.w1),
+                    || transpose_f32(&w.w1, d, h),
+                );
+                let wt2 = quantizer::cached_weights_f32(
+                    quantizer::tensor_key_f32("f32/w2t", h, c, &w.w2),
+                    || transpose_f32(&w.w2, h, c),
+                );
+                Layers::F32 { wt1, wt2, b1: w.b1.clone(), b2: w.b2.clone() }
+            }
+            WeightFormat::Bp64 => {
+                let wt1 = quantizer::cached_weights_u64(
+                    quantizer::tensor_key_f32("bp64/w1t", d, h, &w.w1),
+                    || encode_bp64_transposed(&w.w1, d, h),
+                );
+                let wt2 = quantizer::cached_weights_u64(
+                    quantizer::tensor_key_f32("bp64/w2t", h, c, &w.w2),
+                    || encode_bp64_transposed(&w.w2, h, c),
+                );
+                let b1 = w.b1.iter().map(|&v| v as f64).collect();
+                let b2 = w.b2.iter().map(|&v| v as f64).collect();
+                Layers::Bp64 { wt1, wt2, b1, b2 }
+            }
+        };
+        Ok(NativeBackend {
+            format,
+            d,
+            h,
+            c,
+            layers,
+            xt: Vec::new(),
+            ht: Vec::new(),
+            lt: Vec::new(),
+            xt64: Vec::new(),
+            ht64: Vec::new(),
+            lt64: Vec::new(),
+            out: Vec::new(),
+        })
+    }
+
+    pub fn format(&self) -> WeightFormat {
+        self.format
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        match self.format {
+            WeightFormat::Bp32 => "native-bp32",
+            WeightFormat::F32 => "native-f32",
+            WeightFormat::Bp64 => "native-bp64",
+        }
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.d, self.c)
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX // no static batch: the GEMM takes any n
+    }
+
+    fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]> {
+        let (d, h, c) = (self.d, self.h, self.c);
+        if x.len() != rows * d {
+            return Err(anyhow!("native backend: {} values staged for {rows}×{d}", x.len()));
+        }
+        match &self.layers {
+            Layers::Bp32 { wt1, wt2, b1, b2 } => {
+                self.xt.resize(d * rows, 0.0);
+                gemm::transpose(x, &mut self.xt, rows, d);
+                self.ht.resize(h * rows, 0.0);
+                gemm::par_gemm_bp32_weights_fast(
+                    wt1.as_slice(),
+                    &self.xt,
+                    &mut self.ht,
+                    h,
+                    d,
+                    rows,
+                );
+                kernels::bias_relu_rows(&mut self.ht, b1, h, rows);
+                self.lt.resize(c * rows, 0.0);
+                gemm::par_gemm_bp32_weights_fast(
+                    wt2.as_slice(),
+                    &self.ht,
+                    &mut self.lt,
+                    c,
+                    h,
+                    rows,
+                );
+                kernels::bias_rows(&mut self.lt, b2, c, rows);
+                self.out.resize(rows * c, 0.0);
+                gemm::transpose(&self.lt, &mut self.out, c, rows);
+            }
+            Layers::F32 { wt1, wt2, b1, b2 } => {
+                self.xt.resize(d * rows, 0.0);
+                gemm::transpose(x, &mut self.xt, rows, d);
+                self.ht.resize(h * rows, 0.0);
+                gemm::par_gemm_f32(wt1.as_slice(), &self.xt, &mut self.ht, h, d, rows);
+                kernels::bias_relu_rows(&mut self.ht, b1, h, rows);
+                self.lt.resize(c * rows, 0.0);
+                gemm::par_gemm_f32(wt2.as_slice(), &self.ht, &mut self.lt, c, h, rows);
+                kernels::bias_rows(&mut self.lt, b2, c, rows);
+                self.out.resize(rows * c, 0.0);
+                gemm::transpose(&self.lt, &mut self.out, c, rows);
+            }
+            Layers::Bp64 { wt1, wt2, b1, b2 } => {
+                self.xt64.resize(d * rows, 0.0);
+                for p in 0..d {
+                    for j in 0..rows {
+                        self.xt64[p * rows + j] = x[j * d + p] as f64;
+                    }
+                }
+                self.ht64.resize(h * rows, 0.0);
+                gemm::par_gemm_bp64_weights_fast(
+                    wt1.as_slice(),
+                    &self.xt64,
+                    &mut self.ht64,
+                    h,
+                    d,
+                    rows,
+                );
+                kernels::bias_relu_rows_f64(&mut self.ht64, b1, h, rows);
+                self.lt64.resize(c * rows, 0.0);
+                gemm::par_gemm_bp64_weights_fast(
+                    wt2.as_slice(),
+                    &self.ht64,
+                    &mut self.lt64,
+                    c,
+                    h,
+                    rows,
+                );
+                kernels::bias_rows_f64(&mut self.lt64, b2, c, rows);
+                self.out.resize(rows * c, 0.0);
+                for q in 0..c {
+                    for j in 0..rows {
+                        self.out[j * c + q] = self.lt64[q * rows + j] as f32;
+                    }
+                }
+            }
+        }
+        Ok(&self.out[..rows * c])
+    }
+}
+
+/// The PJRT/XLA executor over the AOT-compiled HLO artifacts, with the
+/// batch padded to the model's static batch and the input literal
+/// refreshed in place. Construction fails with the documented "runtime
+/// disabled" error when built without the `runtime` feature.
+pub struct PjrtBackend {
+    // The PJRT client must outlive its executables.
+    _rt: Runtime,
+    model: LoadedModel,
+    d: usize,
+    c: usize,
+    model_batch: usize,
+    args: Vec<Literal>,
+    xpad: Vec<f32>,
+    out: Vec<f32>,
+}
+
+impl PjrtBackend {
+    pub fn load(dir: &Path, model_file: &str, format: WeightFormat) -> Result<PjrtBackend> {
+        let rt = Runtime::cpu(dir)?;
+        let w = ModelWeights::load(&rt)?;
+        let model = rt.load(model_file)?;
+        let weight_lits = match format {
+            WeightFormat::Bp32 => w.bposit_arg_literals()?,
+            WeightFormat::F32 => w.f32_arg_literals()?,
+            WeightFormat::Bp64 => {
+                return Err(anyhow!(
+                    "PJRT backend has no b-posit64 model artifact; use the native backend"
+                ))
+            }
+        };
+        let xpad = vec![0f32; w.batch * w.d];
+        let mut args = Vec::with_capacity(1 + weight_lits.len());
+        args.push(lit_f32_2d(&xpad, w.batch, w.d)?);
+        args.extend(weight_lits);
+        Ok(PjrtBackend {
+            _rt: rt,
+            model,
+            d: w.d,
+            c: w.c,
+            model_batch: w.batch,
+            args,
+            xpad,
+            out: Vec::new(),
+        })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.d, self.c)
+    }
+
+    fn max_batch(&self) -> usize {
+        self.model_batch
+    }
+
+    fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]> {
+        if rows > self.model_batch {
+            return Err(anyhow!("batch {rows} exceeds model batch {}", self.model_batch));
+        }
+        if x.len() != rows * self.d {
+            return Err(anyhow!("pjrt backend: {} values staged for {rows}×{}", x.len(), self.d));
+        }
+        self.xpad[..x.len()].copy_from_slice(x);
+        self.xpad[x.len()..].fill(0.0);
+        self.args[0].copy_from_f32(&self.xpad)?;
+        self.out = self.model.run_f32(&self.args)?;
+        if self.out.len() < rows * self.c {
+            return Err(anyhow!(
+                "model returned {} logits for a batch of {rows}×{}",
+                self.out.len(),
+                self.c
+            ));
+        }
+        Ok(&self.out[..rows * self.c])
+    }
+}
+
+/// Apply the serving input-quantization contract for `format` to a
+/// feature vector: b-posit32 roundtrip for the BP32 tier (what the
+/// server does on the staged batch), identity for f32 (the baseline sees
+/// raw inputs) and b-posit64 (every finite f32 is exactly representable
+/// in ⟨64,6,5⟩, so the roundtrip is the identity by construction).
+pub fn stage_inputs(format: WeightFormat, x: &[f32]) -> Vec<f32> {
+    match format {
+        WeightFormat::Bp32 => quantizer::roundtrip(x),
+        WeightFormat::F32 | WeightFormat::Bp64 => x.to_vec(),
+    }
+}
+
+/// Naive scalar forward pass — the independent reference the native
+/// backend must match **bit-for-bit**: one ascending-index accumulator
+/// chain per output element (the order the blocked GEMM provably
+/// reproduces), scalar fast-path weight decode (bit-identical to the
+/// lane decode), explicit-compare ReLU. `x` is one already-staged
+/// feature row; returns the `c` logits.
+pub fn reference_forward(w: &ModelWeights, format: WeightFormat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), w.d, "reference_forward: feature length");
+    let (d, h, c) = (w.d, w.h, w.c);
+    match format {
+        WeightFormat::Bp32 => {
+            let mut hid = vec![0f32; h];
+            for i in 0..h {
+                let mut acc = 0f32;
+                for p in 0..d {
+                    acc += quantizer::dequantize_one(w.w1_bits[p * h + i]) * x[p];
+                }
+                let v = acc + w.b1[i];
+                hid[i] = if v > 0.0 { v } else { 0.0 };
+            }
+            let mut out = vec![0f32; c];
+            for q in 0..c {
+                let mut acc = 0f32;
+                for i in 0..h {
+                    acc += quantizer::dequantize_one(w.w2_bits[i * c + q]) * hid[i];
+                }
+                out[q] = acc + w.b2[q];
+            }
+            out
+        }
+        WeightFormat::F32 => {
+            let mut hid = vec![0f32; h];
+            for i in 0..h {
+                let mut acc = 0f32;
+                for p in 0..d {
+                    acc += w.w1[p * h + i] * x[p];
+                }
+                let v = acc + w.b1[i];
+                hid[i] = if v > 0.0 { v } else { 0.0 };
+            }
+            let mut out = vec![0f32; c];
+            for q in 0..c {
+                let mut acc = 0f32;
+                for i in 0..h {
+                    acc += w.w2[i * c + q] * hid[i];
+                }
+                out[q] = acc + w.b2[q];
+            }
+            out
+        }
+        WeightFormat::Bp64 => {
+            let dq = |v: f32| -> f64 {
+                quantizer::dequantize64_one(quantizer::quantize64_one(v as f64))
+            };
+            let mut hid = vec![0f64; h];
+            for i in 0..h {
+                let mut acc = 0f64;
+                for p in 0..d {
+                    acc += dq(w.w1[p * h + i]) * x[p] as f64;
+                }
+                let v = acc + w.b1[i] as f64;
+                hid[i] = if v > 0.0 { v } else { 0.0 };
+            }
+            let mut out = vec![0f32; c];
+            for q in 0..c {
+                let mut acc = 0f64;
+                for i in 0..h {
+                    acc += dq(w.w2[i * c + q]) * hid[i];
+                }
+                out[q] = (acc + w.b2[q] as f64) as f32;
+            }
+            out
+        }
+    }
+}
+
+/// Deterministic synthetic model in the `weights.json` shape: random
+/// small weights (quantized to b-posit32 for the bits tensors), golden
+/// features on the 1/64 grid (exact under the BP32 roundtrip, so input
+/// quantization is a no-op on them), golden logits/labels from
+/// [`reference_forward`]. Used by tests, `serve-bench`, and
+/// `serve --synthetic` so the native serving stack needs no build-time
+/// artifacts at all.
+pub fn synth_weights(d: usize, h: usize, c: usize, batch: usize, seed: u64) -> ModelWeights {
+    let mut rng = Rng::new(seed);
+    let mut wgt = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() - 0.5) as f32 * scale).collect()
+    };
+    let w1 = wgt(d * h, 0.5);
+    let b1 = wgt(h, 0.2);
+    let w2 = wgt(h * c, 0.5);
+    let b2 = wgt(c, 0.2);
+    let w1_bits = quantizer::quantize(&w1);
+    let w2_bits = quantizer::quantize(&w2);
+    let golden_x: Vec<f32> =
+        (0..batch * d).map(|_| (rng.below(257) as i64 - 128) as f32 / 64.0).collect();
+    let mut w = ModelWeights {
+        d,
+        h,
+        c,
+        batch,
+        w1,
+        b1,
+        w2,
+        b2,
+        w1_bits,
+        w2_bits,
+        golden_x,
+        golden_y: Vec::new(),
+        golden_logits_f32: Vec::new(),
+        golden_logits_bposit: Vec::new(),
+    };
+    for g in 0..batch {
+        let x = &w.golden_x[g * d..(g + 1) * d];
+        let lf = reference_forward(&w, WeightFormat::F32, x);
+        let lb = reference_forward(&w, WeightFormat::Bp32, x);
+        let argmax = lb
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+        w.golden_y.push(argmax);
+        w.golden_logits_f32.extend_from_slice(&lf);
+        w.golden_logits_bposit.extend_from_slice(&lb);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(WeightFormat::parse("bp32").unwrap(), WeightFormat::Bp32);
+        assert_eq!(WeightFormat::parse("f32").unwrap(), WeightFormat::F32);
+        assert_eq!(WeightFormat::parse("bp64").unwrap(), WeightFormat::Bp64);
+        assert!(WeightFormat::parse("fp8").is_err());
+        assert_eq!(WeightFormat::default(), WeightFormat::Bp32);
+        assert_eq!(WeightFormat::Bp32.model_file(), "model_bposit.hlo.txt");
+        assert_eq!(WeightFormat::F32.model_file(), "model_f32.hlo.txt");
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default().name(), "native");
+    }
+
+    #[test]
+    fn synth_weights_shapes_and_goldens() {
+        let w = synth_weights(5, 7, 3, 4, 0xfeed);
+        assert_eq!((w.d, w.h, w.c, w.batch), (5, 7, 3, 4));
+        assert_eq!(w.w1.len(), 35);
+        assert_eq!(w.w1_bits.len(), 35);
+        assert_eq!(w.golden_x.len(), 20);
+        assert_eq!(w.golden_y.len(), 4);
+        assert_eq!(w.golden_logits_f32.len(), 12);
+        assert_eq!(w.golden_logits_bposit.len(), 12);
+        // Golden features sit on the 1/64 grid ⇒ BP32-roundtrip-exact.
+        let staged = stage_inputs(WeightFormat::Bp32, &w.golden_x);
+        assert_eq!(
+            staged.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            w.golden_x.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Determinism.
+        let w2 = synth_weights(5, 7, 3, 4, 0xfeed);
+        assert_eq!(w.w1_bits, w2.w1_bits);
+        assert_eq!(w.golden_logits_bposit, w2.golden_logits_bposit);
+    }
+
+    #[test]
+    fn native_backend_matches_reference_bitwise_all_formats() {
+        let w = synth_weights(5, 7, 3, 6, 0xabcd);
+        for format in [WeightFormat::Bp32, WeightFormat::F32, WeightFormat::Bp64] {
+            let mut be = NativeBackend::from_weights(&w, format).unwrap();
+            assert_eq!(be.dims(), (5, 3));
+            // Whole golden batch at once + one-row batches: same bits.
+            let rows = w.batch;
+            let got = be.run(&w.golden_x, rows).unwrap().to_vec();
+            for g in 0..rows {
+                let want = reference_forward(&w, format, &w.golden_x[g * 5..(g + 1) * 5]);
+                let got_row = &got[g * 3..(g + 1) * 3];
+                assert_eq!(
+                    got_row.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} row {g}",
+                    format.name()
+                );
+                let one = be.run(&w.golden_x[g * 5..(g + 1) * 5], 1).unwrap();
+                assert_eq!(
+                    one.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} single-row {g}",
+                    format.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_backend_bp32_matches_golden_logits() {
+        // golden_logits_bposit in the synthetic model *is* the reference
+        // forward on golden_x — the backend must reproduce it exactly.
+        let w = synth_weights(6, 9, 4, 3, 0x1234);
+        let mut be = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        let got = be.run(&w.golden_x, w.batch).unwrap();
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            w.golden_logits_bposit.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn native_backend_rejects_bad_shapes() {
+        let w = synth_weights(4, 4, 2, 2, 1);
+        let mut be = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        assert!(be.run(&[0.0; 7], 2).is_err());
+        let mut bad = w.clone();
+        bad.w1_bits.pop();
+        assert!(NativeBackend::from_weights(&bad, WeightFormat::Bp32).is_err());
+        let mut bad2 = w.clone();
+        bad2.b1.pop();
+        assert!(NativeBackend::from_weights(&bad2, WeightFormat::F32).is_err());
+    }
+
+    #[test]
+    fn weight_cache_reused_across_backend_loads() {
+        let w = synth_weights(3, 5, 2, 2, 0xcafe);
+        let _first = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        let (h0, _m0) = quantizer::weight_cache_stats();
+        let _second = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        let (h1, _m1) = quantizer::weight_cache_stats();
+        assert!(h1 >= h0 + 2, "second load must hit the cache for both layers ({h0} → {h1})");
+    }
+}

@@ -1,0 +1,377 @@
+//! Zero-dependency HTTP/1.1 listener over [`std::net::TcpListener`] —
+//! the serving stack's real network surface (the vendored dependency set
+//! has no hyper/axum):
+//!
+//! - `GET /metrics` — the Prometheus-style text from
+//!   [`super::MetricsSnapshot::render`].
+//! - `GET /healthz` — liveness probe (`ok`).
+//! - `POST /infer` — body `{"features":[…]}`; replies
+//!   `{"logits":[…],"latency_us":N}`. Infer errors map to status codes:
+//!   bad request → 400, queue full (backpressure) → 503, deadline → 504,
+//!   backend failure → 500.
+//!
+//! One accept thread, one short-lived thread per connection
+//! (connections are `Connection: close`; the real concurrency limit is
+//! the server's bounded queue, which turns overload into 503s rather
+//! than unbounded threads). Request heads are capped at 16 KiB and
+//! bodies at 4 MiB; reads time out so a stalled peer can't pin a thread.
+//!
+//! Float fidelity: logits are rendered with Rust's shortest-roundtrip
+//! float formatting and parsed back via f64, which is lossless for every
+//! finite f32 — the HTTP round-trip is bit-exact (tests gate on this).
+
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Context, Result};
+use crate::json::Json;
+
+use super::server::{InferError, InferenceServer};
+
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Cap on live connection threads: past this, new connections get an
+/// immediate 503 instead of a thread — a stalled-peer (slowloris) flood
+/// can pin at most this many threads for `READ_TIMEOUT`.
+const MAX_CONN_THREADS: usize = 64;
+
+/// A running HTTP listener bound to an [`InferenceServer`]. Shuts down
+/// (and joins the accept thread) on drop.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an ephemeral
+/// port) and serve `server` until the returned handle is dropped.
+pub fn serve(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr().context("local_addr")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let active = Arc::new(AtomicUsize::new(0));
+    let accept = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let mut stream = match conn {
+                Ok(s) => s,
+                Err(_) => {
+                    // e.g. EMFILE under fd pressure: back off instead of
+                    // busy-spinning the accept loop.
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            if active.load(Ordering::SeqCst) >= MAX_CONN_THREADS {
+                let body = error_body("too many connections");
+                let _ = write_response(
+                    &mut stream,
+                    503,
+                    "Service Unavailable",
+                    "application/json",
+                    &body,
+                );
+                continue;
+            }
+            active.fetch_add(1, Ordering::SeqCst);
+            let srv = server.clone();
+            let act = active.clone();
+            std::thread::spawn(move || {
+                handle_conn(stream, &srv);
+                act.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+    });
+    Ok(HttpServer { addr: local, stop, accept: Some(accept) })
+}
+
+impl HttpServer {
+    /// The bound address (the actual port when bound with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. In-flight connection
+    /// threads finish their single request and exit on their own.
+    pub fn shutdown(&mut self) {
+        let Some(handle) = self.accept.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let ip = match self.addr.ip() {
+            ip if ip.is_unspecified() && ip.is_ipv4() => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            ip if ip.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            ip => ip,
+        };
+        let wake = SocketAddr::new(ip, self.addr.port());
+        let woke = TcpStream::connect_timeout(&wake, Duration::from_millis(500)).is_ok();
+        if woke {
+            let _ = handle.join();
+        }
+        // If the self-connect failed (filtered interface, fd pressure),
+        // the accept thread stays parked until the next stray connection;
+        // leaking it beats blocking the caller in join() forever.
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn handle_conn(mut stream: TcpStream, srv: &InferenceServer) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let (status, reason, ctype, body) = match read_request(&mut stream) {
+        Ok(req) => route(&req, srv),
+        Err(e) => (400, "Bad Request", "application/json", error_body(&e)),
+    };
+    let _ = write_response(&mut stream, status, reason, ctype, &body);
+}
+
+fn route(req: &HttpRequest, srv: &InferenceServer) -> (u16, &'static str, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => {
+            (200, "OK", "text/plain; version=0.0.4", srv.metrics().snapshot().render())
+        }
+        ("GET", "/healthz") => (200, "OK", "text/plain", "ok\n".to_string()),
+        ("POST", "/infer") => infer_route(req, srv),
+        _ => (404, "Not Found", "application/json", error_body("no such route")),
+    }
+}
+
+fn infer_route(
+    req: &HttpRequest,
+    srv: &InferenceServer,
+) -> (u16, &'static str, &'static str, String) {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return (400, "Bad Request", "application/json", error_body("body is not UTF-8"));
+    };
+    let features = match Json::parse(text) {
+        Ok(j) => match j.get("features").and_then(|f| f.as_f32_vec()) {
+            Some(f) => f,
+            None => {
+                let msg = "body must be {\"features\": [..]}";
+                return (400, "Bad Request", "application/json", error_body(msg));
+            }
+        },
+        Err(e) => {
+            return (400, "Bad Request", "application/json", error_body(&format!("bad JSON: {e}")))
+        }
+    };
+    match srv.try_infer(features) {
+        Ok(resp) => {
+            let mut out = String::with_capacity(16 * resp.logits.len() + 32);
+            out.push_str("{\"logits\":[");
+            for (i, v) in resp.logits.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{v:?}"));
+            }
+            out.push_str(&format!("],\"latency_us\":{}}}", resp.latency.as_micros()));
+            (200, "OK", "application/json", out)
+        }
+        Err(InferError::BadRequest(m)) => (400, "Bad Request", "application/json", error_body(&m)),
+        Err(InferError::Busy) => {
+            (503, "Service Unavailable", "application/json", error_body("server busy (queue full)"))
+        }
+        Err(InferError::DeadlineExceeded) => (
+            504,
+            "Gateway Timeout",
+            "application/json",
+            error_body("deadline exceeded before execution"),
+        ),
+        Err(InferError::Stopped) => {
+            (500, "Internal Server Error", "application/json", error_body("server stopped"))
+        }
+        Err(InferError::Backend(m)) => (
+            500,
+            "Internal Server Error",
+            "application/json",
+            error_body(&format!("batch execution failed: {m}")),
+        ),
+    }
+}
+
+fn error_body(msg: &str) -> String {
+    let escaped: String = msg
+        .chars()
+        .map(|ch| match ch {
+            '"' => "\\\"".to_string(),
+            '\\' => "\\\\".to_string(),
+            '\n' => "\\n".to_string(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32),
+            c => c.to_string(),
+        })
+        .collect();
+    format!("{{\"error\":\"{escaped}\"}}")
+}
+
+fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    // Read until the blank line that ends the header block.
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err("request head too large".into());
+        }
+        let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-request".into());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| "head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let raw_path = parts.next().ok_or("request line has no path")?;
+    // Route on the path alone: `GET /metrics?format=x` must still hit
+    // /metrics (Prometheus scrapers append query strings; none of our
+    // routes take parameters).
+    let path = raw_path.split('?').next().unwrap_or(raw_path).to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err("body too large".into());
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).map_err(|e| format!("read body: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    ctype: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Minimal blocking HTTP/1.1 client for tests and `serve-bench`: one
+/// request per connection, returns `(status, body)`.
+pub fn http_request(
+    addr: &SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::result::Result<(u16, String), String> {
+    let mut stream = TcpStream::connect_timeout(addr, Duration::from_secs(5))
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).map_err(|e| format!("write: {e}"))?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).map_err(|e| format!("read: {e}"))?;
+    let text = String::from_utf8_lossy(&raw);
+    let (head, resp_body) = text.split_once("\r\n\r\n").ok_or("response has no header end")?;
+    let status_line = head.lines().next().ok_or("empty response")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .ok_or("status line has no code")?
+        .parse()
+        .map_err(|_| "bad status code".to_string())?;
+    Ok((status, resp_body.to_string()))
+}
+
+/// Parse one `name value` line out of a Prometheus-style text body.
+pub fn metric_value(metrics_text: &str, name: &str) -> Option<f64> {
+    metrics_text.lines().find_map(|l| {
+        let (n, v) = l.split_once(' ')?;
+        if n == name {
+            v.trim().parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_and_metric_parsing() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(16));
+        assert_eq!(find_head_end(b"partial\r\n"), None);
+        let text = "positron_batches_total 7\npositron_batch_mean_items 3.500\n";
+        assert_eq!(metric_value(text, "positron_batches_total"), Some(7.0));
+        assert_eq!(metric_value(text, "positron_batch_mean_items"), Some(3.5));
+        assert_eq!(metric_value(text, "nope"), None);
+    }
+
+    #[test]
+    fn error_body_escapes_json() {
+        assert_eq!(error_body("plain"), "{\"error\":\"plain\"}");
+        assert_eq!(error_body("a\"b\\c\nd"), "{\"error\":\"a\\\"b\\\\c\\nd\"}");
+        let parsed = Json::parse(&error_body("quote \" here")).unwrap();
+        assert_eq!(parsed.get("error").unwrap().as_str(), Some("quote \" here"));
+    }
+
+    #[test]
+    fn shortest_roundtrip_formatting_is_bit_exact_via_f64() {
+        // The /infer response contract: Debug-format an f32, parse as
+        // f64, cast back — must be the identical bit pattern.
+        let mut rng = crate::testutil::Rng::new(0x4711);
+        for _ in 0..100_000 {
+            let v = f32::from_bits(rng.next_u32());
+            if !v.is_finite() {
+                continue;
+            }
+            let s = format!("{v:?}");
+            let back = s.parse::<f64>().unwrap() as f32;
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} → {s} → {back}");
+        }
+    }
+}

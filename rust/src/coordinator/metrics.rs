@@ -1,11 +1,57 @@
-//! Serving metrics: lock-protected latency reservoir + counters, cheap
-//! enough for the request path. Quantize/dequantize (codec) time and model
+//! Serving metrics: bounded latency reservoir + counters, cheap enough
+//! for the request path. Quantize/dequantize (codec) time and model
 //! execute time are tracked separately so `/metrics` output attributes
 //! batch cost to the right stage.
+//!
+//! Latency quantiles come from **reservoir sampling** (Algorithm R with
+//! a deterministic in-struct LCG — no `rand` dependency): once the
+//! reservoir is full, sample *i* replaces a uniformly chosen slot with
+//! probability `CAP/i`, so the reservoir stays a uniform sample of the
+//! whole run. The previous implementation cleared the buffer at 1M
+//! samples, silently resetting p50/p99/max mid-run; `max_us` is now a
+//! separate monotone counter that never resets.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Latency reservoir capacity: 64Ki samples ≈ 512 KiB, a uniform sample
+/// of the full run regardless of its length.
+pub const LATENCY_RESERVOIR_CAP: usize = 65_536;
+
+/// Bounded uniform sample of every recorded latency (Algorithm R).
+struct Reservoir {
+    samples: Vec<u64>,
+    /// Total samples ever offered (monotone).
+    seen: u64,
+    /// Deterministic LCG state for replacement-slot selection.
+    lcg: u64,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir { samples: Vec::new(), seen: 0, lcg: 0x9e3779b97f4a7c15 }
+    }
+}
+
+impl Reservoir {
+    fn record(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(v);
+            return;
+        }
+        // Uniform j ∈ [0, seen): keep v iff j lands inside the reservoir.
+        // Full-width Lemire reduction (lcg·seen ≫ 64), not a shifted
+        // modulus — a 31-bit index would freeze the keep-probability at
+        // CAP/2³¹ once `seen` passes 2³¹ and bias the sample recent.
+        self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let j = ((self.lcg as u128 * self.seen as u128) >> 64) as u64;
+        if (j as usize) < LATENCY_RESERVOIR_CAP {
+            self.samples[j as usize] = v;
+        }
+    }
+}
 
 /// Shared metrics sink.
 #[derive(Default)]
@@ -14,13 +60,20 @@ pub struct Metrics {
     batches: AtomicU64,
     batched_items: AtomicU64,
     rejected: AtomicU64,
+    /// Requests answered with a deadline error instead of a batch slot.
+    deadline_expired: AtomicU64,
+    /// Batches whose execution failed (every member got an error reply).
+    batch_failures: AtomicU64,
     /// Total nanoseconds spent in the b-posit codec (quantize/dequantize).
     codec_ns: AtomicU64,
     /// Total nanoseconds spent executing the model.
     execute_ns: AtomicU64,
     /// Worker threads available to the sharded codec (0 = not reported).
     codec_threads: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    /// Largest latency ever recorded — monotone, survives reservoir
+    /// replacement.
+    max_us: AtomicU64,
+    latencies_us: Mutex<Reservoir>,
 }
 
 /// Point-in-time view.
@@ -29,8 +82,13 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
+    pub deadline_expired: u64,
+    pub batch_failures: u64,
     /// Mean items per executed batch.
     pub mean_batch: f64,
+    /// Total latencies ever recorded (the reservoir holds a uniform
+    /// sample of them, capped at [`LATENCY_RESERVOIR_CAP`]).
+    pub latency_samples: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
@@ -49,6 +107,14 @@ impl Metrics {
 
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch_failure(&self) {
+        self.batch_failures.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, items: usize) {
@@ -73,16 +139,16 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        let mut v = self.latencies_us.lock().unwrap();
-        // Reservoir cap: keep memory bounded on long runs.
-        if v.len() >= 1_000_000 {
-            v.clear();
-        }
-        v.push(d.as_micros() as u64);
+        let us = d.as_micros() as u64;
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().record(us);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lats = self.latencies_us.lock().unwrap().clone();
+        let (mut lats, seen) = {
+            let r = self.latencies_us.lock().unwrap();
+            (r.samples.clone(), r.seen)
+        };
         lats.sort_unstable();
         let q = |p: f64| -> u64 {
             if lats.is_empty() {
@@ -97,10 +163,13 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             batches,
             rejected: self.rejected.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            batch_failures: self.batch_failures.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
+            latency_samples: seen,
             p50_us: q(0.5),
             p99_us: q(0.99),
-            max_us: lats.last().copied().unwrap_or(0),
+            max_us: self.max_us.load(Ordering::Relaxed),
             codec_ns: self.codec_ns.load(Ordering::Relaxed),
             execute_ns: self.execute_ns.load(Ordering::Relaxed),
             codec_threads: self.codec_threads.load(Ordering::Relaxed),
@@ -119,14 +188,18 @@ impl MetricsSnapshot {
         if self.batches == 0 { 0.0 } else { self.execute_ns as f64 / self.batches as f64 }
     }
 
-    /// Render in a Prometheus-style text format — the server's `/metrics`
-    /// output, with codec time attributed separately from execute time.
+    /// Render in a Prometheus-style text format — the body served by the
+    /// HTTP listener's `GET /metrics`, with codec time attributed
+    /// separately from execute time.
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!("positron_requests_total {}\n", self.requests));
         s.push_str(&format!("positron_rejected_total {}\n", self.rejected));
+        s.push_str(&format!("positron_deadline_expired_total {}\n", self.deadline_expired));
+        s.push_str(&format!("positron_batch_failures_total {}\n", self.batch_failures));
         s.push_str(&format!("positron_batches_total {}\n", self.batches));
         s.push_str(&format!("positron_batch_mean_items {:.3}\n", self.mean_batch));
+        s.push_str(&format!("positron_latency_samples_total {}\n", self.latency_samples));
         s.push_str(&format!("positron_latency_p50_us {}\n", self.p50_us));
         s.push_str(&format!("positron_latency_p99_us {}\n", self.p99_us));
         s.push_str(&format!("positron_latency_max_us {}\n", self.max_us));
@@ -156,6 +229,7 @@ mod tests {
         assert_eq!(s.requests, 100);
         assert_eq!(s.batches, 2);
         assert_eq!(s.mean_batch, 15.0);
+        assert_eq!(s.latency_samples, 100);
         assert!(s.p50_us >= 45 && s.p50_us <= 55, "p50 = {}", s.p50_us);
         assert!(s.p99_us >= 95, "p99 = {}", s.p99_us);
         assert_eq!(s.max_us, 100);
@@ -166,10 +240,50 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.mean_batch, 0.0);
+        assert_eq!(s.latency_samples, 0);
+        assert_eq!(s.deadline_expired, 0);
+        assert_eq!(s.batch_failures, 0);
         assert_eq!(s.codec_ns, 0);
         assert_eq!(s.execute_ns, 0);
         assert_eq!(s.codec_threads, 0);
         assert_eq!(s.codec_ns_per_batch(), 0.0);
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_max_never_resets() {
+        // The bugfix contract: pushing far past the cap must keep memory
+        // bounded, keep quantiles meaningful, and never lose the max.
+        let m = Metrics::default();
+        m.record_latency(Duration::from_micros(999_999)); // early spike
+        for _ in 0..(3 * LATENCY_RESERVOIR_CAP) {
+            m.record_latency(Duration::from_micros(10));
+        }
+        {
+            let r = m.latencies_us.lock().unwrap();
+            assert_eq!(r.samples.len(), LATENCY_RESERVOIR_CAP, "reservoir grew past cap");
+            assert_eq!(r.seen, 3 * LATENCY_RESERVOIR_CAP as u64 + 1);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_samples, 3 * LATENCY_RESERVOIR_CAP as u64 + 1);
+        assert_eq!(s.max_us, 999_999, "max_us must survive reservoir replacement");
+        assert_eq!(s.p50_us, 10, "uniform sample dominated by the steady value");
+        let text = s.render();
+        assert!(text.contains("positron_latency_max_us 999999"), "{text}");
+        assert!(text.contains("positron_latency_samples_total"), "{text}");
+    }
+
+    #[test]
+    fn failure_counters_render() {
+        let m = Metrics::default();
+        m.record_deadline_expired();
+        m.record_deadline_expired();
+        m.record_batch_failure();
+        let s = m.snapshot();
+        assert_eq!(s.deadline_expired, 2);
+        assert_eq!(s.batch_failures, 1);
+        let text = s.render();
+        assert!(text.contains("positron_deadline_expired_total 2"), "{text}");
+        assert!(text.contains("positron_batch_failures_total 1"), "{text}");
     }
 
     #[test]

@@ -1,14 +1,32 @@
-//! L3 coordinator: the serving loop around the AOT-compiled model.
+//! L3 coordinator: the serving loop around the model.
 //!
 //! The paper's contribution lives in the format (L1/L2 + the hw designs),
 //! so L3 is a deliberately thin but production-shaped driver: a bounded
 //! request queue, a dynamic batcher (max-batch / max-wait), b-posit
-//! quantization of inputs on the hot path via the Rust codec, PJRT
-//! execution, and latency/throughput metrics.
+//! quantization of inputs on the hot path via the Rust codec, pluggable
+//! execution backends, per-request deadlines, and latency/throughput
+//! metrics behind a real HTTP listener.
+//!
+//! - [`backend`] — the [`InferenceBackend`] trait with two impls: the
+//!   default **native** executor (dense layers on the blocked
+//!   quantized-weight GEMM, weights encoded once through a content-hash
+//!   cache; no libxla) and the PJRT/XLA executor (`runtime` feature).
+//! - [`server`] — the batching worker + typed client errors
+//!   ([`InferError`] / [`ServeError`]): queue-full backpressure,
+//!   deadline expiry, and explicit per-request batch-failure answers.
+//! - [`http`] — zero-dependency HTTP/1.1 listener: `GET /metrics`
+//!   (Prometheus-style), `GET /healthz`, `POST /infer`.
+//! - [`metrics`] — counters + bounded-reservoir latency quantiles.
+//! - [`quantizer`] — the f32⇄b-posit batch codec tiers and the
+//!   process-wide quantized-weight cache.
 
+pub mod backend;
+pub mod http;
 pub mod metrics;
 pub mod quantizer;
 pub mod server;
 
+pub use backend::{BackendKind, InferenceBackend, NativeBackend, PjrtBackend, WeightFormat};
+pub use http::HttpServer;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{InferenceServer, Response, ServerConfig};
+pub use server::{InferError, InferenceServer, Response, ServeError, ServerConfig};

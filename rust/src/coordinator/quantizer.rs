@@ -219,6 +219,135 @@ pub fn roundtrip64_in_place(xs: &mut [f64]) {
     parallel::bp64_roundtrip_in_place(xs);
 }
 
+// ----------------------------------------------------------------------
+// Quantized-weight cache: process-wide, keyed by tensor *content* hash
+// (FNV-1a over the element bit patterns, salted with a tag string and the
+// tensor dims). Serving backends encode/transpose model weights exactly
+// once per distinct tensor — reloading the same model, or serving it from
+// several servers in one process, reuses the first encoding via `Arc`.
+// Zero dependencies: plain `Mutex<HashMap>` (load-time path, not the
+// request path).
+// ----------------------------------------------------------------------
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A cached encoded-weight tensor (whatever layout the builder produced).
+#[derive(Clone)]
+pub enum CachedWeights {
+    U32(Arc<Vec<u32>>),
+    U64(Arc<Vec<u64>>),
+    F32(Arc<Vec<f32>>),
+}
+
+static WEIGHT_CACHE: OnceLock<Mutex<HashMap<u64, CachedWeights>>> = OnceLock::new();
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Distinct tensors retained at once. A server reloading retrained
+/// weights produces a *new* content hash per reload; without a bound the
+/// Arc-pinned old encodings would accumulate forever. Eviction is
+/// arbitrary-entry (the cache is a dedup, not an LRU — live backends
+/// keep their own `Arc`s regardless).
+pub const WEIGHT_CACHE_CAP: usize = 64;
+
+fn cache() -> &'static Mutex<HashMap<u64, CachedWeights>> {
+    WEIGHT_CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn insert_bounded(m: &mut HashMap<u64, CachedWeights>, key: u64, v: CachedWeights) {
+    if m.len() >= WEIGHT_CACHE_CAP && !m.contains_key(&key) {
+        if let Some(evict) = m.keys().next().copied() {
+            m.remove(&evict);
+        }
+    }
+    m.insert(key, v);
+}
+
+/// FNV-1a over a stream of u64 words.
+fn fnv1a64(words: impl Iterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut step = |w: u64| {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for w in words {
+        step(w);
+    }
+    h
+}
+
+/// Content key for an i32 bit-pattern tensor (tag + dims + every word).
+pub fn tensor_key_i32(tag: &str, rows: usize, cols: usize, bits: &[i32]) -> u64 {
+    let head = tag.bytes().map(|b| b as u64).chain([rows as u64, cols as u64]);
+    fnv1a64(head.chain(bits.iter().map(|&b| b as u32 as u64)))
+}
+
+/// Content key for an f32 tensor (tag + dims + every element's bits).
+pub fn tensor_key_f32(tag: &str, rows: usize, cols: usize, xs: &[f32]) -> u64 {
+    let head = tag.bytes().map(|b| b as u64).chain([rows as u64, cols as u64]);
+    fnv1a64(head.chain(xs.iter().map(|x| x.to_bits() as u64)))
+}
+
+// The three typed lookups share one shape: a hit must match the caller's
+// layout (a mismatch under the same key is possible only on a hash
+// collision across tags and is treated as a miss and overwritten); the
+// build runs *outside* the lock — encoding a large tensor can take a
+// while, and a racing builder just repeats the same deterministic work.
+// One macro, so the protocol can't silently diverge between element types.
+macro_rules! cached_weights_fn {
+    ($(#[$doc:meta])* $name:ident, $elem:ty, $variant:ident) => {
+        $(#[$doc])*
+        pub fn $name(key: u64, build: impl FnOnce() -> Vec<$elem>) -> Arc<Vec<$elem>> {
+            if let Some(CachedWeights::$variant(a)) = cache().lock().unwrap().get(&key).cloned() {
+                CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+                return a;
+            }
+            CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+            let a = Arc::new(build());
+            insert_bounded(&mut cache().lock().unwrap(), key, CachedWeights::$variant(a.clone()));
+            a
+        }
+    };
+}
+
+cached_weights_fn!(
+    /// Cached u32-word weight tensor (b-posit32 serving weights).
+    cached_weights_u32,
+    u32,
+    U32
+);
+cached_weights_fn!(
+    /// Cached u64-word weight tensor (b-posit64 serving weights).
+    cached_weights_u64,
+    u64,
+    U64
+);
+cached_weights_fn!(
+    /// Cached f32 weight tensor (the float-baseline serving weights).
+    cached_weights_f32,
+    f32,
+    F32
+);
+
+/// `(hits, misses)` since process start (monotone; shared by all servers).
+pub fn weight_cache_stats() -> (u64, u64) {
+    (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
+}
+
+/// Number of distinct cached tensors.
+pub fn weight_cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// Drop every cached tensor (tests; stats are left monotone).
+pub fn weight_cache_clear() {
+    cache().lock().unwrap().clear();
+}
+
 /// Specialized b-posit⟨32,6,5⟩ encoder for f32 inputs (scalar fast path).
 ///
 /// Mirrors the Pallas kernel's contract exactly: f32 subnormal inputs
@@ -499,6 +628,34 @@ mod tests {
         quantize64_into(&xs, &mut bits);
         assert_eq!(bits.capacity(), cap);
         assert_eq!(bits.len(), 40);
+    }
+
+    #[test]
+    fn weight_cache_builds_once_per_content() {
+        // Unique tag keeps this test independent of every other cache
+        // user in the concurrently-running test process.
+        let w: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 16.0).collect();
+        let key = tensor_key_f32("test-cache-builds-once", 8, 8, &w);
+        let builds = std::sync::atomic::AtomicU64::new(0);
+        let build = || {
+            builds.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            w.iter().map(|&x| quantize_one(x) as u32).collect::<Vec<u32>>()
+        };
+        let a = cached_weights_u32(key, build);
+        let b = cached_weights_u32(key, build); // ref-capturing closure: Copy
+        assert_eq!(builds.load(std::sync::atomic::Ordering::Relaxed), 1, "second lookup rebuilt");
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached allocation");
+        // Different content (or dims, or tag) ⇒ different key.
+        let mut w2 = w.clone();
+        w2[0] += 1.0;
+        assert_ne!(key, tensor_key_f32("test-cache-builds-once", 8, 8, &w2));
+        assert_ne!(key, tensor_key_f32("test-cache-builds-once", 4, 16, &w));
+        assert_ne!(key, tensor_key_f32("test-cache-builds-once2", 8, 8, &w));
+        let bits: Vec<i32> = w.iter().map(|&x| quantize_one(x)).collect();
+        let k1 = tensor_key_i32("test-cache-i32", 8, 8, &bits);
+        let mut bits2 = bits.clone();
+        bits2[5] ^= 1;
+        assert_ne!(k1, tensor_key_i32("test-cache-i32", 8, 8, &bits2));
     }
 
     #[test]

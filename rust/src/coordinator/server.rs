@@ -1,20 +1,28 @@
 //! Batching inference server.
 //!
-//! PJRT handles are not `Send`, so the worker thread *creates* the runtime,
-//! compiles the model, and owns every literal; clients only exchange plain
-//! `Vec<f32>` through bounded channels. The worker assembles dynamic
-//! batches (up to the model's static batch, or until `max_wait` expires),
-//! rounds inputs through b-posit32 (the format under test), executes, and
-//! fans results back out. A full queue rejects with `Busy` — backpressure.
+//! Clients exchange plain `Vec<f32>` with a single worker thread through
+//! bounded channels; the worker *creates* its execution backend (see
+//! [`super::backend`]) at startup — PJRT handles are not `Send`, and the
+//! native backend's scratch is single-owner — assembles dynamic batches
+//! (up to `max_batch`, or until `max_wait` expires), quantizes inputs
+//! through the b-posit codec where the serving format calls for it,
+//! executes, and fans results back out. A full queue rejects with a
+//! `Busy` error — backpressure.
 //!
-//! Steady-state allocation discipline: the batch staging buffer and the
-//! input literal are built once and reused every iteration; quantization
-//! runs through the vector codec *in place* on the staging buffer, and
-//! batches past the fork-join threshold are sharded across worker threads
-//! (`PALLAS_THREADS`, auto default) with bit-identical results. The codec
-//! and model-execute stages are timed separately into [`Metrics`], which
-//! also exports the sharded-codec thread count.
+//! Failure discipline: every admitted request gets an answer. Requests
+//! that outlive `cfg.deadline` while queued are answered with
+//! [`ServeError::DeadlineExceeded`] instead of occupying a batch slot;
+//! a failed batch execution answers every member with
+//! [`ServeError::BackendFailed`] and bumps
+//! `positron_batch_failures_total` — never a silently dropped channel.
+//!
+//! Steady-state allocation discipline: the staging buffer is built once
+//! and reused; quantization runs through the sharded vector codec in
+//! place, and the backend returns logits borrowed from its own reused
+//! scratch. The codec and execute stages are timed separately into
+//! [`Metrics`].
 
+use std::fmt;
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -23,23 +31,39 @@ use std::time::{Duration, Instant};
 
 use crate::error::{anyhow, Result};
 
+use super::backend::{BackendKind, InferenceBackend, NativeBackend, PjrtBackend, WeightFormat};
 use super::metrics::Metrics;
 use super::quantizer;
-use crate::runtime::{lit_f32_2d, Literal, ModelWeights, Runtime};
+use crate::runtime::ModelWeights;
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Max requests per executed batch (≤ the model's static batch size).
+    /// Max requests per executed batch (additionally capped by the
+    /// backend's own limit, e.g. the PJRT model's static batch).
     pub max_batch: usize,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
     /// Bounded queue depth (backpressure beyond this).
     pub queue_depth: usize,
-    /// Quantize inputs through b-posit32 before execution.
+    /// Quantize inputs through the serving format's codec before
+    /// execution (b-posit32 roundtrip for the BP32 tier; a no-op for f32
+    /// and for BP64, where every f32 input is exactly representable).
     pub quantize_inputs: bool,
-    /// Which model artifact to serve.
+    /// Which executor the worker builds ([`BackendKind::Native`] needs
+    /// only `weights.json`; [`BackendKind::Pjrt`] needs the `runtime`
+    /// feature plus compiled HLO artifacts).
+    pub backend: BackendKind,
+    /// How the model weights are stored and multiplied. Shared with the
+    /// backend layer — this replaces the old
+    /// `model_file.contains("f32")` string sniffing.
+    pub weight_format: WeightFormat,
+    /// HLO artifact for the PJRT backend (ignored by the native one).
     pub model_file: String,
+    /// Per-request deadline: a request still *queued* this long after
+    /// submission is answered with [`ServeError::DeadlineExceeded`]
+    /// instead of occupying a batch slot. `None` disables.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -49,7 +73,71 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(2),
             queue_depth: 256,
             quantize_inputs: true,
-            model_file: "model_bposit.hlo.txt".into(),
+            backend: BackendKind::Native,
+            weight_format: WeightFormat::Bp32,
+            model_file: WeightFormat::Bp32.model_file().into(),
+            deadline: None,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// A config serving `format`, with the PJRT artifact name kept in
+    /// sync for builds that select the PJRT backend.
+    pub fn for_format(format: WeightFormat) -> ServerConfig {
+        ServerConfig {
+            weight_format: format,
+            model_file: format.model_file().into(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Why the worker answered a request with an error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request sat queued past `cfg.deadline`.
+    DeadlineExceeded,
+    /// The backend failed to execute the batch.
+    BackendFailed(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::BackendFailed(m) => write!(f, "batch execution failed: {m}"),
+        }
+    }
+}
+
+/// What the worker sends back per request.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
+/// Client-facing error classification (the HTTP layer maps these to
+/// status codes).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// Malformed request (wrong feature count).
+    BadRequest(String),
+    /// Queue full — back off and retry.
+    Busy,
+    /// Server shut down.
+    Stopped,
+    /// The request's deadline passed while it was queued.
+    DeadlineExceeded,
+    /// The backend failed to execute the batch.
+    Backend(String),
+}
+
+impl fmt::Display for InferError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InferError::BadRequest(m) => write!(f, "{m}"),
+            InferError::Busy => write!(f, "server busy (queue full)"),
+            InferError::Stopped => write!(f, "server stopped"),
+            InferError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            InferError::Backend(m) => write!(f, "batch execution failed: {m}"),
         }
     }
 }
@@ -58,7 +146,7 @@ impl Default for ServerConfig {
 struct Request {
     features: Vec<f32>,
     submitted: Instant,
-    resp: SyncSender<Response>,
+    resp: SyncSender<ServeResult>,
 }
 
 /// One inference response.
@@ -78,30 +166,60 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Spawn the worker; it opens the PJRT runtime on `artifact_dir`,
-    /// compiles `cfg.model_file`, and reports readiness before this
-    /// returns. Without the `runtime` cargo feature this fails fast with
-    /// the "runtime disabled" error.
+    /// Spawn the worker; it builds the configured backend (native by
+    /// default — PJRT only when `cfg.backend` says so) and reports
+    /// readiness before this returns.
     pub fn start(artifact_dir: PathBuf, cfg: ServerConfig) -> Result<InferenceServer> {
+        let c = cfg.clone();
+        Self::start_with_factory(
+            move || -> Result<Box<dyn InferenceBackend>> {
+                match c.backend {
+                    BackendKind::Native => {
+                        Ok(Box::new(NativeBackend::load(&artifact_dir, c.weight_format)?))
+                    }
+                    BackendKind::Pjrt => Ok(Box::new(PjrtBackend::load(
+                        &artifact_dir,
+                        &c.model_file,
+                        c.weight_format,
+                    )?)),
+                }
+            },
+            cfg,
+        )
+    }
+
+    /// Start a native server over already-loaded (or synthetic) weights
+    /// — no artifact files at all. `cfg.weight_format` selects the GEMM
+    /// family.
+    pub fn start_native(weights: ModelWeights, cfg: ServerConfig) -> Result<InferenceServer> {
+        let format = cfg.weight_format;
+        Self::start_with_factory(
+            move || -> Result<Box<dyn InferenceBackend>> {
+                Ok(Box::new(NativeBackend::from_weights(&weights, format)?))
+            },
+            cfg,
+        )
+    }
+
+    /// Start over an arbitrary backend factory. The factory runs *on the
+    /// worker thread* (PJRT handles are not `Send`); startup errors are
+    /// reported from here. Tests use this to inject slow or failing
+    /// backends.
+    pub fn start_with_factory<F>(factory: F, cfg: ServerConfig) -> Result<InferenceServer>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(usize, usize), String>>(1);
-        let worker = std::thread::spawn(move || {
-            let setup = (|| -> Result<(Runtime, ModelWeights, crate::runtime::LoadedModel)> {
-                let rt = Runtime::cpu(&artifact_dir)?;
-                let weights = ModelWeights::load(&rt)?;
-                let model = rt.load(&cfg.model_file)?;
-                Ok((rt, weights, model))
-            })();
-            match setup {
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                }
-                Ok((_rt, weights, model)) => {
-                    let _ = ready_tx.send(Ok((weights.d, weights.c)));
-                    worker_loop(model, weights, cfg, rx, m2);
-                }
+        let worker = std::thread::spawn(move || match factory() {
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("{e:#}")));
+            }
+            Ok(backend) => {
+                let _ = ready_tx.send(Ok(backend.dims()));
+                worker_loop(backend, cfg, rx, m2);
             }
         });
         let dims = ready_rx
@@ -111,10 +229,14 @@ impl InferenceServer {
         Ok(InferenceServer { tx, metrics, worker: Some(worker), dims })
     }
 
-    /// Blocking inference for one feature vector.
-    pub fn infer(&self, features: Vec<f32>) -> Result<Response> {
+    /// Blocking inference with a typed error (what the HTTP layer uses).
+    pub fn try_infer(&self, features: Vec<f32>) -> std::result::Result<Response, InferError> {
         if features.len() != self.dims.0 {
-            return Err(anyhow!("expected {} features, got {}", self.dims.0, features.len()));
+            return Err(InferError::BadRequest(format!(
+                "expected {} features, got {}",
+                self.dims.0,
+                features.len()
+            )));
         }
         let (rtx, rrx) = sync_channel(1);
         let req = Request { features, submitted: Instant::now(), resp: rtx };
@@ -123,15 +245,26 @@ impl InferenceServer {
             Ok(()) => {}
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
-                return Err(anyhow!("server busy (queue full)"));
+                return Err(InferError::Busy);
             }
-            Err(TrySendError::Disconnected(_)) => return Err(anyhow!("server stopped")),
+            Err(TrySendError::Disconnected(_)) => return Err(InferError::Stopped),
         }
-        rrx.recv().map_err(|_| anyhow!("server dropped request"))
+        match rrx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(ServeError::DeadlineExceeded)) => Err(InferError::DeadlineExceeded),
+            Ok(Err(ServeError::BackendFailed(m))) => Err(InferError::Backend(m)),
+            Err(_) => Err(InferError::Stopped),
+        }
     }
 
-    /// Non-blocking submit returning a waiter.
-    pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Blocking inference for one feature vector.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Response> {
+        self.try_infer(features).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Non-blocking submit returning a waiter for the worker's answer
+    /// (response or per-request serve error).
+    pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<ServeResult>> {
         if features.len() != self.dims.0 {
             return Err(anyhow!("expected {} features, got {}", self.dims.0, features.len()));
         }
@@ -165,97 +298,90 @@ impl Drop for InferenceServer {
     }
 }
 
+/// Hard ceiling on rows staged per batch: the native backend accepts any
+/// batch (`max_batch() == usize::MAX`), so an "unlimited" `cfg.max_batch`
+/// must not translate into an unbounded up-front staging allocation.
+pub const MAX_STAGED_BATCH: usize = 4096;
+
 fn worker_loop(
-    model: crate::runtime::LoadedModel,
-    weights: ModelWeights,
+    mut backend: Box<dyn InferenceBackend>,
     cfg: ServerConfig,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
-    let d = weights.d;
-    let c = weights.c;
-    let model_batch = weights.batch;
-    let max_batch = cfg.max_batch.min(model_batch);
+    let (d, c) = backend.dims();
+    let max_batch = cfg.max_batch.min(backend.max_batch()).clamp(1, MAX_STAGED_BATCH);
     metrics.set_codec_threads(crate::vector::parallel::num_threads());
-    // Argument literals are built once and reused: execute() only borrows
-    // them. Slot 0 (the batch input) is refreshed in place each iteration.
-    let weight_lits = match if cfg.model_file.contains("f32") {
-        weights.f32_arg_literals()
-    } else {
-        weights.bposit_arg_literals()
-    } {
-        Ok(w) => w,
-        Err(e) => {
-            eprintln!("weight literal construction failed: {e}");
-            return;
+    // Persistent staging buffer: the steady-state loop performs no
+    // per-request heap allocation on the quantize path.
+    let mut x = vec![0f32; max_batch * d];
+    // Deadline admission: a queued request past its deadline is answered
+    // immediately and never occupies a batch slot.
+    let admit = |r: Request, batch: &mut Vec<Request>| {
+        if cfg.deadline.is_some_and(|dl| r.submitted.elapsed() > dl) {
+            metrics.record_deadline_expired();
+            let _ = r.resp.send(Err(ServeError::DeadlineExceeded));
+        } else {
+            batch.push(r);
         }
     };
-    // Persistent staging buffer (model_batch × d) + input literal: the
-    // steady-state loop below performs no per-request heap allocation on
-    // the quantize path.
-    let mut x = vec![0f32; model_batch * d];
-    let mut args: Vec<Literal> = Vec::with_capacity(1 + weight_lits.len());
-    match lit_f32_2d(&x, model_batch, d) {
-        Ok(l) => args.push(l),
-        Err(e) => {
-            eprintln!("initial literal failed: {e}");
-            return;
-        }
-    }
-    args.extend(weight_lits);
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // channel closed: shut down
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
+        // Block for the first admitted request of a batch.
+        let mut batch: Vec<Request> = Vec::new();
+        while batch.is_empty() {
+            match rx.recv() {
+                Ok(r) => admit(r, &mut batch),
+                Err(_) => return, // channel closed: shut down
+            }
+        }
+        let wait_until = Instant::now() + cfg.max_wait;
         while batch.len() < max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= wait_until {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+            match rx.recv_timeout(wait_until - now) {
+                Ok(r) => admit(r, &mut batch),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        metrics.record_batch(batch.len());
+        let rows = batch.len();
+        metrics.record_batch(rows);
 
-        // Stage the (model_batch × d) input: fill the live prefix, zero the
-        // padding rows, then quantize the prefix in place (vector codec).
-        // Only the quantize pass counts as codec time — staging memcpys and
-        // the literal refresh are batching overhead, not codec cost.
+        // Stage the rows×d input, then quantize in place when the
+        // serving format calls for it (only the quantize pass counts as
+        // codec time — staging memcpys are batching overhead).
         for (i, r) in batch.iter().enumerate() {
             x[i * d..(i + 1) * d].copy_from_slice(&r.features);
         }
-        x[batch.len() * d..].fill(0.0);
-        if cfg.quantize_inputs {
+        if cfg.quantize_inputs && cfg.weight_format == WeightFormat::Bp32 {
             let t_codec = Instant::now();
-            quantizer::roundtrip_in_place(&mut x[..batch.len() * d]);
+            quantizer::roundtrip_in_place(&mut x[..rows * d]);
             metrics.record_codec(t_codec.elapsed());
-        }
-        if let Err(e) = args[0].copy_from_f32(&x) {
-            eprintln!("input literal refresh failed: {e}");
-            continue;
         }
 
         let t_exec = Instant::now();
-        let out = match model.run_f32(&args) {
-            Ok(o) => o,
-            Err(e) => {
-                eprintln!("batch execute failed: {e}");
-                continue;
+        match backend.run(&x[..rows * d], rows) {
+            Ok(out) => {
+                metrics.record_execute(t_exec.elapsed());
+                for (i, r) in batch.into_iter().enumerate() {
+                    let logits = out[i * c..(i + 1) * c].to_vec();
+                    let latency = r.submitted.elapsed();
+                    metrics.record_latency(latency);
+                    let _ = r.resp.send(Ok(Response { logits, latency }));
+                }
             }
-        };
-        metrics.record_execute(t_exec.elapsed());
-        for (i, r) in batch.into_iter().enumerate() {
-            let logits = out[i * c..(i + 1) * c].to_vec();
-            let latency = r.submitted.elapsed();
-            metrics.record_latency(latency);
-            let _ = r.resp.send(Response { logits, latency });
+            Err(e) => {
+                // Answer every member explicitly — a failed batch must
+                // not look like a dropped connection to clients.
+                metrics.record_batch_failure();
+                let msg = format!("{e:#}");
+                eprintln!("batch execute failed ({rows} requests): {msg}");
+                for r in batch {
+                    let _ = r.resp.send(Err(ServeError::BackendFailed(msg.clone())));
+                }
+            }
         }
     }
 }
@@ -264,15 +390,25 @@ fn worker_loop(
 mod tests {
     use super::*;
 
-    /// The satellite contract for builds without libxla: starting the
-    /// server fails fast with the documented "runtime disabled" error
-    /// instead of panicking or hanging.
+    /// The contract for builds without libxla: *explicitly selecting* the
+    /// PJRT backend fails fast with the documented "runtime disabled"
+    /// error instead of panicking or hanging. (The default backend is
+    /// native and needs no runtime feature at all.)
     #[test]
     #[cfg(not(feature = "runtime"))]
-    fn start_without_runtime_feature_fails_with_clear_error() {
-        let err = InferenceServer::start(PathBuf::from("artifacts"), ServerConfig::default())
-            .unwrap_err();
+    fn pjrt_backend_without_runtime_feature_fails_with_clear_error() {
+        let cfg = ServerConfig { backend: BackendKind::Pjrt, ..Default::default() };
+        let err = InferenceServer::start(PathBuf::from("artifacts"), cfg).unwrap_err();
         assert!(err.to_string().contains("runtime disabled"), "{err}");
     }
-}
 
+    /// Native startup against a directory with no weights.json reports a
+    /// clean error naming the file.
+    #[test]
+    fn native_backend_missing_weights_is_clean_error() {
+        let cfg = ServerConfig::default();
+        let err = InferenceServer::start(PathBuf::from("/nonexistent-dir-positron"), cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("weights.json"), "{err}");
+    }
+}

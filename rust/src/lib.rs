@@ -22,9 +22,18 @@
 //!   (Figs 6/7).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX artifacts
 //!   (behind the `runtime` cargo feature; a stub with a clear "disabled"
-//!   error path otherwise, so offline builds need no libxla).
-//! - [`coordinator`] — the L3 serving loop: batching, quantization through
-//!   the vector codec with buffer reuse, codec/execute-split metrics.
+//!   error path otherwise, so offline builds need no libxla) plus the
+//!   artifact-file loaders (`ModelWeights::load_from_dir` reads
+//!   `weights.json` with no runtime at all).
+//! - [`coordinator`] — the L3 serving stack: pluggable execution backends
+//!   behind the `InferenceBackend` trait (the default **native** backend
+//!   runs dense layers on the blocked quantized-weight GEMM, weights
+//!   encoded once via a content-hash cache; PJRT is the feature-gated
+//!   alternative), the batching worker (backpressure, per-request
+//!   deadlines, explicit batch-failure answers), a zero-dependency HTTP
+//!   listener (`GET /metrics`, `POST /infer`), quantization through the
+//!   vector codec with buffer reuse, and bounded-reservoir
+//!   codec/execute-split metrics.
 //! - [`harness`] — self-contained benchmark harness (criterion-style) with
 //!   JSON emission for `BENCH_*.json` artifacts.
 //! - [`error`] — in-tree anyhow-style error type (offline dependency set).

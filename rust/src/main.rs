@@ -1,9 +1,13 @@
 //! `positron` — leader binary: CLI over the codec zoo, the gate-level PPA
-//! tables, the accuracy analysis, and the batching inference demo.
+//! tables, the accuracy analysis, and the inference server (native
+//! blocked-GEMM backend by default, PJRT opt-in, real HTTP listener).
 
-use positron::cli::{self, Command};
-use positron::coordinator::{InferenceServer, ServerConfig};
-use positron::runtime::{artifacts_available, ModelWeights, Runtime};
+use std::sync::Arc;
+use std::time::Duration;
+
+use positron::cli::{self, Command, ServeOpts};
+use positron::coordinator::{backend, http, InferenceServer, ServerConfig};
+use positron::runtime::{artifacts_available, ModelWeights};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -79,52 +83,90 @@ fn run(cmd: Command) -> positron::error::Result<()> {
                 println!("{line}");
             }
         }
-        Command::Serve { requests, artifact_dir } => {
-            let rt = Runtime::cpu(&artifact_dir)?;
-            println!("platform: {}", rt.platform());
-            let weights = ModelWeights::load(&rt)?;
-            drop(rt); // the server worker owns its own PJRT client
-            let server =
-                InferenceServer::start(artifact_dir.clone().into(), ServerConfig::default())?;
-            let d = weights.d;
-            let n_gold = weights.golden_y.len();
-            let t0 = std::time::Instant::now();
-            let mut correct = 0usize;
-            for i in 0..requests {
-                let g = i % n_gold;
-                let feats = weights.golden_x[g * d..(g + 1) * d].to_vec();
-                let resp = server.infer(feats)?;
-                let argmax = resp
-                    .logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                if argmax == weights.golden_y[g] as usize {
-                    correct += 1;
-                }
+        Command::Serve(o) => serve(o)?,
+        Command::ServeBench(o) => {
+            for line in cli::run_serve_bench(&o).map_err(positron::error::Error::msg)? {
+                println!("{line}");
             }
-            let wall = t0.elapsed();
-            let m = server.metrics().snapshot();
-            println!(
-                "served {requests} requests in {:.2}s ({:.0} req/s), accuracy {:.1}%",
-                wall.as_secs_f64(),
-                requests as f64 / wall.as_secs_f64(),
-                100.0 * correct as f64 / requests as f64
-            );
-            println!(
-                "latency p50 {} µs  p99 {} µs  max {} µs; {} batches, mean batch {:.1}, {} rejected",
-                m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch, m.rejected
-            );
-            println!(
-                "codec {:.1} µs/batch, execute {:.1} µs/batch (codec share {:.2}%)",
-                m.codec_ns_per_batch() / 1e3,
-                m.execute_ns_per_batch() / 1e3,
-                100.0 * m.codec_ns as f64 / (m.codec_ns + m.execute_ns).max(1) as f64
-            );
-            println!("--- /metrics ---\n{}", m.render());
         }
     }
+    Ok(())
+}
+
+fn serve(o: ServeOpts) -> positron::error::Result<()> {
+    let cfg = ServerConfig {
+        backend: o.backend,
+        weight_format: o.format,
+        model_file: o.format.model_file().into(),
+        deadline: o.deadline_ms.map(Duration::from_millis),
+        ..Default::default()
+    };
+    let (server, weights) = if o.synthetic {
+        let w = backend::synth_weights(64, 128, 16, 64, 0x5eed);
+        (InferenceServer::start_native(w.clone(), cfg)?, w)
+    } else {
+        let w = ModelWeights::load_from_dir(&o.artifact_dir)?;
+        (InferenceServer::start(o.artifact_dir.clone().into(), cfg)?, w)
+    };
+    let server = Arc::new(server);
+    println!(
+        "serving {} ({} backend, {} weights, d={} c={})",
+        if o.synthetic { "synthetic model" } else { o.artifact_dir.as_str() },
+        o.backend.name(),
+        o.format.name(),
+        server.dims.0,
+        server.dims.1
+    );
+    if let Some(addr) = &o.http {
+        let listener = http::serve(addr, server.clone())?;
+        println!(
+            "listening on http://{} — GET /metrics, GET /healthz, POST /infer \
+             {{\"features\":[…]}} (Ctrl-C to stop)",
+            listener.local_addr()
+        );
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    // Self-driving demo loop over the golden batch.
+    let d = weights.d;
+    let n_gold = weights.golden_y.len().max(1);
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    for i in 0..o.requests {
+        let g = i % n_gold;
+        let feats = weights.golden_x[g * d..(g + 1) * d].to_vec();
+        let resp = server.infer(feats)?;
+        let argmax = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == weights.golden_y[g] as usize {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = server.metrics().snapshot();
+    println!(
+        "served {} requests in {:.2}s ({:.0} req/s), accuracy {:.1}%",
+        o.requests,
+        wall.as_secs_f64(),
+        o.requests as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / o.requests.max(1) as f64
+    );
+    println!(
+        "latency p50 {} µs  p99 {} µs  max {} µs; {} batches, mean batch {:.1}, {} rejected",
+        m.p50_us, m.p99_us, m.max_us, m.batches, m.mean_batch, m.rejected
+    );
+    println!(
+        "codec {:.1} µs/batch, execute {:.1} µs/batch (codec share {:.2}%)",
+        m.codec_ns_per_batch() / 1e3,
+        m.execute_ns_per_batch() / 1e3,
+        100.0 * m.codec_ns as f64 / (m.codec_ns + m.execute_ns).max(1) as f64
+    );
+    println!("--- /metrics ---\n{}", m.render());
     Ok(())
 }

@@ -209,7 +209,16 @@ pub struct ModelWeights {
 
 impl ModelWeights {
     pub fn load(rt: &Runtime) -> Result<ModelWeights> {
-        let j = rt.json("weights.json")?;
+        Self::load_from_dir(rt.dir())
+    }
+
+    /// Load `weights.json` straight from an artifact directory — no PJRT
+    /// client, no `runtime` feature. This is the native serving backend's
+    /// entire artifact dependency.
+    pub fn load_from_dir(dir: impl AsRef<Path>) -> Result<ModelWeights> {
+        let path = dir.as_ref().join("weights.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {path:?}: {e}"))?;
         let f = |k: &str| -> Result<Vec<f32>> {
             j.get(k).and_then(|v| v.as_f32_vec()).ok_or_else(|| anyhow!("weights.json missing {k}"))
         };
@@ -274,6 +283,12 @@ pub fn default_artifact_dir() -> PathBuf {
 /// True if the AOT artifacts exist (tests skip gracefully otherwise).
 pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("model_bposit.hlo.txt").exists() && dir.join("weights.json").exists()
+}
+
+/// True if `weights.json` exists — all the native serving backend needs
+/// (the compiled HLO artifacts are only required by the PJRT backend).
+pub fn weights_available(dir: &Path) -> bool {
+    dir.join("weights.json").exists()
 }
 
 #[cfg(test)]

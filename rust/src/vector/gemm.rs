@@ -49,6 +49,29 @@ fn check_shape(a_len: usize, b_len: usize, c_len: usize, m: usize, k: usize, n: 
     assert_eq!(c_len, m * n, "gemm: C must be m×n");
 }
 
+/// Out-of-place matrix transpose: `dst` (cols×rows) ← `src` (rows×cols),
+/// both row-major, tiled so both sides stream through cache. Generic over
+/// the element so the serving layer can transpose f32 activations and
+/// i32/u32/u64 weight words with the same code — the native backend's
+/// weights-as-A GEMM formulation stages everything transposed once at
+/// load (weights) or per batch (activations).
+pub fn transpose<T: Copy>(src: &[T], dst: &mut [T], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols, "transpose: src must be rows×cols");
+    assert_eq!(dst.len(), rows * cols, "transpose: dst must be cols×rows");
+    const TB: usize = 32;
+    for i0 in (0..rows).step_by(TB) {
+        let i1 = rows.min(i0 + TB);
+        for j0 in (0..cols).step_by(TB) {
+            let j1 = cols.min(j0 + TB);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+        }
+    }
+}
+
 /// Pack `B[pc..pc+kc, jc..jc+nc]` into `NR`-wide panels: panel `pi`
 /// holds `kc` rows of `NR` contiguous values (zero-padded past `nc`).
 fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
@@ -694,6 +717,24 @@ pub fn par_gemm_bp64_weights_fast(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn transpose_roundtrips_and_matches_indexing() {
+        let mut rng = crate::testutil::Rng::new(0x7a39);
+        for (rows, cols) in [(1, 1), (3, 7), (33, 65), (64, 40)] {
+            let src: Vec<u32> = (0..rows * cols).map(|_| rng.next_u32()).collect();
+            let mut t = vec![0u32; rows * cols];
+            transpose(&src, &mut t, rows, cols);
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(t[j * rows + i], src[i * cols + j], "{rows}x{cols} ({i},{j})");
+                }
+            }
+            let mut back = vec![0u32; rows * cols];
+            transpose(&t, &mut back, cols, rows);
+            assert_eq!(back, src, "{rows}x{cols} double transpose");
+        }
+    }
 
     /// Naive ascending-`p` triple loop: one scalar accumulator chain per
     /// element — the order the blocked kernel must reproduce exactly.

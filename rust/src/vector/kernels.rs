@@ -424,9 +424,86 @@ impl QuireDotF64 {
     }
 }
 
+// ----------------------------------------------------------------------
+// Dense-layer epilogues for the transposed serving layout (activations
+// as a rows×cols block with one *neuron per row*): row-broadcast bias
+// add, optionally fused with ReLU. The ReLU is written as an explicit
+// `if v > 0` select — unlike `f32::max`, its treatment of −0.0 and NaN
+// is the same on every platform, so backend and scalar-reference
+// outputs stay bit-identical.
+// ----------------------------------------------------------------------
+
+/// `c[(i,j)] ← relu(c[(i,j)] + bias[i])` over a row-major rows×cols block.
+pub fn bias_relu_rows(c: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(c.len(), rows * cols, "bias_relu_rows: shape mismatch");
+    assert_eq!(bias.len(), rows, "bias_relu_rows: bias must have one entry per row");
+    for i in 0..rows {
+        let b = bias[i];
+        for v in &mut c[i * cols..(i + 1) * cols] {
+            let s = *v + b;
+            *v = if s > 0.0 { s } else { 0.0 };
+        }
+    }
+}
+
+/// `c[(i,j)] ← c[(i,j)] + bias[i]` over a row-major rows×cols block.
+pub fn bias_rows(c: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(c.len(), rows * cols, "bias_rows: shape mismatch");
+    assert_eq!(bias.len(), rows, "bias_rows: bias must have one entry per row");
+    for i in 0..rows {
+        let b = bias[i];
+        for v in &mut c[i * cols..(i + 1) * cols] {
+            *v += b;
+        }
+    }
+}
+
+/// f64 variant of [`bias_relu_rows`] (the b-posit64 serving tier).
+pub fn bias_relu_rows_f64(c: &mut [f64], bias: &[f64], rows: usize, cols: usize) {
+    assert_eq!(c.len(), rows * cols, "bias_relu_rows_f64: shape mismatch");
+    assert_eq!(bias.len(), rows, "bias_relu_rows_f64: bias must have one entry per row");
+    for i in 0..rows {
+        let b = bias[i];
+        for v in &mut c[i * cols..(i + 1) * cols] {
+            let s = *v + b;
+            *v = if s > 0.0 { s } else { 0.0 };
+        }
+    }
+}
+
+/// f64 variant of [`bias_rows`] (the b-posit64 serving tier).
+pub fn bias_rows_f64(c: &mut [f64], bias: &[f64], rows: usize, cols: usize) {
+    assert_eq!(c.len(), rows * cols, "bias_rows_f64: shape mismatch");
+    assert_eq!(bias.len(), rows, "bias_rows_f64: bias must have one entry per row");
+    for i in 0..rows {
+        let b = bias[i];
+        for v in &mut c[i * cols..(i + 1) * cols] {
+            *v += b;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bias_epilogues_broadcast_per_row() {
+        let mut c = vec![1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0]; // 2×3
+        bias_rows(&mut c, &[10.0, -10.0], 2, 3);
+        assert_eq!(c, vec![11.0, 8.0, 13.0, -14.0, -5.0, -16.0]);
+        bias_relu_rows(&mut c, &[0.0, 14.5], 2, 3);
+        assert_eq!(c, vec![11.0, 8.0, 13.0, 0.5, 9.5, 0.0]);
+        // −0.0 sums select to +0.0 deterministically (explicit compare,
+        // not f32::max); the f64 variants share the same contract.
+        let mut z = vec![-0.0f32];
+        bias_relu_rows(&mut z, &[0.0], 1, 1);
+        assert_eq!(z[0].to_bits(), 0.0f32.to_bits());
+        let mut c64 = vec![1.0f64, -3.0];
+        bias_rows_f64(&mut c64, &[0.5], 1, 2);
+        bias_relu_rows_f64(&mut c64, &[0.0], 1, 2);
+        assert_eq!(c64, vec![1.5, 0.0]);
+    }
 
     #[test]
     fn quire_dot_recovers_cancelled_term() {
