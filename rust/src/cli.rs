@@ -23,6 +23,7 @@
 use crate::accuracy;
 use crate::coordinator::backend::{BackendKind, WeightFormat};
 use crate::formats::{ieee, posit, takum, Codec, Decoded};
+use crate::vector::lane::LaneElem;
 use crate::hw::designs::{bposit_dec, bposit_enc, float_dec, float_enc, posit_dec, posit_enc};
 use crate::hw::report;
 
@@ -448,125 +449,171 @@ fn ensure_json_writable(path: &str) -> Result<(), String> {
         .map_err(|e| format!("cannot write bench JSON to {path}: {e}"))
 }
 
-/// Execute `vector-bench`: scalar vs branch-free-vector codec throughput
-/// (BP32 + P32 + the f32⇄bits floor) and the dot-kernel family, over
-/// `len`-element mixed-scale blocks. Shared by the CLI and the
-/// `vector_codec` bench target; optionally writes `BENCH_vector_codec.json`.
-pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<String>, String> {
-    use crate::coordinator::quantizer;
+/// An independent scalar fast-path reference for the serving format at
+/// one width (only the 32-bit tier has one: the `quantizer::fast_bp32_*`
+/// pair). When present, the bench also emits `{bp}_{encode,decode}_vs_fast`
+/// speedup keys — the lane engine measured against the independent
+/// scalar implementation — which CI gates at ≥ 1.0 like every other key,
+/// so unifying the scalar baseline on the (much slower) general codec
+/// did not weaken the regression gate.
+struct FastScalarRef<E: LaneElem> {
+    /// Checksum-returning sweep of the independent scalar encoder.
+    encode: fn(&[E]) -> u64,
+    /// Checksum-returning sweep of the independent scalar decoder.
+    decode: fn(&[E::Word]) -> f64,
+}
+
+/// The single generic code path behind `vector-bench` at **both** widths
+/// (the old hand-duplicated 32/64 functions collapsed; docs/API.md):
+/// general codec vs branch-free lane engine for the serving b-posit and
+/// standard-posit specs, the bits floor, and the dot-kernel family, over
+/// `len`-element mixed-scale blocks. Also verifies that the sharded
+/// codec is bit-identical to serial for t ∈ {1, 2, 7} at this width
+/// (recorded as `bit_identical` in the JSON, gated in CI for both
+/// widths). Emits one JSON schema — `BENCH_vector_codec.json` /
+/// `BENCH_vector_codec64.json` differ only in the `bench` id and the
+/// per-width stage key prefixes.
+fn run_vector_bench_generic<E: LaneElem>(
+    len: usize,
+    json_path: Option<&str>,
+    fast: Option<FastScalarRef<E>>,
+) -> Result<Vec<String>, String> {
     use crate::harness::Bencher;
     use crate::testutil::Rng;
-    use crate::vector::{codec, kernels};
+    use crate::vector::{kernels, parallel, LaneCodec};
 
     if let Some(path) = json_path {
         ensure_json_writable(path)?;
     }
-    let mut rng = Rng::new(0x5eed);
-    // Mixed-scale finite values spanning every regime length — worst case
-    // for the branchy scalar path (mispredicts), steady state for the lane
-    // path (always the same straight-line code).
-    let xs: Vec<f32> = (0..len)
+    let bits = E::BITS;
+    let bench_id = if bits == 64 { "vector_codec64" } else { "vector_codec" };
+    let mut rng = Rng::new(0x5eed ^ ((bits as u64) << 32));
+    // Mixed-scale finite values spanning every regime length (and, at 64
+    // bits, both saturation zones of the 2^±192 formats) — worst case for
+    // the branchy general codec, steady state for the lane path (always
+    // the same straight-line code).
+    let (span, off) = if bits == 64 { (441u64, 220i32) } else { (61u64, 30i32) };
+    let xs: Vec<E> = (0..len)
         .map(|_| {
-            let mag = (rng.f64() + 0.5) * f64::powi(2.0, rng.below(61) as i32 - 30);
-            if rng.below(2) == 0 {
-                mag as f32
-            } else {
-                -mag as f32
-            }
+            let mag = (rng.f64() + 0.5) * f64::powi(2.0, rng.below(span) as i32 - off);
+            E::from_f64(if rng.below(2) == 0 { mag } else { -mag })
         })
         .collect();
-    let words = codec::bp32_encode(&xs);
-    let p32_words = {
-        let mut w = vec![0u32; len];
-        codec::p32_encode_into(&xs, &mut w);
-        w
-    };
-    let ys: Vec<f32> = (0..len).map(|_| (rng.f64() - 0.5) as f32 * 4.0).collect();
-    let mut out_w = vec![0u32; len];
-    let mut out_f = vec![0f32; len];
+    let bp = LaneCodec::<E>::bp();
+    let pstd = LaneCodec::<E>::pstd();
+    let words = bp.encode(&xs);
+    let p_words = pstd.encode(&xs);
+    let ys: Vec<E> = (0..len).map(|_| E::from_f64((rng.f64() - 0.5) * 4.0)).collect();
+    let mut out_w = words.clone();
+    let mut out_f = xs.clone();
+
+    // Sharded-vs-serial bit-identity through the unified par_* entry
+    // points: the acceptance contract, checked before any timing (and
+    // gated on in CI via the JSON flag — at both widths).
+    let mut bit_identical = true;
+    for t in [1usize, 2, 7] {
+        let mut w = words.clone();
+        parallel::par_bp_encode_into_with(t, &xs, &mut w);
+        bit_identical &= w == words;
+        let mut f = xs.clone();
+        parallel::par_bp_decode_into_with(t, &words, &mut f);
+        bp.decode_into(&words, &mut out_f);
+        bit_identical &=
+            f.iter().zip(&out_f).all(|(a, b)| a.to_bits_u64() == b.to_bits_u64());
+    }
 
     let mut b = Bencher::new();
+    let (bp_name, p_name) = (E::BP_NAME, E::PSTD_NAME);
 
-    // --- b-posit32: the serving format ---
-    b.bench(&format!("bp32_encode/scalar/{len}"), || {
-        let mut acc = 0u32;
-        for &x in &xs {
-            acc = acc.wrapping_add(quantizer::fast_bp32_encode(x));
-        }
-        acc
-    });
-    b.bench(&format!("bp32_encode/vector/{len}"), || {
-        codec::bp32_encode_into(&xs, &mut out_w);
-        out_w[0]
-    });
-    b.bench(&format!("bp32_decode/scalar/{len}"), || {
-        let mut acc = 0f32;
-        for &w in &words {
-            acc += quantizer::fast_bp32_decode(w);
-        }
-        acc
-    });
-    b.bench(&format!("bp32_decode/vector/{len}"), || {
-        codec::bp32_decode_into(&words, &mut out_f);
-        out_f[0]
-    });
-    b.bench(&format!("bp32_roundtrip/scalar/{len}"), || {
-        let mut acc = 0f32;
-        for &x in &xs {
-            acc += quantizer::dequantize_one(quantizer::quantize_one(x));
-        }
-        acc
-    });
-    b.bench(&format!("bp32_roundtrip/vector/{len}"), || {
-        out_f.copy_from_slice(&xs);
-        codec::bp32_roundtrip_in_place(&mut out_f);
-        out_f[0]
-    });
-
-    // --- posit<32,2>: general codec vs lane codec ---
-    b.bench(&format!("p32_encode/scalar/{len}"), || {
+    // --- serving b-posit: general codec (scalar) vs lane engine ---
+    b.bench(&format!("{bp_name}_encode/scalar/{len}"), || {
         let mut acc = 0u64;
         for &x in &xs {
-            acc = acc.wrapping_add(posit::P32.from_f64(x as f64));
+            acc = acc.wrapping_add(E::BP.from_f64(x.to_f64()));
         }
         acc
     });
-    b.bench(&format!("p32_encode/vector/{len}"), || {
-        codec::p32_encode_into(&xs, &mut out_w);
+    b.bench(&format!("{bp_name}_encode/vector/{len}"), || {
+        bp.encode_into(&xs, &mut out_w);
         out_w[0]
     });
-    b.bench(&format!("p32_decode/scalar/{len}"), || {
+    b.bench(&format!("{bp_name}_decode/scalar/{len}"), || {
         let mut acc = 0f64;
-        for &w in &p32_words {
-            acc += posit::P32.to_f64(w as u64);
+        for &w in &words {
+            acc += E::BP.to_f64(E::word_to_u64(w));
         }
         acc
     });
-    b.bench(&format!("p32_decode/vector/{len}"), || {
-        codec::p32_decode_into(&p32_words, &mut out_f);
+    b.bench(&format!("{bp_name}_decode/vector/{len}"), || {
+        bp.decode_into(&words, &mut out_f);
+        out_f[0]
+    });
+    b.bench(&format!("{bp_name}_roundtrip/scalar/{len}"), || {
+        let mut acc = 0f64;
+        for &x in &xs {
+            acc += E::BP.to_f64(E::BP.from_f64(x.to_f64()));
+        }
+        acc
+    });
+    b.bench(&format!("{bp_name}_roundtrip/vector/{len}"), || {
+        out_f.copy_from_slice(&xs);
+        bp.roundtrip_in_place(&mut out_f);
         out_f[0]
     });
 
-    // --- f32⇄bits: the memcpy-speed floor for the sweep ---
-    b.bench(&format!("f32_bits/vector/{len}"), || {
-        codec::f32_to_bits_into(&xs, &mut out_w);
+    // --- standard posit: general codec vs lane engine ---
+    b.bench(&format!("{p_name}_encode/scalar/{len}"), || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(E::PSTD.from_f64(x.to_f64()));
+        }
+        acc
+    });
+    b.bench(&format!("{p_name}_encode/vector/{len}"), || {
+        pstd.encode_into(&xs, &mut out_w);
+        out_w[0]
+    });
+    b.bench(&format!("{p_name}_decode/scalar/{len}"), || {
+        let mut acc = 0f64;
+        for &w in &p_words {
+            acc += E::PSTD.to_f64(E::word_to_u64(w));
+        }
+        acc
+    });
+    b.bench(&format!("{p_name}_decode/vector/{len}"), || {
+        pstd.decode_into(&p_words, &mut out_f);
+        out_f[0]
+    });
+
+    // --- independent scalar fast path (32-bit tier only) ---
+    if let Some(fs) = &fast {
+        b.bench(&format!("{bp_name}_encode/fastscalar/{len}"), || (fs.encode)(&xs));
+        b.bench(&format!("{bp_name}_decode/fastscalar/{len}"), || (fs.decode)(&words));
+    }
+
+    // --- float⇄bits: the memcpy-speed floor for the sweep ---
+    b.bench(&format!("f{bits}_bits/vector/{len}"), || {
+        for (o, &x) in out_w.iter_mut().zip(&xs) {
+            *o = E::word_from_u64(x.to_bits_u64());
+        }
         out_w[0]
     });
 
     // --- dot kernels (the serving workload) ---
-    b.bench(&format!("dot/f32_fast/{len}"), || kernels::dot_f32(&xs, &ys));
-    b.bench(&format!("dot/bp32_weights_fast/{len}"), || {
-        kernels::dot_bp32_weights_fast(&words, &ys)
+    b.bench(&format!("dot/f{bits}_fast/{len}"), || kernels::dot(&xs, &ys));
+    b.bench(&format!("dot/{bp_name}_weights_fast/{len}"), || {
+        kernels::dot_bp_weights_fast::<E>(&words, &ys)
     });
-    let mut qd = kernels::QuireDot::new();
-    b.bench(&format!("dot/quire_exact/{len}"), || qd.dot_f32(&xs, &ys));
+    let mut q = E::quire();
+    b.bench(&format!("dot/quire_exact/{len}"), || kernels::quire_dot(&mut q, &xs, &ys));
 
-    let mut out = vec![b.table(&format!("vector codec throughput ({len}-element blocks)"))];
+    let mut out =
+        vec![b.table(&format!("{bits}-bit vector codec throughput ({len}-element blocks)"))];
     for r in b.results() {
         out.push(format!("{:<44} {:>10.1} Melem/s", r.name, len as f64 / r.mean_ns * 1e3));
     }
 
-    // Speedups: scalar mean / vector mean per codec stage.
+    // Speedups: general-codec (scalar) mean / lane (vector) mean per stage.
     let mean = |prefix: &str| -> f64 {
         b.results()
             .iter()
@@ -574,18 +621,45 @@ pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<Strin
             .map(|r| r.mean_ns)
             .unwrap_or(f64::NAN)
     };
-    let stages =
-        ["bp32_encode", "bp32_decode", "bp32_roundtrip", "p32_encode", "p32_decode"];
+    let stages = [
+        format!("{bp_name}_encode"),
+        format!("{bp_name}_decode"),
+        format!("{bp_name}_roundtrip"),
+        format!("{p_name}_encode"),
+        format!("{p_name}_decode"),
+    ];
     let mut speedup_json = Vec::new();
-    for s in stages {
+    for s in &stages {
         let sp = mean(&format!("{s}/scalar")) / mean(&format!("{s}/vector"));
         out.push(format!("speedup {s:<16} {sp:>6.2}x (vector vs scalar)"));
         speedup_json.push(format!("\"{s}\":{sp:.3}"));
     }
+    if fast.is_some() {
+        // Gate the lane engine against the *independent* fast scalar too
+        // (the pre-redesign 32-bit baseline), not just the general codec.
+        for stage in ["encode", "decode"] {
+            let sp = mean(&format!("{bp_name}_{stage}/fastscalar"))
+                / mean(&format!("{bp_name}_{stage}/vector"));
+            out.push(format!(
+                "speedup {bp_name}_{stage}_vs_fast {sp:>6.2}x (vector vs fast scalar)"
+            ));
+            speedup_json.push(format!("\"{bp_name}_{stage}_vs_fast\":{sp:.3}"));
+        }
+    }
+    out.push(format!(
+        "sharded codec bit-identical to serial: {}",
+        if bit_identical { "yes" } else { "NO — BUG" }
+    ));
+    if !bit_identical {
+        return Err(format!(
+            "sharded {bits}-bit codec differs from serial — bit-identity broken"
+        ));
+    }
 
     if let Some(path) = json_path {
         let json = format!(
-            "{{\"bench\":\"vector_codec\",\"len\":{len},\"speedup\":{{{}}},\"results\":{}}}",
+            "{{\"bench\":\"{bench_id}\",\"len\":{len},\"bit_identical\":{bit_identical},\
+             \"speedup\":{{{}}},\"results\":{}}}",
             speedup_json.join(","),
             b.results_json()
         );
@@ -595,173 +669,38 @@ pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<Strin
     Ok(out)
 }
 
-/// Execute `vector-bench --bits 64`: the 64-bit lane stack — general
-/// codec vs branch-free BP64/P64 lanes, the f64⇄bits floor, and the f64
-/// dot-kernel family — over `len`-element mixed-scale blocks. Also
-/// verifies that the sharded 64-bit codec is bit-identical to serial for
-/// t ∈ {1, 2, 7} (recorded as `bit_identical` in the JSON, gated in CI).
-/// Shared by the CLI and the `vector_codec64` bench target; optionally
-/// writes `BENCH_vector_codec64.json`.
+/// Execute `vector-bench` (32-bit mode): the generic code path at
+/// `E = f32`, plus the independent `fast_bp32_*` scalar reference (the
+/// tier that has one); optionally writes `BENCH_vector_codec.json`.
+pub fn run_vector_bench(len: usize, json_path: Option<&str>) -> Result<Vec<String>, String> {
+    run_vector_bench_generic::<f32>(
+        len,
+        json_path,
+        Some(FastScalarRef {
+            encode: |xs| {
+                let mut acc = 0u32;
+                for &x in xs {
+                    acc = acc.wrapping_add(crate::coordinator::quantizer::fast_bp32_encode(x));
+                }
+                acc as u64
+            },
+            decode: |ws| {
+                let mut acc = 0f32;
+                for &w in ws {
+                    acc += crate::coordinator::quantizer::fast_bp32_decode(w);
+                }
+                acc as f64
+            },
+        }),
+    )
+}
+
+/// Execute `vector-bench --bits 64`: the generic code path at `E = f64`
+/// (no independent scalar fast path exists at this width — the general
+/// codec was always its scalar baseline); optionally writes
+/// `BENCH_vector_codec64.json`.
 pub fn run_vector_bench64(len: usize, json_path: Option<&str>) -> Result<Vec<String>, String> {
-    use crate::harness::Bencher;
-    use crate::testutil::Rng;
-    use crate::vector::{codec64, kernels, parallel};
-
-    if let Some(path) = json_path {
-        ensure_json_writable(path)?;
-    }
-    let mut rng = Rng::new(0x5eed64);
-    // Mixed-scale finite f64s spanning regimes *and* both saturation zones
-    // of the 2^±192 formats — worst case for the branchy general codec.
-    let xs: Vec<f64> = (0..len)
-        .map(|_| {
-            let mag = (rng.f64() + 0.5) * f64::powi(2.0, rng.below(441) as i32 - 220);
-            if rng.below(2) == 0 {
-                mag
-            } else {
-                -mag
-            }
-        })
-        .collect();
-    let words = codec64::bp64_encode(&xs);
-    let p64_words = {
-        let mut w = vec![0u64; len];
-        codec64::p64_encode_into(&xs, &mut w);
-        w
-    };
-    let ys: Vec<f64> = (0..len).map(|_| (rng.f64() - 0.5) * 4.0).collect();
-    let mut out_w = vec![0u64; len];
-    let mut out_f = vec![0f64; len];
-
-    // Sharded-vs-serial bit-identity: the acceptance contract, checked
-    // before any timing (and gated on in CI via the JSON flag).
-    let mut bit_identical = true;
-    for t in [1usize, 2, 7] {
-        let mut w = vec![0u64; len];
-        parallel::bp64_encode_into_with(t, &xs, &mut w);
-        bit_identical &= w == words;
-        let mut f = vec![0f64; len];
-        parallel::bp64_decode_into_with(t, &words, &mut f);
-        codec64::bp64_decode_into(&words, &mut out_f);
-        bit_identical &= f.iter().zip(&out_f).all(|(a, b)| a.to_bits() == b.to_bits());
-    }
-
-    let mut b = Bencher::new();
-
-    // --- b-posit64: the 64-bit serving format ---
-    b.bench(&format!("bp64_encode/scalar/{len}"), || {
-        let mut acc = 0u64;
-        for &x in &xs {
-            acc = acc.wrapping_add(posit::BP64.from_f64(x));
-        }
-        acc
-    });
-    b.bench(&format!("bp64_encode/vector/{len}"), || {
-        codec64::bp64_encode_into(&xs, &mut out_w);
-        out_w[0]
-    });
-    b.bench(&format!("bp64_decode/scalar/{len}"), || {
-        let mut acc = 0f64;
-        for &w in &words {
-            acc += posit::BP64.to_f64(w);
-        }
-        acc
-    });
-    b.bench(&format!("bp64_decode/vector/{len}"), || {
-        codec64::bp64_decode_into(&words, &mut out_f);
-        out_f[0]
-    });
-    b.bench(&format!("bp64_roundtrip/scalar/{len}"), || {
-        let mut acc = 0f64;
-        for &x in &xs {
-            acc += posit::BP64.to_f64(posit::BP64.from_f64(x));
-        }
-        acc
-    });
-    b.bench(&format!("bp64_roundtrip/vector/{len}"), || {
-        out_f.copy_from_slice(&xs);
-        codec64::bp64_roundtrip_in_place(&mut out_f);
-        out_f[0]
-    });
-
-    // --- posit<64,2>: general codec vs lane codec ---
-    b.bench(&format!("p64_encode/scalar/{len}"), || {
-        let mut acc = 0u64;
-        for &x in &xs {
-            acc = acc.wrapping_add(posit::P64.from_f64(x));
-        }
-        acc
-    });
-    b.bench(&format!("p64_encode/vector/{len}"), || {
-        codec64::p64_encode_into(&xs, &mut out_w);
-        out_w[0]
-    });
-    b.bench(&format!("p64_decode/scalar/{len}"), || {
-        let mut acc = 0f64;
-        for &w in &p64_words {
-            acc += posit::P64.to_f64(w);
-        }
-        acc
-    });
-    b.bench(&format!("p64_decode/vector/{len}"), || {
-        codec64::p64_decode_into(&p64_words, &mut out_f);
-        out_f[0]
-    });
-
-    // --- f64⇄bits: the memcpy-speed floor for the sweep ---
-    b.bench(&format!("f64_bits/vector/{len}"), || {
-        codec64::f64_to_bits_into(&xs, &mut out_w);
-        out_w[0]
-    });
-
-    // --- f64 dot kernels (the 64-bit serving workload) ---
-    b.bench(&format!("dot/f64_fast/{len}"), || kernels::dot_f64(&xs, &ys));
-    b.bench(&format!("dot/bp64_weights_fast/{len}"), || {
-        kernels::dot_bp64_weights_fast(&words, &ys)
-    });
-    let mut qd = kernels::QuireDotF64::new();
-    b.bench(&format!("dot/quire_exact_f64/{len}"), || qd.dot_f64(&xs, &ys));
-
-    let mut out =
-        vec![b.table(&format!("64-bit vector codec throughput ({len}-element blocks)"))];
-    for r in b.results() {
-        out.push(format!("{:<44} {:>10.1} Melem/s", r.name, len as f64 / r.mean_ns * 1e3));
-    }
-
-    let mean = |prefix: &str| -> f64 {
-        b.results()
-            .iter()
-            .find(|r| r.name.starts_with(prefix))
-            .map(|r| r.mean_ns)
-            .unwrap_or(f64::NAN)
-    };
-    let stages =
-        ["bp64_encode", "bp64_decode", "bp64_roundtrip", "p64_encode", "p64_decode"];
-    let mut speedup_json = Vec::new();
-    for s in stages {
-        let sp = mean(&format!("{s}/scalar")) / mean(&format!("{s}/vector"));
-        out.push(format!("speedup {s:<16} {sp:>6.2}x (vector vs scalar)"));
-        speedup_json.push(format!("\"{s}\":{sp:.3}"));
-    }
-    out.push(format!(
-        "sharded codec64 bit-identical to serial: {}",
-        if bit_identical { "yes" } else { "NO — BUG" }
-    ));
-    if !bit_identical {
-        return Err("sharded 64-bit codec differs from serial — bit-identity broken".into());
-    }
-
-    if let Some(path) = json_path {
-        let json = format!(
-            "{{\"bench\":\"vector_codec64\",\"len\":{len},\"bit_identical\":{bit_identical},\
-             \"speedup\":{{{}}},\"results\":{}}}",
-            speedup_json.join(","),
-            b.results_json()
-        );
-        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
-        out.push(format!("wrote {path}"));
-    }
-    Ok(out)
+    run_vector_bench_generic::<f64>(len, json_path, None)
 }
 
 /// Execute `gemm-bench`: serial vs sharded blocked GEMM across `sizes`

@@ -4,12 +4,12 @@
 //! model" so the serving loop is backend-agnostic:
 //!
 //! - [`NativeBackend`] — the default. Executes the two-layer MLP entirely
-//!   in-tree on the blocked quantized-weight GEMM
-//!   ([`gemm::par_gemm_bp32_weights_fast`] for b-posit32 weights, the f32
-//!   fast path for the float baseline, the b-posit64 path via `codec64`
-//!   for the 64-bit tier). Needs only `weights.json` — no libxla, no
-//!   `runtime` feature — so the full serving stack runs in default
-//!   builds and CI.
+//!   in-tree on the blocked quantized-weight GEMM. Both quantized tiers
+//!   (b-posit32 and b-posit64) run **one generic layer routine** over
+//!   [`LaneElem`], with weights held as spec-carrying
+//!   [`EncodedTensor`]s; the float baseline keeps its plain-f32 path.
+//!   Needs only `weights.json` — no libxla, no `runtime` feature — so
+//!   the full serving stack runs in default builds and CI.
 //! - [`PjrtBackend`] — the original PJRT/XLA executor over the
 //!   AOT-compiled HLO artifacts (requires the `runtime` cargo feature
 //!   and a libxla install; errors clearly otherwise).
@@ -17,16 +17,15 @@
 //! # Native layout: weights as A
 //!
 //! The quantized-weight GEMM family stores *weights* as the A matrix
-//! (`C (m×n) = A_bits (m×k) · B (k×n)` with B the f32 activations), so
-//! the native backend keeps everything transposed: weights are
-//! transposed **once at load** — through the process-wide
-//! quantized-weight cache keyed by tensor content hash
-//! ([`quantizer::cached_weights_u32`] and friends), so reloading a model
-//! skips the transpose/encode entirely — and activations are staged
-//! `d×rows` per batch. Layer 1 computes `H (h×rows) = W1ᵀ · Xᵀ`, the
-//! bias+ReLU epilogue broadcasts per *row* (contiguous), layer 2 maps
-//! `L (c×rows) = W2ᵀ · H`, and the readout transposes back to
-//! request-major.
+//! (`C (m×n) = A_bits (m×k) · B (k×n)` with B the activations), so the
+//! native backend keeps everything transposed: weights are transposed
+//! **once at load** — through the process-wide quantized-weight cache
+//! keyed by tensor content hash ([`quantizer::cached_weights_u32`] and
+//! friends), so reloading a model skips the transpose/encode entirely —
+//! and activations are staged `d×rows` per batch. Layer 1 computes
+//! `H (h×rows) = W1ᵀ · Xᵀ`, the bias+ReLU epilogue broadcasts per *row*
+//! (contiguous), layer 2 maps `L (c×rows) = W2ᵀ · H`, and the readout
+//! transposes back to request-major.
 //!
 //! # Bit-exactness contract
 //!
@@ -41,8 +40,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::error::{anyhow, Result};
+use crate::formats::posit::{BP32, BP64};
 use crate::runtime::{lit_f32_2d, Literal, LoadedModel, ModelWeights, Runtime};
 use crate::testutil::Rng;
+use crate::vector::lane::{EncodedTensor, LaneElem};
 use crate::vector::{gemm, kernels};
 
 use super::quantizer;
@@ -65,6 +66,7 @@ pub enum WeightFormat {
 }
 
 impl WeightFormat {
+    /// Parse a CLI/HTTP format name.
     pub fn parse(s: &str) -> std::result::Result<WeightFormat, String> {
         match s {
             "bp32" => Ok(WeightFormat::Bp32),
@@ -74,6 +76,7 @@ impl WeightFormat {
         }
     }
 
+    /// Short display name ("bp32" / "f32" / "bp64").
     pub fn name(&self) -> &'static str {
         match self {
             WeightFormat::Bp32 => "bp32",
@@ -89,6 +92,15 @@ impl WeightFormat {
             _ => "model_bposit.hlo.txt",
         }
     }
+
+    /// True when the serving contract quantizes *inputs* through this
+    /// format's codec before execution: only the BP32 tier — f32 sees
+    /// raw inputs (the baseline), and every finite f32 is exactly
+    /// representable in ⟨64,6,5⟩, so the BP64 roundtrip is the identity
+    /// by construction.
+    pub fn quantizes_inputs(&self) -> bool {
+        matches!(self, WeightFormat::Bp32)
+    }
 }
 
 /// Which executor the server worker builds at startup.
@@ -102,6 +114,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a CLI backend name.
     pub fn parse(s: &str) -> std::result::Result<BackendKind, String> {
         match s {
             "native" => Ok(BackendKind::Native),
@@ -110,6 +123,7 @@ impl BackendKind {
         }
     }
 
+    /// Short display name ("native" / "pjrt").
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Native => "native",
@@ -130,21 +144,42 @@ impl BackendKind {
 /// thread by a `Send` factory (PJRT handles cannot cross threads) and
 /// never leave it.
 pub trait InferenceBackend {
+    /// Backend display name (metrics/logs).
     fn name(&self) -> &'static str;
     /// (features, classes) of the served model.
     fn dims(&self) -> (usize, usize);
     /// Largest `rows` a single `run` accepts.
     fn max_batch(&self) -> usize;
+    /// Execute one staged batch; returns row-major `rows×c` logits.
     fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]>;
 }
 
-/// Weight tensors in their format-specific transposed encodings (shared
-/// via the content-hash cache), each variant carrying its biases at the
-/// precision its kernel family consumes.
+/// One quantized serving tier at lane width `E`: the two transposed
+/// weight tensors as spec-carrying [`EncodedTensor`]s (shared via the
+/// content-hash cache), biases at the width the kernel family consumes,
+/// and the per-tier staging scratch (reused across batches).
+struct LaneState<E: LaneElem> {
+    wt1: EncodedTensor<E>,
+    wt2: EncodedTensor<E>,
+    b1: Vec<E>,
+    b2: Vec<E>,
+    // Reused scratch: activations (d×rows), hidden (h×rows), logits
+    // (c×rows), all in the transposed layout.
+    xt: Vec<E>,
+    ht: Vec<E>,
+    lt: Vec<E>,
+}
+
+/// Weight tensors in their format-specific encodings. The two quantized
+/// tiers are the *same* generic state at different widths — the old
+/// three-way per-format `run` duplication is now one generic call.
 enum Layers {
-    Bp32 { wt1: Arc<Vec<u32>>, wt2: Arc<Vec<u32>>, b1: Vec<f32>, b2: Vec<f32> },
+    /// b-posit32 tier (`LaneState<f32>`: u32 words, f32 activations).
+    Bp32(LaneState<f32>),
+    /// Plain-f32 float baseline.
     F32 { wt1: Arc<Vec<f32>>, wt2: Arc<Vec<f32>>, b1: Vec<f32>, b2: Vec<f32> },
-    Bp64 { wt1: Arc<Vec<u64>>, wt2: Arc<Vec<u64>>, b1: Vec<f64>, b2: Vec<f64> },
+    /// b-posit64 tier (`LaneState<f64>`: u64 words, f64 activations).
+    Bp64(LaneState<f64>),
 }
 
 /// The in-tree executor: dense layers on the blocked (and row-sharded)
@@ -156,14 +191,11 @@ pub struct NativeBackend {
     h: usize,
     c: usize,
     layers: Layers,
-    // Reused scratch: activations (d×rows), hidden (h×rows), logits
-    // (c×rows) in the transposed layout, plus the request-major readout.
+    // Float-baseline scratch (the quantized tiers carry theirs inside
+    // their LaneState) plus the request-major readout shared by all.
     xt: Vec<f32>,
     ht: Vec<f32>,
     lt: Vec<f32>,
-    xt64: Vec<f64>,
-    ht64: Vec<f64>,
-    lt64: Vec<f64>,
     out: Vec<f32>,
 }
 
@@ -185,6 +217,60 @@ fn encode_bp64_transposed(w: &[f32], rows: usize, cols: usize) -> Vec<u64> {
     t.iter().map(|&v| quantizer::quantize64_one(v as f64) as u64).collect()
 }
 
+/// Tiled transpose-with-convert: `dst` (cols×rows) ← `f(src)` (rows×cols),
+/// both row-major, blocked like [`gemm::transpose`] so both sides stream
+/// through cache (the per-batch staging/readout of the lane tiers is on
+/// the serving hot path; for `E = f32` the convert is the identity and
+/// this is exactly the tiled transpose the BP32 tier ran pre-redesign).
+fn transpose_map<S: Copy, D: Copy>(
+    src: &[S],
+    dst: &mut [D],
+    rows: usize,
+    cols: usize,
+    f: impl Fn(S) -> D,
+) {
+    assert_eq!(src.len(), rows * cols, "transpose_map: src must be rows×cols");
+    assert_eq!(dst.len(), rows * cols, "transpose_map: dst must be cols×rows");
+    const TB: usize = 32;
+    for i0 in (0..rows).step_by(TB) {
+        let i1 = rows.min(i0 + TB);
+        for j0 in (0..cols).step_by(TB) {
+            let j1 = cols.min(j0 + TB);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    dst[j * rows + i] = f(src[i * cols + j]);
+                }
+            }
+        }
+    }
+}
+
+/// One generic quantized dense-layer pipeline: stage the f32 batch into
+/// the tier's transposed activation buffer, run both layers on the
+/// decode-fused blocked GEMM through the typed weight tensors, and read
+/// the logits back out request-major as f32. `E = f32` is the BP32 tier,
+/// `E = f64` the BP64 tier — the same routine, monomorphized.
+fn run_lane_tier<E: LaneElem>(
+    st: &mut LaneState<E>,
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    h: usize,
+    c: usize,
+    out: &mut Vec<f32>,
+) {
+    st.xt.resize(d * rows, E::ZERO);
+    transpose_map(x, &mut st.xt, rows, d, E::from_f32);
+    st.ht.resize(h * rows, E::ZERO);
+    gemm::par_gemm_encoded_fast(&st.wt1, &st.xt, &mut st.ht, rows);
+    kernels::bias_relu_rows(&mut st.ht, &st.b1, h, rows);
+    st.lt.resize(c * rows, E::ZERO);
+    gemm::par_gemm_encoded_fast(&st.wt2, &st.ht, &mut st.lt, rows);
+    kernels::bias_rows(&mut st.lt, &st.b2, c, rows);
+    out.resize(rows * c, 0.0);
+    transpose_map(&st.lt, &mut out[..], c, rows, E::to_f32);
+}
+
 impl NativeBackend {
     /// Build from an artifact directory (`weights.json` only).
     pub fn load(dir: &Path, format: WeightFormat) -> Result<NativeBackend> {
@@ -193,7 +279,9 @@ impl NativeBackend {
 
     /// Build from already-loaded weights. Transposed/encoded weight
     /// tensors come from the process-wide content-hash cache, so loading
-    /// the same model twice encodes once.
+    /// the same model twice encodes once; the cached words are adopted
+    /// into spec-carrying [`EncodedTensor`]s, so a shape or spec mismatch
+    /// is a construction error, not a silent kernel misread.
     pub fn from_weights(w: &ModelWeights, format: WeightFormat) -> Result<NativeBackend> {
         let (d, h, c) = (w.d, w.h, w.c);
         let check = |name: &str, len: usize, want: usize| -> Result<()> {
@@ -211,15 +299,33 @@ impl NativeBackend {
             WeightFormat::Bp32 => {
                 check("w1_bits", w.w1_bits.len(), d * h)?;
                 check("w2_bits", w.w2_bits.len(), h * c)?;
-                let wt1 = quantizer::cached_weights_u32(
-                    quantizer::tensor_key_i32("bp32/w1t", d, h, &w.w1_bits),
-                    || transpose_bits_u32(&w.w1_bits, d, h),
-                );
-                let wt2 = quantizer::cached_weights_u32(
-                    quantizer::tensor_key_i32("bp32/w2t", h, c, &w.w2_bits),
-                    || transpose_bits_u32(&w.w2_bits, h, c),
-                );
-                Layers::Bp32 { wt1, wt2, b1: w.b1.clone(), b2: w.b2.clone() }
+                let wt1 = EncodedTensor::from_words(
+                    BP32,
+                    h,
+                    d,
+                    quantizer::cached_weights_u32(
+                        quantizer::tensor_key_i32("bp32/w1t", d, h, &w.w1_bits),
+                        || transpose_bits_u32(&w.w1_bits, d, h),
+                    ),
+                )?;
+                let wt2 = EncodedTensor::from_words(
+                    BP32,
+                    c,
+                    h,
+                    quantizer::cached_weights_u32(
+                        quantizer::tensor_key_i32("bp32/w2t", h, c, &w.w2_bits),
+                        || transpose_bits_u32(&w.w2_bits, h, c),
+                    ),
+                )?;
+                Layers::Bp32(LaneState {
+                    wt1,
+                    wt2,
+                    b1: w.b1.clone(),
+                    b2: w.b2.clone(),
+                    xt: Vec::new(),
+                    ht: Vec::new(),
+                    lt: Vec::new(),
+                })
             }
             WeightFormat::F32 => {
                 let wt1 = quantizer::cached_weights_f32(
@@ -233,17 +339,35 @@ impl NativeBackend {
                 Layers::F32 { wt1, wt2, b1: w.b1.clone(), b2: w.b2.clone() }
             }
             WeightFormat::Bp64 => {
-                let wt1 = quantizer::cached_weights_u64(
-                    quantizer::tensor_key_f32("bp64/w1t", d, h, &w.w1),
-                    || encode_bp64_transposed(&w.w1, d, h),
-                );
-                let wt2 = quantizer::cached_weights_u64(
-                    quantizer::tensor_key_f32("bp64/w2t", h, c, &w.w2),
-                    || encode_bp64_transposed(&w.w2, h, c),
-                );
+                let wt1 = EncodedTensor::from_words(
+                    BP64,
+                    h,
+                    d,
+                    quantizer::cached_weights_u64(
+                        quantizer::tensor_key_f32("bp64/w1t", d, h, &w.w1),
+                        || encode_bp64_transposed(&w.w1, d, h),
+                    ),
+                )?;
+                let wt2 = EncodedTensor::from_words(
+                    BP64,
+                    c,
+                    h,
+                    quantizer::cached_weights_u64(
+                        quantizer::tensor_key_f32("bp64/w2t", h, c, &w.w2),
+                        || encode_bp64_transposed(&w.w2, h, c),
+                    ),
+                )?;
                 let b1 = w.b1.iter().map(|&v| v as f64).collect();
                 let b2 = w.b2.iter().map(|&v| v as f64).collect();
-                Layers::Bp64 { wt1, wt2, b1, b2 }
+                Layers::Bp64(LaneState {
+                    wt1,
+                    wt2,
+                    b1,
+                    b2,
+                    xt: Vec::new(),
+                    ht: Vec::new(),
+                    lt: Vec::new(),
+                })
             }
         };
         Ok(NativeBackend {
@@ -255,13 +379,11 @@ impl NativeBackend {
             xt: Vec::new(),
             ht: Vec::new(),
             lt: Vec::new(),
-            xt64: Vec::new(),
-            ht64: Vec::new(),
-            lt64: Vec::new(),
             out: Vec::new(),
         })
     }
 
+    /// The weight format this backend serves.
     pub fn format(&self) -> WeightFormat {
         self.format
     }
@@ -289,33 +411,9 @@ impl InferenceBackend for NativeBackend {
         if x.len() != rows * d {
             return Err(anyhow!("native backend: {} values staged for {rows}×{d}", x.len()));
         }
-        match &self.layers {
-            Layers::Bp32 { wt1, wt2, b1, b2 } => {
-                self.xt.resize(d * rows, 0.0);
-                gemm::transpose(x, &mut self.xt, rows, d);
-                self.ht.resize(h * rows, 0.0);
-                gemm::par_gemm_bp32_weights_fast(
-                    wt1.as_slice(),
-                    &self.xt,
-                    &mut self.ht,
-                    h,
-                    d,
-                    rows,
-                );
-                kernels::bias_relu_rows(&mut self.ht, b1, h, rows);
-                self.lt.resize(c * rows, 0.0);
-                gemm::par_gemm_bp32_weights_fast(
-                    wt2.as_slice(),
-                    &self.ht,
-                    &mut self.lt,
-                    c,
-                    h,
-                    rows,
-                );
-                kernels::bias_rows(&mut self.lt, b2, c, rows);
-                self.out.resize(rows * c, 0.0);
-                gemm::transpose(&self.lt, &mut self.out, c, rows);
-            }
+        match &mut self.layers {
+            Layers::Bp32(st) => run_lane_tier(st, x, rows, d, h, c, &mut self.out),
+            Layers::Bp64(st) => run_lane_tier(st, x, rows, d, h, c, &mut self.out),
             Layers::F32 { wt1, wt2, b1, b2 } => {
                 self.xt.resize(d * rows, 0.0);
                 gemm::transpose(x, &mut self.xt, rows, d);
@@ -327,40 +425,6 @@ impl InferenceBackend for NativeBackend {
                 kernels::bias_rows(&mut self.lt, b2, c, rows);
                 self.out.resize(rows * c, 0.0);
                 gemm::transpose(&self.lt, &mut self.out, c, rows);
-            }
-            Layers::Bp64 { wt1, wt2, b1, b2 } => {
-                self.xt64.resize(d * rows, 0.0);
-                for p in 0..d {
-                    for j in 0..rows {
-                        self.xt64[p * rows + j] = x[j * d + p] as f64;
-                    }
-                }
-                self.ht64.resize(h * rows, 0.0);
-                gemm::par_gemm_bp64_weights_fast(
-                    wt1.as_slice(),
-                    &self.xt64,
-                    &mut self.ht64,
-                    h,
-                    d,
-                    rows,
-                );
-                kernels::bias_relu_rows_f64(&mut self.ht64, b1, h, rows);
-                self.lt64.resize(c * rows, 0.0);
-                gemm::par_gemm_bp64_weights_fast(
-                    wt2.as_slice(),
-                    &self.ht64,
-                    &mut self.lt64,
-                    c,
-                    h,
-                    rows,
-                );
-                kernels::bias_rows_f64(&mut self.lt64, b2, c, rows);
-                self.out.resize(rows * c, 0.0);
-                for q in 0..c {
-                    for j in 0..rows {
-                        self.out[j * c + q] = self.lt64[q * rows + j] as f32;
-                    }
-                }
             }
         }
         Ok(&self.out[..rows * c])
@@ -384,6 +448,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Load the compiled HLO artifact and weight literals for `format`.
     pub fn load(dir: &Path, model_file: &str, format: WeightFormat) -> Result<PjrtBackend> {
         let rt = Runtime::cpu(dir)?;
         let w = ModelWeights::load(&rt)?;
@@ -450,15 +515,28 @@ impl InferenceBackend for PjrtBackend {
 }
 
 /// Apply the serving input-quantization contract for `format` to a
-/// feature vector: b-posit32 roundtrip for the BP32 tier (what the
-/// server does on the staged batch), identity for f32 (the baseline sees
-/// raw inputs) and b-posit64 (every finite f32 is exactly representable
-/// in ⟨64,6,5⟩, so the roundtrip is the identity by construction).
-pub fn stage_inputs(format: WeightFormat, x: &[f32]) -> Vec<f32> {
-    match format {
-        WeightFormat::Bp32 => quantizer::roundtrip(x),
-        WeightFormat::F32 | WeightFormat::Bp64 => x.to_vec(),
+/// staged buffer, in place and allocation-free — the worker loop's hot
+/// path ([`WeightFormat::quantizes_inputs`] says which formats act:
+/// b-posit32 roundtrips, f32 and b-posit64 are identities).
+pub fn stage_inputs_in_place(format: WeightFormat, xs: &mut [f32]) {
+    if format.quantizes_inputs() {
+        quantizer::roundtrip_in_place(xs);
     }
+}
+
+/// Stage a feature vector into a reused buffer (cleared + refilled; no
+/// allocation once the buffer has grown to the steady-state size).
+pub fn stage_inputs_into(format: WeightFormat, x: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend_from_slice(x);
+    stage_inputs_in_place(format, &mut out[..]);
+}
+
+/// Allocating wrapper over [`stage_inputs_into`] (tests and references).
+pub fn stage_inputs(format: WeightFormat, x: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    stage_inputs_into(format, x, &mut out);
+    out
 }
 
 /// Naive scalar forward pass — the independent reference the native
@@ -472,11 +550,15 @@ pub fn reference_forward(w: &ModelWeights, format: WeightFormat, x: &[f32]) -> V
     let (d, h, c) = (w.d, w.h, w.c);
     match format {
         WeightFormat::Bp32 => {
+            // Deliberately the *independent* scalar fast-path decode, not
+            // the lane engine the backend runs on (they are proven
+            // bit-identical, but the reference must not share the
+            // implementation under test).
             let mut hid = vec![0f32; h];
             for i in 0..h {
                 let mut acc = 0f32;
                 for p in 0..d {
-                    acc += quantizer::dequantize_one(w.w1_bits[p * h + i]) * x[p];
+                    acc += quantizer::fast_bp32_decode(w.w1_bits[p * h + i] as u32) * x[p];
                 }
                 let v = acc + w.b1[i];
                 hid[i] = if v > 0.0 { v } else { 0.0 };
@@ -485,7 +567,7 @@ pub fn reference_forward(w: &ModelWeights, format: WeightFormat, x: &[f32]) -> V
             for q in 0..c {
                 let mut acc = 0f32;
                 for i in 0..h {
-                    acc += quantizer::dequantize_one(w.w2_bits[i * c + q]) * hid[i];
+                    acc += quantizer::fast_bp32_decode(w.w2_bits[i * c + q] as u32) * hid[i];
                 }
                 out[q] = acc + w.b2[q];
             }
@@ -603,6 +685,9 @@ mod tests {
         assert_eq!(WeightFormat::default(), WeightFormat::Bp32);
         assert_eq!(WeightFormat::Bp32.model_file(), "model_bposit.hlo.txt");
         assert_eq!(WeightFormat::F32.model_file(), "model_f32.hlo.txt");
+        assert!(WeightFormat::Bp32.quantizes_inputs());
+        assert!(!WeightFormat::F32.quantizes_inputs());
+        assert!(!WeightFormat::Bp64.quantizes_inputs());
         assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
         assert!(BackendKind::parse("tpu").is_err());
@@ -629,6 +714,40 @@ mod tests {
         let w2 = synth_weights(5, 7, 3, 4, 0xfeed);
         assert_eq!(w.w1_bits, w2.w1_bits);
         assert_eq!(w.golden_logits_bposit, w2.golden_logits_bposit);
+    }
+
+    #[test]
+    fn stage_inputs_into_reuses_buffers_and_matches_wrapper() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.31).collect();
+        let mut staged = Vec::new();
+        stage_inputs_into(WeightFormat::Bp32, &xs, &mut staged);
+        let cap = staged.capacity();
+        let alloc = stage_inputs(WeightFormat::Bp32, &xs);
+        assert_eq!(
+            staged.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            alloc.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // In-place primitive agrees with both.
+        let mut ip = xs.clone();
+        stage_inputs_in_place(WeightFormat::Bp32, &mut ip);
+        assert_eq!(
+            ip.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            staged.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Steady state: re-staging the same size must not reallocate.
+        stage_inputs_into(WeightFormat::Bp32, &xs, &mut staged);
+        assert_eq!(staged.capacity(), cap);
+        // Identity formats really are identities.
+        for f in [WeightFormat::F32, WeightFormat::Bp64] {
+            let mut ys = xs.clone();
+            stage_inputs_in_place(f, &mut ys);
+            assert_eq!(
+                ys.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{}",
+                f.name()
+            );
+        }
     }
 
     #[test]

@@ -98,6 +98,12 @@ pub struct MetricsSnapshot {
     pub execute_ns: u64,
     /// Worker threads available to the sharded codec (0 = not reported).
     pub codec_threads: u64,
+    /// Quantized-weight cache hits since process start (process-wide —
+    /// the cache is shared by every server; monotone).
+    pub weight_cache_hits: u64,
+    /// Quantized-weight cache misses since process start (process-wide;
+    /// monotone — a miss is the one-time encode/transpose of a tensor).
+    pub weight_cache_misses: u64,
 }
 
 impl Metrics {
@@ -159,6 +165,7 @@ impl Metrics {
         };
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
+        let (weight_cache_hits, weight_cache_misses) = super::quantizer::weight_cache_stats();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches,
@@ -173,6 +180,8 @@ impl Metrics {
             codec_ns: self.codec_ns.load(Ordering::Relaxed),
             execute_ns: self.execute_ns.load(Ordering::Relaxed),
             codec_threads: self.codec_threads.load(Ordering::Relaxed),
+            weight_cache_hits,
+            weight_cache_misses,
         }
     }
 }
@@ -208,6 +217,8 @@ impl MetricsSnapshot {
         s.push_str(&format!("positron_codec_ns_per_batch {:.0}\n", self.codec_ns_per_batch()));
         s.push_str(&format!("positron_execute_ns_total {}\n", self.execute_ns));
         s.push_str(&format!("positron_execute_ns_per_batch {:.0}\n", self.execute_ns_per_batch()));
+        s.push_str(&format!("positron_weight_cache_hits_total {}\n", self.weight_cache_hits));
+        s.push_str(&format!("positron_weight_cache_misses_total {}\n", self.weight_cache_misses));
         s
     }
 }
@@ -284,6 +295,19 @@ mod tests {
         let text = s.render();
         assert!(text.contains("positron_deadline_expired_total 2"), "{text}");
         assert!(text.contains("positron_batch_failures_total 1"), "{text}");
+    }
+
+    #[test]
+    fn weight_cache_counters_render() {
+        // The counters are process-wide (shared with every concurrently
+        // running test), so assert presence + monotone lower bound, not
+        // exact values.
+        let (h0, m0) = super::super::quantizer::weight_cache_stats();
+        let s = Metrics::default().snapshot();
+        assert!(s.weight_cache_hits >= h0 && s.weight_cache_misses >= m0);
+        let text = s.render();
+        assert!(text.contains("positron_weight_cache_hits_total "), "{text}");
+        assert!(text.contains("positron_weight_cache_misses_total "), "{text}");
     }
 
     #[test]

@@ -1,37 +1,46 @@
-//! f32 ⇄ b-posit32 tensor quantization on the request path (Rust codec,
-//! no Python). This is the hot path profiled in EXPERIMENTS.md §Perf.
+//! float ⇄ b-posit tensor quantization on the request path (Rust codec,
+//! no Python) — **one generic family** over both serving widths. This is
+//! the hot path profiled in EXPERIMENTS.md §Perf.
+//!
+//! The 32- and 64-bit tiers share every function: the encode direction is
+//! generic over [`LaneElem`] (`quantize(&[f32])` → `Vec<i32>`,
+//! `quantize(&[f64])` → `Vec<i64>`), and the decode direction is generic
+//! over [`LaneSigned`] so the width is inferred from the *bit-pattern*
+//! argument (`dequantize(&[i32])` → `Vec<f32>` with no turbofish). The
+//! historical `quantize64*` names are thin aliases (docs/API.md).
 //!
 //! Three codec tiers, fastest first:
-//! - **Vector** ([`crate::vector::codec`], sharded across worker threads
-//!   by [`crate::vector::parallel`]): branch-free 8-lane batched
-//!   encode/decode — every slice-level entry point here routes through it,
-//!   and the `_into`/`_in_place` variants reuse caller buffers so the
-//!   steady-state serving path performs zero per-request heap allocation.
-//!   Batches big enough to amortize a fork-join (see
-//!   [`parallel::CODEC_MIN_SHARD`]) are split into contiguous blocks over
-//!   up to `PALLAS_THREADS` workers; results are bit-identical to serial
-//!   for any thread count, so sharding is transparent to callers.
-//! - **Scalar fast path** ([`fast_bp32_encode`]/[`fast_bp32_decode`]): the
-//!   specialized branch-light ⟨32,6,5⟩ pair, kept as the per-element API
-//!   and as the independent implementation the vector codec is tested
-//!   against (bit-identical on every input).
+//! - **Vector** (the lane engine in [`crate::vector::lane`], sharded
+//!   across worker threads by [`crate::vector::parallel`]): branch-free
+//!   8-lane batched encode/decode — every slice-level entry point here
+//!   routes through it, and the `_into`/`_in_place` variants reuse
+//!   caller buffers so the steady-state serving path performs zero
+//!   per-request heap allocation. Batches big enough to amortize a
+//!   fork-join (see [`parallel::CODEC_MIN_SHARD`]) are split into
+//!   contiguous blocks over up to `PALLAS_THREADS` workers; results are
+//!   bit-identical to serial for any thread count, so sharding is
+//!   transparent to callers.
+//! - **Scalar fast path** ([`fast_bp32_encode`]/[`fast_bp32_decode`]):
+//!   the specialized branch-light ⟨32,6,5⟩ pair, kept as an
+//!   *independent implementation* the lane codec is tested against
+//!   (bit-identical on every input).
 //! - **General codec** ([`quantize_one_general`]): the exact
-//!   [`PositSpec`]-driven reference via the 128-bit BitStream serializer —
-//!   the parity oracle and the §Perf "before" baseline.
+//!   spec-driven reference via the 128-bit BitStream serializer — the
+//!   parity oracle and the §Perf "before" baseline, at either width.
 //!
 //! # Contract (all tiers, same as the Pallas kernel)
-//! - Encode: f32 subnormal inputs (|x| < 2^−126) quantize to 0 — the f32
-//!   pipeline is FTZ/DAZ end-to-end. NaN/Inf → NaR.
-//! - Decode: results below the f32 normal range flush to ±0; above it ±∞;
-//!   NaR → NaN.
+//! - Encode: subnormal inputs quantize to 0 — the float pipeline is
+//!   FTZ/DAZ end-to-end. NaN/Inf → NaR.
+//! - Decode: results below the float normal range flush to ±0; above it
+//!   ±∞; NaR → NaN.
 
-use crate::formats::posit::{BP32, BP64};
 use crate::formats::Decoded;
-use crate::vector::{codec, codec64, parallel};
+use crate::vector::lane::{LaneElem, LaneSigned};
+use crate::vector::parallel;
 
-/// Quantize a f32 slice to b-posit32 words (as i32 bit patterns) through
-/// the vector codec.
-pub fn quantize(xs: &[f32]) -> Vec<i32> {
+/// Quantize a float slice to serving-format words (as signed bit
+/// patterns) through the vector codec, at either width.
+pub fn quantize<E: LaneElem>(xs: &[E]) -> Vec<E::Signed> {
     let mut out = Vec::new();
     quantize_into(xs, &mut out);
     out
@@ -40,183 +49,174 @@ pub fn quantize(xs: &[f32]) -> Vec<i32> {
 /// Quantize into a reused buffer (cleared + refilled; no allocation once
 /// the buffer has grown to the steady-state batch size). The lane encoder
 /// is branch-free, so each shard compiles to the same straight-line inner
-/// loop as the chunked drivers in [`codec`]; batches past the fork-join
-/// threshold are sharded across worker threads (bit-identical results).
-pub fn quantize_into(xs: &[f32], out: &mut Vec<i32>) {
+/// loop as the chunked drivers in the lane engine; batches past the
+/// fork-join threshold are sharded across worker threads (bit-identical
+/// results).
+pub fn quantize_into<E: LaneElem>(xs: &[E], out: &mut Vec<E::Signed>) {
     // resize alone (no clear) keeps the steady-state same-size call from
     // re-zeroing a buffer the codec is about to overwrite anyway.
-    out.resize(xs.len(), 0);
+    out.resize(xs.len(), Default::default());
     let shards = parallel::auto_shards(xs.len(), parallel::CODEC_MIN_SHARD);
     parallel::for_each_block(shards, &mut out[..], |off, block| {
         for (o, &x) in block.iter_mut().zip(&xs[off..off + block.len()]) {
-            *o = codec::bp32_encode_lane(x) as i32;
+            *o = E::word_to_signed(E::bp_encode_lane(x));
         }
     });
 }
 
-/// Quantize one value (specialized ⟨32,6,5⟩ scalar fast path).
+/// Quantize one value (serving-spec lane codec, either width).
 #[inline]
-pub fn quantize_one(x: f32) -> i32 {
-    fast_bp32_encode(x) as i32
+pub fn quantize_one<E: LaneElem>(x: E) -> E::Signed {
+    E::word_to_signed(E::bp_encode_lane(x))
 }
 
-/// Dequantize b-posit32 words back to f32 through the vector codec.
-pub fn dequantize(bits: &[i32]) -> Vec<f32> {
+/// Dequantize serving-format words back to floats through the vector
+/// codec; the width is inferred from the bit-pattern element type.
+pub fn dequantize<S, E>(bits: &[S]) -> Vec<E>
+where
+    S: LaneSigned<Elem = E>,
+    E: LaneElem<Signed = S>,
+{
     let mut out = Vec::new();
     dequantize_into(bits, &mut out);
     out
 }
 
 /// Dequantize into a reused buffer (sharded past the fork-join threshold).
-pub fn dequantize_into(bits: &[i32], out: &mut Vec<f32>) {
-    out.resize(bits.len(), 0.0);
+pub fn dequantize_into<S, E>(bits: &[S], out: &mut Vec<E>)
+where
+    S: LaneSigned<Elem = E>,
+    E: LaneElem<Signed = S>,
+{
+    out.resize(bits.len(), E::ZERO);
     let shards = parallel::auto_shards(bits.len(), parallel::CODEC_MIN_SHARD);
     parallel::for_each_block(shards, &mut out[..], |off, block| {
         for (o, &b) in block.iter_mut().zip(&bits[off..off + block.len()]) {
-            *o = codec::bp32_decode_lane(b as u32);
+            *o = E::bp_decode_lane(b.to_word());
         }
     });
 }
 
-/// Dequantize one word (specialized ⟨32,6,5⟩ scalar fast path).
+/// Dequantize one word (serving-spec lane codec, width inferred from the
+/// bit-pattern type).
 #[inline]
-pub fn dequantize_one(bits: i32) -> f32 {
-    fast_bp32_decode(bits as u32)
+pub fn dequantize_one<S, E>(bits: S) -> E
+where
+    S: LaneSigned<Elem = E>,
+    E: LaneElem<Signed = S>,
+{
+    E::bp_decode_lane(bits.to_word())
 }
 
 /// Reference (general-codec) quantize — kept for parity tests and as the
-/// §Perf "before" baseline.
+/// §Perf "before" baseline, at either width.
 ///
-/// Applies the same FTZ contract as the fast path (f32 subnormal inputs
-/// quantize to 0), so general/fast parity is exact on *every* f32 input,
-/// not just normals.
+/// Applies the same FTZ contract as the fast path (subnormal inputs
+/// quantize to 0), so general/fast parity is exact on *every* input, not
+/// just normals.
 #[inline]
-pub fn quantize_one_general(x: f32) -> i32 {
-    if x.abs() < f32::MIN_POSITIVE {
+pub fn quantize_one_general<E: LaneElem>(x: E) -> E::Signed {
+    if x.abs() < E::MIN_POS {
         // Covers ±0 and all subnormals; NaN compares false and falls through.
-        return 0;
+        return E::word_to_signed(E::word_from_u64(0));
     }
-    BP32.encode(&Decoded::from_f64(x as f64)) as i32
+    E::word_to_signed(E::word_from_u64(E::BP.encode(&Decoded::from_f64(x.to_f64()))))
 }
 
-/// Reference (general-codec) dequantize, with the same f32-facing contract
-/// as the fast path: sub-f32-normal magnitudes flush to ±0 (the plain
-/// `as f32` cast would keep them as f32 subnormals), out-of-range
+/// Reference (general-codec) dequantize, with the same float-facing
+/// contract as the fast path: sub-normal-range magnitudes flush to ±0
+/// (the plain cast would keep them as subnormals), out-of-range
 /// magnitudes become ±∞ via the cast.
 #[inline]
-pub fn dequantize_one_general(bits: i32) -> f32 {
-    let v = BP32.decode(bits as u32 as u64).to_f64() as f32;
-    if v != 0.0 && v.abs() < f32::MIN_POSITIVE {
-        return if v < 0.0 { -0.0 } else { 0.0 };
+pub fn dequantize_one_general<S, E>(bits: S) -> E
+where
+    S: LaneSigned<Elem = E>,
+    E: LaneElem<Signed = S>,
+{
+    let v = E::from_f64(E::BP.decode(E::word_to_u64(bits.to_word())).to_f64());
+    if v != E::ZERO && v.abs() < E::MIN_POS {
+        return if v < E::ZERO { E::from_f64(-0.0) } else { E::ZERO };
     }
     v
 }
 
-/// Round a f32 tensor through b-posit32 (quantize + dequantize) — what the
-/// server does to inputs so the CPU model sees exactly the values a
-/// b-posit datapath would.
-pub fn roundtrip(xs: &[f32]) -> Vec<f32> {
+/// Round a float tensor through the serving b-posit format (quantize +
+/// dequantize) — what the server does to inputs so the CPU model sees
+/// exactly the values a b-posit datapath would.
+pub fn roundtrip<E: LaneElem>(xs: &[E]) -> Vec<E> {
     let mut out = xs.to_vec();
-    parallel::bp32_roundtrip_in_place(&mut out);
+    roundtrip_in_place(&mut out);
     out
 }
 
 /// In-place roundtrip over a caller buffer — the server's per-batch path
 /// (fused encode+decode, no intermediate buffer, no allocation; sharded
 /// across worker threads past the fork-join threshold).
-pub fn roundtrip_in_place(xs: &mut [f32]) {
-    parallel::bp32_roundtrip_in_place(xs);
+pub fn roundtrip_in_place<E: LaneElem>(xs: &mut [E]) {
+    parallel::par_bp_roundtrip_in_place(xs);
 }
 
 // ----------------------------------------------------------------------
-// b-posit64 batch APIs (the 64-bit serving tier). Same shape as the BP32
-// family: i64 bit patterns on the wire, vector codec underneath, buffers
-// reusable, sharding transparent. Contract: f64 subnormals FTZ to 0,
-// NaN/Inf → NaR; in-range f64s are *exactly* representable in ⟨64,6,5⟩
-// (≥ 52 fraction bits at every scale), so quantize64 is lossless on the
-// format's 2^±192 range.
+// Historical 64-bit names — thin aliases over the generic family
+// (docs/API.md). Contract notes that are width-specific: in-range f64s
+// are *exactly* representable in ⟨64,6,5⟩ (≥ 52 fraction bits at every
+// scale), so `quantize64` is lossless on the format's 2^±192 range.
 // ----------------------------------------------------------------------
 
 /// Quantize an f64 slice to b-posit64 words (as i64 bit patterns).
 pub fn quantize64(xs: &[f64]) -> Vec<i64> {
-    let mut out = Vec::new();
-    quantize64_into(xs, &mut out);
-    out
+    quantize(xs)
 }
 
 /// Quantize into a reused buffer (sharded past the fork-join threshold).
 pub fn quantize64_into(xs: &[f64], out: &mut Vec<i64>) {
-    out.resize(xs.len(), 0);
-    let shards = parallel::auto_shards(xs.len(), parallel::CODEC_MIN_SHARD);
-    parallel::for_each_block(shards, &mut out[..], |off, block| {
-        for (o, &x) in block.iter_mut().zip(&xs[off..off + block.len()]) {
-            *o = codec64::bp64_encode_lane(x) as i64;
-        }
-    });
+    quantize_into(xs, out);
 }
 
 /// Quantize one f64 (b-posit64 lane codec).
 #[inline]
 pub fn quantize64_one(x: f64) -> i64 {
-    codec64::bp64_encode_lane(x) as i64
+    quantize_one(x)
 }
 
 /// Dequantize b-posit64 words back to f64 through the vector codec.
 pub fn dequantize64(bits: &[i64]) -> Vec<f64> {
-    let mut out = Vec::new();
-    dequantize64_into(bits, &mut out);
-    out
+    dequantize(bits)
 }
 
 /// Dequantize into a reused buffer (sharded past the fork-join threshold).
 pub fn dequantize64_into(bits: &[i64], out: &mut Vec<f64>) {
-    out.resize(bits.len(), 0.0);
-    let shards = parallel::auto_shards(bits.len(), parallel::CODEC_MIN_SHARD);
-    parallel::for_each_block(shards, &mut out[..], |off, block| {
-        for (o, &b) in block.iter_mut().zip(&bits[off..off + block.len()]) {
-            *o = codec64::bp64_decode_lane(b as u64);
-        }
-    });
+    dequantize_into(bits, out);
 }
 
 /// Dequantize one b-posit64 word.
 #[inline]
 pub fn dequantize64_one(bits: i64) -> f64 {
-    codec64::bp64_decode_lane(bits as u64)
+    dequantize_one(bits)
 }
 
 /// Reference (general-codec) b-posit64 quantize — the parity oracle for
 /// the lane path, with the same FTZ contract.
 #[inline]
 pub fn quantize64_one_general(x: f64) -> i64 {
-    if x.abs() < f64::MIN_POSITIVE {
-        // Covers ±0 and all subnormals; NaN compares false and falls through.
-        return 0;
-    }
-    BP64.encode(&Decoded::from_f64(x)) as i64
+    quantize_one_general(x)
 }
 
 /// Reference (general-codec) b-posit64 dequantize with the f64-facing
 /// contract (sub-normal-range magnitudes flush to ±0).
 #[inline]
 pub fn dequantize64_one_general(bits: i64) -> f64 {
-    let v = BP64.decode(bits as u64).to_f64();
-    if v != 0.0 && v.abs() < f64::MIN_POSITIVE {
-        return if v < 0.0 { -0.0 } else { 0.0 };
-    }
-    v
+    dequantize_one_general(bits)
 }
 
 /// Round an f64 tensor through b-posit64 (quantize + dequantize).
 pub fn roundtrip64(xs: &[f64]) -> Vec<f64> {
-    let mut out = xs.to_vec();
-    parallel::bp64_roundtrip_in_place(&mut out);
-    out
+    roundtrip(xs)
 }
 
 /// In-place b-posit64 roundtrip over a caller buffer (fused, sharded).
 pub fn roundtrip64_in_place(xs: &mut [f64]) {
-    parallel::bp64_roundtrip_in_place(xs);
+    roundtrip_in_place(xs);
 }
 
 // ----------------------------------------------------------------------
@@ -236,8 +236,11 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// A cached encoded-weight tensor (whatever layout the builder produced).
 #[derive(Clone)]
 pub enum CachedWeights {
+    /// u32 posit words (the b-posit32 serving weights).
     U32(Arc<Vec<u32>>),
+    /// u64 posit words (the b-posit64 serving weights).
     U64(Arc<Vec<u64>>),
+    /// Plain f32 weights (the float baseline).
     F32(Arc<Vec<f32>>),
 }
 
@@ -333,7 +336,8 @@ cached_weights_fn!(
     F32
 );
 
-/// `(hits, misses)` since process start (monotone; shared by all servers).
+/// `(hits, misses)` since process start (monotone; shared by all servers;
+/// exported by `/metrics` as `positron_weight_cache_{hits,misses}_total`).
 pub fn weight_cache_stats() -> (u64, u64) {
     (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
 }
@@ -354,7 +358,9 @@ pub fn weight_cache_clear() {
 /// (|x| < 2^−126) quantize to 0 (the f32 pipeline is FTZ/DAZ end-to-end),
 /// NaN/Inf → NaR. For normal f32 the result is bit-identical to the
 /// general pattern-space-RNE codec (proved by exhaustive-sampled parity
-/// tests below).
+/// tests below). Kept as an *independent implementation* of the lane
+/// encoder — the test oracle neither derives from nor feeds the generic
+/// engine.
 #[inline]
 pub fn fast_bp32_encode(x: f32) -> u32 {
     let bits = x.to_bits();
@@ -500,7 +506,7 @@ mod tests {
             x ^= x << 17;
             let w = x as u32;
             let fast = fast_bp32_decode(w);
-            let gen = dequantize_one_general(w as i32);
+            let gen: f32 = dequantize_one_general(w as i32);
             if gen.is_nan() {
                 assert!(fast.is_nan());
                 continue;
@@ -518,19 +524,19 @@ mod tests {
 
     #[test]
     fn specials() {
-        assert_eq!(quantize_one(0.0), 0);
+        assert_eq!(quantize_one(0.0f32), 0);
         assert_eq!(quantize_one(f32::NAN) as u32, 0x8000_0000);
         assert_eq!(quantize_one(f32::INFINITY) as u32, 0x8000_0000);
-        assert!(dequantize_one(i32::MIN).is_nan());
-        assert_eq!(dequantize_one(0), 0.0);
+        assert!(dequantize_one::<i32, f32>(i32::MIN).is_nan());
+        assert_eq!(dequantize_one::<i32, f32>(0), 0.0);
     }
 
     #[test]
     fn quantize_matches_python_kernel_contract() {
         // 1.0 → 0x40000000 etc. — the same patterns the Pallas kernel emits.
-        assert_eq!(quantize_one(1.0) as u32, 0x4000_0000);
-        assert_eq!(quantize_one(-1.0) as u32, 0xC000_0000);
-        assert_eq!(dequantize_one(0x4000_0000u32 as i32), 1.0);
+        assert_eq!(quantize_one(1.0f32) as u32, 0x4000_0000);
+        assert_eq!(quantize_one(-1.0f32) as u32, 0xC000_0000);
+        assert_eq!(dequantize_one::<i32, f32>(0x4000_0000u32 as i32), 1.0);
     }
 
     #[test]
@@ -554,17 +560,20 @@ mod tests {
         let batch = quantize(&xs);
         for (i, &x) in xs.iter().enumerate() {
             assert_eq!(batch[i], quantize_one(x), "quantize lane {i}");
+            assert_eq!(batch[i] as u32, fast_bp32_encode(x), "fast-path parity lane {i}");
         }
         let back = dequantize(&batch);
         for (i, &b) in batch.iter().enumerate() {
-            assert_eq!(back[i].to_bits(), dequantize_one(b).to_bits(), "dequantize lane {i}");
+            let one: f32 = dequantize_one(b);
+            assert_eq!(back[i].to_bits(), one.to_bits(), "dequantize lane {i}");
         }
         let rt = roundtrip(&xs);
         let mut rt_ip = xs.clone();
         roundtrip_in_place(&mut rt_ip);
         for i in 0..xs.len() {
             assert_eq!(rt[i].to_bits(), rt_ip[i].to_bits());
-            assert_eq!(rt[i].to_bits(), dequantize_one(quantize_one(xs[i])).to_bits());
+            let one: f32 = dequantize_one(quantize_one(xs[i]));
+            assert_eq!(rt[i].to_bits(), one.to_bits());
         }
     }
 
@@ -598,6 +607,27 @@ mod tests {
             assert_eq!(rt[i].to_bits(), rt_ip[i].to_bits());
             assert_eq!(rt[i].to_bits(), dequantize64_one(quantize64_one(xs[i])).to_bits());
         }
+    }
+
+    #[test]
+    fn generic_tiers_equal_named_64_aliases() {
+        // The named 64-bit family and the generic family are the same
+        // monomorphizations — spot-check every tier pair.
+        let mut rng = crate::testutil::Rng::new(0x6e6e);
+        for _ in 0..10_000 {
+            let x = f64::from_bits(rng.next_u64());
+            assert_eq!(quantize_one(x), quantize64_one(x));
+            assert_eq!(quantize_one_general(x), quantize64_one_general(x));
+            let b = rng.next_u64() as i64;
+            let g: f64 = dequantize_one(b);
+            assert!(
+                g.to_bits() == dequantize64_one(b).to_bits()
+                    || (g.is_nan() && dequantize64_one(b).is_nan())
+            );
+        }
+        let xs: Vec<f64> = (0..100).map(|i| i as f64 * 0.125 - 6.0).collect();
+        assert_eq!(quantize(&xs), quantize64(&xs));
+        assert_eq!(roundtrip(&xs), roundtrip64(&xs));
     }
 
     #[test]
@@ -664,7 +694,7 @@ mod tests {
         let mut bits = Vec::new();
         quantize_into(&xs, &mut bits);
         let cap = bits.capacity();
-        let mut back = Vec::new();
+        let mut back: Vec<f32> = Vec::new();
         dequantize_into(&bits, &mut back);
         assert_eq!(back, xs);
         // Re-running with the same size must not reallocate.

@@ -31,9 +31,9 @@ use std::time::{Duration, Instant};
 
 use crate::error::{anyhow, Result};
 
+use super::backend;
 use super::backend::{BackendKind, InferenceBackend, NativeBackend, PjrtBackend, WeightFormat};
 use super::metrics::Metrics;
-use super::quantizer;
 use crate::runtime::ModelWeights;
 
 /// Server tuning knobs.
@@ -351,13 +351,16 @@ fn worker_loop(
 
         // Stage the rows×d input, then quantize in place when the
         // serving format calls for it (only the quantize pass counts as
-        // codec time — staging memcpys are batching overhead).
+        // codec time — staging memcpys are batching overhead). The
+        // contract lives in `backend::stage_inputs_in_place`, shared
+        // with the allocating test-facing wrappers; the staging buffer
+        // is reused, so this path performs zero per-request allocation.
         for (i, r) in batch.iter().enumerate() {
             x[i * d..(i + 1) * d].copy_from_slice(&r.features);
         }
-        if cfg.quantize_inputs && cfg.weight_format == WeightFormat::Bp32 {
+        if cfg.quantize_inputs && cfg.weight_format.quantizes_inputs() {
             let t_codec = Instant::now();
-            quantizer::roundtrip_in_place(&mut x[..rows * d]);
+            backend::stage_inputs_in_place(cfg.weight_format, &mut x[..rows * d]);
             metrics.record_codec(t_codec.elapsed());
         }
 

@@ -8,14 +8,21 @@
 //! Layer map (see DESIGN.md):
 //! - [`formats`] — the numeric-format zoo: IEEE floats, standard posits,
 //!   b-posits, takums, the 800-bit quire, and exact shared arithmetic.
-//! - [`vector`] — the serving hot path's data plane: branch-free batched
-//!   codecs at 32- and 64-bit lane widths (u32/f32 and u64/f64 streams —
-//!   the software mirror of the paper's fixed-mux insight, including its
-//!   64-bit scalability claim), quire-exact dot/axpy/gemv kernels over
-//!   f32 and f64, register/L1-blocked GEMM (fast + quire-exact +
-//!   quantized-weight paths at both widths), and a zero-dependency scoped
-//!   fork-join pool (`PALLAS_THREADS`) that shards codecs and row-blocked
-//!   kernels across cores with bit-identical results.
+//! - [`vector`] — the serving hot path's data plane, organized around a
+//!   **width-generic lane API** (`vector::lane`): the `LaneElem` trait
+//!   (f32 ↔ u32/u64 words, f64 ↔ u64/u128 intermediates) carries the
+//!   branch-free batched codec — one macro-expanded datapath for both
+//!   widths, the software mirror of the paper's claim that the bounded
+//!   regime makes decode/encode structurally identical across widths —
+//!   plus the generic `LaneCodec<E>` engine, the spec-carrying
+//!   `EncodedTensor<E>` weight buffer, one generic dot/axpy/gemv and
+//!   register/L1-blocked GEMM family (fast + quire-exact +
+//!   quantized-weight paths), and a zero-dependency scoped fork-join
+//!   pool (`PALLAS_THREADS`) whose generic `par_*` family shards codecs
+//!   and row-blocked kernels across cores with bit-identical results.
+//!   The named BP32/P32/BP64/P64 fast paths are monomorphized spec
+//!   constants over the same engine (see docs/API.md for the migration
+//!   table).
 //! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
 //!   power) and the six decoder/encoder circuits of Figs 8–13.
 //! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis

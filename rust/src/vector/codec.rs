@@ -1,14 +1,12 @@
-//! Branch-free batched posit-family codecs.
+//! 32-bit tier of the branch-free batched posit-family codec: the named
+//! BP32/P32 fast paths and the u32/f32 slice drivers, as monomorphized
+//! spec constants over the width-generic engine in [`super::lane`].
 //!
-//! The paper's core hardware insight — bounding the regime to `rs` bits
-//! turns variable-shift/LZC decode into fixed mux selection — has a direct
-//! software analogue: with the regime bounded, every lane of a batch runs
-//! the *same* straight-line instruction sequence, so encode/decode over a
-//! slice becomes branch-free, mispredict-free, and autovectorizer-friendly.
-//! This module is that lane codec: chunked (8-lane) encode/decode for
-//! b-posit⟨32,6,5⟩, posit⟨32,2⟩, any ⟨n≤32, rs, 1≤es≤8⟩ spec, and the
-//! trivial f32⇄bits pair, over `&[f32]`/`&[u32]` slices with in-place
-//! (`_into`) variants for buffer reuse on the serving hot path.
+//! The decode/encode datapath itself lives in `lane.rs` and is written
+//! **once** for both widths (the paper's structural-identity claim, as
+//! code); this module only pins it to ⟨32,6,5⟩ / ⟨32,2⟩ and keeps the
+//! historical entry-point names. See `docs/API.md` for the migration
+//! table.
 //!
 //! ## Contract (identical to the scalar fast path in
 //! [`crate::coordinator::quantizer`] and the Pallas kernel)
@@ -22,173 +20,17 @@
 //! rust/tests/vector_parity.rs), and bit-identical to the scalar
 //! `fast_bp32_*` pair on all inputs.
 
+use super::lane::{self, LaneElem};
 use crate::formats::posit::PositSpec;
 
-/// Lane width of the chunked loops. 8 × u32 = one AVX2 register; the inner
-/// loops carry no cross-lane dependency, so narrower ISAs still profit via
-/// unrolled ILP.
-pub const LANES: usize = 8;
-
-const F32_NAN_BITS: u32 = 0x7fc0_0000;
+pub use super::lane::LANES;
 
 /// True when the branch-free 32-bit lane codec supports this spec.
 /// Wider specs (32 < n ≤ 64) are served by [`super::codec64`]; the
 /// general [`PositSpec`] codec in `formats::posit` covers the rest —
-/// see [`super::route_spec`].
+/// see [`super::route_spec`] / [`super::dispatch_spec`].
 pub fn spec_supported(spec: &PositSpec) -> bool {
-    (3..=32).contains(&spec.n)
-        && spec.rs >= 2
-        && spec.rs <= spec.n - 1
-        && (1..=8).contains(&spec.es)
-}
-
-// ----------------------------------------------------------------------
-// Lane primitives: straight-line, no data-dependent branches. The `if`
-// expressions below are pure value selects (both arms side-effect free);
-// LLVM lowers them to cmov/blend, never to control flow.
-// ----------------------------------------------------------------------
-
-/// Encode one f32 into an n-bit posit/b-posit word (see module contract).
-#[inline(always)]
-fn encode_lane(n: u32, rs: u32, es: u32, x: f32) -> u32 {
-    debug_assert!((3..=32).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
-    let m = n - 1;
-    let mask_n: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
-    let nar: u32 = 1u32 << m;
-    let maxpos: u64 = (1u64 << m) - 1;
-    let bounded = rs < m;
-    let r_max: i32 = rs as i32 - 1;
-    let r_min: i32 = if bounded { -(rs as i32) } else { -(n as i32 - 2) };
-
-    let bits = x.to_bits();
-    let sign = bits >> 31;
-    let biased = ((bits >> 23) & 0xff) as i32;
-    let f23 = (bits & 0x7f_ffff) as u64;
-    let is_zero_or_sub = biased == 0; // zero and FTZ'd subnormals
-    let is_special = biased == 0xff; // NaN/Inf → NaR
-    let t = biased - 127;
-    let r = t >> es; // floor(t / 2^es)
-    let e = (t & ((1i32 << es) - 1)) as u64; // t mod 2^es, in [0, 2^es)
-    let sat_hi = r > r_max;
-    let sat_lo = r < r_min;
-    let rc = r.clamp(r_min, r_max); // keep shifts in range; sat masks win below
-    let run: u32 = if rc >= 0 { (rc + 1) as u32 } else { (-rc) as u32 };
-    let capped = run >= rs; // regime hits the bound: no terminator bit
-    let w_reg = if capped { rs } else { run + 1 };
-    // Regime field value in w_reg bits: a run of ones/zeros plus the
-    // terminator when not capped.
-    let reg_ones = (1u64 << w_reg) - 1;
-    let reg_val: u64 = if rc >= 0 { reg_ones - ((!capped) as u64) } else { (!capped) as u64 };
-    // Serialize regime ‖ exponent ‖ fraction MSB-first into a u64 stream
-    // (w_reg + es + 23 ≤ 31 + 8 + 23 ≤ 62 bits: shifts never underflow).
-    let sh_reg = 64 - w_reg;
-    let sh_exp = sh_reg - es;
-    let sh_frac = sh_exp - 23;
-    let s = (reg_val << sh_reg) | (e << sh_exp) | (f23 << sh_frac);
-    // Cut at m bits with round-to-nearest-even: rem+lsb>half ⟺ RNE up.
-    let cut = 64 - m; // 33..=61
-    let q = s >> cut;
-    let rem = s & ((1u64 << cut) - 1);
-    let half = 1u64 << (cut - 1);
-    let up = (rem + (q & 1) > half) as u64;
-    // Carry-out saturates to maxpos (never NaR); a nonzero real never
-    // rounds to the zero pattern (min clamp to minpos).
-    let body = (q + up).min(maxpos).max(1);
-    let body = if sat_hi { maxpos } else { body };
-    let body = if sat_lo { 1 } else { body };
-    let body32 = body as u32;
-    let word = (if sign == 1 { body32.wrapping_neg() } else { body32 }) & mask_n;
-    let word = if is_zero_or_sub { 0 } else { word };
-    if is_special {
-        nar
-    } else {
-        word
-    }
-}
-
-/// Decode one n-bit posit/b-posit word to f32 (see module contract).
-#[inline(always)]
-fn decode_lane(n: u32, rs: u32, es: u32, word: u32) -> f32 {
-    debug_assert!((3..=32).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
-    let m = n - 1;
-    let mask_n: u32 = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
-    let body_mask: u32 = (1u32 << m) - 1;
-    let nar: u32 = 1u32 << m;
-
-    let word = word & mask_n;
-    let is_zero = word == 0;
-    let is_nar = word == nar;
-    let sign = (word >> m) & 1;
-    let mag = (if sign == 1 { word.wrapping_neg() } else { word }) & body_mask;
-    let b0 = (mag >> (m - 1)) & 1;
-    // Leading-run length within the m-bit body, capped at rs.
-    let probe = (if b0 == 1 { !mag } else { mag }) & body_mask;
-    let lz = (probe << (32 - m)).leading_zeros(); // probe == 0 ⇒ 32 ≥ m
-    let run = lz.min(m).min(rs);
-    let reg_len = run + (run != rs) as u32; // +terminator unless capped
-    let r: i32 = if b0 == 1 { run as i32 - 1 } else { -(run as i32) };
-    // Align the first post-regime bit to bit 63 of a u64 (the two-step
-    // shift keeps the amount ≤ 63 even when reg_len = m). Ghost exponent
-    // bits and the empty fraction fall out as zeros automatically.
-    let pay = ((mag as u64) << (63 - m + reg_len)) << 1;
-    let e = (pay >> (64 - es)) as i32;
-    let frac_top = pay << es; // fraction, MSB-aligned at bit 63
-    let t = r * (1i32 << es) + e;
-    // RNE the (≤ 29-bit) fraction to 23 f32 bits; guard/sticky live in the
-    // low 41 bits of frac_top.
-    let q = (frac_top >> 41) as u32;
-    let rem = frac_top & ((1u64 << 41) - 1);
-    let up = (rem + (q & 1) as u64 > (1u64 << 40)) as u32;
-    let frac = q + up;
-    let tt = t + (frac >> 23) as i32; // rounding carry bumps the scale
-    let frac = frac & 0x7f_ffff;
-    let underflow = tt < -126; // FTZ contract (keeps the sign)
-    let overflow = tt > 127;
-    let ttc = tt.clamp(-126, 127);
-    let fbits = (sign << 31) | (((ttc + 127) as u32) << 23) | frac;
-    let fbits = if underflow { sign << 31 } else { fbits };
-    let fbits = if overflow { (sign << 31) | 0x7f80_0000 } else { fbits };
-    let fbits = if is_zero { 0 } else { fbits };
-    let fbits = if is_nar { F32_NAN_BITS } else { fbits };
-    f32::from_bits(fbits)
-}
-
-// ----------------------------------------------------------------------
-// Chunked slice drivers. The spec parameters are loop-invariant constants
-// at every call site below, so each wrapper monomorphizes to a dedicated
-// straight-line inner loop.
-// ----------------------------------------------------------------------
-
-#[inline(always)]
-fn encode_slice(n: u32, rs: u32, es: u32, xs: &[f32], out: &mut [u32]) {
-    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
-    let split = xs.len() - xs.len() % LANES;
-    let (xh, xt) = xs.split_at(split);
-    let (oh, ot) = out.split_at_mut(split);
-    for (xc, oc) in xh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
-        for l in 0..LANES {
-            oc[l] = encode_lane(n, rs, es, xc[l]);
-        }
-    }
-    for (x, o) in xt.iter().zip(ot.iter_mut()) {
-        *o = encode_lane(n, rs, es, *x);
-    }
-}
-
-#[inline(always)]
-fn decode_slice(n: u32, rs: u32, es: u32, ws: &[u32], out: &mut [f32]) {
-    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
-    let split = ws.len() - ws.len() % LANES;
-    let (wh, wt) = ws.split_at(split);
-    let (oh, ot) = out.split_at_mut(split);
-    for (wc, oc) in wh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
-        for l in 0..LANES {
-            oc[l] = decode_lane(n, rs, es, wc[l]);
-        }
-    }
-    for (w, o) in wt.iter().zip(ot.iter_mut()) {
-        *o = decode_lane(n, rs, es, *w);
-    }
+    <f32 as LaneElem>::spec_supported(spec)
 }
 
 // ---------------- b-posit⟨32,6,5⟩ (the serving format) ----------------
@@ -196,23 +38,23 @@ fn decode_slice(n: u32, rs: u32, es: u32, ws: &[u32], out: &mut [f32]) {
 /// Encode one f32 → b-posit32 word (branch-free lane form).
 #[inline]
 pub fn bp32_encode_lane(x: f32) -> u32 {
-    encode_lane(32, 6, 5, x)
+    <f32 as LaneElem>::bp_encode_lane(x)
 }
 
 /// Decode one b-posit32 word → f32 (branch-free lane form).
 #[inline]
 pub fn bp32_decode_lane(w: u32) -> f32 {
-    decode_lane(32, 6, 5, w)
+    <f32 as LaneElem>::bp_decode_lane(w)
 }
 
 /// Batched encode into a caller-owned buffer (`out.len() == xs.len()`).
 pub fn bp32_encode_into(xs: &[f32], out: &mut [u32]) {
-    encode_slice(32, 6, 5, xs, out);
+    lane::bp_encode_into::<f32>(xs, out);
 }
 
 /// Batched decode into a caller-owned buffer.
 pub fn bp32_decode_into(ws: &[u32], out: &mut [f32]) {
-    decode_slice(32, 6, 5, ws, out);
+    lane::bp_decode_into::<f32>(ws, out);
 }
 
 /// Allocating batched encode.
@@ -233,16 +75,7 @@ pub fn bp32_decode(ws: &[u32]) -> Vec<f32> {
 /// to a batch so the model sees exactly b-posit-representable values.
 /// No intermediate word buffer, no allocation.
 pub fn bp32_roundtrip_in_place(xs: &mut [f32]) {
-    let split = xs.len() - xs.len() % LANES;
-    let (head, tail) = xs.split_at_mut(split);
-    for c in head.chunks_exact_mut(LANES) {
-        for l in 0..LANES {
-            c[l] = decode_lane(32, 6, 5, encode_lane(32, 6, 5, c[l]));
-        }
-    }
-    for x in tail.iter_mut() {
-        *x = decode_lane(32, 6, 5, encode_lane(32, 6, 5, *x));
-    }
+    lane::bp_roundtrip_in_place::<f32>(xs);
 }
 
 /// Fused roundtrip into a separate output buffer.
@@ -257,23 +90,23 @@ pub fn bp32_roundtrip_into(xs: &[f32], out: &mut [f32]) {
 /// Encode one f32 → posit⟨32,2⟩ word.
 #[inline]
 pub fn p32_encode_lane(x: f32) -> u32 {
-    encode_lane(32, 31, 2, x)
+    <f32 as LaneElem>::pstd_encode_lane(x)
 }
 
 /// Decode one posit⟨32,2⟩ word → f32.
 #[inline]
 pub fn p32_decode_lane(w: u32) -> f32 {
-    decode_lane(32, 31, 2, w)
+    <f32 as LaneElem>::pstd_decode_lane(w)
 }
 
 /// Batched posit⟨32,2⟩ encode into a caller-owned buffer.
 pub fn p32_encode_into(xs: &[f32], out: &mut [u32]) {
-    encode_slice(32, 31, 2, xs, out);
+    lane::pstd_encode_into::<f32>(xs, out);
 }
 
 /// Batched posit⟨32,2⟩ decode into a caller-owned buffer.
 pub fn p32_decode_into(ws: &[u32], out: &mut [f32]) {
-    decode_slice(32, 31, 2, ws, out);
+    lane::pstd_decode_into::<f32>(ws, out);
 }
 
 // ---------------- any supported spec (parity + small formats) ----------------
@@ -281,25 +114,25 @@ pub fn p32_decode_into(ws: &[u32], out: &mut [f32]) {
 /// Encode one f32 under any supported spec (see [`spec_supported`]).
 pub fn encode_word(spec: &PositSpec, x: f32) -> u32 {
     assert!(spec_supported(spec), "lane codec does not support {spec:?}");
-    encode_lane(spec.n, spec.rs, spec.es, x)
+    <f32 as LaneElem>::encode_lane(spec.n, spec.rs, spec.es, x)
 }
 
 /// Decode one word under any supported spec.
 pub fn decode_word(spec: &PositSpec, w: u32) -> f32 {
     assert!(spec_supported(spec), "lane codec does not support {spec:?}");
-    decode_lane(spec.n, spec.rs, spec.es, w)
+    <f32 as LaneElem>::decode_lane(spec.n, spec.rs, spec.es, w)
 }
 
 /// Batched encode under any supported spec.
 pub fn encode_slice_into(spec: &PositSpec, xs: &[f32], out: &mut [u32]) {
     assert!(spec_supported(spec), "lane codec does not support {spec:?}");
-    encode_slice(spec.n, spec.rs, spec.es, xs, out);
+    lane::encode_slice::<f32>(spec.n, spec.rs, spec.es, xs, out);
 }
 
 /// Batched decode under any supported spec.
 pub fn decode_slice_into(spec: &PositSpec, ws: &[u32], out: &mut [f32]) {
     assert!(spec_supported(spec), "lane codec does not support {spec:?}");
-    decode_slice(spec.n, spec.rs, spec.es, ws, out);
+    lane::decode_slice::<f32>(spec.n, spec.rs, spec.es, ws, out);
 }
 
 // ---------------- f32 ⇄ bits (baseline lane for the bench sweep) ----------------

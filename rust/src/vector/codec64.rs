@@ -1,196 +1,36 @@
-//! Branch-free batched 64-bit lane codec: posit-family words up to
-//! `n = 64` over `&[f64]`/`&[u64]` streams with u128 intermediates.
+//! 64-bit tier of the branch-free batched posit-family codec: the named
+//! BP64/P64 fast paths and the u64/f64 slice drivers, as monomorphized
+//! spec constants over the width-generic engine in [`super::lane`].
 //!
 //! This is the 64-bit rung of the paper's scalability claim ("even
 //! greater advantages at 64-bit"): the bounded regime keeps the decode a
-//! fixed mux at any width, so the lane structure of [`super::codec`]
-//! carries over unchanged — 8-lane chunks, pure value selects (both
-//! arms of every `if` below are side-effect free, so LLVM lowers them to
-//! cmov/blend, never control flow), `_into` variants for buffer reuse.
-//! The only width-specific change is the intermediate stream: the
-//! regime ‖ exponent ‖ fraction serialization and the pattern-space RNE
-//! cut run in u128 (w_reg + es + 52 ≤ 123 bits).
+//! fixed mux at any width, so the datapath is the *same token stream* as
+//! the 32-bit tier — `lane.rs` expands one macro body at both widths,
+//! with u128 intermediates here (w_reg + es + 52 ≤ 123 bits).
 //!
 //! ## Contract (the f64 mirror of the 32-bit codec's contract)
 //! - Encode: f64 subnormal inputs (|x| < 2^−1022) quantize to 0 (FTZ/DAZ
 //!   end-to-end); NaN/Inf → NaR.
 //! - Decode: values whose 52-bit-rounded scale falls below the f64
 //!   normal range flush to ±0 (keeping the sign); above it, ±∞; NaR →
-//!   canonical quiet NaN. For every supported spec the fraction width
-//!   near the f64 range boundaries is ≤ 52 bits, so this is identical to
-//!   "round the exact posit value to f64, then flush subnormals" — the
-//!   form the big-int oracle checks.
+//!   canonical quiet NaN.
 //!
-//! Two named fast paths: `bp64_*` for the paper's b-posit⟨64,6,5⟩ and
-//! `p64_*` for the standard posit⟨64,2⟩. Because ⟨64,6,5⟩ carries ≥ 52
-//! fraction bits at every scale, **every in-range f64 is exactly a
-//! b-posit64 value**: `bp64_encode` never rounds and decode∘encode is
-//! the identity on |x| ∈ [2^−192, 2^192).
+//! Because ⟨64,6,5⟩ carries ≥ 52 fraction bits at every scale, **every
+//! in-range f64 is exactly a b-posit64 value**: `bp64_encode` never
+//! rounds and decode∘encode is the identity on |x| ∈ [2^−192, 2^192).
 //!
 //! Verified against the Python big-int oracle (python/compile/kernels/
-//! scalar.py `lane_encode`/`lane_decode`, themselves proven against the
-//! Fraction-exact codec): exhaustive 16-bit sweeps across (rs, es)
-//! corners, stratified 2^20-sample sweeps for BP64/P64, boundary and
-//! RNE-tie strata — see python/tests/test_scalar_oracle64.py and
-//! rust/tests/vector_parity64.rs.
+//! scalar.py `lane_encode`/`lane_decode`) — see
+//! python/tests/test_scalar_oracle64.py and rust/tests/vector_parity64.rs.
 
-use super::codec::LANES;
+use super::lane::{self, LaneElem};
 use crate::formats::posit::PositSpec;
-
-const F64_NAN_BITS: u64 = 0x7ff8_0000_0000_0000;
 
 /// True when the 64-bit lane codec supports this spec. Strict superset
 /// of [`super::codec::spec_supported`]: everything that codec handles
 /// plus widths 33..=64.
 pub fn spec_supported(spec: &PositSpec) -> bool {
-    (3..=64).contains(&spec.n)
-        && spec.rs >= 2
-        && spec.rs <= spec.n - 1
-        && (1..=8).contains(&spec.es)
-}
-
-// ----------------------------------------------------------------------
-// Lane primitives
-// ----------------------------------------------------------------------
-
-/// Encode one f64 into an n-bit posit/b-posit word (see module contract).
-#[inline(always)]
-fn encode_lane(n: u32, rs: u32, es: u32, x: f64) -> u64 {
-    debug_assert!((3..=64).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
-    let m = n - 1;
-    let mask_n: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
-    let nar: u64 = 1u64 << m;
-    let maxpos: u128 = (1u128 << m) - 1;
-    let bounded = rs < m;
-    let r_max: i32 = rs as i32 - 1;
-    let r_min: i32 = if bounded { -(rs as i32) } else { -(n as i32 - 2) };
-
-    let bits = x.to_bits();
-    let sign = bits >> 63;
-    let biased = ((bits >> 52) & 0x7ff) as i32;
-    let f52 = (bits & ((1u64 << 52) - 1)) as u128;
-    let is_zero_or_sub = biased == 0; // zero and FTZ'd subnormals
-    let is_special = biased == 0x7ff; // NaN/Inf → NaR
-    let t = biased - 1023;
-    let r = t >> es; // floor(t / 2^es)
-    let e = (t & ((1i32 << es) - 1)) as u128; // t mod 2^es, in [0, 2^es)
-    let sat_hi = r > r_max;
-    let sat_lo = r < r_min;
-    let rc = r.clamp(r_min, r_max); // keep shifts in range; sat masks win below
-    let run: u32 = if rc >= 0 { (rc + 1) as u32 } else { (-rc) as u32 };
-    let capped = run >= rs; // regime hits the bound: no terminator bit
-    let w_reg = if capped { rs } else { run + 1 };
-    let reg_ones = (1u128 << w_reg) - 1;
-    let reg_val: u128 = if rc >= 0 { reg_ones - ((!capped) as u128) } else { (!capped) as u128 };
-    // Serialize regime ‖ exponent ‖ fraction MSB-first into a u128 stream
-    // (w_reg + es + 52 ≤ 63 + 8 + 52 = 123 bits: shifts never underflow).
-    let sh_reg = 128 - w_reg;
-    let sh_exp = sh_reg - es;
-    let sh_frac = sh_exp - 52;
-    let s = (reg_val << sh_reg) | (e << sh_exp) | (f52 << sh_frac);
-    // Cut at m bits with round-to-nearest-even: rem+lsb>half ⟺ RNE up.
-    let cut = 128 - m; // 65..=126
-    let q = s >> cut;
-    let rem = s & ((1u128 << cut) - 1);
-    let half = 1u128 << (cut - 1);
-    let up = (rem + (q & 1) > half) as u128;
-    // Carry-out saturates to maxpos (never NaR); a nonzero real never
-    // rounds to the zero pattern (min clamp to minpos).
-    let body = (q + up).min(maxpos).max(1);
-    let body = if sat_hi { maxpos } else { body };
-    let body = if sat_lo { 1 } else { body };
-    let body64 = body as u64;
-    let word = (if sign == 1 { body64.wrapping_neg() } else { body64 }) & mask_n;
-    let word = if is_zero_or_sub { 0 } else { word };
-    if is_special {
-        nar
-    } else {
-        word
-    }
-}
-
-/// Decode one n-bit posit/b-posit word to f64 (see module contract).
-#[inline(always)]
-fn decode_lane(n: u32, rs: u32, es: u32, word: u64) -> f64 {
-    debug_assert!((3..=64).contains(&n) && rs >= 2 && rs <= n - 1 && (1..=8).contains(&es));
-    let m = n - 1;
-    let mask_n: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
-    let body_mask: u64 = (1u64 << m) - 1;
-    let nar: u64 = 1u64 << m;
-
-    let word = word & mask_n;
-    let is_zero = word == 0;
-    let is_nar = word == nar;
-    let sign = (word >> m) & 1;
-    let mag = (if sign == 1 { word.wrapping_neg() } else { word }) & body_mask;
-    let b0 = (mag >> (m - 1)) & 1;
-    // Leading-run length within the m-bit body, capped at rs.
-    let probe = (if b0 == 1 { !mag } else { mag }) & body_mask;
-    let lz = (probe << (64 - m)).leading_zeros(); // probe == 0 ⇒ 64 ≥ m
-    let run = lz.min(m).min(rs);
-    let reg_len = run + (run != rs) as u32; // +terminator unless capped
-    let r: i32 = if b0 == 1 { run as i32 - 1 } else { -(run as i32) };
-    // Align the first post-regime bit to bit 127 of a u128 (the two-step
-    // shift keeps the amount ≤ 127 even when reg_len = m). Ghost exponent
-    // bits and the empty fraction fall out as zeros automatically.
-    let pay = ((mag as u128) << (127 - m + reg_len)) << 1;
-    let e = (pay >> (128 - es)) as i32;
-    let frac_top = pay << es; // fraction, MSB-aligned at bit 127
-    let t = r * (1i32 << es) + e;
-    // RNE the (≤ 60-bit) fraction to 52 f64 bits; guard/sticky live in
-    // the low 76 bits of frac_top.
-    let q = (frac_top >> 76) as u64;
-    let rem = frac_top & ((1u128 << 76) - 1);
-    let up = (rem + (q & 1) as u128 > (1u128 << 75)) as u64;
-    let frac = q + up;
-    let tt = t + (frac >> 52) as i32; // rounding carry bumps the scale
-    let frac = frac & ((1u64 << 52) - 1);
-    let underflow = tt < -1022; // FTZ contract (keeps the sign)
-    let overflow = tt > 1023;
-    let ttc = tt.clamp(-1022, 1023);
-    let fbits = (sign << 63) | (((ttc + 1023) as u64) << 52) | frac;
-    let fbits = if underflow { sign << 63 } else { fbits };
-    let fbits = if overflow { (sign << 63) | (0x7ffu64 << 52) } else { fbits };
-    let fbits = if is_zero { 0 } else { fbits };
-    let fbits = if is_nar { F64_NAN_BITS } else { fbits };
-    f64::from_bits(fbits)
-}
-
-// ----------------------------------------------------------------------
-// Chunked slice drivers (monomorphized straight-line inner loops at every
-// call site: the spec parameters are loop-invariant constants).
-// ----------------------------------------------------------------------
-
-#[inline(always)]
-fn encode_slice(n: u32, rs: u32, es: u32, xs: &[f64], out: &mut [u64]) {
-    assert_eq!(xs.len(), out.len(), "encode64: input/output length mismatch");
-    let split = xs.len() - xs.len() % LANES;
-    let (xh, xt) = xs.split_at(split);
-    let (oh, ot) = out.split_at_mut(split);
-    for (xc, oc) in xh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
-        for l in 0..LANES {
-            oc[l] = encode_lane(n, rs, es, xc[l]);
-        }
-    }
-    for (x, o) in xt.iter().zip(ot.iter_mut()) {
-        *o = encode_lane(n, rs, es, *x);
-    }
-}
-
-#[inline(always)]
-fn decode_slice(n: u32, rs: u32, es: u32, ws: &[u64], out: &mut [f64]) {
-    assert_eq!(ws.len(), out.len(), "decode64: input/output length mismatch");
-    let split = ws.len() - ws.len() % LANES;
-    let (wh, wt) = ws.split_at(split);
-    let (oh, ot) = out.split_at_mut(split);
-    for (wc, oc) in wh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
-        for l in 0..LANES {
-            oc[l] = decode_lane(n, rs, es, wc[l]);
-        }
-    }
-    for (w, o) in wt.iter().zip(ot.iter_mut()) {
-        *o = decode_lane(n, rs, es, *w);
-    }
+    <f64 as LaneElem>::spec_supported(spec)
 }
 
 // ---------------- b-posit⟨64,6,5⟩ (the 64-bit serving format) ----------------
@@ -198,23 +38,23 @@ fn decode_slice(n: u32, rs: u32, es: u32, ws: &[u64], out: &mut [f64]) {
 /// Encode one f64 → b-posit64 word (branch-free lane form).
 #[inline]
 pub fn bp64_encode_lane(x: f64) -> u64 {
-    encode_lane(64, 6, 5, x)
+    <f64 as LaneElem>::bp_encode_lane(x)
 }
 
 /// Decode one b-posit64 word → f64 (branch-free lane form).
 #[inline]
 pub fn bp64_decode_lane(w: u64) -> f64 {
-    decode_lane(64, 6, 5, w)
+    <f64 as LaneElem>::bp_decode_lane(w)
 }
 
 /// Batched encode into a caller-owned buffer (`out.len() == xs.len()`).
 pub fn bp64_encode_into(xs: &[f64], out: &mut [u64]) {
-    encode_slice(64, 6, 5, xs, out);
+    lane::bp_encode_into::<f64>(xs, out);
 }
 
 /// Batched decode into a caller-owned buffer.
 pub fn bp64_decode_into(ws: &[u64], out: &mut [f64]) {
-    decode_slice(64, 6, 5, ws, out);
+    lane::bp_decode_into::<f64>(ws, out);
 }
 
 /// Allocating batched encode.
@@ -235,16 +75,7 @@ pub fn bp64_decode(ws: &[u64]) -> Vec<f64> {
 /// allocation). For b-posit64 this is FTZ + NaR-canonicalization +
 /// saturation only: in-range f64s are exactly representable.
 pub fn bp64_roundtrip_in_place(xs: &mut [f64]) {
-    let split = xs.len() - xs.len() % LANES;
-    let (head, tail) = xs.split_at_mut(split);
-    for c in head.chunks_exact_mut(LANES) {
-        for l in 0..LANES {
-            c[l] = decode_lane(64, 6, 5, encode_lane(64, 6, 5, c[l]));
-        }
-    }
-    for x in tail.iter_mut() {
-        *x = decode_lane(64, 6, 5, encode_lane(64, 6, 5, *x));
-    }
+    lane::bp_roundtrip_in_place::<f64>(xs);
 }
 
 /// Fused roundtrip into a separate output buffer.
@@ -259,23 +90,23 @@ pub fn bp64_roundtrip_into(xs: &[f64], out: &mut [f64]) {
 /// Encode one f64 → posit⟨64,2⟩ word.
 #[inline]
 pub fn p64_encode_lane(x: f64) -> u64 {
-    encode_lane(64, 63, 2, x)
+    <f64 as LaneElem>::pstd_encode_lane(x)
 }
 
 /// Decode one posit⟨64,2⟩ word → f64.
 #[inline]
 pub fn p64_decode_lane(w: u64) -> f64 {
-    decode_lane(64, 63, 2, w)
+    <f64 as LaneElem>::pstd_decode_lane(w)
 }
 
 /// Batched posit⟨64,2⟩ encode into a caller-owned buffer.
 pub fn p64_encode_into(xs: &[f64], out: &mut [u64]) {
-    encode_slice(64, 63, 2, xs, out);
+    lane::pstd_encode_into::<f64>(xs, out);
 }
 
 /// Batched posit⟨64,2⟩ decode into a caller-owned buffer.
 pub fn p64_decode_into(ws: &[u64], out: &mut [f64]) {
-    decode_slice(64, 63, 2, ws, out);
+    lane::pstd_decode_into::<f64>(ws, out);
 }
 
 // ---------------- any supported spec ----------------
@@ -283,25 +114,25 @@ pub fn p64_decode_into(ws: &[u64], out: &mut [f64]) {
 /// Encode one f64 under any supported spec (see [`spec_supported`]).
 pub fn encode_word(spec: &PositSpec, x: f64) -> u64 {
     assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
-    encode_lane(spec.n, spec.rs, spec.es, x)
+    <f64 as LaneElem>::encode_lane(spec.n, spec.rs, spec.es, x)
 }
 
 /// Decode one word under any supported spec.
 pub fn decode_word(spec: &PositSpec, w: u64) -> f64 {
     assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
-    decode_lane(spec.n, spec.rs, spec.es, w)
+    <f64 as LaneElem>::decode_lane(spec.n, spec.rs, spec.es, w)
 }
 
 /// Batched encode under any supported spec.
 pub fn encode_slice_into(spec: &PositSpec, xs: &[f64], out: &mut [u64]) {
     assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
-    encode_slice(spec.n, spec.rs, spec.es, xs, out);
+    lane::encode_slice::<f64>(spec.n, spec.rs, spec.es, xs, out);
 }
 
 /// Batched decode under any supported spec.
 pub fn decode_slice_into(spec: &PositSpec, ws: &[u64], out: &mut [f64]) {
     assert!(spec_supported(spec), "64-bit lane codec does not support {spec:?}");
-    decode_slice(spec.n, spec.rs, spec.es, ws, out);
+    lane::decode_slice::<f64>(spec.n, spec.rs, spec.es, ws, out);
 }
 
 // ---------------- f64 ⇄ bits (baseline lane for the bench sweep) ----------------

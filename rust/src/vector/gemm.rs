@@ -1,38 +1,41 @@
 //! Register/L1-blocked GEMM over the serving formats — the quantized
-//! matmul workload at tensor scale.
+//! matmul workload at tensor scale, written **once** for both lane
+//! widths.
 //!
 //! All matrices are dense row-major: `C (m×n) = A (m×k) · B (k×n)`.
-//! Three kernel families, each with a serial and a sharded (`par_*`)
-//! entry point:
-//! - **f32 fast path** ([`gemm_f32`]): BLIS-style blocking — B packed
-//!   into `KC×NC` blocks of `NR`-wide panels (L1/L2 resident), an
-//!   `MR×NR` register-tile microkernel with one scalar accumulator
-//!   chain per output element. Because each element's adds run in plain
+//! Three kernel families, each generic over [`LaneElem`] with a serial
+//! and a sharded (`par_*`) entry point:
+//! - **fast path** ([`gemm`]): BLIS-style blocking — B packed into
+//!   `KC×NC` blocks of `NR`-wide panels (L1/L2 resident), an `MR×NR`
+//!   register-tile microkernel with one scalar accumulator chain per
+//!   output element. Because each element's adds run in plain
 //!   ascending-`p` order (the C tile is reloaded across `KC` blocks),
 //!   the blocked result is **bit-identical to the naive triple loop**
 //!   — blocking buys cache locality and ILP without reassociation.
-//! - **800-bit quire-exact path** ([`gemm_quire_f32`]): per-tile column
-//!   packing (`NR` columns of B made contiguous per tile), then one
-//!   [`Quire`] accumulation per output element, rounded once at
-//!   readout — the posit standard's fused dot product, at GEMM shape.
-//!   Exactness makes the result independent of accumulation order.
-//! - **quantized-weight path** ([`gemm_bp32_weights`] /
-//!   [`gemm_bp32_weights_fast`]): A is b-posit32 words (the stored
-//!   model weights), B is f32 activations — the serving matmul. The
-//!   fast variant lane-decodes A row-blocks into a scratch panel and
-//!   reuses the f32 microkernel; the exact variant decodes into the
-//!   quire accumulation.
+//! - **quire-exact path** ([`gemm_quire`]): per-tile column packing
+//!   (`NR` columns of B made contiguous per tile), then one
+//!   [`LaneElem::quire`] accumulation per output element, rounded once
+//!   at readout — the posit standard's fused dot product, at GEMM
+//!   shape. Exactness makes the result independent of accumulation
+//!   order.
+//! - **quantized-weight path** ([`gemm_bp_weights`] /
+//!   [`gemm_bp_weights_fast`]): A is serving-spec posit words (the
+//!   stored model weights), B is float activations — the serving
+//!   matmul. The fast variant lane-decodes A row-blocks into a scratch
+//!   panel and reuses the float microkernel; the exact variant decodes
+//!   into the quire accumulation. [`par_gemm_encoded_fast`] is the
+//!   [`EncodedTensor`]-typed serving entry point (shape and spec are
+//!   carried by the tensor, not re-asserted by every caller).
 //!
-//! Sharding ([`par_gemm_f32`] etc.) splits C into contiguous row
-//! blocks via [`super::parallel`]; every row is produced by the same
-//! serial kernel regardless of the split, so `par_*` results are
-//! bit-identical to serial for any thread count.
+//! The historical `*_f32`/`*_f64`/`*_bp32_*`/`*_bp64_*` names are thin
+//! monomorphized aliases (see docs/API.md). Sharding splits C into
+//! contiguous row blocks via [`super::parallel`]; every row is produced
+//! by the same serial kernel regardless of the split, so `par_*`
+//! results are bit-identical to serial for any thread count.
 
-use super::codec;
-use super::codec64;
+use super::lane::{self, EncodedTensor, LaneElem};
 use super::parallel;
-use crate::formats::posit::{BP32, BP64};
-use crate::formats::{Decoded, Quire};
+use crate::formats::Decoded;
 
 /// Microkernel rows (register tile height).
 pub const MR: usize = 4;
@@ -74,9 +77,17 @@ pub fn transpose<T: Copy>(src: &[T], dst: &mut [T], rows: usize, cols: usize) {
 
 /// Pack `B[pc..pc+kc, jc..jc+nc]` into `NR`-wide panels: panel `pi`
 /// holds `kc` rows of `NR` contiguous values (zero-padded past `nc`).
-fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
+fn pack_b<E: LaneElem>(
+    b: &[E],
+    bpack: &mut [E],
+    pc: usize,
+    jc: usize,
+    kc: usize,
+    nc: usize,
+    ldb: usize,
+) {
     let panels = nc.div_ceil(NR);
-    bpack[..panels * kc * NR].fill(0.0);
+    bpack[..panels * kc * NR].fill(E::ZERO);
     for (pi, jr) in (0..nc).step_by(NR).enumerate() {
         let nr = NR.min(nc - jr);
         let dst_base = pi * kc * NR;
@@ -94,19 +105,19 @@ fn pack_b(b: &[f32], bpack: &mut [f32], pc: usize, jc: usize, kc: usize, nc: usi
 /// inner loop over the zero-padded panel is branch-free and
 /// autovectorizer-friendly; only the live `nr` columns are stored.
 #[inline(always)]
-fn micro_f32(
-    a: &[f32],
+fn micro<E: LaneElem>(
+    a: &[E],
     lda: usize,
     a_off: usize,
-    bpanel: &[f32],
-    c: &mut [f32],
+    bpanel: &[E],
+    c: &mut [E],
     ldc: usize,
     c_off: usize,
     mr: usize,
     nr: usize,
     kc: usize,
 ) {
-    let mut acc = [[0f32; NR]; MR];
+    let mut acc = [[E::ZERO; NR]; MR];
     for i in 0..mr {
         for j in 0..nr {
             acc[i][j] = c[c_off + i * ldc + j];
@@ -128,15 +139,15 @@ fn micro_f32(
     }
 }
 
-/// Blocked f32 GEMM: `C ← A·B` (C is overwritten). Bit-identical to the
+/// Blocked GEMM: `C ← A·B` (C is overwritten). Bit-identical to the
 /// naive ascending-`p` triple loop (see module docs).
-pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+pub fn gemm<E: LaneElem>(a: &[E], b: &[E], c: &mut [E], m: usize, k: usize, n: usize) {
     check_shape(a.len(), b.len(), c.len(), m, k, n);
-    c.fill(0.0);
+    c.fill(E::ZERO);
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let mut bpack = vec![0f32; NC.div_ceil(NR) * KC * NR];
+    let mut bpack = vec![E::ZERO; NC.div_ceil(NR) * KC * NR];
     for jc in (0..n).step_by(NC) {
         let nc = NC.min(n - jc);
         for pc in (0..k).step_by(KC) {
@@ -147,7 +158,7 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
                 for jr in (0..nc).step_by(NR) {
                     let nr = NR.min(nc - jr);
                     let panel = (jr / NR) * kc * NR;
-                    micro_f32(
+                    micro(
                         a,
                         k,
                         ic * k + pc,
@@ -165,12 +176,12 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     }
 }
 
-/// Sharded blocked f32 GEMM with an explicit thread count.
-pub fn par_gemm_f32_with(
+/// Sharded blocked GEMM with an explicit thread count.
+pub fn par_gemm_with<E: LaneElem>(
     threads: usize,
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
+    a: &[E],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
@@ -181,29 +192,29 @@ pub fn par_gemm_f32_with(
     }
     parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
         let rows = cb.len() / n;
-        gemm_f32(&a[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
+        gemm(&a[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
     });
 }
 
-/// Sharded blocked f32 GEMM (auto thread count from `PALLAS_THREADS`).
-pub fn par_gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    par_gemm_f32_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+/// Sharded blocked GEMM (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemm<E: LaneElem>(a: &[E], b: &[E], c: &mut [E], m: usize, k: usize, n: usize) {
+    par_gemm_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
 }
 
-/// Quire-exact GEMM: every `C[i,j]` is an exact 800-bit accumulation of
-/// its k products, rounded once to f32 at readout.
-pub fn gemm_quire_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// Quire-exact GEMM: every `C[i,j]` is an exact accumulation of its k
+/// products in a width-appropriate quire, rounded once at readout.
+pub fn gemm_quire<E: LaneElem>(a: &[E], b: &[E], c: &mut [E], m: usize, k: usize, n: usize) {
     check_shape(a.len(), b.len(), c.len(), m, k, n);
-    quire_rows_f32(a, b, c, k, n);
+    quire_rows(a, b, c, k, n);
 }
 
 /// Sharded quire-exact GEMM with an explicit thread count (each shard
 /// owns its own quire and column-pack scratch).
-pub fn par_gemm_quire_f32_with(
+pub fn par_gemm_quire_with<E: LaneElem>(
     threads: usize,
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
+    a: &[E],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
@@ -214,24 +225,24 @@ pub fn par_gemm_quire_f32_with(
     }
     parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
         let rows = cb.len() / n;
-        quire_rows_f32(&a[r0 * k..(r0 + rows) * k], b, cb, k, n);
+        quire_rows(&a[r0 * k..(r0 + rows) * k], b, cb, k, n);
     });
 }
 
 /// Sharded quire-exact GEMM (auto thread count).
-pub fn par_gemm_quire_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    par_gemm_quire_f32_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+pub fn par_gemm_quire<E: LaneElem>(a: &[E], b: &[E], c: &mut [E], m: usize, k: usize, n: usize) {
+    par_gemm_quire_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
 }
 
 /// Quire GEMM worker over a row slab: per `NR`-column tile, pack the B
 /// columns contiguously, then run one exact accumulation per element.
-fn quire_rows_f32(a_rows: &[f32], b: &[f32], c_rows: &mut [f32], k: usize, n: usize) {
+fn quire_rows<E: LaneElem>(a_rows: &[E], b: &[E], c_rows: &mut [E], k: usize, n: usize) {
     if n == 0 || c_rows.is_empty() {
         return;
     }
     let rows = c_rows.len() / n;
-    let mut q = Quire::paper_800(&BP32);
-    let mut colpack = vec![0f32; k * NR];
+    let mut q = E::quire();
+    let mut colpack = vec![E::ZERO; k * NR];
     for jc in (0..n).step_by(NR) {
         let nr = NR.min(n - jc);
         for j in 0..nr {
@@ -246,31 +257,39 @@ fn quire_rows_f32(a_rows: &[f32], b: &[f32], c_rows: &mut [f32], k: usize, n: us
                 q.clear();
                 for p in 0..k {
                     q.add_product(
-                        &Decoded::from_f64(arow[p] as f64),
-                        &Decoded::from_f64(col[p] as f64),
+                        &Decoded::from_f64(arow[p].to_f64()),
+                        &Decoded::from_f64(col[p].to_f64()),
                     );
                 }
-                c_rows[i * n + jc + j] = q.to_decoded().to_f64() as f32;
+                c_rows[i * n + jc + j] = E::from_f64(q.to_decoded().to_f64());
             }
         }
     }
 }
 
-/// Quire-exact quantized-weight GEMM: `A` is m×k b-posit32 words (the
-/// stored model weights), `B` is k×n f32 activations; each output is an
-/// exact fused dot rounded once to f32 — the serving matmul's reference
-/// semantics.
-pub fn gemm_bp32_weights(a_bits: &[u32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+/// Quire-exact quantized-weight GEMM: `A` is m×k serving-spec posit
+/// words (the stored model weights), `B` is k×n float activations; each
+/// output is an exact fused dot rounded once — the serving matmul's
+/// reference semantics.
+pub fn gemm_bp_weights<E: LaneElem>(
+    a_bits: &[E::Word],
+    b: &[E],
+    c: &mut [E],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
-    quire_rows_bp32(a_bits, b, c, k, n);
+    quire_rows_bp(a_bits, b, c, k, n);
 }
 
-/// Sharded quire-exact quantized-weight GEMM with an explicit thread count.
-pub fn par_gemm_bp32_weights_with(
+/// Sharded quire-exact quantized-weight GEMM with an explicit thread
+/// count.
+pub fn par_gemm_bp_weights_with<E: LaneElem>(
     threads: usize,
-    a_bits: &[u32],
-    b: &[f32],
-    c: &mut [f32],
+    a_bits: &[E::Word],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
@@ -281,20 +300,20 @@ pub fn par_gemm_bp32_weights_with(
     }
     parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
         let rows = cb.len() / n;
-        quire_rows_bp32(&a_bits[r0 * k..(r0 + rows) * k], b, cb, k, n);
+        quire_rows_bp(&a_bits[r0 * k..(r0 + rows) * k], b, cb, k, n);
     });
 }
 
 /// Sharded quire-exact quantized-weight GEMM (auto thread count).
-pub fn par_gemm_bp32_weights(
-    a_bits: &[u32],
-    b: &[f32],
-    c: &mut [f32],
+pub fn par_gemm_bp_weights<E: LaneElem>(
+    a_bits: &[E::Word],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
 ) {
-    par_gemm_bp32_weights_with(
+    par_gemm_bp_weights_with(
         parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
         a_bits,
         b,
@@ -305,17 +324,17 @@ pub fn par_gemm_bp32_weights(
     );
 }
 
-fn quire_rows_bp32(a_rows: &[u32], b: &[f32], c_rows: &mut [f32], k: usize, n: usize) {
+fn quire_rows_bp<E: LaneElem>(a_rows: &[E::Word], b: &[E], c_rows: &mut [E], k: usize, n: usize) {
     if n == 0 || c_rows.is_empty() {
         return;
     }
     let rows = c_rows.len() / n;
-    let mut q = Quire::paper_800(&BP32);
-    let mut colpack = vec![0f32; k * NR];
+    let mut q = E::quire();
+    let mut colpack = vec![E::ZERO; k * NR];
     // Decode the whole row slab once up front (the expensive general-
     // codec path), not once per NR-column tile — same scratch-size
-    // tradeoff as the fast path's f64 panel, ceil(n/NR)× less decoding.
-    let adec: Vec<Decoded> = a_rows.iter().map(|&w| BP32.decode(w as u64)).collect();
+    // tradeoff as the fast path's float panel, ceil(n/NR)× less decoding.
+    let adec: Vec<Decoded> = a_rows.iter().map(|&w| E::BP.decode(E::word_to_u64(w))).collect();
     for jc in (0..n).step_by(NR) {
         let nr = NR.min(n - jc);
         for j in 0..nr {
@@ -329,38 +348,38 @@ fn quire_rows_bp32(a_rows: &[u32], b: &[f32], c_rows: &mut [f32], k: usize, n: u
                 let col = &colpack[j * k..(j + 1) * k];
                 q.clear();
                 for p in 0..k {
-                    q.add_product(&arow[p], &Decoded::from_f64(col[p] as f64));
+                    q.add_product(&arow[p], &Decoded::from_f64(col[p].to_f64()));
                 }
-                c_rows[i * n + jc + j] = q.to_decoded().to_f64() as f32;
+                c_rows[i * n + jc + j] = E::from_f64(q.to_decoded().to_f64());
             }
         }
     }
 }
 
 /// Rounded fast path for quantized weights: lane-decode each A row block
-/// into an f32 scratch panel, then run the blocked f32 GEMM on it —
+/// into a float scratch panel, then run the blocked GEMM on it —
 /// decode-then-GEMM with the decode amortized at panel granularity.
-pub fn gemm_bp32_weights_fast(
-    a_bits: &[u32],
-    b: &[f32],
-    c: &mut [f32],
+pub fn gemm_bp_weights_fast<E: LaneElem>(
+    a_bits: &[E::Word],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
 ) {
     check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
-    let mut a = vec![0f32; a_bits.len()];
-    codec::bp32_decode_into(a_bits, &mut a);
-    gemm_f32(&a, b, c, m, k, n);
+    let mut a = vec![E::ZERO; a_bits.len()];
+    lane::bp_decode_into::<E>(a_bits, &mut a);
+    gemm(&a, b, c, m, k, n);
 }
 
 /// Sharded fast quantized-weight GEMM with an explicit thread count
 /// (each shard decodes only its own row slab).
-pub fn par_gemm_bp32_weights_fast_with(
+pub fn par_gemm_bp_weights_fast_with<E: LaneElem>(
     threads: usize,
-    a_bits: &[u32],
-    b: &[f32],
-    c: &mut [f32],
+    a_bits: &[E::Word],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
@@ -371,20 +390,20 @@ pub fn par_gemm_bp32_weights_fast_with(
     }
     parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
         let rows = cb.len() / n;
-        gemm_bp32_weights_fast(&a_bits[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
+        gemm_bp_weights_fast(&a_bits[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
     });
 }
 
 /// Sharded fast quantized-weight GEMM (auto thread count).
-pub fn par_gemm_bp32_weights_fast(
-    a_bits: &[u32],
-    b: &[f32],
-    c: &mut [f32],
+pub fn par_gemm_bp_weights_fast<E: LaneElem>(
+    a_bits: &[E::Word],
+    b: &[E],
+    c: &mut [E],
     m: usize,
     k: usize,
     n: usize,
 ) {
-    par_gemm_bp32_weights_fast_with(
+    par_gemm_bp_weights_fast_with(
         parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
         a_bits,
         b,
@@ -395,100 +414,145 @@ pub fn par_gemm_bp32_weights_fast(
     );
 }
 
-// ----------------------------------------------------------------------
-// f64 GEMM family (the 64-bit lane stack), on the same MR×NR microkernel
-// geometry. Same bit-identity contract: the blocked f64 fast path equals
-// the naive ascending-`p` triple loop bitwise, and every par_* entry
-// point equals its serial counterpart for any thread count.
-// ----------------------------------------------------------------------
-
-/// Pack `B[pc..pc+kc, jc..jc+nc]` into `NR`-wide f64 panels.
-fn pack_b64(b: &[f64], bpack: &mut [f64], pc: usize, jc: usize, kc: usize, nc: usize, ldb: usize) {
-    let panels = nc.div_ceil(NR);
-    bpack[..panels * kc * NR].fill(0.0);
-    for (pi, jr) in (0..nc).step_by(NR).enumerate() {
-        let nr = NR.min(nc - jr);
-        let dst_base = pi * kc * NR;
-        for p in 0..kc {
-            let src = (pc + p) * ldb + jc + jr;
-            let dst = dst_base + p * NR;
-            bpack[dst..dst + nr].copy_from_slice(&b[src..src + nr]);
-        }
+/// The typed serving entry point: `C (m×n) ← W · B` where `W` is an
+/// [`EncodedTensor`] carrying its own spec and `m×k` shape, so the
+/// caller passes only the batch width `n` — shape mismatches are caught
+/// here and spec/width mismatches cannot be expressed at all. Serving-
+/// spec tensors run the decode-fused fast path; other lane specs decode
+/// once and run the float GEMM.
+pub fn par_gemm_encoded_fast<E: LaneElem>(w: &EncodedTensor<E>, b: &[E], c: &mut [E], n: usize) {
+    let (m, k) = (w.rows(), w.cols());
+    assert_eq!(b.len(), k * n, "gemm: B must be k×n");
+    assert_eq!(c.len(), m * n, "gemm: C must be m×n");
+    if w.is_serving_format() {
+        par_gemm_bp_weights_fast(w.words(), b, c, m, k, n);
+    } else {
+        let mut a = vec![E::ZERO; w.len()];
+        w.decode_into(&mut a);
+        par_gemm(&a, b, c, m, k, n);
     }
 }
 
-/// `MR×NR` f64 register-tile microkernel (one scalar accumulator chain
-/// per element, ascending-`p` order — no reassociation).
-#[inline(always)]
-fn micro_f64(
-    a: &[f64],
-    lda: usize,
-    a_off: usize,
-    bpanel: &[f64],
-    c: &mut [f64],
-    ldc: usize,
-    c_off: usize,
-    mr: usize,
-    nr: usize,
-    kc: usize,
+// ----------------------------------------------------------------------
+// Historical per-width names — monomorphized aliases (docs/API.md).
+// ----------------------------------------------------------------------
+
+/// Blocked f32 GEMM: `C ← A·B` (bit-identical to the naive triple loop).
+pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm(a, b, c, m, k, n);
+}
+
+/// Sharded blocked f32 GEMM with an explicit thread count.
+pub fn par_gemm_f32_with(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
 ) {
-    let mut acc = [[0f64; NR]; MR];
-    for i in 0..mr {
-        for j in 0..nr {
-            acc[i][j] = c[c_off + i * ldc + j];
-        }
-    }
-    for p in 0..kc {
-        let brow = &bpanel[p * NR..p * NR + NR];
-        for (i, acc_i) in acc.iter_mut().enumerate().take(mr) {
-            let av = a[a_off + i * lda + p];
-            for j in 0..NR {
-                acc_i[j] += av * brow[j];
-            }
-        }
-    }
-    for i in 0..mr {
-        for j in 0..nr {
-            c[c_off + i * ldc + j] = acc[i][j];
-        }
-    }
+    par_gemm_with(threads, a, b, c, m, k, n);
 }
 
-/// Blocked f64 GEMM: `C ← A·B` (C is overwritten). Bit-identical to the
-/// naive ascending-`p` triple loop.
+/// Sharded blocked f32 GEMM (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    par_gemm(a, b, c, m, k, n);
+}
+
+/// Quire-exact f32 GEMM (800-bit accumulators, one rounding per output).
+pub fn gemm_quire_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_quire(a, b, c, m, k, n);
+}
+
+/// Sharded quire-exact f32 GEMM with an explicit thread count.
+pub fn par_gemm_quire_f32_with(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_quire_with(threads, a, b, c, m, k, n);
+}
+
+/// Sharded quire-exact f32 GEMM (auto thread count).
+pub fn par_gemm_quire_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    par_gemm_quire(a, b, c, m, k, n);
+}
+
+/// Quire-exact bp32-quantized-weight GEMM.
+pub fn gemm_bp32_weights(a_bits: &[u32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_bp_weights(a_bits, b, c, m, k, n);
+}
+
+/// Sharded quire-exact bp32-quantized-weight GEMM, explicit thread count.
+pub fn par_gemm_bp32_weights_with(
+    threads: usize,
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp_weights_with(threads, a_bits, b, c, m, k, n);
+}
+
+/// Sharded quire-exact bp32-quantized-weight GEMM (auto thread count).
+pub fn par_gemm_bp32_weights(
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp_weights(a_bits, b, c, m, k, n);
+}
+
+/// Decode-fused fast bp32-quantized-weight GEMM.
+pub fn gemm_bp32_weights_fast(
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_bp_weights_fast(a_bits, b, c, m, k, n);
+}
+
+/// Sharded fast bp32-quantized-weight GEMM with an explicit thread count.
+pub fn par_gemm_bp32_weights_fast_with(
+    threads: usize,
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp_weights_fast_with(threads, a_bits, b, c, m, k, n);
+}
+
+/// Sharded fast bp32-quantized-weight GEMM (auto thread count).
+pub fn par_gemm_bp32_weights_fast(
+    a_bits: &[u32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    par_gemm_bp_weights_fast(a_bits, b, c, m, k, n);
+}
+
+/// Blocked f64 GEMM: `C ← A·B` (bit-identical to the naive triple loop).
 pub fn gemm_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    check_shape(a.len(), b.len(), c.len(), m, k, n);
-    c.fill(0.0);
-    if m == 0 || n == 0 || k == 0 {
-        return;
-    }
-    let mut bpack = vec![0f64; NC.div_ceil(NR) * KC * NR];
-    for jc in (0..n).step_by(NC) {
-        let nc = NC.min(n - jc);
-        for pc in (0..k).step_by(KC) {
-            let kc = KC.min(k - pc);
-            pack_b64(b, &mut bpack, pc, jc, kc, nc, n);
-            for ic in (0..m).step_by(MR) {
-                let mr = MR.min(m - ic);
-                for jr in (0..nc).step_by(NR) {
-                    let nr = NR.min(nc - jr);
-                    let panel = (jr / NR) * kc * NR;
-                    micro_f64(
-                        a,
-                        k,
-                        ic * k + pc,
-                        &bpack[panel..panel + kc * NR],
-                        c,
-                        n,
-                        ic * n + jc + jr,
-                        mr,
-                        nr,
-                        kc,
-                    );
-                }
-            }
-        }
-    }
+    gemm(a, b, c, m, k, n);
 }
 
 /// Sharded blocked f64 GEMM with an explicit thread count.
@@ -501,27 +565,17 @@ pub fn par_gemm_f64_with(
     k: usize,
     n: usize,
 ) {
-    check_shape(a.len(), b.len(), c.len(), m, k, n);
-    if n == 0 {
-        return;
-    }
-    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
-        let rows = cb.len() / n;
-        gemm_f64(&a[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
-    });
+    par_gemm_with(threads, a, b, c, m, k, n);
 }
 
 /// Sharded blocked f64 GEMM (auto thread count from `PALLAS_THREADS`).
 pub fn par_gemm_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    par_gemm_f64_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+    par_gemm(a, b, c, m, k, n);
 }
 
-/// Quire-exact f64 GEMM: every `C[i,j]` is an exact accumulation of its
-/// k products in an [`Quire::exact_f64`]-sized quire, rounded once at
-/// readout — order-independent by construction.
+/// Quire-exact f64 GEMM ([`crate::formats::Quire::exact_f64`] sizing).
 pub fn gemm_quire_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    check_shape(a.len(), b.len(), c.len(), m, k, n);
-    quire_rows_f64(a, b, c, k, n);
+    gemm_quire(a, b, c, m, k, n);
 }
 
 /// Sharded quire-exact f64 GEMM with an explicit thread count.
@@ -534,55 +588,17 @@ pub fn par_gemm_quire_f64_with(
     k: usize,
     n: usize,
 ) {
-    check_shape(a.len(), b.len(), c.len(), m, k, n);
-    if n == 0 {
-        return;
-    }
-    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
-        let rows = cb.len() / n;
-        quire_rows_f64(&a[r0 * k..(r0 + rows) * k], b, cb, k, n);
-    });
+    par_gemm_quire_with(threads, a, b, c, m, k, n);
 }
 
 /// Sharded quire-exact f64 GEMM (auto thread count).
 pub fn par_gemm_quire_f64(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    par_gemm_quire_f64_with(parallel::auto_shards(m, parallel::ROWS_MIN_SHARD), a, b, c, m, k, n);
+    par_gemm_quire(a, b, c, m, k, n);
 }
 
-fn quire_rows_f64(a_rows: &[f64], b: &[f64], c_rows: &mut [f64], k: usize, n: usize) {
-    if n == 0 || c_rows.is_empty() {
-        return;
-    }
-    let rows = c_rows.len() / n;
-    let mut q = Quire::exact_f64();
-    let mut colpack = vec![0f64; k * NR];
-    for jc in (0..n).step_by(NR) {
-        let nr = NR.min(n - jc);
-        for j in 0..nr {
-            for p in 0..k {
-                colpack[j * k + p] = b[p * n + jc + j];
-            }
-        }
-        for i in 0..rows {
-            let arow = &a_rows[i * k..(i + 1) * k];
-            for j in 0..nr {
-                let col = &colpack[j * k..(j + 1) * k];
-                q.clear();
-                for p in 0..k {
-                    q.add_product(&Decoded::from_f64(arow[p]), &Decoded::from_f64(col[p]));
-                }
-                c_rows[i * n + jc + j] = q.to_decoded().to_f64();
-            }
-        }
-    }
-}
-
-/// Quire-exact bp64-quantized-weight GEMM: `A` is m×k b-posit64 words,
-/// `B` is k×n f64 activations; each output is an exact fused dot rounded
-/// once to f64.
+/// Quire-exact bp64-quantized-weight GEMM.
 pub fn gemm_bp64_weights(a_bits: &[u64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
-    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
-    quire_rows_bp64(a_bits, b, c, k, n);
+    gemm_bp_weights(a_bits, b, c, m, k, n);
 }
 
 /// Sharded quire-exact bp64-quantized-weight GEMM, explicit thread count.
@@ -595,14 +611,7 @@ pub fn par_gemm_bp64_weights_with(
     k: usize,
     n: usize,
 ) {
-    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
-    if n == 0 {
-        return;
-    }
-    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
-        let rows = cb.len() / n;
-        quire_rows_bp64(&a_bits[r0 * k..(r0 + rows) * k], b, cb, k, n);
-    });
+    par_gemm_bp_weights_with(threads, a_bits, b, c, m, k, n);
 }
 
 /// Sharded quire-exact bp64-quantized-weight GEMM (auto thread count).
@@ -614,51 +623,10 @@ pub fn par_gemm_bp64_weights(
     k: usize,
     n: usize,
 ) {
-    par_gemm_bp64_weights_with(
-        parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
-        a_bits,
-        b,
-        c,
-        m,
-        k,
-        n,
-    );
+    par_gemm_bp_weights(a_bits, b, c, m, k, n);
 }
 
-fn quire_rows_bp64(a_rows: &[u64], b: &[f64], c_rows: &mut [f64], k: usize, n: usize) {
-    if n == 0 || c_rows.is_empty() {
-        return;
-    }
-    let rows = c_rows.len() / n;
-    let mut q = Quire::exact_f64();
-    let mut colpack = vec![0f64; k * NR];
-    // Decode the whole row slab once up front (the expensive general-
-    // codec path), not once per NR-column tile — same scratch-size
-    // tradeoff as the fast path's f64 panel, ceil(n/NR)× less decoding.
-    let adec: Vec<Decoded> = a_rows.iter().map(|&w| BP64.decode(w)).collect();
-    for jc in (0..n).step_by(NR) {
-        let nr = NR.min(n - jc);
-        for j in 0..nr {
-            for p in 0..k {
-                colpack[j * k + p] = b[p * n + jc + j];
-            }
-        }
-        for i in 0..rows {
-            let arow = &adec[i * k..(i + 1) * k];
-            for j in 0..nr {
-                let col = &colpack[j * k..(j + 1) * k];
-                q.clear();
-                for p in 0..k {
-                    q.add_product(&arow[p], &Decoded::from_f64(col[p]));
-                }
-                c_rows[i * n + jc + j] = q.to_decoded().to_f64();
-            }
-        }
-    }
-}
-
-/// Rounded fast path for bp64 weights: lane-decode A into an f64 scratch
-/// panel, then run the blocked f64 GEMM on it.
+/// Decode-fused fast bp64-quantized-weight GEMM.
 pub fn gemm_bp64_weights_fast(
     a_bits: &[u64],
     b: &[f64],
@@ -667,14 +635,10 @@ pub fn gemm_bp64_weights_fast(
     k: usize,
     n: usize,
 ) {
-    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
-    let mut a = vec![0f64; a_bits.len()];
-    codec64::bp64_decode_into(a_bits, &mut a);
-    gemm_f64(&a, b, c, m, k, n);
+    gemm_bp_weights_fast(a_bits, b, c, m, k, n);
 }
 
-/// Sharded fast bp64-weight GEMM with an explicit thread count (each
-/// shard decodes only its own row slab).
+/// Sharded fast bp64-weight GEMM with an explicit thread count.
 pub fn par_gemm_bp64_weights_fast_with(
     threads: usize,
     a_bits: &[u64],
@@ -684,14 +648,7 @@ pub fn par_gemm_bp64_weights_fast_with(
     k: usize,
     n: usize,
 ) {
-    check_shape(a_bits.len(), b.len(), c.len(), m, k, n);
-    if n == 0 {
-        return;
-    }
-    parallel::for_each_row_block(threads, m, n, c, |r0, cb| {
-        let rows = cb.len() / n;
-        gemm_bp64_weights_fast(&a_bits[r0 * k..(r0 + rows) * k], b, cb, rows, k, n);
-    });
+    par_gemm_bp_weights_fast_with(threads, a_bits, b, c, m, k, n);
 }
 
 /// Sharded fast bp64-weight GEMM (auto thread count).
@@ -703,20 +660,13 @@ pub fn par_gemm_bp64_weights_fast(
     k: usize,
     n: usize,
 ) {
-    par_gemm_bp64_weights_fast_with(
-        parallel::auto_shards(m, parallel::ROWS_MIN_SHARD),
-        a_bits,
-        b,
-        c,
-        m,
-        k,
-        n,
-    );
+    par_gemm_bp_weights_fast(a_bits, b, c, m, k, n);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::vector::{codec, codec64};
 
     #[test]
     fn transpose_roundtrips_and_matches_indexing() {
@@ -809,6 +759,39 @@ mod tests {
             let fast = kernels::dot_bp32_weights_fast(&w_bits[r * k..(r + 1) * k], &x);
             assert_eq!(cf[r], fast, "row {r}");
         }
+    }
+
+    #[test]
+    fn encoded_tensor_entry_point_matches_raw_slice_paths() {
+        use crate::formats::posit::BP32;
+        use std::sync::Arc;
+        let mut rng = crate::testutil::Rng::new(0xe7e7);
+        let (m, k, n) = (7, 19, 5);
+        let w: Vec<f32> = mixed(&mut rng, m * k);
+        let w_bits: Vec<u32> = w.iter().map(|&x| codec::bp32_encode_lane(x)).collect();
+        let b = mixed(&mut rng, k * n);
+        let t = EncodedTensor::<f32>::from_words(BP32, m, k, Arc::new(w_bits.clone())).unwrap();
+        let mut c_t = vec![0f32; m * n];
+        par_gemm_encoded_fast(&t, &b, &mut c_t, n);
+        let mut c_raw = vec![0f32; m * n];
+        par_gemm_bp32_weights_fast(&w_bits, &b, &mut c_raw, m, k, n);
+        assert_eq!(
+            c_t.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c_raw.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "typed entry point must be the raw fast path"
+        );
+        // 64-bit width through the same generic entry point.
+        let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+        let b64: Vec<f64> = b.iter().map(|&v| v as f64).collect();
+        let t64 = EncodedTensor::<f64>::encode_bp(m, k, &w64).unwrap();
+        let mut c64 = vec![0f64; m * n];
+        par_gemm_encoded_fast(&t64, &b64, &mut c64, n);
+        let mut c64_raw = vec![0f64; m * n];
+        par_gemm_bp64_weights_fast(t64.words(), &b64, &mut c64_raw, m, k, n);
+        assert_eq!(
+            c64.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c64_raw.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -1,28 +1,36 @@
-//! Batched linear-algebra kernels over the serving formats: `dot`, `axpy`,
-//! and `gemv`, each in two flavors —
-//! - a rounded **fast path** in plain f32 (8-lane accumulators, chunked,
-//!   autovectorizer-friendly), and
-//! - an **800-bit quire-exact path** ([`QuireDot`]) that accumulates every
-//!   product exactly (Kulisch-style) and rounds once at readout, the
-//!   fused-dot semantics the posit standard mandates and the paper's
-//!   shared-quire sizing enables.
+//! Batched linear-algebra kernels over the serving formats: **one
+//! generic family** over any [`LaneElem`] width — `dot`, `axpy`, `gemv`,
+//! the decode-fused quantized-weight dot, and row-sharded `par_gemv_*`
+//! forms — each in two flavors:
+//! - a rounded **fast path** in the plain float exchange type (8-lane
+//!   accumulators, chunked, autovectorizer-friendly), and
+//! - a **quire-exact path** that accumulates every product exactly
+//!   (Kulisch-style; [`crate::formats::Quire`] — the paper's 800-bit
+//!   shared quire for the f32 tier, the f64-range-exact sizing for the
+//!   f64 tier via [`LaneElem::quire`]) and rounds once at readout, the
+//!   fused-dot semantics the posit standard mandates.
 //!
-//! The quire context owns its single 800-bit accumulator and is reused
-//! across calls, so steady-state serving allocates nothing.
+//! The historical `*_f32`/`*_f64`/`*_bp32_*`/`*_bp64_*` names are thin
+//! monomorphized aliases (see docs/API.md). The [`QuireDot`] /
+//! [`QuireDotF64`] contexts own their single quire allocation and are
+//! reused across calls, so steady-state serving allocates nothing.
 
-use super::codec;
-use super::codec64;
+use super::lane::LaneElem;
 use super::parallel;
 use crate::formats::posit::{BP32, BP64};
 use crate::formats::{Decoded, Quire};
 
-/// Rounded f32 dot product (fast path): 8 independent accumulators keep
-/// the loop free of a serial fadd chain.
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+// ----------------------------------------------------------------------
+// Generic fast paths
+// ----------------------------------------------------------------------
+
+/// Rounded dot product (fast path): 8 independent accumulators keep the
+/// loop free of a serial fadd chain.
+pub fn dot<E: LaneElem>(a: &[E], b: &[E]) -> E {
     assert_eq!(a.len(), b.len(), "dot: length mismatch");
     let n = a.len();
     let chunks = n - n % 8;
-    let mut acc = [0.0f32; 8];
+    let mut acc = [E::ZERO; 8];
     let mut i = 0;
     while i < chunks {
         for l in 0..8 {
@@ -38,36 +46,36 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// Rounded f32 axpy: y ← y + α·x (elementwise, vectorizable).
-pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+/// Rounded axpy: y ← y + α·x (elementwise, vectorizable).
+pub fn axpy<E: LaneElem>(alpha: E, x: &[E], y: &mut [E]) {
     assert_eq!(x.len(), y.len(), "axpy: length mismatch");
     for (yi, &xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
 }
 
-/// Rounded f32 gemv: y ← A·x with A row-major `y.len() × x.len()`.
-pub fn gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+/// Rounded gemv: y ← A·x with A row-major `y.len() × x.len()`.
+pub fn gemv<E: LaneElem>(a: &[E], x: &[E], y: &mut [E]) {
     let (rows, cols) = (y.len(), x.len());
     assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
     for r in 0..rows {
-        y[r] = dot_f32(&a[r * cols..(r + 1) * cols], x);
+        y[r] = dot(&a[r * cols..(r + 1) * cols], x);
     }
 }
 
-/// Fast path over quantized weights: chunked lane-decode of b-posit32
-/// words into a stack buffer fused with the f32 multiply-add — the
+/// Fast path over quantized weights: chunked lane-decode of serving-spec
+/// words into a stack buffer fused with the multiply-add — the
 /// decode-then-dot serving kernel, with zero heap allocation.
-pub fn dot_bp32_weights_fast(w_bits: &[u32], x: &[f32]) -> f32 {
+pub fn dot_bp_weights_fast<E: LaneElem>(w_bits: &[E::Word], x: &[E]) -> E {
     assert_eq!(w_bits.len(), x.len(), "dot: length mismatch");
     let n = x.len();
     let chunks = n - n % 8;
-    let mut acc = [0.0f32; 8];
-    let mut buf = [0.0f32; 8];
+    let mut acc = [E::ZERO; 8];
+    let mut buf = [E::ZERO; 8];
     let mut i = 0;
     while i < chunks {
         for l in 0..8 {
-            buf[l] = codec::bp32_decode_lane(w_bits[i + l]);
+            buf[l] = E::bp_decode_lane(w_bits[i + l]);
         }
         for l in 0..8 {
             acc[l] += buf[l] * x[i + l];
@@ -76,180 +84,229 @@ pub fn dot_bp32_weights_fast(w_bits: &[u32], x: &[f32]) -> f32 {
     }
     let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
     while i < n {
-        s += codec::bp32_decode_lane(w_bits[i]) * x[i];
+        s += E::bp_decode_lane(w_bits[i]) * x[i];
         i += 1;
     }
     s
 }
 
 // ----------------------------------------------------------------------
-// Row-sharded gemv (par_* entry points). Each shard covers a contiguous
-// block of output rows and runs the serial kernel on it (quire shards own
-// a private quire), so results are bit-identical to serial for any thread
-// count.
+// Generic quire-exact workers (shared by the QuireDot contexts, the
+// par_gemv_* family, and vector::gemm's quire paths).
 // ----------------------------------------------------------------------
 
-/// Sharded f32 gemv with an explicit thread count.
-pub fn par_gemv_f32_with(threads: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+/// Exact dot of two float slices through a caller-owned quire: each
+/// product accumulates exactly; a single rounding at the f64 readout.
+pub fn quire_dot<E: LaneElem>(q: &mut Quire, a: &[E], b: &[E]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    q.clear();
+    for (&x, &y) in a.iter().zip(b) {
+        q.add_product(&Decoded::from_f64(x.to_f64()), &Decoded::from_f64(y.to_f64()));
+    }
+    q.to_decoded().to_f64()
+}
+
+/// Quire-exact gemv worker: one exact row-dot per output, each rounded
+/// once to `E`.
+pub(crate) fn quire_gemv_rows<E: LaneElem>(q: &mut Quire, a: &[E], x: &[E], y: &mut [E]) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
+    for r in 0..rows {
+        y[r] = E::from_f64(quire_dot(q, &a[r * cols..(r + 1) * cols], x));
+    }
+}
+
+/// Quire-exact gemv worker over serving-spec quantized weights.
+pub(crate) fn quire_gemv_bp_rows<E: LaneElem>(
+    q: &mut Quire,
+    w_bits: &[E::Word],
+    x: &[E],
+    y: &mut [E],
+) {
+    let (rows, cols) = (y.len(), x.len());
+    assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
+    for r in 0..rows {
+        q.clear();
+        for c in 0..cols {
+            q.add_product(
+                &E::BP.decode(E::word_to_u64(w_bits[r * cols + c])),
+                &Decoded::from_f64(x[c].to_f64()),
+            );
+        }
+        y[r] = E::from_f64(q.to_decoded().to_f64());
+    }
+}
+
+// ----------------------------------------------------------------------
+// Row-sharded gemv (the unified par_* family). Each shard covers a
+// contiguous block of output rows and runs the serial kernel on it
+// (quire shards own a private quire), so results are bit-identical to
+// serial for any thread count.
+// ----------------------------------------------------------------------
+
+/// Sharded fast gemv with an explicit thread count.
+pub fn par_gemv_with<E: LaneElem>(threads: usize, a: &[E], x: &[E], y: &mut [E]) {
     let (rows, cols) = (y.len(), x.len());
     assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
     parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
-        gemv_f32(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+        gemv(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
     });
 }
 
-/// Sharded f32 gemv (auto thread count from `PALLAS_THREADS`).
-pub fn par_gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
-    par_gemv_f32_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+/// Sharded fast gemv (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemv<E: LaneElem>(a: &[E], x: &[E], y: &mut [E]) {
+    par_gemv_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
 }
 
 /// Sharded quire-exact gemv with an explicit thread count.
-pub fn par_gemv_quire_f32_with(threads: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+pub fn par_gemv_quire_with<E: LaneElem>(threads: usize, a: &[E], x: &[E], y: &mut [E]) {
     let (rows, cols) = (y.len(), x.len());
     assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
     parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
-        let mut q = QuireDot::new();
-        q.gemv_f32(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+        let mut q = E::quire();
+        quire_gemv_rows(&mut q, &a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
     });
 }
 
 /// Sharded quire-exact gemv (auto thread count).
-pub fn par_gemv_quire_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
-    par_gemv_quire_f32_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+pub fn par_gemv_quire<E: LaneElem>(a: &[E], x: &[E], y: &mut [E]) {
+    par_gemv_quire_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
 }
 
-/// Sharded quire-exact quantized-weight gemv with an explicit thread count.
-pub fn par_gemv_bp32_weights_with(threads: usize, w_bits: &[u32], x: &[f32], y: &mut [f32]) {
+/// Sharded quire-exact quantized-weight gemv with an explicit thread
+/// count.
+pub fn par_gemv_bp_weights_with<E: LaneElem>(
+    threads: usize,
+    w_bits: &[E::Word],
+    x: &[E],
+    y: &mut [E],
+) {
     let (rows, cols) = (y.len(), x.len());
     assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
     parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
-        let mut q = QuireDot::new();
-        q.gemv_bp32_weights(&w_bits[r0 * cols..(r0 + yb.len()) * cols], x, yb);
+        let mut q = E::quire();
+        quire_gemv_bp_rows(&mut q, &w_bits[r0 * cols..(r0 + yb.len()) * cols], x, yb);
     });
 }
 
 /// Sharded quire-exact quantized-weight gemv (auto thread count).
-pub fn par_gemv_bp32_weights(w_bits: &[u32], x: &[f32], y: &mut [f32]) {
+pub fn par_gemv_bp_weights<E: LaneElem>(w_bits: &[E::Word], x: &[E], y: &mut [E]) {
     let shards = parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD);
-    par_gemv_bp32_weights_with(shards, w_bits, x, y);
+    par_gemv_bp_weights_with(shards, w_bits, x, y);
 }
 
 // ----------------------------------------------------------------------
-// f64 kernels (the 64-bit lane stack: BP64/P64 words, f64 activations)
+// Historical per-width names — monomorphized aliases (docs/API.md).
 // ----------------------------------------------------------------------
 
-/// Rounded f64 dot product (fast path): 8 independent accumulators keep
-/// the loop free of a serial fadd chain.
+/// Rounded f32 dot product (fast path).
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    dot(a, b)
+}
+
+/// Rounded f32 axpy: y ← y + α·x.
+pub fn axpy_f32(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy(alpha, x, y);
+}
+
+/// Rounded f32 gemv: y ← A·x with A row-major `y.len() × x.len()`.
+pub fn gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+    gemv(a, x, y);
+}
+
+/// Decode-fused b-posit32 quantized-weight dot (fast path).
+pub fn dot_bp32_weights_fast(w_bits: &[u32], x: &[f32]) -> f32 {
+    dot_bp_weights_fast(w_bits, x)
+}
+
+/// Sharded f32 gemv with an explicit thread count.
+pub fn par_gemv_f32_with(threads: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    par_gemv_with(threads, a, x, y);
+}
+
+/// Sharded f32 gemv (auto thread count from `PALLAS_THREADS`).
+pub fn par_gemv_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+    par_gemv(a, x, y);
+}
+
+/// Sharded quire-exact f32 gemv with an explicit thread count.
+pub fn par_gemv_quire_f32_with(threads: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    par_gemv_quire_with(threads, a, x, y);
+}
+
+/// Sharded quire-exact f32 gemv (auto thread count).
+pub fn par_gemv_quire_f32(a: &[f32], x: &[f32], y: &mut [f32]) {
+    par_gemv_quire(a, x, y);
+}
+
+/// Sharded quire-exact bp32-quantized-weight gemv, explicit thread count.
+pub fn par_gemv_bp32_weights_with(threads: usize, w_bits: &[u32], x: &[f32], y: &mut [f32]) {
+    par_gemv_bp_weights_with(threads, w_bits, x, y);
+}
+
+/// Sharded quire-exact bp32-quantized-weight gemv (auto thread count).
+pub fn par_gemv_bp32_weights(w_bits: &[u32], x: &[f32], y: &mut [f32]) {
+    par_gemv_bp_weights(w_bits, x, y);
+}
+
+/// Rounded f64 dot product (fast path).
 pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
-    assert_eq!(a.len(), b.len(), "dot: length mismatch");
-    let n = a.len();
-    let chunks = n - n % 8;
-    let mut acc = [0.0f64; 8];
-    let mut i = 0;
-    while i < chunks {
-        for l in 0..8 {
-            acc[l] += a[i + l] * b[i + l];
-        }
-        i += 8;
-    }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    while i < n {
-        s += a[i] * b[i];
-        i += 1;
-    }
-    s
+    dot(a, b)
 }
 
-/// Rounded f64 axpy: y ← y + α·x (elementwise, vectorizable).
+/// Rounded f64 axpy: y ← y + α·x.
 pub fn axpy_f64(alpha: f64, x: &[f64], y: &mut [f64]) {
-    assert_eq!(x.len(), y.len(), "axpy: length mismatch");
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    axpy(alpha, x, y);
 }
 
 /// Rounded f64 gemv: y ← A·x with A row-major `y.len() × x.len()`.
 pub fn gemv_f64(a: &[f64], x: &[f64], y: &mut [f64]) {
-    let (rows, cols) = (y.len(), x.len());
-    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
-    for r in 0..rows {
-        y[r] = dot_f64(&a[r * cols..(r + 1) * cols], x);
-    }
+    gemv(a, x, y);
 }
 
-/// Fast path over quantized weights: chunked lane-decode of b-posit64
-/// words fused with the f64 multiply-add, zero heap allocation.
+/// Decode-fused b-posit64 quantized-weight dot (fast path).
 pub fn dot_bp64_weights_fast(w_bits: &[u64], x: &[f64]) -> f64 {
-    assert_eq!(w_bits.len(), x.len(), "dot: length mismatch");
-    let n = x.len();
-    let chunks = n - n % 8;
-    let mut acc = [0.0f64; 8];
-    let mut buf = [0.0f64; 8];
-    let mut i = 0;
-    while i < chunks {
-        for l in 0..8 {
-            buf[l] = codec64::bp64_decode_lane(w_bits[i + l]);
-        }
-        for l in 0..8 {
-            acc[l] += buf[l] * x[i + l];
-        }
-        i += 8;
-    }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    while i < n {
-        s += codec64::bp64_decode_lane(w_bits[i]) * x[i];
-        i += 1;
-    }
-    s
+    dot_bp_weights_fast(w_bits, x)
 }
 
 /// Sharded f64 gemv with an explicit thread count.
 pub fn par_gemv_f64_with(threads: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
-    let (rows, cols) = (y.len(), x.len());
-    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
-    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
-        gemv_f64(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
-    });
+    par_gemv_with(threads, a, x, y);
 }
 
 /// Sharded f64 gemv (auto thread count from `PALLAS_THREADS`).
 pub fn par_gemv_f64(a: &[f64], x: &[f64], y: &mut [f64]) {
-    par_gemv_f64_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+    par_gemv(a, x, y);
 }
 
 /// Sharded quire-exact f64 gemv with an explicit thread count.
 pub fn par_gemv_quire_f64_with(threads: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
-    let (rows, cols) = (y.len(), x.len());
-    assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
-    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
-        let mut q = QuireDotF64::new();
-        q.gemv_f64(&a[r0 * cols..(r0 + yb.len()) * cols], x, yb);
-    });
+    par_gemv_quire_with(threads, a, x, y);
 }
 
 /// Sharded quire-exact f64 gemv (auto thread count).
 pub fn par_gemv_quire_f64(a: &[f64], x: &[f64], y: &mut [f64]) {
-    par_gemv_quire_f64_with(parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD), a, x, y);
+    par_gemv_quire(a, x, y);
 }
 
 /// Sharded quire-exact bp64-quantized-weight gemv, explicit thread count.
 pub fn par_gemv_bp64_weights_with(threads: usize, w_bits: &[u64], x: &[f64], y: &mut [f64]) {
-    let (rows, cols) = (y.len(), x.len());
-    assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
-    parallel::for_each_row_block(threads, rows, 1, y, |r0, yb| {
-        let mut q = QuireDotF64::new();
-        q.gemv_bp64_weights(&w_bits[r0 * cols..(r0 + yb.len()) * cols], x, yb);
-    });
+    par_gemv_bp_weights_with(threads, w_bits, x, y);
 }
 
 /// Sharded quire-exact bp64-quantized-weight gemv (auto thread count).
 pub fn par_gemv_bp64_weights(w_bits: &[u64], x: &[f64], y: &mut [f64]) {
-    let shards = parallel::auto_shards(y.len(), parallel::ROWS_MIN_SHARD);
-    par_gemv_bp64_weights_with(shards, w_bits, x, y);
+    par_gemv_bp_weights(w_bits, x, y);
 }
 
-/// Reusable 800-bit quire context for exact dot/axpy/gemv. One allocation
-/// at construction; every call clears and reuses it.
+// ----------------------------------------------------------------------
+// Reusable quire contexts
+// ----------------------------------------------------------------------
+
+/// Reusable 800-bit quire context for exact dot/axpy/gemv over the f32
+/// tier (and the cross-width b-posit word forms — the paper's shared
+/// quire serves every ⟨n,6,5⟩ precision). One allocation at
+/// construction; every call clears and reuses it.
 pub struct QuireDot {
     q: Quire,
 }
@@ -271,12 +328,7 @@ impl QuireDot {
     /// a single rounding at readout (to f64, which is exact for results
     /// within f64 range).
     pub fn dot_f32(&mut self, a: &[f32], b: &[f32]) -> f64 {
-        assert_eq!(a.len(), b.len(), "dot: length mismatch");
-        self.q.clear();
-        for (&x, &y) in a.iter().zip(b) {
-            self.q.add_product(&Decoded::from_f64(x as f64), &Decoded::from_f64(y as f64));
-        }
-        self.q.to_decoded().to_f64()
+        quire_dot(&mut self.q, a, b)
     }
 
     /// Exact dot over b-posit32 words, rounded once to a b-posit32 word —
@@ -293,28 +345,13 @@ impl QuireDot {
     /// Quire-exact gemv: y ← A·x, one exact row-dot per output, each
     /// rounded once to f32.
     pub fn gemv_f32(&mut self, a: &[f32], x: &[f32], y: &mut [f32]) {
-        let (rows, cols) = (y.len(), x.len());
-        assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
-        for r in 0..rows {
-            y[r] = self.dot_f32(&a[r * cols..(r + 1) * cols], x) as f32;
-        }
+        quire_gemv_rows(&mut self.q, a, x, y);
     }
 
     /// Quire-exact gemv over quantized weights (b-posit32 words) with f32
     /// activations — the serving layout's matmul row primitive.
     pub fn gemv_bp32_weights(&mut self, w_bits: &[u32], x: &[f32], y: &mut [f32]) {
-        let (rows, cols) = (y.len(), x.len());
-        assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
-        for r in 0..rows {
-            self.q.clear();
-            for c in 0..cols {
-                self.q.add_product(
-                    &BP32.decode(w_bits[r * cols + c] as u64),
-                    &Decoded::from_f64(x[c] as f64),
-                );
-            }
-            y[r] = self.q.to_decoded().to_f64() as f32;
-        }
+        quire_gemv_bp_rows(&mut self.q, w_bits, x, y);
     }
 
     /// Elementwise exact FMA in b-posit32: yᵢ ← round_bp32(yᵢ + α·xᵢ) —
@@ -371,18 +408,14 @@ impl Default for QuireDotF64 {
 }
 
 impl QuireDotF64 {
+    /// Context with an f64-range-exact quire.
     pub fn new() -> QuireDotF64 {
         QuireDotF64 { q: Quire::exact_f64() }
     }
 
     /// Exact dot of two f64 slices, rounded once (RNE) at readout.
     pub fn dot_f64(&mut self, a: &[f64], b: &[f64]) -> f64 {
-        assert_eq!(a.len(), b.len(), "dot: length mismatch");
-        self.q.clear();
-        for (&x, &y) in a.iter().zip(b) {
-            self.q.add_product(&Decoded::from_f64(x), &Decoded::from_f64(y));
-        }
-        self.q.to_decoded().to_f64()
+        quire_dot(&mut self.q, a, b)
     }
 
     /// Exact f64 FMA per element: yᵢ ← round_f64(yᵢ + α·xᵢ) — fused
@@ -401,26 +434,14 @@ impl QuireDotF64 {
     /// Quire-exact f64 gemv: y ← A·x, one exact row-dot per output,
     /// each rounded once to f64.
     pub fn gemv_f64(&mut self, a: &[f64], x: &[f64], y: &mut [f64]) {
-        let (rows, cols) = (y.len(), x.len());
-        assert_eq!(a.len(), rows * cols, "gemv: shape mismatch");
-        for r in 0..rows {
-            y[r] = self.dot_f64(&a[r * cols..(r + 1) * cols], x);
-        }
+        quire_gemv_rows(&mut self.q, a, x, y);
     }
 
     /// Quire-exact gemv over quantized weights (b-posit64 words) with
     /// f64 activations — the 64-bit serving layout's matmul row
     /// primitive.
     pub fn gemv_bp64_weights(&mut self, w_bits: &[u64], x: &[f64], y: &mut [f64]) {
-        let (rows, cols) = (y.len(), x.len());
-        assert_eq!(w_bits.len(), rows * cols, "gemv: shape mismatch");
-        for r in 0..rows {
-            self.q.clear();
-            for c in 0..cols {
-                self.q.add_product(&BP64.decode(w_bits[r * cols + c]), &Decoded::from_f64(x[c]));
-            }
-            y[r] = self.q.to_decoded().to_f64();
-        }
+        quire_gemv_bp_rows(&mut self.q, w_bits, x, y);
     }
 }
 
@@ -428,26 +449,26 @@ impl QuireDotF64 {
 // Dense-layer epilogues for the transposed serving layout (activations
 // as a rows×cols block with one *neuron per row*): row-broadcast bias
 // add, optionally fused with ReLU. The ReLU is written as an explicit
-// `if v > 0` select — unlike `f32::max`, its treatment of −0.0 and NaN
-// is the same on every platform, so backend and scalar-reference
-// outputs stay bit-identical.
+// `if v > 0` select — unlike `max`, its treatment of −0.0 and NaN is the
+// same on every platform, so backend and scalar-reference outputs stay
+// bit-identical.
 // ----------------------------------------------------------------------
 
 /// `c[(i,j)] ← relu(c[(i,j)] + bias[i])` over a row-major rows×cols block.
-pub fn bias_relu_rows(c: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+pub fn bias_relu_rows<E: LaneElem>(c: &mut [E], bias: &[E], rows: usize, cols: usize) {
     assert_eq!(c.len(), rows * cols, "bias_relu_rows: shape mismatch");
     assert_eq!(bias.len(), rows, "bias_relu_rows: bias must have one entry per row");
     for i in 0..rows {
         let b = bias[i];
         for v in &mut c[i * cols..(i + 1) * cols] {
             let s = *v + b;
-            *v = if s > 0.0 { s } else { 0.0 };
+            *v = if s > E::ZERO { s } else { E::ZERO };
         }
     }
 }
 
 /// `c[(i,j)] ← c[(i,j)] + bias[i]` over a row-major rows×cols block.
-pub fn bias_rows(c: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+pub fn bias_rows<E: LaneElem>(c: &mut [E], bias: &[E], rows: usize, cols: usize) {
     assert_eq!(c.len(), rows * cols, "bias_rows: shape mismatch");
     assert_eq!(bias.len(), rows, "bias_rows: bias must have one entry per row");
     for i in 0..rows {
@@ -458,34 +479,20 @@ pub fn bias_rows(c: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
     }
 }
 
-/// f64 variant of [`bias_relu_rows`] (the b-posit64 serving tier).
+/// f64 alias of [`bias_relu_rows`] (kept for the historical name).
 pub fn bias_relu_rows_f64(c: &mut [f64], bias: &[f64], rows: usize, cols: usize) {
-    assert_eq!(c.len(), rows * cols, "bias_relu_rows_f64: shape mismatch");
-    assert_eq!(bias.len(), rows, "bias_relu_rows_f64: bias must have one entry per row");
-    for i in 0..rows {
-        let b = bias[i];
-        for v in &mut c[i * cols..(i + 1) * cols] {
-            let s = *v + b;
-            *v = if s > 0.0 { s } else { 0.0 };
-        }
-    }
+    bias_relu_rows(c, bias, rows, cols);
 }
 
-/// f64 variant of [`bias_rows`] (the b-posit64 serving tier).
+/// f64 alias of [`bias_rows`] (kept for the historical name).
 pub fn bias_rows_f64(c: &mut [f64], bias: &[f64], rows: usize, cols: usize) {
-    assert_eq!(c.len(), rows * cols, "bias_rows_f64: shape mismatch");
-    assert_eq!(bias.len(), rows, "bias_rows_f64: bias must have one entry per row");
-    for i in 0..rows {
-        let b = bias[i];
-        for v in &mut c[i * cols..(i + 1) * cols] {
-            *v += b;
-        }
-    }
+    bias_rows(c, bias, rows, cols);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::vector::{codec, codec64};
 
     #[test]
     fn bias_epilogues_broadcast_per_row() {
@@ -669,16 +676,38 @@ mod tests {
     }
 
     #[test]
+    fn generic_entry_points_match_named_aliases() {
+        // The unified generic names and the historical per-width names
+        // are the same monomorphizations.
+        let a: Vec<f32> = (0..12).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let x: Vec<f32> = (0..4).map(|i| i as f32 - 1.5).collect();
+        assert_eq!(dot(&a[..4], &x), dot_f32(&a[..4], &x));
+        let mut y1 = vec![0f32; 3];
+        let mut y2 = vec![0f32; 3];
+        gemv(&a, &x, &mut y1);
+        gemv_f32(&a, &x, &mut y2);
+        assert_eq!(y1, y2);
+        par_gemv(&a, &x, &mut y1);
+        assert_eq!(y1, y2);
+        let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut z1 = vec![0f64; 3];
+        let mut z2 = vec![0f64; 3];
+        par_gemv_quire_with(2, &a64, &x64, &mut z1);
+        par_gemv_quire_f64_with(2, &a64, &x64, &mut z2);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
     fn axpy_f64_paths() {
         let x = [1.0f64, 2.0, 3.0];
         let mut y = [10.0f64, 20.0, 30.0];
         axpy_f64(2.0, &x, &mut y);
         assert_eq!(y, [12.0, 24.0, 36.0]);
-        // Quire axpy fuses the rounding: (1 + 2^-60·2^7)·… — use a case
-        // where two roundings differ from one. y + α·x with α·x exact:
-        // 1.0 + 2^-53 + 2^-53 under two roundings stays 1.0 twice; the
-        // fused add of (y=1.0, α=2.0, x=2^-53) gives the RNE of
-        // 1 + 2^-52 = 1 + 2^-52 exactly.
+        // Quire axpy fuses the rounding: use a case where two roundings
+        // differ from one. 1.0 + 2^-53 + 2^-53 under two roundings stays
+        // 1.0 twice; the fused add of (y=1.0, α=2.0, x=2^-53) gives the
+        // RNE of 1 + 2^-52 exactly.
         let mut q = QuireDotF64::new();
         let mut y2 = [1.0f64];
         q.axpy_f64(2.0, &[f64::powi(2.0, -53)], &mut y2);

@@ -1,0 +1,890 @@
+//! Width-generic lane API: **one** codec/kernel/quantizer surface for the
+//! 32- and 64-bit tiers.
+//!
+//! The paper's bounded-regime insight makes b-posit decode/encode
+//! *structurally identical* across widths — the only things that change
+//! from 32 to 64 bits are the word type (u32 → u64), the serialization
+//! intermediate (u64 → u128), the float exchange type (f32 → f64), and a
+//! handful of IEEE field constants. This module says exactly that, once:
+//!
+//! - [`LaneElem`] — the width axis as a trait, implemented for `f32` and
+//!   `f64`. It carries the word/intermediate types, the IEEE constants,
+//!   the serving-format spec constants ([`LaneElem::BP`] = ⟨N,6,5⟩,
+//!   [`LaneElem::PSTD`] = ⟨N,2⟩), and the branch-free lane primitives.
+//!   Both impls are expanded from **one** macro body (`lane_elem_impl!`),
+//!   so the 32- and 64-bit datapaths cannot drift apart: they are the
+//!   same token stream with different width parameters, and the expansion
+//!   with the 32-bit parameters is exactly the algorithm previously
+//!   hand-duplicated in `codec.rs`/`codec64.rs`. Outputs are gated
+//!   bit-identical to the pre-refactor codecs by the golden-vector,
+//!   parity, and proptest suites.
+//! - [`LaneSigned`] — the inverse axis (`i32`/`i64`, the wire bit-pattern
+//!   types), so decode-direction generics infer their width from the
+//!   argument type alone.
+//! - [`LaneCodec`] — the generic engine: a spec-checked batched
+//!   encode/decode/roundtrip context over any lane-supported
+//!   ⟨n ≤ N, rs, 1 ≤ es ≤ 8⟩ spec at either width. The named BP32 / P32 /
+//!   BP64 / P64 fast paths in [`super::codec`] / [`super::codec64`] are
+//!   monomorphized spec constants over this engine.
+//! - [`EncodedTensor`] — a spec-carrying typed weight buffer that
+//!   replaces raw `&[u32]`/`&[u64]` slices at API boundaries: a width
+//!   mismatch is now a *type* error (`EncodedTensor<f32>` vs
+//!   `EncodedTensor<f64>`), and a spec or shape mismatch is a checked
+//!   constructor error instead of silently misinterpreted bits.
+//!
+//! Consumers: `vector::parallel` shards the generic engine,
+//! `vector::kernels`/`vector::gemm` run one generic kernel family over
+//! `E`, and `coordinator::quantizer`/`coordinator::backend` quantize and
+//! serve through it. See `docs/API.md` for the old-symbol → generic-call
+//! migration table.
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+use crate::error::{anyhow, Result};
+use crate::formats::posit::{PositSpec, BP32, BP64, P32, P64};
+use crate::formats::Quire;
+
+/// Lane width of the chunked loops. 8 × u32 = one AVX2 register; the inner
+/// loops carry no cross-lane dependency, so narrower ISAs still profit via
+/// unrolled ILP (and the u64 lanes split into two registers cleanly).
+pub const LANES: usize = 8;
+
+mod sealed {
+    /// The width axis is closed: exactly f32 and f64.
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+    impl Sealed for i32 {}
+    impl Sealed for i64 {}
+}
+
+/// The width axis of the lane stack, implemented for `f32` (32-bit tier:
+/// u32 words, u64 intermediates) and `f64` (64-bit tier: u64 words, u128
+/// intermediates). Everything the codec, kernel, and quantizer layers
+/// need to be written once lives here; see the module docs.
+pub trait LaneElem:
+    sealed::Sealed
+    + Copy
+    + Default
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    /// Encoded posit-family word (u32 / u64).
+    type Word: Copy + Default + PartialEq + Eq + Ord + std::fmt::Debug + Send + Sync + 'static;
+    /// Serialization intermediate holding regime ‖ exponent ‖ fraction
+    /// before the pattern-space RNE cut (u64 / u128 — twice the word).
+    type Wide: Copy + std::fmt::Debug + Send + Sync + 'static;
+    /// Signed wire type for quantized bit patterns (i32 / i64); the
+    /// inverse mapping is [`LaneSigned`].
+    type Signed: Copy + Default + PartialEq + Eq + std::fmt::Debug + Send + Sync + 'static;
+
+    /// Word width in bits (32 / 64) — also the maximum supported spec n.
+    const BITS: u32;
+    /// Additive identity of the float exchange type.
+    const ZERO: Self;
+    /// Smallest positive normal value (the FTZ threshold of the codec
+    /// contract at this width).
+    const MIN_POS: Self;
+    /// The serving b-posit spec at this width: ⟨BITS, 6, 5⟩.
+    const BP: PositSpec;
+    /// The standard-posit comparison spec at this width: ⟨BITS, 2⟩.
+    const PSTD: PositSpec;
+    /// Short name of the serving format ("bp32" / "bp64") — bench stage
+    /// and JSON keys.
+    const BP_NAME: &'static str;
+    /// Short name of the standard-posit format ("p32" / "p64").
+    const PSTD_NAME: &'static str;
+
+    /// True when the branch-free lane codec at this width supports the
+    /// spec: n ≤ BITS, a real regime bound, and 1 ≤ es ≤ 8.
+    fn spec_supported(spec: &PositSpec) -> bool {
+        (3..=Self::BITS).contains(&spec.n)
+            && spec.rs >= 2
+            && spec.rs <= spec.n - 1
+            && (1..=8).contains(&spec.es)
+    }
+
+    /// Encode one float into an n-bit posit/b-posit word. Branch-free:
+    /// every `if` in the implementation is a pure value select. Contract:
+    /// subnormal inputs flush to the zero pattern (FTZ), NaN/Inf → NaR.
+    fn encode_lane(n: u32, rs: u32, es: u32, x: Self) -> Self::Word;
+
+    /// Decode one n-bit posit/b-posit word to the float exchange type.
+    /// Contract: magnitudes below the normal float range flush to ±0,
+    /// above it saturate to ±∞, NaR → canonical quiet NaN.
+    fn decode_lane(n: u32, rs: u32, es: u32, w: Self::Word) -> Self;
+
+    /// Encode one float under the serving spec [`Self::BP`] (monomorphized
+    /// constants — the named fast path).
+    #[inline(always)]
+    fn bp_encode_lane(x: Self) -> Self::Word {
+        Self::encode_lane(Self::BITS, 6, 5, x)
+    }
+
+    /// Decode one word under the serving spec [`Self::BP`].
+    #[inline(always)]
+    fn bp_decode_lane(w: Self::Word) -> Self {
+        Self::decode_lane(Self::BITS, 6, 5, w)
+    }
+
+    /// Encode one float under the standard-posit spec [`Self::PSTD`].
+    #[inline(always)]
+    fn pstd_encode_lane(x: Self) -> Self::Word {
+        Self::encode_lane(Self::BITS, Self::BITS - 1, 2, x)
+    }
+
+    /// Decode one word under the standard-posit spec [`Self::PSTD`].
+    #[inline(always)]
+    fn pstd_decode_lane(w: Self::Word) -> Self {
+        Self::decode_lane(Self::BITS, Self::BITS - 1, 2, w)
+    }
+
+    /// A quire sized for exact accumulation of products at this width:
+    /// the paper's 800-bit shared quire for the f32 tier, the
+    /// f64-range-exact sizing for the f64 tier.
+    fn quire() -> Quire;
+
+    /// Widen to f64 (exact at both widths).
+    fn to_f64(self) -> f64;
+    /// Narrow/adopt from f64 (rounds for f32 — the staging conversions).
+    fn from_f64(v: f64) -> Self;
+    /// Adopt from f32 (exact at both widths — the serving input type).
+    fn from_f32(v: f32) -> Self;
+    /// Narrow to f32 (rounds for f64 — the serving output type).
+    fn to_f32(self) -> f32;
+    /// Magnitude (needed by the contract tiers; inherent `abs` forwarded).
+    fn abs(self) -> Self;
+    /// True for finite values (inherent `is_finite` forwarded).
+    fn is_finite(self) -> bool;
+    /// True for NaN (inherent `is_nan` forwarded).
+    fn is_nan(self) -> bool;
+    /// Raw bit pattern widened to u64 (tests and hashing).
+    fn to_bits_u64(self) -> u64;
+
+    /// Word → u64 (zero-extending; feeds the general `PositSpec` codec).
+    fn word_to_u64(w: Self::Word) -> u64;
+    /// u64 → word (truncating; adopts general-codec results).
+    fn word_from_u64(v: u64) -> Self::Word;
+    /// Word → signed wire bit pattern (same bits).
+    fn word_to_signed(w: Self::Word) -> Self::Signed;
+    /// Signed wire bit pattern → word (same bits).
+    fn signed_to_word(s: Self::Signed) -> Self::Word;
+}
+
+/// The signed wire-type axis (i32 / i64): quantized tensors travel as
+/// signed bit patterns, and decode-direction generics key on this trait
+/// so the element width is inferred from the *argument* type —
+/// `dequantize(&[i32])` needs no turbofish.
+pub trait LaneSigned: sealed::Sealed + Copy + Send + Sync + 'static {
+    /// The float exchange type whose words these bit patterns carry.
+    type Elem: LaneElem<Signed = Self>;
+
+    /// Bit pattern → word (same bits).
+    fn to_word(self) -> <Self::Elem as LaneElem>::Word;
+    /// Word → bit pattern (same bits).
+    fn from_word(w: <Self::Elem as LaneElem>::Word) -> Self;
+}
+
+impl LaneSigned for i32 {
+    type Elem = f32;
+
+    #[inline(always)]
+    fn to_word(self) -> u32 {
+        self as u32
+    }
+
+    #[inline(always)]
+    fn from_word(w: u32) -> i32 {
+        w as i32
+    }
+}
+
+impl LaneSigned for i64 {
+    type Elem = f64;
+
+    #[inline(always)]
+    fn to_word(self) -> u64 {
+        self as u64
+    }
+
+    #[inline(always)]
+    fn from_word(w: u64) -> i64 {
+        w as i64
+    }
+}
+
+/// One macro body = one datapath. Expanding it with the 32-bit parameters
+/// yields exactly the algorithm previously hand-written in `codec.rs`;
+/// the 64-bit expansion is `codec64.rs`. Width parameters:
+/// float / word / wide / signed types, word and wide bit counts, the IEEE
+/// fraction/exponent field widths, bias, normal-exponent range, and the
+/// canonical NaN pattern.
+macro_rules! lane_elem_impl {
+    ($f:ty, $w:ty, $wide:ty, $s:ty, $word_bits:expr, $wide_bits:expr,
+     $fbits:expr, $ebits:expr, $bias:expr, $emin:expr, $emax:expr,
+     $nan_bits:expr, $bp:expr, $pstd:expr, $bp_name:expr, $pstd_name:expr,
+     $quire:expr) => {
+        // Width-parameterized macro body: several casts are identities at
+        // one of the two expansions (e.g. `w as u64` when Word = u64).
+        #[allow(clippy::unnecessary_cast)]
+        impl LaneElem for $f {
+            type Word = $w;
+            type Wide = $wide;
+            type Signed = $s;
+
+            const BITS: u32 = $word_bits;
+            const ZERO: Self = 0.0;
+            const MIN_POS: Self = <$f>::MIN_POSITIVE;
+            const BP: PositSpec = $bp;
+            const PSTD: PositSpec = $pstd;
+            const BP_NAME: &'static str = $bp_name;
+            const PSTD_NAME: &'static str = $pstd_name;
+
+            #[inline(always)]
+            fn encode_lane(n: u32, rs: u32, es: u32, x: $f) -> $w {
+                debug_assert!(
+                    (3..=$word_bits).contains(&n)
+                        && rs >= 2
+                        && rs <= n - 1
+                        && (1..=8).contains(&es)
+                );
+                let m = n - 1;
+                let mask_n: $w = if n == $word_bits { <$w>::MAX } else { ((1 as $w) << n) - 1 };
+                let nar: $w = (1 as $w) << m;
+                let maxpos: $wide = ((1 as $wide) << m) - 1;
+                let bounded = rs < m;
+                let r_max: i32 = rs as i32 - 1;
+                let r_min: i32 = if bounded { -(rs as i32) } else { -(n as i32 - 2) };
+
+                let bits = x.to_bits();
+                let sign = bits >> ($word_bits - 1);
+                let biased = ((bits >> $fbits) & (((1 as $w) << $ebits) - 1)) as i32;
+                let frac = (bits & (((1 as $w) << $fbits) - 1)) as $wide;
+                let is_zero_or_sub = biased == 0; // zero and FTZ'd subnormals
+                let is_special = biased == (1i32 << $ebits) - 1; // NaN/Inf → NaR
+                let t = biased - $bias;
+                let r = t >> es; // floor(t / 2^es)
+                let e = (t & ((1i32 << es) - 1)) as $wide; // t mod 2^es, in [0, 2^es)
+                let sat_hi = r > r_max;
+                let sat_lo = r < r_min;
+                let rc = r.clamp(r_min, r_max); // keep shifts in range; sat masks win below
+                let run: u32 = if rc >= 0 { (rc + 1) as u32 } else { (-rc) as u32 };
+                let capped = run >= rs; // regime hits the bound: no terminator bit
+                let w_reg = if capped { rs } else { run + 1 };
+                // Regime field value in w_reg bits: a run of ones/zeros plus
+                // the terminator when not capped.
+                let reg_ones = ((1 as $wide) << w_reg) - 1;
+                let reg_val: $wide =
+                    if rc >= 0 { reg_ones - ((!capped) as $wide) } else { (!capped) as $wide };
+                // Serialize regime ‖ exponent ‖ fraction MSB-first into the
+                // wide stream (w_reg + es + fbits ≤ wide_bits − 2 for every
+                // supported spec: shifts never underflow).
+                let sh_reg = $wide_bits - w_reg;
+                let sh_exp = sh_reg - es;
+                let sh_frac = sh_exp - $fbits;
+                let s = (reg_val << sh_reg) | (e << sh_exp) | (frac << sh_frac);
+                // Cut at m bits with round-to-nearest-even: rem+lsb>half ⟺ up.
+                let cut = $wide_bits - m;
+                let q = s >> cut;
+                let rem = s & (((1 as $wide) << cut) - 1);
+                let half = (1 as $wide) << (cut - 1);
+                let up = (rem + (q & 1) > half) as $wide;
+                // Carry-out saturates to maxpos (never NaR); a nonzero real
+                // never rounds to the zero pattern (min clamp to minpos).
+                let body = (q + up).min(maxpos).max(1);
+                let body = if sat_hi { maxpos } else { body };
+                let body = if sat_lo { 1 } else { body };
+                let bodyw = body as $w;
+                let word = (if sign == 1 { bodyw.wrapping_neg() } else { bodyw }) & mask_n;
+                let word = if is_zero_or_sub { 0 } else { word };
+                if is_special {
+                    nar
+                } else {
+                    word
+                }
+            }
+
+            #[inline(always)]
+            fn decode_lane(n: u32, rs: u32, es: u32, word: $w) -> $f {
+                debug_assert!(
+                    (3..=$word_bits).contains(&n)
+                        && rs >= 2
+                        && rs <= n - 1
+                        && (1..=8).contains(&es)
+                );
+                let m = n - 1;
+                let mask_n: $w = if n == $word_bits { <$w>::MAX } else { ((1 as $w) << n) - 1 };
+                let body_mask: $w = ((1 as $w) << m) - 1;
+                let nar: $w = (1 as $w) << m;
+
+                let word = word & mask_n;
+                let is_zero = word == 0;
+                let is_nar = word == nar;
+                let sign = (word >> m) & 1;
+                let mag = (if sign == 1 { word.wrapping_neg() } else { word }) & body_mask;
+                let b0 = (mag >> (m - 1)) & 1;
+                // Leading-run length within the m-bit body, capped at rs.
+                let probe = (if b0 == 1 { !mag } else { mag }) & body_mask;
+                let lz = (probe << ($word_bits - m)).leading_zeros(); // probe == 0 ⇒ lz ≥ m
+                let run = lz.min(m).min(rs);
+                let reg_len = run + (run != rs) as u32; // +terminator unless capped
+                let r: i32 = if b0 == 1 { run as i32 - 1 } else { -(run as i32) };
+                // Align the first post-regime bit to the top of the wide
+                // stream (the two-step shift keeps the amount in range even
+                // when reg_len = m). Ghost exponent bits and the empty
+                // fraction fall out as zeros automatically.
+                let pay = ((mag as $wide) << ($wide_bits - 1 - m + reg_len)) << 1;
+                let e = (pay >> ($wide_bits - es)) as i32;
+                let frac_top = pay << es; // fraction, MSB-aligned at the top bit
+                let t = r * (1i32 << es) + e;
+                // RNE the fraction down to the float's fbits; guard/sticky
+                // live in the low (wide_bits − fbits) bits of frac_top.
+                let q = (frac_top >> ($wide_bits - $fbits)) as $w;
+                let rem = frac_top & (((1 as $wide) << ($wide_bits - $fbits)) - 1);
+                let up = (rem + (q & 1) as $wide > ((1 as $wide) << ($wide_bits - $fbits - 1)))
+                    as $w;
+                let frac = q + up;
+                let tt = t + (frac >> $fbits) as i32; // rounding carry bumps the scale
+                let frac = frac & (((1 as $w) << $fbits) - 1);
+                let underflow = tt < $emin; // FTZ contract (keeps the sign)
+                let overflow = tt > $emax;
+                let ttc = tt.clamp($emin, $emax);
+                let fb = (sign << ($word_bits - 1)) | (((ttc + $bias) as $w) << $fbits) | frac;
+                let fb = if underflow { sign << ($word_bits - 1) } else { fb };
+                let fb = if overflow {
+                    (sign << ($word_bits - 1)) | ((((1 as $w) << $ebits) - 1) << $fbits)
+                } else {
+                    fb
+                };
+                let fb = if is_zero { 0 } else { fb };
+                let fb = if is_nar { $nan_bits } else { fb };
+                <$f>::from_bits(fb)
+            }
+
+            #[inline(always)]
+            fn quire() -> Quire {
+                $quire
+            }
+
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $f
+            }
+
+            #[inline(always)]
+            fn from_f32(v: f32) -> Self {
+                v as $f
+            }
+
+            #[inline(always)]
+            fn to_f32(self) -> f32 {
+                self as f32
+            }
+
+            #[inline(always)]
+            fn abs(self) -> Self {
+                <$f>::abs(self)
+            }
+
+            #[inline(always)]
+            fn is_finite(self) -> bool {
+                <$f>::is_finite(self)
+            }
+
+            #[inline(always)]
+            fn is_nan(self) -> bool {
+                <$f>::is_nan(self)
+            }
+
+            #[inline(always)]
+            fn to_bits_u64(self) -> u64 {
+                self.to_bits() as u64
+            }
+
+            #[inline(always)]
+            fn word_to_u64(w: $w) -> u64 {
+                w as u64
+            }
+
+            #[inline(always)]
+            fn word_from_u64(v: u64) -> $w {
+                v as $w
+            }
+
+            #[inline(always)]
+            fn word_to_signed(w: $w) -> $s {
+                w as $s
+            }
+
+            #[inline(always)]
+            fn signed_to_word(s: $s) -> $w {
+                s as $w
+            }
+        }
+    };
+}
+
+lane_elem_impl!(
+    f32,
+    u32,
+    u64,
+    i32,
+    32,
+    64,
+    23,
+    8,
+    127,
+    -126,
+    127,
+    0x7fc0_0000u32,
+    BP32,
+    P32,
+    "bp32",
+    "p32",
+    Quire::paper_800(&BP32)
+);
+
+lane_elem_impl!(
+    f64,
+    u64,
+    u128,
+    i64,
+    64,
+    128,
+    52,
+    11,
+    1023,
+    -1022,
+    1023,
+    0x7ff8_0000_0000_0000u64,
+    BP64,
+    P64,
+    "bp64",
+    "p64",
+    Quire::exact_f64()
+);
+
+// ----------------------------------------------------------------------
+// Chunked slice drivers. The spec parameters are loop-invariant at every
+// call site (the named wrappers pass literal constants), so each use
+// monomorphizes to a dedicated straight-line inner loop exactly as the
+// per-width drivers did.
+// ----------------------------------------------------------------------
+
+/// Batched encode under an arbitrary (already-validated) spec.
+#[inline(always)]
+pub fn encode_slice<E: LaneElem>(n: u32, rs: u32, es: u32, xs: &[E], out: &mut [E::Word]) {
+    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
+    let split = xs.len() - xs.len() % LANES;
+    let (xh, xt) = xs.split_at(split);
+    let (oh, ot) = out.split_at_mut(split);
+    for (xc, oc) in xh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            oc[l] = E::encode_lane(n, rs, es, xc[l]);
+        }
+    }
+    for (x, o) in xt.iter().zip(ot.iter_mut()) {
+        *o = E::encode_lane(n, rs, es, *x);
+    }
+}
+
+/// Batched decode under an arbitrary (already-validated) spec.
+#[inline(always)]
+pub fn decode_slice<E: LaneElem>(n: u32, rs: u32, es: u32, ws: &[E::Word], out: &mut [E]) {
+    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
+    let split = ws.len() - ws.len() % LANES;
+    let (wh, wt) = ws.split_at(split);
+    let (oh, ot) = out.split_at_mut(split);
+    for (wc, oc) in wh.chunks_exact(LANES).zip(oh.chunks_exact_mut(LANES)) {
+        for l in 0..LANES {
+            oc[l] = E::decode_lane(n, rs, es, wc[l]);
+        }
+    }
+    for (w, o) in wt.iter().zip(ot.iter_mut()) {
+        *o = E::decode_lane(n, rs, es, *w);
+    }
+}
+
+/// Fused quantize+dequantize in place under an arbitrary spec (no word
+/// buffer, no allocation).
+#[inline(always)]
+pub fn roundtrip_slice_in_place<E: LaneElem>(n: u32, rs: u32, es: u32, xs: &mut [E]) {
+    let split = xs.len() - xs.len() % LANES;
+    let (head, tail) = xs.split_at_mut(split);
+    for c in head.chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            c[l] = E::decode_lane(n, rs, es, E::encode_lane(n, rs, es, c[l]));
+        }
+    }
+    for x in tail.iter_mut() {
+        *x = E::decode_lane(n, rs, es, E::encode_lane(n, rs, es, *x));
+    }
+}
+
+/// Batched encode under the serving spec `E::BP` (monomorphized constants).
+#[inline(always)]
+pub fn bp_encode_into<E: LaneElem>(xs: &[E], out: &mut [E::Word]) {
+    encode_slice::<E>(E::BITS, 6, 5, xs, out);
+}
+
+/// Batched decode under the serving spec `E::BP`.
+#[inline(always)]
+pub fn bp_decode_into<E: LaneElem>(ws: &[E::Word], out: &mut [E]) {
+    decode_slice::<E>(E::BITS, 6, 5, ws, out);
+}
+
+/// Fused serving-spec roundtrip in place.
+#[inline(always)]
+pub fn bp_roundtrip_in_place<E: LaneElem>(xs: &mut [E]) {
+    roundtrip_slice_in_place::<E>(E::BITS, 6, 5, xs);
+}
+
+/// Batched encode under the standard-posit spec `E::PSTD`.
+#[inline(always)]
+pub fn pstd_encode_into<E: LaneElem>(xs: &[E], out: &mut [E::Word]) {
+    encode_slice::<E>(E::BITS, E::BITS - 1, 2, xs, out);
+}
+
+/// Batched decode under the standard-posit spec `E::PSTD`.
+#[inline(always)]
+pub fn pstd_decode_into<E: LaneElem>(ws: &[E::Word], out: &mut [E]) {
+    decode_slice::<E>(E::BITS, E::BITS - 1, 2, ws, out);
+}
+
+// ----------------------------------------------------------------------
+// The generic engine
+// ----------------------------------------------------------------------
+
+/// Spec-checked batched codec over any lane-supported spec at width `E`.
+/// Construction validates the spec once; every batch call after that is
+/// assertion-free on the spec axis. The named per-format functions in
+/// [`super::codec`]/[`super::codec64`] are this engine at fixed specs.
+#[derive(Clone, Copy, Debug)]
+pub struct LaneCodec<E: LaneElem> {
+    spec: PositSpec,
+    _elem: PhantomData<E>,
+}
+
+impl<E: LaneElem> LaneCodec<E> {
+    /// Build an engine for `spec`; errors when the lane codec at this
+    /// width cannot serve it (n > `E::BITS`, es = 0, degenerate rs —
+    /// those route to the general pattern-space codec, see
+    /// [`super::dispatch_spec`]).
+    pub fn new(spec: PositSpec) -> Result<LaneCodec<E>> {
+        if !E::spec_supported(&spec) {
+            return Err(anyhow!(
+                "{}-bit lane codec does not support {spec:?}",
+                E::BITS
+            ));
+        }
+        Ok(LaneCodec { spec, _elem: PhantomData })
+    }
+
+    /// The engine for the serving b-posit spec ⟨BITS,6,5⟩.
+    pub fn bp() -> LaneCodec<E> {
+        LaneCodec { spec: E::BP, _elem: PhantomData }
+    }
+
+    /// The engine for the standard posit ⟨BITS,2⟩.
+    pub fn pstd() -> LaneCodec<E> {
+        LaneCodec { spec: E::PSTD, _elem: PhantomData }
+    }
+
+    /// The spec this engine serves.
+    pub fn spec(&self) -> PositSpec {
+        self.spec
+    }
+
+    /// Encode one float.
+    #[inline]
+    pub fn encode_word(&self, x: E) -> E::Word {
+        E::encode_lane(self.spec.n, self.spec.rs, self.spec.es, x)
+    }
+
+    /// Decode one word.
+    #[inline]
+    pub fn decode_word(&self, w: E::Word) -> E {
+        E::decode_lane(self.spec.n, self.spec.rs, self.spec.es, w)
+    }
+
+    /// Batched encode into a caller-owned buffer (`out.len() == xs.len()`).
+    pub fn encode_into(&self, xs: &[E], out: &mut [E::Word]) {
+        encode_slice::<E>(self.spec.n, self.spec.rs, self.spec.es, xs, out);
+    }
+
+    /// Batched decode into a caller-owned buffer.
+    pub fn decode_into(&self, ws: &[E::Word], out: &mut [E]) {
+        decode_slice::<E>(self.spec.n, self.spec.rs, self.spec.es, ws, out);
+    }
+
+    /// Allocating batched encode.
+    pub fn encode(&self, xs: &[E]) -> Vec<E::Word> {
+        let mut out: Vec<E::Word> = vec![Default::default(); xs.len()];
+        self.encode_into(xs, &mut out);
+        out
+    }
+
+    /// Allocating batched decode.
+    pub fn decode(&self, ws: &[E::Word]) -> Vec<E> {
+        let mut out = vec![E::ZERO; ws.len()];
+        self.decode_into(ws, &mut out);
+        out
+    }
+
+    /// Fused quantize+dequantize of a buffer in place (no word buffer,
+    /// no allocation).
+    pub fn roundtrip_in_place(&self, xs: &mut [E]) {
+        roundtrip_slice_in_place::<E>(self.spec.n, self.spec.rs, self.spec.es, xs);
+    }
+
+    /// Fused roundtrip into a separate output buffer.
+    pub fn roundtrip_into(&self, xs: &[E], out: &mut [E]) {
+        assert_eq!(xs.len(), out.len(), "roundtrip: input/output length mismatch");
+        out.copy_from_slice(xs);
+        self.roundtrip_in_place(out);
+    }
+}
+
+// ----------------------------------------------------------------------
+// Spec-carrying typed weight buffers
+// ----------------------------------------------------------------------
+
+/// An encoded row-major `rows × cols` tensor of posit-family words,
+/// carrying its spec and shape. Replaces raw `&[u32]`/`&[u64]` slices at
+/// API boundaries: the element width is part of the *type*
+/// (`EncodedTensor<f32>` holds u32 words, `EncodedTensor<f64>` u64), and
+/// the spec/shape are validated at construction, so a mismatch is a
+/// checked error at the boundary instead of silently reinterpreted bits
+/// deep inside a kernel. The word storage is `Arc`-shared so the
+/// process-wide weight cache and multiple servers can hold one encoding.
+#[derive(Clone)]
+pub struct EncodedTensor<E: LaneElem> {
+    spec: PositSpec,
+    rows: usize,
+    cols: usize,
+    words: Arc<Vec<E::Word>>,
+}
+
+impl<E: LaneElem> EncodedTensor<E> {
+    /// Adopt already-encoded words (e.g. from the weight cache). Errors
+    /// when the spec is outside this width's lane support or the word
+    /// count does not match `rows × cols`.
+    pub fn from_words(
+        spec: PositSpec,
+        rows: usize,
+        cols: usize,
+        words: Arc<Vec<E::Word>>,
+    ) -> Result<EncodedTensor<E>> {
+        if !E::spec_supported(&spec) {
+            return Err(anyhow!("{}-bit encoded tensor: unsupported {spec:?}", E::BITS));
+        }
+        if words.len() != rows * cols {
+            return Err(anyhow!(
+                "encoded tensor: {} words for a {rows}×{cols} shape",
+                words.len()
+            ));
+        }
+        Ok(EncodedTensor { spec, rows, cols, words })
+    }
+
+    /// Encode a float tensor under `spec`.
+    pub fn encode(spec: PositSpec, rows: usize, cols: usize, xs: &[E]) -> Result<EncodedTensor<E>> {
+        if xs.len() != rows * cols {
+            return Err(anyhow!("encoded tensor: {} values for a {rows}×{cols} shape", xs.len()));
+        }
+        let codec = LaneCodec::<E>::new(spec)?;
+        Ok(EncodedTensor { spec, rows, cols, words: Arc::new(codec.encode(xs)) })
+    }
+
+    /// Encode under the serving spec `E::BP`.
+    pub fn encode_bp(rows: usize, cols: usize, xs: &[E]) -> Result<EncodedTensor<E>> {
+        Self::encode(E::BP, rows, cols, xs)
+    }
+
+    /// The spec the words are encoded under.
+    pub fn spec(&self) -> PositSpec {
+        self.spec
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total word count (`rows × cols`).
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// True when the tensor holds no words.
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// True when encoded under the serving b-posit spec (`E::BP`) — the
+    /// layout the decode-fused GEMM fast paths consume.
+    pub fn is_serving_format(&self) -> bool {
+        self.spec == E::BP
+    }
+
+    /// The raw word storage, row-major.
+    pub fn words(&self) -> &[E::Word] {
+        &self.words
+    }
+
+    /// The shared word storage (cheap clone for cache handoff).
+    pub fn shared_words(&self) -> Arc<Vec<E::Word>> {
+        self.words.clone()
+    }
+
+    /// A contiguous row slab `[r0, r0 + nrows)` of the word storage.
+    pub fn row_slab(&self, r0: usize, nrows: usize) -> &[E::Word] {
+        &self.words[r0 * self.cols..(r0 + nrows) * self.cols]
+    }
+
+    /// Decode the whole tensor into a caller buffer (`out.len() == len()`).
+    /// The serving spec takes the monomorphized fast lane; other specs go
+    /// through the generic lane driver.
+    pub fn decode_into(&self, out: &mut [E]) {
+        if self.is_serving_format() {
+            bp_decode_into::<E>(&self.words, out);
+        } else {
+            decode_slice::<E>(self.spec.n, self.spec.rs, self.spec.es, &self.words, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::BP16;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn trait_constants_name_the_serving_formats() {
+        assert_eq!(<f32 as LaneElem>::BP, BP32);
+        assert_eq!(<f32 as LaneElem>::PSTD, P32);
+        assert_eq!(<f64 as LaneElem>::BP, BP64);
+        assert_eq!(<f64 as LaneElem>::PSTD, P64);
+        assert_eq!(<f32 as LaneElem>::BITS, 32);
+        assert_eq!(<f64 as LaneElem>::BITS, 64);
+        assert_eq!(<f32 as LaneElem>::BP_NAME, "bp32");
+        assert_eq!(<f64 as LaneElem>::PSTD_NAME, "p64");
+        assert!(<f32 as LaneElem>::spec_supported(&BP16));
+        assert!(!<f32 as LaneElem>::spec_supported(&BP64));
+        assert!(<f64 as LaneElem>::spec_supported(&BP64));
+    }
+
+    #[test]
+    fn signed_axis_roundtrips_bit_patterns() {
+        assert_eq!(<i32 as LaneSigned>::to_word(-1), u32::MAX);
+        assert_eq!(<i32 as LaneSigned>::from_word(0x8000_0000), i32::MIN);
+        assert_eq!(<i64 as LaneSigned>::to_word(-1), u64::MAX);
+        assert_eq!(<i64 as LaneSigned>::from_word(1u64 << 63), i64::MIN);
+    }
+
+    #[test]
+    fn engine_matches_lane_primitives_both_widths() {
+        let mut rng = Rng::new(0x1a9e);
+        let c32 = LaneCodec::<f32>::bp();
+        let c64 = LaneCodec::<f64>::bp();
+        let p32 = LaneCodec::<f32>::pstd();
+        let p64 = LaneCodec::<f64>::pstd();
+        for _ in 0..20_000 {
+            let w = rng.next_u64();
+            let x32 = f32::from_bits(w as u32);
+            let x64 = f64::from_bits(w);
+            assert_eq!(c32.encode_word(x32), <f32 as LaneElem>::bp_encode_lane(x32));
+            assert_eq!(c64.encode_word(x64), <f64 as LaneElem>::bp_encode_lane(x64));
+            assert_eq!(p32.encode_word(x32), <f32 as LaneElem>::pstd_encode_lane(x32));
+            assert_eq!(p64.encode_word(x64), <f64 as LaneElem>::pstd_encode_lane(x64));
+            let (a, b) = (c32.decode_word(w as u32), <f32 as LaneElem>::bp_decode_lane(w as u32));
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()));
+            let (a, b) = (c64.decode_word(w), <f64 as LaneElem>::bp_decode_lane(w));
+            assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()));
+        }
+    }
+
+    #[test]
+    fn engine_rejects_unsupported_specs() {
+        // es = 0 and over-wide specs stay on the general codec.
+        let es0 = PositSpec { n: 16, rs: 15, es: 0 };
+        assert!(LaneCodec::<f32>::new(es0).is_err());
+        assert!(LaneCodec::<f64>::new(es0).is_err());
+        assert!(LaneCodec::<f32>::new(BP64).is_err());
+        assert!(LaneCodec::<f64>::new(BP64).is_ok());
+    }
+
+    #[test]
+    fn engine_slice_paths_roundtrip() {
+        let xs: Vec<f64> = (0..37).map(|i| (i as f64 - 18.0) * 1.73).collect();
+        let c = LaneCodec::<f64>::new(PositSpec::bounded(48, 6, 5)).unwrap();
+        let words = c.encode(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(words[i], c.encode_word(x), "lane {i}");
+        }
+        let back = c.decode(&words);
+        let mut rt = xs.clone();
+        c.roundtrip_in_place(&mut rt);
+        let mut rt2 = vec![0f64; xs.len()];
+        c.roundtrip_into(&xs, &mut rt2);
+        for i in 0..xs.len() {
+            assert_eq!(back[i].to_bits(), rt[i].to_bits(), "lane {i}");
+            assert_eq!(rt[i].to_bits(), rt2[i].to_bits(), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn encoded_tensor_checks_spec_and_shape() {
+        let xs: Vec<f32> = (0..12).map(|i| i as f32 * 0.25 - 1.5).collect();
+        let t = EncodedTensor::<f32>::encode_bp(3, 4, &xs).unwrap();
+        assert_eq!((t.rows(), t.cols(), t.len()), (3, 4, 12));
+        assert!(t.is_serving_format() && !t.is_empty());
+        assert_eq!(t.spec(), BP32);
+        let mut back = vec![0f32; 12];
+        t.decode_into(&mut back);
+        assert_eq!(back, xs, "fovea values survive the roundtrip exactly");
+        assert_eq!(t.row_slab(1, 2).len(), 8);
+        assert_eq!(t.row_slab(0, 3), t.words());
+        // Shape mismatch is a checked error.
+        assert!(EncodedTensor::<f32>::encode_bp(3, 5, &xs).is_err());
+        assert!(EncodedTensor::<f32>::from_words(BP32, 2, 2, t.shared_words()).is_err());
+        // Spec outside the width's lane support is a checked error.
+        assert!(EncodedTensor::<f32>::encode(BP64, 3, 4, &xs).is_err());
+        let es0 = PositSpec { n: 16, rs: 15, es: 0 };
+        assert!(EncodedTensor::<f32>::encode(es0, 3, 4, &xs).is_err());
+        // Non-serving lane specs decode through the generic driver.
+        let t16 = EncodedTensor::<f32>::encode(BP16, 3, 4, &xs).unwrap();
+        assert!(!t16.is_serving_format());
+        let mut back16 = vec![0f32; 12];
+        t16.decode_into(&mut back16);
+        for (i, v) in back16.iter().enumerate() {
+            assert_eq!(
+                *v,
+                <f32 as LaneElem>::decode_lane(16, 6, 5, t16.words()[i]),
+                "lane {i}"
+            );
+        }
+        // Arc sharing: a clone points at the same storage.
+        let t2 = t.clone();
+        assert!(Arc::ptr_eq(&t.shared_words(), &t2.shared_words()));
+    }
+}

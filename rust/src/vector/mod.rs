@@ -1,42 +1,51 @@
 //! Vector layer: the serving hot path's data plane.
 //!
-//! Five parts:
-//! - [`codec`] — branch-free, chunked (8-lane) batched encode/decode for
-//!   b-posit⟨32,6,5⟩, posit⟨32,2⟩, any ⟨n≤32,rs,es⟩ spec, and f32⇄bits,
-//!   with in-place variants for zero-allocation buffer reuse. This is the
-//!   software mirror of the paper's bounded-regime ⇒ fixed-mux insight.
-//! - [`codec64`] — the 64-bit rung of the same lane structure: any
-//!   ⟨n≤64,rs,es⟩ spec over `&[f64]`/`&[u64]` streams with u128
-//!   intermediates, plus `bp64_*`/`p64_*` named fast paths — the paper's
-//!   "greater advantages at 64-bit" scalability claim, in software.
-//! - [`kernels`] — batched `dot`, `axpy`, and `gemv` over f32 *and* f64
-//!   with quire-exact accumulation ([`crate::formats::Quire`]: the
-//!   800-bit posit quire, plus an f64-range exact sizing) and rounded
-//!   fast paths, and `par_gemv_*` row-sharded variants.
-//! - [`gemm`] — register/L1-blocked GEMM (fast, quire-exact, and
-//!   quantized-weight paths at both widths on the same MR×NR
-//!   microkernel), serial and row-sharded.
+//! The layer is organized around **one width-generic lane API** — the
+//! software mirror of the paper's claim that the bounded regime makes
+//! b-posit decode/encode structurally identical across widths:
+//!
+//! - [`lane`] — the width axis itself: the [`lane::LaneElem`] trait
+//!   (f32 ↔ u32/u64, f64 ↔ u64/u128), the branch-free 8-lane
+//!   encode/decode primitives expanded from **one macro body** at both
+//!   widths, the generic engine [`lane::LaneCodec`], and the
+//!   spec-carrying typed weight buffer [`lane::EncodedTensor`] that
+//!   replaces raw `&[u32]`/`&[u64]` slices at API boundaries.
+//! - [`codec`] / [`codec64`] — the named BP32/P32 and BP64/P64 fast
+//!   paths and per-width slice drivers, as monomorphized spec constants
+//!   over the lane engine (kept as the historical entry-point names; see
+//!   `docs/API.md` for the migration table).
+//! - [`kernels`] — one generic `dot`/`axpy`/`gemv` family over any
+//!   [`lane::LaneElem`], with rounded fast paths, quire-exact paths
+//!   ([`crate::formats::Quire`]), decode-fused quantized-weight paths,
+//!   and row-sharded `par_*` entry points.
+//! - [`gemm`] — one generic register/L1-blocked GEMM family (fast,
+//!   quire-exact, and quantized-weight paths) on a shared MR×NR
+//!   microkernel, serial and row-sharded, plus the
+//!   [`lane::EncodedTensor`]-consuming serving entry point.
 //! - [`parallel`] — zero-dependency scoped fork-join sharding over
-//!   `std::thread` workers (`PALLAS_THREADS`, auto default), used by the
-//!   batched codecs, gemv, and GEMM. Shards are contiguous row/element
+//!   `std::thread` workers (`PALLAS_THREADS`, auto default) with one
+//!   generic sharded-codec family. Shards are contiguous row/element
 //!   blocks, so every `par_*` result is bit-identical to serial for any
 //!   thread count.
 //!
 //! The coordinator's quantizer routes every batch through the sharded
-//! codecs; `positron vector-bench` (32- and 64-bit modes) / `gemm-bench`
-//! and the `vector_codec` / `vector_codec64` / `vector_gemm` bench
-//! targets measure throughput and emit `BENCH_vector_codec.json` /
-//! `BENCH_vector_codec64.json` / `BENCH_vector_gemm.json`.
+//! generic codec; `positron vector-bench` (one generic code path for
+//! both `--bits` modes) / `gemm-bench` and the `vector_codec` /
+//! `vector_codec64` / `vector_gemm` bench targets measure throughput and
+//! emit `BENCH_vector_codec.json` / `BENCH_vector_codec64.json` /
+//! `BENCH_vector_gemm.json`.
 
 pub mod codec;
 pub mod codec64;
 pub mod gemm;
 pub mod kernels;
+pub mod lane;
 pub mod parallel;
 
-pub use codec::LANES;
+pub use lane::{EncodedTensor, LaneCodec, LaneElem, LaneSigned, LANES};
 
 use crate::formats::posit::PositSpec;
+use crate::formats::Decoded;
 
 /// Which batched codec implementation serves a spec.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,6 +62,10 @@ pub enum CodecRoute {
 /// supports it, else the general codec. Narrow specs (n ≤ 32) are also
 /// valid for [`codec64`] — its generic path is a strict superset — but
 /// the 32-bit lanes are the faster stream type for them.
+///
+/// Callers that would `match` on the result to pick an implementation
+/// should use [`dispatch_spec`] instead: it returns a handle that has
+/// already done the dispatch.
 pub fn route_spec(spec: &PositSpec) -> CodecRoute {
     if codec::spec_supported(spec) {
         CodecRoute::Lane32
@@ -60,5 +73,178 @@ pub fn route_spec(spec: &PositSpec) -> CodecRoute {
         CodecRoute::Lane64
     } else {
         CodecRoute::General
+    }
+}
+
+/// A routed batch codec for an arbitrary spec: the typed replacement for
+/// "`match route_spec(..)` and call a per-tier API". Exchange types are
+/// the width superset (f64 values, u64 words, valid for every n ≤ 64),
+/// so one handle serves lane-supported and general-codec specs alike;
+/// the lane tiers run the branch-free engine, the general tier runs the
+/// exact pattern-space codec under the same FTZ/NaR contract.
+#[derive(Clone, Copy, Debug)]
+pub struct DispatchCodec {
+    spec: PositSpec,
+    route: CodecRoute,
+}
+
+/// Build the routed codec handle for `spec` — see [`DispatchCodec`].
+pub fn dispatch_spec(spec: &PositSpec) -> DispatchCodec {
+    DispatchCodec { spec: *spec, route: route_spec(spec) }
+}
+
+impl DispatchCodec {
+    /// Which tier this handle dispatches to (diagnostics; no need to
+    /// match on it to use the codec).
+    pub fn route(&self) -> CodecRoute {
+        self.route
+    }
+
+    /// The spec this handle serves.
+    pub fn spec(&self) -> PositSpec {
+        self.spec
+    }
+
+    /// Encode one f64 (FTZ below 2^−1022, NaN/Inf → NaR).
+    pub fn encode_one(&self, x: f64) -> u64 {
+        match self.route {
+            // Both lane tiers run the 64-bit lane engine: at f64 exchange
+            // width it is a strict superset of the 32-bit lanes and
+            // bit-identical to the general codec under the contract.
+            CodecRoute::Lane32 | CodecRoute::Lane64 => {
+                <f64 as LaneElem>::encode_lane(self.spec.n, self.spec.rs, self.spec.es, x)
+            }
+            CodecRoute::General => {
+                if !x.is_finite() {
+                    self.spec.nar()
+                } else if x == 0.0 || x.abs() < f64::MIN_POSITIVE {
+                    0
+                } else {
+                    self.spec.encode(&Decoded::from_f64(x))
+                }
+            }
+        }
+    }
+
+    /// Decode one word to f64 (sub-normal-range magnitudes flush to ±0,
+    /// NaR → NaN).
+    pub fn decode_one(&self, w: u64) -> f64 {
+        match self.route {
+            CodecRoute::Lane32 | CodecRoute::Lane64 => {
+                <f64 as LaneElem>::decode_lane(self.spec.n, self.spec.rs, self.spec.es, w)
+            }
+            CodecRoute::General => {
+                let v = self.spec.decode(w & self.spec.mask()).to_f64();
+                if v != 0.0 && v.abs() < f64::MIN_POSITIVE {
+                    if v < 0.0 {
+                        -0.0
+                    } else {
+                        0.0
+                    }
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    /// Batched encode into a caller-owned buffer (`out.len() == xs.len()`).
+    pub fn encode_into(&self, xs: &[f64], out: &mut [u64]) {
+        assert_eq!(xs.len(), out.len(), "dispatch encode: length mismatch");
+        match self.route {
+            CodecRoute::Lane32 | CodecRoute::Lane64 => {
+                lane::encode_slice::<f64>(self.spec.n, self.spec.rs, self.spec.es, xs, out);
+            }
+            CodecRoute::General => {
+                for (o, &x) in out.iter_mut().zip(xs) {
+                    *o = self.encode_one(x);
+                }
+            }
+        }
+    }
+
+    /// Batched decode into a caller-owned buffer.
+    pub fn decode_into(&self, ws: &[u64], out: &mut [f64]) {
+        assert_eq!(ws.len(), out.len(), "dispatch decode: length mismatch");
+        match self.route {
+            CodecRoute::Lane32 | CodecRoute::Lane64 => {
+                lane::decode_slice::<f64>(self.spec.n, self.spec.rs, self.spec.es, ws, out);
+            }
+            CodecRoute::General => {
+                for (o, &w) in out.iter_mut().zip(ws) {
+                    *o = self.decode_one(w);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::posit::{BP32, BP64, P64};
+    use crate::testutil::Rng;
+
+    #[test]
+    fn dispatch_serves_lane_and_general_specs_without_matching() {
+        let mut rng = Rng::new(0xd15);
+        // A spec from each tier; the *caller* code below is identical for
+        // all three — that is the point of the handle.
+        let es0 = PositSpec { n: 16, rs: 15, es: 0 };
+        for (spec, want_route) in [
+            (BP32, CodecRoute::Lane32),
+            (BP64, CodecRoute::Lane64),
+            (P64, CodecRoute::Lane64),
+            (es0, CodecRoute::General),
+        ] {
+            let dc = dispatch_spec(&spec);
+            assert_eq!(dc.route(), want_route, "{spec:?}");
+            assert_eq!(dc.spec(), spec);
+            let xs: Vec<f64> = (0..100)
+                .map(|_| {
+                    let v = f64::from_bits(rng.next_u64());
+                    if v.is_finite() { v } else { 1.5 }
+                })
+                .collect();
+            let mut words = vec![0u64; xs.len()];
+            dc.encode_into(&xs, &mut words);
+            let mut back = vec![0f64; xs.len()];
+            dc.decode_into(&words, &mut back);
+            for (i, (&w, &y)) in words.iter().zip(&back).enumerate() {
+                assert_eq!(w, dc.encode_one(xs[i]), "{spec:?} lane {i}");
+                let one = dc.decode_one(w);
+                assert!(
+                    y.to_bits() == one.to_bits() || (y.is_nan() && one.is_nan()),
+                    "{spec:?} lane {i}"
+                );
+                // decode∘encode is idempotent on every tier.
+                let w2 = dc.encode_one(y);
+                let y2 = dc.decode_one(w2);
+                assert!(
+                    y2.to_bits() == y.to_bits() || (y2.is_nan() && y.is_nan()),
+                    "{spec:?} idempotence lane {i}"
+                );
+            }
+            // Contract corners hold on every tier.
+            assert_eq!(dc.encode_one(f64::NAN), spec.nar());
+            assert_eq!(dc.encode_one(0.0), 0);
+            assert_eq!(dc.encode_one(f64::from_bits(1)), 0, "FTZ on {spec:?}");
+            assert!(dc.decode_one(spec.nar()).is_nan());
+        }
+    }
+
+    #[test]
+    fn dispatch_lane_tiers_match_codec64_bitwise() {
+        let mut rng = Rng::new(0xd16);
+        for spec in [BP32, BP64, P64, PositSpec::bounded(48, 6, 5)] {
+            let dc = dispatch_spec(&spec);
+            for _ in 0..5_000 {
+                let w = rng.next_u64();
+                let x = f64::from_bits(w);
+                assert_eq!(dc.encode_one(x), codec64::encode_word(&spec, x), "{spec:?}");
+                let (a, b) = (dc.decode_one(w), codec64::decode_word(&spec, w));
+                assert!(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()), "{spec:?}");
+            }
+        }
     }
 }

@@ -9,6 +9,14 @@
 //! same instruction sequence as in the serial path and results are
 //! **bit-identical for any thread count**.
 //!
+//! The batched-codec surface is **one generic family** over
+//! [`LaneElem`]: `par_encode_into*` / `par_decode_into*` /
+//! `par_roundtrip_in_place*` for any lane-supported spec, and the
+//! `par_bp_*` serving-spec forms whose inner loops monomorphize with
+//! literal ⟨N,6,5⟩ constants. The historical per-width names
+//! (`bp32_encode_into_with`, `encode64_slice_into_with`, …) are thin
+//! aliases over it — see `docs/API.md`.
+//!
 //! Thread count resolution (see [`num_threads`]): the `PALLAS_THREADS`
 //! environment variable when set to a positive integer, otherwise
 //! [`std::thread::available_parallelism`]. Small batches stay serial via
@@ -16,8 +24,7 @@
 //! least a threshold's worth of elements — forking threads for a batch
 //! that encodes in microseconds would be pure overhead.
 
-use super::codec;
-use super::codec64;
+use super::lane::{self, LaneElem};
 use crate::formats::posit::PositSpec;
 
 /// Hard cap on worker threads (sanity bound for absurd `PALLAS_THREADS`).
@@ -112,127 +119,202 @@ where
 }
 
 // ----------------------------------------------------------------------
-// Sharded batch codec: the coordinator's quantize/dequantize entry points.
-// Each wrapper splits the batch into contiguous blocks and runs the
-// serial vector codec on every block, so results are bit-identical to the
-// serial path for any thread count (the codec is elementwise).
+// Sharded batch codec — the generic family. Each entry point splits the
+// batch into contiguous blocks and runs the serial lane codec on every
+// block, so results are bit-identical to the serial path for any thread
+// count (the codec is elementwise).
+// ----------------------------------------------------------------------
+
+/// Sharded batched encode under any lane-supported spec at width `E`,
+/// with an explicit shard count.
+pub fn par_encode_into_with<E: LaneElem>(
+    threads: usize,
+    spec: &PositSpec,
+    xs: &[E],
+    out: &mut [E::Word],
+) {
+    assert!(E::spec_supported(spec), "{}-bit lane codec does not support {spec:?}", E::BITS);
+    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
+    let (n, rs, es) = (spec.n, spec.rs, spec.es);
+    for_each_block(threads, out, |off, block| {
+        lane::encode_slice::<E>(n, rs, es, &xs[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched encode under any lane-supported spec (auto shards).
+pub fn par_encode_into<E: LaneElem>(spec: &PositSpec, xs: &[E], out: &mut [E::Word]) {
+    par_encode_into_with::<E>(auto_shards(xs.len(), CODEC_MIN_SHARD), spec, xs, out);
+}
+
+/// Sharded batched decode under any lane-supported spec at width `E`,
+/// with an explicit shard count.
+pub fn par_decode_into_with<E: LaneElem>(
+    threads: usize,
+    spec: &PositSpec,
+    ws: &[E::Word],
+    out: &mut [E],
+) {
+    assert!(E::spec_supported(spec), "{}-bit lane codec does not support {spec:?}", E::BITS);
+    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
+    let (n, rs, es) = (spec.n, spec.rs, spec.es);
+    for_each_block(threads, out, |off, block| {
+        lane::decode_slice::<E>(n, rs, es, &ws[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched decode under any lane-supported spec (auto shards).
+pub fn par_decode_into<E: LaneElem>(spec: &PositSpec, ws: &[E::Word], out: &mut [E]) {
+    par_decode_into_with::<E>(auto_shards(ws.len(), CODEC_MIN_SHARD), spec, ws, out);
+}
+
+/// Sharded fused quantize+dequantize in place under any lane-supported
+/// spec, with an explicit shard count.
+pub fn par_roundtrip_in_place_with<E: LaneElem>(threads: usize, spec: &PositSpec, xs: &mut [E]) {
+    assert!(E::spec_supported(spec), "{}-bit lane codec does not support {spec:?}", E::BITS);
+    let (n, rs, es) = (spec.n, spec.rs, spec.es);
+    for_each_block(threads, xs, |_, block| {
+        lane::roundtrip_slice_in_place::<E>(n, rs, es, block);
+    });
+}
+
+/// Sharded fused roundtrip in place under any lane-supported spec (auto
+/// shards).
+pub fn par_roundtrip_in_place<E: LaneElem>(spec: &PositSpec, xs: &mut [E]) {
+    par_roundtrip_in_place_with::<E>(auto_shards(xs.len(), CODEC_MIN_SHARD), spec, xs);
+}
+
+// ---- serving-spec (`E::BP`) forms: inner loops monomorphize with
+// ---- literal ⟨N,6,5⟩ constants, exactly like the old named wrappers.
+
+/// Sharded batched serving-spec encode with an explicit shard count.
+pub fn par_bp_encode_into_with<E: LaneElem>(threads: usize, xs: &[E], out: &mut [E::Word]) {
+    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        lane::bp_encode_into::<E>(&xs[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched serving-spec encode (auto shards).
+pub fn par_bp_encode_into<E: LaneElem>(xs: &[E], out: &mut [E::Word]) {
+    par_bp_encode_into_with::<E>(auto_shards(xs.len(), CODEC_MIN_SHARD), xs, out);
+}
+
+/// Sharded batched serving-spec decode with an explicit shard count.
+pub fn par_bp_decode_into_with<E: LaneElem>(threads: usize, ws: &[E::Word], out: &mut [E]) {
+    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
+    for_each_block(threads, out, |off, block| {
+        lane::bp_decode_into::<E>(&ws[off..off + block.len()], block);
+    });
+}
+
+/// Sharded batched serving-spec decode (auto shards).
+pub fn par_bp_decode_into<E: LaneElem>(ws: &[E::Word], out: &mut [E]) {
+    par_bp_decode_into_with::<E>(auto_shards(ws.len(), CODEC_MIN_SHARD), ws, out);
+}
+
+/// Sharded fused serving-spec roundtrip in place with an explicit shard
+/// count — the server's staged-buffer batch path.
+pub fn par_bp_roundtrip_in_place_with<E: LaneElem>(threads: usize, xs: &mut [E]) {
+    for_each_block(threads, xs, |_, block| lane::bp_roundtrip_in_place::<E>(block));
+}
+
+/// Sharded fused serving-spec roundtrip in place (auto shards).
+pub fn par_bp_roundtrip_in_place<E: LaneElem>(xs: &mut [E]) {
+    par_bp_roundtrip_in_place_with::<E>(auto_shards(xs.len(), CODEC_MIN_SHARD), xs);
+}
+
+// ----------------------------------------------------------------------
+// Historical per-width names — thin aliases over the generic family
+// (kept so the 32/64 call sites and bench trajectories read unchanged;
+// see docs/API.md).
 // ----------------------------------------------------------------------
 
 /// Sharded batched b-posit32 encode with an explicit shard count.
 pub fn bp32_encode_into_with(threads: usize, xs: &[f32], out: &mut [u32]) {
-    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec::bp32_encode_into(&xs[off..off + block.len()], block);
-    });
+    par_bp_encode_into_with(threads, xs, out);
 }
 
 /// Sharded batched b-posit32 encode (auto thread count).
 pub fn bp32_encode_into(xs: &[f32], out: &mut [u32]) {
-    bp32_encode_into_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs, out);
+    par_bp_encode_into(xs, out);
 }
 
 /// Sharded batched b-posit32 decode with an explicit shard count.
 pub fn bp32_decode_into_with(threads: usize, ws: &[u32], out: &mut [f32]) {
-    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec::bp32_decode_into(&ws[off..off + block.len()], block);
-    });
+    par_bp_decode_into_with(threads, ws, out);
 }
 
 /// Sharded batched b-posit32 decode (auto thread count).
 pub fn bp32_decode_into(ws: &[u32], out: &mut [f32]) {
-    bp32_decode_into_with(auto_shards(ws.len(), CODEC_MIN_SHARD), ws, out);
+    par_bp_decode_into(ws, out);
 }
 
-/// Sharded fused quantize+dequantize in place with an explicit shard
-/// count — the server's staged-buffer batch path.
+/// Sharded fused b-posit32 quantize+dequantize in place with an explicit
+/// shard count.
 pub fn bp32_roundtrip_in_place_with(threads: usize, xs: &mut [f32]) {
-    for_each_block(threads, xs, |_, block| codec::bp32_roundtrip_in_place(block));
+    par_bp_roundtrip_in_place_with(threads, xs);
 }
 
-/// Sharded fused roundtrip in place (auto thread count).
+/// Sharded fused b-posit32 roundtrip in place (auto thread count).
 pub fn bp32_roundtrip_in_place(xs: &mut [f32]) {
-    bp32_roundtrip_in_place_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs);
+    par_bp_roundtrip_in_place(xs);
 }
 
-/// Sharded batched encode under any lane-codec-supported spec.
+/// Sharded batched encode under any 32-bit-lane-supported spec.
 pub fn encode_slice_into_with(threads: usize, spec: &PositSpec, xs: &[f32], out: &mut [u32]) {
-    assert_eq!(xs.len(), out.len(), "encode: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec::encode_slice_into(spec, &xs[off..off + block.len()], block);
-    });
+    par_encode_into_with(threads, spec, xs, out);
 }
 
-/// Sharded batched decode under any lane-codec-supported spec.
+/// Sharded batched decode under any 32-bit-lane-supported spec.
 pub fn decode_slice_into_with(threads: usize, spec: &PositSpec, ws: &[u32], out: &mut [f32]) {
-    assert_eq!(ws.len(), out.len(), "decode: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec::decode_slice_into(spec, &ws[off..off + block.len()], block);
-    });
+    par_decode_into_with(threads, spec, ws, out);
 }
-
-// ----------------------------------------------------------------------
-// Sharded 64-bit batch codec (b-posit64 serving format + any codec64
-// spec): same contiguous-block construction, so every entry point is
-// bit-identical to the serial codec64 path for any thread count.
-// ----------------------------------------------------------------------
 
 /// Sharded batched b-posit64 encode with an explicit shard count.
 pub fn bp64_encode_into_with(threads: usize, xs: &[f64], out: &mut [u64]) {
-    assert_eq!(xs.len(), out.len(), "encode64: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec64::bp64_encode_into(&xs[off..off + block.len()], block);
-    });
+    par_bp_encode_into_with(threads, xs, out);
 }
 
 /// Sharded batched b-posit64 encode (auto thread count).
 pub fn bp64_encode_into(xs: &[f64], out: &mut [u64]) {
-    bp64_encode_into_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs, out);
+    par_bp_encode_into(xs, out);
 }
 
 /// Sharded batched b-posit64 decode with an explicit shard count.
 pub fn bp64_decode_into_with(threads: usize, ws: &[u64], out: &mut [f64]) {
-    assert_eq!(ws.len(), out.len(), "decode64: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec64::bp64_decode_into(&ws[off..off + block.len()], block);
-    });
+    par_bp_decode_into_with(threads, ws, out);
 }
 
 /// Sharded batched b-posit64 decode (auto thread count).
 pub fn bp64_decode_into(ws: &[u64], out: &mut [f64]) {
-    bp64_decode_into_with(auto_shards(ws.len(), CODEC_MIN_SHARD), ws, out);
+    par_bp_decode_into(ws, out);
 }
 
 /// Sharded fused b-posit64 quantize+dequantize in place with an explicit
 /// shard count.
 pub fn bp64_roundtrip_in_place_with(threads: usize, xs: &mut [f64]) {
-    for_each_block(threads, xs, |_, block| codec64::bp64_roundtrip_in_place(block));
+    par_bp_roundtrip_in_place_with(threads, xs);
 }
 
 /// Sharded fused b-posit64 roundtrip in place (auto thread count).
 pub fn bp64_roundtrip_in_place(xs: &mut [f64]) {
-    bp64_roundtrip_in_place_with(auto_shards(xs.len(), CODEC_MIN_SHARD), xs);
+    par_bp_roundtrip_in_place(xs);
 }
 
 /// Sharded batched encode under any 64-bit-lane-supported spec.
 pub fn encode64_slice_into_with(threads: usize, spec: &PositSpec, xs: &[f64], out: &mut [u64]) {
-    assert_eq!(xs.len(), out.len(), "encode64: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec64::encode_slice_into(spec, &xs[off..off + block.len()], block);
-    });
+    par_encode_into_with(threads, spec, xs, out);
 }
 
 /// Sharded batched decode under any 64-bit-lane-supported spec.
 pub fn decode64_slice_into_with(threads: usize, spec: &PositSpec, ws: &[u64], out: &mut [f64]) {
-    assert_eq!(ws.len(), out.len(), "decode64: input/output length mismatch");
-    for_each_block(threads, out, |off, block| {
-        codec64::decode_slice_into(spec, &ws[off..off + block.len()], block);
-    });
+    par_decode_into_with(threads, spec, ws, out);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::vector::{codec, codec64};
 
     #[test]
     fn row_blocks_cover_exactly_once() {
@@ -353,6 +435,49 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn generic_par_family_matches_named_aliases() {
+        // One generic surface, two widths: the unified par_* entry points
+        // must agree bit-for-bit with the historical per-width names.
+        let mut rng = crate::testutil::Rng::new(0x9a11);
+        let xs32: Vec<f32> = (0..1009)
+            .map(|_| {
+                let v = f32::from_bits(rng.next_u32());
+                if v.is_finite() { v } else { -1.25 }
+            })
+            .collect();
+        let xs64: Vec<f64> = xs32.iter().map(|&v| v as f64).collect();
+        for t in [1usize, 3] {
+            let mut a = vec![0u32; xs32.len()];
+            let mut b = vec![0u32; xs32.len()];
+            par_encode_into_with(t, &crate::formats::posit::BP32, &xs32, &mut a);
+            bp32_encode_into_with(t, &xs32, &mut b);
+            assert_eq!(a, b, "32-bit t={t}");
+            let mut a64 = vec![0u64; xs64.len()];
+            let mut b64 = vec![0u64; xs64.len()];
+            par_encode_into_with(t, &crate::formats::posit::BP64, &xs64, &mut a64);
+            bp64_encode_into_with(t, &xs64, &mut b64);
+            assert_eq!(a64, b64, "64-bit t={t}");
+            let mut r32 = xs32.clone();
+            par_roundtrip_in_place_with(t, &crate::formats::posit::BP32, &mut r32);
+            let mut n32 = xs32.clone();
+            bp32_roundtrip_in_place_with(t, &mut n32);
+            assert_eq!(
+                r32.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                n32.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "roundtrip t={t}"
+            );
+        }
+        // Auto-shard generic forms cover the same paths.
+        let mut w = vec![0u32; xs32.len()];
+        par_encode_into(&crate::formats::posit::BP32, &xs32, &mut w);
+        let mut f = vec![0f32; xs32.len()];
+        par_decode_into(&crate::formats::posit::BP32, &w, &mut f);
+        let mut w2 = vec![0u32; xs32.len()];
+        par_bp_encode_into(&xs32, &mut w2);
+        assert_eq!(w, w2);
     }
 
     #[test]

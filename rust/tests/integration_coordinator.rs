@@ -350,6 +350,35 @@ fn weight_cache_shared_across_servers() {
 }
 
 #[test]
+fn weight_cache_counters_exported_over_http_metrics() {
+    // The PR-4 hit/miss counters must surface in the Prometheus render:
+    // starting a second server over the same weights is ≥ 2 cache hits
+    // (one per layer), and /metrics must report at least that. The
+    // counters are process-wide and monotone, so concurrent tests can
+    // only push them higher — the lower bounds stay race-free.
+    let w = synth_weights(9, 11, 4, 3, 0xcac4e);
+    let first = start_native(&w, ServerConfig::default());
+    let (h0, m0) = quantizer::weight_cache_stats();
+    assert!(m0 >= 2, "first load must miss (encode) both layers");
+    let second = Arc::new(start_native(&w, ServerConfig::default()));
+    drop(first);
+
+    let listener = http::serve("127.0.0.1:0", second.clone()).expect("bind ephemeral port");
+    let (status, text) = http::http_request(&listener.local_addr(), "GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    let hits = http::metric_value(&text, "positron_weight_cache_hits_total")
+        .expect("hits metric rendered");
+    let misses = http::metric_value(&text, "positron_weight_cache_misses_total")
+        .expect("misses metric rendered");
+    assert!(
+        hits >= (h0 + 2) as f64,
+        "second server sharing cached weights must hit both layers: {hits} < {} \n{text}",
+        h0 + 2
+    );
+    assert!(misses >= m0 as f64, "misses are monotone: {misses} < {m0}\n{text}");
+}
+
+#[test]
 fn native_server_loads_weights_json_from_disk() {
     // End-to-end through the ModelWeights::load_from_dir path: write a
     // synthetic weights.json, start the server from the directory.

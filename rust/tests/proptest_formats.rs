@@ -308,6 +308,50 @@ fn prop_named_order_preserved_under_twos_complement_compare() {
 }
 
 #[test]
+fn prop_generic_engine_and_dispatch_match_per_width_codecs() {
+    // The ISSUE-5 invariant: the width-generic lane engine and the routed
+    // dispatch handle are bit-identical to the per-width codec paths on
+    // every named serving format — generic ≡ named at both widths,
+    // through the *new* API.
+    use positron::vector::{codec, dispatch_spec, LaneCodec};
+    forall("generic engine ≡ named codecs", 300, |rng| {
+        for spec in NAMED_SPECS {
+            let x = rng.nasty_f64();
+            let w = rng.next_u64() & spec.mask();
+            // Routed handle ≡ the 64-bit lane path (its superset tier).
+            let dc = dispatch_spec(&spec);
+            if dc.encode_one(x) != codec64::encode_word(&spec, x) {
+                return Err(format!("{spec:?}: dispatch encode differs at {x:e}"));
+            }
+            let (a, b) = (dc.decode_one(w), codec64::decode_word(&spec, w));
+            if !(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())) {
+                return Err(format!("{spec:?}: dispatch decode differs at {w:#x}"));
+            }
+            // Generic engine at the 64-bit width ≡ the named module.
+            let c64 = LaneCodec::<f64>::new(spec).map_err(|e| e.to_string())?;
+            if c64.encode_word(x) != codec64::encode_word(&spec, x) {
+                return Err(format!("{spec:?}: engine encode differs at {x:e}"));
+            }
+            // Narrow specs: the 32-bit engine ≡ the named 32-bit module
+            // (f32 exchange contract).
+            if spec.n <= 32 {
+                let c32 = LaneCodec::<f32>::new(spec).map_err(|e| e.to_string())?;
+                let xf = x as f32;
+                if c32.encode_word(xf) != codec::encode_word(&spec, xf) {
+                    return Err(format!("{spec:?}: 32-bit engine encode differs at {xf:e}"));
+                }
+                let w32 = w as u32;
+                let (a, b) = (c32.decode_word(w32), codec::decode_word(&spec, w32));
+                if !(a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())) {
+                    return Err(format!("{spec:?}: 32-bit engine decode differs at {w32:#x}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_math_add_associates_with_exact_operands() {
     // With small-integer operands everything is exact, so association holds.
     forall("exact-int association", 200, |rng| {

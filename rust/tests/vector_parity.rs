@@ -18,7 +18,7 @@ use positron::coordinator::quantizer;
 use positron::formats::posit::{PositSpec, BP16, BP32, P16, P32};
 use positron::formats::Decoded;
 use positron::testutil::Rng;
-use positron::vector::{codec, kernels};
+use positron::vector::{codec, kernels, parallel, LaneCodec};
 
 /// f64 → f32 under the vector-codec contract (cast, then FTZ keeping sign).
 fn to_f32_contract(v: f64) -> f32 {
@@ -196,6 +196,88 @@ fn bp32_lane_bit_identical_to_scalar_fast_path() {
         assert_eq!(enc[i], codec::bp32_encode_lane(vals[i]), "slice encode lane {i}");
         let lane = codec::bp32_decode_lane(words[i]);
         assert_bits_eq(dec[i], lane, &format!("slice decode lane {i}"));
+    }
+}
+
+// ----------------------------------------------------------------------
+// Width-generic lane API (the ISSUE-5 test satellite, 32-bit half): the
+// generic engine must be the named BP32/P32 fast paths bitwise, and the
+// unified par_* entry points must be thread-count invariant.
+// ----------------------------------------------------------------------
+
+#[test]
+fn generic_engine_bit_identical_to_named_paths() {
+    let mut rng = Rng::new(0x1a32);
+    let bp = LaneCodec::<f32>::bp();
+    let p = LaneCodec::<f32>::pstd();
+    assert_eq!(bp.spec(), BP32);
+    assert_eq!(p.spec(), P32);
+    for _ in 0..100_000 {
+        let w = rng.next_u32();
+        let x = f32::from_bits(w);
+        assert_eq!(bp.encode_word(x), codec::bp32_encode_lane(x), "bp32 encode {w:#010x}");
+        assert_eq!(p.encode_word(x), codec::p32_encode_lane(x), "p32 encode {w:#010x}");
+        assert_bits_eq(bp.decode_word(w), codec::bp32_decode_lane(w), "bp32 decode");
+        assert_bits_eq(p.decode_word(w), codec::p32_decode_lane(w), "p32 decode");
+    }
+    // Slice drivers lane-for-lane, engine vs named, plus roundtrip.
+    let xs: Vec<f32> = (0..1003)
+        .map(|_| {
+            let v = f32::from_bits(rng.next_u32());
+            if v.is_finite() { v } else { 0.5 }
+        })
+        .collect();
+    let via_engine = bp.encode(&xs);
+    let mut named = vec![0u32; xs.len()];
+    codec::bp32_encode_into(&xs, &mut named);
+    assert_eq!(via_engine, named);
+    let back_engine = bp.decode(&named);
+    let mut back_named = vec![0f32; xs.len()];
+    codec::bp32_decode_into(&named, &mut back_named);
+    let mut rt = xs.clone();
+    bp.roundtrip_in_place(&mut rt);
+    for i in 0..xs.len() {
+        assert_bits_eq(back_engine[i], back_named[i], &format!("slice decode lane {i}"));
+        assert_bits_eq(rt[i], back_named[i], &format!("roundtrip lane {i}"));
+    }
+    // Spec-checked construction: the engine equals the checked generic
+    // entry points of the named module for an arbitrary supported spec.
+    let bp16 = LaneCodec::<f32>::new(BP16).unwrap();
+    for _ in 0..20_000 {
+        let x = f32::from_bits(rng.next_u32());
+        assert_eq!(bp16.encode_word(x), codec::encode_word(&BP16, x), "bp16 encode {x:e}");
+    }
+}
+
+#[test]
+fn unified_par_entry_points_thread_identity() {
+    let mut rng = Rng::new(0x7a32);
+    let xs: Vec<f32> = (0..10_007)
+        .map(|_| {
+            let v = f32::from_bits(rng.next_u32());
+            if v.is_finite() { v } else { -2.5 }
+        })
+        .collect();
+    let bp = LaneCodec::<f32>::bp();
+    let serial_w = bp.encode(&xs);
+    let mut serial_f = vec![0f32; xs.len()];
+    bp.decode_into(&serial_w, &mut serial_f);
+    for t in [1usize, 2, 7] {
+        let mut w = vec![0u32; xs.len()];
+        parallel::par_encode_into_with(t, &BP32, &xs, &mut w);
+        assert_eq!(w, serial_w, "generic-spec encode t={t}");
+        parallel::par_bp_encode_into_with(t, &xs, &mut w);
+        assert_eq!(w, serial_w, "serving-spec encode t={t}");
+        let mut f = vec![0f32; xs.len()];
+        parallel::par_decode_into_with(t, &BP32, &serial_w, &mut f);
+        for i in 0..f.len() {
+            assert_bits_eq(f[i], serial_f[i], &format!("decode t={t} lane {i}"));
+        }
+        let mut rt = xs.clone();
+        parallel::par_roundtrip_in_place_with(t, &BP32, &mut rt);
+        for i in 0..rt.len() {
+            assert_bits_eq(rt[i], serial_f[i], &format!("roundtrip t={t} lane {i}"));
+        }
     }
 }
 

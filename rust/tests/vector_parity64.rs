@@ -21,7 +21,7 @@ use positron::coordinator::quantizer;
 use positron::formats::posit::{PositSpec, BP64, P64};
 use positron::formats::{Decoded, Quire};
 use positron::testutil::{mixed_scale_f64, Rng};
-use positron::vector::{codec64, gemm, kernels, parallel};
+use positron::vector::{codec64, gemm, kernels, parallel, EncodedTensor, LaneCodec};
 
 fn assert_bits_eq64(got: f64, want: f64, ctx: &str) {
     if want.is_nan() {
@@ -394,6 +394,114 @@ fn thread_bit_identity_codec64_and_f64_kernels() {
             y_w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "gemv bp64 t={t}"
         );
+    }
+}
+
+// ----------------------------------------------------------------------
+// Width-generic lane API (the ISSUE-5 test satellite, 64-bit half): the
+// generic engine must be the named BP64/P64 fast paths bitwise, the
+// unified par_* entry points must be thread-count invariant, and the
+// typed EncodedTensor boundary must carry the serving layout losslessly.
+// ----------------------------------------------------------------------
+
+#[test]
+fn generic_engine_bit_identical_to_named_paths_64() {
+    let mut rng = Rng::new(0x1a64);
+    let bp = LaneCodec::<f64>::bp();
+    let p = LaneCodec::<f64>::pstd();
+    assert_eq!(bp.spec(), BP64);
+    assert_eq!(p.spec(), P64);
+    for _ in 0..100_000 {
+        let w = rng.next_u64();
+        let x = f64::from_bits(w);
+        assert_eq!(bp.encode_word(x), codec64::bp64_encode_lane(x), "bp64 encode {w:#018x}");
+        assert_eq!(p.encode_word(x), codec64::p64_encode_lane(x), "p64 encode {w:#018x}");
+        assert_bits_eq64(bp.decode_word(w), codec64::bp64_decode_lane(w), "bp64 decode");
+        assert_bits_eq64(p.decode_word(w), codec64::p64_decode_lane(w), "p64 decode");
+    }
+    // Slice drivers lane-for-lane, engine vs named, plus roundtrip.
+    let xs: Vec<f64> = (0..1003)
+        .map(|_| {
+            let v = f64::from_bits(rng.next_u64());
+            if v.is_finite() { v } else { 0.5 }
+        })
+        .collect();
+    let via_engine = bp.encode(&xs);
+    let mut named = vec![0u64; xs.len()];
+    codec64::bp64_encode_into(&xs, &mut named);
+    assert_eq!(via_engine, named);
+    let back_engine = bp.decode(&named);
+    let mut back_named = vec![0f64; xs.len()];
+    codec64::bp64_decode_into(&named, &mut back_named);
+    let mut rt = xs.clone();
+    bp.roundtrip_in_place(&mut rt);
+    for i in 0..xs.len() {
+        assert_bits_eq64(back_engine[i], back_named[i], &format!("slice decode lane {i}"));
+        assert_bits_eq64(rt[i], back_named[i], &format!("roundtrip lane {i}"));
+    }
+    // Arbitrary supported spec: engine ≡ the named module's checked
+    // generic entry points.
+    let w48 = PositSpec::bounded(48, 6, 5);
+    let c48 = LaneCodec::<f64>::new(w48).unwrap();
+    for _ in 0..20_000 {
+        let x = f64::from_bits(rng.next_u64());
+        assert_eq!(c48.encode_word(x), codec64::encode_word(&w48, x), "⟨48,6,5⟩ encode {x:e}");
+    }
+}
+
+#[test]
+fn unified_par_entry_points_thread_identity_64() {
+    let mut rng = Rng::new(0x7a64b);
+    let xs: Vec<f64> = (0..10_007)
+        .map(|_| {
+            let v = f64::from_bits(rng.next_u64());
+            if v.is_finite() { v } else { -2.5 }
+        })
+        .collect();
+    let bp = LaneCodec::<f64>::bp();
+    let serial_w = bp.encode(&xs);
+    let mut serial_f = vec![0f64; xs.len()];
+    bp.decode_into(&serial_w, &mut serial_f);
+    for t in [1usize, 2, 7] {
+        let mut w = vec![0u64; xs.len()];
+        parallel::par_encode_into_with(t, &BP64, &xs, &mut w);
+        assert_eq!(w, serial_w, "generic-spec encode t={t}");
+        parallel::par_bp_encode_into_with(t, &xs, &mut w);
+        assert_eq!(w, serial_w, "serving-spec encode t={t}");
+        let mut f = vec![0f64; xs.len()];
+        parallel::par_decode_into_with(t, &BP64, &serial_w, &mut f);
+        for i in 0..f.len() {
+            assert_bits_eq64(f[i], serial_f[i], &format!("decode t={t} lane {i}"));
+        }
+        let mut rt = xs.clone();
+        parallel::par_roundtrip_in_place_with(t, &BP64, &mut rt);
+        for i in 0..rt.len() {
+            assert_bits_eq64(rt[i], serial_f[i], &format!("roundtrip t={t} lane {i}"));
+        }
+    }
+}
+
+#[test]
+fn encoded_tensor_serving_layout_is_lossless_64() {
+    // In-range f64 weights are exactly representable in ⟨64,6,5⟩, so the
+    // typed tensor boundary must reproduce them bit-for-bit, and the
+    // typed GEMM entry point must equal the raw-slice fast path.
+    let mut rng = Rng::new(0xe764);
+    let (m, k, n) = (9usize, 21usize, 6usize);
+    let w = mixed_scale_f64(&mut rng, m * k, 61);
+    let t = EncodedTensor::<f64>::encode_bp(m, k, &w).unwrap();
+    let mut back = vec![0f64; m * k];
+    t.decode_into(&mut back);
+    for i in 0..w.len() {
+        assert_bits_eq64(back[i], w[i], &format!("weight {i}"));
+    }
+    let b = mixed_scale_f64(&mut rng, k * n, 61);
+    let mut c_typed = vec![0f64; m * n];
+    gemm::par_gemm_encoded_fast(&t, &b, &mut c_typed, n);
+    let mut c_raw = vec![0f64; m * n];
+    gemm::par_gemm_bp64_weights_fast(t.words(), &b, &mut c_raw, m, k, n);
+    for i in 0..c_typed.len() {
+        assert_bits_eq64(c_typed[i], c_raw[i], &format!("logit {i}"));
     }
 }
 
