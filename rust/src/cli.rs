@@ -40,6 +40,10 @@ pub struct ServeOpts {
     pub deadline_ms: Option<u64>,
     /// Serve a deterministic synthetic model (no artifacts needed).
     pub synthetic: bool,
+    /// Record request/batch spans for `GET /debug/tracez` (on by
+    /// default; `--no-tracing` turns span retention off — histograms
+    /// and counters stay on either way).
+    pub tracing: bool,
 }
 
 /// `serve-bench` options.
@@ -168,6 +172,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                 http: None,
                 deadline_ms: None,
                 synthetic: false,
+                tracing: true,
             };
             while let Some(a) = it.next() {
                 match a.as_str() {
@@ -190,6 +195,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                         o.deadline_ms = Some(arg.parse().map_err(|e| e.to_string())?)
                     }
                     "--synthetic" => o.synthetic = true,
+                    "--no-tracing" => o.tracing = false,
                     other => return Err(format!("serve: unknown flag {other}")),
                 }
             }
@@ -288,16 +294,22 @@ COMMANDS:
                              writes BENCH_vector_gemm.json by default
   serve [--requests N] [--artifacts DIR] [--backend native|pjrt]
         [--format bp32|f32|bp64] [--http ADDR:PORT] [--deadline-ms N] [--synthetic]
+        [--no-tracing]
                              inference server on the in-tree native backend
                              (default; needs only weights.json) or PJRT;
-                             --http serves GET /metrics, GET /healthz and
-                             POST /infer on a real listener; --synthetic
-                             serves a deterministic model with no artifacts
+                             --http serves GET /metrics, GET /healthz,
+                             POST /infer and GET /debug/tracez (per-request
+                             spans, ?min_us= / ?limit=) on a real listener;
+                             --synthetic serves a deterministic model with
+                             no artifacts; --no-tracing turns span
+                             retention off (histograms stay on)
   serve-bench [--requests N] [--clients N] [--format bp32|f32|bp64] [--small]
         [--json PATH | --no-json]
                              e2e native serving bench: in-process + HTTP
                              logits parity vs the scalar reference (hard
-                             gate), then closed-loop throughput; writes
+                             gate), then closed-loop throughput and a
+                             tracing-overhead measurement (spans on vs
+                             off, logits bit-compared); writes
                              BENCH_serve_native.json by default
   help                       this message
 ";
@@ -832,6 +844,42 @@ pub fn run_gemm_bench(
     Ok(out)
 }
 
+/// Drive `requests` closed-loop inferences from `clients` threads over
+/// the golden rows of `w`, returning `(completed, req_per_s)`. Shared by
+/// the throughput and tracing-overhead sections of `serve-bench`.
+fn closed_loop(
+    server: &std::sync::Arc<crate::coordinator::InferenceServer>,
+    w: &crate::runtime::ModelWeights,
+    clients: usize,
+    requests: usize,
+) -> (usize, f64) {
+    let d = w.d;
+    let per_client = requests.div_ceil(clients.max(1));
+    let t0 = std::time::Instant::now();
+    let mut done = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for cid in 0..clients.max(1) {
+            let srv = server.clone();
+            handles.push(s.spawn(move || {
+                let mut ok = 0usize;
+                for i in 0..per_client {
+                    let g = (cid * 31 + i) % w.batch;
+                    let feats = w.golden_x[g * d..(g + 1) * d].to_vec();
+                    if srv.infer(feats).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        for hnd in handles {
+            done += hnd.join().unwrap();
+        }
+    });
+    (done, done as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
 /// Execute `serve-bench`: the end-to-end native serving benchmark.
 ///
 /// Starts the server on the native backend over a deterministic
@@ -840,18 +888,26 @@ pub fn run_gemm_bench(
 ///    logits must be *bit-identical* to the scalar reference forward
 ///    pass ([`crate::coordinator::backend::reference_forward`]).
 /// 2. **HTTP round-trip** — a real listener on an ephemeral port serves
-///    `POST /infer` (logits must survive the JSON round-trip bit-exactly)
-///    and `GET /metrics` (must report a non-zero batch count).
+///    `POST /infer` (logits must survive the JSON round-trip bit-exactly
+///    and the response must echo a trace id), `GET /metrics` (must
+///    report a non-zero batch count), `GET /debug/tracez` (must return
+///    retained spans), and an unknown debug path (must 404).
 /// 3. **Closed-loop throughput** — `clients` threads × `requests` total,
 ///    reported as req/s with latency quantiles and the codec/execute
 ///    split.
+/// 4. **Tracing overhead** — two fresh servers over a standard-shaped
+///    model (d=64, h=128, c=16 regardless of `--small`, so the numbers
+///    are comparable across runs), span retention on vs off, rounds
+///    interleaved and best-of kept; logits from both must be
+///    bit-identical to the scalar reference (`tracing_parity`).
 ///
-/// Either gate failing is a hard error (non-zero exit), and both flags
-/// are recorded in `BENCH_serve_native.json` for the CI bench gate.
+/// The parity/HTTP gates failing is a hard error (non-zero exit); all
+/// flags and the overhead percentage are recorded in
+/// `BENCH_serve_native.json` for the CI bench gate.
 pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
     use crate::coordinator::{backend, http, InferenceServer, ServerConfig};
     use std::sync::Arc;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     if let Some(path) = &o.json {
         ensure_json_writable(path)?;
@@ -897,71 +953,115 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
             http_ok = false;
             continue;
         }
-        let logits = crate::json::Json::parse(&resp)
-            .ok()
+        let j = crate::json::Json::parse(&resp).ok();
+        let logits = j
+            .as_ref()
             .and_then(|j| j.get("logits").and_then(|l| l.as_f32_vec()))
             .unwrap_or_default();
         let want = backend::reference_forward(&w, o.format, &backend::stage_inputs(o.format, x));
         http_ok &= logits.len() == want.len()
             && logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+        // The response must echo a nonzero trace id for tracez correlation.
+        http_ok &= j
+            .as_ref()
+            .and_then(|j| j.get("trace_id").and_then(|t| t.as_f64()))
+            .is_some_and(|t| t >= 1.0);
     }
     let (mstatus, mbody) = http::http_request(&addr, "GET", "/metrics", "")?;
     http_ok &= mstatus == 200
-        && http::metric_value(&mbody, "positron_batches_total").is_some_and(|v| v >= 1.0);
+        && http::metric_value(&mbody, "positron_batches_total").is_some_and(|v| v >= 1.0)
+        && mbody.contains("positron_request_latency_us_bucket");
+    let (tstatus, tbody) = http::http_request(&addr, "GET", "/debug/tracez", "")?;
+    http_ok &= tstatus == 200 && tbody.contains("\"trace_id\"");
+    let (nstatus, _) = http::http_request(&addr, "GET", "/debug/nope", "")?;
+    http_ok &= nstatus == 404;
     out.push(format!(
-        "HTTP round-trip on {addr} (/infer bit-exact + /metrics live): {}",
+        "HTTP round-trip on {addr} (/infer bit-exact + trace_id, /metrics live, \
+         /debug/tracez live, unknown debug 404): {}",
         if http_ok { "ok" } else { "FAILED" }
     ));
     drop(listener);
 
     // 3. Closed-loop throughput.
-    let per_client = o.requests.div_ceil(o.clients);
-    let t0 = Instant::now();
-    let mut done = 0usize;
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for cid in 0..o.clients {
-            let srv = server.clone();
-            let wref = &w;
-            handles.push(s.spawn(move || {
-                let mut ok = 0usize;
-                for i in 0..per_client {
-                    let g = (cid * 31 + i) % wref.batch;
-                    let feats = wref.golden_x[g * d..(g + 1) * d].to_vec();
-                    if srv.infer(feats).is_ok() {
-                        ok += 1;
-                    }
-                }
-                ok
-            }));
-        }
-        for hnd in handles {
-            done += hnd.join().unwrap();
-        }
-    });
-    let wall = t0.elapsed().as_secs_f64();
+    let (done, req_per_s) = closed_loop(&server, &w, o.clients, o.requests);
     let snap = server.metrics().snapshot();
-    let req_per_s = done as f64 / wall.max(1e-9);
     out.push(format!(
         "closed loop: {done} requests, {} clients, {req_per_s:.0} req/s \
          (p50 {} µs, p99 {} µs, max {} µs, mean batch {:.1})",
         o.clients, snap.p50_us, snap.p99_us, snap.max_us, snap.mean_batch
     ));
     out.push(format!(
-        "codec {:.1} µs/batch, execute {:.1} µs/batch over {} batches",
+        "codec {:.1} µs/batch, execute {:.1} µs/batch over {} batches \
+         (queue wait p50 {} µs, p99 {} µs)",
         snap.codec_ns_per_batch() / 1e3,
         snap.execute_ns_per_batch() / 1e3,
-        snap.batches
+        snap.batches,
+        snap.hist_queue_us.quantile(0.5),
+        snap.hist_queue_us.quantile(0.99),
+    ));
+
+    // 4. Tracing overhead: span retention on vs off. The model shape is
+    //    fixed (standard, not --small) so the percentage is comparable
+    //    across runs; --small only trims the request count to keep the
+    //    test smoke fast.
+    let (od, oh, oc, obatch) = (64usize, 128usize, 16usize, 64usize);
+    let oreq = if o.small { 128 } else { 512 };
+    let ow = backend::synth_weights(od, oh, oc, obatch, 0x0b5e);
+    let mk = |tracing: bool| -> Result<Arc<InferenceServer>, String> {
+        let cfg = ServerConfig {
+            max_wait: Duration::from_micros(500),
+            tracing,
+            ..ServerConfig::for_format(o.format)
+        };
+        Ok(Arc::new(InferenceServer::start_native(ow.clone(), cfg).map_err(|e| format!("{e:#}"))?))
+    };
+    let traced = mk(true)?;
+    let untraced = mk(false)?;
+    // Observability must never perturb the result: logits from both
+    // servers must be bit-identical to the scalar reference.
+    let mut tracing_parity = true;
+    for g in 0..obatch {
+        let x = ow.golden_x[g * od..(g + 1) * od].to_vec();
+        let want =
+            backend::reference_forward(&ow, o.format, &backend::stage_inputs(o.format, &x));
+        let a = traced.infer(x.clone()).map_err(|e| format!("{e:#}"))?;
+        let b = untraced.infer(x).map_err(|e| format!("{e:#}"))?;
+        tracing_parity &= a.logits.iter().zip(&want).all(|(p, q)| p.to_bits() == q.to_bits())
+            && b.logits.iter().zip(&want).all(|(p, q)| p.to_bits() == q.to_bits());
+    }
+    // The traced server must actually retain spans; the untraced one none.
+    tracing_parity &= traced.tracer().pushed() > 0 && untraced.tracer().pushed() == 0;
+    // Interleave (on, off) rounds and keep the best of each so scheduler
+    // noise doesn't masquerade as tracing cost.
+    let (mut best_on, mut best_off) = (0.0f64, 0.0f64);
+    for _ in 0..2 {
+        let (_, r_on) = closed_loop(&traced, &ow, o.clients, oreq);
+        let (_, r_off) = closed_loop(&untraced, &ow, o.clients, oreq);
+        best_on = best_on.max(r_on);
+        best_off = best_off.max(r_off);
+    }
+    // Raw difference — may be negative when the traced run wins on noise.
+    let tracing_overhead_pct = (best_off - best_on) / best_off.max(1e-9) * 100.0;
+    out.push(format!(
+        "tracing overhead: {best_on:.0} req/s traced vs {best_off:.0} req/s untraced \
+         ({tracing_overhead_pct:+.2}%); logits {}",
+        if tracing_parity { "bit-identical with tracing on/off" } else { "DIFFER — BUG" }
     ));
 
     if let Some(path) = &o.json {
+        let batches = snap.batches.max(1) as f64;
         let json = format!(
             "{{\"bench\":\"serve_native\",\"format\":\"{}\",\"small\":{},\"d\":{d},\"h\":{h},\
              \"c\":{c},\"requests\":{},\"clients\":{},\"parity\":{parity},\
              \"http_roundtrip\":{http_ok},\"req_per_s\":{req_per_s:.1},\
-             \"p50_us\":{},\"p99_us\":{},\"max_us\":{},\"mean_batch\":{:.3},\
+             \"p50_us\":{},\"p99_us\":{},\"max_us\":{},\
+             \"queue_wait_p50_us\":{},\"queue_wait_p99_us\":{},\"mean_batch\":{:.3},\
              \"batches\":{},\"rejected\":{},\"codec_ns_per_batch\":{:.0},\
-             \"execute_ns_per_batch\":{:.0},\"threads\":{}}}",
+             \"execute_ns_per_batch\":{:.0},\"staging_ns_per_batch\":{:.0},\
+             \"readout_ns_per_batch\":{:.0},\"codec_worker_ns_total\":{},\
+             \"req_per_s_traced\":{best_on:.1},\"req_per_s_untraced\":{best_off:.1},\
+             \"tracing_overhead_pct\":{tracing_overhead_pct:.2},\
+             \"tracing_parity\":{tracing_parity},\"threads\":{}}}",
             o.format.name(),
             o.small,
             done,
@@ -969,11 +1069,16 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
             snap.p50_us,
             snap.p99_us,
             snap.max_us,
+            snap.hist_queue_us.quantile(0.5),
+            snap.hist_queue_us.quantile(0.99),
             snap.mean_batch,
             snap.batches,
             snap.rejected,
             snap.codec_ns_per_batch(),
             snap.execute_ns_per_batch(),
+            snap.staging_ns as f64 / batches,
+            snap.readout_ns as f64 / batches,
+            snap.codec_worker_ns,
             snap.codec_threads,
         );
         std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
@@ -983,7 +1088,7 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
         return Err("native backend logits differ from scalar reference — parity broken".into());
     }
     if !http_ok {
-        return Err("HTTP round-trip failed (status, parity, or /metrics)".into());
+        return Err("HTTP round-trip failed (status, parity, /metrics, or /debug/tracez)".into());
     }
     Ok(out)
 }
@@ -1071,6 +1176,7 @@ mod tests {
             "--deadline-ms",
             "250",
             "--synthetic",
+            "--no-tracing",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -1082,15 +1188,17 @@ mod tests {
                 assert_eq!(o.http.as_deref(), Some("127.0.0.1:0"));
                 assert_eq!(o.deadline_ms, Some(250));
                 assert!(o.synthetic);
+                assert!(!o.tracing);
             }
             other => panic!("unexpected parse: {other:?}"),
         }
-        // Defaults: native backend, bp32 weights, no listener.
+        // Defaults: native backend, bp32 weights, no listener, tracing on.
         match parse(&["serve".to_string()]).unwrap() {
             Command::Serve(o) => {
                 assert_eq!(o.backend, BackendKind::Native);
                 assert_eq!(o.format, WeightFormat::Bp32);
                 assert!(o.http.is_none() && o.deadline_ms.is_none() && !o.synthetic);
+                assert!(o.tracing);
             }
             other => panic!("unexpected parse: {other:?}"),
         }

@@ -38,6 +38,7 @@
 
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::error::{anyhow, Result};
 use crate::formats::posit::{BP32, BP64};
@@ -47,6 +48,7 @@ use crate::vector::lane::{EncodedTensor, LaneElem};
 use crate::vector::{gemm, kernels};
 
 use super::quantizer;
+use super::trace::{Stage, StageTimer};
 
 /// How the served model's weight tensors are stored and multiplied.
 /// Replaces the old `model_file.contains("f32")` string sniffing with an
@@ -152,6 +154,16 @@ pub trait InferenceBackend {
     fn max_batch(&self) -> usize;
     /// Execute one staged batch; returns row-major `rows×c` logits.
     fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]>;
+    /// [`InferenceBackend::run`] plus per-stage timing: backends that can
+    /// attribute their work add `Execute`/`Readout` (and `Staging`)
+    /// nanoseconds to `timer`. The default ignores the timer so external
+    /// backends need no changes — the worker loop falls back to charging
+    /// the whole call to `Execute`. Must return bit-identical logits to
+    /// `run` (observability never changes the numeric path).
+    fn run_traced(&mut self, x: &[f32], rows: usize, timer: &mut StageTimer) -> Result<&[f32]> {
+        let _ = timer;
+        self.run(x, rows)
+    }
 }
 
 /// One quantized serving tier at lane width `E`: the two transposed
@@ -245,11 +257,25 @@ fn transpose_map<S: Copy, D: Copy>(
     }
 }
 
+/// Advance a stage boundary: charge the time since `*t` to `stage` and
+/// reset the boundary. A `None` timer skips the clock read entirely, so
+/// the untraced path pays nothing inside the layer pipeline.
+fn mark(timer: &mut Option<&mut StageTimer>, stage: Stage, t: &mut Instant) {
+    if let Some(tm) = timer.as_deref_mut() {
+        let now = Instant::now();
+        tm.add_duration(stage, now.duration_since(*t));
+        *t = now;
+    }
+}
+
 /// One generic quantized dense-layer pipeline: stage the f32 batch into
 /// the tier's transposed activation buffer, run both layers on the
 /// decode-fused blocked GEMM through the typed weight tensors, and read
 /// the logits back out request-major as f32. `E = f32` is the BP32 tier,
-/// `E = f64` the BP64 tier — the same routine, monomorphized.
+/// `E = f64` the BP64 tier — the same routine, monomorphized. With a
+/// timer, the transpose-in is charged to `Staging`, the GEMM+epilogue
+/// pair to `Execute`, and the transpose-out to `Readout` — timing sits
+/// at stage boundaries only, never inside lane loops.
 fn run_lane_tier<E: LaneElem>(
     st: &mut LaneState<E>,
     x: &[f32],
@@ -258,17 +284,22 @@ fn run_lane_tier<E: LaneElem>(
     h: usize,
     c: usize,
     out: &mut Vec<f32>,
+    mut timer: Option<&mut StageTimer>,
 ) {
+    let mut t = Instant::now();
     st.xt.resize(d * rows, E::ZERO);
     transpose_map(x, &mut st.xt, rows, d, E::from_f32);
+    mark(&mut timer, Stage::Staging, &mut t);
     st.ht.resize(h * rows, E::ZERO);
     gemm::par_gemm_encoded_fast(&st.wt1, &st.xt, &mut st.ht, rows);
     kernels::bias_relu_rows(&mut st.ht, &st.b1, h, rows);
     st.lt.resize(c * rows, E::ZERO);
     gemm::par_gemm_encoded_fast(&st.wt2, &st.ht, &mut st.lt, rows);
     kernels::bias_rows(&mut st.lt, &st.b2, c, rows);
+    mark(&mut timer, Stage::Execute, &mut t);
     out.resize(rows * c, 0.0);
     transpose_map(&st.lt, &mut out[..], c, rows, E::to_f32);
+    mark(&mut timer, Stage::Readout, &mut t);
 }
 
 impl NativeBackend {
@@ -407,24 +438,46 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]> {
+        self.run_inner(x, rows, None)
+    }
+
+    fn run_traced(&mut self, x: &[f32], rows: usize, timer: &mut StageTimer) -> Result<&[f32]> {
+        self.run_inner(x, rows, Some(timer))
+    }
+}
+
+impl NativeBackend {
+    /// Shared body of `run`/`run_traced`: the timer only adds clock reads
+    /// at stage boundaries, so both entry points execute the identical
+    /// numeric pipeline (traced logits are bit-identical by construction).
+    fn run_inner(
+        &mut self,
+        x: &[f32],
+        rows: usize,
+        mut timer: Option<&mut StageTimer>,
+    ) -> Result<&[f32]> {
         let (d, h, c) = (self.d, self.h, self.c);
         if x.len() != rows * d {
             return Err(anyhow!("native backend: {} values staged for {rows}×{d}", x.len()));
         }
         match &mut self.layers {
-            Layers::Bp32(st) => run_lane_tier(st, x, rows, d, h, c, &mut self.out),
-            Layers::Bp64(st) => run_lane_tier(st, x, rows, d, h, c, &mut self.out),
+            Layers::Bp32(st) => run_lane_tier(st, x, rows, d, h, c, &mut self.out, timer),
+            Layers::Bp64(st) => run_lane_tier(st, x, rows, d, h, c, &mut self.out, timer),
             Layers::F32 { wt1, wt2, b1, b2 } => {
+                let mut t = Instant::now();
                 self.xt.resize(d * rows, 0.0);
                 gemm::transpose(x, &mut self.xt, rows, d);
+                mark(&mut timer, Stage::Staging, &mut t);
                 self.ht.resize(h * rows, 0.0);
                 gemm::par_gemm_f32(wt1.as_slice(), &self.xt, &mut self.ht, h, d, rows);
                 kernels::bias_relu_rows(&mut self.ht, b1, h, rows);
                 self.lt.resize(c * rows, 0.0);
                 gemm::par_gemm_f32(wt2.as_slice(), &self.ht, &mut self.lt, c, h, rows);
                 kernels::bias_rows(&mut self.lt, b2, c, rows);
+                mark(&mut timer, Stage::Execute, &mut t);
                 self.out.resize(rows * c, 0.0);
                 gemm::transpose(&self.lt, &mut self.out, c, rows);
+                mark(&mut timer, Stage::Readout, &mut t);
             }
         }
         Ok(&self.out[..rows * c])
@@ -521,6 +574,17 @@ impl InferenceBackend for PjrtBackend {
 pub fn stage_inputs_in_place(format: WeightFormat, xs: &mut [f32]) {
     if format.quantizes_inputs() {
         quantizer::roundtrip_in_place(xs);
+    }
+}
+
+/// [`stage_inputs_in_place`] plus summed per-thread codec worker
+/// nanoseconds (0 for identity formats). Same shard split as the untimed
+/// path, so the staged values are bit-identical for any thread count.
+pub fn stage_inputs_in_place_timed(format: WeightFormat, xs: &mut [f32]) -> u64 {
+    if format.quantizes_inputs() {
+        quantizer::roundtrip_in_place_timed(xs)
+    } else {
+        0
     }
 }
 
@@ -803,6 +867,55 @@ mod tests {
         let mut bad2 = w.clone();
         bad2.b1.pop();
         assert!(NativeBackend::from_weights(&bad2, WeightFormat::F32).is_err());
+    }
+
+    #[test]
+    fn run_traced_is_bit_identical_and_attributes_stages() {
+        let w = synth_weights(6, 9, 4, 5, 0x7ace);
+        for format in [WeightFormat::Bp32, WeightFormat::F32, WeightFormat::Bp64] {
+            let mut be = NativeBackend::from_weights(&w, format).unwrap();
+            let plain = be.run(&w.golden_x, w.batch).unwrap().to_vec();
+            let mut timer = StageTimer::default();
+            let traced = be.run_traced(&w.golden_x, w.batch, &mut timer).unwrap().to_vec();
+            assert_eq!(
+                plain.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                traced.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{}: tracing must not change logits",
+                format.name()
+            );
+            // The native backend attributes Staging/Execute/Readout and
+            // nothing else; Execute dominates the layer pipeline.
+            assert!(timer.get(Stage::Execute) > 0, "{}", format.name());
+            assert_eq!(timer.get(Stage::QueueWait), 0);
+            assert_eq!(timer.get(Stage::InputCodec), 0);
+            assert_eq!(
+                timer.sum(),
+                timer.get(Stage::Staging) + timer.get(Stage::Execute) + timer.get(Stage::Readout),
+                "{}: only the three backend stages may be charged",
+                format.name()
+            );
+        }
+    }
+
+    #[test]
+    fn stage_inputs_timed_matches_untimed_bitwise() {
+        let xs: Vec<f32> = (0..4096).map(|i| (i as f32 - 2048.0) * 0.173).collect();
+        let mut a = xs.clone();
+        let mut b = xs.clone();
+        stage_inputs_in_place(WeightFormat::Bp32, &mut a);
+        let ns = stage_inputs_in_place_timed(WeightFormat::Bp32, &mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(ns > 0, "quantizing formats must report worker time");
+        let mut c = xs.clone();
+        assert_eq!(stage_inputs_in_place_timed(WeightFormat::F32, &mut c), 0);
+        assert_eq!(
+            c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "identity formats stay identities under timing"
+        );
     }
 
     #[test]

@@ -6,15 +6,24 @@
 //!   [`super::MetricsSnapshot::render`].
 //! - `GET /healthz` — liveness probe (`ok`).
 //! - `POST /infer` — body `{"features":[…]}`; replies
-//!   `{"logits":[…],"latency_us":N}`. Infer errors map to status codes:
-//!   bad request → 400, queue full (backpressure) → 503, deadline → 504,
-//!   backend failure → 500.
+//!   `{"logits":[…],"latency_us":N,"trace_id":N}` (the trace id
+//!   correlates with the request's span in `/debug/tracez`). Infer
+//!   errors map to status codes: bad request → 400, queue full
+//!   (backpressure) → 503, deadline → 504, backend failure → 500.
+//! - `GET /debug/tracez` — the span ring as JSON, filterable by
+//!   `?min_us=` (drop spans faster than this) and `?limit=` (newest-N);
+//!   unknown `/debug/*` paths 404 like any other route.
 //!
 //! One accept thread, one short-lived thread per connection
 //! (connections are `Connection: close`; the real concurrency limit is
 //! the server's bounded queue, which turns overload into 503s rather
 //! than unbounded threads). Request heads are capped at 16 KiB and
 //! bodies at 4 MiB; reads time out so a stalled peer can't pin a thread.
+//! Connections and responses (by status class) are counted into
+//! [`super::Metrics`]; successful `/infer` requests complete their trace
+//! span *here* — after the response bytes are written — so the span's
+//! serialize/write stages and total wall time cover the full HTTP
+//! lifetime, not just the inference.
 //!
 //! Float fidelity: logits are rendered with Rust's shortest-roundtrip
 //! float formatting and parsed back via f64, which is lossless for every
@@ -25,12 +34,13 @@ use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Context, Result};
 use crate::json::Json;
 
 use super::server::{InferError, InferenceServer};
+use super::trace::{SpanRecord, Stage, StageTimer, TRACE_RING_CAP};
 
 const MAX_HEAD_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
@@ -70,6 +80,7 @@ pub fn serve(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
                     continue;
                 }
             };
+            server.metrics().record_http_conn_open();
             if active.load(Ordering::SeqCst) >= MAX_CONN_THREADS {
                 let body = error_body("too many connections");
                 let _ = write_response(
@@ -79,6 +90,8 @@ pub fn serve(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
                     "application/json",
                     &body,
                 );
+                server.metrics().record_http_response(503);
+                server.metrics().record_http_conn_close();
                 continue;
             }
             active.fetch_add(1, Ordering::SeqCst);
@@ -86,6 +99,7 @@ pub fn serve(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
             let act = active.clone();
             std::thread::spawn(move || {
                 handle_conn(stream, &srv);
+                srv.metrics().record_http_conn_close();
                 act.fetch_sub(1, Ordering::SeqCst);
             });
         }
@@ -130,52 +144,101 @@ impl Drop for HttpServer {
 struct HttpRequest {
     method: String,
     path: String,
+    /// Raw query string after `?` (empty when absent).
+    query: String,
     body: Vec<u8>,
 }
 
-fn handle_conn(mut stream: TcpStream, srv: &InferenceServer) {
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-    let _ = stream.set_nodelay(true);
-    let (status, reason, ctype, body) = match read_request(&mut stream) {
-        Ok(req) => route(&req, srv),
-        Err(e) => (400, "Bad Request", "application/json", error_body(&e)),
-    };
-    let _ = write_response(&mut stream, status, reason, ctype, &body);
+/// One routed response plus, for successful `/infer` requests, the trace
+/// span to complete and retain after the bytes hit the socket.
+struct Reply {
+    status: u16,
+    reason: &'static str,
+    ctype: &'static str,
+    body: String,
+    span: Option<SpanRecord>,
 }
 
-fn route(req: &HttpRequest, srv: &InferenceServer) -> (u16, &'static str, &'static str, String) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/metrics") => {
-            (200, "OK", "text/plain; version=0.0.4", srv.metrics().snapshot().render())
-        }
-        ("GET", "/healthz") => (200, "OK", "text/plain", "ok\n".to_string()),
-        ("POST", "/infer") => infer_route(req, srv),
-        _ => (404, "Not Found", "application/json", error_body("no such route")),
+impl Reply {
+    fn new(status: u16, reason: &'static str, ctype: &'static str, body: String) -> Reply {
+        Reply { status, reason, ctype, body, span: None }
     }
 }
 
-fn infer_route(
-    req: &HttpRequest,
-    srv: &InferenceServer,
-) -> (u16, &'static str, &'static str, String) {
+fn handle_conn(mut stream: TcpStream, srv: &InferenceServer) {
+    let t_conn = Instant::now();
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reply = match read_request(&mut stream) {
+        Ok(req) => route(&req, srv, t_conn.elapsed()),
+        Err(e) => Reply::new(400, "Bad Request", "application/json", error_body(&e)),
+    };
+    let t_write = Instant::now();
+    let _ = write_response(&mut stream, reply.status, reply.reason, reply.ctype, &reply.body);
+    srv.metrics().record_http_response(reply.status);
+    if let Some(mut span) = reply.span.take() {
+        // Complete the span only after the response is on the wire: the
+        // write stage and the total cover the full connection lifetime.
+        span.stages.add_duration(Stage::Write, t_write.elapsed());
+        span.total_ns = t_conn.elapsed().as_nanos() as u64;
+        srv.tracer().push(span);
+    }
+}
+
+/// `accept` is the time spent reading the request off the socket —
+/// charged to the trace span's `Accept` stage for `/infer`.
+fn route(req: &HttpRequest, srv: &InferenceServer, accept: Duration) -> Reply {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => Reply::new(
+            200,
+            "OK",
+            "text/plain; version=0.0.4",
+            srv.metrics().snapshot().render(),
+        ),
+        ("GET", "/healthz") => Reply::new(200, "OK", "text/plain", "ok\n".to_string()),
+        ("GET", "/debug/tracez") => tracez_route(req, srv),
+        ("POST", "/infer") => infer_route(req, srv, accept),
+        // Unknown paths — including unknown /debug/* — fall through here.
+        _ => Reply::new(404, "Not Found", "application/json", error_body("no such route")),
+    }
+}
+
+/// Extract one `name=value` pair from a raw query string.
+fn query_param(query: &str, name: &str) -> Option<String> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == name).then(|| v.to_string())
+    })
+}
+
+fn tracez_route(req: &HttpRequest, srv: &InferenceServer) -> Reply {
+    let min_us: u64 =
+        query_param(&req.query, "min_us").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let limit: usize =
+        query_param(&req.query, "limit").and_then(|v| v.parse().ok()).unwrap_or(TRACE_RING_CAP);
+    Reply::new(200, "OK", "application/json", srv.tracer().render_json(min_us, limit))
+}
+
+fn infer_route(req: &HttpRequest, srv: &InferenceServer, accept: Duration) -> Reply {
+    let bad = |msg: &str| Reply::new(400, "Bad Request", "application/json", error_body(msg));
+    let t_parse = Instant::now();
     let Ok(text) = std::str::from_utf8(&req.body) else {
-        return (400, "Bad Request", "application/json", error_body("body is not UTF-8"));
+        return bad("body is not UTF-8");
     };
     let features = match Json::parse(text) {
         Ok(j) => match j.get("features").and_then(|f| f.as_f32_vec()) {
             Some(f) => f,
-            None => {
-                let msg = "body must be {\"features\": [..]}";
-                return (400, "Bad Request", "application/json", error_body(msg));
-            }
+            None => return bad("body must be {\"features\": [..]}"),
         },
-        Err(e) => {
-            return (400, "Bad Request", "application/json", error_body(&format!("bad JSON: {e}")))
-        }
+        Err(e) => return bad(&format!("bad JSON: {e}")),
     };
-    match srv.try_infer(features) {
+    let mut pre = StageTimer::default();
+    pre.add_duration(Stage::Accept, accept);
+    pre.add_duration(Stage::Parse, t_parse.elapsed());
+    match srv.try_infer_traced(features, pre) {
         Ok(resp) => {
-            let mut out = String::with_capacity(16 * resp.logits.len() + 32);
+            let t_ser = Instant::now();
+            let mut out = String::with_capacity(16 * resp.logits.len() + 48);
             out.push_str("{\"logits\":[");
             for (i, v) in resp.logits.iter().enumerate() {
                 if i > 0 {
@@ -183,23 +246,47 @@ fn infer_route(
                 }
                 out.push_str(&format!("{v:?}"));
             }
-            out.push_str(&format!("],\"latency_us\":{}}}", resp.latency.as_micros()));
-            (200, "OK", "application/json", out)
+            out.push_str(&format!(
+                "],\"latency_us\":{},\"trace_id\":{}}}",
+                resp.latency.as_micros(),
+                resp.trace_id
+            ));
+            let mut reply = Reply::new(200, "OK", "application/json", out);
+            if srv.tracer().enabled() {
+                let mut stages = resp.stages;
+                stages.add_duration(Stage::Serialize, t_ser.elapsed());
+                // total_ns is re-stamped with the connection wall time
+                // when the span completes in handle_conn.
+                reply.span = Some(SpanRecord::request(
+                    resp.trace_id,
+                    resp.batch_id,
+                    resp.batch_rows,
+                    resp.latency.as_nanos() as u64,
+                    stages,
+                ));
+            }
+            reply
         }
-        Err(InferError::BadRequest(m)) => (400, "Bad Request", "application/json", error_body(&m)),
-        Err(InferError::Busy) => {
-            (503, "Service Unavailable", "application/json", error_body("server busy (queue full)"))
-        }
-        Err(InferError::DeadlineExceeded) => (
+        Err(InferError::BadRequest(m)) => bad(&m),
+        Err(InferError::Busy) => Reply::new(
+            503,
+            "Service Unavailable",
+            "application/json",
+            error_body("server busy (queue full)"),
+        ),
+        Err(InferError::DeadlineExceeded) => Reply::new(
             504,
             "Gateway Timeout",
             "application/json",
             error_body("deadline exceeded before execution"),
         ),
-        Err(InferError::Stopped) => {
-            (500, "Internal Server Error", "application/json", error_body("server stopped"))
-        }
-        Err(InferError::Backend(m)) => (
+        Err(InferError::Stopped) => Reply::new(
+            500,
+            "Internal Server Error",
+            "application/json",
+            error_body("server stopped"),
+        ),
+        Err(InferError::Backend(m)) => Reply::new(
             500,
             "Internal Server Error",
             "application/json",
@@ -246,9 +333,12 @@ fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, Stri
     let method = parts.next().ok_or("empty request line")?.to_string();
     let raw_path = parts.next().ok_or("request line has no path")?;
     // Route on the path alone: `GET /metrics?format=x` must still hit
-    // /metrics (Prometheus scrapers append query strings; none of our
-    // routes take parameters).
-    let path = raw_path.split('?').next().unwrap_or(raw_path).to_string();
+    // /metrics (Prometheus scrapers append query strings). The query is
+    // kept separately for routes that do take parameters (tracez).
+    let (path, query) = match raw_path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (raw_path.to_string(), String::new()),
+    };
     let mut content_length = 0usize;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
@@ -270,7 +360,7 @@ fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, Stri
         body.extend_from_slice(&chunk[..n]);
     }
     body.truncate(content_length);
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, query, body })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -349,6 +439,15 @@ mod tests {
         assert_eq!(metric_value(text, "positron_batches_total"), Some(7.0));
         assert_eq!(metric_value(text, "positron_batch_mean_items"), Some(3.5));
         assert_eq!(metric_value(text, "nope"), None);
+    }
+
+    #[test]
+    fn query_param_parsing() {
+        assert_eq!(query_param("min_us=250&limit=10", "min_us").as_deref(), Some("250"));
+        assert_eq!(query_param("min_us=250&limit=10", "limit").as_deref(), Some("10"));
+        assert_eq!(query_param("min_us=250", "limit"), None);
+        assert_eq!(query_param("", "limit"), None);
+        assert_eq!(query_param("flag&limit=3", "limit").as_deref(), Some("3"));
     }
 
     #[test]

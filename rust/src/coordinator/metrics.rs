@@ -10,10 +10,22 @@
 //! whole run. The previous implementation cleared the buffer at 1M
 //! samples, silently resetting p50/p99/max mid-run; `max_us` is now a
 //! separate monotone counter that never resets.
+//!
+//! Alongside the reservoir quantiles, four power-of-2 log-bucketed
+//! [`LogHistogram`]s (end-to-end latency, queue wait, per-batch codec
+//! and execute time) record wait-free on the hot path and render in
+//! Prometheus `_bucket`/`_sum`/`_count` form — so scrapers get real
+//! distribution shape, not just a sampled quantile triple. HTTP
+//! connection/response counters live here too so the listener stays a
+//! thin I/O layer. Every exported name is catalogued in
+//! `docs/OBSERVABILITY.md`; an in-crate test and `tools/check_metrics_docs.py`
+//! keep that catalogue from drifting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use super::trace::{HistSnapshot, LogHistogram};
 
 /// Latency reservoir capacity: 64Ki samples ≈ 512 KiB, a uniform sample
 /// of the full run regardless of its length.
@@ -28,13 +40,28 @@ struct Reservoir {
     lcg: u64,
 }
 
+/// Process-wide reservoir counter: each reservoir derives its LCG seed
+/// from the next counter value, so two servers in one process (the
+/// weight-cache integration test runs several) never sample identical
+/// slot sequences.
+static RESERVOIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
 impl Default for Reservoir {
     fn default() -> Self {
-        Reservoir { samples: Vec::new(), seen: 0, lcg: 0x9e3779b97f4a7c15 }
+        let n = RESERVOIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        // Weyl-style spread of the sequence number over the golden-ratio
+        // constant keeps consecutive seeds far apart in state space.
+        Reservoir::with_seed(0x9e3779b97f4a7c15u64.wrapping_mul(n.wrapping_add(1)))
     }
 }
 
 impl Reservoir {
+    /// Deterministic constructor for tests: a fixed seed reproduces the
+    /// exact replacement sequence.
+    fn with_seed(seed: u64) -> Reservoir {
+        Reservoir { samples: Vec::new(), seen: 0, lcg: seed }
+    }
+
     fn record(&mut self, v: u64) {
         self.seen += 1;
         if self.samples.len() < LATENCY_RESERVOIR_CAP {
@@ -74,6 +101,30 @@ pub struct Metrics {
     /// replacement.
     max_us: AtomicU64,
     latencies_us: Mutex<Reservoir>,
+    /// Total nanoseconds copying rows into the staged batch + transposing
+    /// into tier layout (the `Staging` trace stage, summed over batches).
+    staging_ns: AtomicU64,
+    /// Total nanoseconds transposing logits back request-major (the
+    /// `Readout` trace stage, summed over batches).
+    readout_ns: AtomicU64,
+    /// Summed per-thread nanoseconds inside the sharded input codec —
+    /// CPU cost, which exceeds the wall-clock `codec_ns` when shards run
+    /// in parallel.
+    codec_worker_ns: AtomicU64,
+    /// HTTP connections ever accepted (monotone).
+    http_connections: AtomicU64,
+    /// HTTP connections currently open (gauge; open/close calls pair).
+    http_active: AtomicU64,
+    /// Responses by status class, `[1xx, 2xx, 3xx, 4xx, 5xx]`.
+    http_responses: [AtomicU64; 5],
+    /// End-to-end request latency distribution (µs buckets).
+    hist_latency_us: LogHistogram,
+    /// Submission → batch-seal wait distribution (µs buckets).
+    hist_queue_us: LogHistogram,
+    /// Per-batch input-codec wall time distribution (ns buckets).
+    hist_codec_ns: LogHistogram,
+    /// Per-batch execute wall time distribution (ns buckets).
+    hist_execute_ns: LogHistogram,
 }
 
 /// Point-in-time view.
@@ -104,6 +155,26 @@ pub struct MetricsSnapshot {
     /// Quantized-weight cache misses since process start (process-wide;
     /// monotone — a miss is the one-time encode/transpose of a tensor).
     pub weight_cache_misses: u64,
+    /// Total staging (row copy + transpose-in) nanoseconds across batches.
+    pub staging_ns: u64,
+    /// Total readout (transpose-out) nanoseconds across batches.
+    pub readout_ns: u64,
+    /// Summed per-thread codec worker nanoseconds (CPU, not wall).
+    pub codec_worker_ns: u64,
+    /// HTTP connections ever accepted.
+    pub http_connections: u64,
+    /// HTTP connections open at snapshot time.
+    pub http_active: u64,
+    /// HTTP responses by status class, `[1xx, 2xx, 3xx, 4xx, 5xx]`.
+    pub http_responses: [u64; 5],
+    /// End-to-end latency histogram (µs buckets).
+    pub hist_latency_us: HistSnapshot,
+    /// Queue-wait histogram (µs buckets).
+    pub hist_queue_us: HistSnapshot,
+    /// Per-batch codec wall-time histogram (ns buckets).
+    pub hist_codec_ns: HistSnapshot,
+    /// Per-batch execute wall-time histogram (ns buckets).
+    pub hist_execute_ns: HistSnapshot,
 }
 
 impl Metrics {
@@ -128,14 +199,53 @@ impl Metrics {
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
     }
 
-    /// Add one batch's codec (quantize/dequantize) time.
+    /// Add one batch's codec (quantize/dequantize) wall time.
     pub fn record_codec(&self, d: Duration) {
-        self.codec_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        let ns = d.as_nanos() as u64;
+        self.codec_ns.fetch_add(ns, Ordering::Relaxed);
+        self.hist_codec_ns.record(ns);
     }
 
-    /// Add one batch's model-execute time.
+    /// Add one batch's model-execute wall time.
     pub fn record_execute(&self, d: Duration) {
-        self.execute_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        let ns = d.as_nanos() as u64;
+        self.execute_ns.fetch_add(ns, Ordering::Relaxed);
+        self.hist_execute_ns.record(ns);
+    }
+
+    /// Record one request's submission → batch-seal wait.
+    pub fn record_queue_wait(&self, d: Duration) {
+        self.hist_queue_us.record(d.as_micros() as u64);
+    }
+
+    /// Add one batch's staging (copy + transpose-in) and readout
+    /// (transpose-out) nanoseconds, measured by the worker's stage timer.
+    pub fn record_batch_stages(&self, staging_ns: u64, readout_ns: u64) {
+        self.staging_ns.fetch_add(staging_ns, Ordering::Relaxed);
+        self.readout_ns.fetch_add(readout_ns, Ordering::Relaxed);
+    }
+
+    /// Add one batch's summed per-thread codec worker nanoseconds.
+    pub fn record_codec_worker(&self, ns: u64) {
+        self.codec_worker_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Count an accepted HTTP connection (pairs with
+    /// [`Metrics::record_http_conn_close`]).
+    pub fn record_http_conn_open(&self) {
+        self.http_connections.fetch_add(1, Ordering::Relaxed);
+        self.http_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark an HTTP connection closed.
+    pub fn record_http_conn_close(&self) {
+        self.http_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Count one HTTP response by status class (`2xx`, `4xx`, …).
+    pub fn record_http_response(&self, status: u16) {
+        let class = (status / 100).clamp(1, 5) as usize - 1;
+        self.http_responses[class].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record the worker-thread count the sharded codec runs with (set
@@ -147,22 +257,21 @@ impl Metrics {
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.hist_latency_us.record(us);
         self.latencies_us.lock().unwrap().record(us);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        // Snapshot the samples out of the lock; quantiles come from
+        // `select_nth_unstable` (O(n) per quantile) instead of a full
+        // sort of the 64Ki reservoir, so a scrape never holds the
+        // request-path mutex for longer than one memcpy.
         let (mut lats, seen) = {
             let r = self.latencies_us.lock().unwrap();
             (r.samples.clone(), r.seen)
         };
-        lats.sort_unstable();
-        let q = |p: f64| -> u64 {
-            if lats.is_empty() {
-                0
-            } else {
-                lats[((lats.len() - 1) as f64 * p) as usize]
-            }
-        };
+        let p50 = quantile(&mut lats, 0.5);
+        let p99 = quantile(&mut lats, 0.99);
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batched_items.load(Ordering::Relaxed);
         let (weight_cache_hits, weight_cache_misses) = super::quantizer::weight_cache_stats();
@@ -174,16 +283,37 @@ impl Metrics {
             batch_failures: self.batch_failures.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { items as f64 / batches as f64 },
             latency_samples: seen,
-            p50_us: q(0.5),
-            p99_us: q(0.99),
+            p50_us: p50,
+            p99_us: p99,
             max_us: self.max_us.load(Ordering::Relaxed),
             codec_ns: self.codec_ns.load(Ordering::Relaxed),
             execute_ns: self.execute_ns.load(Ordering::Relaxed),
             codec_threads: self.codec_threads.load(Ordering::Relaxed),
             weight_cache_hits,
             weight_cache_misses,
+            staging_ns: self.staging_ns.load(Ordering::Relaxed),
+            readout_ns: self.readout_ns.load(Ordering::Relaxed),
+            codec_worker_ns: self.codec_worker_ns.load(Ordering::Relaxed),
+            http_connections: self.http_connections.load(Ordering::Relaxed),
+            http_active: self.http_active.load(Ordering::Relaxed),
+            http_responses: std::array::from_fn(|i| self.http_responses[i].load(Ordering::Relaxed)),
+            hist_latency_us: self.hist_latency_us.snapshot(),
+            hist_queue_us: self.hist_queue_us.snapshot(),
+            hist_codec_ns: self.hist_codec_ns.snapshot(),
+            hist_execute_ns: self.hist_execute_ns.snapshot(),
         }
     }
+}
+
+/// Index quantile over an unsorted sample via `select_nth_unstable`:
+/// O(n) per call and no full sort, which matters at the 64Ki reservoir
+/// cap on every `/metrics` scrape.
+fn quantile(lats: &mut [u64], p: f64) -> u64 {
+    if lats.is_empty() {
+        return 0;
+    }
+    let idx = ((lats.len() - 1) as f64 * p) as usize;
+    *lats.select_nth_unstable(idx).1
 }
 
 impl MetricsSnapshot {
@@ -219,6 +349,21 @@ impl MetricsSnapshot {
         s.push_str(&format!("positron_execute_ns_per_batch {:.0}\n", self.execute_ns_per_batch()));
         s.push_str(&format!("positron_weight_cache_hits_total {}\n", self.weight_cache_hits));
         s.push_str(&format!("positron_weight_cache_misses_total {}\n", self.weight_cache_misses));
+        s.push_str(&format!("positron_staging_ns_total {}\n", self.staging_ns));
+        s.push_str(&format!("positron_readout_ns_total {}\n", self.readout_ns));
+        s.push_str(&format!("positron_codec_worker_ns_total {}\n", self.codec_worker_ns));
+        s.push_str(&format!("positron_http_connections_total {}\n", self.http_connections));
+        s.push_str(&format!("positron_http_connections_active {}\n", self.http_active));
+        for (i, class) in ["1xx", "2xx", "3xx", "4xx", "5xx"].iter().enumerate() {
+            s.push_str(&format!(
+                "positron_http_responses_total{{class=\"{class}\"}} {}\n",
+                self.http_responses[i]
+            ));
+        }
+        self.hist_latency_us.render_into(&mut s, "positron_request_latency_us");
+        self.hist_queue_us.render_into(&mut s, "positron_queue_wait_us");
+        self.hist_codec_ns.render_into(&mut s, "positron_codec_batch_ns");
+        self.hist_execute_ns.render_into(&mut s, "positron_execute_batch_ns");
         s
     }
 }
@@ -308,6 +453,101 @@ mod tests {
         let text = s.render();
         assert!(text.contains("positron_weight_cache_hits_total "), "{text}");
         assert!(text.contains("positron_weight_cache_misses_total "), "{text}");
+    }
+
+    #[test]
+    fn reservoir_seeds_are_decorrelated_but_seedable() {
+        // Two reservoirs created in one process must not replay the same
+        // replacement sequence (the old hard-coded seed did exactly
+        // that), while an explicit seed stays fully deterministic.
+        let a = Reservoir::default();
+        let b = Reservoir::default();
+        assert_ne!(a.lcg, b.lcg, "process-wide counter must decorrelate default seeds");
+        let mut c = Reservoir::with_seed(42);
+        let mut d = Reservoir::with_seed(42);
+        for v in 0..(LATENCY_RESERVOIR_CAP as u64 + 1_000) {
+            c.record(v);
+            d.record(v);
+        }
+        assert_eq!(c.samples, d.samples, "seeded reservoirs must replay identically");
+        assert_eq!(c.lcg, d.lcg);
+    }
+
+    #[test]
+    fn http_counters_render_by_class() {
+        let m = Metrics::default();
+        m.record_http_conn_open();
+        m.record_http_conn_open();
+        m.record_http_conn_close();
+        m.record_http_response(200);
+        m.record_http_response(204);
+        m.record_http_response(404);
+        m.record_http_response(503);
+        let s = m.snapshot();
+        assert_eq!(s.http_connections, 2);
+        assert_eq!(s.http_active, 1);
+        assert_eq!(s.http_responses, [0, 2, 0, 1, 1]);
+        let text = s.render();
+        assert!(text.contains("positron_http_connections_total 2"), "{text}");
+        assert!(text.contains("positron_http_connections_active 1"), "{text}");
+        assert!(text.contains("positron_http_responses_total{class=\"2xx\"} 2"), "{text}");
+        assert!(text.contains("positron_http_responses_total{class=\"4xx\"} 1"), "{text}");
+        assert!(text.contains("positron_http_responses_total{class=\"5xx\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn histograms_feed_from_recorders_and_render() {
+        let m = Metrics::default();
+        m.record_latency(Duration::from_micros(100));
+        m.record_queue_wait(Duration::from_micros(3));
+        m.record_codec(Duration::from_nanos(1_000));
+        m.record_execute(Duration::from_nanos(50_000));
+        m.record_batch_stages(2_000, 700);
+        m.record_codec_worker(4_000);
+        let s = m.snapshot();
+        assert_eq!(s.hist_latency_us.count, 1);
+        assert_eq!(s.hist_queue_us.count, 1);
+        assert_eq!(s.hist_codec_ns.sum, 1_000);
+        assert_eq!(s.hist_execute_ns.sum, 50_000);
+        assert_eq!(s.staging_ns, 2_000);
+        assert_eq!(s.readout_ns, 700);
+        assert_eq!(s.codec_worker_ns, 4_000);
+        let text = s.render();
+        for name in [
+            "positron_request_latency_us_bucket{le=\"+Inf\"} 1",
+            "positron_request_latency_us_sum 100",
+            "positron_request_latency_us_count 1",
+            "positron_queue_wait_us_count 1",
+            "positron_codec_batch_ns_sum 1000",
+            "positron_execute_batch_ns_sum 50000",
+            "positron_staging_ns_total 2000",
+            "positron_readout_ns_total 700",
+            "positron_codec_worker_ns_total 4000",
+        ] {
+            assert!(text.contains(name), "missing `{name}` in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn every_rendered_metric_is_documented() {
+        // Drift gate (mirrored by tools/check_metrics_docs.py in CI):
+        // every positron_* family name render() can emit must appear in
+        // docs/OBSERVABILITY.md.
+        let docs = include_str!("../../../docs/OBSERVABILITY.md");
+        let m = Metrics::default();
+        m.record_latency(Duration::from_micros(10));
+        m.record_queue_wait(Duration::from_micros(1));
+        m.record_codec(Duration::from_nanos(100));
+        m.record_execute(Duration::from_nanos(100));
+        m.record_http_conn_open();
+        m.record_http_response(200);
+        let text = m.snapshot().render();
+        for line in text.lines() {
+            let name = line.split(['{', ' ']).next().unwrap_or("");
+            if name.starts_with("positron_") {
+                assert!(docs.contains(name), "metric `{name}` missing from docs/OBSERVABILITY.md");
+            }
+        }
     }
 
     #[test]

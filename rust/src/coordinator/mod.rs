@@ -15,8 +15,15 @@
 //!   ([`InferError`] / [`ServeError`]): queue-full backpressure,
 //!   deadline expiry, and explicit per-request batch-failure answers.
 //! - [`http`] — zero-dependency HTTP/1.1 listener: `GET /metrics`
-//!   (Prometheus-style), `GET /healthz`, `POST /infer`.
-//! - [`metrics`] — counters + bounded-reservoir latency quantiles.
+//!   (Prometheus-style), `GET /healthz`, `POST /infer` (echoes a trace
+//!   id), `GET /debug/tracez` (the span ring, `?min_us=`/`?limit=`).
+//! - [`metrics`] — counters, bounded-reservoir latency quantiles, and
+//!   power-of-2 log-bucketed histograms (latency, queue wait, codec,
+//!   execute) in Prometheus `_bucket`/`_sum`/`_count` form.
+//! - [`trace`] — request/batch spans with per-stage nanosecond timings
+//!   ([`StageTimer`], accept → … → write), the fixed-capacity span ring
+//!   behind `/debug/tracez`, and the histogram primitive. Observability
+//!   never changes logits (bit-identical with tracing on or off).
 //! - [`quantizer`] — the f32⇄b-posit batch codec tiers and the
 //!   process-wide quantized-weight cache.
 
@@ -25,8 +32,10 @@ pub mod http;
 pub mod metrics;
 pub mod quantizer;
 pub mod server;
+pub mod trace;
 
 pub use backend::{BackendKind, InferenceBackend, NativeBackend, PjrtBackend, WeightFormat};
 pub use http::HttpServer;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use server::{InferError, InferenceServer, Response, ServeError, ServerConfig};
+pub use trace::{SpanRecord, Stage, StageTimer, Tracer};

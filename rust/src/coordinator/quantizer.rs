@@ -156,6 +156,14 @@ pub fn roundtrip_in_place<E: LaneElem>(xs: &mut [E]) {
     parallel::par_bp_roundtrip_in_place(xs);
 }
 
+/// [`roundtrip_in_place`] plus summed per-thread worker nanoseconds (the
+/// codec's CPU cost — exceeds wall time when shards run in parallel).
+/// Identical shard split, so the output is bit-identical to the untimed
+/// path for any thread count.
+pub fn roundtrip_in_place_timed<E: LaneElem>(xs: &mut [E]) -> u64 {
+    parallel::par_bp_roundtrip_in_place_timed(xs)
+}
+
 // ----------------------------------------------------------------------
 // Historical 64-bit names — thin aliases over the generic family
 // (docs/API.md). Contract notes that are width-specific: in-range f64s

@@ -21,6 +21,17 @@
 //! place, and the backend returns logits borrowed from its own reused
 //! scratch. The codec and execute stages are timed separately into
 //! [`Metrics`].
+//!
+//! Observability: every request carries a process-unique trace id and a
+//! [`StageTimer`]; the worker attributes queue-wait, staging, input
+//! codec, execute, and readout time per batch (wall times at stage
+//! boundaries — no timing inside lane loops) and each [`Response`]
+//! carries the merged per-stage breakdown back to the caller. When
+//! `cfg.tracing` is on, completed request and batch spans land in the
+//! server's [`Tracer`] ring for `GET /debug/tracez`; when off, only the
+//! span recording stops — stage timers, histograms, and counters stay
+//! live, and the numeric path is identical either way (logits are
+//! bit-identical with tracing on or off; tests gate on this).
 
 use std::fmt;
 use std::path::PathBuf;
@@ -34,6 +45,7 @@ use crate::error::{anyhow, Result};
 use super::backend;
 use super::backend::{BackendKind, InferenceBackend, NativeBackend, PjrtBackend, WeightFormat};
 use super::metrics::Metrics;
+use super::trace::{self, SpanRecord, Stage, StageTimer, Tracer};
 use crate::runtime::ModelWeights;
 
 /// Server tuning knobs.
@@ -64,6 +76,11 @@ pub struct ServerConfig {
     /// submission is answered with [`ServeError::DeadlineExceeded`]
     /// instead of occupying a batch slot. `None` disables.
     pub deadline: Option<Duration>,
+    /// Record completed request/batch spans into the server's
+    /// [`Tracer`] ring (`GET /debug/tracez`). Off switches span
+    /// *retention* only — stage timing, histograms, and counters stay
+    /// on, and logits are bit-identical either way.
+    pub tracing: bool,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +94,7 @@ impl Default for ServerConfig {
             weight_format: WeightFormat::Bp32,
             model_file: WeightFormat::Bp32.model_file().into(),
             deadline: None,
+            tracing: true,
         }
     }
 }
@@ -147,6 +165,11 @@ struct Request {
     features: Vec<f32>,
     submitted: Instant,
     resp: SyncSender<ServeResult>,
+    /// Process-unique trace id, echoed back in the [`Response`].
+    trace_id: u64,
+    /// Stage time spent before submission (HTTP accept/parse; zero for
+    /// in-process callers) — merged into the response's breakdown.
+    pre: StageTimer,
 }
 
 /// One inference response.
@@ -154,12 +177,22 @@ struct Request {
 pub struct Response {
     pub logits: Vec<f32>,
     pub latency: Duration,
+    /// This request's process-unique trace id.
+    pub trace_id: u64,
+    /// Trace id of the batch span that executed this request.
+    pub batch_id: u64,
+    /// Rows in the executing batch.
+    pub batch_rows: u32,
+    /// Per-stage breakdown: the caller's pre-submit stages plus this
+    /// request's queue wait plus the executing batch's shared stages.
+    pub stages: StageTimer,
 }
 
 /// Handle to a running server.
 pub struct InferenceServer {
     tx: SyncSender<Request>,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
     worker: Option<JoinHandle<()>>,
     /// (features, classes) of the served model.
     pub dims: (usize, usize),
@@ -212,6 +245,8 @@ impl InferenceServer {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
+        let tracer = Arc::new(Tracer::new(cfg.tracing));
+        let t2 = tracer.clone();
         let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(usize, usize), String>>(1);
         let worker = std::thread::spawn(move || match factory() {
             Err(e) => {
@@ -219,18 +254,42 @@ impl InferenceServer {
             }
             Ok(backend) => {
                 let _ = ready_tx.send(Ok(backend.dims()));
-                worker_loop(backend, cfg, rx, m2);
+                worker_loop(backend, cfg, rx, m2, t2);
             }
         });
         let dims = ready_rx
             .recv()
             .map_err(|_| anyhow!("server worker died during startup"))?
             .map_err(|e| anyhow!("server startup failed: {e}"))?;
-        Ok(InferenceServer { tx, metrics, worker: Some(worker), dims })
+        Ok(InferenceServer { tx, metrics, tracer, worker: Some(worker), dims })
     }
 
-    /// Blocking inference with a typed error (what the HTTP layer uses).
+    /// Blocking inference with a typed error. Completes the request span
+    /// here (submission-to-answer wall time; no HTTP stages), so
+    /// in-process callers show up in `/debug/tracez` too.
     pub fn try_infer(&self, features: Vec<f32>) -> std::result::Result<Response, InferError> {
+        let resp = self.try_infer_traced(features, StageTimer::default())?;
+        if self.tracer.enabled() {
+            self.tracer.push(SpanRecord::request(
+                resp.trace_id,
+                resp.batch_id,
+                resp.batch_rows,
+                resp.latency.as_nanos() as u64,
+                resp.stages,
+            ));
+        }
+        Ok(resp)
+    }
+
+    /// Blocking inference carrying pre-submit stage time (HTTP
+    /// accept/parse). Does **not** push a request span — the caller owns
+    /// the span's completion so post-response stages (serialize, write)
+    /// can be included before it is retained.
+    pub fn try_infer_traced(
+        &self,
+        features: Vec<f32>,
+        pre: StageTimer,
+    ) -> std::result::Result<Response, InferError> {
         if features.len() != self.dims.0 {
             return Err(InferError::BadRequest(format!(
                 "expected {} features, got {}",
@@ -239,7 +298,13 @@ impl InferenceServer {
             )));
         }
         let (rtx, rrx) = sync_channel(1);
-        let req = Request { features, submitted: Instant::now(), resp: rtx };
+        let req = Request {
+            features,
+            submitted: Instant::now(),
+            resp: rtx,
+            trace_id: trace::next_trace_id(),
+            pre,
+        };
         self.metrics.record_request();
         match self.tx.try_send(req) {
             Ok(()) => {}
@@ -269,7 +334,16 @@ impl InferenceServer {
             return Err(anyhow!("expected {} features, got {}", self.dims.0, features.len()));
         }
         let (rtx, rrx) = sync_channel(1);
-        let req = Request { features, submitted: Instant::now(), resp: rtx };
+        // Async submissions get a trace id (they appear in their batch
+        // span's member list) but no request span — there is no single
+        // completion point at which to stamp one.
+        let req = Request {
+            features,
+            submitted: Instant::now(),
+            resp: rtx,
+            trace_id: trace::next_trace_id(),
+            pre: StageTimer::default(),
+        };
         self.metrics.record_request();
         match self.tx.try_send(req) {
             Ok(()) => Ok(rrx),
@@ -283,6 +357,12 @@ impl InferenceServer {
 
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// The server's span sink (the HTTP layer completes and pushes
+    /// request spans through this, and `/debug/tracez` renders it).
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.tracer.clone()
     }
 }
 
@@ -308,6 +388,7 @@ fn worker_loop(
     cfg: ServerConfig,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
 ) {
     let (d, c) = backend.dims();
     let max_batch = cfg.max_batch.min(backend.max_batch()).clamp(1, MAX_STAGED_BATCH);
@@ -348,6 +429,12 @@ fn worker_loop(
         }
         let rows = batch.len();
         metrics.record_batch(rows);
+        // Everything before this instant is queue wait (including the
+        // batch-fill wait above); everything after is attributed to a
+        // named batch stage, so each member's stage sum tracks its
+        // recorded latency.
+        let t_batch = Instant::now();
+        let mut bt = StageTimer::default();
 
         // Stage the rows×d input, then quantize in place when the
         // serving format calls for it (only the quantize pass counts as
@@ -355,24 +442,65 @@ fn worker_loop(
         // contract lives in `backend::stage_inputs_in_place`, shared
         // with the allocating test-facing wrappers; the staging buffer
         // is reused, so this path performs zero per-request allocation.
+        let t_stage = Instant::now();
         for (i, r) in batch.iter().enumerate() {
             x[i * d..(i + 1) * d].copy_from_slice(&r.features);
         }
+        bt.add_duration(Stage::Staging, t_stage.elapsed());
+        let mut codec_worker_ns = 0u64;
         if cfg.quantize_inputs && cfg.weight_format.quantizes_inputs() {
             let t_codec = Instant::now();
-            backend::stage_inputs_in_place(cfg.weight_format, &mut x[..rows * d]);
-            metrics.record_codec(t_codec.elapsed());
+            codec_worker_ns =
+                backend::stage_inputs_in_place_timed(cfg.weight_format, &mut x[..rows * d]);
+            let codec_wall = t_codec.elapsed();
+            metrics.record_codec(codec_wall);
+            metrics.record_codec_worker(codec_worker_ns);
+            bt.add_duration(Stage::InputCodec, codec_wall);
         }
 
         let t_exec = Instant::now();
-        match backend.run(&x[..rows * d], rows) {
+        match backend.run_traced(&x[..rows * d], rows, &mut bt) {
             Ok(out) => {
-                metrics.record_execute(t_exec.elapsed());
+                let exec_wall = t_exec.elapsed();
+                metrics.record_execute(exec_wall);
+                if bt.get(Stage::Execute) == 0 && bt.get(Stage::Readout) == 0 {
+                    // Backend without stage attribution (the run_traced
+                    // default): charge the whole call to Execute.
+                    bt.add_duration(Stage::Execute, exec_wall);
+                }
+                metrics.record_batch_stages(bt.get(Stage::Staging), bt.get(Stage::Readout));
+                let tracing = tracer.enabled();
+                let batch_id = trace::next_trace_id();
+                let mut members = Vec::with_capacity(if tracing { rows } else { 0 });
                 for (i, r) in batch.into_iter().enumerate() {
                     let logits = out[i * c..(i + 1) * c].to_vec();
                     let latency = r.submitted.elapsed();
                     metrics.record_latency(latency);
-                    let _ = r.resp.send(Ok(Response { logits, latency }));
+                    let queue_wait = t_batch.saturating_duration_since(r.submitted);
+                    metrics.record_queue_wait(queue_wait);
+                    let mut stages = r.pre;
+                    stages.add_duration(Stage::QueueWait, queue_wait);
+                    stages.merge(&bt);
+                    if tracing {
+                        members.push(r.trace_id);
+                    }
+                    let _ = r.resp.send(Ok(Response {
+                        logits,
+                        latency,
+                        trace_id: r.trace_id,
+                        batch_id,
+                        batch_rows: rows as u32,
+                        stages,
+                    }));
+                }
+                if tracing {
+                    tracer.push(SpanRecord::batch(
+                        batch_id,
+                        members,
+                        rows as u32,
+                        bt,
+                        codec_worker_ns,
+                    ));
                 }
             }
             Err(e) => {

@@ -1,0 +1,660 @@
+//! Request tracing + log-bucketed histograms: the serving stack's
+//! observability core, zero external dependencies.
+//!
+//! Three pieces, all cheap enough for the hot path:
+//!
+//! - **[`StageTimer`]** — a plain-`u64` per-stage accumulator (no
+//!   atomics, `Copy`) threaded through the HTTP listener, the batching
+//!   worker, and the backend so every request can report where its
+//!   wall time went: accept → parse → queue-wait → staging →
+//!   input-codec → execute → readout → serialize → write.
+//! - **[`SpanRecord`] + [`Tracer`]** — every `/infer` request gets a
+//!   process-unique `u64` trace id ([`next_trace_id`]) and a completed
+//!   span; each executed batch gets a *batch span* linking its member
+//!   trace ids. Completed spans land in a fixed-capacity ring buffer
+//!   (one tiny `Mutex` per slot — writers only contend when they hash
+//!   to the same slot, and never block the serving path for longer
+//!   than one ~100-byte store). `GET /debug/tracez` renders the ring
+//!   as JSON, filterable by `?min_us=` / `?limit=`.
+//! - **[`LogHistogram`]** — power-of-2-bucketed `AtomicU64` arrays for
+//!   end-to-end latency, queue wait, and per-batch codec/execute time:
+//!   allocation-free, wait-free `record` (three relaxed `fetch_add`s),
+//!   rendered in Prometheus `_bucket`/`_sum`/`_count` form by
+//!   [`HistSnapshot::render_into`].
+//!
+//! Spans are only *recorded* when tracing is enabled
+//! (`ServerConfig::tracing`); the histograms and counters in
+//! [`super::metrics`] stay on either way. Nothing here touches the
+//! numeric path — observability never changes logits (the integration
+//! tests gate on bit-identity with tracing on and off).
+//!
+//! Request spans are pushed by whoever completes the request: the HTTP
+//! layer for `/infer` (so serialize/write are included), the server's
+//! `try_infer` for in-process callers. `infer_async` submissions appear
+//! in their batch span's member list but get no request span of their
+//! own — there is no single completion point to stamp.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Number of request stages a [`StageTimer`] tracks.
+pub const STAGE_COUNT: usize = 9;
+
+/// Spans retained by a default [`Tracer`]: enough to hold several
+/// seconds of traffic at demo rates, small enough (~64 KiB) to sit in
+/// every server.
+pub const TRACE_RING_CAP: usize = 512;
+
+/// One stage of the request path, in request order. HTTP-side stages
+/// (`Accept`, `Parse`, `Serialize`, `Write`) are zero for in-process
+/// requests; the middle five are measured by the batching worker and
+/// the native backend and are shared by every member of a batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Reading the request head + body off the socket.
+    Accept = 0,
+    /// JSON parse + feature extraction.
+    Parse = 1,
+    /// Submission → the worker seals the batch (includes batch fill
+    /// wait, so per-member values differ within one batch).
+    QueueWait = 2,
+    /// Row copies into the staged batch + transpose into tier layout.
+    Staging = 3,
+    /// b-posit roundtrip quantization of the staged batch.
+    InputCodec = 4,
+    /// GEMM + bias/ReLU layers.
+    Execute = 5,
+    /// Transposing logits back request-major.
+    Readout = 6,
+    /// Formatting the JSON response body.
+    Serialize = 7,
+    /// Writing the response bytes to the socket.
+    Write = 8,
+}
+
+impl Stage {
+    /// All stages in request order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Accept,
+        Stage::Parse,
+        Stage::QueueWait,
+        Stage::Staging,
+        Stage::InputCodec,
+        Stage::Execute,
+        Stage::Readout,
+        Stage::Serialize,
+        Stage::Write,
+    ];
+
+    /// JSON key for this stage's nanosecond field in `/debug/tracez`.
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept_ns",
+            Stage::Parse => "parse_ns",
+            Stage::QueueWait => "queue_wait_ns",
+            Stage::Staging => "staging_ns",
+            Stage::InputCodec => "input_codec_ns",
+            Stage::Execute => "execute_ns",
+            Stage::Readout => "readout_ns",
+            Stage::Serialize => "serialize_ns",
+            Stage::Write => "write_ns",
+        }
+    }
+}
+
+/// Per-stage nanosecond accumulator: plain `u64`s, `Copy`, no atomics —
+/// each thread accumulates into its own timer and timers are merged
+/// per batch, so nothing synchronizes inside lane loops.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTimer {
+    ns: [u64; STAGE_COUNT],
+}
+
+impl StageTimer {
+    /// Add `ns` nanoseconds to `stage` (accumulates).
+    pub fn add(&mut self, stage: Stage, ns: u64) {
+        self.ns[stage as usize] += ns;
+    }
+
+    /// Add a [`Duration`] to `stage`.
+    pub fn add_duration(&mut self, stage: Stage, d: Duration) {
+        self.add(stage, d.as_nanos() as u64);
+    }
+
+    /// Accumulated nanoseconds for `stage`.
+    pub fn get(&self, stage: Stage) -> u64 {
+        self.ns[stage as usize]
+    }
+
+    /// Merge another timer in (stage-wise sum) — how per-batch worker
+    /// timings fan out into each member's span.
+    pub fn merge(&mut self, other: &StageTimer) {
+        for i in 0..STAGE_COUNT {
+            self.ns[i] += other.ns[i];
+        }
+    }
+
+    /// Total nanoseconds across all stages.
+    pub fn sum(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+
+    /// Sum over the server-side stages (queue-wait through readout) —
+    /// the portion covered by a response's recorded latency.
+    pub fn server_sum(&self) -> u64 {
+        self.get(Stage::QueueWait)
+            + self.get(Stage::Staging)
+            + self.get(Stage::InputCodec)
+            + self.get(Stage::Execute)
+            + self.get(Stage::Readout)
+    }
+}
+
+/// What a span describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One `/infer` (or in-process) request, end to end.
+    Request,
+    /// One executed batch, linking its member request trace ids.
+    Batch,
+}
+
+/// A completed span: one ring-buffer entry, rendered by `/debug/tracez`.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Process-unique id (echoed to `/infer` clients for correlation).
+    pub trace_id: u64,
+    pub kind: SpanKind,
+    /// The batch span that executed this request (batch spans point at
+    /// themselves), correlating request spans with their batch.
+    pub batch_id: u64,
+    /// Independently measured wall time: for request spans the
+    /// connection-to-written-response total (or the recorded latency
+    /// for in-process requests); for batch spans the stage sum. The
+    /// per-stage breakdown must account for this within a few percent.
+    pub total_ns: u64,
+    /// Rows in the executing batch.
+    pub rows: u32,
+    /// Batch spans: member request trace ids (empty on request spans).
+    pub members: Vec<u64>,
+    /// Batch spans: summed per-thread worker ns inside the sharded
+    /// codec (can exceed the wall-clock `input_codec_ns` when shards
+    /// run in parallel; 0 when the format does not quantize inputs).
+    pub codec_worker_ns: u64,
+    pub stages: StageTimer,
+}
+
+impl SpanRecord {
+    /// A request span. `total_ns` is the recorded latency; HTTP callers
+    /// re-stamp it with the full connection wall time after the write.
+    pub fn request(trace_id: u64, batch_id: u64, rows: u32, total_ns: u64, stages: StageTimer) -> SpanRecord {
+        SpanRecord {
+            trace_id,
+            kind: SpanKind::Request,
+            batch_id,
+            total_ns,
+            rows,
+            members: Vec::new(),
+            codec_worker_ns: 0,
+            stages,
+        }
+    }
+
+    /// A batch span linking its member request trace ids.
+    pub fn batch(batch_id: u64, members: Vec<u64>, rows: u32, stages: StageTimer, codec_worker_ns: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id: batch_id,
+            kind: SpanKind::Batch,
+            batch_id,
+            total_ns: stages.sum(),
+            rows,
+            members,
+            codec_worker_ns,
+            stages,
+        }
+    }
+
+    /// Render as one `/debug/tracez` JSON object.
+    pub fn json(&self) -> String {
+        let mut s = String::with_capacity(256);
+        s.push_str(&format!(
+            "{{\"trace_id\":{},\"kind\":\"{}\",\"batch_id\":{},\"total_us\":{},\"total_ns\":{},\"rows\":{}",
+            self.trace_id,
+            match self.kind {
+                SpanKind::Request => "request",
+                SpanKind::Batch => "batch",
+            },
+            self.batch_id,
+            self.total_ns / 1_000,
+            self.total_ns,
+            self.rows
+        ));
+        if self.kind == SpanKind::Batch {
+            let ids: Vec<String> = self.members.iter().map(|m| m.to_string()).collect();
+            s.push_str(&format!(
+                ",\"members\":[{}],\"codec_worker_ns\":{}",
+                ids.join(","),
+                self.codec_worker_ns
+            ));
+        }
+        s.push_str(",\"stages\":{");
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{}\":{}", st.key(), self.stages.get(*st)));
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// Process-wide trace/batch id allocator: ids start at 1 (0 means "not
+/// traced") and are unique across every server in the process.
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fixed-capacity span ring: `head` claims a slot with one relaxed
+/// `fetch_add`, then the writer takes that slot's own tiny `Mutex` for
+/// the store. Concurrent writers only contend when they wrap onto the
+/// same slot; a torn span is impossible and readers never block the
+/// whole ring.
+struct TraceRing {
+    slots: Vec<Mutex<Option<SpanRecord>>>,
+    head: AtomicU64,
+}
+
+impl TraceRing {
+    fn new(capacity: usize) -> TraceRing {
+        let slots = (0..capacity.max(1)).map(|_| Mutex::new(None)).collect();
+        TraceRing { slots, head: AtomicU64::new(0) }
+    }
+
+    fn push(&self, span: SpanRecord) {
+        let i = (self.head.fetch_add(1, Ordering::Relaxed) as usize) % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(span);
+    }
+
+    /// Newest-first snapshot (ordering is approximate while writers are
+    /// concurrently wrapping — fine for a debug endpoint).
+    fn snapshot(&self, min_ns: u64, limit: usize) -> Vec<SpanRecord> {
+        let cap = self.slots.len();
+        let head = self.head.load(Ordering::Relaxed) as usize;
+        let mut out = Vec::new();
+        // Walk backwards from the most recently claimed slot.
+        for back in 1..=cap {
+            if out.len() >= limit {
+                break;
+            }
+            let idx = (head.wrapping_add(cap) - back) % cap;
+            let slot = self.slots[idx].lock().unwrap();
+            if let Some(span) = slot.as_ref() {
+                if span.total_ns >= min_ns {
+                    out.push(span.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The per-server span sink: a [`TraceRing`] plus the enabled flag from
+/// `ServerConfig::tracing`. `push` is a no-op when disabled, so callers
+/// never branch.
+pub struct Tracer {
+    enabled: bool,
+    ring: TraceRing,
+    /// Spans ever pushed (monotone; the ring keeps the last N).
+    pushed: AtomicU64,
+}
+
+impl Tracer {
+    /// A tracer with the default ring capacity ([`TRACE_RING_CAP`]).
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer::with_capacity(enabled, TRACE_RING_CAP)
+    }
+
+    /// A tracer with an explicit ring capacity (tests exercise small
+    /// rings to force wraparound).
+    pub fn with_capacity(enabled: bool, capacity: usize) -> Tracer {
+        Tracer { enabled, ring: TraceRing::new(capacity), pushed: AtomicU64::new(0) }
+    }
+
+    /// Whether spans are recorded at all.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Retain a completed span (no-op when tracing is disabled).
+    pub fn push(&self, span: SpanRecord) {
+        if !self.enabled {
+            return;
+        }
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        self.ring.push(span);
+    }
+
+    /// Spans ever pushed (monotone).
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    /// Newest-first spans with `total_ns ≥ min_us·1000`, at most `limit`.
+    pub fn spans(&self, min_us: u64, limit: usize) -> Vec<SpanRecord> {
+        self.ring.snapshot(min_us.saturating_mul(1_000), limit)
+    }
+
+    /// The `/debug/tracez` body.
+    pub fn render_json(&self, min_us: u64, limit: usize) -> String {
+        let spans = self.spans(min_us, limit);
+        let mut s = String::with_capacity(64 + 256 * spans.len());
+        s.push_str(&format!(
+            "{{\"enabled\":{},\"capacity\":{},\"pushed\":{},\"count\":{},\"spans\":[",
+            self.enabled,
+            self.ring.slots.len(),
+            self.pushed(),
+            spans.len()
+        ));
+        for (i, span) in spans.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&span.json());
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Buckets below the `+Inf` overflow slot: upper bounds `2^0 … 2^39`
+/// (in the recorded unit — µs histograms top out at ~6.4 days, ns ones
+/// at ~9 minutes before overflowing into `+Inf`).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Power-of-2 log-bucketed histogram: `record` is allocation-free and
+/// wait-free (three relaxed `fetch_add`s), so it sits directly on the
+/// request path. Bucket *i* counts values `v ≤ 2^i` not already counted
+/// by a smaller bucket; a value exactly on a power of 2 lands in the
+/// bucket whose upper bound equals it (Prometheus `le` semantics).
+pub struct LogHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS + 1],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Bucket index for a value: 0 for `v ≤ 1`, else `⌈log2 v⌉`, capped
+    /// at the `+Inf` slot.
+    pub fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            ((u64::BITS - (v - 1).leading_zeros()) as usize).min(HIST_BUCKETS)
+        }
+    }
+
+    /// Upper bound (`le` label) of bucket `i`; `None` for the `+Inf`
+    /// overflow slot.
+    pub fn bucket_le(i: usize) -> Option<u64> {
+        (i < HIST_BUCKETS).then(|| 1u64 << i)
+    }
+
+    /// Record one observation (wait-free).
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy (per-bucket raw counts, not yet cumulative).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time histogram view, renderable as Prometheus
+/// `_bucket`/`_sum`/`_count` lines.
+#[derive(Clone, Debug, Default)]
+pub struct HistSnapshot {
+    /// Raw per-bucket counts, `HIST_BUCKETS + 1` entries (last = `+Inf`).
+    pub buckets: Vec<u64>,
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Append Prometheus histogram exposition lines for `name` (which
+    /// should carry the unit suffix, e.g. `positron_queue_wait_us`).
+    pub fn render_into(&self, out: &mut String, name: &str) {
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            match LogHistogram::bucket_le(i) {
+                Some(le) => out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n")),
+                None => out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n")),
+            }
+        }
+        out.push_str(&format!("{name}_sum {}\n", self.sum));
+        out.push_str(&format!("{name}_count {}\n", self.count));
+    }
+
+    /// Upper-bound quantile estimate: the `le` of the first bucket whose
+    /// cumulative count reaches `p·count` (0 when empty, `u64::MAX` if
+    /// the quantile falls in the `+Inf` overflow slot).
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p * self.count as f64).ceil()).max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return LogHistogram::bucket_le(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_land_on_powers_of_two() {
+        // The satellite contract: a value exactly on a power of 2 lands
+        // in the bucket whose upper bound equals it.
+        assert_eq!(LogHistogram::bucket_index(0), 0);
+        assert_eq!(LogHistogram::bucket_index(1), 0);
+        for i in 1..HIST_BUCKETS {
+            let v = 1u64 << i;
+            assert_eq!(LogHistogram::bucket_index(v), i, "v = 2^{i}");
+            assert_eq!(LogHistogram::bucket_index(v + 1), i + 1, "v = 2^{i}+1");
+            assert_eq!(LogHistogram::bucket_le(i), Some(v));
+        }
+        // Values past the largest finite bound overflow into +Inf.
+        assert_eq!(LogHistogram::bucket_index(u64::MAX), HIST_BUCKETS);
+        assert_eq!(LogHistogram::bucket_le(HIST_BUCKETS), None);
+    }
+
+    #[test]
+    fn histogram_records_and_renders_cumulative() {
+        let h = LogHistogram::default();
+        for v in [0u64, 1, 2, 3, 4, 1024] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 1034);
+        assert_eq!(s.buckets[0], 2, "0 and 1 share the le=1 bucket");
+        assert_eq!(s.buckets[1], 1, "2 lands exactly on le=2");
+        assert_eq!(s.buckets[2], 2, "3 and 4 land in le=4");
+        assert_eq!(s.buckets[10], 1, "1024 lands exactly on le=1024");
+        let mut text = String::new();
+        s.render_into(&mut text, "test_hist");
+        assert!(text.contains("test_hist_bucket{le=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("test_hist_bucket{le=\"2\"} 3\n"), "{text}");
+        assert!(text.contains("test_hist_bucket{le=\"4\"} 5\n"), "{text}");
+        assert!(text.contains("test_hist_bucket{le=\"+Inf\"} 6\n"), "{text}");
+        assert!(text.contains("test_hist_sum 1034\n"), "{text}");
+        assert!(text.contains("test_hist_count 6\n"), "{text}");
+    }
+
+    #[test]
+    fn histogram_quantile_upper_bounds() {
+        let h = LogHistogram::default();
+        for _ in 0..90 {
+            h.record(10); // bucket le=16
+        }
+        for _ in 0..10 {
+            h.record(1000); // bucket le=1024
+        }
+        let s = h.snapshot();
+        assert_eq!(s.quantile(0.5), 16);
+        assert_eq!(s.quantile(0.99), 1024);
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn stage_timer_accumulates_and_merges() {
+        let mut a = StageTimer::default();
+        a.add(Stage::QueueWait, 100);
+        a.add(Stage::QueueWait, 50);
+        a.add_duration(Stage::Execute, Duration::from_nanos(200));
+        let mut b = StageTimer::default();
+        b.add(Stage::Execute, 300);
+        b.add(Stage::Staging, 25);
+        a.merge(&b);
+        assert_eq!(a.get(Stage::QueueWait), 150);
+        assert_eq!(a.get(Stage::Execute), 500);
+        assert_eq!(a.get(Stage::Staging), 25);
+        assert_eq!(a.sum(), 675);
+        assert_eq!(a.server_sum(), 675, "all recorded stages are server-side here");
+    }
+
+    #[test]
+    fn span_json_carries_every_stage_key() {
+        let mut st = StageTimer::default();
+        st.add(Stage::Execute, 42_000);
+        let span = SpanRecord::request(7, 9, 3, 50_000, st);
+        let j = span.json();
+        for stage in Stage::ALL {
+            assert!(j.contains(stage.key()), "{j} missing {}", stage.key());
+        }
+        assert!(j.contains("\"trace_id\":7"), "{j}");
+        assert!(j.contains("\"batch_id\":9"), "{j}");
+        assert!(j.contains("\"total_us\":50"), "{j}");
+        assert!(j.contains("\"kind\":\"request\""), "{j}");
+        assert!(!j.contains("members"), "request spans carry no member list: {j}");
+        let b = SpanRecord::batch(9, vec![7, 8], 2, st, 1234);
+        let bj = b.json();
+        assert!(bj.contains("\"members\":[7,8]"), "{bj}");
+        assert!(bj.contains("\"codec_worker_ns\":1234"), "{bj}");
+        assert!(bj.contains("\"kind\":\"batch\""), "{bj}");
+        assert_eq!(b.total_ns, st.sum());
+        crate::json::Json::parse(&bj).expect("span JSON must parse");
+    }
+
+    #[test]
+    fn ring_retains_newest_and_wraps_single_writer() {
+        let t = Tracer::with_capacity(true, 8);
+        for id in 1..=11u64 {
+            t.push(SpanRecord::request(id, id, 1, id * 1_000_000, StageTimer::default()));
+        }
+        assert_eq!(t.pushed(), 11);
+        let spans = t.spans(0, usize::MAX);
+        assert_eq!(spans.len(), 8, "ring holds exactly its capacity");
+        let ids: Vec<u64> = spans.iter().map(|s| s.trace_id).collect();
+        assert_eq!(ids, vec![11, 10, 9, 8, 7, 6, 5, 4], "newest first, oldest evicted");
+        // min_us filter (total_ns = id ms): only ids ≥ 9 pass 8500 µs.
+        let slow = t.spans(8_500, usize::MAX);
+        assert_eq!(slow.iter().map(|s| s.trace_id).collect::<Vec<_>>(), vec![11, 10, 9]);
+        // limit caps the newest-first walk.
+        assert_eq!(t.spans(0, 2).len(), 2);
+    }
+
+    #[test]
+    fn ring_wraparound_under_concurrent_writers() {
+        // 4 writers × 64 spans through an 8-slot ring: the ring must end
+        // up full with 8 distinct, untorn spans, each one that was
+        // actually pushed (total_ns mirrors the trace id so a torn write
+        // would be visible).
+        let t = Tracer::with_capacity(true, 8);
+        std::thread::scope(|s| {
+            for w in 0..4u64 {
+                let tr = &t;
+                s.spawn(move || {
+                    for i in 0..64u64 {
+                        let id = w * 1_000 + i + 1;
+                        let mut st = StageTimer::default();
+                        st.add(Stage::Execute, id);
+                        tr.push(SpanRecord::request(id, id, 1, id, st));
+                    }
+                });
+            }
+        });
+        assert_eq!(t.pushed(), 256);
+        let spans = t.spans(0, usize::MAX);
+        assert_eq!(spans.len(), 8);
+        let mut seen = std::collections::HashSet::new();
+        for sp in &spans {
+            assert!(seen.insert(sp.trace_id), "duplicate span {}", sp.trace_id);
+            assert_eq!(sp.total_ns, sp.trace_id, "torn span {}", sp.trace_id);
+            assert_eq!(sp.stages.get(Stage::Execute), sp.trace_id);
+            let (w, i) = (sp.trace_id / 1_000, sp.trace_id % 1_000);
+            assert!(w < 4 && (1..=64).contains(&i), "span {} was never pushed", sp.trace_id);
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_drops_spans() {
+        let t = Tracer::with_capacity(false, 8);
+        t.push(SpanRecord::request(1, 1, 1, 10, StageTimer::default()));
+        assert!(!t.enabled());
+        assert_eq!(t.pushed(), 0);
+        assert!(t.spans(0, usize::MAX).is_empty());
+        let j = t.render_json(0, 16);
+        assert!(j.contains("\"enabled\":false"), "{j}");
+        assert!(j.contains("\"spans\":[]"), "{j}");
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(a > 0 && b > a);
+    }
+
+    #[test]
+    fn render_json_parses_and_filters() {
+        let t = Tracer::with_capacity(true, 8);
+        let mut st = StageTimer::default();
+        st.add(Stage::Execute, 2_000_000);
+        t.push(SpanRecord::batch(3, vec![1, 2], 2, st, 0));
+        let j = t.render_json(0, 16);
+        let parsed = crate::json::Json::parse(&j).expect("tracez JSON must parse");
+        assert_eq!(parsed.get("count").and_then(|c| c.as_usize()), Some(1));
+        assert_eq!(parsed.get("spans").and_then(|s| s.as_arr()).map(|a| a.len()), Some(1));
+        // 2 ms span filtered out by min_us = 3000.
+        let none = t.render_json(3_000, 16);
+        assert!(none.contains("\"count\":0"), "{none}");
+    }
+}

@@ -38,9 +38,12 @@
 //!   encoded once via a content-hash cache; PJRT is the feature-gated
 //!   alternative), the batching worker (backpressure, per-request
 //!   deadlines, explicit batch-failure answers), a zero-dependency HTTP
-//!   listener (`GET /metrics`, `POST /infer`), quantization through the
-//!   vector codec with buffer reuse, and bounded-reservoir
-//!   codec/execute-split metrics.
+//!   listener (`GET /metrics`, `POST /infer`, `GET /debug/tracez`),
+//!   quantization through the vector codec with buffer reuse, and a
+//!   zero-dependency observability layer: per-request trace spans with
+//!   staged nanosecond timings, power-of-2 log-bucketed latency/queue/
+//!   codec/execute histograms alongside the bounded-reservoir quantiles,
+//!   and HTTP connection/response counters (see docs/OBSERVABILITY.md).
 //! - [`harness`] — self-contained benchmark harness (criterion-style) with
 //!   JSON emission for `BENCH_*.json` artifacts.
 //! - [`error`] — in-tree anyhow-style error type (offline dependency set).

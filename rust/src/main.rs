@@ -99,6 +99,7 @@ fn serve(o: ServeOpts) -> positron::error::Result<()> {
         weight_format: o.format,
         model_file: o.format.model_file().into(),
         deadline: o.deadline_ms.map(Duration::from_millis),
+        tracing: o.tracing,
         ..Default::default()
     };
     let (server, weights) = if o.synthetic {
@@ -120,8 +121,8 @@ fn serve(o: ServeOpts) -> positron::error::Result<()> {
     if let Some(addr) = &o.http {
         let listener = http::serve(addr, server.clone())?;
         println!(
-            "listening on http://{} — GET /metrics, GET /healthz, POST /infer \
-             {{\"features\":[…]}} (Ctrl-C to stop)",
+            "listening on http://{} — GET /metrics, GET /healthz, GET /debug/tracez, \
+             POST /infer {{\"features\":[…]}} (Ctrl-C to stop)",
             listener.local_addr()
         );
         loop {

@@ -118,6 +118,56 @@ where
     for_each_row_block(threads, len, 1, out, f);
 }
 
+/// [`for_each_block`] plus summed per-thread worker nanoseconds: each
+/// worker times its own shard into a plain `&mut u64` slot handed out
+/// before the spawn (per-thread accumulation, merged after the join — no
+/// atomics anywhere near the lane loops), and the caller gets the total
+/// CPU time across shards. The block split is **identical** to
+/// [`for_each_block`] for the same `threads`, so outputs stay
+/// bit-identical to the untimed path.
+pub fn for_each_block_timed<T, F>(threads: usize, out: &mut [T], f: F) -> u64
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = out.len();
+    let t = threads.clamp(1, len.max(1));
+    if t <= 1 {
+        let t0 = std::time::Instant::now();
+        f(0, out);
+        return t0.elapsed().as_nanos() as u64;
+    }
+    let base = len / t;
+    let rem = len % t;
+    let mut shard_ns = vec![0u64; t];
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest = out;
+        let mut off = 0usize;
+        let mut slots = shard_ns.iter_mut();
+        for i in 0..t {
+            let n = base + usize::from(i < rem);
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(n);
+            rest = tail;
+            let o = off;
+            off += n;
+            let slot = slots.next().expect("one slot per shard");
+            if i == t - 1 {
+                let t0 = std::time::Instant::now();
+                fr(o, block);
+                *slot = t0.elapsed().as_nanos() as u64;
+            } else {
+                s.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    fr(o, block);
+                    *slot = t0.elapsed().as_nanos() as u64;
+                });
+            }
+        }
+    });
+    shard_ns.iter().sum()
+}
+
 // ----------------------------------------------------------------------
 // Sharded batch codec — the generic family. Each entry point splits the
 // batch into contiguous blocks and runs the serial lane codec on every
@@ -221,6 +271,19 @@ pub fn par_bp_roundtrip_in_place_with<E: LaneElem>(threads: usize, xs: &mut [E])
 /// Sharded fused serving-spec roundtrip in place (auto shards).
 pub fn par_bp_roundtrip_in_place<E: LaneElem>(xs: &mut [E]) {
     par_bp_roundtrip_in_place_with::<E>(auto_shards(xs.len(), CODEC_MIN_SHARD), xs);
+}
+
+/// [`par_bp_roundtrip_in_place_with`] plus summed per-thread worker
+/// nanoseconds (the serving profiler's codec CPU-cost hook). Same shard
+/// split, bit-identical output for any thread count.
+pub fn par_bp_roundtrip_in_place_timed_with<E: LaneElem>(threads: usize, xs: &mut [E]) -> u64 {
+    for_each_block_timed(threads, xs, |_, block| lane::bp_roundtrip_in_place::<E>(block))
+}
+
+/// Auto-shard form of [`par_bp_roundtrip_in_place_timed_with`] — uses the
+/// same [`auto_shards`] split as [`par_bp_roundtrip_in_place`].
+pub fn par_bp_roundtrip_in_place_timed<E: LaneElem>(xs: &mut [E]) -> u64 {
+    par_bp_roundtrip_in_place_timed_with::<E>(auto_shards(xs.len(), CODEC_MIN_SHARD), xs)
 }
 
 // ----------------------------------------------------------------------
@@ -478,6 +541,44 @@ mod tests {
         let mut w2 = vec![0u32; xs32.len()];
         par_bp_encode_into(&xs32, &mut w2);
         assert_eq!(w, w2);
+    }
+
+    #[test]
+    fn timed_block_split_is_bit_identical_and_reports_time() {
+        // The timed fork-join must use the exact split of the untimed one
+        // (so staged inputs stay bit-identical under profiling) and must
+        // report nonzero summed worker time for real work.
+        let mut rng = crate::testutil::Rng::new(0x71eed);
+        let xs: Vec<f32> = (0..65_537)
+            .map(|_| {
+                let v = f32::from_bits(rng.next_u32());
+                if v.is_finite() { v } else { 0.75 }
+            })
+            .collect();
+        for t in [1usize, 2, 7] {
+            let mut plain = xs.clone();
+            bp32_roundtrip_in_place_with(t, &mut plain);
+            let mut timed = xs.clone();
+            let ns = par_bp_roundtrip_in_place_timed_with::<f32>(t, &mut timed);
+            assert_eq!(
+                timed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                plain.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "t={t}"
+            );
+            assert!(ns > 0, "t={t}: 64Ki roundtrip must take measurable time");
+        }
+        // Auto form matches the auto-shard untimed path too.
+        let mut a = xs.clone();
+        par_bp_roundtrip_in_place::<f32>(&mut a);
+        let mut b = xs.clone();
+        let _ = par_bp_roundtrip_in_place_timed::<f32>(&mut b);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Degenerate inputs stay safe (timing an empty slice is fine).
+        let mut empty: Vec<f32> = Vec::new();
+        let _ = for_each_block_timed(4, &mut empty, |_, _| {});
     }
 
     #[test]

@@ -340,6 +340,171 @@ fn http_maps_deadline_to_504() {
 }
 
 #[test]
+fn tracez_http_roundtrip_correlates_infer_spans() {
+    let w = model();
+    let server = Arc::new(start_native(&w, ServerConfig::default()));
+    let listener = http::serve("127.0.0.1:0", server.clone()).expect("bind ephemeral port");
+    let addr = listener.local_addr();
+
+    // POST /infer echoes a nonzero trace id.
+    let x = &w.golden_x[..w.d];
+    let body = format!(
+        "{{\"features\":[{}]}}",
+        x.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(",")
+    );
+    let (status, resp) = http::http_request(&addr, "POST", "/infer", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let j = positron::json::Json::parse(&resp).unwrap();
+    let trace_id = j.get("trace_id").and_then(|t| t.as_f64()).expect("trace_id echoed") as u64;
+    assert!(trace_id >= 1, "trace ids start at 1");
+
+    // The request span is pushed after the response bytes are written —
+    // give the connection thread a moment to complete it.
+    let mut request_span = None;
+    for _ in 0..100 {
+        let (status, tz) = http::http_request(&addr, "GET", "/debug/tracez", "").unwrap();
+        assert_eq!(status, 200);
+        let tz = positron::json::Json::parse(&tz).expect("tracez is JSON");
+        let spans = tz.get("spans").and_then(|s| s.as_arr()).expect("spans array").to_vec();
+        request_span = spans
+            .iter()
+            .find(|s| {
+                s.get("trace_id").and_then(|t| t.as_f64()) == Some(trace_id as f64)
+                    && s.get("kind").and_then(|k| k.as_str()) == Some("request")
+            })
+            .cloned();
+        if request_span.is_some() {
+            // Its batch span must be retained too, listing it as a member.
+            let batch_id =
+                request_span.as_ref().unwrap().get("batch_id").and_then(|b| b.as_f64()).unwrap();
+            let batch = spans
+                .iter()
+                .find(|s| {
+                    s.get("kind").and_then(|k| k.as_str()) == Some("batch")
+                        && s.get("trace_id").and_then(|t| t.as_f64()) == Some(batch_id)
+                })
+                .expect("batch span retained");
+            let members = batch.get("members").and_then(|m| m.as_arr()).expect("members");
+            assert!(
+                members.iter().any(|m| m.as_f64() == Some(trace_id as f64)),
+                "batch span must list the request as a member"
+            );
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let span = request_span.expect("request span must appear in /debug/tracez");
+    // Every stage key is present and the span carries its wall total.
+    let stages = span.get("stages").expect("stages object");
+    for key in [
+        "accept_ns", "parse_ns", "queue_wait_ns", "staging_ns", "input_codec_ns",
+        "execute_ns", "readout_ns", "serialize_ns", "write_ns",
+    ] {
+        assert!(stages.get(key).and_then(|v| v.as_f64()).is_some(), "missing stage {key}");
+    }
+    assert!(span.get("total_ns").and_then(|t| t.as_f64()).unwrap() > 0.0);
+
+    // ?min_us= far above any span filters everything out; ?limit= caps.
+    let (status, none) =
+        http::http_request(&addr, "GET", "/debug/tracez?min_us=10000000", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(none.contains("\"count\":0"), "{none}");
+    let (status, one) = http::http_request(&addr, "GET", "/debug/tracez?limit=1", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(one.contains("\"count\":1"), "{one}");
+
+    // Unknown debug paths 404 like any other route.
+    let (status, _) = http::http_request(&addr, "GET", "/debug/nope", "").unwrap();
+    assert_eq!(status, 404);
+}
+
+#[test]
+fn span_stage_sum_tracks_recorded_latency() {
+    // The span contract: the server-side stage sum (queue wait through
+    // readout) accounts for the recorded latency within 5% (plus a small
+    // absolute floor for scheduling/clock granularity on loaded CI).
+    let w = model();
+    let server = start_native(&w, ServerConfig::default());
+    for g in 0..8 {
+        let feats = w.golden_x[g * w.d..(g + 1) * w.d].to_vec();
+        let resp = server.try_infer(feats).unwrap();
+        let latency_ns = resp.latency.as_nanos() as u64;
+        let sum = resp.stages.server_sum();
+        let tol = (latency_ns / 20).max(250_000);
+        assert!(
+            sum.abs_diff(latency_ns) <= tol,
+            "row {g}: stage sum {sum} ns vs latency {latency_ns} ns (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn tracing_toggle_leaves_logits_bit_identical() {
+    // Observability must never perturb the numeric path: logits with
+    // span retention on and off are bit-identical to each other and to
+    // the scalar reference.
+    let w = model();
+    let on = start_native(&w, ServerConfig { tracing: true, ..Default::default() });
+    let off = start_native(&w, ServerConfig { tracing: false, ..Default::default() });
+    for g in 0..w.batch {
+        let feats = w.golden_x[g * w.d..(g + 1) * w.d].to_vec();
+        let want = reference_forward(&w, WeightFormat::Bp32, &quantizer::roundtrip(&feats));
+        let ra = on.infer(feats.clone()).unwrap();
+        let rb = off.infer(feats).unwrap();
+        assert_eq!(bits(&ra.logits), bits(&want), "traced row {g}");
+        assert_eq!(bits(&rb.logits), bits(&want), "untraced row {g}");
+        assert!(ra.trace_id >= 1 && rb.trace_id >= 1, "ids flow regardless of retention");
+    }
+    assert!(on.tracer().pushed() > 0, "traced server must retain spans");
+    assert_eq!(off.tracer().pushed(), 0, "untraced server must retain none");
+}
+
+#[test]
+fn histograms_and_http_counters_exposed_over_metrics() {
+    let w = model();
+    let server = Arc::new(start_native(&w, ServerConfig::default()));
+    let listener = http::serve("127.0.0.1:0", server.clone()).expect("bind ephemeral port");
+    let addr = listener.local_addr();
+    for g in 0..3 {
+        let x = &w.golden_x[g * w.d..(g + 1) * w.d];
+        let body = format!(
+            "{{\"features\":[{}]}}",
+            x.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(",")
+        );
+        let (status, _) = http::http_request(&addr, "POST", "/infer", &body).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, text) = http::http_request(&addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    // Histograms render in full _bucket/_sum/_count form with live counts.
+    for name in [
+        "positron_request_latency_us_bucket{le=\"+Inf\"}",
+        "positron_request_latency_us_sum",
+        "positron_queue_wait_us_count",
+        "positron_codec_batch_ns_bucket",
+        "positron_execute_batch_ns_count",
+        "positron_staging_ns_total",
+        "positron_readout_ns_total",
+        "positron_codec_worker_ns_total",
+    ] {
+        assert!(text.contains(name), "missing `{name}` in:\n{text}");
+    }
+    let lat_count = http::metric_value(&text, "positron_request_latency_us_count").unwrap();
+    assert!(lat_count >= 3.0, "{text}");
+    // Connection/response counters: the three POSTs happened before this
+    // scrape (the scrape's own response is counted after rendering).
+    let conns = http::metric_value(&text, "positron_http_connections_total").unwrap();
+    assert!(conns >= 4.0, "3 POSTs + this scrape: {text}");
+    assert!(
+        text.lines().any(|l| {
+            l.starts_with("positron_http_responses_total{class=\"2xx\"}")
+                && l.split(' ').nth(1).and_then(|v| v.parse::<f64>().ok()).is_some_and(|v| v >= 3.0)
+        }),
+        "{text}"
+    );
+}
+
+#[test]
 fn weight_cache_shared_across_servers() {
     let w = model();
     let _a = start_native(&w, ServerConfig::default());

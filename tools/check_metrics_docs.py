@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Metrics/docs drift check (stdlib only, mirrored by the in-crate test
+`every_rendered_metric_is_documented`).
+
+Forward direction (hard failure): every `positron_*` metric-family name
+that appears in the coordinator sources must be documented in
+docs/OBSERVABILITY.md. Histogram families rendered via
+`HistSnapshot::render_into` get `_bucket`/`_sum`/`_count` suffixes
+appended at render time, so for each base name found next to a
+`render_into` call the three suffixed names are required too.
+
+Reverse direction (warning only): names documented but never found in
+the sources are reported — stale docs are annoying but not a build
+break, since prose may legitimately mention families from older
+releases while migration notes exist.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs" / "OBSERVABILITY.md"
+SOURCES = [
+    REPO / "rust" / "src" / "coordinator" / "metrics.rs",
+    REPO / "rust" / "src" / "coordinator" / "trace.rs",
+    REPO / "rust" / "src" / "coordinator" / "http.rs",
+    REPO / "rust" / "src" / "cli.rs",
+]
+
+NAME_RE = re.compile(r"positron_[a-z0-9_]+")
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+def rendered_names() -> set[str]:
+    """Every positron_* family the Rust sources can emit."""
+    names: set[str] = set()
+    for src in SOURCES:
+        text = src.read_text(encoding="utf-8")
+        for line in text.splitlines():
+            # Skip pure comment lines: prose may mention historic names.
+            if line.lstrip().startswith(("//", "///", "//!")):
+                continue
+            for name in NAME_RE.findall(line):
+                names.add(name)
+            # A histogram render emits the three suffixed families.
+            if "render_into" in line:
+                for name in NAME_RE.findall(line):
+                    for suffix in HIST_SUFFIXES:
+                        names.add(name + suffix)
+    return names
+
+
+def documented_names() -> set[str]:
+    return set(NAME_RE.findall(DOCS.read_text(encoding="utf-8")))
+
+
+def main() -> int:
+    if not DOCS.is_file():
+        print(f"error: {DOCS} is missing", file=sys.stderr)
+        return 1
+    rendered = rendered_names()
+    documented = documented_names()
+
+    missing = sorted(rendered - documented)
+    if missing:
+        print(
+            "error: exported metric families missing from docs/OBSERVABILITY.md:",
+            file=sys.stderr,
+        )
+        for name in missing:
+            print(f"  {name}", file=sys.stderr)
+        return 1
+
+    # Reverse check: strip histogram suffixes before deciding a
+    # documented name is stale, since the base family name only exists
+    # in the sources without the suffix.
+    stale = []
+    for name in sorted(documented - rendered):
+        base = name
+        for suffix in HIST_SUFFIXES:
+            if name.endswith(suffix):
+                base = name[: -len(suffix)]
+                break
+        if base not in rendered and name not in rendered:
+            stale.append(name)
+    for name in stale:
+        print(f"warning: documented but not found in sources: {name}")
+
+    print(f"ok: {len(rendered)} exported metric families all documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
