@@ -39,7 +39,7 @@ fn main() -> positron::error::Result<()> {
         variants.push(("pjrt b-posit quantized", BackendKind::Pjrt, WeightFormat::Bp32));
     }
     for (label, backend, format) in variants {
-        let cfg = ServerConfig { backend, ..ServerConfig::for_format(format) };
+        let cfg = ServerConfig::builder().backend(backend).format(format).build()?;
         let server = Arc::new(InferenceServer::start(dir.clone(), cfg)?);
 
         // 4 concurrent clients × 512 requests each.

@@ -44,6 +44,13 @@ pub struct ServeOpts {
     /// default; `--no-tracing` turns span retention off — histograms
     /// and counters stay on either way).
     pub tracing: bool,
+    /// Extra tiers to register alongside `format` (`--models
+    /// f32,bp64` or `--models all`): one listener serves them all at
+    /// `/v1/infer/<name>` over the same weights, sharing the
+    /// content-hash weight cache. Native backend only.
+    pub models: Vec<WeightFormat>,
+    /// Per-tier admission budget override (`--max-inflight N`).
+    pub max_inflight: Option<usize>,
 }
 
 /// `serve-bench` options.
@@ -173,6 +180,8 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                 deadline_ms: None,
                 synthetic: false,
                 tracing: true,
+                models: Vec::new(),
+                max_inflight: None,
             };
             while let Some(a) = it.next() {
                 match a.as_str() {
@@ -196,11 +205,35 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                     }
                     "--synthetic" => o.synthetic = true,
                     "--no-tracing" => o.tracing = false,
+                    "--models" => {
+                        let list = it.next().ok_or("--models needs a comma list or `all`")?;
+                        o.models = if list == "all" {
+                            WeightFormat::ALL.to_vec()
+                        } else {
+                            list.split(',')
+                                .map(|s| WeightFormat::parse(s.trim()))
+                                .collect::<Result<Vec<_>, String>>()?
+                        };
+                    }
+                    "--max-inflight" => {
+                        let arg = it.next().ok_or("--max-inflight needs N")?;
+                        o.max_inflight = Some(arg.parse().map_err(|e| e.to_string())?)
+                    }
                     other => return Err(format!("serve: unknown flag {other}")),
                 }
             }
             if o.synthetic && o.backend == BackendKind::Pjrt {
                 return Err("serve: --synthetic implies the native backend".into());
+            }
+            if !o.models.is_empty() {
+                if o.backend == BackendKind::Pjrt {
+                    return Err("serve: --models is native-backend only".into());
+                }
+                if o.http.is_none() {
+                    return Err("serve: --models needs --http (multi-model routing is an \
+                                HTTP feature)"
+                        .into());
+                }
             }
             Ok(Command::Serve(o))
         }
@@ -294,12 +327,17 @@ COMMANDS:
                              writes BENCH_vector_gemm.json by default
   serve [--requests N] [--artifacts DIR] [--backend native|pjrt]
         [--format bp32|f32|bp64] [--http ADDR:PORT] [--deadline-ms N] [--synthetic]
-        [--no-tracing]
+        [--no-tracing] [--models f32,bp64|all] [--max-inflight N]
                              inference server on the in-tree native backend
                              (default; needs only weights.json) or PJRT;
-                             --http serves GET /metrics, GET /healthz,
-                             POST /infer and GET /debug/tracez (per-request
-                             spans, ?min_us= / ?limit=) on a real listener;
+                             --http serves POST /v1/infer/<model>,
+                             GET /v1/models, legacy POST /infer,
+                             GET /metrics, GET /healthz and
+                             GET /debug/tracez (?min_us= / ?limit=) on an
+                             event-driven keep-alive listener
+                             (docs/HTTP_API.md); --models registers extra
+                             tiers over the same weights; --max-inflight
+                             sets the per-tier admission budget;
                              --synthetic serves a deterministic model with
                              no artifacts; --no-tracing turns span
                              retention off (histograms stay on)
@@ -307,9 +345,12 @@ COMMANDS:
         [--json PATH | --no-json]
                              e2e native serving bench: in-process + HTTP
                              logits parity vs the scalar reference (hard
-                             gate), then closed-loop throughput and a
-                             tracing-overhead measurement (spans on vs
-                             off, logits bit-compared); writes
+                             gate), closed-loop throughput, tracing
+                             overhead (spans on vs off, logits
+                             bit-compared), keep-alive parity on one
+                             connection, event-loop vs thread-per-conn
+                             baseline, and a connections × batch ×
+                             deadline scaling sweep; writes
                              BENCH_serve_native.json by default
   help                       this message
 ";
@@ -880,6 +921,73 @@ fn closed_loop(
     (done, done as f64 / t0.elapsed().as_secs_f64().max(1e-9))
 }
 
+/// Drive `requests` closed-loop HTTP inferences from `conns` concurrent
+/// connections. With `keep_alive`, every client opens one connection
+/// up front (all held simultaneously — this is what demonstrates the
+/// event loop past the old 64-thread cap) and reuses it; otherwise
+/// each request is a fresh `Connection: close` round trip, matching the
+/// thread-per-connection baseline's contract. Returns
+/// `(ok, shed, req_per_s)` where `shed` counts 429/503 answers.
+fn http_closed_loop(
+    addr: &std::net::SocketAddr,
+    bodies: &[String],
+    conns: usize,
+    requests: usize,
+    keep_alive: bool,
+) -> (usize, usize, f64) {
+    use crate::coordinator::http;
+    let conns = conns.max(1);
+    let per_conn = requests.div_ceil(conns);
+    let barrier = std::sync::Barrier::new(conns + 1);
+    let (mut ok, mut shed) = (0usize, 0usize);
+    let mut t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for cid in 0..conns {
+            let barrier = &barrier;
+            handles.push(s.spawn(move || {
+                let mut client = None;
+                if keep_alive {
+                    // Retry: a big fan-in can transiently overflow the
+                    // accept backlog.
+                    for _ in 0..50 {
+                        match http::HttpClient::connect(addr) {
+                            Ok(c) => {
+                                client = Some(c);
+                                break;
+                            }
+                            Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+                        }
+                    }
+                }
+                barrier.wait();
+                let (mut ok, mut shed) = (0usize, 0usize);
+                for i in 0..per_conn {
+                    let body = &bodies[(cid * 31 + i) % bodies.len()];
+                    let status = match client.as_mut() {
+                        Some(c) => c.request("POST", "/infer", body).map(|r| r.status),
+                        None => http::http_request(addr, "POST", "/infer", body).map(|r| r.0),
+                    };
+                    match status {
+                        Ok(200) => ok += 1,
+                        Ok(429) | Ok(503) => shed += 1,
+                        _ => {}
+                    }
+                }
+                (ok, shed)
+            }));
+        }
+        barrier.wait();
+        t0 = std::time::Instant::now();
+        for hnd in handles {
+            let (o2, s2) = hnd.join().unwrap();
+            ok += o2;
+            shed += s2;
+        }
+    });
+    (ok, shed, ok as f64 / t0.elapsed().as_secs_f64().max(1e-9))
+}
+
 /// Execute `serve-bench`: the end-to-end native serving benchmark.
 ///
 /// Starts the server on the native backend over a deterministic
@@ -900,9 +1008,18 @@ fn closed_loop(
 ///    are comparable across runs), span retention on vs off, rounds
 ///    interleaved and best-of kept; logits from both must be
 ///    bit-identical to the scalar reference (`tracing_parity`).
+/// 5. **Front-end scaling** — keep-alive parity (many requests reusing
+///    one connection, each bit-compared to the reference:
+///    `keepalive_parity`), the event loop raced against the
+///    thread-per-connection baseline at the small sweep point
+///    (`req_per_s_event` / `req_per_s_threaded` — the CI gate requires
+///    the event loop to win), and a closed-loop scaling sweep over
+///    connections × batch × deadline (every connection held open
+///    simultaneously — the 256-connection points run past the old
+///    64-thread cap) recording req/s and shed rate per point (`sweep`).
 ///
-/// The parity/HTTP gates failing is a hard error (non-zero exit); all
-/// flags and the overhead percentage are recorded in
+/// The parity/HTTP/keep-alive gates failing is a hard error (non-zero
+/// exit); all flags and measurements are recorded in
 /// `BENCH_serve_native.json` for the CI bench gate.
 pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
     use crate::coordinator::{backend, http, InferenceServer, ServerConfig};
@@ -914,10 +1031,11 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
     }
     let (d, h, c, batch) = if o.small { (16, 24, 8, 32) } else { (64, 128, 16, 64) };
     let w = backend::synth_weights(d, h, c, batch, 0x5e7e);
-    let cfg = ServerConfig {
-        max_wait: Duration::from_micros(500),
-        ..ServerConfig::for_format(o.format)
-    };
+    let cfg = ServerConfig::builder()
+        .format(o.format)
+        .max_wait(Duration::from_micros(500))
+        .build()
+        .map_err(|e| format!("{e:#}"))?;
     let server =
         Arc::new(InferenceServer::start_native(w.clone(), cfg).map_err(|e| format!("{e:#}"))?);
     let mut out = Vec::new();
@@ -1008,11 +1126,12 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
     let oreq = if o.small { 128 } else { 512 };
     let ow = backend::synth_weights(od, oh, oc, obatch, 0x0b5e);
     let mk = |tracing: bool| -> Result<Arc<InferenceServer>, String> {
-        let cfg = ServerConfig {
-            max_wait: Duration::from_micros(500),
-            tracing,
-            ..ServerConfig::for_format(o.format)
-        };
+        let cfg = ServerConfig::builder()
+            .format(o.format)
+            .max_wait(Duration::from_micros(500))
+            .tracing(tracing)
+            .build()
+            .map_err(|e| format!("{e:#}"))?;
         Ok(Arc::new(InferenceServer::start_native(ow.clone(), cfg).map_err(|e| format!("{e:#}"))?))
     };
     let traced = mk(true)?;
@@ -1048,8 +1167,107 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
         if tracing_parity { "bit-identical with tracing on/off" } else { "DIFFER — BUG" }
     ));
 
+    // 5. HTTP front end: keep-alive parity on one reused connection,
+    //    the event loop vs the thread-per-connection baseline, and a
+    //    closed-loop scaling sweep (connections × batch × deadline).
+    let bodies: Vec<String> = (0..batch)
+        .map(|g| {
+            let x = &w.golden_x[g * d..(g + 1) * d];
+            format!(
+                "{{\"features\":[{}]}}",
+                x.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(",")
+            )
+        })
+        .collect();
+    let ev_listener =
+        http::serve("127.0.0.1:0", server.clone()).map_err(|e| format!("{e:#}"))?;
+    let ev_addr = ev_listener.local_addr();
+    let mut keepalive_parity = true;
+    let mut ka_client = http::HttpClient::connect(&ev_addr)?;
+    let ka_rounds = 3usize;
+    for _ in 0..ka_rounds {
+        for (g, body) in bodies.iter().enumerate().take(batch.min(8)) {
+            let x = &w.golden_x[g * d..(g + 1) * d];
+            let want =
+                backend::reference_forward(&w, o.format, &backend::stage_inputs(o.format, x));
+            let resp = ka_client.request("POST", "/infer", body)?;
+            let logits = crate::json::Json::parse(&resp.body)
+                .ok()
+                .and_then(|j| j.get("logits").and_then(|l| l.as_f32_vec()))
+                .unwrap_or_default();
+            keepalive_parity &= resp.status == 200
+                && logits.len() == want.len()
+                && logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+        }
+    }
+    drop(ka_client);
+    out.push(format!(
+        "keep-alive parity ({} requests on one connection): {}",
+        ka_rounds * batch.min(8),
+        if keepalive_parity { "bit-identical" } else { "MISMATCH — BUG" }
+    ));
+
+    let base_conns = 16usize;
+    let base_reqs = o.requests.min(if o.small { 256 } else { 1024 });
+    let (ev_ok, _, req_per_s_event) =
+        http_closed_loop(&ev_addr, &bodies, base_conns, base_reqs, true);
+    drop(ev_listener);
+    let th_listener =
+        http::serve_threaded("127.0.0.1:0", server.clone()).map_err(|e| format!("{e:#}"))?;
+    let (th_ok, _, req_per_s_threaded) =
+        http_closed_loop(&th_listener.local_addr(), &bodies, base_conns, base_reqs, false);
+    drop(th_listener);
+    out.push(format!(
+        "front-end baseline ({base_conns} conns × {base_reqs} reqs): event loop \
+         {req_per_s_event:.0} req/s ({ev_ok} ok) vs thread-per-conn \
+         {req_per_s_threaded:.0} req/s ({th_ok} ok)"
+    ));
+
+    let sweep_conns: &[usize] = if o.small { &[16, 256] } else { &[64, 256] };
+    let sweep_batch: &[usize] = if o.small { &[8, 32] } else { &[16, 64] };
+    let sweep_deadline: &[Option<u64>] = &[None, Some(25)];
+    let mut sweep_json = Vec::new();
+    out.push("scaling sweep (closed-loop keep-alive HTTP):".to_string());
+    for &sc in sweep_conns {
+        for &sb in sweep_batch {
+            for &sd in sweep_deadline {
+                let mut builder = ServerConfig::builder()
+                    .format(o.format)
+                    .max_wait(Duration::from_micros(500))
+                    .max_batch(sb)
+                    .max_inflight(sc.max(sb));
+                if let Some(ms) = sd {
+                    builder = builder.deadline(Duration::from_millis(ms));
+                }
+                let scfg = builder.build().map_err(|e| format!("{e:#}"))?;
+                let srv = Arc::new(
+                    InferenceServer::start_native(w.clone(), scfg)
+                        .map_err(|e| format!("{e:#}"))?,
+                );
+                let lst =
+                    http::serve("127.0.0.1:0", srv.clone()).map_err(|e| format!("{e:#}"))?;
+                let (sok, ssh, rps) =
+                    http_closed_loop(&lst.local_addr(), &bodies, sc, o.requests, true);
+                drop(lst);
+                let shed_rate = ssh as f64 / (sok + ssh).max(1) as f64;
+                out.push(format!(
+                    "  conns {sc:>4}  batch {sb:>3}  deadline {:>4}  {rps:>8.0} req/s  \
+                     ok {sok}  shed {ssh} ({:.1}%)",
+                    sd.map_or("none".to_string(), |m| format!("{m}ms")),
+                    100.0 * shed_rate
+                ));
+                sweep_json.push(format!(
+                    "{{\"connections\":{sc},\"batch\":{sb},\"deadline_ms\":{},\"ok\":{sok},\
+                     \"shed\":{ssh},\"req_per_s\":{rps:.1},\"shed_rate\":{shed_rate:.4}}}",
+                    sd.map_or("null".to_string(), |m| m.to_string())
+                ));
+            }
+        }
+    }
+
     if let Some(path) = &o.json {
         let batches = snap.batches.max(1) as f64;
+        let sweep = sweep_json.join(",");
         let json = format!(
             "{{\"bench\":\"serve_native\",\"format\":\"{}\",\"small\":{},\"d\":{d},\"h\":{h},\
              \"c\":{c},\"requests\":{},\"clients\":{},\"parity\":{parity},\
@@ -1061,7 +1279,10 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
              \"readout_ns_per_batch\":{:.0},\"codec_worker_ns_total\":{},\
              \"req_per_s_traced\":{best_on:.1},\"req_per_s_untraced\":{best_off:.1},\
              \"tracing_overhead_pct\":{tracing_overhead_pct:.2},\
-             \"tracing_parity\":{tracing_parity},\"threads\":{}}}",
+             \"tracing_parity\":{tracing_parity},\"keepalive_parity\":{keepalive_parity},\
+             \"req_per_s_event\":{req_per_s_event:.1},\
+             \"req_per_s_threaded\":{req_per_s_threaded:.1},\
+             \"sweep\":[{sweep}],\"threads\":{}}}",
             o.format.name(),
             o.small,
             done,
@@ -1089,6 +1310,9 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
     }
     if !http_ok {
         return Err("HTTP round-trip failed (status, parity, /metrics, or /debug/tracez)".into());
+    }
+    if !keepalive_parity {
+        return Err("keep-alive responses differ from the scalar reference".into());
     }
     Ok(out)
 }
@@ -1204,6 +1428,43 @@ mod tests {
         }
         assert!(parse(&["serve".into(), "--backend".into(), "gpu".into()]).is_err());
         assert!(parse(&["serve".into(), "--format".into(), "fp8".into()]).is_err());
+        // Multi-model routing flags.
+        let args: Vec<String> =
+            ["serve", "--http", "127.0.0.1:0", "--models", "f32,bp64", "--max-inflight", "128"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        match parse(&args).unwrap() {
+            Command::Serve(o) => {
+                assert_eq!(o.models, vec![WeightFormat::F32, WeightFormat::Bp64]);
+                assert_eq!(o.max_inflight, Some(128));
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        let args: Vec<String> = ["serve", "--http", "127.0.0.1:0", "--models", "all"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        match parse(&args).unwrap() {
+            Command::Serve(o) => assert_eq!(o.models, WeightFormat::ALL.to_vec()),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        // --models without a listener, or on PJRT, is rejected.
+        assert!(parse(&["serve".into(), "--models".into(), "f32".into()]).is_err());
+        let args: Vec<String> = [
+            "serve",
+            "--http",
+            "127.0.0.1:0",
+            "--backend",
+            "pjrt",
+            "--models",
+            "f32",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(parse(&args).is_err());
+        assert!(parse(&["serve".into(), "--models".into(), "fp8".into()]).is_err());
         assert!(
             parse(&["serve".into(), "--synthetic".into(), "--backend".into(), "pjrt".into()])
                 .is_err()

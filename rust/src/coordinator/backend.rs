@@ -103,6 +103,11 @@ impl WeightFormat {
     pub fn quantizes_inputs(&self) -> bool {
         matches!(self, WeightFormat::Bp32)
     }
+
+    /// Every servable tier, float baseline first (the `--models all`
+    /// expansion and the registry tooling iterate this).
+    pub const ALL: [WeightFormat; 3] =
+        [WeightFormat::F32, WeightFormat::Bp32, WeightFormat::Bp64];
 }
 
 /// Which executor the server worker builds at startup.

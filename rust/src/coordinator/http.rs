@@ -1,36 +1,64 @@
-//! Zero-dependency HTTP/1.1 listener over [`std::net::TcpListener`] —
-//! the serving stack's real network surface (the vendored dependency set
-//! has no hyper/axum):
+//! Zero-dependency event-driven HTTP/1.1 front end over
+//! [`std::net::TcpListener`] — the serving stack's real network surface
+//! (the vendored dependency set has no hyper/axum/mio/tokio).
 //!
-//! - `GET /metrics` — the Prometheus-style text from
-//!   [`super::MetricsSnapshot::render`].
+//! # Routes
+//!
+//! - `GET /metrics` — Prometheus-style text from
+//!   [`super::MetricsSnapshot::render`], aggregated across every
+//!   registered model tier.
 //! - `GET /healthz` — liveness probe (`ok`).
-//! - `POST /infer` — body `{"features":[…]}`; replies
-//!   `{"logits":[…],"latency_us":N,"trace_id":N}` (the trace id
-//!   correlates with the request's span in `/debug/tracez`). Infer
-//!   errors map to status codes: bad request → 400, queue full
-//!   (backpressure) → 503, deadline → 504, backend failure → 500.
+//! - `GET /v1/models` — the registered model tiers (name, weight
+//!   format, feature/class dims, admission budget) and the default.
+//! - `POST /v1/infer/<model>` — body `{"features":[…]}`; replies
+//!   `{"logits":[…],"latency_us":N,"trace_id":N}` from the named tier.
+//! - `POST /infer` — legacy alias for the default (first-registered)
+//!   model; request/response bytes are identical to `/v1/infer/<model>`.
 //! - `GET /debug/tracez` — the span ring as JSON, filterable by
-//!   `?min_us=` (drop spans faster than this) and `?limit=` (newest-N);
-//!   unknown `/debug/*` paths 404 like any other route.
+//!   `?min_us=` and `?limit=`.
 //!
-//! One accept thread, one short-lived thread per connection
-//! (connections are `Connection: close`; the real concurrency limit is
-//! the server's bounded queue, which turns overload into 503s rather
-//! than unbounded threads). Request heads are capped at 16 KiB and
-//! bodies at 4 MiB; reads time out so a stalled peer can't pin a thread.
-//! Connections and responses (by status class) are counted into
-//! [`super::Metrics`]; successful `/infer` requests complete their trace
-//! span *here* — after the response bytes are written — so the span's
-//! serialize/write stages and total wall time cover the full HTTP
-//! lifetime, not just the inference.
+//! Errors render a stable JSON body `{"code","message","trace_id"}`
+//! (see [`ApiError`]; `trace_id` is 0 when the request never reached
+//! the batch queue) with status 400/404/429/503/504/500, documented in
+//! `docs/HTTP_API.md`.
+//!
+//! # Connection layer
+//!
+//! One event-loop thread owns every connection: a nonblocking accept
+//! plus a readiness poller (`epoll` via raw syscall prototypes on
+//! Linux — std already links libc, so declaring the three prototypes
+//! ourselves keeps the dependency set empty — and `poll(2)` on other
+//! unix) drives per-connection state machines with HTTP/1.1 keep-alive
+//! and pipelining (responses are written strictly in request order).
+//! Buffers are bounded (16 KiB heads, 4 MiB bodies, a write high-water
+//! mark that pauses reads), and idle/read/write timeouts reap stalled
+//! peers, so concurrency is limited by [`MAX_CONNS`] descriptors rather
+//! than the old 64-thread cap. Inference never blocks the loop: requests
+//! are submitted through [`InferenceServer::submit`] and the worker's
+//! completion callback wakes the poller through a socketpair waker —
+//! the same waker shutdown uses, so stopping needs no self-connect and
+//! works with any number of open idle connections.
+//!
+//! Admission control fronts the batch queue: once
+//! [`ModelRegistry::max_inflight`] requests sit between admission and
+//! response write, further infer requests are shed with a fast 503 +
+//! `Retry-After` after framing but *before* body parsing (counted in
+//! `positron_http_shed_total`); a full batch queue is 429, a deadline
+//! missed while queued is 504. Observability routes are never shed.
+//! Connection states ([`Metrics::set_conn_states`]), keep-alive reuse,
+//! and responses by status class are all exported via `/metrics`.
+//!
+//! [`serve_threaded`] keeps the PR 4 thread-per-connection design as a
+//! one-request-per-connection baseline: `serve-bench` races the event
+//! loop against it (CI gates on the event loop winning), and non-unix
+//! builds fall back to it.
 //!
 //! Float fidelity: logits are rendered with Rust's shortest-roundtrip
 //! float formatting and parsed back via f64, which is lossless for every
 //! finite f32 — the HTTP round-trip is bit-exact (tests gate on this).
 
 use std::io::{Read, Write};
-use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -39,114 +67,466 @@ use std::time::{Duration, Instant};
 use crate::error::{Context, Result};
 use crate::json::Json;
 
-use super::server::{InferError, InferenceServer};
+use super::server::{InferError, InferenceServer, ModelRegistry, Response};
 use super::trace::{SpanRecord, Stage, StageTimer, TRACE_RING_CAP};
+
+#[cfg(unix)]
+use std::collections::{HashMap, VecDeque};
+#[cfg(unix)]
+use std::os::unix::io::{AsRawFd, RawFd};
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+#[cfg(unix)]
+use std::sync::mpsc::{Receiver, TryRecvError};
+
+#[cfg(unix)]
+use super::metrics::Metrics;
+#[cfg(unix)]
+use super::server::{Notify, ServeError, ServeResult};
+#[cfg(unix)]
+use super::trace::Tracer;
 
 const MAX_HEAD_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+/// Mid-request stall budget: a connection that has started a request
+/// but not completed it within this window is closed.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
-/// Cap on live connection threads: past this, new connections get an
-/// immediate 503 instead of a thread — a stalled-peer (slowloris) flood
-/// can pin at most this many threads for `READ_TIMEOUT`.
+/// Keep-alive connections idle longer than this are closed.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+/// A connection whose response bytes make no write progress for this
+/// long (peer not reading) is closed.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Poller wait granularity — also the timeout-sweep cadence.
+#[cfg(unix)]
+const SWEEP_MS: i32 = 100;
+/// Open-connection ceiling for the event loop; connections past this
+/// get an immediate 503 and close. Replaces the old 64-thread cap.
+pub const MAX_CONNS: usize = 4096;
+/// Per-connection cap on pipelined requests awaiting responses; reads
+/// pause (backpressure) once this many are outstanding.
+#[cfg(unix)]
+const PIPELINE_MAX: usize = 32;
+/// Per-connection write-buffer high-water mark: reads pause until the
+/// peer drains below this.
+#[cfg(unix)]
+const OUT_HIGH_WATER: usize = 256 * 1024;
+/// Thread cap for the [`serve_threaded`] baseline (the PR 4 limit).
 const MAX_CONN_THREADS: usize = 64;
 
-/// A running HTTP listener bound to an [`InferenceServer`]. Shuts down
-/// (and joins the accept thread) on drop.
-pub struct HttpServer {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
+#[cfg(unix)]
+const TOKEN_LISTENER: u64 = u64::MAX;
+#[cfg(unix)]
+const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+// ---------------------------------------------------------------------------
+// Readiness poller: epoll on Linux, poll(2) elsewhere on unix.
+// ---------------------------------------------------------------------------
+
+/// Raw syscall prototypes. std links the platform C library already, so
+/// these `extern "C"` declarations add no dependency; constants are the
+/// stable kernel ABI values.
+#[cfg(target_os = "linux")]
+mod sys {
+    /// Mirror of the kernel's `struct epoll_event`. x86-64 is the one
+    /// ABI where it is packed.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32)
+            -> i32;
+    }
 }
 
-/// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an ephemeral
-/// port) and serve `server` until the returned handle is dropped.
-pub fn serve(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    let local = listener.local_addr().context("local_addr")?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let stop2 = stop.clone();
-    let active = Arc::new(AtomicUsize::new(0));
-    let accept = std::thread::spawn(move || {
-        for conn in listener.incoming() {
-            if stop2.load(Ordering::SeqCst) {
-                break;
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    /// Mirror of `struct pollfd` (identical layout on every unix).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    extern "C" {
+        /// `nfds_t` is `unsigned int` on the BSDs and macOS (the only
+        /// non-Linux unix targets this fallback serves).
+        pub fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+}
+
+/// One readiness event: `(token, readable, writable)`. Errors and
+/// hangups surface as both, so the read/write paths observe them as
+/// EOF/EPIPE and mark the connection dead.
+#[cfg(unix)]
+type ReadyEvent = (u64, bool, bool);
+
+#[cfg(target_os = "linux")]
+struct Poller {
+    epfd: std::os::fd::OwnedFd,
+    events: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    fn new() -> std::io::Result<Poller> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        // SAFETY: epoll_create1 returned a fresh descriptor we own; the
+        // OwnedFd closes it on drop.
+        let epfd = unsafe { std::os::fd::FromRawFd::from_raw_fd(fd) };
+        Ok(Poller { epfd, events: vec![sys::EpollEvent { events: 0, data: 0 }; 1024] })
+    }
+
+    fn ctl(
+        &mut self,
+        op: i32,
+        fd: RawFd,
+        token: u64,
+        read: bool,
+        write: bool,
+    ) -> std::io::Result<()> {
+        let mut mask = 0u32;
+        if read {
+            mask |= sys::EPOLLIN;
+        }
+        if write {
+            mask |= sys::EPOLLOUT;
+        }
+        let mut ev = sys::EpollEvent { events: mask, data: token };
+        let evp =
+            if op == sys::EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev as *mut _ };
+        let rc = unsafe { sys::epoll_ctl(self.epfd.as_raw_fd(), op, fd, evp) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, read, write)
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, read, write)
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> std::io::Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, false, false)
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<ReadyEvent>) {
+        out.clear();
+        let n = unsafe {
+            sys::epoll_wait(
+                self.epfd.as_raw_fd(),
+                self.events.as_mut_ptr(),
+                self.events.len() as i32,
+                timeout_ms,
+            )
+        };
+        if n < 0 {
+            // EINTR: treat as a timeout round.
+            return;
+        }
+        for ev in &self.events[..n as usize] {
+            let ev = *ev; // copy out of the (possibly packed) slot
+            let err = ev.events & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+            let readable = ev.events & sys::EPOLLIN != 0 || err;
+            let writable = ev.events & sys::EPOLLOUT != 0 || err;
+            out.push((ev.data, readable, writable));
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+struct Poller {
+    fds: Vec<sys::PollFd>,
+    tokens: Vec<u64>,
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+impl Poller {
+    fn new() -> std::io::Result<Poller> {
+        Ok(Poller { fds: Vec::new(), tokens: Vec::new() })
+    }
+
+    fn mask(read: bool, write: bool) -> i16 {
+        let mut m = 0i16;
+        if read {
+            m |= sys::POLLIN;
+        }
+        if write {
+            m |= sys::POLLOUT;
+        }
+        m
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> std::io::Result<()> {
+        self.fds.push(sys::PollFd { fd, events: Self::mask(read, write), revents: 0 });
+        self.tokens.push(token);
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> std::io::Result<()> {
+        match self.fds.iter().position(|p| p.fd == fd) {
+            Some(i) => {
+                self.fds[i].events = Self::mask(read, write);
+                self.tokens[i] = token;
+                Ok(())
             }
-            let mut stream = match conn {
-                Ok(s) => s,
-                Err(_) => {
-                    // e.g. EMFILE under fd pressure: back off instead of
-                    // busy-spinning the accept loop.
-                    std::thread::sleep(Duration::from_millis(10));
-                    continue;
-                }
-            };
-            server.metrics().record_http_conn_open();
-            if active.load(Ordering::SeqCst) >= MAX_CONN_THREADS {
-                let body = error_body("too many connections");
-                let _ = write_response(
-                    &mut stream,
-                    503,
-                    "Service Unavailable",
-                    "application/json",
-                    &body,
-                );
-                server.metrics().record_http_response(503);
-                server.metrics().record_http_conn_close();
+            None => Err(std::io::Error::from(std::io::ErrorKind::NotFound)),
+        }
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> std::io::Result<()> {
+        if let Some(i) = self.fds.iter().position(|p| p.fd == fd) {
+            self.fds.swap_remove(i);
+            self.tokens.swap_remove(i);
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<ReadyEvent>) {
+        out.clear();
+        let n = unsafe { sys::poll(self.fds.as_mut_ptr(), self.fds.len() as u32, timeout_ms) };
+        if n <= 0 {
+            return;
+        }
+        for (p, &token) in self.fds.iter().zip(&self.tokens) {
+            if p.revents == 0 {
                 continue;
             }
-            active.fetch_add(1, Ordering::SeqCst);
-            let srv = server.clone();
-            let act = active.clone();
-            std::thread::spawn(move || {
-                handle_conn(stream, &srv);
-                srv.metrics().record_http_conn_close();
-                act.fetch_sub(1, Ordering::SeqCst);
-            });
+            let err = p.revents & (sys::POLLERR | sys::POLLHUP) != 0;
+            let readable = p.revents & sys::POLLIN != 0 || err;
+            let writable = p.revents & sys::POLLOUT != 0 || err;
+            out.push((token, readable, writable));
         }
-    });
-    Ok(HttpServer { addr: local, stop, accept: Some(accept) })
+    }
 }
 
-impl HttpServer {
-    /// The bound address (the actual port when bound with port 0).
-    pub fn local_addr(&self) -> SocketAddr {
-        self.addr
-    }
+/// Wakes the event loop from other threads (worker completion
+/// callbacks, shutdown): one byte down a nonblocking socketpair whose
+/// read end the poller watches. A full pipe means a wake is already
+/// pending, so a failed write is still a successful wake.
+#[cfg(unix)]
+#[derive(Clone)]
+struct LoopWaker {
+    tx: Arc<UnixStream>,
+}
 
-    /// Stop accepting and join the accept thread. In-flight connection
-    /// threads finish their single request and exit on their own.
-    pub fn shutdown(&mut self) {
-        let Some(handle) = self.accept.take() else { return };
-        self.stop.store(true, Ordering::SeqCst);
-        // Wake the blocking accept with a throwaway connection.
-        let ip = match self.addr.ip() {
-            ip if ip.is_unspecified() && ip.is_ipv4() => IpAddr::V4(Ipv4Addr::LOCALHOST),
-            ip if ip.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
-            ip => ip,
-        };
-        let wake = SocketAddr::new(ip, self.addr.port());
-        let woke = TcpStream::connect_timeout(&wake, Duration::from_millis(500)).is_ok();
-        if woke {
-            let _ = handle.join();
+#[cfg(unix)]
+impl LoopWaker {
+    fn wake(&self) {
+        let _ = (&*self.tx).write_all(&[1u8]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed API errors.
+// ---------------------------------------------------------------------------
+
+/// Typed HTTP API error: every non-2xx response renders a stable JSON
+/// body `{"code","message","trace_id"}` (`trace_id` is 0 when the
+/// request never reached the batch queue). The variant fixes the status
+/// code and the machine-readable `code` string; the message is
+/// human-readable detail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ApiError {
+    /// 400 — malformed request line, head, JSON, or feature vector.
+    BadRequest(String),
+    /// 404 — unknown route or unregistered model name.
+    NotFound(String),
+    /// 429 — the batch queue is full (per-tier backpressure); retry.
+    TooManyRequests(String),
+    /// 503 — the listener shed the request before parsing it
+    /// (admission budget or connection limit); retry.
+    Overloaded(String),
+    /// 504 — the request's deadline expired while it was queued.
+    DeadlineExceeded(String),
+    /// 500 — batch execution failed or the server is stopping.
+    Internal(String),
+}
+
+impl ApiError {
+    /// HTTP status code.
+    pub fn status(&self) -> u16 {
+        match self {
+            ApiError::BadRequest(_) => 400,
+            ApiError::NotFound(_) => 404,
+            ApiError::TooManyRequests(_) => 429,
+            ApiError::Overloaded(_) => 503,
+            ApiError::DeadlineExceeded(_) => 504,
+            ApiError::Internal(_) => 500,
         }
-        // If the self-connect failed (filtered interface, fd pressure),
-        // the accept thread stays parked until the next stray connection;
-        // leaking it beats blocking the caller in join() forever.
+    }
+
+    /// Stable machine-readable error code (the JSON `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ApiError::BadRequest(_) => "bad_request",
+            ApiError::NotFound(_) => "not_found",
+            ApiError::TooManyRequests(_) => "too_many_requests",
+            ApiError::Overloaded(_) => "overloaded",
+            ApiError::DeadlineExceeded(_) => "deadline_exceeded",
+            ApiError::Internal(_) => "internal",
+        }
+    }
+
+    /// HTTP reason phrase.
+    pub fn reason(&self) -> &'static str {
+        match self.status() {
+            400 => "Bad Request",
+            404 => "Not Found",
+            429 => "Too Many Requests",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
+            _ => "Internal Server Error",
+        }
+    }
+
+    /// Suggested retry delay (seconds) — set on the retryable
+    /// overload statuses (429/503) and rendered as `Retry-After`.
+    pub fn retry_after(&self) -> Option<u32> {
+        match self {
+            ApiError::TooManyRequests(_) | ApiError::Overloaded(_) => Some(1),
+            _ => None,
+        }
+    }
+
+    /// Human-readable detail (the JSON `message` field).
+    pub fn message(&self) -> &str {
+        match self {
+            ApiError::BadRequest(m)
+            | ApiError::NotFound(m)
+            | ApiError::TooManyRequests(m)
+            | ApiError::Overloaded(m)
+            | ApiError::DeadlineExceeded(m)
+            | ApiError::Internal(m) => m,
+        }
+    }
+
+    /// The stable JSON error body.
+    pub fn render(&self, trace_id: u64) -> String {
+        format!(
+            "{{\"code\":\"{}\",\"message\":\"{}\",\"trace_id\":{trace_id}}}",
+            self.code(),
+            json_escape(self.message())
+        )
     }
 }
 
-impl Drop for HttpServer {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
+fn json_escape(msg: &str) -> String {
+    msg.chars()
+        .map(|ch| match ch {
+            '"' => "\\\"".to_string(),
+            '\\' => "\\\\".to_string(),
+            '\n' => "\\n".to_string(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32),
+            c => c.to_string(),
+        })
+        .collect()
 }
+
+// ---------------------------------------------------------------------------
+// Request parsing and response rendering (shared by the event loop, the
+// threaded baseline, and the keep-alive client).
+// ---------------------------------------------------------------------------
 
 struct HttpRequest {
     method: String,
     path: String,
     /// Raw query string after `?` (empty when absent).
     query: String,
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default yes unless `Connection: close`; HTTP/1.0 default no
+    /// unless `Connection: keep-alive`).
+    keep_alive: bool,
     body: Vec<u8>,
+}
+
+/// Try to frame one request off the front of `buf`. `Ok(None)` means
+/// incomplete (read more); `Ok(Some((req, consumed)))` hands back the
+/// parsed request and how many bytes it occupied; `Err` is a framing
+/// error the connection cannot recover from.
+fn try_parse_request(buf: &[u8]) -> std::result::Result<Option<(HttpRequest, usize)>, String> {
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err("request head too large".into());
+        }
+        return Ok(None);
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return Err("request head too large".into());
+    }
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| "head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let raw_path = parts.next().ok_or("request line has no path")?;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    // Route on the path alone: `GET /metrics?format=x` must still hit
+    // /metrics (Prometheus scrapers append query strings). The query is
+    // kept separately for routes that do take parameters (tracez).
+    let (path, query) = match raw_path.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (raw_path.to_string(), String::new()),
+    };
+    let mut content_length = 0usize;
+    let mut connection = String::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                connection = value.trim().to_ascii_lowercase();
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err("body too large".into());
+    }
+    let total = head_end + 4 + content_length;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let keep_alive = match version {
+        "HTTP/1.0" => connection == "keep-alive",
+        _ => connection != "close",
+    };
+    let body = buf[head_end + 4..total].to_vec();
+    Ok(Some((HttpRequest { method, path, query, keep_alive, body }, total)))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
 /// One routed response plus, for successful `/infer` requests, the trace
@@ -156,50 +536,91 @@ struct Reply {
     reason: &'static str,
     ctype: &'static str,
     body: String,
+    retry_after: Option<u32>,
     span: Option<SpanRecord>,
 }
 
 impl Reply {
     fn new(status: u16, reason: &'static str, ctype: &'static str, body: String) -> Reply {
-        Reply { status, reason, ctype, body, span: None }
+        Reply { status, reason, ctype, body, retry_after: None, span: None }
     }
 }
 
-fn handle_conn(mut stream: TcpStream, srv: &InferenceServer) {
-    let t_conn = Instant::now();
-    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
-    let _ = stream.set_nodelay(true);
-    let mut reply = match read_request(&mut stream) {
-        Ok(req) => route(&req, srv, t_conn.elapsed()),
-        Err(e) => Reply::new(400, "Bad Request", "application/json", error_body(&e)),
+fn api_reply_with_id(e: ApiError, trace_id: u64) -> Reply {
+    Reply {
+        status: e.status(),
+        reason: e.reason(),
+        ctype: "application/json",
+        body: e.render(trace_id),
+        retry_after: e.retry_after(),
+        span: None,
+    }
+}
+
+fn api_reply(e: ApiError) -> Reply {
+    api_reply_with_id(e, 0)
+}
+
+/// Serialize `reply` (status line, headers, body) into `out`.
+fn render_response_into(out: &mut Vec<u8>, reply: &Reply, keep_alive: bool) {
+    let retry = match reply.retry_after {
+        Some(s) => format!("Retry-After: {s}\r\n"),
+        None => String::new(),
     };
-    let t_write = Instant::now();
-    let _ = write_response(&mut stream, reply.status, reply.reason, reply.ctype, &reply.body);
-    srv.metrics().record_http_response(reply.status);
-    if let Some(mut span) = reply.span.take() {
-        // Complete the span only after the response is on the wire: the
-        // write stage and the total cover the full connection lifetime.
-        span.stages.add_duration(Stage::Write, t_write.elapsed());
-        span.total_ns = t_conn.elapsed().as_nanos() as u64;
-        srv.tracer().push(span);
-    }
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{retry}\
+         Connection: {conn}\r\n\r\n",
+        reply.status,
+        reply.reason,
+        reply.ctype,
+        reply.body.len()
+    );
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(reply.body.as_bytes());
 }
 
-/// `accept` is the time spent reading the request off the socket —
-/// charged to the trace span's `Accept` stage for `/infer`.
-fn route(req: &HttpRequest, srv: &InferenceServer, accept: Duration) -> Reply {
+// ---------------------------------------------------------------------------
+// Routing.
+// ---------------------------------------------------------------------------
+
+/// Routing outcome: either a reply the loop can send immediately, or
+/// the inference tier the request must be dispatched to.
+enum Routed {
+    Immediate(Reply),
+    Infer(Arc<InferenceServer>),
+}
+
+fn route_immediate(req: &HttpRequest, reg: &ModelRegistry) -> Routed {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/metrics") => Reply::new(
+        ("GET", "/metrics") => Routed::Immediate(Reply::new(
             200,
             "OK",
             "text/plain; version=0.0.4",
-            srv.metrics().snapshot().render(),
-        ),
-        ("GET", "/healthz") => Reply::new(200, "OK", "text/plain", "ok\n".to_string()),
-        ("GET", "/debug/tracez") => tracez_route(req, srv),
-        ("POST", "/infer") => infer_route(req, srv, accept),
+            reg.metrics().snapshot().render(),
+        )),
+        ("GET", "/healthz") => {
+            Routed::Immediate(Reply::new(200, "OK", "text/plain", "ok\n".to_string()))
+        }
+        ("GET", "/debug/tracez") => Routed::Immediate(tracez_route(req, reg)),
+        ("GET", "/v1/models") => Routed::Immediate(models_route(reg)),
+        ("POST", "/infer") => match reg.default_entry() {
+            Some(e) => Routed::Infer(e.server().clone()),
+            None => Routed::Immediate(api_reply(ApiError::NotFound(
+                "no models registered".into(),
+            ))),
+        },
+        ("POST", p) if p.starts_with("/v1/infer/") => {
+            let name = &p["/v1/infer/".len()..];
+            match reg.get(name) {
+                Some(s) => Routed::Infer(s.clone()),
+                None => Routed::Immediate(api_reply(ApiError::NotFound(format!(
+                    "no such model {name:?} (GET /v1/models lists registered models)"
+                )))),
+            }
+        }
         // Unknown paths — including unknown /debug/* — fall through here.
-        _ => Reply::new(404, "Not Found", "application/json", error_body("no such route")),
+        _ => Routed::Immediate(api_reply(ApiError::NotFound("no such route".into()))),
     }
 }
 
@@ -211,181 +632,1037 @@ fn query_param(query: &str, name: &str) -> Option<String> {
     })
 }
 
-fn tracez_route(req: &HttpRequest, srv: &InferenceServer) -> Reply {
+fn tracez_route(req: &HttpRequest, reg: &ModelRegistry) -> Reply {
     let min_us: u64 =
         query_param(&req.query, "min_us").and_then(|v| v.parse().ok()).unwrap_or(0);
     let limit: usize =
         query_param(&req.query, "limit").and_then(|v| v.parse().ok()).unwrap_or(TRACE_RING_CAP);
-    Reply::new(200, "OK", "application/json", srv.tracer().render_json(min_us, limit))
+    Reply::new(200, "OK", "application/json", reg.tracer().render_json(min_us, limit))
 }
 
-fn infer_route(req: &HttpRequest, srv: &InferenceServer, accept: Duration) -> Reply {
-    let bad = |msg: &str| Reply::new(400, "Bad Request", "application/json", error_body(msg));
-    let t_parse = Instant::now();
-    let Ok(text) = std::str::from_utf8(&req.body) else {
-        return bad("body is not UTF-8");
-    };
-    let features = match Json::parse(text) {
-        Ok(j) => match j.get("features").and_then(|f| f.as_f32_vec()) {
-            Some(f) => f,
-            None => return bad("body must be {\"features\": [..]}"),
-        },
-        Err(e) => return bad(&format!("bad JSON: {e}")),
-    };
-    let mut pre = StageTimer::default();
-    pre.add_duration(Stage::Accept, accept);
-    pre.add_duration(Stage::Parse, t_parse.elapsed());
-    match srv.try_infer_traced(features, pre) {
-        Ok(resp) => {
-            let t_ser = Instant::now();
-            let mut out = String::with_capacity(16 * resp.logits.len() + 48);
-            out.push_str("{\"logits\":[");
-            for (i, v) in resp.logits.iter().enumerate() {
-                if i > 0 {
-                    out.push(',');
-                }
-                out.push_str(&format!("{v:?}"));
-            }
-            out.push_str(&format!(
-                "],\"latency_us\":{},\"trace_id\":{}}}",
-                resp.latency.as_micros(),
-                resp.trace_id
-            ));
-            let mut reply = Reply::new(200, "OK", "application/json", out);
-            if srv.tracer().enabled() {
-                let mut stages = resp.stages;
-                stages.add_duration(Stage::Serialize, t_ser.elapsed());
-                // total_ns is re-stamped with the connection wall time
-                // when the span completes in handle_conn.
-                reply.span = Some(SpanRecord::request(
-                    resp.trace_id,
-                    resp.batch_id,
-                    resp.batch_rows,
-                    resp.latency.as_nanos() as u64,
-                    stages,
-                ));
-            }
-            reply
+fn models_route(reg: &ModelRegistry) -> Reply {
+    let mut body = String::from("{\"default\":");
+    match reg.default_entry() {
+        Some(e) => {
+            body.push('"');
+            body.push_str(e.name());
+            body.push('"');
         }
-        Err(InferError::BadRequest(m)) => bad(&m),
-        Err(InferError::Busy) => Reply::new(
-            503,
-            "Service Unavailable",
-            "application/json",
-            error_body("server busy (queue full)"),
-        ),
-        Err(InferError::DeadlineExceeded) => Reply::new(
-            504,
-            "Gateway Timeout",
-            "application/json",
-            error_body("deadline exceeded before execution"),
-        ),
-        Err(InferError::Stopped) => Reply::new(
-            500,
-            "Internal Server Error",
-            "application/json",
-            error_body("server stopped"),
-        ),
-        Err(InferError::Backend(m)) => Reply::new(
-            500,
-            "Internal Server Error",
-            "application/json",
-            error_body(&format!("batch execution failed: {m}")),
-        ),
+        None => body.push_str("null"),
+    }
+    body.push_str(",\"models\":[");
+    for (i, e) in reg.entries().iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let s = e.server();
+        let (d, c) = s.dims;
+        body.push_str(&format!(
+            "{{\"name\":\"{}\",\"format\":\"{}\",\"features\":{d},\"classes\":{c},\
+             \"max_inflight\":{}}}",
+            e.name(),
+            s.weight_format().name(),
+            s.max_inflight()
+        ));
+    }
+    body.push_str("]}");
+    Reply::new(200, "OK", "application/json", body)
+}
+
+fn parse_features(body: &[u8]) -> std::result::Result<Vec<f32>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    match Json::parse(text) {
+        Ok(j) => j
+            .get("features")
+            .and_then(|f| f.as_f32_vec())
+            .ok_or_else(|| "body must be {\"features\": [..]}".to_string()),
+        Err(e) => Err(format!("bad JSON: {e}")),
     }
 }
 
-fn error_body(msg: &str) -> String {
-    let escaped: String = msg
-        .chars()
-        .map(|ch| match ch {
-            '"' => "\\\"".to_string(),
-            '\\' => "\\\\".to_string(),
-            '\n' => "\\n".to_string(),
-            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32),
-            c => c.to_string(),
-        })
-        .collect();
-    format!("{{\"error\":\"{escaped}\"}}")
+fn infer_api_error(e: InferError) -> ApiError {
+    match e {
+        InferError::BadRequest(m) => ApiError::BadRequest(m),
+        InferError::Busy => ApiError::TooManyRequests("server busy (queue full)".into()),
+        InferError::DeadlineExceeded => {
+            ApiError::DeadlineExceeded("deadline exceeded before execution".into())
+        }
+        InferError::Stopped => ApiError::Internal("server stopped".into()),
+        InferError::Backend(m) => ApiError::Internal(format!("batch execution failed: {m}")),
+    }
 }
 
-fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, String> {
+#[cfg(unix)]
+fn serve_api_error(e: ServeError) -> ApiError {
+    match e {
+        ServeError::DeadlineExceeded => {
+            ApiError::DeadlineExceeded("deadline exceeded before execution".into())
+        }
+        ServeError::BackendFailed(m) => {
+            ApiError::Internal(format!("batch execution failed: {m}"))
+        }
+    }
+}
+
+/// Render a successful inference as the wire JSON, stamping the
+/// serialize stage and (when `tracing`) carrying the request span for
+/// completion after the bytes are written.
+fn render_infer_ok(resp: &Response, tracing: bool) -> Reply {
+    let t_ser = Instant::now();
+    let mut out = String::with_capacity(16 * resp.logits.len() + 48);
+    out.push_str("{\"logits\":[");
+    for (i, v) in resp.logits.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{v:?}"));
+    }
+    out.push_str(&format!(
+        "],\"latency_us\":{},\"trace_id\":{}}}",
+        resp.latency.as_micros(),
+        resp.trace_id
+    ));
+    let mut reply = Reply::new(200, "OK", "application/json", out);
+    if tracing {
+        let mut stages = resp.stages;
+        stages.add_duration(Stage::Serialize, t_ser.elapsed());
+        // total_ns is re-stamped with the request wall time when the
+        // span completes after the response bytes are flushed.
+        reply.span = Some(SpanRecord::request(
+            resp.trace_id,
+            resp.batch_id,
+            resp.batch_rows,
+            resp.latency.as_nanos() as u64,
+            stages,
+        ));
+    }
+    reply
+}
+
+// ---------------------------------------------------------------------------
+// The server handle.
+// ---------------------------------------------------------------------------
+
+/// A running HTTP listener. Shuts down (waking the event loop through
+/// its poller — no self-connect) and joins its thread on drop.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    #[cfg(unix)]
+    waker: Option<LoopWaker>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// The bound address (the actual port when bound with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join its thread. The event loop drops
+    /// every open connection (idle keep-alive peers included) on its
+    /// next iteration, so this returns promptly regardless of open
+    /// connections; it is woken through the poller, not a self-connect.
+    pub fn shutdown(&mut self) {
+        let Some(handle) = self.thread.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        #[cfg(unix)]
+        if let Some(w) = &self.waker {
+            w.wake();
+        }
+        let _ = handle.join();
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:8080"`, or port `0` for an ephemeral
+/// port) and serve a single model until the returned handle is dropped.
+/// The model is registered under its weight-format name (and as the
+/// default, so legacy `POST /infer` works unchanged).
+pub fn serve(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
+    let name = server.weight_format().name();
+    let reg = ModelRegistry::from_server(name, server)?;
+    serve_registry(addr, Arc::new(reg))
+}
+
+/// Bind `addr` and serve every model in `reg` from one event-driven
+/// listener (`/v1/infer/<model>`). On non-unix targets this falls back
+/// to the thread-per-connection baseline.
+#[cfg(unix)]
+pub fn serve_registry(addr: &str, reg: Arc<ModelRegistry>) -> Result<HttpServer> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr().context("local_addr")?;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let (wtx, wrx) = UnixStream::pair().context("waker socketpair")?;
+    wtx.set_nonblocking(true).context("waker tx nonblocking")?;
+    wrx.set_nonblocking(true).context("waker rx nonblocking")?;
+    let waker = LoopWaker { tx: Arc::new(wtx) };
+    let mut poller = Poller::new().context("create poller")?;
+    poller
+        .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+        .context("register listener")?;
+    poller.register(wrx.as_raw_fd(), TOKEN_WAKER, true, false).context("register waker")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let w2 = waker.clone();
+    let notify: Notify = Arc::new(move || w2.wake());
+    let el = EventLoop {
+        poller,
+        listener,
+        waker_rx: wrx,
+        metrics: reg.metrics(),
+        tracer: reg.tracer(),
+        budget: reg.max_inflight().max(1),
+        reg,
+        stop: stop.clone(),
+        conns: HashMap::new(),
+        inflight: HashMap::new(),
+        next_inflight: 0,
+        notify,
+    };
+    let thread = std::thread::Builder::new()
+        .name("positron-http".into())
+        .spawn(move || el.run())
+        .context("spawn event loop")?;
+    Ok(HttpServer { addr: local, stop, waker: Some(waker), thread: Some(thread) })
+}
+
+/// Non-unix fallback: the readiness poller is unix-only, so other
+/// targets serve through the thread-per-connection baseline (same
+/// routes, `Connection: close`).
+#[cfg(not(unix))]
+pub fn serve_registry(addr: &str, reg: Arc<ModelRegistry>) -> Result<HttpServer> {
+    serve_threaded_registry(addr, reg)
+}
+
+/// The PR 4 thread-per-connection listener, kept as the measured
+/// baseline for the event loop (`serve-bench` races the two and CI
+/// gates on the event loop winning) and as the non-unix fallback.
+/// One request per connection (`Connection: close`), at most
+/// [`MAX_CONN_THREADS`] concurrent handler threads.
+pub fn serve_threaded(addr: &str, server: Arc<InferenceServer>) -> Result<HttpServer> {
+    let name = server.weight_format().name();
+    let reg = ModelRegistry::from_server(name, server)?;
+    serve_threaded_registry(addr, Arc::new(reg))
+}
+
+fn serve_threaded_registry(addr: &str, reg: Arc<ModelRegistry>) -> Result<HttpServer> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr().context("local_addr")?;
+    // Nonblocking accept + stop poll: shutdown needs no self-connect.
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let active = Arc::new(AtomicUsize::new(0));
+    let thread = std::thread::Builder::new()
+        .name("positron-http-threaded".into())
+        .spawn(move || loop {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    reg.metrics().record_http_conn_open();
+                    if active.load(Ordering::SeqCst) >= MAX_CONN_THREADS {
+                        let reply =
+                            api_reply(ApiError::Overloaded("too many connections".into()));
+                        let mut out = Vec::new();
+                        render_response_into(&mut out, &reply, false);
+                        let _ = stream.write_all(&out);
+                        reg.metrics().record_http_shed();
+                        reg.metrics().record_http_response(503);
+                        reg.metrics().record_http_conn_close();
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::SeqCst);
+                    let r2 = reg.clone();
+                    let act = active.clone();
+                    std::thread::spawn(move || {
+                        handle_conn_blocking(stream, &r2);
+                        r2.metrics().record_http_conn_close();
+                        act.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                Err(_) => {
+                    // WouldBlock (poll the stop flag) or transient
+                    // accept errors (EMFILE): back off briefly.
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        })
+        .context("spawn accept loop")?;
+    Ok(HttpServer {
+        addr: local,
+        stop,
+        #[cfg(unix)]
+        waker: None,
+        thread: Some(thread),
+    })
+}
+
+fn handle_conn_blocking(mut stream: TcpStream, reg: &ModelRegistry) {
+    let t_conn = Instant::now();
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reply = match read_request_blocking(&mut stream) {
+        Ok(req) => match route_immediate(&req, reg) {
+            Routed::Immediate(r) => r,
+            Routed::Infer(srv) => infer_blocking(&req, &srv, reg, t_conn.elapsed()),
+        },
+        Err(e) => api_reply(ApiError::BadRequest(e)),
+    };
+    let t_write = Instant::now();
+    let mut out = Vec::new();
+    render_response_into(&mut out, &reply, false);
+    let _ = stream.write_all(&out);
+    let _ = stream.flush();
+    reg.metrics().record_http_response(reply.status);
+    if let Some(mut span) = reply.span.take() {
+        // Complete the span only after the response is on the wire: the
+        // write stage and the total cover the full connection lifetime.
+        span.stages.add_duration(Stage::Write, t_write.elapsed());
+        span.total_ns = t_conn.elapsed().as_nanos() as u64;
+        reg.tracer().push(span);
+    }
+}
+
+fn read_request_blocking(stream: &mut TcpStream) -> std::result::Result<HttpRequest, String> {
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut chunk = [0u8; 4096];
-    // Read until the blank line that ends the header block.
-    let head_end = loop {
-        if let Some(pos) = find_head_end(&buf) {
-            break pos;
-        }
-        if buf.len() > MAX_HEAD_BYTES {
-            return Err("request head too large".into());
+    loop {
+        if let Some((req, _consumed)) = try_parse_request(&buf)? {
+            return Ok(req);
         }
         let n = stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
         if n == 0 {
             return Err("connection closed mid-request".into());
         }
         buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Blocking dispatch for the threaded baseline — parses, submits, and
+/// waits inline on the connection's own thread.
+fn infer_blocking(
+    req: &HttpRequest,
+    srv: &InferenceServer,
+    reg: &ModelRegistry,
+    accept: Duration,
+) -> Reply {
+    let t_parse = Instant::now();
+    let features = match parse_features(&req.body) {
+        Ok(f) => f,
+        Err(msg) => return api_reply(ApiError::BadRequest(msg)),
     };
-    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| "head is not UTF-8")?;
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().ok_or("empty request line")?.to_string();
-    let raw_path = parts.next().ok_or("request line has no path")?;
-    // Route on the path alone: `GET /metrics?format=x` must still hit
-    // /metrics (Prometheus scrapers append query strings). The query is
-    // kept separately for routes that do take parameters (tracez).
-    let (path, query) = match raw_path.split_once('?') {
-        Some((p, q)) => (p.to_string(), q.to_string()),
-        None => (raw_path.to_string(), String::new()),
-    };
-    let mut content_length = 0usize;
-    for line in lines {
-        if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length =
-                    value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+    let mut pre = StageTimer::default();
+    pre.add_duration(Stage::Accept, accept);
+    pre.add_duration(Stage::Parse, t_parse.elapsed());
+    match srv.try_infer_traced(features, pre) {
+        Ok(resp) => render_infer_ok(&resp, reg.tracer().enabled()),
+        Err(e) => api_reply(infer_api_error(e)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The event loop.
+// ---------------------------------------------------------------------------
+
+/// What a response slot is waiting on. Each parsed request claims one
+/// slot in its connection's FIFO; responses are flushed strictly in
+/// slot order, which is what makes pipelining answer in request order.
+#[cfg(unix)]
+enum Slot {
+    /// Response rendered, ready to append to the write buffer.
+    Ready(Rendered),
+    /// Submitted to a tier's batch queue; the inflight table maps `id`
+    /// back to this slot when the worker answers.
+    Waiting { id: u64, keep_alive: bool, req_start: Instant },
+}
+
+#[cfg(unix)]
+struct Rendered {
+    reply: Reply,
+    keep_alive: bool,
+    req_start: Instant,
+}
+
+/// A request span waiting for its response bytes to reach the socket:
+/// completed (write stage + total wall time) once the connection's
+/// flushed-byte counter passes `end`.
+#[cfg(unix)]
+struct PendingSpan {
+    end: u64,
+    span: SpanRecord,
+    appended_at: Instant,
+    req_start: Instant,
+}
+
+#[cfg(unix)]
+struct Conn {
+    stream: TcpStream,
+    in_buf: Vec<u8>,
+    out_buf: Vec<u8>,
+    out_pos: usize,
+    /// Total response bytes ever queued / flushed on this connection
+    /// (monotonic; `appended - flushed` is the unwritten backlog).
+    appended: u64,
+    flushed: u64,
+    pending: VecDeque<Slot>,
+    spans: VecDeque<PendingSpan>,
+    /// Responses completed on this connection (keep-alive reuse count,
+    /// recorded into `positron_keepalive_requests` at close).
+    served: u64,
+    /// When the bytes of the request currently being read first
+    /// arrived — drives the read timeout and the Accept trace stage.
+    req_start: Option<Instant>,
+    last_activity: Instant,
+    close_after_flush: bool,
+    peer_closed: bool,
+    dead: bool,
+    cur_read: bool,
+    cur_write: bool,
+}
+
+#[cfg(unix)]
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            in_buf: Vec::new(),
+            out_buf: Vec::new(),
+            out_pos: 0,
+            appended: 0,
+            flushed: 0,
+            pending: VecDeque::new(),
+            spans: VecDeque::new(),
+            served: 0,
+            req_start: None,
+            last_activity: Instant::now(),
+            close_after_flush: false,
+            peer_closed: false,
+            dead: false,
+            cur_read: true,
+            cur_write: false,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.out_buf.len() - self.out_pos
+    }
+}
+
+/// One submitted inference the loop is waiting on.
+#[cfg(unix)]
+struct Inflight {
+    rx: Receiver<ServeResult>,
+    fd: RawFd,
+    trace_id: u64,
+}
+
+#[cfg(unix)]
+struct EventLoop {
+    poller: Poller,
+    listener: TcpListener,
+    waker_rx: UnixStream,
+    reg: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
+    stop: Arc<AtomicBool>,
+    conns: HashMap<RawFd, Conn>,
+    inflight: HashMap<u64, Inflight>,
+    next_inflight: u64,
+    /// Admission budget: infer requests are shed with 503 once this
+    /// many sit between admission and response write.
+    budget: usize,
+    /// Completion callback passed to every submit — wakes the poller.
+    notify: Notify,
+}
+
+#[cfg(unix)]
+impl EventLoop {
+    fn run(mut self) {
+        let mut events: Vec<ReadyEvent> = Vec::new();
+        loop {
+            self.poller.wait(SWEEP_MS, &mut events);
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            for &(token, readable, writable) in &events {
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    t => self.conn_ready(t as RawFd, readable, writable),
+                }
+            }
+            self.drain_inflight();
+            self.sweep();
+            self.update_gauges();
+        }
+        // Shutdown: drop every connection (keep-alive peers included).
+        let fds: Vec<RawFd> = self.conns.keys().copied().collect();
+        for fd in fds {
+            self.close_conn(fd);
+        }
+        self.metrics.set_conn_states([0, 0, 0, 0]);
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    self.metrics.record_http_conn_open();
+                    if self.conns.len() >= MAX_CONNS {
+                        self.metrics.record_http_shed();
+                        overload_close(stream, &self.metrics);
+                        continue;
+                    }
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let fd = stream.as_raw_fd();
+                    if self.poller.register(fd, fd as u64, true, false).is_err() {
+                        self.metrics.record_http_conn_close();
+                        continue;
+                    }
+                    self.conns.insert(fd, Conn::new(stream));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break, // EMFILE etc.: retry next round
             }
         }
     }
-    if content_length > MAX_BODY_BYTES {
-        return Err("body too large".into());
-    }
-    let mut body = buf[head_end + 4..].to_vec();
-    while body.len() < content_length {
-        let n = stream.read(&mut chunk).map_err(|e| format!("read body: {e}"))?;
-        if n == 0 {
-            return Err("connection closed mid-body".into());
+
+    fn drain_waker(&mut self) {
+        let mut b = [0u8; 256];
+        loop {
+            match self.waker_rx.read(&mut b) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock: drained
+            }
         }
-        body.extend_from_slice(&chunk[..n]);
     }
-    body.truncate(content_length);
-    Ok(HttpRequest { method, path, query, body })
+
+    fn conn_ready(&mut self, fd: RawFd, readable: bool, writable: bool) {
+        if !self.conns.contains_key(&fd) {
+            return;
+        }
+        if readable {
+            self.read_conn(fd);
+            self.process_input(fd);
+        }
+        if readable || writable {
+            self.flush_conn(fd);
+        }
+        self.finish_conn(fd);
+    }
+
+    fn read_conn(&mut self, fd: RawFd) {
+        let Some(conn) = self.conns.get_mut(&fd) else { return };
+        if conn.dead || conn.peer_closed {
+            return;
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            // Backpressure: stop reading while the response backlog is
+            // deep (peer not draining) or the pipeline is full.
+            if conn.pending.len() >= PIPELINE_MAX || conn.backlog() >= OUT_HIGH_WATER {
+                break;
+            }
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    if conn.req_start.is_none() {
+                        conn.req_start = Some(Instant::now());
+                    }
+                    conn.in_buf.extend_from_slice(&chunk[..n]);
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Frame and dispatch every complete request buffered on `fd`.
+    fn process_input(&mut self, fd: RawFd) {
+        loop {
+            enum Parsed {
+                Req(HttpRequest, Instant),
+                Stop,
+            }
+            let parsed = {
+                let Some(conn) = self.conns.get_mut(&fd) else { return };
+                if conn.dead
+                    || conn.close_after_flush
+                    || conn.in_buf.is_empty()
+                    || conn.pending.len() >= PIPELINE_MAX
+                {
+                    break;
+                }
+                match try_parse_request(&conn.in_buf) {
+                    Ok(None) => break,
+                    Err(msg) => {
+                        // Framing is unrecoverable: answer 400, close.
+                        let req_start = conn.req_start.take().unwrap_or_else(Instant::now);
+                        conn.in_buf.clear();
+                        conn.pending.push_back(Slot::Ready(Rendered {
+                            reply: api_reply(ApiError::BadRequest(msg)),
+                            keep_alive: false,
+                            req_start,
+                        }));
+                        Parsed::Stop
+                    }
+                    Ok(Some((req, consumed))) => {
+                        conn.in_buf.drain(..consumed);
+                        let req_start = conn.req_start.take().unwrap_or_else(Instant::now);
+                        if !conn.in_buf.is_empty() {
+                            conn.req_start = Some(Instant::now());
+                        }
+                        Parsed::Req(req, req_start)
+                    }
+                }
+            };
+            match parsed {
+                Parsed::Stop => break,
+                Parsed::Req(req, req_start) => {
+                    let keep_alive = req.keep_alive;
+                    self.dispatch(fd, req, req_start);
+                    if !keep_alive {
+                        break; // nothing pipelined past an explicit close
+                    }
+                }
+            }
+        }
+        self.pump(fd);
+    }
+
+    /// Route one framed request: immediate routes render now; infer
+    /// routes pass admission control and are submitted asynchronously.
+    fn dispatch(&mut self, fd: RawFd, req: HttpRequest, req_start: Instant) {
+        let keep_alive = req.keep_alive;
+        let slot = match route_immediate(&req, &self.reg) {
+            Routed::Immediate(reply) => {
+                Slot::Ready(Rendered { reply, keep_alive, req_start })
+            }
+            Routed::Infer(srv) => {
+                if self.inflight.len() >= self.budget {
+                    // Load shed: framed but never parsed — the 503 goes
+                    // out before any JSON work.
+                    self.metrics.record_http_shed();
+                    Slot::Ready(Rendered {
+                        reply: api_reply(ApiError::Overloaded(format!(
+                            "admission budget exhausted ({} inflight)",
+                            self.budget
+                        ))),
+                        keep_alive,
+                        req_start,
+                    })
+                } else {
+                    let accept = req_start.elapsed();
+                    let t_parse = Instant::now();
+                    match parse_features(&req.body) {
+                        Err(msg) => Slot::Ready(Rendered {
+                            reply: api_reply(ApiError::BadRequest(msg)),
+                            keep_alive,
+                            req_start,
+                        }),
+                        Ok(features) => {
+                            let mut pre = StageTimer::default();
+                            pre.add_duration(Stage::Accept, accept);
+                            pre.add_duration(Stage::Parse, t_parse.elapsed());
+                            match srv.submit(features, pre, Some(self.notify.clone())) {
+                                Ok(pending) => {
+                                    let id = self.next_inflight;
+                                    self.next_inflight += 1;
+                                    self.inflight.insert(
+                                        id,
+                                        Inflight {
+                                            rx: pending.rx,
+                                            fd,
+                                            trace_id: pending.trace_id,
+                                        },
+                                    );
+                                    Slot::Waiting { id, keep_alive, req_start }
+                                }
+                                Err(e) => Slot::Ready(Rendered {
+                                    reply: api_reply(infer_api_error(e)),
+                                    keep_alive,
+                                    req_start,
+                                }),
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        if let Some(conn) = self.conns.get_mut(&fd) {
+            conn.pending.push_back(slot);
+        }
+    }
+
+    /// Collect every completed inference and convert its slot to a
+    /// rendered response, then flush the touched connections.
+    fn drain_inflight(&mut self) {
+        let mut completed: Vec<(u64, Option<ServeResult>)> = Vec::new();
+        for (&id, inf) in &self.inflight {
+            match inf.rx.try_recv() {
+                Ok(res) => completed.push((id, Some(res))),
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => completed.push((id, None)),
+            }
+        }
+        if completed.is_empty() {
+            return;
+        }
+        let tracing = self.tracer.enabled();
+        let mut touched: Vec<RawFd> = Vec::new();
+        for (id, res) in completed {
+            let Some(inf) = self.inflight.remove(&id) else { continue };
+            let Some(conn) = self.conns.get_mut(&inf.fd) else {
+                continue; // connection died while the batch ran
+            };
+            let Some(pos) = conn
+                .pending
+                .iter()
+                .position(|s| matches!(s, Slot::Waiting { id: i, .. } if *i == id))
+            else {
+                continue;
+            };
+            let (keep_alive, req_start) = match conn.pending[pos] {
+                Slot::Waiting { keep_alive, req_start, .. } => (keep_alive, req_start),
+                _ => unreachable!(),
+            };
+            let reply = match res {
+                Some(Ok(resp)) => render_infer_ok(&resp, tracing),
+                Some(Err(e)) => api_reply_with_id(serve_api_error(e), inf.trace_id),
+                None => {
+                    api_reply_with_id(ApiError::Internal("server stopped".into()), inf.trace_id)
+                }
+            };
+            conn.pending[pos] = Slot::Ready(Rendered { reply, keep_alive, req_start });
+            touched.push(inf.fd);
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for fd in touched {
+            // process_input (not just pump): requests that were parked
+            // in the read buffer behind a full pipeline get framed now
+            // that slots freed up.
+            self.process_input(fd);
+            self.flush_conn(fd);
+            self.finish_conn(fd);
+        }
+    }
+
+    /// Move every ready head-of-line response into the write buffer —
+    /// responses leave strictly in request order.
+    fn pump(&mut self, fd: RawFd) {
+        let Some(conn) = self.conns.get_mut(&fd) else { return };
+        while matches!(conn.pending.front(), Some(Slot::Ready(_))) {
+            let Some(Slot::Ready(r)) = conn.pending.pop_front() else { unreachable!() };
+            append_response(conn, r, &self.metrics);
+        }
+    }
+
+    fn flush_conn(&mut self, fd: RawFd) {
+        let Some(conn) = self.conns.get_mut(&fd) else { return };
+        if conn.dead {
+            return;
+        }
+        while conn.out_pos < conn.out_buf.len() {
+            match conn.stream.write(&conn.out_buf[conn.out_pos..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.flushed += n as u64;
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        if conn.out_pos == conn.out_buf.len() && conn.out_pos > 0 {
+            conn.out_buf.clear();
+            conn.out_pos = 0;
+        }
+        // Complete spans whose response bytes are fully on the wire.
+        let now = Instant::now();
+        while conn.spans.front().is_some_and(|s| s.end <= conn.flushed) {
+            let Some(mut ps) = conn.spans.pop_front() else { break };
+            ps.span.stages.add_duration(Stage::Write, now.duration_since(ps.appended_at));
+            ps.span.total_ns = now.duration_since(ps.req_start).as_nanos() as u64;
+            self.tracer.push(ps.span);
+        }
+    }
+
+    /// Close-or-reregister epilogue after any connection activity.
+    fn finish_conn(&mut self, fd: RawFd) {
+        let dead = {
+            let Some(conn) = self.conns.get_mut(&fd) else { return };
+            let drained = conn.backlog() == 0 && conn.pending.is_empty();
+            if drained && (conn.close_after_flush || conn.peer_closed) {
+                conn.dead = true;
+            }
+            conn.dead
+        };
+        if dead {
+            self.close_conn(fd);
+            return;
+        }
+        let mut modify_failed = false;
+        if let Some(conn) = self.conns.get_mut(&fd) {
+            let want_w = conn.backlog() > 0;
+            let want_r = !conn.peer_closed
+                && !conn.close_after_flush
+                && conn.pending.len() < PIPELINE_MAX
+                && conn.backlog() < OUT_HIGH_WATER;
+            if (want_r, want_w) != (conn.cur_read, conn.cur_write) {
+                if self.poller.modify(fd, fd as u64, want_r, want_w).is_ok() {
+                    conn.cur_read = want_r;
+                    conn.cur_write = want_w;
+                } else {
+                    modify_failed = true;
+                }
+            }
+        }
+        if modify_failed {
+            self.close_conn(fd);
+        }
+    }
+
+    fn close_conn(&mut self, fd: RawFd) {
+        let Some(conn) = self.conns.remove(&fd) else { return };
+        let _ = self.poller.deregister(fd);
+        self.metrics.record_http_conn_close();
+        if conn.served > 0 {
+            self.metrics.record_keepalive_requests(conn.served);
+        }
+        // `conn.stream` drops here, closing the descriptor (after the
+        // poller no longer references it). Any inflight inferences it
+        // was waiting on complete later and are discarded.
+    }
+
+    /// Reap stalled connections. A connection waiting on the batch
+    /// worker is exempt — the server's deadline governs it, and the
+    /// worker answers every admitted request.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let mut doomed: Vec<RawFd> = Vec::new();
+        for (&fd, conn) in &self.conns {
+            let timeout = if !conn.pending.is_empty() {
+                None
+            } else if conn.backlog() > 0 {
+                Some(WRITE_TIMEOUT)
+            } else if conn.req_start.is_some() {
+                Some(READ_TIMEOUT)
+            } else {
+                Some(IDLE_TIMEOUT)
+            };
+            if let Some(t) = timeout {
+                if now.duration_since(conn.last_activity) > t {
+                    doomed.push(fd);
+                }
+            }
+        }
+        for fd in doomed {
+            self.close_conn(fd);
+        }
+    }
+
+    /// Recompute the connection-state partition gauge
+    /// (`positron_http_conn_state`): writing > inflight > reading >
+    /// idle, one state per connection.
+    fn update_gauges(&self) {
+        let mut states = [0u64; 4];
+        for conn in self.conns.values() {
+            let i = if conn.backlog() > 0 {
+                3
+            } else if conn.pending.iter().any(|s| matches!(s, Slot::Waiting { .. })) {
+                2
+            } else if conn.req_start.is_some() || !conn.in_buf.is_empty() {
+                1
+            } else {
+                0
+            };
+            states[i] += 1;
+        }
+        self.metrics.set_conn_states(states);
+    }
 }
 
-fn find_head_end(buf: &[u8]) -> Option<usize> {
-    buf.windows(4).position(|w| w == b"\r\n\r\n")
+/// Best-effort 503 to a connection rejected at the [`MAX_CONNS`] cap.
+#[cfg(unix)]
+fn overload_close(mut stream: TcpStream, metrics: &Metrics) {
+    let reply = api_reply(ApiError::Overloaded("connection limit reached".into()));
+    let mut out = Vec::new();
+    render_response_into(&mut out, &reply, false);
+    let _ = stream.set_nonblocking(true);
+    let _ = stream.write_all(&out);
+    metrics.record_http_response(503);
+    metrics.record_http_conn_close();
 }
 
-fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    reason: &str,
-    ctype: &str,
-    body: &str,
-) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n",
-        body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()
+/// Serialize one response onto `conn`'s write buffer and account for it
+/// (status-class counter, reuse count, span scheduling, close-after).
+#[cfg(unix)]
+fn append_response(conn: &mut Conn, r: Rendered, metrics: &Metrics) {
+    let Rendered { reply, keep_alive, req_start } = r;
+    let keep_alive = keep_alive && !conn.close_after_flush;
+    let before = conn.out_buf.len();
+    render_response_into(&mut conn.out_buf, &reply, keep_alive);
+    conn.appended += (conn.out_buf.len() - before) as u64;
+    conn.served += 1;
+    metrics.record_http_response(reply.status);
+    if let Some(span) = reply.span {
+        conn.spans.push_back(PendingSpan {
+            end: conn.appended,
+            span,
+            appended_at: Instant::now(),
+            req_start,
+        });
+    }
+    if !keep_alive {
+        conn.close_after_flush = true;
+    }
 }
 
-/// Minimal blocking HTTP/1.1 client for tests and `serve-bench`: one
-/// request per connection, returns `(status, body)`.
+// ---------------------------------------------------------------------------
+// Clients.
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP response from [`HttpClient`].
+pub struct HttpResponse {
+    /// Status code.
+    pub status: u16,
+    /// Response body.
+    pub body: String,
+    head: String,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup (trimmed value).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.head.lines().skip(1).find_map(|l| {
+            let (n, v) = l.split_once(':')?;
+            n.trim().eq_ignore_ascii_case(name).then(|| v.trim())
+        })
+    }
+}
+
+/// Minimal blocking keep-alive HTTP/1.1 client: many requests down one
+/// connection, with `send`/`recv` split so tests and `serve-bench` can
+/// pipeline. Dropping it closes the connection.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    /// Open one keep-alive connection to `addr`.
+    pub fn connect(addr: &SocketAddr) -> std::result::Result<HttpClient, String> {
+        let stream = TcpStream::connect_timeout(addr, Duration::from_secs(5))
+            .map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+        let _ = stream.set_nodelay(true);
+        Ok(HttpClient { stream, buf: Vec::new() })
+    }
+
+    /// Write one request without waiting for the response (pipelining).
+    pub fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::result::Result<(), String> {
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: positron\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.stream.write_all(req.as_bytes()).map_err(|e| format!("write: {e}"))
+    }
+
+    /// Read the next in-order response off the connection.
+    pub fn recv(&mut self) -> std::result::Result<HttpResponse, String> {
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(pos) = find_head_end(&self.buf) {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return Err("response head too large".into());
+            }
+            let n = self.stream.read(&mut chunk).map_err(|e| format!("read: {e}"))?;
+            if n == 0 {
+                return Err("connection closed mid-response".into());
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).to_string();
+        let status_line = head.lines().next().ok_or("empty response")?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .ok_or("status line has no code")?
+            .parse()
+            .map_err(|_| "bad status code".to_string())?;
+        let mut content_length = 0usize;
+        for line in head.lines().skip(1) {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length =
+                        value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+                }
+            }
+        }
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            let n = self.stream.read(&mut chunk).map_err(|e| format!("read body: {e}"))?;
+            if n == 0 {
+                return Err("connection closed mid-body".into());
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = String::from_utf8_lossy(&self.buf[head_end + 4..total]).to_string();
+        self.buf.drain(..total);
+        Ok(HttpResponse { status, body, head })
+    }
+
+    /// One request-response round trip on the kept-alive connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::result::Result<HttpResponse, String> {
+        self.send(method, path, body)?;
+        self.recv()
+    }
+}
+
+/// Minimal blocking one-shot HTTP client for tests and `serve-bench`:
+/// one `Connection: close` request per connection, returns
+/// `(status, body)`.
 pub fn http_request(
     addr: &SocketAddr,
     method: &str,
@@ -450,12 +1727,82 @@ mod tests {
         assert_eq!(query_param("flag&limit=3", "limit").as_deref(), Some("3"));
     }
 
+    /// The typed error surface: status/code/retry mapping and the
+    /// stable JSON body (escaping included) round-trip through the
+    /// crate's own parser.
     #[test]
-    fn error_body_escapes_json() {
-        assert_eq!(error_body("plain"), "{\"error\":\"plain\"}");
-        assert_eq!(error_body("a\"b\\c\nd"), "{\"error\":\"a\\\"b\\\\c\\nd\"}");
-        let parsed = Json::parse(&error_body("quote \" here")).unwrap();
-        assert_eq!(parsed.get("error").unwrap().as_str(), Some("quote \" here"));
+    fn api_error_mapping_and_body() {
+        let cases: [(ApiError, u16, &str, Option<u32>); 6] = [
+            (ApiError::BadRequest("x".into()), 400, "bad_request", None),
+            (ApiError::NotFound("x".into()), 404, "not_found", None),
+            (ApiError::TooManyRequests("x".into()), 429, "too_many_requests", Some(1)),
+            (ApiError::Overloaded("x".into()), 503, "overloaded", Some(1)),
+            (ApiError::DeadlineExceeded("x".into()), 504, "deadline_exceeded", None),
+            (ApiError::Internal("x".into()), 500, "internal", None),
+        ];
+        for (e, status, code, retry) in cases {
+            assert_eq!(e.status(), status);
+            assert_eq!(e.code(), code);
+            assert_eq!(e.retry_after(), retry);
+            let parsed = Json::parse(&e.render(42)).unwrap();
+            assert_eq!(parsed.get("code").unwrap().as_str(), Some(code));
+            assert_eq!(parsed.get("trace_id").unwrap().as_f64(), Some(42.0));
+        }
+        let tricky = ApiError::BadRequest("a\"b\\c\nd".into());
+        let parsed = Json::parse(&tricky.render(0)).unwrap();
+        assert_eq!(parsed.get("message").unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+
+    /// Incremental framing: partial heads and bodies return `None`,
+    /// complete requests report exact consumed lengths, and two
+    /// pipelined requests frame one after the other.
+    #[test]
+    fn request_framing_and_pipelining() {
+        assert!(matches!(try_parse_request(b"POST /infer HT"), Ok(None)));
+        let one = b"POST /infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nab";
+        assert!(matches!(try_parse_request(one), Ok(None)), "body incomplete");
+        let mut buf = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".to_vec();
+        buf.extend_from_slice(b"GET /b HTTP/1.1\r\n\r\n");
+        let (req, used) = try_parse_request(&buf).unwrap().unwrap();
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("POST", "/a"));
+        assert_eq!(req.body, b"hi");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        let rest = buf.split_off(used);
+        let (req2, used2) = try_parse_request(&rest).unwrap().unwrap();
+        assert_eq!((req2.method.as_str(), req2.path.as_str()), ("GET", "/b"));
+        assert_eq!(used2, rest.len());
+        assert!(try_parse_request(b"\r\n\r\n").is_err(), "empty request line");
+    }
+
+    /// Keep-alive negotiation across versions and Connection headers.
+    #[test]
+    fn keep_alive_negotiation() {
+        let parse = |s: &[u8]| try_parse_request(s).unwrap().unwrap().0.keep_alive;
+        assert!(parse(b"GET / HTTP/1.1\r\n\r\n"));
+        assert!(!parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n"));
+        assert!(!parse(b"GET / HTTP/1.0\r\n\r\n"));
+        assert!(parse(b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n"));
+    }
+
+    /// Responses carry the negotiated Connection header and Retry-After
+    /// on the retryable overload statuses.
+    #[test]
+    fn response_rendering_headers() {
+        let mut out = Vec::new();
+        render_response_into(&mut out, &Reply::new(200, "OK", "text/plain", "ok".into()), true);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(!text.contains("Retry-After"), "{text}");
+        let mut out = Vec::new();
+        render_response_into(
+            &mut out,
+            &api_reply(ApiError::Overloaded("shed".into())),
+            false,
+        );
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
     }
 
     #[test]

@@ -117,6 +117,17 @@ pub struct Metrics {
     http_active: AtomicU64,
     /// Responses by status class, `[1xx, 2xx, 3xx, 4xx, 5xx]`.
     http_responses: [AtomicU64; 5],
+    /// Requests shed by admission control (fast 503 before body parse).
+    http_shed: AtomicU64,
+    /// Requests cancelled after batch assembly because their deadline
+    /// expired while queued (distinct from `deadline_expired`, which
+    /// counts pre-batch admission rejections).
+    cancelled: AtomicU64,
+    /// Open connections by state, `[idle, reading, inflight, writing]` —
+    /// a partition of `http_active` recomputed by the event loop.
+    conn_states: [AtomicU64; 4],
+    /// Requests served per keep-alive connection (recorded at close).
+    hist_keepalive: LogHistogram,
     /// End-to-end request latency distribution (µs buckets).
     hist_latency_us: LogHistogram,
     /// Submission → batch-seal wait distribution (µs buckets).
@@ -167,6 +178,15 @@ pub struct MetricsSnapshot {
     pub http_active: u64,
     /// HTTP responses by status class, `[1xx, 2xx, 3xx, 4xx, 5xx]`.
     pub http_responses: [u64; 5],
+    /// Requests shed by admission control (fast 503, pre-parse).
+    pub http_shed: u64,
+    /// Requests cancelled post-assembly because their deadline expired
+    /// while queued.
+    pub cancelled: u64,
+    /// Open connections by state, `[idle, reading, inflight, writing]`.
+    pub conn_states: [u64; 4],
+    /// Requests-per-connection histogram (keep-alive reuse).
+    pub hist_keepalive: HistSnapshot,
     /// End-to-end latency histogram (µs buckets).
     pub hist_latency_us: HistSnapshot,
     /// Queue-wait histogram (µs buckets).
@@ -248,6 +268,32 @@ impl Metrics {
         self.http_responses[class].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one request shed by admission control (fast 503 issued
+    /// before the request body was parsed).
+    pub fn record_http_shed(&self) {
+        self.http_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request cancelled after batch assembly (its deadline
+    /// expired between admission and execution).
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the event loop's connection-state partition
+    /// (`[idle, reading, inflight, writing]` — gauges, not counters).
+    pub fn set_conn_states(&self, states: [u64; 4]) {
+        for (slot, v) in self.conn_states.iter().zip(states) {
+            slot.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Record how many requests one connection served before closing
+    /// (the keep-alive reuse distribution).
+    pub fn record_keepalive_requests(&self, served: u64) {
+        self.hist_keepalive.record(served);
+    }
+
     /// Record the worker-thread count the sharded codec runs with (set
     /// once at server startup; a gauge, not a counter).
     pub fn set_codec_threads(&self, threads: usize) {
@@ -297,6 +343,10 @@ impl Metrics {
             http_connections: self.http_connections.load(Ordering::Relaxed),
             http_active: self.http_active.load(Ordering::Relaxed),
             http_responses: std::array::from_fn(|i| self.http_responses[i].load(Ordering::Relaxed)),
+            http_shed: self.http_shed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            conn_states: std::array::from_fn(|i| self.conn_states[i].load(Ordering::Relaxed)),
+            hist_keepalive: self.hist_keepalive.snapshot(),
             hist_latency_us: self.hist_latency_us.snapshot(),
             hist_queue_us: self.hist_queue_us.snapshot(),
             hist_codec_ns: self.hist_codec_ns.snapshot(),
@@ -360,6 +410,15 @@ impl MetricsSnapshot {
                 self.http_responses[i]
             ));
         }
+        s.push_str(&format!("positron_http_shed_total {}\n", self.http_shed));
+        s.push_str(&format!("positron_cancelled_total {}\n", self.cancelled));
+        for (i, state) in ["idle", "reading", "inflight", "writing"].iter().enumerate() {
+            s.push_str(&format!(
+                "positron_http_conn_state{{state=\"{state}\"}} {}\n",
+                self.conn_states[i]
+            ));
+        }
+        self.hist_keepalive.render_into(&mut s, "positron_keepalive_requests");
         self.hist_latency_us.render_into(&mut s, "positron_request_latency_us");
         self.hist_queue_us.render_into(&mut s, "positron_queue_wait_us");
         self.hist_codec_ns.render_into(&mut s, "positron_codec_batch_ns");
@@ -493,6 +552,39 @@ mod tests {
         assert!(text.contains("positron_http_responses_total{class=\"2xx\"} 2"), "{text}");
         assert!(text.contains("positron_http_responses_total{class=\"4xx\"} 1"), "{text}");
         assert!(text.contains("positron_http_responses_total{class=\"5xx\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn shed_cancel_and_conn_state_families_render() {
+        let m = Metrics::default();
+        m.record_http_shed();
+        m.record_http_shed();
+        m.record_cancelled();
+        m.set_conn_states([5, 1, 2, 0]);
+        m.record_keepalive_requests(8);
+        m.record_keepalive_requests(1);
+        let s = m.snapshot();
+        assert_eq!(s.http_shed, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.conn_states, [5, 1, 2, 0]);
+        assert_eq!(s.hist_keepalive.count, 2);
+        assert_eq!(s.hist_keepalive.sum, 9);
+        let text = s.render();
+        for line in [
+            "positron_http_shed_total 2",
+            "positron_cancelled_total 1",
+            "positron_http_conn_state{state=\"idle\"} 5",
+            "positron_http_conn_state{state=\"reading\"} 1",
+            "positron_http_conn_state{state=\"inflight\"} 2",
+            "positron_http_conn_state{state=\"writing\"} 0",
+            "positron_keepalive_requests_count 2",
+            "positron_keepalive_requests_sum 9",
+        ] {
+            assert!(text.contains(line), "missing `{line}` in:\n{text}");
+        }
+        // Gauges overwrite, not accumulate.
+        m.set_conn_states([0, 0, 0, 3]);
+        assert_eq!(m.snapshot().conn_states, [0, 0, 0, 3]);
     }
 
     #[test]

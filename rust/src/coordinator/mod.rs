@@ -14,9 +14,13 @@
 //! - [`server`] — the batching worker + typed client errors
 //!   ([`InferError`] / [`ServeError`]): queue-full backpressure,
 //!   deadline expiry, and explicit per-request batch-failure answers.
-//! - [`http`] — zero-dependency HTTP/1.1 listener: `GET /metrics`
-//!   (Prometheus-style), `GET /healthz`, `POST /infer` (echoes a trace
-//!   id), `GET /debug/tracez` (the span ring, `?min_us=`/`?limit=`).
+//! - [`http`] — zero-dependency event-driven HTTP/1.1 listener
+//!   (nonblocking accept + epoll/poll readiness loop, keep-alive,
+//!   pipelining, admission control): `POST /v1/infer/<model>` routed
+//!   through a [`ModelRegistry`], `GET /v1/models`, legacy `POST
+//!   /infer`, `GET /metrics` (Prometheus-style), `GET /healthz`,
+//!   `GET /debug/tracez` (the span ring, `?min_us=`/`?limit=`), typed
+//!   [`ApiError`] JSON error bodies (see `docs/HTTP_API.md`).
 //! - [`metrics`] — counters, bounded-reservoir latency quantiles, and
 //!   power-of-2 log-bucketed histograms (latency, queue wait, codec,
 //!   execute) in Prometheus `_bucket`/`_sum`/`_count` form.
@@ -35,7 +39,10 @@ pub mod server;
 pub mod trace;
 
 pub use backend::{BackendKind, InferenceBackend, NativeBackend, PjrtBackend, WeightFormat};
-pub use http::HttpServer;
+pub use http::{ApiError, HttpClient, HttpResponse, HttpServer};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{InferError, InferenceServer, Response, ServeError, ServerConfig};
+pub use server::{
+    InferError, InferenceServer, ModelEntry, ModelRegistry, Notify, Pending, Response, ServeError,
+    ServerConfig, ServerConfigBuilder,
+};
 pub use trace::{SpanRecord, Stage, StageTimer, Tracer};

@@ -49,6 +49,12 @@ use super::trace::{self, SpanRecord, Stage, StageTimer, Tracer};
 use crate::runtime::ModelWeights;
 
 /// Server tuning knobs.
+///
+/// Prefer [`ServerConfig::builder`], which validates the knob set at
+/// build time (e.g. `max_inflight >= max_batch`). Field-literal
+/// construction with `..Default::default()` remains supported as the
+/// legacy path so existing call sites compile unchanged, but it skips
+/// validation and new knobs may not be checked for coherence.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Max requests per executed batch (additionally capped by the
@@ -81,6 +87,13 @@ pub struct ServerConfig {
     /// *retention* only — stage timing, histograms, and counters stay
     /// on, and logits are bit-identical either way.
     pub tracing: bool,
+    /// Admission budget for the HTTP front end: at most this many
+    /// requests may be in flight (submitted but unanswered) through one
+    /// listener before new requests are shed with a fast 503 +
+    /// `Retry-After`, *before* their body is parsed. Must be at least
+    /// `max_batch` (the builder validates this) or admission control
+    /// would starve the batcher of full batches.
+    pub max_inflight: usize,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +108,7 @@ impl Default for ServerConfig {
             model_file: WeightFormat::Bp32.model_file().into(),
             deadline: None,
             tracing: true,
+            max_inflight: 256,
         }
     }
 }
@@ -108,6 +122,136 @@ impl ServerConfig {
             model_file: format.model_file().into(),
             ..Default::default()
         }
+    }
+
+    /// Start building a validated config (the preferred construction
+    /// path — see [`ServerConfigBuilder`]).
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder { cfg: ServerConfig::default() }
+    }
+}
+
+/// Builder for [`ServerConfig`] with build-time validation:
+///
+/// ```
+/// use positron::coordinator::{backend::WeightFormat, ServerConfig};
+/// use std::time::Duration;
+///
+/// let cfg = ServerConfig::builder()
+///     .format(WeightFormat::Bp64)
+///     .deadline(Duration::from_millis(250))
+///     .max_inflight(512)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.max_inflight, 512);
+/// ```
+///
+/// `build` rejects incoherent knob sets (zero batch/queue sizes, an
+/// admission budget below the batch size, a zero deadline, an empty
+/// model file) instead of letting them surface as hangs or permanent
+/// 503s at serve time.
+#[derive(Clone, Debug)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    /// Max requests per executed batch.
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.cfg.max_batch = n;
+        self
+    }
+
+    /// Max time the batcher waits to fill a batch.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.max_wait = d;
+        self
+    }
+
+    /// Bounded queue depth (backpressure beyond this).
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.cfg.queue_depth = n;
+        self
+    }
+
+    /// Quantize inputs through the serving format's codec.
+    pub fn quantize_inputs(mut self, on: bool) -> Self {
+        self.cfg.quantize_inputs = on;
+        self
+    }
+
+    /// Which executor the worker builds.
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.cfg.backend = kind;
+        self
+    }
+
+    /// Serving weight format; keeps the PJRT artifact name in sync
+    /// (call [`ServerConfigBuilder::model_file`] *after* this to
+    /// override the artifact).
+    pub fn format(mut self, format: WeightFormat) -> Self {
+        self.cfg.weight_format = format;
+        self.cfg.model_file = format.model_file().into();
+        self
+    }
+
+    /// HLO artifact for the PJRT backend (ignored by the native one).
+    pub fn model_file(mut self, file: &str) -> Self {
+        self.cfg.model_file = file.into();
+        self
+    }
+
+    /// Per-request deadline (answered with a deadline error when still
+    /// queued past this). Use [`ServerConfigBuilder::no_deadline`] to
+    /// clear.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.cfg.deadline = Some(d);
+        self
+    }
+
+    /// Disable the per-request deadline (the default).
+    pub fn no_deadline(mut self) -> Self {
+        self.cfg.deadline = None;
+        self
+    }
+
+    /// Retain request/batch spans for `GET /debug/tracez`.
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.cfg.tracing = on;
+        self
+    }
+
+    /// Listener admission budget (max in-flight requests before
+    /// load-shedding).
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.cfg.max_inflight = n;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServerConfig> {
+        let c = &self.cfg;
+        if c.max_batch == 0 {
+            return Err(anyhow!("ServerConfig: max_batch must be at least 1"));
+        }
+        if c.queue_depth == 0 {
+            return Err(anyhow!("ServerConfig: queue_depth must be at least 1"));
+        }
+        if c.max_inflight < c.max_batch {
+            return Err(anyhow!(
+                "ServerConfig: max_inflight ({}) must be >= max_batch ({}) — a smaller \
+                 admission budget could never fill a batch",
+                c.max_inflight,
+                c.max_batch
+            ));
+        }
+        if c.deadline == Some(Duration::ZERO) {
+            return Err(anyhow!("ServerConfig: a zero deadline rejects every request"));
+        }
+        if c.model_file.is_empty() {
+            return Err(anyhow!("ServerConfig: model_file must not be empty"));
+        }
+        Ok(self.cfg)
     }
 }
 
@@ -160,6 +304,12 @@ impl fmt::Display for InferError {
     }
 }
 
+/// Completion callback attached to a submitted request: the worker
+/// invokes it after the answer (success *or* serve error) is sent, so a
+/// non-blocking caller — the event-driven HTTP listener — can be woken
+/// instead of polling its receivers.
+pub type Notify = Arc<dyn Fn() + Send + Sync>;
+
 /// One inference request (internal).
 struct Request {
     features: Vec<f32>,
@@ -170,6 +320,31 @@ struct Request {
     /// Stage time spent before submission (HTTP accept/parse; zero for
     /// in-process callers) — merged into the response's breakdown.
     pre: StageTimer,
+    /// Invoked by the worker right after this request is answered.
+    notify: Option<Notify>,
+}
+
+impl Request {
+    /// Answer this request and fire its completion callback.
+    fn answer(self, result: ServeResult) {
+        let _ = self.resp.send(result);
+        if let Some(n) = &self.notify {
+            n();
+        }
+    }
+}
+
+/// A submitted-but-unanswered request: the waiter half plus the trace id
+/// assigned at submission (needed to stamp error bodies for requests
+/// that never produce a [`Response`]).
+pub struct Pending {
+    /// Yields the worker's answer exactly once.
+    pub rx: Receiver<ServeResult>,
+    /// The id this request carries through spans and error bodies.
+    pub trace_id: u64,
+    /// Submission instant (for latency accounting by non-blocking
+    /// callers).
+    pub submitted: Instant,
 }
 
 /// One inference response.
@@ -196,6 +371,10 @@ pub struct InferenceServer {
     worker: Option<JoinHandle<()>>,
     /// (features, classes) of the served model.
     pub dims: (usize, usize),
+    /// The serving weight format (from the startup config).
+    format: WeightFormat,
+    /// The listener admission budget (from the startup config).
+    max_inflight: usize,
 }
 
 impl InferenceServer {
@@ -234,6 +413,25 @@ impl InferenceServer {
         )
     }
 
+    /// [`start_native`](Self::start_native) with caller-provided metrics
+    /// and span sinks — the registry path for in-memory weights.
+    pub fn start_native_shared(
+        weights: ModelWeights,
+        cfg: ServerConfig,
+        metrics: Arc<Metrics>,
+        tracer: Arc<Tracer>,
+    ) -> Result<InferenceServer> {
+        let format = cfg.weight_format;
+        Self::start_with_factory_shared(
+            move || -> Result<Box<dyn InferenceBackend>> {
+                Ok(Box::new(NativeBackend::from_weights(&weights, format)?))
+            },
+            cfg,
+            metrics,
+            tracer,
+        )
+    }
+
     /// Start over an arbitrary backend factory. The factory runs *on the
     /// worker thread* (PJRT handles are not `Send`); startup errors are
     /// reported from here. Tests use this to inject slow or failing
@@ -242,11 +440,30 @@ impl InferenceServer {
     where
         F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
         let tracer = Arc::new(Tracer::new(cfg.tracing));
+        Self::start_with_factory_shared(factory, cfg, metrics, tracer)
+    }
+
+    /// Start over a factory with *caller-provided* metrics and span
+    /// sinks. This is how a [`ModelRegistry`] makes several tiers share
+    /// one `/metrics` surface and one `/debug/tracez` ring behind a
+    /// single listener. Span retention follows `tracer.enabled()`, not
+    /// `cfg.tracing` — the shared ring's policy wins.
+    pub fn start_with_factory_shared<F>(
+        factory: F,
+        cfg: ServerConfig,
+        metrics: Arc<Metrics>,
+        tracer: Arc<Tracer>,
+    ) -> Result<InferenceServer>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let m2 = metrics.clone();
         let t2 = tracer.clone();
+        let format = cfg.weight_format;
+        let max_inflight = cfg.max_inflight;
         let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(usize, usize), String>>(1);
         let worker = std::thread::spawn(move || match factory() {
             Err(e) => {
@@ -261,7 +478,15 @@ impl InferenceServer {
             .recv()
             .map_err(|_| anyhow!("server worker died during startup"))?
             .map_err(|e| anyhow!("server startup failed: {e}"))?;
-        Ok(InferenceServer { tx, metrics, tracer, worker: Some(worker), dims })
+        Ok(InferenceServer {
+            tx,
+            metrics,
+            tracer,
+            worker: Some(worker),
+            dims,
+            format,
+            max_inflight,
+        })
     }
 
     /// Blocking inference with a typed error. Completes the request span
@@ -290,6 +515,26 @@ impl InferenceServer {
         features: Vec<f32>,
         pre: StageTimer,
     ) -> std::result::Result<Response, InferError> {
+        let pending = self.submit(features, pre, None)?;
+        match pending.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(ServeError::DeadlineExceeded)) => Err(InferError::DeadlineExceeded),
+            Ok(Err(ServeError::BackendFailed(m))) => Err(InferError::Backend(m)),
+            Err(_) => Err(InferError::Stopped),
+        }
+    }
+
+    /// Non-blocking submission with pre-submit stage time and an
+    /// optional completion callback (fired by the worker right after
+    /// the answer is sent). The event-driven HTTP listener's dispatch
+    /// path: it keeps the [`Pending`] and is woken by `notify` instead
+    /// of blocking a thread per request.
+    pub fn submit(
+        &self,
+        features: Vec<f32>,
+        pre: StageTimer,
+        notify: Option<Notify>,
+    ) -> std::result::Result<Pending, InferError> {
         if features.len() != self.dims.0 {
             return Err(InferError::BadRequest(format!(
                 "expected {} features, got {}",
@@ -298,27 +543,17 @@ impl InferenceServer {
             )));
         }
         let (rtx, rrx) = sync_channel(1);
-        let req = Request {
-            features,
-            submitted: Instant::now(),
-            resp: rtx,
-            trace_id: trace::next_trace_id(),
-            pre,
-        };
+        let submitted = Instant::now();
+        let trace_id = trace::next_trace_id();
+        let req = Request { features, submitted, resp: rtx, trace_id, pre, notify };
         self.metrics.record_request();
         match self.tx.try_send(req) {
-            Ok(()) => {}
+            Ok(()) => Ok(Pending { rx: rrx, trace_id, submitted }),
             Err(TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
-                return Err(InferError::Busy);
+                Err(InferError::Busy)
             }
-            Err(TrySendError::Disconnected(_)) => return Err(InferError::Stopped),
-        }
-        match rrx.recv() {
-            Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(ServeError::DeadlineExceeded)) => Err(InferError::DeadlineExceeded),
-            Ok(Err(ServeError::BackendFailed(m))) => Err(InferError::Backend(m)),
-            Err(_) => Err(InferError::Stopped),
+            Err(TrySendError::Disconnected(_)) => Err(InferError::Stopped),
         }
     }
 
@@ -330,33 +565,27 @@ impl InferenceServer {
     /// Non-blocking submit returning a waiter for the worker's answer
     /// (response or per-request serve error).
     pub fn infer_async(&self, features: Vec<f32>) -> Result<Receiver<ServeResult>> {
-        if features.len() != self.dims.0 {
-            return Err(anyhow!("expected {} features, got {}", self.dims.0, features.len()));
-        }
-        let (rtx, rrx) = sync_channel(1);
         // Async submissions get a trace id (they appear in their batch
         // span's member list) but no request span — there is no single
         // completion point at which to stamp one.
-        let req = Request {
-            features,
-            submitted: Instant::now(),
-            resp: rtx,
-            trace_id: trace::next_trace_id(),
-            pre: StageTimer::default(),
-        };
-        self.metrics.record_request();
-        match self.tx.try_send(req) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => {
-                self.metrics.record_rejected();
-                Err(anyhow!("server busy (queue full)"))
-            }
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
-        }
+        self.submit(features, StageTimer::default(), None)
+            .map(|p| p.rx)
+            .map_err(|e| anyhow!("{e}"))
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// The weight format this server was configured to serve.
+    pub fn weight_format(&self) -> WeightFormat {
+        self.format
+    }
+
+    /// The admission budget configured for listeners fronting this
+    /// server (`cfg.max_inflight`).
+    pub fn max_inflight(&self) -> usize {
+        self.max_inflight
     }
 
     /// The server's span sink (the HTTP layer completes and pushes
@@ -375,6 +604,154 @@ impl Drop for InferenceServer {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+    }
+}
+
+/// One registered tier: the `<model>` segment of `POST /v1/infer/<model>`
+/// plus its serving stack.
+pub struct ModelEntry {
+    name: String,
+    server: Arc<InferenceServer>,
+}
+
+impl ModelEntry {
+    /// Route name (the `<model>` path segment).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The tier's batching server.
+    pub fn server(&self) -> &Arc<InferenceServer> {
+        &self.server
+    }
+}
+
+/// Route-name → server map behind one listener: `/v1/infer/<model>`
+/// dispatches through this, so a single front end serves the f32, bp32,
+/// and bp64 tiers side by side.
+///
+/// All registered tiers share one [`Metrics`] surface and one span ring
+/// ([`Tracer`]) — `/metrics` and `/debug/tracez` aggregate across tiers.
+/// Weight dedup is automatic: native backends quantize through the
+/// process-wide content-hash weight cache, so two tiers over the same
+/// source weights share every per-format quantized copy.
+///
+/// The first registered model is the **default**: legacy `POST /infer`
+/// (no model segment) routes to it.
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+    metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
+}
+
+impl ModelRegistry {
+    /// Empty registry with fresh shared sinks. `tracing` sets the span
+    /// ring's retention policy for every tier registered into it.
+    pub fn new(tracing: bool) -> ModelRegistry {
+        ModelRegistry {
+            entries: Vec::new(),
+            metrics: Arc::new(Metrics::default()),
+            tracer: Arc::new(Tracer::new(tracing)),
+        }
+    }
+
+    /// Wrap one already-running server as a single-model registry (the
+    /// compatibility path for [`super::http::serve`]). The registry
+    /// adopts the server's metrics and span sinks, so the observability
+    /// endpoints are unchanged from serving it directly.
+    pub fn from_server(name: &str, server: Arc<InferenceServer>) -> Result<ModelRegistry> {
+        let mut reg = ModelRegistry {
+            entries: Vec::new(),
+            metrics: server.metrics(),
+            tracer: server.tracer(),
+        };
+        reg.insert(name, server)?;
+        Ok(reg)
+    }
+
+    /// Register a native tier over in-memory weights, sharing the
+    /// registry's metrics and span ring.
+    pub fn register_native(
+        &mut self,
+        name: &str,
+        weights: ModelWeights,
+        cfg: ServerConfig,
+    ) -> Result<()> {
+        let server = InferenceServer::start_native_shared(
+            weights,
+            cfg,
+            self.metrics.clone(),
+            self.tracer.clone(),
+        )?;
+        self.insert(name, Arc::new(server))
+    }
+
+    /// Register a tier over an arbitrary backend factory (tests inject
+    /// slow or failing backends through this).
+    pub fn register_with_factory<F>(
+        &mut self,
+        name: &str,
+        factory: F,
+        cfg: ServerConfig,
+    ) -> Result<()>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
+        let server = InferenceServer::start_with_factory_shared(
+            factory,
+            cfg,
+            self.metrics.clone(),
+            self.tracer.clone(),
+        )?;
+        self.insert(name, Arc::new(server))
+    }
+
+    /// Add an already-started server under `name`. Route names appear
+    /// verbatim as a path segment, so they must be non-empty, unique,
+    /// and limited to `[A-Za-z0-9._-]`.
+    pub fn insert(&mut self, name: &str, server: Arc<InferenceServer>) -> Result<()> {
+        let ok_byte = |b: u8| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.';
+        if name.is_empty() || !name.bytes().all(ok_byte) {
+            return Err(anyhow!("invalid model route name {name:?}: use [A-Za-z0-9._-]"));
+        }
+        if self.entries.iter().any(|e| e.name == name) {
+            return Err(anyhow!("model {name:?} is already registered"));
+        }
+        self.entries.push(ModelEntry { name: name.to_string(), server });
+        Ok(())
+    }
+
+    /// Look up a tier by route name.
+    pub fn get(&self, name: &str) -> Option<&Arc<InferenceServer>> {
+        self.entries.iter().find(|e| e.name == name).map(|e| &e.server)
+    }
+
+    /// The default tier (first registered) — the target of legacy
+    /// `POST /infer`.
+    pub fn default_entry(&self) -> Option<&ModelEntry> {
+        self.entries.first()
+    }
+
+    /// All registered tiers, in registration order.
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    /// The shared metrics surface (`GET /metrics` renders this).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// The shared span ring (`GET /debug/tracez` renders this).
+    pub fn tracer(&self) -> Arc<Tracer> {
+        self.tracer.clone()
+    }
+
+    /// The listener's admission budget: the sum of every registered
+    /// tier's `max_inflight`. The event loop sheds (fast 503) once this
+    /// many requests sit between admission and response write.
+    pub fn max_inflight(&self) -> usize {
+        self.entries.iter().map(|e| e.server.max_inflight()).sum()
     }
 }
 
@@ -401,7 +778,7 @@ fn worker_loop(
     let admit = |r: Request, batch: &mut Vec<Request>| {
         if cfg.deadline.is_some_and(|dl| r.submitted.elapsed() > dl) {
             metrics.record_deadline_expired();
-            let _ = r.resp.send(Err(ServeError::DeadlineExceeded));
+            r.answer(Err(ServeError::DeadlineExceeded));
         } else {
             batch.push(r);
         }
@@ -425,6 +802,22 @@ fn worker_loop(
                 Ok(r) => admit(r, &mut batch),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Mid-batch cancellation: a request admitted with time to spare
+        // can still expire while the batch-fill window runs. Re-check
+        // after assembly so an already-dead request never costs GEMM
+        // rows; this is counted separately from pre-batch expiry.
+        if let Some(dl) = cfg.deadline {
+            let (live, expired): (Vec<Request>, Vec<Request>) =
+                batch.into_iter().partition(|r| r.submitted.elapsed() <= dl);
+            batch = live;
+            for r in expired {
+                metrics.record_cancelled();
+                r.answer(Err(ServeError::DeadlineExceeded));
+            }
+            if batch.is_empty() {
+                continue;
             }
         }
         let rows = batch.len();
@@ -484,10 +877,11 @@ fn worker_loop(
                     if tracing {
                         members.push(r.trace_id);
                     }
-                    let _ = r.resp.send(Ok(Response {
+                    let trace_id = r.trace_id;
+                    r.answer(Ok(Response {
                         logits,
                         latency,
-                        trace_id: r.trace_id,
+                        trace_id,
                         batch_id,
                         batch_rows: rows as u32,
                         stages,
@@ -510,7 +904,7 @@ fn worker_loop(
                 let msg = format!("{e:#}");
                 eprintln!("batch execute failed ({rows} requests): {msg}");
                 for r in batch {
-                    let _ = r.resp.send(Err(ServeError::BackendFailed(msg.clone())));
+                    r.answer(Err(ServeError::BackendFailed(msg.clone())));
                 }
             }
         }
@@ -541,5 +935,82 @@ mod tests {
         let err = InferenceServer::start(PathBuf::from("/nonexistent-dir-positron"), cfg)
             .unwrap_err();
         assert!(err.to_string().contains("weights.json"), "{err}");
+    }
+
+    /// Builder validation: a coherent knob set passes through; each
+    /// incoherent knob fails with a message naming it.
+    #[test]
+    fn config_builder_validates_knobs() {
+        let cfg = ServerConfig::builder()
+            .format(WeightFormat::Bp64)
+            .max_batch(8)
+            .max_inflight(32)
+            .deadline(Duration::from_millis(100))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.max_inflight, 32);
+        assert_eq!(cfg.weight_format, WeightFormat::Bp64);
+        assert_eq!(cfg.model_file, WeightFormat::Bp64.model_file());
+        assert_eq!(cfg.deadline, Some(Duration::from_millis(100)));
+
+        let err = ServerConfig::builder().max_batch(16).max_inflight(4).build().unwrap_err();
+        assert!(err.to_string().contains("max_inflight"), "{err}");
+        let err = ServerConfig::builder().max_batch(0).build().unwrap_err();
+        assert!(err.to_string().contains("max_batch"), "{err}");
+        let err = ServerConfig::builder().queue_depth(0).build().unwrap_err();
+        assert!(err.to_string().contains("queue_depth"), "{err}");
+        let err = ServerConfig::builder().deadline(Duration::ZERO).build().unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+    }
+
+    /// Registry basics: route-name validation, duplicate rejection,
+    /// lookup, default-model selection, and shared sinks across tiers.
+    #[test]
+    fn registry_validates_and_routes() {
+        let w = backend::synth_weights(4, 8, 3, 4, 0xBEEF);
+        let mut reg = ModelRegistry::new(false);
+        reg.register_native("f32", w.clone(), ServerConfig::for_format(WeightFormat::F32))
+            .unwrap();
+        reg.register_native("bp64", w, ServerConfig::for_format(WeightFormat::Bp64)).unwrap();
+
+        assert!(reg.insert("f32", reg.get("bp64").unwrap().clone()).is_err(), "duplicate");
+        assert!(reg.insert("no/slashes", reg.get("bp64").unwrap().clone()).is_err());
+        assert!(reg.insert("", reg.get("bp64").unwrap().clone()).is_err());
+
+        assert_eq!(reg.entries().len(), 2);
+        assert_eq!(reg.default_entry().unwrap().name(), "f32");
+        assert_eq!(reg.get("bp64").unwrap().weight_format(), WeightFormat::Bp64);
+        assert!(reg.get("nope").is_none());
+        // Both tiers feed one metrics surface: two in-process requests
+        // against different tiers land in the same request counter.
+        let m = reg.metrics();
+        reg.get("f32").unwrap().try_infer(vec![0.5; 4]).unwrap();
+        reg.get("bp64").unwrap().try_infer(vec![0.5; 4]).unwrap();
+        assert_eq!(m.snapshot().requests, 2);
+        // Budget is the sum across tiers (two defaults).
+        assert_eq!(reg.max_inflight(), 512);
+    }
+
+    /// The completion notify fires exactly once per answered request —
+    /// the event loop depends on this to wake its poller.
+    #[test]
+    fn submit_notify_fires_on_completion() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let w = backend::synth_weights(4, 8, 3, 4, 0xCAFE);
+        let srv = InferenceServer::start_native(w, ServerConfig::default()).unwrap();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h2 = hits.clone();
+        let notify: Notify = Arc::new(move || {
+            h2.fetch_add(1, Ordering::SeqCst);
+        });
+        let pending =
+            srv.submit(vec![0.25; 4], StageTimer::default(), Some(notify.clone())).unwrap();
+        let resp = pending.rx.recv().unwrap().unwrap();
+        assert_eq!(resp.logits.len(), 3);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        // Validation failures never reach the queue and never notify.
+        assert!(srv.submit(vec![0.25; 3], StageTimer::default(), Some(notify)).is_err());
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
     }
 }

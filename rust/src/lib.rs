@@ -37,8 +37,11 @@
 //!   runs dense layers on the blocked quantized-weight GEMM, weights
 //!   encoded once via a content-hash cache; PJRT is the feature-gated
 //!   alternative), the batching worker (backpressure, per-request
-//!   deadlines, explicit batch-failure answers), a zero-dependency HTTP
-//!   listener (`GET /metrics`, `POST /infer`, `GET /debug/tracez`),
+//!   deadlines, explicit batch-failure answers), a zero-dependency
+//!   event-driven HTTP/1.1 listener (epoll/`poll(2)` readiness loop,
+//!   keep-alive + pipelining, admission control, multi-model routing:
+//!   `POST /v1/infer/<model>`, `GET /v1/models`, `GET /metrics`,
+//!   `GET /debug/tracez` — see docs/HTTP_API.md),
 //!   quantization through the vector codec with buffer reuse, and a
 //!   zero-dependency observability layer: per-request trace spans with
 //!   staged nanosecond timings, power-of-2 log-bucketed latency/queue/

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use positron::cli::{self, Command, ServeOpts};
-use positron::coordinator::{backend, http, InferenceServer, ServerConfig};
+use positron::coordinator::{backend, http, InferenceServer, ModelRegistry, ServerConfig};
 use positron::runtime::{artifacts_available, ModelWeights};
 
 fn main() {
@@ -94,20 +94,56 @@ fn run(cmd: Command) -> positron::error::Result<()> {
 }
 
 fn serve(o: ServeOpts) -> positron::error::Result<()> {
-    let cfg = ServerConfig {
-        backend: o.backend,
-        weight_format: o.format,
-        model_file: o.format.model_file().into(),
-        deadline: o.deadline_ms.map(Duration::from_millis),
-        tracing: o.tracing,
-        ..Default::default()
+    let tier_cfg = |format: backend::WeightFormat| {
+        let mut b = ServerConfig::builder()
+            .backend(o.backend)
+            .format(format)
+            .tracing(o.tracing);
+        if let Some(ms) = o.deadline_ms {
+            b = b.deadline(Duration::from_millis(ms));
+        }
+        if let Some(n) = o.max_inflight {
+            b = b.max_inflight(n);
+        }
+        b.build()
     };
-    let (server, weights) = if o.synthetic {
-        let w = backend::synth_weights(64, 128, 16, 64, 0x5eed);
-        (InferenceServer::start_native(w.clone(), cfg)?, w)
+    let weights = if o.synthetic {
+        backend::synth_weights(64, 128, 16, 64, 0x5eed)
     } else {
-        let w = ModelWeights::load_from_dir(&o.artifact_dir)?;
-        (InferenceServer::start(o.artifact_dir.clone().into(), cfg)?, w)
+        ModelWeights::load_from_dir(&o.artifact_dir)?
+    };
+
+    // Multi-model: one event-driven listener fronts every tier in
+    // --models over the same weights (the content-hash weight cache
+    // dedups the per-format encodes across restarts).
+    if !o.models.is_empty() {
+        let addr = o.http.as_deref().unwrap_or("127.0.0.1:8080");
+        let mut reg = ModelRegistry::new(o.tracing);
+        for fmt in &o.models {
+            reg.register_native(fmt.name(), weights.clone(), tier_cfg(*fmt)?)?;
+        }
+        let reg = Arc::new(reg);
+        let names: Vec<String> =
+            reg.entries().iter().map(|e| e.name().to_string()).collect();
+        let listener = http::serve_registry(addr, reg)?;
+        println!(
+            "serving tiers [{}] on http://{} — POST /v1/infer/<model>, GET /v1/models, \
+             POST /infer (default {}), GET /metrics, /healthz, /debug/tracez \
+             (Ctrl-C to stop)",
+            names.join(", "),
+            listener.local_addr(),
+            names[0]
+        );
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+
+    let cfg = tier_cfg(o.format)?;
+    let server = if o.synthetic {
+        InferenceServer::start_native(weights.clone(), cfg)?
+    } else {
+        InferenceServer::start(o.artifact_dir.clone().into(), cfg)?
     };
     let server = Arc::new(server);
     println!(
@@ -121,9 +157,10 @@ fn serve(o: ServeOpts) -> positron::error::Result<()> {
     if let Some(addr) = &o.http {
         let listener = http::serve(addr, server.clone())?;
         println!(
-            "listening on http://{} — GET /metrics, GET /healthz, GET /debug/tracez, \
-             POST /infer {{\"features\":[…]}} (Ctrl-C to stop)",
-            listener.local_addr()
+            "listening on http://{} — POST /v1/infer/{}, GET /v1/models, POST /infer \
+             {{\"features\":[…]}}, GET /metrics, /healthz, /debug/tracez (Ctrl-C to stop)",
+            listener.local_addr(),
+            o.format.name()
         );
         loop {
             std::thread::sleep(Duration::from_secs(3600));

@@ -587,6 +587,325 @@ fn native_server_loads_weights_json_from_disk() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Event-driven listener integration (keep-alive, pipelining, admission
+/// control, multi-model routing). The readiness loop is unix-only
+/// (epoll/`poll(2)`); the non-unix fallback keeps the one-request-per-
+/// connection contract, so these tests are gated on unix.
+#[cfg(unix)]
+mod event_loop {
+    use super::*;
+    use positron::coordinator::backend::InferenceBackend;
+    use positron::coordinator::{HttpClient, ModelRegistry};
+
+    fn infer_body(x: &[f32]) -> String {
+        format!(
+            "{{\"features\":[{}]}}",
+            x.iter().map(|v| format!("{v:?}")).collect::<Vec<_>>().join(",")
+        )
+    }
+
+    fn logits_of(body: &str) -> Vec<f32> {
+        positron::json::Json::parse(body)
+            .expect("response is JSON")
+            .get("logits")
+            .and_then(|l| l.as_f32_vec())
+            .expect("logits array")
+    }
+
+    #[test]
+    fn keep_alive_sequential_requests_are_bit_exact() {
+        let w = model();
+        let server = Arc::new(start_native(&w, ServerConfig::default()));
+        let mut listener = http::serve("127.0.0.1:0", server).unwrap();
+        let addr = listener.local_addr();
+
+        // One connection, 12 sequential requests: every response rides
+        // the same socket and stays bit-exact against the reference.
+        let mut client = HttpClient::connect(&addr).unwrap();
+        for round in 0..3 {
+            for g in 0..4 {
+                let x = &w.golden_x[g * w.d..(g + 1) * w.d];
+                let resp = client.request("POST", "/infer", &infer_body(x)).unwrap();
+                assert_eq!(resp.status, 200, "round {round} row {g}: {}", resp.body);
+                assert_eq!(
+                    resp.header("connection").map(str::to_ascii_lowercase),
+                    Some("keep-alive".into()),
+                    "round {round} row {g}"
+                );
+                let want = reference_forward(&w, WeightFormat::Bp32, &quantizer::roundtrip(x));
+                assert_eq!(bits(&logits_of(&resp.body)), bits(&want), "round {round} row {g}");
+            }
+        }
+
+        // Closing the connection feeds the keep-alive reuse histogram:
+        // the sum must account for the 12 requests that shared it.
+        drop(client);
+        let mut sum = 0.0;
+        for _ in 0..200 {
+            let (_, text) = http::http_request(&addr, "GET", "/metrics", "").unwrap();
+            sum = http::metric_value(&text, "positron_keepalive_requests_sum").unwrap_or(0.0);
+            if sum >= 12.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(sum >= 12.0, "keep-alive histogram must see the 12-request connection: {sum}");
+        listener.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_in_order() {
+        let w = model();
+        let server = Arc::new(start_native(&w, ServerConfig::default()));
+        let mut listener = http::serve("127.0.0.1:0", server).unwrap();
+        let mut client = HttpClient::connect(&listener.local_addr()).unwrap();
+
+        // Six requests written back-to-back without reading a byte; the
+        // responses must come back in request order (distinct golden
+        // rows make reordering detectable).
+        let n = 6;
+        for g in 0..n {
+            let x = &w.golden_x[(g % 4) * w.d..((g % 4) + 1) * w.d];
+            client.send("POST", "/infer", &infer_body(x)).unwrap();
+        }
+        for g in 0..n {
+            let resp = client.recv().unwrap();
+            assert_eq!(resp.status, 200, "response {g}: {}", resp.body);
+            let x = &w.golden_x[(g % 4) * w.d..((g % 4) + 1) * w.d];
+            let want = reference_forward(&w, WeightFormat::Bp32, &quantizer::roundtrip(x));
+            assert_eq!(bits(&logits_of(&resp.body)), bits(&want), "response {g} out of order");
+        }
+        listener.shutdown();
+    }
+
+    #[test]
+    fn admission_control_sheds_with_fast_503() {
+        // One admission slot over a 1 s backend: a second connection's
+        // request must be shed before body parse — fast 503 with
+        // Retry-After and a typed body — while the admitted request
+        // still completes.
+        let mut reg = ModelRegistry::new(false);
+        let cfg = ServerConfig::builder()
+            .max_batch(1)
+            .max_wait(Duration::ZERO)
+            .queue_depth(8)
+            .max_inflight(1)
+            .build()
+            .unwrap();
+        reg.register_with_factory(
+            "slow",
+            || -> Result<Box<dyn InferenceBackend>> {
+                Ok(Box::new(SlowBackend {
+                    d: 2,
+                    c: 2,
+                    delay: Duration::from_millis(1000),
+                    out: Vec::new(),
+                }))
+            },
+            cfg,
+        )
+        .unwrap();
+        let reg = Arc::new(reg);
+        let metrics = reg.metrics();
+        let mut listener = http::serve_registry("127.0.0.1:0", reg).unwrap();
+        let addr = listener.local_addr();
+
+        let mut busy = HttpClient::connect(&addr).unwrap();
+        busy.send("POST", "/v1/infer/slow", "{\"features\":[0.5,0.5]}").unwrap();
+        std::thread::sleep(Duration::from_millis(100)); // request now in flight
+
+        let mut shed = HttpClient::connect(&addr).unwrap();
+        let t0 = std::time::Instant::now();
+        let resp = shed.request("POST", "/v1/infer/slow", "{\"features\":[0.5,0.5]}").unwrap();
+        assert_eq!(resp.status, 503, "{}", resp.body);
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "shed must answer without waiting for the backend ({:?})",
+            t0.elapsed()
+        );
+        assert_eq!(resp.header("retry-after"), Some("1"), "{}", resp.body);
+        let j = positron::json::Json::parse(&resp.body).unwrap();
+        assert_eq!(j.get("code").and_then(|c| c.as_str()), Some("overloaded"), "{}", resp.body);
+        assert_eq!(j.get("trace_id").and_then(|t| t.as_f64()), Some(0.0), "never reached queue");
+        assert!(metrics.snapshot().http_shed >= 1, "shed counter must move");
+
+        let ok = busy.recv().unwrap();
+        assert_eq!(ok.status, 200, "admitted request unaffected: {}", ok.body);
+        listener.shutdown();
+    }
+
+    #[test]
+    fn queue_full_maps_to_429_with_typed_body() {
+        // Admission budget wide open but queue depth 1: a pipelined
+        // burst hits the server-side Busy path, which renders as 429
+        // Too Many Requests (admission shed stays 503).
+        let mut reg = ModelRegistry::new(false);
+        let cfg = ServerConfig::builder()
+            .max_batch(1)
+            .max_wait(Duration::ZERO)
+            .queue_depth(1)
+            .max_inflight(64)
+            .build()
+            .unwrap();
+        reg.register_with_factory(
+            "slow",
+            || -> Result<Box<dyn InferenceBackend>> {
+                Ok(Box::new(SlowBackend {
+                    d: 2,
+                    c: 2,
+                    delay: Duration::from_millis(150),
+                    out: Vec::new(),
+                }))
+            },
+            cfg,
+        )
+        .unwrap();
+        let mut listener = http::serve_registry("127.0.0.1:0", Arc::new(reg)).unwrap();
+        let mut client = HttpClient::connect(&listener.local_addr()).unwrap();
+        for _ in 0..8 {
+            client.send("POST", "/v1/infer/slow", "{\"features\":[0.5,0.5]}").unwrap();
+        }
+        let (mut ok, mut rejected) = (0, 0);
+        for _ in 0..8 {
+            let resp = client.recv().unwrap();
+            match resp.status {
+                200 => ok += 1,
+                429 => {
+                    rejected += 1;
+                    assert_eq!(resp.header("retry-after"), Some("1"), "{}", resp.body);
+                    let j = positron::json::Json::parse(&resp.body).unwrap();
+                    assert_eq!(
+                        j.get("code").and_then(|c| c.as_str()),
+                        Some("too_many_requests"),
+                        "{}",
+                        resp.body
+                    );
+                }
+                other => panic!("unexpected status {other}: {}", resp.body),
+            }
+        }
+        assert!(ok >= 1, "at least the first request must be admitted");
+        assert!(rejected >= 1, "queue depth 1 must reject under a pipelined burst");
+        listener.shutdown();
+    }
+
+    #[test]
+    fn registry_routes_tiers_and_shares_the_weight_cache() {
+        let w = model();
+        // A standalone bp32 server has already encoded these weights:
+        // the registry's bp32 tier must hit the process-wide cache.
+        let _warm = start_native(&w, ServerConfig::default());
+        let (h0, _) = quantizer::weight_cache_stats();
+        let mut reg = ModelRegistry::new(false);
+        for format in [WeightFormat::Bp32, WeightFormat::Bp64] {
+            let cfg = ServerConfig::builder().format(format).build().unwrap();
+            reg.register_native(format.name(), w.clone(), cfg).unwrap();
+        }
+        let (h1, _) = quantizer::weight_cache_stats();
+        assert!(h1 >= h0 + 2, "registry tier must reuse cached encodings ({h0} → {h1})");
+
+        let mut listener = http::serve_registry("127.0.0.1:0", Arc::new(reg)).unwrap();
+        let addr = listener.local_addr();
+
+        // GET /v1/models lists both tiers, default first.
+        let (status, body) = http::http_request(&addr, "GET", "/v1/models", "").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let j = positron::json::Json::parse(&body).unwrap();
+        assert_eq!(j.get("default").and_then(|d| d.as_str()), Some("bp32"), "{body}");
+        let names: Vec<String> = j
+            .get("models")
+            .and_then(|m| m.as_arr())
+            .expect("models array")
+            .iter()
+            .filter_map(|m| m.get("name").and_then(|n| n.as_str()).map(str::to_string))
+            .collect();
+        assert_eq!(names, ["bp32", "bp64"], "{body}");
+
+        // Each tier answers bit-exactly against its own reference.
+        let x = &w.golden_x[..w.d];
+        for format in [WeightFormat::Bp32, WeightFormat::Bp64] {
+            let path = format!("/v1/infer/{}", format.name());
+            let (status, resp) = http::http_request(&addr, "POST", &path, &infer_body(x)).unwrap();
+            assert_eq!(status, 200, "{resp}");
+            let want = reference_forward(&w, format, &stage_inputs(format, x));
+            assert_eq!(bits(&logits_of(&resp)), bits(&want), "{} tier", format.name());
+        }
+
+        // Unknown model name: typed 404.
+        let (status, body) =
+            http::http_request(&addr, "POST", "/v1/infer/fp8", &infer_body(x)).unwrap();
+        assert_eq!(status, 404, "{body}");
+        assert!(body.contains("\"code\":\"not_found\""), "{body}");
+
+        // Legacy alias: POST /infer answers from the default tier with
+        // logits identical to /v1/infer/bp32.
+        let (status, legacy) = http::http_request(&addr, "POST", "/infer", &infer_body(x)).unwrap();
+        assert_eq!(status, 200, "{legacy}");
+        let want = reference_forward(&w, WeightFormat::Bp32, &quantizer::roundtrip(x));
+        assert_eq!(bits(&logits_of(&legacy)), bits(&want), "legacy alias must hit default tier");
+        listener.shutdown();
+    }
+
+    #[test]
+    fn shutdown_completes_with_open_idle_keepalive_connections() {
+        // The PR 7 bugfix: shutdown wakes the event loop through the
+        // poller, so open idle keep-alive connections cannot stall it
+        // (the old listener needed a TCP self-connect to unblock).
+        let w = model();
+        let server = Arc::new(start_native(&w, ServerConfig::default()));
+        let mut listener = http::serve("127.0.0.1:0", server).unwrap();
+        let addr = listener.local_addr();
+        let mut clients = Vec::new();
+        for i in 0..3 {
+            let mut c = HttpClient::connect(&addr).unwrap();
+            let resp = c.request("POST", "/infer", &infer_body(&w.golden_x[..w.d])).unwrap();
+            assert_eq!(resp.status, 200, "conn {i}: {}", resp.body);
+            clients.push(c); // held open and idle across shutdown
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            listener.shutdown();
+            let _ = tx.send(());
+        });
+        rx.recv_timeout(Duration::from_secs(5))
+            .expect("shutdown must not hang on idle keep-alive connections");
+        drop(clients);
+    }
+
+    #[test]
+    fn event_loop_sustains_hundreds_of_connections_past_the_thread_cap() {
+        // Far beyond the old 64-thread cap: 200 connections held open at
+        // once, all tracked by the idle gauge, any of them servable.
+        let w = model();
+        let server = Arc::new(start_native(&w, ServerConfig::default()));
+        let mut listener = http::serve("127.0.0.1:0", server).unwrap();
+        let addr = listener.local_addr();
+        let mut clients: Vec<HttpClient> = (0..200)
+            .map(|i| HttpClient::connect(&addr).unwrap_or_else(|e| panic!("conn {i}: {e}")))
+            .collect();
+        let x = &w.golden_x[..w.d];
+        let want = reference_forward(&w, WeightFormat::Bp32, &quantizer::roundtrip(x));
+        for i in (0..clients.len()).step_by(20) {
+            let resp = clients[i].request("POST", "/infer", &infer_body(x)).unwrap();
+            assert_eq!(resp.status, 200, "conn {i}: {}", resp.body);
+            assert_eq!(bits(&logits_of(&resp.body)), bits(&want), "conn {i}");
+        }
+        let mut idle = 0.0;
+        for _ in 0..200 {
+            let (_, text) = http::http_request(&addr, "GET", "/metrics", "").unwrap();
+            idle = http::metric_value(&text, "positron_http_conn_state{state=\"idle\"}")
+                .unwrap_or(0.0);
+            if idle >= 200.0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(idle >= 200.0, "expected ≥ 200 idle connections tracked, saw {idle}");
+        drop(clients);
+        listener.shutdown();
+    }
+}
+
 /// PJRT-specific integration: the compiled-model goldens. Needs the
 /// `runtime` feature, libxla, and `make artifacts`.
 #[cfg(feature = "runtime")]
