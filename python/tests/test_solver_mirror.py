@@ -1,0 +1,549 @@
+"""Pure-stdlib mirror of the Rust solver layer (rust/src/solver/ +
+rust/src/vector/sparse.rs).
+
+Like every bit-level layer before it (see test_scalar_oracle*.py), the
+algorithm is proven here first and the Rust is a careful transliteration:
+
+- the *chunk-aware* CSR fast SpMV row kernel is shown bitwise-identical to
+  the dense 8-accumulator ``dot`` on densified matrices, at both widths
+  (f64 native; f32 emulated with single-rounding via struct.pack);
+- the tiered CG solver (fast / quire-exact reductions x f32 / f64) is run
+  on the small exactly-representable Poisson operator to produce golden
+  residual trajectories, embedded both here and in rust/tests/solver.rs —
+  the cross-language contract is bitwise equality of every trajectory
+  entry and of the final iterate;
+- the CI bench gate's ordering claim (quire tier reaches tolerance in <=
+  the f32 tier's iterations on the Poisson operator) is checked on the
+  same operator set ``solver-bench --small`` runs;
+- the Jacobi strict-win claim on the scale-skewed random diagonally-
+  dominant operator is checked against the bitwise-mirrored constructor
+  (SplitMix64 PRNG included).
+
+Exact reductions use integer arithmetic over dyadic rationals (every f64
+is m*2^e), with one correctly-rounded conversion at readout — CPython's
+int/Fraction -> float conversion is round-to-nearest-even, the same
+contract the Rust quire readout was validated against in earlier PRs.
+
+Run as a script to (re)print the golden vectors embedded in the Rust test:
+
+    python3 python/tests/test_solver_mirror.py --emit-goldens
+"""
+
+import math
+import struct
+from fractions import Fraction
+
+# ----------------------------------------------------------------------
+# Width emulation. Python floats are IEEE f64; f32 ops round each result
+# through struct.pack (CPython packs via a native double->float cast,
+# which is round-to-nearest-even, overflow -> OverflowError).
+# ----------------------------------------------------------------------
+
+
+def f32r(x):
+    """Round an f64 to the nearest f32 (RNE), widened back to f64."""
+    try:
+        return struct.unpack("<f", struct.pack("<f", x))[0]
+    except OverflowError:
+        return math.inf if x > 0 else -math.inf
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+class F64Ops:
+    """Native f64 arithmetic (one rounding per op, as in Rust)."""
+
+    name = "f64"
+
+    @staticmethod
+    def rnd(x):
+        return x
+
+    @staticmethod
+    def mul(a, b):
+        return a * b
+
+    @staticmethod
+    def add(a, b):
+        return a + b
+
+    @staticmethod
+    def sub(a, b):
+        return a - b
+
+
+class F32Ops:
+    """Emulated f32 arithmetic: operands are f32-valued f64s, so the f64
+    op is exact and one f32r gives the correctly-rounded f32 result."""
+
+    name = "f32"
+
+    @staticmethod
+    def rnd(x):
+        return f32r(x)
+
+    @staticmethod
+    def mul(a, b):
+        return f32r(a * b)
+
+    @staticmethod
+    def add(a, b):
+        return f32r(a + b)
+
+    @staticmethod
+    def sub(a, b):
+        return f32r(a - b)
+
+
+# ----------------------------------------------------------------------
+# Exact reductions over dyadic rationals. value = num * 2^scale with num
+# an arbitrary-precision integer — the software stand-in for the quire.
+# ----------------------------------------------------------------------
+
+
+def _exact_to_float(num, scale):
+    """Correctly-rounded (RNE) f64 of num * 2^scale."""
+    if num == 0:
+        return 0.0
+    if scale >= 0:
+        return float(num << scale)
+    return float(Fraction(num, 1 << -scale))
+
+
+def exact_dot(a, b):
+    """sum(a[i]*b[i]) accumulated exactly, one RNE rounding to f64 —
+    mirrors quire_dot readout (to_decoded().to_f64())."""
+    num, scale = 0, 0
+    for x, y in zip(a, b):
+        if x == 0.0 or y == 0.0:
+            continue
+        px, qx = x.as_integer_ratio()
+        py, qy = y.as_integer_ratio()
+        p = px * py
+        s = -((qx * qy).bit_length() - 1)  # q's are powers of two
+        if s < scale:
+            num <<= scale - s
+            scale = s
+        num += p << (s - scale)
+    return _exact_to_float(num, scale)
+
+
+def exact_norm(v):
+    """sqrt of the exact self-dot — the tier-independent residual metric."""
+    return math.sqrt(exact_dot(v, v))
+
+
+# ----------------------------------------------------------------------
+# Dense 8-accumulator fast dot (rust/src/vector/kernels.rs::dot) and the
+# chunk-aware sparse row kernel (rust/src/vector/sparse.rs) that must
+# match it bitwise on densified matrices.
+# ----------------------------------------------------------------------
+
+
+def dense_dot_fast(ops, a, b):
+    n = len(a)
+    chunks = n - n % 8
+    acc = [0.0] * 8
+    i = 0
+    while i < chunks:
+        for lane in range(8):
+            acc[lane] = ops.add(acc[lane], ops.mul(a[i + lane], b[i + lane]))
+        i += 8
+    s = ops.add(
+        ops.add(ops.add(acc[0], acc[4]), ops.add(acc[1], acc[5])),
+        ops.add(ops.add(acc[2], acc[6]), ops.add(acc[3], acc[7])),
+    )
+    while i < n:
+        s = ops.add(s, ops.mul(a[i], b[i]))
+        i += 1
+    return s
+
+
+def sparse_row_dot_fast(ops, idx, vals, x, chunks):
+    """Chunk-aware CSR row kernel: stored entry at column c lands in
+    accumulator c & 7 while c < chunks, then the serial tail — the same
+    per-accumulator addition order and combine tree as the dense kernel,
+    so skipping the (bitwise-inert) zero products changes nothing."""
+    acc = [0.0] * 8
+    k = 0
+    while k < len(idx) and idx[k] < chunks:
+        c = idx[k]
+        acc[c & 7] = ops.add(acc[c & 7], ops.mul(vals[k], x[c]))
+        k += 1
+    s = ops.add(
+        ops.add(ops.add(acc[0], acc[4]), ops.add(acc[1], acc[5])),
+        ops.add(ops.add(acc[2], acc[6]), ops.add(acc[3], acc[7])),
+    )
+    while k < len(idx):
+        s = ops.add(s, ops.mul(vals[k], x[idx[k]]))
+        k += 1
+    return s
+
+
+# ----------------------------------------------------------------------
+# SplitMix64 — bitwise mirror of rust/src/testutil/mod.rs::Rng.
+# ----------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+class Rng:
+    def __init__(self, seed):
+        self.state = (seed + 0x9E3779B97F4A7C15) & _M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return z ^ (z >> 31)
+
+    def below(self, n):
+        return self.next_u64() % n
+
+    def f64(self):
+        return (self.next_u64() >> 11) / (1 << 53)
+
+
+# ----------------------------------------------------------------------
+# Operators — bitwise mirrors of rust/src/solver/ operators. A matrix is
+# rows = [[(col, val), ...] ascending col, ...] (the CSR contract).
+# ----------------------------------------------------------------------
+
+
+def poisson2d(g):
+    """5-point 2D Poisson stencil on a g x g grid (Dirichlet), n = g^2.
+    All values are small integers: exactly representable in every tier."""
+    n = g * g
+    rows = []
+    for i in range(g):
+        for j in range(g):
+            k = i * g + j
+            row = []
+            if i > 0:
+                row.append((k - g, -1.0))
+            if j > 0:
+                row.append((k - 1, -1.0))
+            row.append((k, 4.0))
+            if j < g - 1:
+                row.append((k + 1, -1.0))
+            if i < g - 1:
+                row.append((k + g, -1.0))
+            rows.append(row)
+    return rows
+
+
+def rand_dd(n, offdiag, scale_pow, seed):
+    """Random symmetric diagonally-dominant SPD operator with power-of-2
+    row/column scaling (exact in binary FP): A'_ij = s_i * s_j * A_ij,
+    s_i = 2^e_i, e_i uniform in [-scale_pow, scale_pow]. The unscaled A
+    has unit diagonal dominance margin; the scaling skews the diagonal
+    over ~2^(2*scale_pow), which plain CG pays for and Jacobi removes."""
+    rng = Rng(seed)
+    offd = {}
+    for i in range(n):
+        for _ in range(offdiag):
+            j = rng.below(n)
+            if j == i:
+                continue
+            key = (min(i, j), max(i, j))
+            if key not in offd:
+                offd[key] = (rng.f64() - 0.5) * 2.0
+    exps = [int(rng.below(2 * scale_pow + 1)) - scale_pow for _ in range(n)]
+    rows = [[] for _ in range(n)]
+    for (i, j), v in offd.items():
+        rows[i].append((j, v))
+        rows[j].append((i, v))
+    for r in rows:
+        r.sort()
+    for i in range(n):
+        diag = 1.0
+        for _, v in rows[i]:
+            diag += abs(v)
+        rows[i].append((i, diag))
+        rows[i].sort()
+    scaled = []
+    for i in range(n):
+        si = math.ldexp(1.0, exps[i])
+        scaled.append([(j, v * si * math.ldexp(1.0, exps[j])) for j, v in rows[i]])
+    return scaled
+
+
+def densify(rows, cols):
+    out = []
+    for row in rows:
+        dense = [0.0] * cols
+        for c, v in row:
+            dense[c] = v
+        out.append(dense)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Tiered CG — mirror of rust/src/solver/mod.rs::cg. Reductions are fast
+# (the 8-acc kernel) or quire-exact; scalars always travel as f64 and are
+# rounded to the tier width before vector updates; the residual trajectory
+# is the exact norm in every tier.
+# ----------------------------------------------------------------------
+
+
+def spmv_fast(ops, rows, chunks, x):
+    return [sparse_row_dot_fast(ops, [c for c, _ in r], [v for _, v in r], x, chunks) for r in rows]
+
+
+def spmv_quire(ops, rows, x):
+    return [ops.rnd(exact_dot([v for _, v in r], [x[c] for c, _ in r])) for r in rows]
+
+
+def cg(rows, b, ops, quire, tol, max_iters, jacobi):
+    n = len(b)
+    chunks = n - n % 8
+    inv_diag = None
+    if jacobi:
+        diag = {r: dict(rows[r])[r] for r in range(n)}
+        inv_diag = [ops.rnd(1.0 / diag[r]) for r in range(n)]
+    x = [0.0] * n
+    r = [ops.rnd(v) for v in b]
+
+    def apply_m(vec):
+        if inv_diag is None:
+            return list(vec)
+        return [ops.mul(vec[i], inv_diag[i]) for i in range(n)]
+
+    def dot_t(u, v):
+        if quire:
+            return exact_dot(u, v)
+        return dense_dot_fast(ops, u, v)
+
+    def spmv_t(vec):
+        if quire:
+            return spmv_quire(ops, rows, vec)
+        return spmv_fast(ops, rows, chunks, vec)
+
+    z = apply_m(r)
+    p = list(z)
+    rz = dot_t(r, z)
+    norm_b = exact_norm(b)
+    threshold = tol * norm_b
+    residuals = []
+    converged = False
+    breakdown = False
+    k = 0
+    while True:
+        res = exact_norm(r)
+        residuals.append(res)
+        if res <= threshold:
+            converged = True
+            break
+        if k == max_iters:
+            break
+        ap = spmv_t(p)
+        pap = dot_t(p, ap)
+        if not pap > 0.0 or not math.isfinite(pap):
+            breakdown = True
+            break
+        alpha = rz / pap
+        alpha_e = ops.rnd(alpha)
+        for i in range(n):
+            x[i] = ops.add(x[i], ops.mul(alpha_e, p[i]))
+        for i in range(n):
+            r[i] = ops.sub(r[i], ops.mul(alpha_e, ap[i]))
+        z = apply_m(r)
+        rz_new = dot_t(r, z)
+        beta = rz_new / rz
+        beta_e = ops.rnd(beta)
+        for i in range(n):
+            p[i] = ops.add(z[i], ops.mul(beta_e, p[i]))
+        rz = rz_new
+        k += 1
+    return {
+        "iterations": k,
+        "converged": converged,
+        "breakdown": breakdown,
+        "residuals": residuals,
+        "x": x,
+    }
+
+
+# ----------------------------------------------------------------------
+# Tests (pure asserts; pytest is only the runner).
+# ----------------------------------------------------------------------
+
+
+def _random_sparse_case(rng, rows_n, cols_n, fill_pm0):
+    """Dense matrix with structural zeros (and, when fill_pm0, stored -0.0
+    entries) plus a mixed-sign x vector."""
+    dense = [[0.0] * cols_n for _ in range(rows_n)]
+    sparse = []
+    for r in range(rows_n):
+        row = []
+        for c in range(cols_n):
+            roll = rng.below(4)
+            if roll == 0:
+                continue
+            if fill_pm0 and roll == 1:
+                v = -0.0
+            else:
+                v = (rng.f64() - 0.5) * math.ldexp(1.0, int(rng.below(13)) - 6)
+            dense[r][c] = v
+            row.append((c, v))
+        sparse.append(row)
+    x = [(rng.f64() - 0.5) * 4.0 for _ in range(cols_n)]
+    return dense, sparse, x
+
+
+def test_sparse_fast_matches_dense_bitwise():
+    for ops, bits in ((F64Ops, f64_bits), (F32Ops, f32_bits)):
+        rng = Rng(0xC5A_0001)
+        for case in range(40):
+            rows_n = 1 + int(rng.below(6))
+            cols_n = 1 + int(rng.below(37))
+            dense, sparse, x = _random_sparse_case(rng, rows_n, cols_n, case % 2 == 0)
+            if ops is F32Ops:
+                dense = [[f32r(v) for v in row] for row in dense]
+                sparse = [[(c, f32r(v)) for c, v in row] for row in sparse]
+                x = [f32r(v) for v in x]
+            chunks = cols_n - cols_n % 8
+            for r in range(rows_n):
+                want = dense_dot_fast(ops, dense[r], x)
+                got = sparse_row_dot_fast(
+                    ops, [c for c, _ in sparse[r]], [v for _, v in sparse[r]], x, chunks
+                )
+                assert bits(got) == bits(want), (ops.name, case, r, got, want)
+
+
+def test_sparse_quire_matches_dense_exact():
+    rng = Rng(0xC5A_0002)
+    for case in range(20):
+        rows_n = 1 + int(rng.below(5))
+        cols_n = 1 + int(rng.below(29))
+        dense, sparse, x = _random_sparse_case(rng, rows_n, cols_n, case % 2 == 0)
+        for r in range(rows_n):
+            want = exact_dot(dense[r], x)
+            got = exact_dot([v for _, v in sparse[r]], [x[c] for c, _ in sparse[r]])
+            assert f64_bits(want) == f64_bits(got), (case, r)
+
+
+def test_poisson_is_symmetric_and_dd():
+    rows = poisson2d(5)
+    dense = densify(rows, 25)
+    for i in range(25):
+        assert dense[i][i] == 4.0
+        for j in range(25):
+            assert dense[i][j] == dense[j][i]
+        assert sum(abs(dense[i][j]) for j in range(25) if j != i) <= 4.0
+
+
+def test_rand_dd_is_symmetric_spd_shaped():
+    # Unscaled: strictly diagonally dominant (Gershgorin SPD). Scaled:
+    # A' = D A D with D a positive power-of-2 diagonal — a congruence, so
+    # still SPD (and still exactly symmetric: *2^k is exact), though no
+    # longer diagonally dominant. That skew is the point: it is what the
+    # Jacobi variant removes.
+    unscaled = rand_dd(48, 3, 0, 7)
+    dense = densify(unscaled, 48)
+    for i in range(48):
+        offsum = sum(abs(dense[i][j]) for j in range(48) if j != i)
+        # 0.5 margin: the constructor folds the +1.0 in first, so the two
+        # summation orders can differ by an ulp.
+        assert dense[i][i] >= offsum + 0.5
+    scaled = densify(rand_dd(48, 3, 6, 7), 48)
+    for i in range(48):
+        assert scaled[i][i] > 0.0
+        for j in range(48):
+            assert f64_bits(scaled[i][j]) == f64_bits(scaled[j][i])
+
+
+def test_quire_tier_beats_or_ties_f32_on_small_poisson_set():
+    # The CI bench gate's ordering claim, on the --small operator set.
+    for g in (8, 16):
+        rows = poisson2d(g)
+        b = [1.0] * (g * g)
+        fast = cg(rows, b, F32Ops, quire=False, tol=1e-6, max_iters=400, jacobi=False)
+        exact = cg(rows, b, F32Ops, quire=True, tol=1e-6, max_iters=400, jacobi=False)
+        assert exact["converged"]
+        assert exact["iterations"] <= fast["iterations"], (g, exact, fast)
+
+
+def test_jacobi_strictly_wins_on_scaled_dd():
+    rows = rand_dd(96, 3, 8, 11)
+    b = [1.0] * 96
+    plain = cg(rows, b, F64Ops, quire=False, tol=1e-6, max_iters=200, jacobi=False)
+    pre = cg(rows, b, F64Ops, quire=False, tol=1e-6, max_iters=200, jacobi=True)
+    assert pre["converged"]
+    assert pre["iterations"] < plain["iterations"], (pre["iterations"], plain["iterations"])
+
+
+def test_jacobi_is_exact_rescale_on_poisson():
+    # Constant diagonal 4 = 2^2: Jacobi is an exact power-of-two rescale,
+    # so the trajectory is bitwise unchanged (the Rust test asserts <=).
+    rows = poisson2d(8)
+    b = [1.0] * 64
+    plain = cg(rows, b, F64Ops, quire=False, tol=1e-6, max_iters=400, jacobi=False)
+    pre = cg(rows, b, F64Ops, quire=False, tol=1e-6, max_iters=400, jacobi=True)
+    assert pre["iterations"] == plain["iterations"]
+    assert [f64_bits(v) for v in pre["residuals"]] == [f64_bits(v) for v in plain["residuals"]]
+
+
+# Golden trajectories for rust/tests/solver.rs (generated by
+# `--emit-goldens` below; regenerate if the CG recurrence ever changes).
+GOLDEN_SPEC = dict(grid=8, tol=1e-6, max_iters=400)
+
+
+def golden_runs():
+    rows = poisson2d(GOLDEN_SPEC["grid"])
+    b = [1.0] * (GOLDEN_SPEC["grid"] ** 2)
+    qk = dict(tol=GOLDEN_SPEC["tol"], max_iters=GOLDEN_SPEC["max_iters"], jacobi=False)
+    return {
+        "quire64": cg(rows, b, F64Ops, quire=True, **qk),
+        "f32": cg(rows, b, F32Ops, quire=False, **qk),
+    }
+
+
+def test_golden_trajectories_are_stable():
+    runs = golden_runs()
+    assert [f64_bits(v) for v in runs["quire64"]["residuals"][:3]] == [
+        0x4020000000000000,
+        0x4023988E1409212E,
+        0x401BD3E5C6F0E027,
+    ]
+    assert runs["quire64"]["converged"] and runs["f32"]["converged"]
+
+
+def emit_goldens():
+    runs = golden_runs()
+    for name, run in runs.items():
+        print(f"// tier {name}: iterations={run['iterations']} converged={run['converged']}")
+        print(f"const GOLDEN_{name.upper()}_RESIDUALS: &[u64] = &[")
+        for v in run["residuals"]:
+            print(f"    0x{f64_bits(v):016x},")
+        print("];")
+    xq = runs["quire64"]["x"]
+    print("const GOLDEN_QUIRE64_X: &[u64] = &[")
+    for v in xq:
+        print(f"    0x{f64_bits(v):016x},")
+    print("];")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--emit-goldens" in sys.argv:
+        emit_goldens()
+    else:
+        fails = 0
+        for name, fn in sorted(globals().items()):
+            if name.startswith("test_") and callable(fn):
+                try:
+                    fn()
+                    print(f"PASS {name}")
+                except AssertionError as e:
+                    fails += 1
+                    print(f"FAIL {name}: {e}")
+        sys.exit(1 if fails else 0)

@@ -1,0 +1,22 @@
+//! Bench: conjugate-gradient convergence per accumulation tier — f32/f64
+//! fast reductions, BP-word quantized operators, and the quire-exact
+//! tiers (one rounding per reduction) — on the 2D Poisson stencil and
+//! random diagonally-dominant SPD operators, plus the Jacobi-
+//! preconditioned f64 solve. Emits `BENCH_solver.json` and enforces the
+//! SpMV bit-identity and quire-vs-fast iteration gates.
+//!
+//! Run: `cargo bench --bench solver`
+
+fn main() {
+    match positron::cli::run_solver_bench(&positron::cli::SolverBenchOpts::default()) {
+        Ok(lines) => {
+            for l in lines {
+                println!("{l}");
+            }
+        }
+        Err(e) => {
+            eprintln!("solver-bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -9,6 +9,9 @@
 //!                               emitted as BENCH_vector_codec.json
 //! - `gemm-bench`              — serial vs sharded blocked GEMM (quire +
 //!                               f32 paths), emitted as BENCH_vector_gemm.json
+//! - `solver-bench`            — per-tier CG convergence on sparse SPD
+//!                               operators (SpMV bit-identity + quire-vs-fast
+//!                               gates), emitted as BENCH_solver.json
 //! - `serve`                   — run the inference server (native backend by
 //!                               default; `--http ADDR` exposes /metrics and
 //!                               /infer over a real listener)
@@ -23,9 +26,9 @@
 use crate::accuracy;
 use crate::coordinator::backend::{BackendKind, WeightFormat};
 use crate::formats::{ieee, posit, takum, Codec, Decoded};
-use crate::vector::lane::LaneElem;
 use crate::hw::designs::{bposit_dec, bposit_enc, float_dec, float_enc, posit_dec, posit_enc};
 use crate::hw::report;
+use crate::vector::lane::LaneElem;
 
 /// `serve` options (native serving is the default everywhere).
 #[derive(Clone, Debug)]
@@ -64,6 +67,37 @@ pub struct ServeBenchOpts {
     pub json: Option<String>,
 }
 
+/// `solver-bench` options: per-tier CG convergence trajectories on the
+/// synthetic SPD operators (see `crate::solver`).
+#[derive(Clone, Debug)]
+pub struct SolverBenchOpts {
+    /// Poisson grid edges (n = grid² unknowns).
+    pub grids: Vec<usize>,
+    /// Random diagonally-dominant operator sizes.
+    pub dd_sizes: Vec<usize>,
+    /// Relative residual tolerance.
+    pub tol: f64,
+    /// Iteration cap per solve.
+    pub max_iters: usize,
+    /// Quire tiers are skipped above this many unknowns (they are exact
+    /// but slow; the fast tiers still cover the size).
+    pub quire_max: usize,
+    pub json: Option<String>,
+}
+
+impl Default for SolverBenchOpts {
+    fn default() -> SolverBenchOpts {
+        SolverBenchOpts {
+            grids: vec![32, 128, 1024],
+            dd_sizes: vec![1024, 16384, 262144],
+            tol: 1e-6,
+            max_iters: 500,
+            quire_max: 16384,
+            json: Some("BENCH_solver.json".to_string()),
+        }
+    }
+}
+
 /// Parsed command line.
 #[derive(Debug)]
 pub enum Command {
@@ -73,6 +107,7 @@ pub enum Command {
     Tables,
     VectorBench { len: usize, bits: u32, json: Option<String> },
     GemmBench { sizes: Vec<usize>, quire_max: usize, json: Option<String> },
+    SolverBench(SolverBenchOpts),
     Serve(ServeOpts),
     ServeBench(ServeBenchOpts),
     Help,
@@ -169,6 +204,58 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                 return Err("gemm-bench: --sizes must be a non-empty list of positive sizes".into());
             }
             Ok(Command::GemmBench { sizes, quire_max, json })
+        }
+        "solver-bench" => {
+            let mut o = SolverBenchOpts::default();
+            let csv = |flag: &str, list: &str| -> Result<Vec<usize>, String> {
+                list.split(',')
+                    .map(|s| s.trim().parse::<usize>().map_err(|e| format!("{flag} {s}: {e}")))
+                    .collect()
+            };
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--small" => {
+                        o.grids = vec![8, 16, 32];
+                        o.dd_sizes = vec![64, 256, 1024];
+                        o.max_iters = 400;
+                    }
+                    "--grids" => {
+                        o.grids = csv("--grids", it.next().ok_or("--grids needs a comma list")?)?
+                    }
+                    "--dd-sizes" => {
+                        let list = it.next().ok_or("--dd-sizes needs a comma list")?;
+                        o.dd_sizes = csv("--dd-sizes", list)?
+                    }
+                    "--tol" => {
+                        let arg = it.next().ok_or("--tol needs a value")?;
+                        o.tol = arg.parse().map_err(|e| format!("--tol {arg}: {e}"))?
+                    }
+                    "--max-iters" => {
+                        let arg = it.next().ok_or("--max-iters needs N")?;
+                        o.max_iters = arg.parse().map_err(|e| format!("--max-iters {arg}: {e}"))?
+                    }
+                    "--quire-max" => {
+                        let arg = it.next().ok_or("--quire-max needs N")?;
+                        o.quire_max = arg.parse().map_err(|e| format!("--quire-max {arg}: {e}"))?
+                    }
+                    "--json" => o.json = Some(it.next().ok_or("--json needs a path")?.clone()),
+                    "--no-json" => o.json = None,
+                    other => return Err(format!("solver-bench: unknown flag {other}")),
+                }
+            }
+            if o.grids.iter().any(|&g| g < 2) {
+                return Err("solver-bench: --grids entries must be at least 2".into());
+            }
+            if o.dd_sizes.contains(&0) {
+                return Err("solver-bench: --dd-sizes entries must be positive".into());
+            }
+            if o.grids.is_empty() && o.dd_sizes.is_empty() {
+                return Err("solver-bench: no operators (empty --grids and --dd-sizes)".into());
+            }
+            if !(o.tol > 0.0 && o.tol.is_finite()) {
+                return Err("solver-bench: --tol must be a positive finite value".into());
+            }
+            Ok(Command::SolverBench(o))
         }
         "serve" => {
             let mut o = ServeOpts {
@@ -325,6 +412,18 @@ COMMANDS:
                              serial vs sharded (PALLAS_THREADS) blocked GEMM,
                              f32 + quire-exact paths, GFLOP-equivalents;
                              writes BENCH_vector_gemm.json by default
+  solver-bench [--small] [--grids N,N,…] [--dd-sizes N,N,…] [--tol F]
+        [--max-iters N] [--quire-max N] [--json PATH | --no-json]
+                             tiered CG convergence bench: per-tier
+                             (f32/bp32/quire32/f64/bp64/quire64)
+                             iterations-to-tolerance, exact residual
+                             trajectories and wall time on 2D Poisson
+                             (n = grid²; default grids span 1k–1M
+                             unknowns) and random diagonally-dominant SPD
+                             operators, plus Jacobi-preconditioned f64;
+                             hard-gates SpMV serial/sharded/dense
+                             bit-identity and quire-vs-fast iteration
+                             counts; writes BENCH_solver.json by default
   serve [--requests N] [--artifacts DIR] [--backend native|pjrt]
         [--format bp32|f32|bp64] [--http ADDR:PORT] [--deadline-ms N] [--synthetic]
         [--no-tracing] [--models f32,bp64|all] [--max-inflight N]
@@ -885,6 +984,215 @@ pub fn run_gemm_bench(
     Ok(out)
 }
 
+/// Serial vs sharded (t ∈ {1, 2, threads}) vs dense bit-identity for
+/// every SpMV flavor on one operator — the solver's arithmetic contract,
+/// checked as a hard gate before any solve is timed. The dense
+/// comparison is quadratic in memory, so it runs only when `dense` is
+/// set (small operators).
+fn spmv_bit_checks<E: LaneElem>(
+    a: &crate::vector::sparse::Csr<E>,
+    threads: usize,
+    dense: bool,
+) -> bool {
+    use crate::testutil::Rng;
+    use crate::vector::{kernels, sparse};
+
+    let (rows, cols) = (a.rows(), a.cols());
+    let mut rng = Rng::new(0x50_17e5 ^ rows as u64);
+    let x: Vec<E> = (0..cols).map(|_| E::from_f64((rng.f64() - 0.5) * 4.0)).collect();
+    let aw = a.encode_bp();
+    let eq = |u: &[E], v: &[E]| u.iter().zip(v).all(|(a, b)| a.to_bits_u64() == b.to_bits_u64());
+
+    let mut serial = vec![E::ZERO; rows];
+    sparse::spmv(a, &x, &mut serial);
+    let mut serial_q = vec![E::ZERO; rows];
+    let mut q = E::quire();
+    sparse::spmv_quire(&mut q, a, &x, &mut serial_q);
+    let mut serial_bp = vec![E::ZERO; rows];
+    sparse::spmv_bp_weights_fast(&aw, &x, &mut serial_bp);
+
+    let mut ok = true;
+    let mut y = vec![E::ZERO; rows];
+    for t in [1, 2, threads] {
+        sparse::par_spmv_with(t, a, &x, &mut y);
+        ok &= eq(&y, &serial);
+        sparse::par_spmv_quire_with(t, a, &x, &mut y);
+        ok &= eq(&y, &serial_q);
+        sparse::par_spmv_bp_weights_fast_with(t, &aw, &x, &mut y);
+        ok &= eq(&y, &serial_bp);
+    }
+    if dense {
+        let d = a.to_dense();
+        kernels::gemv(&d, &x, &mut y);
+        ok &= eq(&y, &serial);
+        kernels::par_gemv_quire_with(1, &d, &x, &mut y);
+        ok &= eq(&y, &serial_q);
+        let words: Vec<E::Word> = d.iter().map(|&v| E::bp_encode_lane(v)).collect();
+        kernels::par_gemv_bp_weights_with(1, &words, &x, &mut y);
+        ok &= eq(&y, &serial_bp);
+    }
+    ok
+}
+
+/// A finite f64 as a JSON number (non-finite values render as null; the
+/// solver only emits finite residuals, this is belt and braces).
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Execute `solver-bench`: per-tier CG trajectories on the 2D Poisson
+/// stencil and random diagonally-dominant SPD operators, plus the
+/// Jacobi-preconditioned f64 solve, with two hard gates — SpMV
+/// serial/sharded/dense bit-identity, and the quire tiers never needing
+/// more iterations than their fast counterparts on Poisson. Writes
+/// `BENCH_solver.json` (schema in rust/benches/README.md) before gating,
+/// so a failed run still leaves the evidence on disk. Shared by the CLI
+/// and the `solver` bench target.
+pub fn run_solver_bench(o: &SolverBenchOpts) -> Result<Vec<String>, String> {
+    use crate::solver::{operators, solve, CgOptions, Precond, Tier};
+    use crate::vector::parallel;
+
+    if let Some(path) = &o.json {
+        ensure_json_writable(path)?;
+    }
+    let threads = parallel::num_threads();
+    let mut out = Vec::new();
+    let mut bit_identical = true;
+    let mut gate_errors: Vec<String> = Vec::new();
+    let mut ops_json: Vec<String> = Vec::new();
+
+    let mut operators_list: Vec<(&str, Option<usize>, crate::vector::sparse::Csr<f64>)> =
+        Vec::new();
+    for &g in &o.grids {
+        operators_list.push(("poisson2d", Some(g), operators::poisson2d(g)));
+    }
+    for &n in &o.dd_sizes {
+        operators_list.push(("rand_dd", None, operators::rand_dd(n, 3, 4, 1000 + n as u64)));
+    }
+
+    for (kind, grid, a) in &operators_list {
+        let n = a.rows();
+        let b = operators::ones(n);
+        let label = match grid {
+            Some(g) => format!("{kind} grid={g} n={n} nnz={}", a.nnz()),
+            None => format!("{kind} n={n} nnz={}", a.nnz()),
+        };
+
+        // Bit-identity first: dense equivalence only while the densified
+        // operator stays small.
+        let ok64 = spmv_bit_checks(a, threads, n <= 2048);
+        let ok32 = spmv_bit_checks(&a.convert::<f32>(), threads, n <= 2048);
+        bit_identical &= ok64 && ok32;
+
+        out.push(format!("{label}:"));
+        let mut solves_json: Vec<String> = Vec::new();
+        let mut iters: Vec<(Tier, usize, bool)> = Vec::new();
+        {
+            let mut run = |tier: Tier, precond: Precond| {
+                let opts = CgOptions { tol: o.tol, max_iters: o.max_iters, precond };
+                let rep = solve(a, &b, tier, &opts);
+                out.push(format!(
+                    "  {:>7}/{:<6} {:>4} iters{} final {:.3e} true {:.3e} {:>9.2} ms",
+                    tier.name(),
+                    precond.name(),
+                    rep.iterations,
+                    if rep.converged {
+                        " (conv)"
+                    } else if rep.breakdown {
+                        " (BRKDN)"
+                    } else {
+                        " (cap)  "
+                    },
+                    rep.final_residual,
+                    rep.true_residual,
+                    rep.wall_ns as f64 / 1e6,
+                ));
+                let residuals: Vec<String> = rep.residuals.iter().map(|&r| json_f64(r)).collect();
+                solves_json.push(format!(
+                    "{{\"tier\":\"{}\",\"precond\":\"{}\",\"iterations\":{},\"converged\":{},\
+                     \"breakdown\":{},\"final_residual\":{},\"true_residual\":{},\"wall_ns\":{},\
+                     \"residuals\":[{}]}}",
+                    tier.name(),
+                    precond.name(),
+                    rep.iterations,
+                    rep.converged,
+                    rep.breakdown,
+                    json_f64(rep.final_residual),
+                    json_f64(rep.true_residual),
+                    rep.wall_ns,
+                    residuals.join(",")
+                ));
+                if precond == Precond::None {
+                    iters.push((tier, rep.iterations, rep.converged));
+                }
+            };
+            for tier in Tier::ALL {
+                if tier.is_quire() && n > o.quire_max {
+                    continue;
+                }
+                run(tier, Precond::None);
+            }
+            run(Tier::F64, Precond::Jacobi);
+        }
+
+        // Gate (Poisson only): exact reductions must never lose to
+        // rounded ones — mirror-validated on the CI sizes.
+        if *kind == "poisson2d" {
+            let find = |t: Tier| iters.iter().find(|e| e.0 == t).map(|e| (e.1, e.2));
+            for (quire, fast) in [(Tier::Quire32, Tier::F32), (Tier::Quire64, Tier::F64)] {
+                if let (Some((qi, qc)), Some((fi, _))) = (find(quire), find(fast)) {
+                    if !qc || qi > fi {
+                        gate_errors.push(format!(
+                            "{label}: {} took {qi} iters (converged: {qc}) vs {} {fi}",
+                            quire.name(),
+                            fast.name()
+                        ));
+                    }
+                }
+            }
+        }
+
+        let grid_json = match grid {
+            Some(g) => format!("\"grid\":{g},"),
+            None => String::new(),
+        };
+        ops_json.push(format!(
+            "{{\"operator\":\"{kind}\",{grid_json}\"n\":{n},\"nnz\":{},\"solves\":[{}]}}",
+            a.nnz(),
+            solves_json.join(",")
+        ));
+    }
+
+    out.push(format!(
+        "spmv serial/sharded/dense bit-identical: {}",
+        if bit_identical { "yes" } else { "NO — BUG" }
+    ));
+
+    if let Some(path) = &o.json {
+        let json = format!(
+            "{{\"bench\":\"solver\",\"tol\":{},\"max_iters\":{},\"threads\":{threads},\
+             \"spmv_bit_identical\":{bit_identical},\"operators\":[{}]}}",
+            json_f64(o.tol),
+            o.max_iters,
+            ops_json.join(",")
+        );
+        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+        out.push(format!("wrote {path}"));
+    }
+
+    if !bit_identical {
+        return Err("sparse SpMV differs from its serial/dense twin — bit-identity broken".into());
+    }
+    if !gate_errors.is_empty() {
+        return Err(format!("quire-vs-fast iteration gate failed: {}", gate_errors.join("; ")));
+    }
+    Ok(out)
+}
+
 /// Drive `requests` closed-loop inferences from `clients` threads over
 /// the golden rows of `w`, returning `(completed, req_per_s)`. Shared by
 /// the throughput and tracing-overhead sections of `serve-bench`.
@@ -1342,6 +1650,56 @@ mod tests {
     }
 
     #[test]
+    fn parse_solver_bench_flags() {
+        let parse_sb = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            parse(&v)
+        };
+        match parse_sb(&["solver-bench", "--small", "--no-json"]).unwrap() {
+            Command::SolverBench(o) => {
+                assert_eq!(o.grids, vec![8, 16, 32]);
+                assert_eq!(o.dd_sizes, vec![64, 256, 1024]);
+                assert_eq!(o.max_iters, 400);
+                assert!(o.json.is_none());
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        let args = ["solver-bench", "--grids", "8, 16", "--dd-sizes", "32", "--tol", "1e-4"];
+        match parse_sb(&args).unwrap() {
+            Command::SolverBench(o) => {
+                assert_eq!(o.grids, vec![8, 16]);
+                assert_eq!(o.dd_sizes, vec![32]);
+                assert_eq!(o.tol, 1e-4);
+                assert_eq!(o.json.as_deref(), Some("BENCH_solver.json"));
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        assert!(parse_sb(&["solver-bench", "--grids", "1"]).is_err());
+        assert!(parse_sb(&["solver-bench", "--dd-sizes", "0"]).is_err());
+        assert!(parse_sb(&["solver-bench", "--grids", "", "--dd-sizes", ""]).is_err());
+        assert!(parse_sb(&["solver-bench", "--tol", "-1"]).is_err());
+        assert!(parse_sb(&["solver-bench", "--tol", "nan"]).is_err());
+        assert!(parse_sb(&["solver-bench", "--bogus"]).is_err());
+    }
+
+    #[test]
+    fn solver_bench_smoke_passes_its_own_gates() {
+        // Tiny end-to-end run of the bench harness itself: both gates
+        // (SpMV bit-identity, quire <= fast on Poisson) must hold, with
+        // no JSON side effects from a unit test.
+        let o = SolverBenchOpts {
+            grids: vec![6],
+            dd_sizes: vec![24],
+            tol: 1e-6,
+            max_iters: 200,
+            quire_max: 64,
+            json: None,
+        };
+        let out = run_solver_bench(&o).unwrap();
+        assert!(out.iter().any(|l| l.contains("bit-identical: yes")), "{out:?}");
+    }
+
+    #[test]
     fn bench_json_path_fails_fast_when_unwritable() {
         // The bugfix contract: an unwritable --json destination is a clean
         // error before any benchmarking happens (this test would take
@@ -1352,6 +1710,15 @@ mod tests {
         let err = run_vector_bench(16, Some(bad)).unwrap_err();
         assert!(err.contains(bad), "{err}");
         let err = run_vector_bench64(16, Some(bad)).unwrap_err();
+        assert!(err.contains(bad), "{err}");
+        let o = SolverBenchOpts {
+            grids: vec![2],
+            dd_sizes: Vec::new(),
+            quire_max: 4,
+            json: Some(bad.to_string()),
+            ..SolverBenchOpts::default()
+        };
+        let err = run_solver_bench(&o).unwrap_err();
         assert!(err.contains(bad), "{err}");
     }
 

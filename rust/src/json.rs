@@ -1,8 +1,20 @@
 //! Minimal JSON parser (recursive descent) — the vendored dependency set
-//! has no serde_json, and the runtime only needs to read the build-time
-//! artifacts (weights.json / manifest.json / vectors.json).
+//! has no serde_json. Besides the build-time artifacts (weights.json /
+//! manifest.json / vectors.json) it parses **untrusted HTTP request
+//! bodies**, so it must be total: any byte sequence returns `Ok` or
+//! `Err`, never panics, and recursion is capped at [`MAX_DEPTH`] (a
+//! 4 MiB body of `[` would otherwise overflow the stack and abort the
+//! single-threaded event loop — a remote DoS). The corpus test in
+//! `tests/json_corpus.rs` enforces the no-panic contract.
 
 use std::collections::BTreeMap;
+
+/// Maximum nesting depth (every array/object/scalar level counts one).
+/// Deep enough for any artifact or API body the crate emits; shallow
+/// enough that the recursive-descent parser cannot approach stack
+/// exhaustion on hostile input. Exceeding it is a parse error (mapped to
+/// the typed 400 `bad_request` body by the HTTP layer).
+pub const MAX_DEPTH: usize = 64;
 
 /// Parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -19,7 +31,7 @@ impl Json {
     /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, String> {
         let b = s.as_bytes();
-        let mut p = Parser { b, i: 0 };
+        let mut p = Parser { b, i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -75,6 +87,7 @@ impl Json {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -98,6 +111,16 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, String> {
+        if self.depth >= MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        self.depth += 1;
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> Result<Json, String> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -108,6 +131,50 @@ impl<'a> Parser<'a> {
             Some(_) => self.number(),
             None => Err("unexpected end of input".into()),
         }
+    }
+
+    /// Four bounds-checked hex digits of a `\u` escape (strict: exactly
+    /// `[0-9a-fA-F]{4}`, no sign or whitespace).
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err(format!("truncated \\u escape at byte {}", self.i));
+        }
+        let quad = &self.b[self.i..self.i + 4];
+        if !quad.iter().all(|c| c.is_ascii_hexdigit()) {
+            return Err(format!("bad \\u escape at byte {}", self.i));
+        }
+        let mut code = 0u32;
+        for &c in quad {
+            code = code * 16 + (c as char).to_digit(16).expect("hexdigit checked above");
+        }
+        self.i += 4;
+        Ok(code)
+    }
+
+    /// Decode a `\u` escape starting after the `u`, combining UTF-16
+    /// surrogate pairs (high `D834` + low `DD1E` → 𝄞). Unpaired
+    /// surrogates become U+FFFD without consuming the following escape.
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let code = self.hex4()?;
+        if (0xD800..=0xDBFF).contains(&code) {
+            // High surrogate: needs a following \uDC00..=\uDFFF.
+            if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                let save = self.i;
+                self.i += 2;
+                let lo = self.hex4()?;
+                if (0xDC00..=0xDFFF).contains(&lo) {
+                    let c = 0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                    return Ok(char::from_u32(c).unwrap_or('\u{fffd}'));
+                }
+                // Not a low surrogate: rewind so it parses on its own.
+                self.i = save;
+            }
+            return Ok('\u{fffd}');
+        }
+        if (0xDC00..=0xDFFF).contains(&code) {
+            return Ok('\u{fffd}'); // lone low surrogate
+        }
+        Ok(char::from_u32(code).unwrap_or('\u{fffd}'))
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
@@ -155,13 +222,7 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
-                        b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|_| "bad \\u")?;
-                            let code = u32::from_str_radix(hex, 16).map_err(|_| "bad \\u")?;
-                            self.i += 4;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                        }
+                        b'u' => out.push(self.unicode_escape()?),
                         _ => return Err(format!("bad escape \\{}", e as char)),
                     }
                 }
@@ -264,6 +325,39 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""Aé""#).unwrap().as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn depth_cap_is_exact() {
+        // MAX_DEPTH nested arrays = depth MAX_DEPTH: parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&ok).is_ok());
+        // One deeper: typed error, no crash.
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&deep).unwrap_err().contains("nesting"));
+        // A hostile megabyte of '[' errors out instead of blowing the stack.
+        assert!(Json::parse(&"[".repeat(1 << 20)).is_err());
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_an_error() {
+        for src in ["\"\\u12", "\"\\u", "\"\\u123\"", "\"\\u+123\"", "\"\\u12g4\""] {
+            assert!(Json::parse(src).is_err(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // U+1D11E MUSICAL SYMBOL G CLEF via its UTF-16 pair.
+        let j = Json::parse("\"\\uD834\\uDD1E\"").unwrap();
+        assert_eq!(j.as_str(), Some("\u{1D11E}"));
+        // Lone high / lone low / high followed by a non-surrogate escape:
+        // U+FFFD, and the follower is kept.
+        assert_eq!(Json::parse("\"\\uD834\"").unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse("\"\\uDD1E\"").unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse("\"\\uD834\\u0041\"").unwrap().as_str(), Some("\u{fffd}A"));
+        // High surrogate then a truncated escape is still a clean error.
+        assert!(Json::parse("\"\\uD834\\u12").is_err());
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //!   The named BP32/P32/BP64/P64 fast paths are monomorphized spec
 //!   constants over the same engine (see docs/API.md for the migration
 //!   table).
+//!   The sparse side ([`vector::sparse`]) carries a CSR type and SpMV in
+//!   the same three kernel flavors, bit-identical to the dense gemv on
+//!   densified matrices.
+//! - [`solver`] — tiered iterative solvers (CG + Jacobi-preconditioned
+//!   CG over the sparse layer) with per-iteration exact residual
+//!   trajectories: the f32/bp32/quire32/f64/bp64/quire64 accumulation
+//!   tiers made comparable on one operator (see docs/SOLVERS.md and
+//!   `positron solver-bench`).
 //! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
 //!   power) and the six decoder/encoder circuits of Figs 8–13.
 //! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis
@@ -54,6 +62,7 @@
 
 pub mod error;
 pub mod formats;
+pub mod solver;
 pub mod vector;
 pub mod hw;
 pub mod accuracy;

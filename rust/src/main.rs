@@ -83,6 +83,11 @@ fn run(cmd: Command) -> positron::error::Result<()> {
                 println!("{line}");
             }
         }
+        Command::SolverBench(o) => {
+            for line in cli::run_solver_bench(&o).map_err(positron::error::Error::msg)? {
+                println!("{line}");
+            }
+        }
         Command::Serve(o) => serve(o)?,
         Command::ServeBench(o) => {
             for line in cli::run_serve_bench(&o).map_err(positron::error::Error::msg)? {

@@ -1,0 +1,420 @@
+//! Tiered iterative solvers — the first workload layer to consume the
+//! vector engine outside the HTTP serving path.
+//!
+//! A conjugate-gradient solver (plus a Jacobi-preconditioned variant)
+//! over the sparse [`crate::vector::sparse`] layer, parameterized by an
+//! **accumulation tier** ([`Tier`]):
+//!
+//! | tier      | operator storage        | reductions (dot + SpMV row)     |
+//! |-----------|-------------------------|---------------------------------|
+//! | `f32`     | f32 values              | fast 8-accumulator kernels      |
+//! | `bp32`    | b-posit32 words         | fast, decode-fused              |
+//! | `quire32` | f32 values              | 800-bit quire, one rounding     |
+//! | `f64`     | f64 values              | fast 8-accumulator kernels      |
+//! | `bp64`    | b-posit64 words         | fast, decode-fused              |
+//! | `quire64` | f64 values              | 4416-bit quire, one rounding    |
+//!
+//! The quire tiers route every inner reduction through the exact
+//! Kulisch accumulator (the [`crate::vector::kernels::QuireDot`] /
+//! `QuireDotF64` semantics): each dot and each SpMV row is accumulated
+//! exactly and rounded **once**. The bp tiers quantize the *operator*
+//! (the serving-weight analogue) and decode-fuse the SpMV; iteration
+//! vectors stay in the float exchange type. Scalars (α, β) always travel
+//! as f64 and are rounded to the tier width before vector updates.
+//!
+//! Every iteration records the **exact** residual norm ‖r‖₂ (an
+//! [`crate::formats::Quire::exact_f64`] self-dot, one rounding, then a
+//! correctly-rounded sqrt) — the same tier-independent metric for every
+//! trajectory entry and for the stopping test, so the tiers' convergence
+//! curves are directly comparable. The whole recurrence is transliterated
+//! from (and bitwise-validated against) the pure-stdlib Python mirror in
+//! `python/tests/test_solver_mirror.py`; `tests/solver.rs` pins the
+//! golden trajectories. See docs/SOLVERS.md for the full semantics and
+//! the `BENCH_solver.json` trajectory schema.
+
+pub mod operators;
+
+use std::time::Instant;
+
+use crate::formats::{Decoded, Quire};
+use crate::vector::kernels;
+use crate::vector::lane::LaneElem;
+use crate::vector::sparse::{self, Csr, CsrWords};
+
+/// Accumulation tier of a solve — see the module-level table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// f32 storage, fast reductions.
+    F32,
+    /// b-posit32-quantized operator, fast decode-fused reductions.
+    Bp32,
+    /// f32 storage, quire-exact reductions (800-bit paper quire).
+    Quire32,
+    /// f64 storage, fast reductions.
+    F64,
+    /// b-posit64-quantized operator, fast decode-fused reductions.
+    Bp64,
+    /// f64 storage, quire-exact reductions (4416-bit quire).
+    Quire64,
+}
+
+impl Tier {
+    /// All tiers, in bench emission order.
+    pub const ALL: [Tier; 6] =
+        [Tier::F32, Tier::Bp32, Tier::Quire32, Tier::F64, Tier::Bp64, Tier::Quire64];
+
+    /// Stable name used in `BENCH_solver.json` and the CI gate.
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::F32 => "f32",
+            Tier::Bp32 => "bp32",
+            Tier::Quire32 => "quire32",
+            Tier::F64 => "f64",
+            Tier::Bp64 => "bp64",
+            Tier::Quire64 => "quire64",
+        }
+    }
+
+    /// True for the quire-exact-reduction tiers.
+    pub fn is_quire(self) -> bool {
+        matches!(self, Tier::Quire32 | Tier::Quire64)
+    }
+}
+
+/// Preconditioner choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precond {
+    /// Plain CG.
+    None,
+    /// Jacobi (diagonal) preconditioning: z = D⁻¹r with the reciprocal
+    /// diagonal precomputed in f64 and rounded once to the tier width
+    /// (the apply is then multiply-only). Requires a nonzero diagonal.
+    Jacobi,
+}
+
+impl Precond {
+    /// Stable name used in `BENCH_solver.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precond::None => "none",
+            Precond::Jacobi => "jacobi",
+        }
+    }
+}
+
+/// Options for [`solve`].
+#[derive(Clone, Copy, Debug)]
+pub struct CgOptions {
+    /// Relative tolerance: converged when ‖r‖₂ ≤ tol·‖b‖₂ (both norms
+    /// exact).
+    pub tol: f64,
+    /// Iteration cap; a solve that reaches it reports `converged: false`.
+    pub max_iters: usize,
+    /// Preconditioner.
+    pub precond: Precond,
+}
+
+impl Default for CgOptions {
+    fn default() -> CgOptions {
+        CgOptions { tol: 1e-6, max_iters: 500, precond: Precond::None }
+    }
+}
+
+/// Result of one CG solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Completed CG iterations (SpMV applications) when the loop ended.
+    pub iterations: usize,
+    /// True when ‖r‖₂ ≤ tol·‖b‖₂ was reached within the cap.
+    pub converged: bool,
+    /// True when the pᵀAp curvature test failed (non-SPD operator or
+    /// numerical collapse); the solve stops with the trajectory so far.
+    pub breakdown: bool,
+    /// Exact ‖r‖₂ per iteration, `iterations + 1` entries (entry 0 is the
+    /// initial residual ‖b‖₂ since x₀ = 0).
+    pub residuals: Vec<f64>,
+    /// Last trajectory entry (the recurrence's own residual).
+    pub final_residual: f64,
+    /// Exact ‖b − Ax‖₂ recomputed from the final iterate against the
+    /// operator as the tier sees it — exposes any drift between the
+    /// recurrence residual and the true one.
+    pub true_residual: f64,
+    /// Wall time of the iteration loop (includes the per-iteration exact
+    /// norm instrumentation, identically in every tier).
+    pub wall_ns: u64,
+    /// Final iterate, widened exactly to f64.
+    pub x: Vec<f64>,
+}
+
+/// The operator as one tier sees it: storage flavor + reduction flavor.
+enum TierOps<'a, E: LaneElem> {
+    Fast(&'a Csr<E>),
+    Quire(&'a Csr<E>),
+    BpFast(&'a CsrWords<E>),
+}
+
+impl<E: LaneElem> TierOps<'_, E> {
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            TierOps::Fast(m) | TierOps::Quire(m) => (m.rows(), m.cols()),
+            TierOps::BpFast(m) => (m.rows(), m.cols()),
+        }
+    }
+
+    fn diag_f64(&self) -> Vec<f64> {
+        match self {
+            TierOps::Fast(m) | TierOps::Quire(m) => m.diag_f64(),
+            TierOps::BpFast(m) => m.diag_f64(),
+        }
+    }
+
+    fn quire_reductions(&self) -> bool {
+        matches!(self, TierOps::Quire(_))
+    }
+
+    fn spmv(&self, x: &[E], y: &mut [E]) {
+        match self {
+            TierOps::Fast(m) => sparse::par_spmv(m, x, y),
+            TierOps::Quire(m) => sparse::par_spmv_quire(m, x, y),
+            TierOps::BpFast(m) => sparse::par_spmv_bp_weights_fast(m, x, y),
+        }
+    }
+
+    /// Visit row `r` as (col, value-as-f64) — the values the kernels
+    /// actually multiply by (decoded for the bp flavor).
+    fn for_row(&self, r: usize, mut f: impl FnMut(usize, f64)) {
+        match self {
+            TierOps::Fast(m) | TierOps::Quire(m) => {
+                let (idx, vals) = m.row(r);
+                for (k, &c) in idx.iter().enumerate() {
+                    f(c, vals[k].to_f64());
+                }
+            }
+            TierOps::BpFast(m) => {
+                let (idx, words) = m.row(r);
+                for (k, &c) in idx.iter().enumerate() {
+                    f(c, E::bp_decode_lane(words[k]).to_f64());
+                }
+            }
+        }
+    }
+}
+
+/// Solve `A·x = b` (A SPD, square) with CG at the given tier. The master
+/// operator and right-hand side are f64; each tier first rounds them to
+/// its own storage (one RNE rounding per value — exact for the f64 and,
+/// for in-range values, bp64 tiers).
+pub fn solve(a: &Csr<f64>, b: &[f64], tier: Tier, opts: &CgOptions) -> SolveReport {
+    assert_eq!(a.rows(), a.cols(), "solve: operator must be square");
+    assert_eq!(b.len(), a.rows(), "solve: rhs length mismatch");
+    match tier {
+        Tier::F32 => {
+            let m = a.convert::<f32>();
+            let bb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            cg_impl(TierOps::Fast(&m), &bb, opts)
+        }
+        Tier::Bp32 => {
+            let m = a.convert::<f32>().encode_bp();
+            let bb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            cg_impl(TierOps::BpFast(&m), &bb, opts)
+        }
+        Tier::Quire32 => {
+            let m = a.convert::<f32>();
+            let bb: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            cg_impl(TierOps::Quire(&m), &bb, opts)
+        }
+        Tier::F64 => cg_impl(TierOps::Fast(a), b, opts),
+        Tier::Bp64 => {
+            let m = a.encode_bp();
+            cg_impl(TierOps::BpFast(&m), b, opts)
+        }
+        Tier::Quire64 => cg_impl(TierOps::Quire(a), b, opts),
+    }
+}
+
+/// z ← M⁻¹r: the Jacobi apply (multiply by the precomputed reciprocal
+/// diagonal) or the identity copy.
+fn apply_precond<E: LaneElem>(inv_diag: &Option<Vec<E>>, r: &[E], z: &mut [E]) {
+    match inv_diag {
+        Some(d) => {
+            for i in 0..r.len() {
+                z[i] = r[i] * d[i];
+            }
+        }
+        None => z.copy_from_slice(r),
+    }
+}
+
+/// The CG recurrence — a line-for-line transliteration of the Python
+/// mirror's `cg()` (see the module docs), shared by every tier.
+fn cg_impl<E: LaneElem>(op: TierOps<'_, E>, b: &[E], opts: &CgOptions) -> SolveReport {
+    let n = b.len();
+    let (rows, cols) = op.dims();
+    assert_eq!((rows, cols), (n, n), "cg: operator/rhs shape mismatch");
+    let quire_red = op.quire_reductions();
+    let inv_diag: Option<Vec<E>> = match opts.precond {
+        Precond::Jacobi => Some(op.diag_f64().iter().map(|&d| E::from_f64(1.0 / d)).collect()),
+        Precond::None => None,
+    };
+    // The tier quire serves the quire tiers' inner dots; the exact-f64
+    // quire is the tier-independent norm instrument.
+    let mut q_tier = E::quire();
+    let mut q_norm = Quire::exact_f64();
+    let dot_t = |q: &mut Quire, u: &[E], v: &[E]| -> f64 {
+        if quire_red {
+            kernels::quire_dot(q, u, v)
+        } else {
+            kernels::dot(u, v).to_f64()
+        }
+    };
+
+    let mut x = vec![E::ZERO; n];
+    let mut r: Vec<E> = b.to_vec();
+    let mut z = vec![E::ZERO; n];
+    apply_precond(&inv_diag, &r, &mut z);
+    let mut p = z.clone();
+    let mut ap = vec![E::ZERO; n];
+    let mut rz = dot_t(&mut q_tier, &r, &z);
+    let norm_b = kernels::quire_dot(&mut q_norm, b, b).sqrt();
+    let threshold = opts.tol * norm_b;
+
+    let mut residuals = Vec::new();
+    let mut converged = false;
+    let mut breakdown = false;
+    let mut k = 0usize;
+    let t0 = Instant::now();
+    loop {
+        let res = kernels::quire_dot(&mut q_norm, &r, &r).sqrt();
+        residuals.push(res);
+        if res <= threshold {
+            converged = true;
+            break;
+        }
+        if k == opts.max_iters {
+            break;
+        }
+        op.spmv(&p, &mut ap);
+        let pap = dot_t(&mut q_tier, &p, &ap);
+        if !pap.is_finite() || pap <= 0.0 {
+            breakdown = true;
+            break;
+        }
+        let alpha_e = E::from_f64(rz / pap);
+        for i in 0..n {
+            x[i] += alpha_e * p[i];
+        }
+        for i in 0..n {
+            r[i] = r[i] - alpha_e * ap[i];
+        }
+        apply_precond(&inv_diag, &r, &mut z);
+        let rz_new = dot_t(&mut q_tier, &r, &z);
+        let beta_e = E::from_f64(rz_new / rz);
+        for i in 0..n {
+            p[i] = z[i] + beta_e * p[i];
+        }
+        rz = rz_new;
+        k += 1;
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+
+    // True residual: exact per-row b − Ax (one rounding per row), then
+    // the exact norm of that vector.
+    let mut tr = vec![0.0f64; n];
+    for (i, tri) in tr.iter_mut().enumerate() {
+        q_norm.clear();
+        q_norm.add(&Decoded::from_f64(b[i].to_f64()));
+        op.for_row(i, |c, a| {
+            q_norm.sub_product(&Decoded::from_f64(a), &Decoded::from_f64(x[c].to_f64()));
+        });
+        *tri = q_norm.to_decoded().to_f64();
+    }
+    let true_residual = kernels::quire_dot(&mut q_norm, &tr, &tr).sqrt();
+
+    SolveReport {
+        iterations: k,
+        converged,
+        breakdown,
+        final_residual: *residuals.last().unwrap(),
+        residuals,
+        true_residual,
+        wall_ns,
+        x: x.iter().map(|v| v.to_f64()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(g: usize) -> (Csr<f64>, Vec<f64>) {
+        (operators::poisson2d(g), operators::ones(g * g))
+    }
+
+    #[test]
+    fn identity_converges_in_one_iteration() {
+        let trips: Vec<(usize, usize, f64)> = (0..9).map(|i| (i, i, 1.0)).collect();
+        let a = Csr::from_triplets(9, 9, &trips).unwrap();
+        let b = operators::ones(9);
+        for tier in Tier::ALL {
+            let rep = solve(&a, &b, tier, &CgOptions::default());
+            assert!(rep.converged, "{}", tier.name());
+            assert_eq!(rep.iterations, 1, "{}", tier.name());
+            assert_eq!(rep.residuals.len(), 2, "{}", tier.name());
+            assert_eq!(rep.x, b, "{}", tier.name());
+            assert_eq!(rep.true_residual, 0.0, "{}", tier.name());
+        }
+    }
+
+    #[test]
+    fn every_tier_converges_on_small_poisson() {
+        let (a, b) = poisson(8);
+        for tier in Tier::ALL {
+            let rep = solve(&a, &b, tier, &CgOptions::default());
+            assert!(rep.converged, "{}", tier.name());
+            assert!(!rep.breakdown, "{}", tier.name());
+            assert_eq!(rep.residuals.len(), rep.iterations + 1, "{}", tier.name());
+            assert_eq!(rep.final_residual, *rep.residuals.last().unwrap());
+            // The recurrence residual and the true residual agree to the
+            // tolerance scale.
+            assert!(rep.true_residual <= 1e-5 * 8.0, "{}", tier.name());
+        }
+    }
+
+    #[test]
+    fn bp64_tier_is_bitwise_f64_on_integer_operator() {
+        // BP64 encode never rounds in range (PR 3) and the Poisson values
+        // are small integers, so the bp64 trajectory is bit-identical to
+        // the f64 one.
+        let (a, b) = poisson(8);
+        let f = solve(&a, &b, Tier::F64, &CgOptions::default());
+        let q = solve(&a, &b, Tier::Bp64, &CgOptions::default());
+        assert_eq!(f.iterations, q.iterations);
+        let fb: Vec<u64> = f.residuals.iter().map(|v| v.to_bits()).collect();
+        let qb: Vec<u64> = q.residuals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(fb, qb);
+    }
+
+    #[test]
+    fn jacobi_is_bitwise_noop_on_constant_diagonal() {
+        // Poisson's diagonal is the constant 4 = 2²: the Jacobi apply is
+        // an exact power-of-two rescale, so the trajectory is unchanged
+        // bit for bit (mirror-proven).
+        let (a, b) = poisson(8);
+        let plain = solve(&a, &b, Tier::F64, &CgOptions::default());
+        let opts = CgOptions { precond: Precond::Jacobi, ..CgOptions::default() };
+        let pre = solve(&a, &b, Tier::F64, &opts);
+        assert_eq!(plain.iterations, pre.iterations);
+        let pb: Vec<u64> = plain.residuals.iter().map(|v| v.to_bits()).collect();
+        let qb: Vec<u64> = pre.residuals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(pb, qb);
+    }
+
+    #[test]
+    fn non_spd_operator_reports_breakdown() {
+        let trips = vec![(0, 0, -1.0f64), (1, 1, -1.0)];
+        let a = Csr::from_triplets(2, 2, &trips).unwrap();
+        let rep = solve(&a, &[1.0, 1.0], Tier::F64, &CgOptions::default());
+        assert!(rep.breakdown);
+        assert!(!rep.converged);
+    }
+}

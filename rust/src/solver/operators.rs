@@ -1,0 +1,149 @@
+//! Synthetic SPD operators for the solver benches and tests — bitwise
+//! mirrored in `python/tests/test_solver_mirror.py` (same SplitMix64
+//! draws, same summation order), so cross-language golden trajectories
+//! can be pinned on them.
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+
+use crate::testutil::Rng;
+use crate::vector::sparse::Csr;
+
+/// 5-point 2D Poisson stencil on a `grid × grid` Dirichlet domain:
+/// n = grid² unknowns, diagonal 4, neighbors −1. Symmetric positive
+/// definite, and every value is a small integer — exactly representable
+/// in every tier, which is what makes it the golden-trajectory operator.
+pub fn poisson2d(grid: usize) -> Csr<f64> {
+    assert!(grid >= 2, "poisson2d: grid must be at least 2");
+    let n = grid * grid;
+    let mut trips = Vec::with_capacity(5 * n);
+    for i in 0..grid {
+        for j in 0..grid {
+            let k = i * grid + j;
+            if i > 0 {
+                trips.push((k, k - grid, -1.0));
+            }
+            if j > 0 {
+                trips.push((k, k - 1, -1.0));
+            }
+            trips.push((k, k, 4.0));
+            if j < grid - 1 {
+                trips.push((k, k + 1, -1.0));
+            }
+            if i < grid - 1 {
+                trips.push((k, k + grid, -1.0));
+            }
+        }
+    }
+    Csr::from_triplets(n, n, &trips).expect("poisson2d triplets are valid by construction")
+}
+
+/// Random symmetric operator: strictly diagonally dominant (Gershgorin
+/// SPD, unit dominance margin) before an exact symmetric power-of-2
+/// rescale `A′ = D·A·D`, `D = diag(2^eᵢ)` with `eᵢ` uniform in
+/// `[-scale_pow, scale_pow]`. The congruence keeps A′ SPD while skewing
+/// its diagonal over ~2^(2·scale_pow) — the conditioning the Jacobi
+/// variant then removes (`scale_pow = 0` gives the plain
+/// diagonally-dominant operator). `offdiag` is the number of off-diagonal
+/// draws per row (duplicates and self-hits are dropped, so the realized
+/// count per row is at most `2·offdiag`).
+pub fn rand_dd(n: usize, offdiag: usize, scale_pow: u32, seed: u64) -> Csr<f64> {
+    assert!(n >= 1, "rand_dd: empty operator");
+    let mut rng = Rng::new(seed);
+    let mut offd: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for i in 0..n {
+        for _ in 0..offdiag {
+            let j = rng.below(n as u64) as usize;
+            if j == i {
+                continue;
+            }
+            if let Entry::Vacant(e) = offd.entry((i.min(j), i.max(j))) {
+                e.insert((rng.f64() - 0.5) * 2.0);
+            }
+        }
+    }
+    let span = 2 * scale_pow as u64 + 1;
+    let exps: Vec<i32> = (0..n).map(|_| rng.below(span) as i32 - scale_pow as i32).collect();
+
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for (&(i, j), &v) in &offd {
+        rows[i].push((j, v));
+        rows[j].push((i, v));
+    }
+    for row in rows.iter_mut() {
+        row.sort_by_key(|&(c, _)| c);
+    }
+    // Diagonal: 1 + Σ|off-diagonal| in ascending column order — the same
+    // fold order as the mirror, so the value is bit-identical.
+    for i in 0..n {
+        let mut diag = 1.0;
+        for &(_, v) in &rows[i] {
+            diag += v.abs();
+        }
+        rows[i].push((i, diag));
+        rows[i].sort_by_key(|&(c, _)| c);
+    }
+    let mut trips = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        let si = f64::powi(2.0, exps[i]);
+        for &(j, v) in row {
+            trips.push((i, j, v * si * f64::powi(2.0, exps[j])));
+        }
+    }
+    Csr::from_triplets(n, n, &trips).expect("rand_dd triplets are valid by construction")
+}
+
+/// The all-ones right-hand side used by the benches and goldens.
+pub fn ones(n: usize) -> Vec<f64> {
+    vec![1.0; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_shape_and_symmetry() {
+        let a = poisson2d(5);
+        assert_eq!(a.rows(), 25);
+        assert_eq!(a.nnz(), 5 * 25 - 4 * 5);
+        let d = a.to_dense();
+        for i in 0..25 {
+            assert_eq!(d[i * 25 + i], 4.0);
+            for j in 0..25 {
+                assert_eq!(d[i * 25 + j], d[j * 25 + i]);
+            }
+        }
+        assert_eq!(a.diag_f64(), vec![4.0; 25]);
+    }
+
+    #[test]
+    fn rand_dd_symmetric_and_dominant_unscaled() {
+        let a = rand_dd(48, 3, 0, 7);
+        let d = a.to_dense();
+        for i in 0..48 {
+            let mut off = 0.0;
+            for j in 0..48 {
+                assert_eq!(d[i * 48 + j].to_bits(), d[j * 48 + i].to_bits());
+                if j != i {
+                    off += d[i * 48 + j].abs();
+                }
+            }
+            // 0.5 margin absorbs the fold-order ulp (the constructor sums
+            // with the +1.0 first).
+            assert!(d[i * 48 + i] >= off + 0.5, "row {i}");
+        }
+    }
+
+    #[test]
+    fn rand_dd_scaling_is_exactly_symmetric() {
+        let a = rand_dd(48, 3, 6, 7);
+        let d = a.to_dense();
+        for i in 0..48 {
+            assert!(d[i * 48 + i] > 0.0);
+            for j in 0..48 {
+                assert_eq!(d[i * 48 + j].to_bits(), d[j * 48 + i].to_bits());
+            }
+        }
+    }
+}

@@ -22,6 +22,11 @@
 //!   quire-exact, and quantized-weight paths) on a shared MR×NR
 //!   microkernel, serial and row-sharded, plus the
 //!   [`lane::EncodedTensor`]-consuming serving entry point.
+//! - [`sparse`] — CSR matrix type + SpMV in the same three kernel
+//!   flavors as the dense gemv family (fast, quire-exact, decode-fused
+//!   quantized-weight) with row-sharded `par_spmv_*` forms; the fast row
+//!   kernel is chunk-aware so SpMV is bit-identical to dense
+//!   [`kernels::gemv`] on the densification. Feeds [`crate::solver`].
 //! - [`parallel`] — zero-dependency scoped fork-join sharding over
 //!   `std::thread` workers (`PALLAS_THREADS`, auto default) with one
 //!   generic sharded-codec family. Shards are contiguous row/element
@@ -41,6 +46,7 @@ pub mod gemm;
 pub mod kernels;
 pub mod lane;
 pub mod parallel;
+pub mod sparse;
 
 pub use lane::{EncodedTensor, LaneCodec, LaneElem, LaneSigned, LANES};
 

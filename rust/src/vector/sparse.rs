@@ -1,0 +1,524 @@
+//! Sparse (CSR) matrix type and SpMV kernels in the same three flavors
+//! as the dense [`super::kernels`] gemv family — **fast**, **quire-exact**,
+//! and **decode-fused quantized-weight** — plus row-sharded `par_spmv_*`
+//! forms that are bit-identical to serial for any thread count.
+//!
+//! The fast row kernel is *chunk-aware*: a stored entry at column `c`
+//! lands in accumulator `c & 7` while `c < cols - cols % 8`, and the
+//! remaining entries join the serial tail, with the dense kernel's exact
+//! combine tree in between. Because the accumulators start at `+0.0` and
+//! an IEEE add of `±0.0` to a value that is not `-0.0` cannot change its
+//! bits (and `+0.0 + -0.0 = +0.0` under round-to-nearest-even, so the
+//! accumulators can never *become* `-0.0`), skipping the products of the
+//! absent (zero) dense entries is bitwise inert: **`spmv` on a CSR matrix
+//! is bit-identical to the dense [`super::kernels::gemv`] on its
+//! densification** for finite data. The same argument covers the
+//! decode-fused flavor (the zero word decodes to exactly `+0.0`), and the
+//! quire flavor is trivial (the quire skips zero products outright). The
+//! claim is proven against the pure-stdlib Python mirror
+//! (`python/tests/test_solver_mirror.py`) and re-checked bitwise by
+//! `tests/solver.rs` and the `solver-bench` CI gate.
+//!
+//! Consumed by [`crate::solver`] (tiered conjugate-gradient) — the first
+//! workload to drive the vector engine from outside the HTTP path.
+
+use super::lane::LaneElem;
+use super::parallel;
+use crate::error::{anyhow, Result};
+use crate::formats::{Decoded, Quire};
+
+/// Compressed-sparse-row matrix over a lane element type. Column indices
+/// are strictly ascending within each row (the constructors enforce it) —
+/// the fast kernel's bitwise-equivalence contract depends on stored
+/// entries being visited in dense column order.
+#[derive(Clone, Debug)]
+pub struct Csr<E: LaneElem> {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    vals: Vec<E>,
+}
+
+/// A [`Csr`] whose values are serving-spec (`⟨N,6,5⟩` b-posit) words —
+/// the sparse analogue of the quantized-weight dense layout. Built by
+/// [`Csr::encode_bp`]; consumed by the decode-fused SpMV flavor.
+#[derive(Clone, Debug)]
+pub struct CsrWords<E: LaneElem> {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    words: Vec<E::Word>,
+}
+
+impl<E: LaneElem> Csr<E> {
+    /// Build from (row, col, value) triplets in any order. Rejects
+    /// out-of-bounds indices and duplicate coordinates (summing
+    /// duplicates would add a hidden rounding step).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        entries: &[(usize, usize, E)],
+    ) -> Result<Csr<E>> {
+        let mut sorted: Vec<(usize, usize, E)> = entries.to_vec();
+        sorted.sort_by_key(|&(r, c, _)| (r, c));
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx = Vec::with_capacity(sorted.len());
+        let mut vals = Vec::with_capacity(sorted.len());
+        for (k, &(r, c, v)) in sorted.iter().enumerate() {
+            if r >= rows || c >= cols {
+                return Err(anyhow!("csr: entry ({r},{c}) outside {rows}x{cols}"));
+            }
+            if k > 0 && (r, c) == (sorted[k - 1].0, sorted[k - 1].1) {
+                return Err(anyhow!("csr: duplicate entry at ({r},{c})"));
+            }
+            row_ptr[r + 1] += 1;
+            col_idx.push(c);
+            vals.push(v);
+        }
+        for r in 0..rows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        Ok(Csr { rows, cols, row_ptr, col_idx, vals })
+    }
+
+    /// Build from a row-major dense matrix, keeping entries that compare
+    /// unequal to zero. (`-0.0` compares equal and is dropped; its
+    /// products are bitwise inert, see the module docs.)
+    pub fn from_dense(rows: usize, cols: usize, a: &[E]) -> Csr<E> {
+        assert_eq!(a.len(), rows * cols, "csr from_dense: shape mismatch");
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = a[r * cols + c];
+                if v != E::ZERO {
+                    row_ptr[r + 1] += 1;
+                    col_idx.push(c);
+                    vals.push(v);
+                }
+            }
+        }
+        for r in 0..rows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        Csr { rows, cols, row_ptr, col_idx, vals }
+    }
+
+    /// Densify to a row-major `rows × cols` buffer (absent entries `+0.0`).
+    pub fn to_dense(&self) -> Vec<E> {
+        let mut out = vec![E::ZERO; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.row_ptr[r]..self.row_ptr[r + 1] {
+                out[r * self.cols + self.col_idx[k]] = self.vals[k];
+            }
+        }
+        out
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-entry count.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// One row's (column indices, values), ascending by column.
+    pub fn row(&self, r: usize) -> (&[usize], &[E]) {
+        let span = self.row_ptr[r]..self.row_ptr[r + 1];
+        (&self.col_idx[span.clone()], &self.vals[span])
+    }
+
+    /// The main diagonal widened to f64 (absent entries read as 0).
+    pub fn diag_f64(&self) -> Vec<f64> {
+        let mut d = vec![0.0f64; self.rows.min(self.cols)];
+        for (r, dr) in d.iter_mut().enumerate() {
+            let (idx, vals) = self.row(r);
+            if let Ok(k) = idx.binary_search(&r) {
+                *dr = vals[k].to_f64();
+            }
+        }
+        d
+    }
+
+    /// Convert the values to another lane width through f64 (exact when
+    /// widening; one RNE rounding per value when narrowing).
+    pub fn convert<T: LaneElem>(&self) -> Csr<T> {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            vals: self.vals.iter().map(|v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    /// Quantize the values to serving-spec words (one `⟨N,6,5⟩` RNE
+    /// rounding per entry), keeping the sparsity pattern.
+    pub fn encode_bp(&self) -> CsrWords<E> {
+        CsrWords {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            words: self.vals.iter().map(|&v| E::bp_encode_lane(v)).collect(),
+        }
+    }
+}
+
+impl<E: LaneElem> CsrWords<E> {
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored-entry count.
+    pub fn nnz(&self) -> usize {
+        self.words.len()
+    }
+
+    /// One row's (column indices, words), ascending by column.
+    pub fn row(&self, r: usize) -> (&[usize], &[E::Word]) {
+        let span = self.row_ptr[r]..self.row_ptr[r + 1];
+        (&self.col_idx[span.clone()], &self.words[span])
+    }
+
+    /// Decode back to a float-valued [`Csr`] (the values the decode-fused
+    /// kernel actually multiplies by).
+    pub fn decode(&self) -> Csr<E> {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            vals: self.words.iter().map(|&w| E::bp_decode_lane(w)).collect(),
+        }
+    }
+
+    /// The main diagonal as decoded f64 (absent entries read as 0).
+    pub fn diag_f64(&self) -> Vec<f64> {
+        self.decode().diag_f64()
+    }
+}
+
+// ----------------------------------------------------------------------
+// Serial kernels. Each `y[r]` is produced by one self-contained row
+// kernel, so the row-sharded forms below are bit-identical by
+// construction.
+// ----------------------------------------------------------------------
+
+/// Chunk-aware fast row dot — the sparse twin of the dense 8-accumulator
+/// kernel (same lane assignment `c & 7`, same combine tree, same
+/// ascending tail), see the module docs for the bitwise argument.
+#[inline]
+fn row_dot_fast<E: LaneElem>(idx: &[usize], vals: &[E], x: &[E], chunks: usize) -> E {
+    let mut acc = [E::ZERO; 8];
+    let mut k = 0;
+    while k < idx.len() && idx[k] < chunks {
+        acc[idx[k] & 7] += vals[k] * x[idx[k]];
+        k += 1;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    while k < idx.len() {
+        s += vals[k] * x[idx[k]];
+        k += 1;
+    }
+    s
+}
+
+/// Fast SpMV worker over a contiguous row block starting at `r0`.
+fn spmv_rows<E: LaneElem>(m: &Csr<E>, x: &[E], r0: usize, y: &mut [E]) {
+    let chunks = m.cols - m.cols % 8;
+    for (dr, yr) in y.iter_mut().enumerate() {
+        let (idx, vals) = m.row(r0 + dr);
+        *yr = row_dot_fast(idx, vals, x, chunks);
+    }
+}
+
+/// Decode-fused fast SpMV worker over a contiguous row block.
+fn spmv_bp_rows<E: LaneElem>(m: &CsrWords<E>, x: &[E], r0: usize, y: &mut [E]) {
+    let chunks = m.cols - m.cols % 8;
+    for (dr, yr) in y.iter_mut().enumerate() {
+        let (idx, words) = m.row(r0 + dr);
+        let mut acc = [E::ZERO; 8];
+        let mut k = 0;
+        while k < idx.len() && idx[k] < chunks {
+            acc[idx[k] & 7] += E::bp_decode_lane(words[k]) * x[idx[k]];
+            k += 1;
+        }
+        let mut s =
+            ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+        while k < idx.len() {
+            s += E::bp_decode_lane(words[k]) * x[idx[k]];
+            k += 1;
+        }
+        *yr = s;
+    }
+}
+
+/// Quire-exact SpMV worker over a contiguous row block: one exact row
+/// reduction per output, rounded once to `E`.
+fn spmv_quire_rows<E: LaneElem>(q: &mut Quire, m: &Csr<E>, x: &[E], r0: usize, y: &mut [E]) {
+    for (dr, yr) in y.iter_mut().enumerate() {
+        let (idx, vals) = m.row(r0 + dr);
+        q.clear();
+        for (k, &c) in idx.iter().enumerate() {
+            q.add_product(&Decoded::from_f64(vals[k].to_f64()), &Decoded::from_f64(x[c].to_f64()));
+        }
+        *yr = E::from_f64(q.to_decoded().to_f64());
+    }
+}
+
+/// Rounded fast SpMV: `y ← A·x`, bit-identical to [`super::kernels::gemv`]
+/// on the densified matrix.
+pub fn spmv<E: LaneElem>(m: &Csr<E>, x: &[E], y: &mut [E]) {
+    assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
+    assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
+    spmv_rows(m, x, 0, y);
+}
+
+/// Quire-exact SpMV: every row reduction accumulates exactly in the
+/// caller's quire and rounds once at readout.
+pub fn spmv_quire<E: LaneElem>(q: &mut Quire, m: &Csr<E>, x: &[E], y: &mut [E]) {
+    assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
+    assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
+    spmv_quire_rows(q, m, x, 0, y);
+}
+
+/// Decode-fused fast SpMV over serving-spec quantized values.
+pub fn spmv_bp_weights_fast<E: LaneElem>(m: &CsrWords<E>, x: &[E], y: &mut [E]) {
+    assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
+    assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
+    spmv_bp_rows(m, x, 0, y);
+}
+
+// ----------------------------------------------------------------------
+// Row-sharded forms (the unified par_* family): contiguous row blocks,
+// one serial worker per shard, bit-identical to serial for any thread
+// count.
+// ----------------------------------------------------------------------
+
+/// Sharded fast SpMV with an explicit thread count.
+pub fn par_spmv_with<E: LaneElem>(threads: usize, m: &Csr<E>, x: &[E], y: &mut [E]) {
+    assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
+    assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
+    parallel::for_each_row_block(threads, m.rows, 1, y, |r0, yb| {
+        spmv_rows(m, x, r0, yb);
+    });
+}
+
+/// Sharded fast SpMV (auto thread count from `PALLAS_THREADS`).
+pub fn par_spmv<E: LaneElem>(m: &Csr<E>, x: &[E], y: &mut [E]) {
+    par_spmv_with(parallel::auto_shards(m.rows, parallel::ROWS_MIN_SHARD), m, x, y);
+}
+
+/// Sharded quire-exact SpMV with an explicit thread count (each shard
+/// owns a private quire).
+pub fn par_spmv_quire_with<E: LaneElem>(threads: usize, m: &Csr<E>, x: &[E], y: &mut [E]) {
+    assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
+    assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
+    parallel::for_each_row_block(threads, m.rows, 1, y, |r0, yb| {
+        let mut q = E::quire();
+        spmv_quire_rows(&mut q, m, x, r0, yb);
+    });
+}
+
+/// Sharded quire-exact SpMV (auto thread count).
+pub fn par_spmv_quire<E: LaneElem>(m: &Csr<E>, x: &[E], y: &mut [E]) {
+    par_spmv_quire_with(parallel::auto_shards(m.rows, parallel::ROWS_MIN_SHARD), m, x, y);
+}
+
+/// Sharded decode-fused fast SpMV with an explicit thread count.
+pub fn par_spmv_bp_weights_fast_with<E: LaneElem>(
+    threads: usize,
+    m: &CsrWords<E>,
+    x: &[E],
+    y: &mut [E],
+) {
+    assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
+    assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
+    parallel::for_each_row_block(threads, m.rows, 1, y, |r0, yb| {
+        spmv_bp_rows(m, x, r0, yb);
+    });
+}
+
+/// Sharded decode-fused fast SpMV (auto thread count).
+pub fn par_spmv_bp_weights_fast<E: LaneElem>(m: &CsrWords<E>, x: &[E], y: &mut [E]) {
+    let shards = parallel::auto_shards(m.rows, parallel::ROWS_MIN_SHARD);
+    par_spmv_bp_weights_fast_with(shards, m, x, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{mixed_scale_f32, mixed_scale_f64, Rng};
+    use crate::vector::kernels;
+
+    /// Random sparse matrix (≈60% fill, mixed scales) as triplets + the
+    /// dense twin.
+    fn random_case<E: LaneElem>(
+        rng: &mut Rng,
+        rows: usize,
+        cols: usize,
+        gen: impl Fn(&mut Rng, usize) -> Vec<E>,
+    ) -> (Csr<E>, Vec<E>) {
+        let raw = gen(rng, rows * cols);
+        let mut dense = vec![E::ZERO; rows * cols];
+        let mut trips = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.below(5) < 3 {
+                    let v = raw[r * cols + c];
+                    dense[r * cols + c] = v;
+                    trips.push((r, c, v));
+                }
+            }
+        }
+        (Csr::from_triplets(rows, cols, &trips).unwrap(), dense)
+    }
+
+    fn mk_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+        mixed_scale_f32(rng, n, 12)
+    }
+
+    fn mk_f64(rng: &mut Rng, n: usize) -> Vec<f64> {
+        mixed_scale_f64(rng, n, 12)
+    }
+
+    #[test]
+    fn from_triplets_validates() {
+        assert!(Csr::from_triplets(2, 2, &[(0, 0, 1.0f32), (2, 0, 1.0)]).is_err());
+        assert!(Csr::from_triplets(2, 2, &[(0, 3, 1.0f32)]).is_err());
+        assert!(Csr::from_triplets(2, 2, &[(1, 1, 1.0f32), (1, 1, 2.0)]).is_err());
+        let m = Csr::from_triplets(2, 3, &[(1, 2, 5.0f32), (0, 1, 3.0)]).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.to_dense(), vec![0.0, 3.0, 0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::new(0x5a01);
+        let (m, dense) = random_case(&mut rng, 7, 13, mk_f64);
+        assert_eq!(m.to_dense(), dense);
+        let back = Csr::<f64>::from_dense(7, 13, &dense);
+        assert_eq!(back.to_dense(), dense);
+        assert_eq!(m.diag_f64(), (0..7).map(|i| dense[i * 13 + i]).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spmv_matches_dense_gemv_bitwise_both_widths() {
+        let mut rng = Rng::new(0x5a02);
+        for _ in 0..20 {
+            let rows = 1 + rng.below(24) as usize;
+            let cols = 1 + rng.below(67) as usize;
+            {
+                let (m, dense) = random_case(&mut rng, rows, cols, mk_f32);
+                let x = mk_f32(&mut rng, cols);
+                let mut y = vec![0f32; rows];
+                let mut want = vec![0f32; rows];
+                spmv(&m, &x, &mut y);
+                kernels::gemv(&dense, &x, &mut want);
+                for r in 0..rows {
+                    assert_eq!(y[r].to_bits(), want[r].to_bits(), "f32 row {r}");
+                }
+            }
+            {
+                let (m, dense) = random_case(&mut rng, rows, cols, mk_f64);
+                let x = mk_f64(&mut rng, cols);
+                let mut y = vec![0f64; rows];
+                let mut want = vec![0f64; rows];
+                spmv(&m, &x, &mut y);
+                kernels::gemv(&dense, &x, &mut want);
+                for r in 0..rows {
+                    assert_eq!(y[r].to_bits(), want[r].to_bits(), "f64 row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quire_and_bp_flavors_match_their_dense_twins() {
+        let mut rng = Rng::new(0x5a03);
+        for _ in 0..8 {
+            let rows = 1 + rng.below(12) as usize;
+            let cols = 1 + rng.below(40) as usize;
+            let (m, dense) = random_case(&mut rng, rows, cols, mk_f32);
+            let x = mk_f32(&mut rng, cols);
+
+            let mut y = vec![0f32; rows];
+            let mut q = <f32 as LaneElem>::quire();
+            spmv_quire(&mut q, &m, &x, &mut y);
+            let mut want = vec![0f32; rows];
+            let mut qd = kernels::QuireDot::new();
+            qd.gemv_f32(&dense, &x, &mut want);
+            for r in 0..rows {
+                assert_eq!(y[r].to_bits(), want[r].to_bits(), "quire row {r}");
+            }
+
+            // Decode-fused: quantize the dense twin with the same codec
+            // so the products agree bit-for-bit.
+            let mw = m.encode_bp();
+            let dense_w: Vec<u32> =
+                dense.iter().map(|&v| <f32 as LaneElem>::bp_encode_lane(v)).collect();
+            let mut yw = vec![0f32; rows];
+            spmv_bp_weights_fast(&mw, &x, &mut yw);
+            for r in 0..rows {
+                let want =
+                    kernels::dot_bp_weights_fast::<f32>(&dense_w[r * cols..(r + 1) * cols], &x);
+                assert_eq!(yw[r].to_bits(), want.to_bits(), "bp row {r}");
+            }
+            assert_eq!(mw.decode().to_dense().len(), rows * cols);
+        }
+    }
+
+    #[test]
+    fn par_spmv_bit_identical_for_any_thread_count() {
+        let mut rng = Rng::new(0x5a04);
+        let (m, _) = random_case(&mut rng, 33, 65, mk_f64);
+        let mw = m.encode_bp();
+        let x = mk_f64(&mut rng, 65);
+        let mut serial = vec![0f64; 33];
+        spmv(&m, &x, &mut serial);
+        let mut serial_q = vec![0f64; 33];
+        let mut q = <f64 as LaneElem>::quire();
+        spmv_quire(&mut q, &m, &x, &mut serial_q);
+        let mut serial_w = vec![0f64; 33];
+        spmv_bp_weights_fast(&mw, &x, &mut serial_w);
+        for t in [1, 2, 7] {
+            let mut y = vec![0f64; 33];
+            par_spmv_with(t, &m, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fast t={t}"
+            );
+            par_spmv_quire_with(t, &m, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_q.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "quire t={t}"
+            );
+            par_spmv_bp_weights_fast_with(t, &mw, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "bp t={t}"
+            );
+        }
+    }
+}

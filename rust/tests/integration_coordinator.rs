@@ -904,6 +904,43 @@ mod event_loop {
         drop(clients);
         listener.shutdown();
     }
+
+    #[test]
+    fn hostile_json_bodies_get_typed_400_and_the_connection_survives() {
+        // The PR 8 bugfixes: a deeply-nested body used to overflow the
+        // recursive parser's stack and abort the whole process; a body
+        // ending mid-\u-escape used to panic on an out-of-bounds slice.
+        // Both must now come back as typed 400s on a connection that
+        // stays usable.
+        let w = model();
+        let server = Arc::new(start_native(&w, ServerConfig::default()));
+        let mut listener = http::serve("127.0.0.1:0", server).unwrap();
+        let mut client = HttpClient::connect(&listener.local_addr()).unwrap();
+
+        // ~300 KiB of '[' — well past the depth cap, well under the
+        // body-size cap, so it reaches the parser.
+        let deep = "[".repeat(300_000);
+        let resp = client.request("POST", "/infer", &deep).unwrap();
+        assert_eq!(resp.status, 400, "{}", resp.body);
+        assert!(resp.body.contains("\"code\":\"bad_request\""), "{}", resp.body);
+
+        // Body ending inside a \u escape (the old panic site), plus a
+        // lone-surrogate body that must parse but fail feature checks.
+        for body in ["{\"features\":\"\\u12", "{\"features\":[1.0,\"\\uD834\"]}"] {
+            let resp = client.request("POST", "/infer", body).unwrap();
+            assert_eq!(resp.status, 400, "{body:?}: {}", resp.body);
+            assert!(resp.body.contains("\"code\":\"bad_request\""), "{body:?}: {}", resp.body);
+        }
+
+        // Same connection, same process: a valid request still answers
+        // bit-exactly.
+        let x = &w.golden_x[..w.d];
+        let resp = client.request("POST", "/infer", &infer_body(x)).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let want = reference_forward(&w, WeightFormat::Bp32, &quantizer::roundtrip(x));
+        assert_eq!(bits(&logits_of(&resp.body)), bits(&want), "connection must stay usable");
+        listener.shutdown();
+    }
 }
 
 /// PJRT-specific integration: the compiled-model goldens. Needs the

@@ -1,0 +1,103 @@
+//! No-panic corpus for the JSON parser: every input — hostile or merely
+//! malformed — must come back `Ok` or `Err`, never panic. The parser
+//! feeds on untrusted HTTP bodies in the single-threaded event loop, so
+//! a panic here is a remote crash (and a stack overflow is a process
+//! abort). Companion to the in-module unit tests in `src/json.rs`.
+
+use positron::json::{Json, MAX_DEPTH};
+use positron::testutil::Rng;
+
+/// The contract under test: parsing returns, and a successful parse of a
+/// string-bearing document yields valid UTF-8 by construction (`String`).
+fn total(src: &str) -> bool {
+    Json::parse(src).is_ok()
+}
+
+#[test]
+fn deep_nesting_at_and_over_the_cap() {
+    for depth in [1, MAX_DEPTH - 1, MAX_DEPTH, MAX_DEPTH + 1, 4 * MAX_DEPTH] {
+        for (open, close) in [("[", "]"), ("{\"k\":", "}")] {
+            let src = format!("{}1{}", open.repeat(depth), close.repeat(depth));
+            let ok = total(&src);
+            // Depth counts every value level, so `depth` wrappers plus the
+            // scalar parse iff depth + 1 <= MAX_DEPTH.
+            assert_eq!(ok, depth + 1 <= MAX_DEPTH, "depth {depth} {open:?}");
+        }
+    }
+    // Unclosed megabyte-scale nesting — the original DoS shape (a 4 MiB
+    // body of '[' overflowed the recursion stack and aborted the
+    // process). Must now fail fast at the cap.
+    for n in [1 << 16, 1 << 20, 4 << 20] {
+        assert!(!total(&"[".repeat(n)), "{n} open brackets");
+        assert!(!total(&"{\"a\":".repeat(n / 5)), "{n} open objects");
+    }
+}
+
+#[test]
+fn truncated_escapes_and_strings() {
+    let cases = [
+        "\"", "\"\\", "\"\\u", "\"\\u1", "\"\\u12", "\"\\u123", "\"\\u1234", "\"\\uD834",
+        "\"\\uD834\\", "\"\\uD834\\u", "\"\\uD834\\uDD", "\"abc", "\"\\q\"", "\"\\u+12a\"",
+        "\"\\u 123\"", "\"\\ud8ZZ\"",
+    ];
+    for src in cases {
+        assert!(!total(src), "{src:?} must be an error");
+    }
+    // Valid escapes still work, including the surrogate pair for U+1D11E.
+    assert_eq!(Json::parse("\"\\uD834\\uDD1E\"").unwrap().as_str(), Some("\u{1D11E}"));
+    assert_eq!(Json::parse("\"\\n\\t\\\\\\\"\\u0041\"").unwrap().as_str(), Some("\n\t\\\"A"));
+}
+
+#[test]
+fn lone_surrogates_replace_not_panic() {
+    for (src, want) in [
+        ("\"\\uD800\"", "\u{fffd}"),
+        ("\"\\uDBFF\"", "\u{fffd}"),
+        ("\"\\uDC00\"", "\u{fffd}"),
+        ("\"\\uDFFF\"", "\u{fffd}"),
+        ("\"\\uD834x\"", "\u{fffd}x"),
+        ("\"\\uD834\\uD834\\uDD1E\"", "\u{fffd}\u{1D11E}"),
+        ("\"\\uDD1E\\uD834\"", "\u{fffd}\u{fffd}"),
+    ] {
+        assert_eq!(Json::parse(src).unwrap().as_str(), Some(want), "{src:?}");
+    }
+}
+
+#[test]
+fn truncated_literals_and_numbers() {
+    for src in [
+        "tru", "fals", "n", "t", "f", "nul", "truee", "-", "+", ".", "1e", "1e+", "--1", "1.2.3",
+        "0x10", "[1,", "[1", "{\"a\"", "{\"a\":", "{\"a\":1", "[,]", "{,}",
+    ] {
+        assert!(!total(src), "{src:?} must be an error");
+    }
+}
+
+#[test]
+fn random_byte_mutations_never_panic() {
+    // Take valid documents, flip bytes at random, and parse the lossy
+    // UTF-8 view. Any outcome is fine; returning is the contract.
+    let seeds: Vec<String> = vec![
+        "{\"features\":[1.0,-2.5e3,0.125],\"id\":\"run-7\",\"ok\":true}".into(),
+        "[[1,2],[3,4],{\"deep\":[null,false,\"\\u0041\\uD834\\uDD1E\"]}]".into(),
+        format!("[{}]", (0..64).map(|i| format!("{i}.5")).collect::<Vec<_>>().join(",")),
+    ];
+    let mut rng = Rng::new(0x6a50);
+    let mut parsed = 0u32;
+    for doc in &seeds {
+        for _ in 0..2_000 {
+            let mut bytes = doc.clone().into_bytes();
+            let flips = 1 + rng.below(4) as usize;
+            for _ in 0..flips {
+                let at = rng.below(bytes.len() as u64) as usize;
+                bytes[at] = (rng.next_u64() & 0xff) as u8;
+            }
+            let text = String::from_utf8_lossy(&bytes);
+            if Json::parse(&text).is_ok() {
+                parsed += 1;
+            }
+        }
+    }
+    // Sanity: the corpus is not vacuous — some mutants still parse.
+    assert!(parsed > 0, "mutation corpus never produced a valid document");
+}

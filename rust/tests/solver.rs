@@ -1,0 +1,276 @@
+//! Solver-layer integration tests: the cross-language golden
+//! trajectories, the sparse/dense bitwise contract on the bench
+//! operators, thread-count bit-identity, and the preconditioning wins.
+//!
+//! The golden bit patterns below are the output of the pure-stdlib
+//! Python mirror (`python3 python/tests/test_solver_mirror.py
+//! --emit-goldens`): grid-8 2D Poisson, b = ones, tol 1e-6, plain CG.
+//! The mirror emulates the f32 tier with per-op RNE rounding and the
+//! quire tiers with exact dyadic-rational accumulation, so agreement
+//! here is agreement with an independent implementation of the paper's
+//! exact-reduction semantics, not a self-fulfilling snapshot.
+
+use positron::solver::{operators, solve, CgOptions, Precond, SolveReport, Tier};
+use positron::testutil::Rng;
+use positron::vector::kernels;
+use positron::vector::lane::LaneElem;
+use positron::vector::sparse::{self, Csr};
+
+const GOLDEN_GRID: usize = 8;
+
+fn golden_opts() -> CgOptions {
+    CgOptions { tol: 1e-6, max_iters: 400, precond: Precond::None }
+}
+
+fn golden_solve(tier: Tier) -> SolveReport {
+    let a = operators::poisson2d(GOLDEN_GRID);
+    let b = operators::ones(GOLDEN_GRID * GOLDEN_GRID);
+    solve(&a, &b, tier, &golden_opts())
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Exact ‖r‖₂ per iteration from the mirror's quire64 tier.
+const GOLDEN_QUIRE64_RESIDUALS: &[u64] = &[
+    0x4020000000000000,
+    0x4023988e1409212e,
+    0x401bd3e5c6f0e027,
+    0x4013f860b75553e0,
+    0x40055d49f1c6bc1a,
+    0x3fefa526a1d6bb59,
+    0x3fd076184c1a5d52,
+    0x3fb473856c94bdc5,
+    0x3f8af4692b732a53,
+    0x3f5cc30f7ca48a89,
+    0x3c91d92001ae4bfd,
+];
+
+/// Exact ‖r‖₂ per iteration from the mirror's f32 tier (per-op RNE f32
+/// rounding in the recurrence, exact norm instrumentation).
+const GOLDEN_F32_RESIDUALS: &[u64] = &[
+    0x4020000000000000,
+    0x4023988e1409212e,
+    0x401bd3e5b4639c5a,
+    0x4013f860b100d3c5,
+    0x40055d4a049f3014,
+    0x3fefa52668fa0712,
+    0x3fd076184d2c7065,
+    0x3fb47385886d723a,
+    0x3f8af468c6a60dfc,
+    0x3f5cc30f73289243,
+    0x3e6d4928f0028765,
+];
+
+/// The quire64 final iterate (64 values, row-major on the 8×8 grid; the
+/// 8-fold symmetry of the continuous solution survives exactly).
+const GOLDEN_QUIRE64_X: &[u64] = &[
+    0x3ff36b1dd56174c8,
+    0x3ffed63baac2e98f,
+    0x4002af9770cc929c,
+    0x40042fbbcf213e39,
+    0x40042fbbcf213e39,
+    0x4002af9770cc929c,
+    0x3ffed63baac2e98f,
+    0x3ff36b1dd56174c8,
+    0x3ffed63baac2e98f,
+    0x40094750fa08861c,
+    0x400f23841eaf9773,
+    0x4010efcdfe4b9409,
+    0x4010efcdfe4b9409,
+    0x400f23841eaf9773,
+    0x40094750fa08861c,
+    0x3ffed63baac2e98f,
+    0x4002af9770cc929c,
+    0x400f23841eaf9773,
+    0x40135bc609a90e7e,
+    0x401525ca03fa5144,
+    0x401525ca03fa5144,
+    0x40135bc609a90e7e,
+    0x400f23841eaf9773,
+    0x4002af9770cc929c,
+    0x40042fbbcf213e39,
+    0x4010efcdfe4b9409,
+    0x401525ca03fa5144,
+    0x401725ca03fa5143,
+    0x401725ca03fa5143,
+    0x401525ca03fa5144,
+    0x4010efcdfe4b9409,
+    0x40042fbbcf213e39,
+    0x40042fbbcf213e39,
+    0x4010efcdfe4b9409,
+    0x401525ca03fa5144,
+    0x401725ca03fa5143,
+    0x401725ca03fa5143,
+    0x401525ca03fa5144,
+    0x4010efcdfe4b9409,
+    0x40042fbbcf213e39,
+    0x4002af9770cc929c,
+    0x400f23841eaf9773,
+    0x40135bc609a90e7e,
+    0x401525ca03fa5144,
+    0x401525ca03fa5144,
+    0x40135bc609a90e7e,
+    0x400f23841eaf9773,
+    0x4002af9770cc929c,
+    0x3ffed63baac2e98f,
+    0x40094750fa08861c,
+    0x400f23841eaf9773,
+    0x4010efcdfe4b9409,
+    0x4010efcdfe4b9409,
+    0x400f23841eaf9773,
+    0x40094750fa08861c,
+    0x3ffed63baac2e98f,
+    0x3ff36b1dd56174c8,
+    0x3ffed63baac2e98f,
+    0x4002af9770cc929c,
+    0x40042fbbcf213e39,
+    0x40042fbbcf213e39,
+    0x4002af9770cc929c,
+    0x3ffed63baac2e98f,
+    0x3ff36b1dd56174c8,
+];
+
+#[test]
+fn quire64_trajectory_matches_the_python_mirror_bitwise() {
+    let rep = golden_solve(Tier::Quire64);
+    assert!(rep.converged && !rep.breakdown);
+    assert_eq!(rep.iterations, GOLDEN_QUIRE64_RESIDUALS.len() - 1);
+    assert_eq!(bits(&rep.residuals), GOLDEN_QUIRE64_RESIDUALS);
+    assert_eq!(bits(&rep.x), GOLDEN_QUIRE64_X);
+}
+
+#[test]
+fn f32_trajectory_matches_the_python_mirror_bitwise() {
+    let rep = golden_solve(Tier::F32);
+    assert!(rep.converged && !rep.breakdown);
+    assert_eq!(rep.iterations, GOLDEN_F32_RESIDUALS.len() - 1);
+    assert_eq!(bits(&rep.residuals), GOLDEN_F32_RESIDUALS);
+}
+
+#[test]
+fn quire32_and_f64_share_the_exact_first_two_entries() {
+    // Entry 0 (‖b‖₂) and entry 1 are exactly representable computations
+    // on this operator, so every tier must agree on them bitwise.
+    for tier in Tier::ALL {
+        let rep = golden_solve(tier);
+        assert_eq!(rep.residuals[0].to_bits(), GOLDEN_QUIRE64_RESIDUALS[0], "{}", tier.name());
+        assert_eq!(rep.residuals[1].to_bits(), GOLDEN_QUIRE64_RESIDUALS[1], "{}", tier.name());
+    }
+}
+
+#[test]
+fn quire_tier_never_needs_more_iterations_than_fast_on_poisson() {
+    // The CI gate's invariant, asserted in-tree on two sizes: exact
+    // reductions cannot lose to rounded ones on the model problem.
+    for grid in [8, 16] {
+        let a = operators::poisson2d(grid);
+        let b = operators::ones(grid * grid);
+        let q32 = solve(&a, &b, Tier::Quire32, &golden_opts());
+        let f32t = solve(&a, &b, Tier::F32, &golden_opts());
+        assert!(q32.converged && f32t.converged, "grid {grid}");
+        assert!(q32.iterations <= f32t.iterations, "grid {grid}");
+        let q64 = solve(&a, &b, Tier::Quire64, &golden_opts());
+        let f64t = solve(&a, &b, Tier::F64, &golden_opts());
+        assert!(q64.iterations <= f64t.iterations, "grid {grid}");
+    }
+}
+
+/// Sparse SpMV vs the dense gemv family on the densified bench
+/// operators, per kernel flavor — the chunk-aware contract that makes
+/// the solver's arithmetic identical to the serving kernels'.
+fn spmv_vs_dense<E: LaneElem>(a64: &Csr<f64>, x_src: &[f64]) {
+    let m = a64.convert::<E>();
+    let (rows, cols) = (m.rows(), m.cols());
+    let dense = m.to_dense();
+    let x: Vec<E> = x_src.iter().map(|&v| E::from_f64(v)).collect();
+
+    let mut ys = vec![E::ZERO; rows];
+    let mut yd = vec![E::ZERO; rows];
+    sparse::spmv(&m, &x, &mut ys);
+    kernels::gemv(&dense, &x, &mut yd);
+    for r in 0..rows {
+        assert_eq!(ys[r].to_bits_u64(), yd[r].to_bits_u64(), "fast row {r}");
+    }
+
+    let mut q = E::quire();
+    sparse::spmv_quire(&mut q, &m, &x, &mut ys);
+    kernels::par_gemv_quire_with(1, &dense, &x, &mut yd);
+    for r in 0..rows {
+        assert_eq!(ys[r].to_bits_u64(), yd[r].to_bits_u64(), "quire row {r}");
+    }
+
+    let mw = m.encode_bp();
+    let words: Vec<E::Word> = dense.iter().map(|&v| E::bp_encode_lane(v)).collect();
+    sparse::spmv_bp_weights_fast(&mw, &x, &mut ys);
+    kernels::par_gemv_bp_weights_with(1, &words, &x, &mut yd);
+    assert_eq!(words.len(), rows * cols);
+    for r in 0..rows {
+        assert_eq!(ys[r].to_bits_u64(), yd[r].to_bits_u64(), "bp row {r}");
+    }
+}
+
+#[test]
+fn spmv_is_bitwise_dense_gemv_on_the_bench_operators() {
+    let mut rng = Rng::new(0x5eed);
+    for a in [operators::poisson2d(6), operators::rand_dd(40, 3, 4, 5)] {
+        let x: Vec<f64> = (0..a.cols()).map(|_| (rng.f64() - 0.5) * 4.0).collect();
+        spmv_vs_dense::<f32>(&a, &x);
+        spmv_vs_dense::<f64>(&a, &x);
+    }
+}
+
+#[test]
+fn par_spmv_is_bit_identical_for_any_thread_count() {
+    let a = operators::rand_dd(65, 4, 3, 9).convert::<f64>();
+    let mut rng = Rng::new(0xabc);
+    let x: Vec<f64> = (0..65).map(|_| (rng.f64() - 0.5) * 4.0).collect();
+    let mut want = vec![0.0f64; 65];
+    sparse::spmv(&a, &x, &mut want);
+    let aw = a.encode_bp();
+    let mut want_bp = vec![0.0f64; 65];
+    sparse::spmv_bp_weights_fast(&aw, &x, &mut want_bp);
+    for t in [1usize, 2, 7] {
+        let mut y = vec![0.0f64; 65];
+        sparse::par_spmv_with(t, &a, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want), "fast t={t}");
+        sparse::par_spmv_quire_with(t, &a, &x, &mut y);
+        let mut serial = vec![0.0f64; 65];
+        let mut q = <f64 as LaneElem>::quire();
+        sparse::spmv_quire(&mut q, &a, &x, &mut serial);
+        assert_eq!(bits(&y), bits(&serial), "quire t={t}");
+        sparse::par_spmv_bp_weights_fast_with(t, &aw, &x, &mut y);
+        assert_eq!(bits(&y), bits(&want_bp), "bp t={t}");
+    }
+}
+
+#[test]
+fn jacobi_never_loses_on_poisson_and_wins_on_a_skewed_operator() {
+    // Poisson's constant diagonal makes Jacobi an exact no-op (the
+    // in-module test pins that bitwise); here the contract is the weaker
+    // bench-gate form — preconditioning must never cost iterations.
+    let a = operators::poisson2d(12);
+    let b = operators::ones(144);
+    let plain = solve(&a, &b, Tier::F64, &golden_opts());
+    let opts = CgOptions { precond: Precond::Jacobi, ..golden_opts() };
+    let pre = solve(&a, &b, Tier::F64, &opts);
+    assert!(pre.iterations <= plain.iterations);
+
+    // A diagonally-skewed operator (power-of-2 congruence scaling over
+    // ~2^16) is what Jacobi exists for: a strict, large win.
+    let a = operators::rand_dd(96, 3, 8, 11);
+    let b = operators::ones(96);
+    let opts_plain = CgOptions { max_iters: 200, ..golden_opts() };
+    let opts_pre = CgOptions { max_iters: 200, precond: Precond::Jacobi, ..golden_opts() };
+    let plain = solve(&a, &b, Tier::F64, &opts_plain);
+    let pre = solve(&a, &b, Tier::F64, &opts_pre);
+    assert!(pre.converged, "Jacobi must converge on the skewed operator");
+    assert!(
+        pre.iterations < plain.iterations,
+        "jacobi {} vs plain {} (converged: {})",
+        pre.iterations,
+        plain.iterations,
+        plain.converged
+    );
+}
