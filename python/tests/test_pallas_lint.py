@@ -1,0 +1,101 @@
+"""pallas-lint enforcement tests (pure stdlib, always collected).
+
+Three layers: the fixture corpus (`--self-test`, one must-fire and one
+must-not-fire file per rule plus suppression-syntax cases), a clean run
+over the real tree (the repo must stay violation-free — this is the same
+gate the CI lint job runs), and an injection round-trip proving the lint
+actually *fails* when a must-fire snippet lands in a zoned module.
+"""
+
+import importlib.util
+import json
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+TOOL = REPO / "tools" / "pallas_lint.py"
+MANIFEST = REPO / "tools" / "lint_manifest.json"
+FIXTURES = REPO / "tools" / "lint_fixtures"
+
+
+def _load_tool():
+    spec = importlib.util.spec_from_file_location("pallas_lint", TOOL)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_fixture_corpus_self_test():
+    proc = subprocess.run(
+        [sys.executable, str(TOOL), "--self-test"], capture_output=True, text=True
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_tree_is_violation_free():
+    proc = subprocess.run([sys.executable, str(TOOL)], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_manifest_names_only_known_rules_and_real_paths():
+    lint = _load_tool()
+    manifest = json.loads(MANIFEST.read_text())
+    for zone in manifest["zones"]:
+        for rule in zone["rules"]:
+            assert rule in lint.RULES, f"zone {zone['name']} names unknown rule {rule}"
+        for path in zone["paths"]:
+            assert (REPO / path).exists(), f"zone {zone['name']} maps missing path {path}"
+    for path in manifest.get("ordering_allowed", []):
+        assert (REPO / path).exists(), f"ordering_allowed maps missing path {path}"
+
+
+def test_every_rule_has_fire_and_clean_fixture_coverage():
+    lint = _load_tool()
+    pragma = re.compile(r"lint-fixture:\s*zone=(\w+)\s*expect=([\w\-:,@]*)")
+    fired, clean_zones = set(), set()
+    for fx in sorted(FIXTURES.glob("*.rs")):
+        m = pragma.search(fx.read_text())
+        assert m, f"{fx.name} missing pragma"
+        expect = [p.partition("@")[0] for p in filter(None, m.group(2).split(","))]
+        if expect:
+            fired.update(expect)
+        else:
+            clean_zones.add(m.group(1))
+    assert fired == set(lint.RULES), (
+        f"rules without a must-fire fixture: {set(lint.RULES) - fired}"
+    )
+    # Every zone has at least one must-not-fire fixture proving the rules
+    # don't fire on idiomatic code.
+    assert {"serving", "kernel", "default"} <= clean_zones
+
+
+def test_injected_violation_fails_the_tree_lint():
+    """End-to-end: drop a must-fire snippet into a serving-zone module and
+    the tree lint must exit non-zero naming that file and rule."""
+    lint = _load_tool()
+    manifest = json.loads(MANIFEST.read_text())
+    target = REPO / "rust" / "src" / "json.rs"
+    original = target.read_text()
+    injected = original + "\nfn injected_by_test(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n"
+    try:
+        target.write_text(injected)
+        violations = lint.lint_tree(REPO, manifest)
+    finally:
+        target.write_text(original)
+    hits = [v for v in violations if v.rule == "no-panic" and "json.rs" in v.rel]
+    assert hits, f"injected unwrap not caught; got {[str(v) for v in violations]}"
+
+
+def test_suppression_requires_matching_rule_name():
+    """A lint:allow naming the wrong rule must not mask a violation."""
+    lint = _load_tool()
+    src = (
+        "fn f(buf: &[u8]) -> u8 {\n"
+        "    buf[0] // lint:allow(no-panic): wrong rule\n"
+        "}\n"
+    )
+    manifest = json.loads(MANIFEST.read_text())
+    got = {v.rule for v in lint.lint_file("x.rs", src, ["no-indexing"], manifest)}
+    assert got == {"no-indexing"}

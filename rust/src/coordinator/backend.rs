@@ -239,6 +239,8 @@ fn encode_bp64_transposed(w: &[f32], rows: usize, cols: usize) -> Vec<u64> {
 /// through cache (the per-batch staging/readout of the lane tiers is on
 /// the serving hot path; for `E = f32` the convert is the identity and
 /// this is exactly the tiled transpose the BP32 tier ran pre-redesign).
+// lint:allow(no-indexing): both slices are asserted to rows×cols below and
+// every i/j stays under rows/cols, so j*rows+i and i*cols+j are in bounds
 fn transpose_map<S: Copy, D: Copy>(
     src: &[S],
     dst: &mut [D],
@@ -303,7 +305,7 @@ fn run_lane_tier<E: LaneElem>(
     kernels::bias_rows(&mut st.lt, &st.b2, c, rows);
     mark(&mut timer, Stage::Execute, &mut t);
     out.resize(rows * c, 0.0);
-    transpose_map(&st.lt, &mut out[..], c, rows, E::to_f32);
+    transpose_map(&st.lt, &mut out[..], c, rows, E::to_f32); // lint:allow(no-indexing): full-range [..] cannot panic
     mark(&mut timer, Stage::Readout, &mut t);
 }
 
@@ -485,7 +487,7 @@ impl NativeBackend {
                 mark(&mut timer, Stage::Readout, &mut t);
             }
         }
-        Ok(&self.out[..rows * c])
+        Ok(&self.out[..rows * c]) // lint:allow(no-indexing): out was resized to rows*c above
     }
 }
 
@@ -550,6 +552,9 @@ impl InferenceBackend for PjrtBackend {
         self.model_batch
     }
 
+    // lint:allow(no-indexing): xpad is model_batch×d ≥ x.len() (both checked
+    // above the slicing), args is built with one literal, and out.len() is
+    // checked against rows×c before the final slice
     fn run(&mut self, x: &[f32], rows: usize) -> Result<&[f32]> {
         if rows > self.model_batch {
             return Err(anyhow!("batch {rows} exceeds model batch {}", self.model_batch));
@@ -598,7 +603,7 @@ pub fn stage_inputs_in_place_timed(format: WeightFormat, xs: &mut [f32]) -> u64 
 pub fn stage_inputs_into(format: WeightFormat, x: &[f32], out: &mut Vec<f32>) {
     out.clear();
     out.extend_from_slice(x);
-    stage_inputs_in_place(format, &mut out[..]);
+    stage_inputs_in_place(format, &mut out[..]); // lint:allow(no-indexing): full-range [..] cannot panic
 }
 
 /// Allocating wrapper over [`stage_inputs_into`] (tests and references).
@@ -614,6 +619,8 @@ pub fn stage_inputs(format: WeightFormat, x: &[f32]) -> Vec<f32> {
 /// reproduces), scalar fast-path weight decode (bit-identical to the
 /// lane decode), explicit-compare ReLU. `x` is one already-staged
 /// feature row; returns the `c` logits.
+// lint:allow(no-indexing): every index ranges over the d×h×c shapes that
+// ModelWeights construction validates; x.len() == d is asserted on entry
 pub fn reference_forward(w: &ModelWeights, format: WeightFormat, x: &[f32]) -> Vec<f32> {
     assert_eq!(x.len(), w.d, "reference_forward: feature length");
     let (d, h, c) = (w.d, w.h, w.c);
@@ -725,13 +732,14 @@ pub fn synth_weights(d: usize, h: usize, c: usize, batch: usize, seed: u64) -> M
         golden_logits_bposit: Vec::new(),
     };
     for g in 0..batch {
+        // lint:allow(no-indexing): golden_x holds batch×d values by construction
         let x = &w.golden_x[g * d..(g + 1) * d];
         let lf = reference_forward(&w, WeightFormat::F32, x);
         let lb = reference_forward(&w, WeightFormat::Bp32, x);
         let argmax = lb
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap_or(0);
         w.golden_y.push(argmax);

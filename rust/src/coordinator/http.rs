@@ -192,6 +192,8 @@ struct Poller {
 #[cfg(target_os = "linux")]
 impl Poller {
     fn new() -> std::io::Result<Poller> {
+        // SAFETY: plain FFI syscall with no pointer arguments; any return
+        // value (including failure) is handled below.
         let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
         if fd < 0 {
             return Err(std::io::Error::last_os_error());
@@ -220,6 +222,8 @@ impl Poller {
         let mut ev = sys::EpollEvent { events: mask, data: token };
         let evp =
             if op == sys::EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev as *mut _ };
+        // SAFETY: `evp` is null only for EPOLL_CTL_DEL (where the kernel
+        // ignores it) and otherwise points at `ev`, which outlives the call.
         let rc = unsafe { sys::epoll_ctl(self.epfd.as_raw_fd(), op, fd, evp) };
         if rc < 0 {
             return Err(std::io::Error::last_os_error());
@@ -241,6 +245,8 @@ impl Poller {
 
     fn wait(&mut self, timeout_ms: i32, out: &mut Vec<ReadyEvent>) {
         out.clear();
+        // SAFETY: pointer and capacity come from the same live Vec; the
+        // kernel writes at most `events.len()` entries.
         let n = unsafe {
             sys::epoll_wait(
                 self.epfd.as_raw_fd(),
@@ -253,7 +259,7 @@ impl Poller {
             // EINTR: treat as a timeout round.
             return;
         }
-        for ev in &self.events[..n as usize] {
+        for ev in self.events.iter().take(n as usize) {
             let ev = *ev; // copy out of the (possibly packed) slot
             let err = ev.events & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
             let readable = ev.events & sys::EPOLLIN != 0 || err;
@@ -293,14 +299,14 @@ impl Poller {
     }
 
     fn modify(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> std::io::Result<()> {
-        match self.fds.iter().position(|p| p.fd == fd) {
-            Some(i) => {
-                self.fds[i].events = Self::mask(read, write);
-                self.tokens[i] = token;
-                Ok(())
+        for (p, t) in self.fds.iter_mut().zip(self.tokens.iter_mut()) {
+            if p.fd == fd {
+                p.events = Self::mask(read, write);
+                *t = token;
+                return Ok(());
             }
-            None => Err(std::io::Error::from(std::io::ErrorKind::NotFound)),
         }
+        Err(std::io::Error::from(std::io::ErrorKind::NotFound))
     }
 
     fn deregister(&mut self, fd: RawFd) -> std::io::Result<()> {
@@ -313,6 +319,8 @@ impl Poller {
 
     fn wait(&mut self, timeout_ms: i32, out: &mut Vec<ReadyEvent>) {
         out.clear();
+        // SAFETY: pointer and length describe the same live Vec; poll(2)
+        // only mutates the `revents` field of those entries.
         let n = unsafe { sys::poll(self.fds.as_mut_ptr(), self.fds.len() as u32, timeout_ms) };
         if n <= 0 {
             return;
@@ -483,6 +491,7 @@ fn try_parse_request(buf: &[u8]) -> std::result::Result<Option<(HttpRequest, usi
     if head_end > MAX_HEAD_BYTES {
         return Err("request head too large".into());
     }
+    // lint:allow(no-indexing): head_end is a windows(4) position, so ≤ len - 4
     let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| "head is not UTF-8")?;
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
@@ -521,6 +530,7 @@ fn try_parse_request(buf: &[u8]) -> std::result::Result<Option<(HttpRequest, usi
         "HTTP/1.0" => connection == "keep-alive",
         _ => connection != "close",
     };
+    // lint:allow(no-indexing): `buf.len() < total` returned Ok(None) above
     let body = buf[head_end + 4..total].to_vec();
     Ok(Some((HttpRequest { method, path, query, keep_alive, body }, total)))
 }
@@ -611,6 +621,7 @@ fn route_immediate(req: &HttpRequest, reg: &ModelRegistry) -> Routed {
             ))),
         },
         ("POST", p) if p.starts_with("/v1/infer/") => {
+            // lint:allow(no-indexing): guarded by starts_with on an ASCII prefix
             let name = &p["/v1/infer/".len()..];
             match reg.get(name) {
                 Some(s) => Routed::Infer(s.clone()),
@@ -765,6 +776,8 @@ impl HttpServer {
     /// connections; it is woken through the poller, not a self-connect.
     pub fn shutdown(&mut self) {
         let Some(handle) = self.thread.take() else { return };
+        // ORDERING: SeqCst store so the flag is visible before the poller
+        // wake; shutdown is rare, cost is irrelevant.
         self.stop.store(true, Ordering::SeqCst);
         #[cfg(unix)]
         if let Some(w) = &self.waker {
@@ -861,6 +874,8 @@ fn serve_threaded_registry(addr: &str, reg: Arc<ModelRegistry>) -> Result<HttpSe
     let thread = std::thread::Builder::new()
         .name("positron-http-threaded".into())
         .spawn(move || loop {
+            // ORDERING: SeqCst pairs with the shutdown store; checked once
+            // per accept round, so strength costs nothing.
             if stop2.load(Ordering::SeqCst) {
                 break;
             }
@@ -868,6 +883,10 @@ fn serve_threaded_registry(addr: &str, reg: Arc<ModelRegistry>) -> Result<HttpSe
                 Ok((mut stream, _)) => {
                     let _ = stream.set_nonblocking(false);
                     reg.metrics().record_http_conn_open();
+                    // ORDERING: SeqCst keeps the admission check totally
+                    // ordered with the handlers' fetch_add/fetch_sub; the
+                    // cap may still overshoot by in-flight races, which
+                    // admission tolerates.
                     if active.load(Ordering::SeqCst) >= MAX_CONN_THREADS {
                         let reply =
                             api_reply(ApiError::Overloaded("too many connections".into()));
@@ -879,12 +898,14 @@ fn serve_threaded_registry(addr: &str, reg: Arc<ModelRegistry>) -> Result<HttpSe
                         reg.metrics().record_http_conn_close();
                         continue;
                     }
+                    // ORDERING: SeqCst, same total order as the check above.
                     active.fetch_add(1, Ordering::SeqCst);
                     let r2 = reg.clone();
                     let act = active.clone();
                     std::thread::spawn(move || {
                         handle_conn_blocking(stream, &r2);
                         r2.metrics().record_http_conn_close();
+                        // ORDERING: SeqCst release of this thread's slot.
                         act.fetch_sub(1, Ordering::SeqCst);
                     });
                 }
@@ -942,6 +963,7 @@ fn read_request_blocking(stream: &mut TcpStream) -> std::result::Result<HttpRequ
         if n == 0 {
             return Err("connection closed mid-request".into());
         }
+        // lint:allow(no-indexing): read() returns n ≤ chunk.len()
         buf.extend_from_slice(&chunk[..n]);
     }
 }
@@ -1089,6 +1111,8 @@ impl EventLoop {
         let mut events: Vec<ReadyEvent> = Vec::new();
         loop {
             self.poller.wait(SWEEP_MS, &mut events);
+            // ORDERING: SeqCst pairs with shutdown()'s store; once per
+            // poll round, so strength is free.
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
@@ -1183,6 +1207,7 @@ impl EventLoop {
                     if conn.req_start.is_none() {
                         conn.req_start = Some(Instant::now());
                     }
+                    // lint:allow(no-indexing): read() returns n ≤ chunk.len()
                     conn.in_buf.extend_from_slice(&chunk[..n]);
                     conn.last_activity = Instant::now();
                 }
@@ -1334,16 +1359,15 @@ impl EventLoop {
             let Some(conn) = self.conns.get_mut(&inf.fd) else {
                 continue; // connection died while the batch ran
             };
-            let Some(pos) = conn
-                .pending
-                .iter()
-                .position(|s| matches!(s, Slot::Waiting { id: i, .. } if *i == id))
+            let Some((pos, keep_alive, req_start)) =
+                conn.pending.iter().enumerate().find_map(|(p, s)| match s {
+                    Slot::Waiting { id: i, keep_alive, req_start } if *i == id => {
+                        Some((p, *keep_alive, *req_start))
+                    }
+                    _ => None,
+                })
             else {
                 continue;
-            };
-            let (keep_alive, req_start) = match conn.pending[pos] {
-                Slot::Waiting { keep_alive, req_start, .. } => (keep_alive, req_start),
-                _ => unreachable!(),
             };
             let reply = match res {
                 Some(Ok(resp)) => render_infer_ok(&resp, tracing),
@@ -1352,7 +1376,9 @@ impl EventLoop {
                     api_reply_with_id(ApiError::Internal("server stopped".into()), inf.trace_id)
                 }
             };
-            conn.pending[pos] = Slot::Ready(Rendered { reply, keep_alive, req_start });
+            if let Some(slot) = conn.pending.get_mut(pos) {
+                *slot = Slot::Ready(Rendered { reply, keep_alive, req_start });
+            }
             touched.push(inf.fd);
         }
         touched.sort_unstable();
@@ -1372,7 +1398,7 @@ impl EventLoop {
     fn pump(&mut self, fd: RawFd) {
         let Some(conn) = self.conns.get_mut(&fd) else { return };
         while matches!(conn.pending.front(), Some(Slot::Ready(_))) {
-            let Some(Slot::Ready(r)) = conn.pending.pop_front() else { unreachable!() };
+            let Some(Slot::Ready(r)) = conn.pending.pop_front() else { break };
             append_response(conn, r, &self.metrics);
         }
     }
@@ -1383,6 +1409,7 @@ impl EventLoop {
             return;
         }
         while conn.out_pos < conn.out_buf.len() {
+            // lint:allow(no-indexing): loop condition proves out_pos < len
             match conn.stream.write(&conn.out_buf[conn.out_pos..]) {
                 Ok(0) => {
                     conn.dead = true;
@@ -1504,6 +1531,7 @@ impl EventLoop {
             } else {
                 0
             };
+            // lint:allow(no-indexing): i is one of the literals 0..=3 above
             states[i] += 1;
         }
         self.metrics.set_conn_states(states);
@@ -1616,8 +1644,10 @@ impl HttpClient {
             if n == 0 {
                 return Err("connection closed mid-response".into());
             }
+            // lint:allow(no-indexing): read() returns n ≤ chunk.len()
             self.buf.extend_from_slice(&chunk[..n]);
         };
+        // lint:allow(no-indexing): head_end is a windows(4) position, ≤ len - 4
         let head = String::from_utf8_lossy(&self.buf[..head_end]).to_string();
         let status_line = head.lines().next().ok_or("empty response")?;
         let status: u16 = status_line
@@ -1641,8 +1671,10 @@ impl HttpClient {
             if n == 0 {
                 return Err("connection closed mid-body".into());
             }
+            // lint:allow(no-indexing): read() returns n ≤ chunk.len()
             self.buf.extend_from_slice(&chunk[..n]);
         }
+        // lint:allow(no-indexing): the while loop above read until len ≥ total
         let body = String::from_utf8_lossy(&self.buf[head_end + 4..total]).to_string();
         self.buf.drain(..total);
         Ok(HttpResponse { status, body, head })

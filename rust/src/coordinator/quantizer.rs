@@ -314,9 +314,12 @@ macro_rules! cached_weights_fn {
         $(#[$doc])*
         pub fn $name(key: u64, build: impl FnOnce() -> Vec<$elem>) -> Arc<Vec<$elem>> {
             if let Some(CachedWeights::$variant(a)) = cache().lock().unwrap().get(&key).cloned() {
+                // ORDERING: Relaxed — monotone metrics counter, no other
+                // memory depends on its value.
                 CACHE_HITS.fetch_add(1, Ordering::Relaxed);
                 return a;
             }
+            // ORDERING: Relaxed — monotone metrics counter (see above).
             CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
             let a = Arc::new(build());
             insert_bounded(&mut cache().lock().unwrap(), key, CachedWeights::$variant(a.clone()));
@@ -347,6 +350,8 @@ cached_weights_fn!(
 /// `(hits, misses)` since process start (monotone; shared by all servers;
 /// exported by `/metrics` as `positron_weight_cache_{hits,misses}_total`).
 pub fn weight_cache_stats() -> (u64, u64) {
+    // ORDERING: Relaxed — scrape-time reads of independent counters; a
+    // torn hit/miss pair across a racing insert is fine for metrics.
     (CACHE_HITS.load(Ordering::Relaxed), CACHE_MISSES.load(Ordering::Relaxed))
 }
 

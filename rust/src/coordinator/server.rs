@@ -837,6 +837,8 @@ fn worker_loop(
         // is reused, so this path performs zero per-request allocation.
         let t_stage = Instant::now();
         for (i, r) in batch.iter().enumerate() {
+            // lint:allow(no-indexing): x is resized to rows×d above and
+            // admission rejects any request whose feature length is not d
             x[i * d..(i + 1) * d].copy_from_slice(&r.features);
         }
         bt.add_duration(Stage::Staging, t_stage.elapsed());
@@ -844,6 +846,7 @@ fn worker_loop(
         if cfg.quantize_inputs && cfg.weight_format.quantizes_inputs() {
             let t_codec = Instant::now();
             codec_worker_ns =
+                // lint:allow(no-indexing): x is resized to rows×d above
                 backend::stage_inputs_in_place_timed(cfg.weight_format, &mut x[..rows * d]);
             let codec_wall = t_codec.elapsed();
             metrics.record_codec(codec_wall);
@@ -852,6 +855,7 @@ fn worker_loop(
         }
 
         let t_exec = Instant::now();
+        // lint:allow(no-indexing): x is resized to rows×d above
         match backend.run_traced(&x[..rows * d], rows, &mut bt) {
             Ok(out) => {
                 let exec_wall = t_exec.elapsed();
@@ -866,6 +870,8 @@ fn worker_loop(
                 let batch_id = trace::next_trace_id();
                 let mut members = Vec::with_capacity(if tracing { rows } else { 0 });
                 for (i, r) in batch.into_iter().enumerate() {
+                    // lint:allow(no-indexing): the backend contract returns
+                    // at least rows×c logits (checked inside run/run_traced)
                     let logits = out[i * c..(i + 1) * c].to_vec();
                     let latency = r.submitted.elapsed();
                     metrics.record_latency(latency);

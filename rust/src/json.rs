@@ -92,7 +92,7 @@ struct Parser<'a> {
 
 impl<'a> Parser<'a> {
     fn ws(&mut self) {
-        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
             self.i += 1;
         }
     }
@@ -101,7 +101,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn eat(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -134,18 +134,21 @@ impl<'a> Parser<'a> {
     }
 
     /// Four bounds-checked hex digits of a `\u` escape (strict: exactly
-    /// `[0-9a-fA-F]{4}`, no sign or whitespace).
+    /// `[0-9a-fA-F]{4}`, no sign or whitespace). Total: every non-hex or
+    /// truncated quad is a typed error, never a panic.
     fn hex4(&mut self) -> Result<u32, String> {
-        if self.i + 4 > self.b.len() {
+        let Some(quad) = self.b.get(self.i..self.i + 4) else {
             return Err(format!("truncated \\u escape at byte {}", self.i));
-        }
-        let quad = &self.b[self.i..self.i + 4];
-        if !quad.iter().all(|c| c.is_ascii_hexdigit()) {
-            return Err(format!("bad \\u escape at byte {}", self.i));
-        }
+        };
         let mut code = 0u32;
         for &c in quad {
-            code = code * 16 + (c as char).to_digit(16).expect("hexdigit checked above");
+            let digit = match c {
+                b'0'..=b'9' => c - b'0',
+                b'a'..=b'f' => c - b'a' + 10,
+                b'A'..=b'F' => c - b'A' + 10,
+                _ => return Err(format!("bad \\u escape at byte {}", self.i)),
+            };
+            code = code * 16 + u32::from(digit);
         }
         self.i += 4;
         Ok(code)
@@ -178,7 +181,7 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
+        if self.b.get(self.i..self.i + word.len()) == Some(word.as_bytes()) {
             self.i += word.len();
             Ok(v)
         } else {
@@ -195,12 +198,15 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // The matched bytes are all ASCII, so UTF-8 conversion cannot
+        // fail — but stay total and answer a typed error regardless.
+        let s = std::str::from_utf8(self.b.get(start..self.i).unwrap_or_default())
+            .map_err(|_| format!("bad number at byte {start}"))?;
         s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number {s:?}: {e}"))
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -235,7 +241,7 @@ impl<'a> Parser<'a> {
                         }
                         self.i += 1;
                     }
-                    let run = std::str::from_utf8(&self.b[start..self.i]);
+                    let run = std::str::from_utf8(self.b.get(start..self.i).unwrap_or_default());
                     out.push_str(run.map_err(|e| e.to_string())?);
                 }
             }
@@ -243,7 +249,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
@@ -266,7 +272,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
@@ -277,7 +283,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let k = self.string()?;
             self.ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.ws();
             let v = self.value()?;
             m.insert(k, v);

@@ -57,8 +57,18 @@
 //!   and HTTP connection/response counters (see docs/OBSERVABILITY.md).
 //! - [`harness`] — self-contained benchmark harness (criterion-style) with
 //!   JSON emission for `BENCH_*.json` artifacts.
+//! - [`json`] — minimal total JSON parser (untrusted HTTP bodies +
+//!   build-time artifacts; recursion capped at `json::MAX_DEPTH`, never
+//!   panics — see `tests/json_corpus.rs`).
 //! - [`error`] — in-tree anyhow-style error type (offline dependency set).
 //! - [`testutil`] — PRNG + property-testing utilities used across tests.
+//!
+//! Static invariants — panic-freedom on the serving path ([`json`],
+//! [`coordinator`]), bit-determinism in the kernel zones ([`vector`],
+//! [`solver`], [`formats`]), unsafe/atomic hygiene everywhere — are
+//! enforced by `tools/pallas_lint.py` (a pure-python lexical pass, wired
+//! into CI ahead of clippy); rules, zones, and the suppression syntax
+//! are catalogued in docs/LINTS.md.
 
 pub mod error;
 pub mod formats;

@@ -282,7 +282,7 @@ fn cg_impl<E: LaneElem>(op: TierOps<'_, E>, b: &[E], opts: &CgOptions) -> SolveR
     let mut converged = false;
     let mut breakdown = false;
     let mut k = 0usize;
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint:allow(no-wallclock): wall-time budget check only; never feeds residuals or iterates
     loop {
         let res = kernels::quire_dot(&mut q_norm, &r, &r).sqrt();
         residuals.push(res);

@@ -49,6 +49,30 @@ fn truncated_escapes_and_strings() {
 }
 
 #[test]
+fn former_panic_sites_answer_typed_errors() {
+    // Regression: hex4() used `.expect("hexdigit checked above")` after a
+    // range check that did not cover a quad ending exactly at the buffer
+    // edge, and number() ran `from_utf8(..).unwrap()` on its span. Both
+    // are now typed parse errors; pin the diagnostic shape so a future
+    // refactor cannot quietly reintroduce a panic-capable path.
+    for src in ["\"\\u", "\"\\u1", "\"\\u12", "\"\\u123"] {
+        let err = Json::parse(src).unwrap_err();
+        assert!(err.contains("escape at byte"), "{src:?} → {err:?}");
+    }
+    for src in ["\"\\ug000\"", "\"\\u00g0\"", "\"\\u-123\"", "\"\\u12 4\""] {
+        let err = Json::parse(src).unwrap_err();
+        assert!(err.contains("escape at byte"), "{src:?} → {err:?}");
+    }
+    for src in ["-", "+", "1e", "1e+", "--1", "1.2.3", ".", "e5"] {
+        let err = Json::parse(src).unwrap_err();
+        assert!(err.contains("bad number"), "{src:?} → {err:?}");
+    }
+    // The happy paths those sites guard still decode.
+    assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
+    assert_eq!(Json::parse("-2.5e3").unwrap().as_f64(), Some(-2500.0));
+}
+
+#[test]
 fn lone_surrogates_replace_not_panic() {
     for (src, want) in [
         ("\"\\uD800\"", "\u{fffd}"),

@@ -1,0 +1,12 @@
+// lint-fixture: zone=kernel expect=
+
+fn relu(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        // Explicit select: bit-stable for NaN and -0.0 inputs.
+        *x = if *x > 0.0 { *x } else { 0.0 };
+    }
+}
+
+fn tile_end(rows: usize, i0: usize) -> usize {
+    rows.min(i0 + 32)
+}

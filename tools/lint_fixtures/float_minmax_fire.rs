@@ -1,0 +1,10 @@
+// lint-fixture: zone=kernel expect=float-minmax@5,float-minmax@7,float-minmax@8
+
+fn relu(v: &mut [f32]) {
+    for x in v.iter_mut() {
+        *x = x.max(0.0);
+    }
+    let a = f32::max(1.0, 2.0);
+    let b = 0.5f32.min(a);
+    let _ = b;
+}

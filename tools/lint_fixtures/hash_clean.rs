@@ -1,0 +1,7 @@
+// lint-fixture: zone=kernel expect=
+
+use std::collections::BTreeMap;
+
+fn sum(weights: &BTreeMap<u64, f32>) -> f32 {
+    weights.values().sum()
+}

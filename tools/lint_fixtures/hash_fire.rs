@@ -1,0 +1,7 @@
+// lint-fixture: zone=kernel expect=no-hash-collections@3,no-hash-collections@5
+
+use std::collections::HashMap;
+
+fn sum(weights: &HashMap<u64, f32>) -> f32 {
+    weights.values().sum()
+}

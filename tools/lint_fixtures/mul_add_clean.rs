@@ -1,0 +1,5 @@
+// lint-fixture: zone=kernel expect=
+
+fn axpy(a: f32, x: f32, y: f32) -> f32 {
+    a * x + y
+}

@@ -1,0 +1,5 @@
+// lint-fixture: zone=kernel expect=no-mul-add@4
+
+fn axpy(a: f32, x: f32, y: f32) -> f32 {
+    a.mul_add(x, y)
+}

@@ -1,0 +1,9 @@
+// lint-fixture: zone=serving expect=
+
+fn head(buf: &[u8], n: usize) -> Option<u8> {
+    let first = buf.get(0).copied()?;
+    let window = buf.get(n..n.checked_add(4)?)?;
+    let sum: u8 = window.iter().fold(first, |a, b| a ^ b);
+    let fixed = [0u8; 4];
+    Some(sum ^ fixed[0]) // lint:allow(no-indexing): literal index into [u8; 4]
+}

@@ -1,0 +1,7 @@
+// lint-fixture: zone=serving expect=no-indexing@4,no-indexing@5
+
+fn head(buf: &[u8], n: usize) -> u8 {
+    let first = buf[0];
+    let window = &buf[n..n + 4];
+    first ^ window.len() as u8
+}

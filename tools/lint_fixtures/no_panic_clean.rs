@@ -1,0 +1,15 @@
+// lint-fixture: zone=serving expect=
+// The same shape written totally: typed errors in the serving code and
+// panics confined to #[cfg(test)], which is exempt from every rule.
+
+fn load(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "missing value".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        assert_eq!(super::load(Some(3)).unwrap(), 3);
+    }
+}

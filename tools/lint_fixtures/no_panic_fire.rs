@@ -1,0 +1,13 @@
+// lint-fixture: zone=serving expect=no-panic@5,no-panic@6,no-panic@7,no-panic@10
+// A serving-zone fn full of panic-capable calls: each line fires once.
+
+fn load(v: Option<u32>, r: Result<u32, String>) -> u32 {
+    let a = v.unwrap();
+    let b = r.expect("must parse");
+    let c = if a > b { a } else { panic!("bad") };
+    let _ = c;
+    if a == 0 {
+        todo!("unhandled zero");
+    }
+    a
+}

@@ -1,0 +1,12 @@
+// lint-fixture: zone=default expect=
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn bump(c: &AtomicU64) -> u64 {
+    // ORDERING: Relaxed — monotone counter, nothing orders against it.
+    c.fetch_add(1, Ordering::Relaxed)
+}
+
+fn status(c: &AtomicU64) -> u64 {
+    c.load(Ordering::Acquire) // ORDERING: Acquire pairs with the writer's Release
+}

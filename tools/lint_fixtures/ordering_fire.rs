@@ -1,0 +1,7 @@
+// lint-fixture: zone=default expect=atomic-ordering@6
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}

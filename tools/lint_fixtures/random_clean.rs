@@ -1,0 +1,6 @@
+// lint-fixture: zone=kernel expect=
+
+fn jitter(seed: u64) -> u64 {
+    // Deterministic splitmix64 step — the seeded testutil::Rng idiom.
+    seed.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(31)
+}

@@ -1,0 +1,7 @@
+// lint-fixture: zone=kernel expect=no-randomness@4
+
+fn jitter() -> u64 {
+    let state = std::collections::hash_map::RandomState::new();
+    let _ = &state;
+    0
+}

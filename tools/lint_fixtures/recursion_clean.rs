@@ -1,0 +1,10 @@
+// lint-fixture: zone=serving expect=
+
+const MAX_DEPTH: usize = 64;
+
+fn descend(n: usize, depth: usize) -> Result<usize, String> {
+    if depth >= MAX_DEPTH {
+        return Err("too deep".to_string());
+    }
+    if n == 0 { Ok(0) } else { descend(n - 1, depth + 1) }
+}

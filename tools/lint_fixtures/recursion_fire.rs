@@ -1,0 +1,13 @@
+// lint-fixture: zone=serving expect=recursion-depth@3,recursion-depth@7
+
+fn descend(n: u32) -> u32 {
+    if n == 0 { 0 } else { descend(n - 1) + 1 }
+}
+
+fn ping(n: u32) -> u32 {
+    if n == 0 { 0 } else { pong(n - 1) }
+}
+
+fn pong(n: u32) -> u32 {
+    ping(n)
+}

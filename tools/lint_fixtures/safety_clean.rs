@@ -1,0 +1,6 @@
+// lint-fixture: zone=default expect=
+
+fn read_raw(p: *const u32) -> u32 {
+    // SAFETY: caller guarantees `p` is non-null, aligned, and live.
+    unsafe { *p }
+}

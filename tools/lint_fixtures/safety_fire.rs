@@ -1,0 +1,5 @@
+// lint-fixture: zone=default expect=safety-comment@4
+
+fn read_raw(p: *const u32) -> u32 {
+    unsafe { *p }
+}

@@ -1,0 +1,13 @@
+// lint-fixture: zone=serving expect=no-panic@12
+
+// lint:allow(no-indexing): every index below is bounded by the asserted len
+fn checked(buf: &[u8]) -> u8 {
+    assert!(buf.len() >= 4);
+    let a = buf[0] ^ buf[3];
+    let b = &buf[1..3];
+    a ^ b.iter().fold(0, |x, y| x ^ y)
+}
+
+fn still_fires(v: Option<u32>) -> u32 {
+    v.unwrap()
+}

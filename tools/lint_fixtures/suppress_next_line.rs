@@ -1,0 +1,10 @@
+// lint-fixture: zone=serving expect=no-indexing@7,no-indexing@8
+
+fn two(buf: &[u8]) -> u8 {
+    // lint:allow(no-indexing): caller guarantees at least one byte
+    let a = buf[0];
+    // The next index is NOT suppressed: the allow above named only line 5.
+    let b = buf[1];
+    let c = buf[2]; // lint:allow(no-panic): wrong rule name — no-indexing still fires
+    a ^ b ^ c
+}

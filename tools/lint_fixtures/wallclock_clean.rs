@@ -1,0 +1,7 @@
+// lint-fixture: zone=kernel expect=
+
+fn timed(run: impl FnOnce()) -> u64 {
+    let t0 = std::time::Instant::now(); // lint:allow(no-wallclock): instrumentation only
+    run();
+    t0.elapsed().as_nanos() as u64
+}

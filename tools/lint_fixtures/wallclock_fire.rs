@@ -1,0 +1,5 @@
+// lint-fixture: zone=kernel expect=no-wallclock@4
+
+fn stamp() -> u128 {
+    std::time::Instant::now().elapsed().as_nanos()
+}

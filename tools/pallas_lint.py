@@ -1,0 +1,799 @@
+#!/usr/bin/env python3
+"""pallas-lint: in-tree static invariant checker for the rust_pallas crate.
+
+Pure stdlib (the build/CI container for this repo has no Rust toolchain,
+so like `check_metrics_docs.py` this must run anywhere Python runs). It
+enforces, *statically*, the invariants the repo otherwise only checks at
+runtime in CI — every rule is grounded in a bug this repo actually
+shipped or a standing bit-identity contract (see docs/LINTS.md for the
+catalogue with motivating incidents):
+
+  panic-freedom   (serving zone)  no `.unwrap()` / `.expect()` /
+                                  `panic!` / `todo!` / `unreachable!` /
+                                  `unimplemented!`; no unchecked
+                                  `x[i]` / `x[i..j]` indexing
+  bit-determinism (kernel zones)  no float `max`/`min` (platform-
+                                  dependent NaN/−0 semantics — the PR 4
+                                  ReLU bug), no `mul_add` (contracts to
+                                  fused FMA on some targets), no
+                                  `HashMap`/`HashSet` (iteration order),
+                                  no wall clock / randomness outside
+                                  annotated timing instrumentation
+  unsafe hygiene  (everywhere)    every `unsafe` needs a `// SAFETY:`
+                                  comment; every atomic `Ordering::*`
+                                  use needs an `// ORDERING:` comment or
+                                  an allowlisted module
+  recursion bound (serving zone)  every (mutually) recursive function
+                                  must reference a depth-cap const (the
+                                  PR 8 unbounded-JSON-recursion fix,
+                                  generalized)
+
+Zones are mapped to rule sets by the manifest `tools/lint_manifest.json`.
+Suppressions: `// lint:allow(rule-a, rule-b): reason` — trailing on a
+line suppresses that line; on its own line it suppresses the next code
+line, or the entire item (fn/impl/mod/...) when the next line opens one.
+`#[cfg(test)]` / `#[test]` items are exempt from every rule.
+
+The checker is lexical, not type-aware. The lexer understands comments
+(nested block comments), string/char/byte/raw-string literals, and
+lifetimes, so rules never fire inside literals or prose; but it cannot
+see types, so (a) don't name your own methods `unwrap`/`expect`, and
+(b) the float-minmax rule keys on float literals and `f32::`/`f64::`
+paths, not inferred types.
+
+Usage:
+  python3 tools/pallas_lint.py              lint the repo (exit 1 on any hit)
+  python3 tools/pallas_lint.py --self-test  run the fixture corpus
+  python3 tools/pallas_lint.py --list-rules rule ids + one-line docs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MANIFEST = Path(__file__).resolve().parent / "lint_manifest.json"
+FIXTURES = Path(__file__).resolve().parent / "lint_fixtures"
+
+# ---------------------------------------------------------------------------
+# Lexer: split Rust source into a "code view" (comments and literal
+# contents blanked, structure preserved) plus per-line comment text.
+# ---------------------------------------------------------------------------
+
+
+class Lexed:
+    """Code view + comments of one source file.
+
+    `code[i]` is line i+1 with every comment and literal body replaced by
+    spaces (quote characters kept, so token boundaries survive);
+    `comments[i]` is the comment text on line i+1 ('' when none).
+    """
+
+    def __init__(self, code: list[str], comments: list[str]):
+        self.code = code
+        self.comments = comments
+
+
+def lex(src: str) -> Lexed:
+    lines = src.split("\n")
+    code_out: list[list[str]] = [list(" " * len(l)) for l in lines]
+    comment_out: list[list[str]] = [[] for _ in lines]
+
+    NORMAL, LINE_C, BLOCK_C, STR, RAWSTR, CHAR = range(6)
+    state = NORMAL
+    block_depth = 0
+    raw_hashes = 0
+
+    for ln, line in enumerate(lines):
+        i, n = 0, len(line)
+        if state == LINE_C:  # line comments never span lines
+            state = NORMAL
+        while i < n:
+            c = line[i]
+            nxt = line[i + 1] if i + 1 < n else ""
+            if state == NORMAL:
+                if c == "/" and nxt == "/":
+                    state = LINE_C
+                    comment_out[ln].append(line[i:])
+                    i = n
+                    continue
+                if c == "/" and nxt == "*":
+                    state = BLOCK_C
+                    block_depth = 1
+                    start = i
+                    i += 2
+                    # scan rest of line for nesting/close below
+                    while i < n and block_depth > 0:
+                        if line[i] == "/" and i + 1 < n and line[i + 1] == "*":
+                            block_depth += 1
+                            i += 2
+                        elif line[i] == "*" and i + 1 < n and line[i + 1] == "/":
+                            block_depth -= 1
+                            i += 2
+                        else:
+                            i += 1
+                    comment_out[ln].append(line[start:i])
+                    if block_depth == 0:
+                        state = NORMAL
+                    continue
+                if c == '"':
+                    code_out[ln][i] = '"'
+                    state = STR
+                    i += 1
+                    continue
+                # raw / byte string prefixes: r"  r#"  b"  br"  br#"
+                if (
+                    c in "rb"
+                    and (i == 0 or not (line[i - 1].isalnum() or line[i - 1] == "_"))
+                    and (m2 := re.match(r'(br#*"|r#*"|b")', line[i:]))
+                ):
+                    tok = m2.group(1)
+                    raw_hashes = tok.count("#")
+                    for k in range(len(tok)):
+                        code_out[ln][i + k] = tok[k]
+                    i += len(tok)
+                    # b"..." has normal escape processing; r/br are raw
+                    state = STR if tok == 'b"' else RAWSTR
+                    continue
+                if c == "'":
+                    # lifetime ('a, 'static) vs char literal ('x', '\n')
+                    if re.match(r"'\w+(?!')", line[i:]) and not re.match(r"'\w'", line[i:]):
+                        code_out[ln][i] = "'"
+                        i += 1
+                        continue
+                    code_out[ln][i] = "'"
+                    state = CHAR
+                    i += 1
+                    continue
+                code_out[ln][i] = c
+                i += 1
+            elif state == BLOCK_C:
+                start = i
+                while i < n and block_depth > 0:
+                    if line[i] == "/" and i + 1 < n and line[i + 1] == "*":
+                        block_depth += 1
+                        i += 2
+                    elif line[i] == "*" and i + 1 < n and line[i + 1] == "/":
+                        block_depth -= 1
+                        i += 2
+                    else:
+                        i += 1
+                comment_out[ln].append(line[start:i])
+                if block_depth == 0:
+                    state = NORMAL
+            elif state == STR:
+                if c == "\\":
+                    i += 2
+                    continue
+                if c == '"':
+                    code_out[ln][i] = '"'
+                    state = NORMAL
+                i += 1
+            elif state == RAWSTR:
+                end = '"' + "#" * raw_hashes
+                if line.startswith(end, i):
+                    for k in range(len(end)):
+                        code_out[ln][i + k] = end[k]
+                    i += len(end)
+                    state = NORMAL
+                else:
+                    i += 1
+            elif state == CHAR:
+                if c == "\\":
+                    i += 2
+                    continue
+                if c == "'":
+                    code_out[ln][i] = "'"
+                    state = NORMAL
+                i += 1
+        # unterminated STR/CHAR at EOL: real Rust won't do this; reset CHAR
+        if state == CHAR:
+            state = NORMAL
+
+    return Lexed(
+        ["".join(cs) for cs in code_out],
+        ["  ".join(parts) for parts in comment_out],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Structure: brace spans, items, #[cfg(test)] regions, suppressions.
+# ---------------------------------------------------------------------------
+
+ITEM_RE = re.compile(
+    r"^\s*(?:pub(?:\(\w+\))?\s+)?(?:unsafe\s+)?(?:const\s+|async\s+)?"
+    r"(?:fn|mod|impl|struct|enum|trait|union)\b"
+)
+ALLOW_RE = re.compile(r"lint:allow\(([a-z0-9_\-,\s]+)\)")
+
+
+def line_starts(code: list[str]) -> list[int]:
+    starts, pos = [], 0
+    for l in code:
+        starts.append(pos)
+        pos += len(l) + 1
+    return starts
+
+
+def pos_to_line(starts: list[int], pos: int) -> int:
+    """0-based line index of flat position `pos`."""
+    lo, hi = 0, len(starts) - 1
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if starts[mid] <= pos:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def matching_brace(flat: str, open_pos: int) -> int:
+    depth = 0
+    for i in range(open_pos, len(flat)):
+        if flat[i] == "{":
+            depth += 1
+        elif flat[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(flat) - 1
+
+
+def item_span(flat: str, starts: list[int], from_line: int) -> tuple[int, int] | None:
+    """(first_line, last_line) 0-based of the item whose header starts at
+    `from_line`: the span of the first `{...}` opening before a top-level
+    `;` (semicolons nested in `[u64; 4]`-style brackets don't end the
+    header; a bare `;` does — `struct Foo;`, trait method decls)."""
+    begin = starts[from_line]
+    nest = 0
+    for i in range(begin, len(flat)):
+        c = flat[i]
+        if c in "([<":
+            nest += 1
+        elif c in ")]>":
+            nest = max(0, nest - 1)
+        elif c == ";" and nest == 0:
+            return None
+        elif c == "{":
+            close = matching_brace(flat, i)
+            return from_line, pos_to_line(starts, close)
+    return None
+
+
+class FileCtx:
+    def __init__(self, rel: str, src: str):
+        self.rel = rel
+        self.lexed = lex(src)
+        self.code = self.lexed.code
+        self.comments = self.lexed.comments
+        self.flat = "\n".join(self.code)
+        self.starts = line_starts(self.code)
+        self.test_lines = self._test_regions()
+        self.suppress = self._suppressions()
+
+    # -- #[cfg(test)] / #[test] exemption -----------------------------------
+    def _test_regions(self) -> set[int]:
+        exempt: set[int] = set()
+        for ln, code in enumerate(self.code):
+            if "#[cfg(test)]" in code or "#[test]" in code or "#[cfg(all(test" in code:
+                # Skip further attribute lines, then span the next item.
+                j = ln + 1
+                while j < len(self.code) and (
+                    not self.code[j].strip() or self.code[j].lstrip().startswith("#[")
+                ):
+                    j += 1
+                span = item_span(self.flat, self.starts, j)
+                if span:
+                    exempt.update(range(span[0], span[1] + 1))
+        return exempt
+
+    # -- lint:allow(...) ----------------------------------------------------
+    def _suppressions(self) -> dict[int, set[str]]:
+        sup: dict[int, set[str]] = {}
+
+        def add(lines, rules):
+            for l in lines:
+                sup.setdefault(l, set()).update(rules)
+
+        for ln, comment in enumerate(self.comments):
+            m = ALLOW_RE.search(comment)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            if self.code[ln].strip():  # trailing: this line only
+                add([ln], rules)
+                continue
+            # Standalone: next code line; whole item if it opens one.
+            j = ln + 1
+            while j < len(self.code) and (
+                not self.code[j].strip() or self.code[j].lstrip().startswith("#[")
+            ):
+                j += 1
+            if j >= len(self.code):
+                continue
+            if ITEM_RE.match(self.code[j]):
+                span = item_span(self.flat, self.starts, j)
+                if span:
+                    add(range(span[0], span[1] + 1), rules)
+                    continue
+            add([j], rules)
+        return sup
+
+    def active(self, ln: int, rule: str) -> bool:
+        """Whether `rule` should fire on 0-based line `ln`."""
+        if ln in self.test_lines:
+            return False
+        return rule not in self.suppress.get(ln, set())
+
+    def comment_near(self, ln: int, tag: str, above: int = 4) -> bool:
+        """A comment containing `tag` on line `ln` or within `above` lines
+        up (not crossing a blank non-comment gap of code)."""
+        for j in range(ln, max(-1, ln - above - 1), -1):
+            if tag in self.comments[j]:
+                return True
+            # stop climbing once we pass a code-bearing line above ln
+            if j < ln and self.code[j].strip() and not self.comments[j]:
+                break
+        return False
+
+    # -- fn extraction for the recursion rule -------------------------------
+    def functions(self) -> list[tuple[str, int, int, str]]:
+        """(name, first_line, last_line, body) for every fn with a body."""
+        out = []
+        for m in re.finditer(r"\bfn\s+(\w+)", self.flat):
+            ln = pos_to_line(self.starts, m.start())
+            span = item_span(self.flat, self.starts, ln)
+            if span is None:
+                continue
+            open_pos = self.flat.find("{", m.start())
+            close = matching_brace(self.flat, open_pos)
+            out.append((m.group(1), span[0], span[1], self.flat[open_pos : close + 1]))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Rules.
+# ---------------------------------------------------------------------------
+
+
+class Violation:
+    def __init__(self, rel: str, line: int, rule: str, msg: str):
+        self.rel, self.line, self.rule, self.msg = rel, line, rule, msg
+
+    def __str__(self):
+        return f"{self.rel}:{self.line}: [{self.rule}] {self.msg}"
+
+
+RULES: dict[str, str] = {
+    "no-panic": "panic-capable call in a panic-free zone "
+    "(.unwrap/.expect/panic!/unreachable!/todo!/unimplemented!)",
+    "no-indexing": "unchecked x[i] / x[i..j] indexing in a panic-free zone "
+    "(the PR 8 b[i..i+4] slice-panic class)",
+    "recursion-depth": "recursive function without a depth-cap const "
+    "(the PR 8 unbounded-JSON-recursion class)",
+    "safety-comment": "unsafe without a // SAFETY: comment",
+    "atomic-ordering": "atomic Ordering::* without an // ORDERING: comment "
+    "(outside allowlisted modules)",
+    "float-minmax": "float max/min (platform-dependent NaN/-0 semantics; "
+    "the PR 4 f32::max ReLU class) — use an explicit select",
+    "no-mul-add": "mul_add/fma fuses rounding steps — bit-results differ "
+    "from mul-then-add",
+    "no-hash-collections": "HashMap/HashSet iteration order is "
+    "nondeterministic — use BTreeMap/BTreeSet or vectors",
+    "no-wallclock": "wall-clock read in a deterministic kernel zone "
+    "(annotate timing instrumentation with lint:allow)",
+    "no-randomness": "nondeterministic randomness in a kernel zone "
+    "(use the seeded testutil::Rng)",
+}
+
+PANIC_RE = re.compile(
+    r"\.\s*(unwrap|expect)\s*\(|\b(panic|unreachable|todo|unimplemented)\s*!"
+)
+ORDERING_RE = re.compile(r"\bOrdering::(Relaxed|Acquire|Release|AcqRel|SeqCst)\b")
+FLOAT_MINMAX_RE = re.compile(
+    r"\bf(?:32|64)::(?:max|min)\b"  # f32::max as a fn path
+    r"|\.\s*(?:max|min)\s*\(\s*-?(?:\d+\.\d*|\d+(?:f32|f64)\b|f(?:32|64)::)"  # .max(0.0)
+    r"|\d\.\d*(?:f32|f64)?\s*\.\s*(?:max|min)\s*\("  # 0.0f32.max(x)
+)
+MUL_ADD_RE = re.compile(r"\.\s*mul_add\s*\(|\bf(?:32|64)::mul_add\b")
+HASH_RE = re.compile(r"\bHash(?:Map|Set)\b")
+WALLCLOCK_RE = re.compile(r"\b(?:Instant|SystemTime)::now\b")
+RANDOM_RE = re.compile(r"\bthread_rng\b|\brand::|\bgetrandom\b|\bRandomState\b")
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+DEPTH_CONST_RE = re.compile(r"\b[A-Z][A-Z0-9_]*DEPTH[A-Z0-9_]*\b|\bMAX_DEPTH\b")
+
+# `x[`-style indexing: `[` immediately after an identifier char, `)` or
+# `]` (rustfmt never separates an index from its receiver, while type
+# positions like `mut [f32]` always have the space).
+INDEX_RE = re.compile(r"[\w\)\]]\[")
+
+
+def _scan(ctx: FileCtx, rule: str, rx: re.Pattern, msg) -> list[Violation]:
+    out = []
+    for ln, code in enumerate(ctx.code):
+        for m in rx.finditer(code):
+            if ctx.active(ln, rule):
+                out.append(Violation(ctx.rel, ln + 1, rule, msg(m)))
+            break  # one diagnostic per line per rule
+    return out
+
+
+def rule_no_panic(ctx: FileCtx) -> list[Violation]:
+    return _scan(
+        ctx,
+        "no-panic",
+        PANIC_RE,
+        lambda m: f"panic-capable `{m.group(0).strip()}` reachable from the serving "
+        "path — return a typed error instead",
+    )
+
+
+def rule_no_indexing(ctx: FileCtx) -> list[Violation]:
+    out = []
+    for ln, code in enumerate(ctx.code):
+        if not ctx.active(ln, "no-indexing"):
+            continue
+        if INDEX_RE.search(code):
+            out.append(
+                Violation(
+                    ctx.rel,
+                    ln + 1,
+                    "no-indexing",
+                    "unchecked index/slice can panic on a hostile length — "
+                    "use .get()/iterators, or prove the bound and add "
+                    "`// lint:allow(no-indexing): <why in-bounds>`",
+                )
+            )
+    return out
+
+
+def rule_recursion_depth(ctx: FileCtx) -> list[Violation]:
+    fns = ctx.functions()
+    by_name: dict[str, list[int]] = {}
+    for idx, (name, *_rest) in enumerate(fns):
+        by_name.setdefault(name, []).append(idx)
+
+    def callees(body: str) -> set[str]:
+        calls = set()
+        for m in re.finditer(r"(\w+)\s*\(", body):
+            name = m.group(1)
+            if name not in by_name:
+                continue
+            pre = body[: m.start(1)].rstrip()
+            # Method calls on receivers other than `self`, and paths on
+            # types other than `Self` (Vec::new, Arc::clone, ...), don't
+            # resolve to this file's fns; `fn name(` is a definition.
+            if pre.endswith(".") and not pre.endswith("self."):
+                continue
+            if pre.endswith("::") and not pre.endswith("Self::"):
+                continue
+            if re.search(r"\bfn$", pre):
+                continue
+            # Bare `drop(x)` is the std prelude fn, not `Drop::drop`.
+            if name == "drop" and not pre.endswith(("self.", "Self::")):
+                continue
+            calls.add(name)
+        return calls
+
+    graph: dict[int, set[int]] = {}
+    for idx, (_name, _s, _e, body) in enumerate(fns):
+        graph[idx] = {j for callee in callees(body) for j in by_name[callee]}
+
+    # Tarjan SCC, iterative.
+    index, low, onstack, stack = {}, {}, set(), []
+    sccs, counter = [], [0]
+
+    def strongconnect(v):
+        work = [(v, iter(sorted(graph[v])))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        onstack.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    onstack.add(w)
+                    work.append((w, iter(sorted(graph[w]))))
+                    advanced = True
+                    break
+                elif w in onstack:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                low[work[-1][0]] = min(low[work[-1][0]], low[node])
+            if low[node] == index[node]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    onstack.discard(w)
+                    comp.append(w)
+                    if w == node:
+                        break
+                sccs.append(comp)
+
+    for v in graph:
+        if v not in index:
+            strongconnect(v)
+
+    out = []
+    for comp in sccs:
+        cyclic = len(comp) > 1 or comp[0] in graph[comp[0]]
+        if not cyclic:
+            continue
+        if any(DEPTH_CONST_RE.search(fns[i][3]) for i in comp):
+            continue
+        names = ", ".join(sorted({fns[i][0] for i in comp}))
+        anchor = min(fns[i][1] for i in comp)
+        if ctx.active(anchor, "recursion-depth"):
+            out.append(
+                Violation(
+                    ctx.rel,
+                    anchor + 1,
+                    "recursion-depth",
+                    f"recursive cycle [{names}] has no depth-cap const "
+                    "(a SCREAMING_CASE *DEPTH* bound checked before "
+                    "recursing) — hostile input can overflow the stack",
+                )
+            )
+    return out
+
+
+def rule_safety_comment(ctx: FileCtx) -> list[Violation]:
+    out = []
+    for ln, code in enumerate(ctx.code):
+        if not UNSAFE_RE.search(code) or not ctx.active(ln, "safety-comment"):
+            continue
+        if ctx.comment_near(ln, "SAFETY:"):
+            continue
+        out.append(
+            Violation(
+                ctx.rel,
+                ln + 1,
+                "safety-comment",
+                "`unsafe` without a `// SAFETY:` comment in the 4 lines "
+                "above stating the invariant that makes it sound",
+            )
+        )
+    return out
+
+
+def rule_atomic_ordering(ctx: FileCtx, allowed: bool) -> list[Violation]:
+    if allowed:
+        return []
+    out = []
+    for ln, code in enumerate(ctx.code):
+        m = ORDERING_RE.search(code)
+        if not m or not ctx.active(ln, "atomic-ordering"):
+            continue
+        # `use std::sync::atomic::Ordering` import lines are fine.
+        if re.match(r"\s*(?:pub\s+)?use\b", code):
+            continue
+        if ctx.comment_near(ln, "ORDERING:"):
+            continue
+        out.append(
+            Violation(
+                ctx.rel,
+                ln + 1,
+                "atomic-ordering",
+                f"`{m.group(0)}` without an `// ORDERING:` comment "
+                "justifying the memory-order choice (or allowlist the "
+                "module in tools/lint_manifest.json)",
+            )
+        )
+    return out
+
+
+def rule_float_minmax(ctx: FileCtx) -> list[Violation]:
+    return _scan(
+        ctx,
+        "float-minmax",
+        FLOAT_MINMAX_RE,
+        lambda m: f"float `{m.group(0).strip()}` has platform/NaN-dependent "
+        "semantics — use an explicit `if a > b {{ a }} else {{ b }}` select "
+        "(the PR 4 ReLU bug class)",
+    )
+
+
+def rule_no_mul_add(ctx: FileCtx) -> list[Violation]:
+    return _scan(
+        ctx,
+        "no-mul-add",
+        MUL_ADD_RE,
+        lambda m: "`mul_add` fuses the rounding step — results differ "
+        "bitwise from mul-then-add; kernels must round like the "
+        "scalar reference",
+    )
+
+
+def rule_no_hash_collections(ctx: FileCtx) -> list[Violation]:
+    return _scan(
+        ctx,
+        "no-hash-collections",
+        HASH_RE,
+        lambda m: f"`{m.group(0)}` iteration order is nondeterministic — "
+        "accumulation over it breaks bit-identity; use BTreeMap/BTreeSet",
+    )
+
+
+def rule_no_wallclock(ctx: FileCtx) -> list[Violation]:
+    return _scan(
+        ctx,
+        "no-wallclock",
+        WALLCLOCK_RE,
+        lambda m: f"`{m.group(0)}` in a deterministic kernel zone — if this "
+        "is timing instrumentation whose value never feeds results, "
+        "annotate with `// lint:allow(no-wallclock): <why>`",
+    )
+
+
+def rule_no_randomness(ctx: FileCtx) -> list[Violation]:
+    return _scan(
+        ctx,
+        "no-randomness",
+        RANDOM_RE,
+        lambda m: f"`{m.group(0).strip()}` is nondeterministic — kernels "
+        "must use the seeded testutil::Rng",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Driver.
+# ---------------------------------------------------------------------------
+
+
+def load_manifest(path: Path) -> dict:
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def zone_for(rel: str, manifest: dict) -> dict | None:
+    for zone in manifest["zones"]:
+        for prefix in zone["paths"]:
+            if rel == prefix or rel.startswith(prefix):
+                return zone
+    return None
+
+
+def lint_file(rel: str, src: str, rules: list[str], manifest: dict) -> list[Violation]:
+    ctx = FileCtx(rel, src)
+    ordering_ok = rel in manifest.get("ordering_allowed", [])
+    out: list[Violation] = []
+    dispatch = {
+        "no-panic": lambda: rule_no_panic(ctx),
+        "no-indexing": lambda: rule_no_indexing(ctx),
+        "recursion-depth": lambda: rule_recursion_depth(ctx),
+        "safety-comment": lambda: rule_safety_comment(ctx),
+        "atomic-ordering": lambda: rule_atomic_ordering(ctx, ordering_ok),
+        "float-minmax": lambda: rule_float_minmax(ctx),
+        "no-mul-add": lambda: rule_no_mul_add(ctx),
+        "no-hash-collections": lambda: rule_no_hash_collections(ctx),
+        "no-wallclock": lambda: rule_no_wallclock(ctx),
+        "no-randomness": lambda: rule_no_randomness(ctx),
+    }
+    for rule in rules:
+        out.extend(dispatch[rule]())
+    return out
+
+
+def lint_tree(root: Path, manifest: dict) -> list[Violation]:
+    out: list[Violation] = []
+    seen: set[str] = set()
+    for zone in manifest["zones"]:
+        for prefix in zone["paths"]:
+            base = root / prefix
+            files = [base] if base.is_file() else sorted(base.rglob("*.rs"))
+            for f in files:
+                rel = f.relative_to(root).as_posix()
+                if rel in seen:
+                    continue
+                # first matching zone wins, even for overlapping prefixes
+                z = zone_for(rel, manifest)
+                if z is not zone:
+                    continue
+                seen.add(rel)
+                out.extend(
+                    lint_file(rel, f.read_text(encoding="utf-8"), z["rules"], manifest)
+                )
+    out.sort(key=lambda v: (v.rel, v.line, v.rule))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fixture self-test.
+# ---------------------------------------------------------------------------
+
+FIXTURE_PRAGMA = re.compile(r"lint-fixture:\s*zone=(\w+)\s*expect=([\w\-:,@]*)")
+
+
+def run_self_test(manifest: dict) -> int:
+    zones = {z["name"]: z for z in manifest["zones"]}
+    failures = 0
+    fixtures = sorted(FIXTURES.glob("*.rs"))
+    if not fixtures:
+        print(f"error: no fixtures found in {FIXTURES}", file=sys.stderr)
+        return 1
+    for fx in fixtures:
+        src = fx.read_text(encoding="utf-8")
+        m = FIXTURE_PRAGMA.search(src)
+        if not m:
+            print(f"FAIL {fx.name}: missing `lint-fixture:` pragma", file=sys.stderr)
+            failures += 1
+            continue
+        zone_name, expect_raw = m.group(1), m.group(2)
+        if zone_name not in zones:
+            print(f"FAIL {fx.name}: unknown zone {zone_name!r}", file=sys.stderr)
+            failures += 1
+            continue
+        expected = set()
+        for part in filter(None, expect_raw.split(",")):
+            rule, _, line = part.partition("@")
+            expected.add((rule, int(line)))
+        got = {
+            (v.rule, v.line)
+            for v in lint_file(fx.name, src, zones[zone_name]["rules"], manifest)
+        }
+        if got != expected:
+            failures += 1
+            print(f"FAIL {fx.name} (zone={zone_name})", file=sys.stderr)
+            for rule, line in sorted(expected - got):
+                print(f"  expected but did not fire: {rule}@{line}", file=sys.stderr)
+            for rule, line in sorted(got - expected):
+                print(f"  fired unexpectedly:        {rule}@{line}", file=sys.stderr)
+    total = len(fixtures)
+    if failures:
+        print(f"self-test: {failures}/{total} fixtures FAILED", file=sys.stderr)
+        return 1
+    print(f"self-test ok: {total} fixtures")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=REPO, help="repo root")
+    ap.add_argument("--manifest", type=Path, default=MANIFEST)
+    ap.add_argument("--self-test", action="store_true", help="run the fixture corpus")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args()
+
+    if args.list_rules:
+        for rule, doc in RULES.items():
+            print(f"{rule:22s} {doc}")
+        return 0
+
+    manifest = load_manifest(args.manifest)
+    rule_ids = {r for z in manifest["zones"] for r in z["rules"]}
+    unknown = rule_ids - set(RULES)
+    if unknown:
+        print(f"error: manifest names unknown rules: {sorted(unknown)}", file=sys.stderr)
+        return 2
+
+    if args.self_test:
+        return run_self_test(manifest)
+
+    violations = lint_tree(args.root, manifest)
+    for v in violations:
+        print(v)
+    if violations:
+        by_rule: dict[str, int] = {}
+        for v in violations:
+            by_rule[v.rule] = by_rule.get(v.rule, 0) + 1
+        summary = ", ".join(f"{r}×{n}" for r, n in sorted(by_rule.items()))
+        print(f"pallas-lint: {len(violations)} violation(s): {summary}", file=sys.stderr)
+        return 1
+    print("pallas-lint: ok (0 violations)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
