@@ -1,0 +1,29 @@
+//! Bench: error-certified serving — interval-certification probes on the
+//! bp32/p32/bp64 tiers (certified bound width vs observed quantization
+//! error, bit-pinned against the Python `Fraction` mirror) plus the
+//! serving overhead of `--certify-rate 16` sampling vs an uncertified
+//! twin. Emits `BENCH_certify.json` and enforces the containment,
+//! violation-counter, width-ratio, and transliteration-pin gates.
+//!
+//! Run: `cargo bench --bench certify`
+
+fn main() {
+    let opts = positron::cli::CertifyBenchOpts {
+        requests: 2048,
+        clients: 4,
+        certify_rate: 16,
+        small: false,
+        json: Some("BENCH_certify.json".to_string()),
+    };
+    match positron::cli::run_certify_bench(&opts) {
+        Ok(lines) => {
+            for l in lines {
+                println!("{l}");
+            }
+        }
+        Err(e) => {
+            eprintln!("certify-bench failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

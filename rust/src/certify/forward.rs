@@ -1,0 +1,183 @@
+//! Interval twin of the native serving forward pass.
+//!
+//! [`interval_forward`] mirrors the dense two-layer chain the native
+//! backend serves (`GEMM → bias + ReLU → GEMM`, see
+//! `coordinator::backend`) over [`Interval`] arithmetic, accumulating
+//! each output element in ascending input-index order — the same
+//! single-accumulator chain order as both `reference_forward` and the
+//! blocked GEMM microkernel (whose f32 fast path is bit-identical to
+//! the naive triple loop; CI's serve-bench parity gate holds the two
+//! together). Evaluation containment of the interval ops therefore
+//! brackets the *served* logits, and exact containment brackets the
+//! real-arithmetic result; both are proven in the Python mirror and
+//! pinned by the committed golden vectors.
+//!
+//! Weights enter as point intervals of their *dequantized* values (the
+//! certificate is with respect to the weights the model actually
+//! serves), activations as quantization hulls `[raw, staged]`.
+
+use super::interval::Interval;
+use crate::vector::lane::LaneElem;
+
+/// Dequantized model snapshot in the transposed layout the interval
+/// twin consumes: `w1t[i*d + p]` is layer-1 weight (input `p` → hidden
+/// `i`), `w2t[q*h + i]` is layer-2 weight (hidden `i` → logit `q`).
+/// Built once per backend from its encoded tensors (decode is cheap and
+/// happens off the hot path, only when certification is enabled).
+#[derive(Clone, Debug)]
+pub struct IntervalModel<E: LaneElem> {
+    d: usize,
+    h: usize,
+    c: usize,
+    w1t: Vec<E>,
+    b1: Vec<E>,
+    w2t: Vec<E>,
+    b2: Vec<E>,
+}
+
+impl<E: LaneElem> IntervalModel<E> {
+    /// Validates the shapes (`w1t: h×d`, `b1: h`, `w2t: c×h`, `b2: c`);
+    /// `None` on any mismatch so the forward pass can index safely.
+    pub fn new(
+        d: usize,
+        h: usize,
+        c: usize,
+        w1t: Vec<E>,
+        b1: Vec<E>,
+        w2t: Vec<E>,
+        b2: Vec<E>,
+    ) -> Option<Self> {
+        let shapes_ok = d > 0
+            && h > 0
+            && c > 0
+            && w1t.len() == d.checked_mul(h)?
+            && b1.len() == h
+            && w2t.len() == h.checked_mul(c)?
+            && b2.len() == c;
+        if !shapes_ok {
+            return None;
+        }
+        Some(IntervalModel { d, h, c, w1t, b1, w2t, b2 })
+    }
+
+    /// Input width (features per request).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Output width (logits per request).
+    pub fn c(&self) -> usize {
+        self.c
+    }
+}
+
+/// Runs the interval twin for one request. `xints` carries one interval
+/// per input feature (quantization hulls); returns one certified
+/// `[lo, hi]` per logit. A length mismatch yields all-poisoned bounds —
+/// fail closed, never panic.
+pub fn interval_forward<E: LaneElem>(
+    model: &IntervalModel<E>,
+    xints: &[Interval<E>],
+) -> Vec<Interval<E>> {
+    let (d, h, c) = (model.d, model.h, model.c);
+    if xints.len() != d {
+        return vec![Interval::poison(); c];
+    }
+    let mut hid: Vec<Interval<E>> = Vec::with_capacity(h);
+    for i in 0..h {
+        let mut acc = Interval::zero();
+        for (p, &x) in xints.iter().enumerate() {
+            acc = acc.add(Interval::point(model.w1t[i * d + p]).mul(x));
+        }
+        hid.push(acc.add(Interval::point(model.b1[i])).relu());
+    }
+    let mut out: Vec<Interval<E>> = Vec::with_capacity(c);
+    for q in 0..c {
+        let mut acc = Interval::zero();
+        for (i, &hv) in hid.iter().enumerate() {
+            acc = acc.add(Interval::point(model.w2t[q * h + i]).mul(hv));
+        }
+        out.push(acc.add(Interval::point(model.b2[q])));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    /// f32 reference chain in the same ascending order (the
+    /// reference_forward shape, transposed weights).
+    fn ref_chain32(m: &IntervalModel<f32>, x: &[f32]) -> Vec<f32> {
+        let (d, h, c) = (m.d, m.h, m.c);
+        let mut hid = vec![0.0f32; h];
+        for i in 0..h {
+            let mut acc = 0.0f32;
+            for p in 0..d {
+                acc += m.w1t[i * d + p] * x[p];
+            }
+            let v = acc + m.b1[i];
+            hid[i] = if v > 0.0 { v } else { 0.0 };
+        }
+        let mut out = vec![0.0f32; c];
+        for q in 0..c {
+            let mut acc = 0.0f32;
+            for i in 0..h {
+                acc += m.w2t[q * h + i] * hid[i];
+            }
+            out[q] = acc + m.b2[q];
+        }
+        out
+    }
+
+    fn synth(rng: &mut Rng, d: usize, h: usize, c: usize) -> IntervalModel<f32> {
+        let v = |rng: &mut Rng| (rng.f64() - 0.5) as f32 * 0.5;
+        let w1t: Vec<f32> = (0..d * h).map(|_| v(rng)).collect();
+        let b1: Vec<f32> = (0..h).map(|_| v(rng)).collect();
+        let w2t: Vec<f32> = (0..h * c).map(|_| v(rng)).collect();
+        let b2: Vec<f32> = (0..c).map(|_| v(rng)).collect();
+        IntervalModel::new(d, h, c, w1t, b1, w2t, b2).expect("shapes valid")
+    }
+
+    #[test]
+    fn new_rejects_shape_mismatches() {
+        assert!(IntervalModel::new(2, 2, 1, vec![0.0f32; 3], vec![0.0; 2], vec![0.0; 2], vec![0.0])
+            .is_none());
+        assert!(IntervalModel::new(0, 2, 1, vec![], vec![0.0f32; 2], vec![0.0; 2], vec![0.0])
+            .is_none());
+    }
+
+    #[test]
+    fn forward_brackets_f32_chain_over_input_hulls() {
+        let mut rng = Rng::new(0xF0A4);
+        let m = synth(&mut rng, 16, 12, 6);
+        for _ in 0..50 {
+            // A point input plus a nearby perturbed point; the hull
+            // interval must bracket the chain at both.
+            let x: Vec<f32> = (0..16).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            let xq: Vec<f32> =
+                x.iter().map(|&v| v + v * (rng.f64() as f32 - 0.5) * 1e-6).collect();
+            let xints: Vec<Interval<f32>> =
+                x.iter().zip(&xq).map(|(&a, &b)| Interval::hull(a, b)).collect();
+            let bounds = interval_forward(&m, &xints);
+            let at_x = ref_chain32(&m, &x);
+            let at_xq = ref_chain32(&m, &xq);
+            for j in 0..6 {
+                assert!(bounds[j].contains(at_x[j]), "logit {j} raw");
+                assert!(bounds[j].contains(at_xq[j]), "logit {j} staged");
+                let w = bounds[j].width_f64();
+                assert!(w.is_finite() && w > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn length_mismatch_fails_closed() {
+        let mut rng = Rng::new(1);
+        let m = synth(&mut rng, 4, 3, 2);
+        let bounds = interval_forward(&m, &[Interval::point(1.0f32); 3]);
+        assert_eq!(bounds.len(), 2);
+        assert!(bounds.iter().all(|b| b.is_poisoned()));
+    }
+}

@@ -1,0 +1,275 @@
+//! Directed-rounding interval arithmetic over the lane element types.
+//!
+//! An [`Interval<E>`] is a closed range `[lo, hi]` of `E` (f32 or f64)
+//! maintaining two invariants through every op:
+//!
+//! 1. **Exact containment** — the interval contains the exact
+//!    real-arithmetic result of the op applied to any reals drawn from
+//!    the operand intervals.
+//! 2. **Evaluation containment** — it also contains every
+//!    round-to-nearest-even evaluation of the op at width `E` over such
+//!    operands (the serving kernels evaluate in ascending-index order
+//!    at width `E`, so the interval twin of a kernel chain brackets the
+//!    served value bit-for-bit).
+//!
+//! Both follow from monotonicity of RNE plus one outward
+//! [`next_float`]/[`prev_float`] step per endpoint per op: for any
+//! real z, `prev(fl(z)) ≤ z ≤ next(fl(z))`. The Python mirror
+//! (`python/tests/test_certify_mirror.py`) proves both invariants
+//! against exact `Fraction` arithmetic; this file is its
+//! transliteration, pinned bit-for-bit by the committed golden chains.
+//!
+//! NaN semantics: any NaN (operand or a produced `inf − inf` /
+//! `0 × inf`) poisons the interval to `[NaN, NaN]`, which propagates
+//! and fails closed — a poisoned interval contains nothing and reports
+//! infinite width.
+//!
+//! [`next_float`]: crate::vector::lane::LaneElem::next_float
+//! [`prev_float`]: crate::vector::lane::LaneElem::prev_float
+
+use crate::vector::lane::LaneElem;
+
+/// A closed directed-rounding interval (see the module docs for the
+/// invariants). Construct via [`Interval::point`] / [`Interval::hull`];
+/// the poisoned interval is `[NaN, NaN]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval<E: LaneElem> {
+    /// Lower endpoint (≤ every contained value).
+    pub lo: E,
+    /// Upper endpoint (≥ every contained value).
+    pub hi: E,
+}
+
+impl<E: LaneElem> Interval<E> {
+    /// The additive-identity point interval `[0, 0]`.
+    #[inline(always)]
+    pub fn zero() -> Self {
+        Interval { lo: E::ZERO, hi: E::ZERO }
+    }
+
+    /// The poisoned interval `[NaN, NaN]`.
+    #[inline(always)]
+    pub fn poison() -> Self {
+        let nan = E::from_f64(f64::NAN);
+        Interval { lo: nan, hi: nan }
+    }
+
+    /// Degenerate interval at `v` (poisoned if `v` is NaN).
+    #[inline(always)]
+    pub fn point(v: E) -> Self {
+        if v.is_nan() {
+            return Self::poison();
+        }
+        Interval { lo: v, hi: v }
+    }
+
+    /// Smallest interval containing both `x` and `y` (the quantization
+    /// hull `[raw, quantized]` of a staged activation).
+    #[inline(always)]
+    pub fn hull(x: E, y: E) -> Self {
+        if x.is_nan() || y.is_nan() {
+            return Self::poison();
+        }
+        if x < y {
+            Interval { lo: x, hi: y }
+        } else {
+            Interval { lo: y, hi: x }
+        }
+    }
+
+    /// True when either endpoint is NaN.
+    #[inline(always)]
+    pub fn is_poisoned(self) -> bool {
+        self.lo.is_nan() || self.hi.is_nan()
+    }
+
+    /// Interval sum: endpoint-wise add, rounded outward.
+    #[inline(always)]
+    pub fn add(self, b: Self) -> Self {
+        if self.is_poisoned() || b.is_poisoned() {
+            return Self::poison();
+        }
+        let lo = self.lo + b.lo;
+        let hi = self.hi + b.hi;
+        if lo.is_nan() || hi.is_nan() {
+            // inf + -inf across mixed-sign endpoints
+            return Self::poison();
+        }
+        Interval { lo: lo.prev_float(), hi: hi.next_float() }
+    }
+
+    /// Interval difference: `[lo − b.hi, hi − b.lo]`, rounded outward.
+    #[inline(always)]
+    pub fn sub(self, b: Self) -> Self {
+        if self.is_poisoned() || b.is_poisoned() {
+            return Self::poison();
+        }
+        let lo = self.lo - b.hi;
+        let hi = self.hi - b.lo;
+        if lo.is_nan() || hi.is_nan() {
+            return Self::poison();
+        }
+        Interval { lo: lo.prev_float(), hi: hi.next_float() }
+    }
+
+    /// Interval product: extrema of the four corner products, rounded
+    /// outward. The corner scan keeps the FIRST extremum on ties with
+    /// explicit `<`/`>` compares (the kernel zone bans float
+    /// `min`/`max`), mirroring the Python mirror's loop exactly.
+    #[inline(always)]
+    pub fn mul(self, b: Self) -> Self {
+        if self.is_poisoned() || b.is_poisoned() {
+            return Self::poison();
+        }
+        let c = [self.lo * b.lo, self.lo * b.hi, self.hi * b.lo, self.hi * b.hi];
+        if c[0].is_nan() || c[1].is_nan() || c[2].is_nan() || c[3].is_nan() {
+            // 0 × inf at some corner
+            return Self::poison();
+        }
+        let mut lo = c[0];
+        let mut hi = c[0];
+        for &v in &c[1..] {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        Interval { lo: lo.prev_float(), hi: hi.next_float() }
+    }
+
+    /// Fused-shape multiply-add `self × b + c` as the mul-then-add
+    /// composition of the two audited ops (the kernel zone bans the fp
+    /// `mul_add`, and the serving kernels round the product and the sum
+    /// separately — composing keeps evaluation containment).
+    #[inline(always)]
+    pub fn mad(self, b: Self, c: Self) -> Self {
+        self.mul(b).add(c)
+    }
+
+    /// ReLU: clamps both endpoints at zero from below (exact — no
+    /// rounding, no outward step needed).
+    #[inline(always)]
+    pub fn relu(self) -> Self {
+        if self.is_poisoned() {
+            return Self::poison();
+        }
+        let lo = if self.lo > E::ZERO { self.lo } else { E::ZERO };
+        let hi = if self.hi > E::ZERO { self.hi } else { E::ZERO };
+        Interval { lo, hi }
+    }
+
+    /// Certified width: an f64 upper bound on `hi − lo` (one extra
+    /// `next_float` absorbs the f64 subtraction's own rounding when the
+    /// endpoints are f64). Poisoned or unbounded intervals report +∞ —
+    /// fail closed.
+    #[inline(always)]
+    pub fn width_f64(self) -> f64 {
+        if self.is_poisoned() {
+            return f64::INFINITY;
+        }
+        let w = self.hi.to_f64() - self.lo.to_f64();
+        if w.is_nan() || w.is_infinite() {
+            return f64::INFINITY;
+        }
+        w.next_float()
+    }
+
+    /// True when `v` lies inside the interval (poisoned intervals and
+    /// NaN probes contain nothing).
+    #[inline(always)]
+    pub fn contains(self, v: E) -> bool {
+        if self.is_poisoned() || v.is_nan() {
+            return false;
+        }
+        self.lo <= v && v <= self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn iv(lo: f32, hi: f32) -> Interval<f32> {
+        Interval { lo, hi }
+    }
+
+    #[test]
+    fn point_and_hull_orient_endpoints() {
+        let p = Interval::point(2.5f32);
+        assert_eq!((p.lo, p.hi), (2.5, 2.5));
+        let h = Interval::hull(3.0f32, -1.0);
+        assert_eq!((h.lo, h.hi), (-1.0, 3.0));
+        assert!(Interval::point(f32::NAN).is_poisoned());
+        assert!(Interval::hull(1.0f32, f32::NAN).is_poisoned());
+    }
+
+    #[test]
+    fn ops_contain_sampled_rne_results_f32() {
+        // Random operand intervals; every sampled endpoint-combination
+        // evaluation must land inside the op's result interval.
+        let mut rng = Rng::new(0xCE27);
+        for _ in 0..2000 {
+            let mk = |rng: &mut Rng| {
+                let a = (rng.f64() - 0.5) as f32 * 8.0;
+                let b = a + rng.f64() as f32 * 0.25;
+                Interval::hull(a, b)
+            };
+            let x = mk(&mut rng);
+            let y = mk(&mut rng);
+            let sum = x.add(y);
+            let dif = x.sub(y);
+            let prd = x.mul(y);
+            for &xa in &[x.lo, x.hi] {
+                for &ya in &[y.lo, y.hi] {
+                    assert!(sum.contains(xa + ya), "{xa} + {ya} vs {sum:?}");
+                    assert!(dif.contains(xa - ya), "{xa} - {ya} vs {dif:?}");
+                    assert!(prd.contains(xa * ya), "{xa} * {ya} vs {prd:?}");
+                }
+            }
+            let r = x.relu();
+            let clamped = if x.hi > 0.0 { x.hi } else { 0.0 };
+            assert!(r.contains(clamped));
+            assert!(r.lo >= 0.0);
+        }
+    }
+
+    #[test]
+    fn mad_matches_mul_then_add_composition() {
+        let a = iv(1.25, 1.5);
+        let b = iv(-2.0, 0.5);
+        let c = iv(0.125, 0.25);
+        assert_eq!(a.mad(b, c), a.mul(b).add(c));
+    }
+
+    #[test]
+    fn nan_poisoning_propagates_and_fails_closed() {
+        let p: Interval<f32> = Interval::poison();
+        let x = iv(1.0, 2.0);
+        assert!(p.add(x).is_poisoned());
+        assert!(x.mul(p).is_poisoned());
+        assert!(p.relu().is_poisoned());
+        assert!(!p.contains(1.5));
+        assert_eq!(p.width_f64(), f64::INFINITY);
+        // inf − inf inside an op poisons too.
+        let inf = iv(f32::INFINITY, f32::INFINITY);
+        let ninf = iv(f32::NEG_INFINITY, f32::NEG_INFINITY);
+        assert!(inf.add(ninf).is_poisoned());
+        // 0 × inf poisons.
+        assert!(iv(0.0, 0.0).mul(inf).is_poisoned());
+        // Unbounded (but not poisoned) intervals report infinite width.
+        assert_eq!(iv(0.0, f32::INFINITY).width_f64(), f64::INFINITY);
+    }
+
+    #[test]
+    fn width_upper_bounds_endpoint_gap_both_widths() {
+        let x = iv(1.0, 1.0 + 2.0 * f32::EPSILON);
+        let w = x.width_f64();
+        assert!(w >= (x.hi as f64 - x.lo as f64) && w.is_finite());
+        let y: Interval<f64> = Interval { lo: -1.0, hi: -1.0 + 1e-12 };
+        assert!(y.width_f64() >= 1e-12 - 1e-27);
+        assert_eq!(Interval::point(4.0f64).width_f64(), f64::from_bits(1));
+    }
+}

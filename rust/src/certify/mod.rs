@@ -1,0 +1,35 @@
+//! Error-certified serving: an interval-arithmetic twin of the native
+//! forward pass.
+//!
+//! The quantized serving tiers (bp32/bp64/p32) trade precision for the
+//! paper's hardware win; this module turns the resulting accuracy claim
+//! into a *measured, certified* property. [`interval`] carries a
+//! directed-rounding `Interval<E>` type (the `lo/hi` idiom of
+//! efloat.nim: every op rounds its lower endpoint one representable
+//! float down and its upper endpoint one up, so the interval always
+//! contains the exact real result and every round-to-nearest evaluation
+//! over its operands). [`forward`] runs the interval twin of the
+//! serving GEMM → bias + ReLU → GEMM chain: decoded weights enter as
+//! point intervals of their dequantized values, activations as their
+//! quantization hulls `[raw, quantized]`, and each output logit leaves
+//! with a certified `[lo, hi]` bound on the exact real-arithmetic
+//! result.
+//!
+//! The algorithms here are careful transliterations of the pure-stdlib
+//! Python mirror (`python/tests/test_certify_mirror.py`), which proves
+//! containment against exact `Fraction` arithmetic; the committed
+//! golden vectors (`rust/tests/data/certify_golden.json`) pin the two
+//! implementations together bit-for-bit. The serving integration — the
+//! deterministic 1-in-N sampling hook, metrics, and the `/infer` echo —
+//! lives in `coordinator::{backend,server}`; the width-vs-error
+//! tightness gates run in `positron certify-bench` (see
+//! docs/CERTIFY.md).
+//!
+//! This directory is a pallas-lint *kernel* zone: no float `min`/`max`,
+//! no `mul_add`, no wallclock, no randomness, no panics.
+
+pub mod forward;
+pub mod interval;
+
+pub use forward::{interval_forward, IntervalModel};
+pub use interval::Interval;

@@ -17,6 +17,10 @@
 //!                               /infer over a real listener)
 //! - `serve-bench`             — e2e native-serving benchmark with a logits
 //!                               parity gate, emitted as BENCH_serve_native.json
+//! - `certify-bench`           — interval-certification probes (bound width vs
+//!                               observed quantization error, bit-pinned against
+//!                               the Python mirror) + `--certify-rate` serving
+//!                               overhead, emitted as BENCH_certify.json
 //!
 //! Bench subcommands validate the output JSON path *before* running (a
 //! long bench that dies on the final write is wasted work) and report
@@ -54,6 +58,9 @@ pub struct ServeOpts {
     pub models: Vec<WeightFormat>,
     /// Per-tier admission budget override (`--max-inflight N`).
     pub max_inflight: Option<usize>,
+    /// Certify every Nth request per tier through the interval twin
+    /// (`--certify-rate N`; 0 = off).
+    pub certify_rate: usize,
 }
 
 /// `serve-bench` options.
@@ -63,6 +70,23 @@ pub struct ServeBenchOpts {
     pub clients: usize,
     pub format: WeightFormat,
     /// Small model + few requests: the CI smoke configuration.
+    pub small: bool,
+    pub json: Option<String>,
+}
+
+/// `certify-bench` options: interval-certification probes (bound width
+/// vs observed quantization error, transliteration-pinned) plus the
+/// serving overhead of `--certify-rate N` sampling.
+#[derive(Clone, Debug)]
+pub struct CertifyBenchOpts {
+    /// Requests for the serving-overhead section.
+    pub requests: usize,
+    pub clients: usize,
+    /// Sampling rate under test (certify every Nth request).
+    pub certify_rate: usize,
+    /// Small model + few requests: the CI smoke configuration. The
+    /// probes always run at full (tiny) size — only the overhead
+    /// section shrinks.
     pub small: bool,
     pub json: Option<String>,
 }
@@ -110,6 +134,7 @@ pub enum Command {
     SolverBench(SolverBenchOpts),
     Serve(ServeOpts),
     ServeBench(ServeBenchOpts),
+    CertifyBench(CertifyBenchOpts),
     Help,
 }
 
@@ -269,6 +294,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                 tracing: true,
                 models: Vec::new(),
                 max_inflight: None,
+                certify_rate: 0,
             };
             while let Some(a) = it.next() {
                 match a.as_str() {
@@ -305,6 +331,10 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
                     "--max-inflight" => {
                         let arg = it.next().ok_or("--max-inflight needs N")?;
                         o.max_inflight = Some(arg.parse().map_err(|e| e.to_string())?)
+                    }
+                    "--certify-rate" => {
+                        let arg = it.next().ok_or("--certify-rate needs N (0 = off)")?;
+                        o.certify_rate = arg.parse().map_err(|e| e.to_string())?
                     }
                     other => return Err(format!("serve: unknown flag {other}")),
                 }
@@ -366,6 +396,49 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
             }
             Ok(Command::ServeBench(o))
         }
+        "certify-bench" => {
+            let mut o = CertifyBenchOpts {
+                requests: 2048,
+                clients: 4,
+                certify_rate: 16,
+                small: false,
+                json: Some("BENCH_certify.json".to_string()),
+            };
+            let mut requests_explicit = false;
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--requests" => {
+                        let arg = it.next().ok_or("--requests needs N")?;
+                        o.requests = arg.parse().map_err(|e| e.to_string())?;
+                        requests_explicit = true;
+                    }
+                    "--clients" => {
+                        let arg = it.next().ok_or("--clients needs N")?;
+                        o.clients = arg.parse().map_err(|e| e.to_string())?
+                    }
+                    "--certify-rate" => {
+                        let arg = it.next().ok_or("--certify-rate needs N")?;
+                        o.certify_rate = arg.parse().map_err(|e| e.to_string())?
+                    }
+                    "--small" => o.small = true,
+                    "--json" => o.json = Some(it.next().ok_or("--json needs a path")?.clone()),
+                    "--no-json" => o.json = None,
+                    other => return Err(format!("certify-bench: unknown flag {other}")),
+                }
+            }
+            if o.small && !requests_explicit {
+                o.requests = o.requests.min(256);
+            }
+            if o.requests == 0 || o.clients == 0 {
+                return Err("certify-bench: --requests and --clients must be positive".into());
+            }
+            if o.certify_rate == 0 {
+                return Err("certify-bench: --certify-rate must be positive (it measures \
+                            the cost of sampling)"
+                    .into());
+            }
+            Ok(Command::CertifyBench(o))
+        }
         other => Err(format!("unknown command {other}; try help")),
     }
 }
@@ -426,7 +499,7 @@ COMMANDS:
                              counts; writes BENCH_solver.json by default
   serve [--requests N] [--artifacts DIR] [--backend native|pjrt]
         [--format bp32|f32|bp64] [--http ADDR:PORT] [--deadline-ms N] [--synthetic]
-        [--no-tracing] [--models f32,bp64|all] [--max-inflight N]
+        [--no-tracing] [--models f32,bp64|all] [--max-inflight N] [--certify-rate N]
                              inference server on the in-tree native backend
                              (default; needs only weights.json) or PJRT;
                              --http serves POST /v1/infer/<model>,
@@ -439,7 +512,10 @@ COMMANDS:
                              sets the per-tier admission budget;
                              --synthetic serves a deterministic model with
                              no artifacts; --no-tracing turns span
-                             retention off (histograms stay on)
+                             retention off (histograms stay on);
+                             --certify-rate N runs every Nth request
+                             through the interval twin (per-request
+                             certified logit error bounds; docs/CERTIFY.md)
   serve-bench [--requests N] [--clients N] [--format bp32|f32|bp64] [--small]
         [--json PATH | --no-json]
                              e2e native serving bench: in-process + HTTP
@@ -451,6 +527,20 @@ COMMANDS:
                              baseline, and a connections × batch ×
                              deadline scaling sweep; writes
                              BENCH_serve_native.json by default
+  certify-bench [--requests N] [--clients N] [--certify-rate N] [--small]
+        [--json PATH | --no-json]
+                             error-certification bench: per-tier interval
+                             probes (bp32/p32/bp64) on coherent-rounding
+                             models — certified bound width within 10x of
+                             the observed quantization error (bp64:
+                             absolute width gate), every served logit
+                             inside its bound, and the computed widths
+                             bit-compared against constants pinned by the
+                             Python Fraction mirror; plus serving
+                             throughput at --certify-rate N (default 16)
+                             vs uncertified with the violation counter
+                             (must stay 0); writes BENCH_certify.json by
+                             default
   help                       this message
 ";
 
@@ -1625,6 +1715,408 @@ pub fn run_serve_bench(o: &ServeBenchOpts) -> Result<Vec<String>, String> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// certify-bench: the error-certification benchmark.
+// ---------------------------------------------------------------------------
+
+/// Exact f64 bits of the (max_width, max_obs_err) each probe must
+/// produce, pinned by the pure-Python `Fraction` mirror
+/// (python/tests/test_certify_mirror.py `BENCH_EXPECT`). The Rust probes
+/// below are transliterations of the mirror's, so bit-equality IS the
+/// correctness test — any drift in the RNG stream, draw order, rounding
+/// chain, or interval ops shows up as a hard bench failure.
+const CERTIFY_EXPECT_BP32: (u64, u64) = (0x4537000000000001, 0x451019777F000000);
+const CERTIFY_EXPECT_P32: (u64, u64) = (0x462734AC00000001, 0x462473A1E1CAB670);
+const CERTIFY_EXPECT_BP64: u64 = 0x3D30C00000000001;
+
+/// Exact power of two as f64 (valid for the normal exponent range; the
+/// probes use 2^100, 2^79, 2^-18). Spelled via bits so the constant is
+/// exact by construction, matching the mirror's `2.0**e`.
+fn pow2(e: i32) -> f64 {
+    f64::from_bits(((1023 + e) as u64) << 52)
+}
+
+/// Mirror of the probe's `ref_forward32`: the f32 ascending-p chain
+/// (mul-round, add-round per term; explicit-compare ReLU) over
+/// transposed weights — the same op order `run_lane_tier` is CI-gated
+/// bit-identical to.
+fn probe_forward32(
+    w1t: &[f32],
+    b1: &[f32],
+    w2t: &[f32],
+    b2: &[f32],
+    x: &[f32],
+    d: usize,
+    h: usize,
+    c: usize,
+) -> Vec<f32> {
+    let mut hid = vec![0f32; h];
+    for i in 0..h {
+        let mut acc = 0f32;
+        for p in 0..d {
+            acc += w1t[i * d + p] * x[p];
+        }
+        let v = acc + b1[i];
+        hid[i] = if v > 0.0 { v } else { 0.0 };
+    }
+    let mut out = vec![0f32; c];
+    for q in 0..c {
+        let mut acc = 0f32;
+        for i in 0..h {
+            acc += w2t[q * h + i] * hid[i];
+        }
+        out[q] = acc + b2[q];
+    }
+    out
+}
+
+/// Mirror of the probe's `ref_forward64`: the f64 chain over the same
+/// (f32-valued) weights — the full-precision reference whose distance
+/// from the served f32/quantized logits is the "observed error".
+fn probe_forward64(
+    w1t: &[f32],
+    b1: &[f32],
+    w2t: &[f32],
+    b2: &[f32],
+    x: &[f64],
+    d: usize,
+    h: usize,
+    c: usize,
+) -> Vec<f64> {
+    let mut hid = vec![0f64; h];
+    for i in 0..h {
+        let mut acc = 0f64;
+        for p in 0..d {
+            acc += w1t[i * d + p] as f64 * x[p];
+        }
+        let v = acc + b1[i];
+        hid[i] = if v > 0.0 { v } else { 0.0 };
+    }
+    let mut out = vec![0f64; c];
+    for q in 0..c {
+        let mut acc = 0f64;
+        for i in 0..h {
+            acc += w2t[q * h + i] as f64 * hid[i];
+        }
+        out[q] = acc + b2[q];
+    }
+    out
+}
+
+/// One 32-bit-tier probe: a positive-weight model at f32 exponent t=100
+/// (inside BP32's rounding band), inputs built as an 18-bit-fraction
+/// grid point plus a sub-half-ulp offset so every quantization rounds
+/// DOWN. Coherent rounding + positive weights = no error cancellation,
+/// so the observed quantization error tracks the certified width and the
+/// <10x tightness gate has real margin. Returns
+/// `(max_width, max_obs_err, contained)`.
+fn certify_probe32(quant: impl Fn(f32) -> f32) -> Result<(f64, f64, bool), String> {
+    use crate::certify::{interval_forward, Interval, IntervalModel};
+    use crate::testutil::Rng;
+
+    let (d, h, c) = (4usize, 4usize, 3usize);
+    let t = 100i32;
+    let mut rng = Rng::new(5);
+    // Draw order is the mirror's: w1t, b1, w2t, b2, then per-request
+    // inputs (two draws each: grid point, offset).
+    let scale = pow2(t);
+    let w1t: Vec<f32> = (0..d * h).map(|_| (0.3 + 0.7 * rng.f64()) as f32).collect();
+    let b1: Vec<f32> = (0..h).map(|_| (rng.f64() * 0.05 * scale) as f32).collect();
+    let w2t: Vec<f32> = (0..h * c).map(|_| (0.3 + 0.7 * rng.f64()) as f32).collect();
+    let b2: Vec<f32> = (0..c).map(|_| (rng.f64() * 0.05 * scale) as f32).collect();
+    let model =
+        IntervalModel::<f32>::new(d, h, c, w1t.clone(), b1.clone(), w2t.clone(), b2.clone())
+            .ok_or("certify-bench: probe model shapes rejected")?;
+
+    let (mut max_w, mut max_e, mut contained) = (0f64, 0f64, true);
+    for _ in 0..64 {
+        let x_raw: Vec<f32> = (0..d)
+            .map(|_| {
+                let g = ((1.0 + rng.below(1 << 18) as f64 * pow2(-18)) * pow2(t)) as f32;
+                let off = ((0.40 + 0.05 * rng.f64()) * pow2(t - 21)) as f32;
+                g + off
+            })
+            .collect();
+        let x_q: Vec<f32> = x_raw.iter().map(|&v| quant(v)).collect();
+        let xints: Vec<Interval<f32>> =
+            x_raw.iter().zip(&x_q).map(|(&r, &q)| Interval::hull(r, q)).collect();
+        let bounds = interval_forward(&model, &xints);
+        let served = probe_forward32(&w1t, &b1, &w2t, &b2, &x_q, d, h, c);
+        let x64: Vec<f64> = x_raw.iter().map(|&v| v as f64).collect();
+        let refd = probe_forward64(&w1t, &b1, &w2t, &b2, &x64, d, h, c);
+        for j in 0..c {
+            let b = &bounds[j];
+            let (lo, hi) = (b.lo as f64, b.hi as f64);
+            let s = served[j] as f64;
+            let r = refd[j];
+            if b.is_poisoned() || !(lo <= s && s <= hi && lo <= r && r <= hi) {
+                contained = false;
+            }
+            let w = b.width_f64();
+            let e = (s - r).abs();
+            if w > max_w {
+                max_w = w;
+            }
+            if e > max_e {
+                max_e = e;
+            }
+        }
+    }
+    Ok((max_w, max_e, contained))
+}
+
+/// The BP64 probe: quantization of normal f64 is exact, so the input
+/// hull collapses to a point and the certified width is pure
+/// directed-rounding accumulation — gated absolutely (< 1e-9), not
+/// relative to observed error. Returns `(max_width, contained)`.
+fn certify_probe64() -> Result<(f64, bool), String> {
+    use crate::certify::{interval_forward, Interval, IntervalModel};
+    use crate::testutil::Rng;
+    use crate::vector::lane::LaneElem;
+
+    let (d, h, c) = (16usize, 12usize, 6usize);
+    let mut rng = Rng::new(5);
+    let w1t: Vec<f32> = (0..d * h).map(|_| (rng.f64() - 0.5) as f32).collect();
+    let b1: Vec<f32> = (0..h).map(|_| ((rng.f64() - 0.5) * 0.2) as f32).collect();
+    let w2t: Vec<f32> = (0..h * c).map(|_| (rng.f64() - 0.5) as f32).collect();
+    let b2: Vec<f32> = (0..c).map(|_| ((rng.f64() - 0.5) * 0.2) as f32).collect();
+    let widen = |v: &[f32]| v.iter().map(|&x| x as f64).collect::<Vec<f64>>();
+    let model = IntervalModel::<f64>::new(d, h, c, widen(&w1t), widen(&b1), widen(&w2t), widen(&b2))
+        .ok_or("certify-bench: bp64 probe model shapes rejected")?;
+
+    let (mut max_w, mut contained) = (0f64, true);
+    for _ in 0..32 {
+        let x: Vec<f64> = (0..d).map(|_| (rng.f64() - 0.5) * 8.0).collect();
+        for &v in &x {
+            // The tier's soundness premise: BP64 encodes normal f64
+            // exactly. A non-roundtripping input would break it.
+            let q = <f64 as LaneElem>::bp_decode_lane(<f64 as LaneElem>::bp_encode_lane(v));
+            if q != v {
+                contained = false;
+            }
+        }
+        let xints: Vec<Interval<f64>> = x.iter().map(|&v| Interval::point(v)).collect();
+        let bounds = interval_forward(&model, &xints);
+        let served = probe_forward64(&w1t, &b1, &w2t, &b2, &x, d, h, c);
+        for j in 0..c {
+            let b = &bounds[j];
+            if b.is_poisoned() || !(b.lo <= served[j] && served[j] <= b.hi) {
+                contained = false;
+            }
+            let w = b.width_f64();
+            if w > max_w {
+                max_w = w;
+            }
+        }
+    }
+    Ok((max_w, contained))
+}
+
+/// Execute `certify-bench`: the error-certified-serving benchmark.
+///
+/// 1. **Probes** — deterministic interval-certification runs on three
+///    tiers (bp32 and p32 quantization hulls at f32 width; bp64 point
+///    inputs at f64 width). Hard gates: every served logit inside its
+///    bound; bp32/p32 `max_width / max_obs_err < 10` (the bound is a
+///    working error estimate, not just sound); bp64 `max_width < 1e-9`;
+///    and the computed widths/errors **bit-equal** the constants the
+///    Python `Fraction` mirror pinned — the transliteration check.
+/// 2. **Serving overhead** — closed-loop throughput of a bp32 server
+///    with `--certify-rate N` vs an uncertified twin (interleaved
+///    rounds, best-of, like serve-bench's tracing section), plus the
+///    sampled-response contract: exactly every Nth sequential request
+///    echoes a finite `certified_error_bound`, and
+///    `positron_certify_violations_total` stays 0 (hard gate).
+///
+/// Writes `BENCH_certify.json` before gating, so a failed run still
+/// leaves the evidence on disk. Shared by the CLI and the `certify`
+/// bench target; CI runs `certify-bench --small` and additionally gates
+/// `certify_overhead_pct < 5`.
+pub fn run_certify_bench(o: &CertifyBenchOpts) -> Result<Vec<String>, String> {
+    use crate::coordinator::{backend, InferenceServer, ServerConfig};
+    use crate::vector::lane::LaneElem;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    if let Some(path) = &o.json {
+        ensure_json_writable(path)?;
+    }
+    let mut out = Vec::new();
+
+    // 1. Probes (always full size — they are tiny and bit-pinned).
+    let bp32 = certify_probe32(|v| {
+        <f32 as LaneElem>::bp_decode_lane(<f32 as LaneElem>::bp_encode_lane(v))
+    })?;
+    let p32 = certify_probe32(|v| {
+        <f32 as LaneElem>::pstd_decode_lane(<f32 as LaneElem>::pstd_encode_lane(v))
+    })?;
+    let bp64 = certify_probe64()?;
+    let ratio32 = bp32.0 / bp32.1;
+    let ratio_p32 = p32.0 / p32.1;
+    out.push(format!(
+        "probe bp32: max width {:.4e} vs max observed err {:.4e} (ratio {:.4}), contained: {}",
+        bp32.0,
+        bp32.1,
+        ratio32,
+        if bp32.2 { "yes" } else { "NO — BUG" }
+    ));
+    out.push(format!(
+        "probe p32:  max width {:.4e} vs max observed err {:.4e} (ratio {:.4}), contained: {}",
+        p32.0,
+        p32.1,
+        ratio_p32,
+        if p32.2 { "yes" } else { "NO — BUG" }
+    ));
+    out.push(format!(
+        "probe bp64: max width {:.4e} (absolute gate < 1e-9), contained: {}",
+        bp64.0,
+        if bp64.1 { "yes" } else { "NO — BUG" }
+    ));
+    let pinned = bp32.0.to_bits() == CERTIFY_EXPECT_BP32.0
+        && bp32.1.to_bits() == CERTIFY_EXPECT_BP32.1
+        && p32.0.to_bits() == CERTIFY_EXPECT_P32.0
+        && p32.1.to_bits() == CERTIFY_EXPECT_P32.1
+        && bp64.0.to_bits() == CERTIFY_EXPECT_BP64;
+    out.push(format!(
+        "probe widths bit-equal the Python-mirror pins: {}",
+        if pinned { "yes" } else { "NO — transliteration drift" }
+    ));
+
+    // 2. Serving overhead + the sampled-response/violation contract.
+    let (d, h, c, batch) = if o.small { (16, 24, 8, 32) } else { (64, 128, 16, 64) };
+    let w = backend::synth_weights(d, h, c, batch, 0xCE47);
+    let mk = |rate: usize| -> Result<Arc<InferenceServer>, String> {
+        let cfg = ServerConfig::builder()
+            .format(backend::WeightFormat::Bp32)
+            .max_wait(Duration::from_micros(500))
+            .certify_rate(rate)
+            .build()
+            .map_err(|e| format!("{e:#}"))?;
+        Ok(Arc::new(InferenceServer::start_native(w.clone(), cfg).map_err(|e| format!("{e:#}"))?))
+    };
+    let certified = mk(o.certify_rate)?;
+    let plain = mk(0)?;
+
+    // Echo contract on sequential requests: exactly every Nth response
+    // carries a finite certified bound; the uncertified server never does.
+    let mut echo_ok = true;
+    let mut echoed = 0usize;
+    for i in 0..2 * o.certify_rate {
+        let g = i % batch;
+        let feats = w.golden_x[g * d..(g + 1) * d].to_vec();
+        let resp = certified.infer(feats.clone()).map_err(|e| format!("{e:#}"))?;
+        match resp.certified_error_bound {
+            Some(width) => {
+                echoed += 1;
+                echo_ok &= width.is_finite() && width > 0.0;
+                echo_ok &= (i + 1) % o.certify_rate == 0;
+            }
+            None => echo_ok &= (i + 1) % o.certify_rate != 0,
+        }
+        echo_ok &= plain.infer(feats).map_err(|e| format!("{e:#}"))?.certified_error_bound.is_none();
+    }
+    echo_ok &= echoed == 2;
+    out.push(format!(
+        "sampled responses echo finite certified_error_bound (every {}th of {} sequential): {}",
+        o.certify_rate,
+        2 * o.certify_rate,
+        if echo_ok { "yes" } else { "NO — BUG" }
+    ));
+
+    // Interleaved best-of rounds so scheduler noise doesn't masquerade
+    // as certification cost.
+    let (mut best_cert, mut best_plain) = (0.0f64, 0.0f64);
+    for _ in 0..2 {
+        let (_, r_cert) = closed_loop(&certified, &w, o.clients, o.requests);
+        let (_, r_plain) = closed_loop(&plain, &w, o.clients, o.requests);
+        best_cert = best_cert.max(r_cert);
+        best_plain = best_plain.max(r_plain);
+    }
+    let overhead_pct = (best_plain - best_cert) / best_plain.max(1e-9) * 100.0;
+    let snap = certified.metrics().snapshot();
+    let plain_snap = plain.metrics().snapshot();
+    let violations = snap.certify_violations + plain_snap.certify_violations;
+    out.push(format!(
+        "certify overhead at rate {}: {best_cert:.0} req/s certified vs {best_plain:.0} req/s \
+         uncertified ({overhead_pct:+.2}%); {} requests certified, {violations} violations",
+        o.certify_rate, snap.certified_requests
+    ));
+    let plain_clean = plain_snap.certified_requests == 0;
+
+    let containment = bp32.2 && p32.2 && bp64.1;
+    if let Some(path) = &o.json {
+        let json = format!(
+            "{{\"bench\":\"certify\",\"small\":{},\"certify_rate\":{},\"requests\":{},\
+             \"clients\":{},\"probes\":{{\
+             \"bp32\":{{\"max_width\":{},\"max_width_bits\":\"{:016x}\",\"max_obs_err\":{},\
+             \"max_obs_err_bits\":\"{:016x}\",\"ratio\":{:.4},\"contained\":{}}},\
+             \"p32\":{{\"max_width\":{},\"max_width_bits\":\"{:016x}\",\"max_obs_err\":{},\
+             \"max_obs_err_bits\":\"{:016x}\",\"ratio\":{:.4},\"contained\":{}}},\
+             \"bp64\":{{\"max_width\":{},\"max_width_bits\":\"{:016x}\",\"contained\":{}}}}},\
+             \"pinned\":{pinned},\"containment\":{containment},\"echo_ok\":{echo_ok},\
+             \"certified_requests\":{},\"violations\":{violations},\
+             \"req_per_s_certified\":{best_cert:.1},\"req_per_s_uncertified\":{best_plain:.1},\
+             \"certify_overhead_pct\":{overhead_pct:.2}}}",
+            o.small,
+            o.certify_rate,
+            o.requests,
+            o.clients,
+            json_f64(bp32.0),
+            bp32.0.to_bits(),
+            json_f64(bp32.1),
+            bp32.1.to_bits(),
+            ratio32,
+            bp32.2,
+            json_f64(p32.0),
+            p32.0.to_bits(),
+            json_f64(p32.1),
+            p32.1.to_bits(),
+            ratio_p32,
+            p32.2,
+            json_f64(bp64.0),
+            bp64.0.to_bits(),
+            bp64.1,
+            snap.certified_requests,
+        );
+        std::fs::write(path, &json).map_err(|e| format!("write {path}: {e}"))?;
+        out.push(format!("wrote {path}"));
+    }
+
+    // Hard gates, after the JSON so a failure leaves evidence.
+    if !containment {
+        return Err("certify-bench: a served logit escaped its certified bound".into());
+    }
+    if violations != 0 {
+        return Err(format!(
+            "certify-bench: positron_certify_violations_total = {violations} (must be 0)"
+        ));
+    }
+    if !pinned {
+        return Err(format!(
+            "certify-bench: probe widths drifted from the Python-mirror pins \
+             (bp32 {:016x}/{:016x}, p32 {:016x}/{:016x}, bp64 {:016x})",
+            bp32.0.to_bits(),
+            bp32.1.to_bits(),
+            p32.0.to_bits(),
+            p32.1.to_bits(),
+            bp64.0.to_bits()
+        ));
+    }
+    if !(ratio32 < 10.0 && ratio_p32 < 10.0) {
+        return Err(format!(
+            "certify-bench: width/error ratio gate failed (bp32 {ratio32:.3}, p32 {ratio_p32:.3}, \
+             must be < 10)"
+        ));
+    }
+    if !(bp64.0 > 0.0 && bp64.0 < 1e-9) {
+        return Err(format!("certify-bench: bp64 width {:.3e} outside (0, 1e-9)", bp64.0));
+    }
+    if !echo_ok || !plain_clean {
+        return Err("certify-bench: certified_error_bound echo contract broken".into());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1719,6 +2211,15 @@ mod tests {
             ..SolverBenchOpts::default()
         };
         let err = run_solver_bench(&o).unwrap_err();
+        assert!(err.contains(bad), "{err}");
+        let o = CertifyBenchOpts {
+            requests: 8,
+            clients: 1,
+            certify_rate: 4,
+            small: true,
+            json: Some(bad.to_string()),
+        };
+        let err = run_certify_bench(&o).unwrap_err();
         assert!(err.contains(bad), "{err}");
     }
 
@@ -1870,6 +2371,97 @@ mod tests {
             }
         }
         assert!(parse(&["serve-bench".into(), "--requests".into(), "0".into()]).is_err());
+    }
+
+    #[test]
+    fn parse_certify_bench_flags() {
+        let parse_cb = |args: &[&str]| {
+            let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            parse(&v)
+        };
+        match parse_cb(&["certify-bench"]).unwrap() {
+            Command::CertifyBench(o) => {
+                assert_eq!(o.certify_rate, 16);
+                assert_eq!(o.json.as_deref(), Some("BENCH_certify.json"));
+                assert!(!o.small);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        match parse_cb(&["certify-bench", "--small", "--certify-rate", "8", "--no-json"]).unwrap()
+        {
+            Command::CertifyBench(o) => {
+                assert!(o.small);
+                assert_eq!(o.certify_rate, 8);
+                assert!(o.json.is_none());
+                assert!(o.requests <= 256);
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        // --small composes with an explicit --requests flag-order-free.
+        match parse_cb(&["certify-bench", "--requests", "999", "--small"]).unwrap() {
+            Command::CertifyBench(o) => assert_eq!(o.requests, 999),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        assert!(parse_cb(&["certify-bench", "--certify-rate", "0"]).is_err());
+        assert!(parse_cb(&["certify-bench", "--requests", "0"]).is_err());
+        assert!(parse_cb(&["certify-bench", "--bogus"]).is_err());
+        // serve grew the matching knob.
+        match parse_cb(&["serve", "--certify-rate", "32"]).unwrap() {
+            Command::Serve(o) => assert_eq!(o.certify_rate, 32),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        match parse_cb(&["serve"]).unwrap() {
+            Command::Serve(o) => assert_eq!(o.certify_rate, 0),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+    }
+
+    /// The transliteration contract: the Rust probes must reproduce the
+    /// Python Fraction-mirror's pinned (max_width, max_obs_err) bits
+    /// exactly (python/tests/test_certify_mirror.py BENCH_EXPECT).
+    #[test]
+    fn certify_probes_match_python_mirror_pins() {
+        use crate::vector::lane::LaneElem;
+        let (w, e, contained) = certify_probe32(|v| {
+            <f32 as LaneElem>::bp_decode_lane(<f32 as LaneElem>::bp_encode_lane(v))
+        })
+        .unwrap();
+        assert!(contained, "bp32 probe containment");
+        assert_eq!(w.to_bits(), CERTIFY_EXPECT_BP32.0, "bp32 width {:016x}", w.to_bits());
+        assert_eq!(e.to_bits(), CERTIFY_EXPECT_BP32.1, "bp32 err {:016x}", e.to_bits());
+        assert!(w / e < 10.0, "bp32 ratio {}", w / e);
+
+        let (w, e, contained) = certify_probe32(|v| {
+            <f32 as LaneElem>::pstd_decode_lane(<f32 as LaneElem>::pstd_encode_lane(v))
+        })
+        .unwrap();
+        assert!(contained, "p32 probe containment");
+        assert_eq!(w.to_bits(), CERTIFY_EXPECT_P32.0, "p32 width {:016x}", w.to_bits());
+        assert_eq!(e.to_bits(), CERTIFY_EXPECT_P32.1, "p32 err {:016x}", e.to_bits());
+        assert!(w / e < 10.0, "p32 ratio {}", w / e);
+
+        let (w, contained) = certify_probe64().unwrap();
+        assert!(contained, "bp64 probe containment");
+        assert_eq!(w.to_bits(), CERTIFY_EXPECT_BP64, "bp64 width {:016x}", w.to_bits());
+        assert!(w > 0.0 && w < 1e-9, "bp64 width {w:.3e}");
+    }
+
+    #[test]
+    fn certify_bench_smoke_small() {
+        // The CI smoke in-process: probes + a small certified/uncertified
+        // server pair. Success means containment held, the widths matched
+        // the mirror pins, every sampled response echoed a finite bound,
+        // and the violation counter stayed 0 — all hard gates inside.
+        let o = CertifyBenchOpts {
+            requests: 32,
+            clients: 2,
+            certify_rate: 4,
+            small: true,
+            json: None,
+        };
+        let lines = run_certify_bench(&o).expect("small certify-bench runs");
+        assert!(lines.iter().any(|l| l.contains("bit-equal the Python-mirror pins: yes")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("0 violations")), "{lines:?}");
     }
 
     #[test]

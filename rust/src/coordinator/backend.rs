@@ -40,6 +40,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::certify::{interval_forward, Interval, IntervalModel};
 use crate::error::{anyhow, Result};
 use crate::formats::posit::{BP32, BP64};
 use crate::runtime::{lit_f32_2d, Literal, LoadedModel, ModelWeights, Runtime};
@@ -104,6 +105,14 @@ impl WeightFormat {
         matches!(self, WeightFormat::Bp32)
     }
 
+    /// True when this tier's kernel family accumulates at f64 width, so
+    /// f64 HTTP activations can be staged losslessly through
+    /// [`InferenceBackend::run64`] instead of narrowed to f32 at
+    /// admission.
+    pub fn f64_activations(&self) -> bool {
+        matches!(self, WeightFormat::Bp64)
+    }
+
     /// Every servable tier, float baseline first (the `--models all`
     /// expansion and the registry tooling iterate this).
     pub const ALL: [WeightFormat; 3] =
@@ -139,6 +148,49 @@ impl BackendKind {
     }
 }
 
+/// A borrowed view of one request's **raw** (pre-staging) feature row,
+/// at whichever width the client submitted it. The certify hook
+/// ([`InferenceBackend::certify`]) consumes this to build the
+/// quantization hulls `[raw, staged]` its interval twin propagates.
+#[derive(Clone, Copy, Debug)]
+pub enum FeatureRow<'a> {
+    /// f32 features (the common path).
+    F32(&'a [f32]),
+    /// f64 features (the lossless 64-bit activation path).
+    F64(&'a [f64]),
+}
+
+impl FeatureRow<'_> {
+    /// Number of features in the row.
+    pub fn len(&self) -> usize {
+        match self {
+            FeatureRow::F32(x) => x.len(),
+            FeatureRow::F64(x) => x.len(),
+        }
+    }
+
+    /// True when the row is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of certifying one served request: summary statistics over the
+/// per-logit certified error bounds, plus the containment verdict the
+/// serving metrics gate on.
+#[derive(Clone, Copy, Debug)]
+pub struct CertifyReport {
+    /// Largest certified bound width across the request's logits (an f64
+    /// upper bound on `hi − lo`; +∞ when a bound is poisoned).
+    pub max_width: f64,
+    /// Mean certified bound width across the request's logits.
+    pub mean_width: f64,
+    /// True when some served logit fell **outside** its certified bound.
+    /// Must never happen — counted as
+    /// `positron_certify_violations_total`, gated to 0 in CI.
+    pub violation: bool,
+}
+
 /// A model executor owned by the server's worker thread. `x` is the
 /// staged row-major `rows×d` input batch (already input-quantized by the
 /// server when configured); `run` returns the row-major `rows×c` logits
@@ -168,6 +220,32 @@ pub trait InferenceBackend {
     fn run_traced(&mut self, x: &[f32], rows: usize, timer: &mut StageTimer) -> Result<&[f32]> {
         let _ = timer;
         self.run(x, rows)
+    }
+    /// True when this backend stages f64 activations losslessly through
+    /// [`InferenceBackend::run64`] (only 64-bit accumulation tiers).
+    /// The worker loop queries this once at startup to pick its staging
+    /// width.
+    fn supports_f64_activations(&self) -> bool {
+        false
+    }
+    /// Execute one f64-staged batch (row-major `rows×d`); returns
+    /// row-major `rows×c` f32 logits. Only meaningful when
+    /// [`supports_f64_activations`](Self::supports_f64_activations) is
+    /// true; the default errs so 32-bit backends need no changes.
+    fn run64(&mut self, x: &[f64], rows: usize) -> Result<&[f32]> {
+        let _ = (x, rows);
+        Err(anyhow!("backend {} does not accept f64 activations", self.name()))
+    }
+    /// Certify one already-served request: re-run it through the
+    /// backend's interval twin (raw features in, certified per-logit
+    /// `[lo, hi]` bounds out) and check the served `logits` lie inside
+    /// their bounds. `None` means this backend cannot certify (the
+    /// default — external backends have no interval twin) or the shapes
+    /// don't match; the sampling hook then records nothing. Runs off the
+    /// batch hot path, 1-in-N requests.
+    fn certify(&mut self, raw: FeatureRow<'_>, logits: &[f32]) -> Option<CertifyReport> {
+        let _ = (raw, logits);
+        None
     }
 }
 
@@ -214,6 +292,19 @@ pub struct NativeBackend {
     ht: Vec<f32>,
     lt: Vec<f32>,
     out: Vec<f32>,
+    /// Interval twin of the served model, decoded lazily on the first
+    /// `certify` call (certification off ⇒ zero cost and zero memory).
+    certify: Option<CertifyModel>,
+    /// Test-only fault injection: serve deliberately wrong (shrunk)
+    /// bounds so the violation counter's wiring can be proven live.
+    certify_shrink: bool,
+}
+
+/// The dequantized interval-twin snapshot at the tier's accumulation
+/// width (f32 for the bp32/f32 tiers, f64 for bp64).
+enum CertifyModel {
+    F32(IntervalModel<f32>),
+    F64(IntervalModel<f64>),
 }
 
 fn transpose_bits_u32(bits: &[i32], rows: usize, cols: usize) -> Vec<u32> {
@@ -291,11 +382,31 @@ fn run_lane_tier<E: LaneElem>(
     h: usize,
     c: usize,
     out: &mut Vec<f32>,
+    timer: Option<&mut StageTimer>,
+) {
+    run_lane_tier_from(st, x, rows, d, h, c, out, E::from_f32, timer)
+}
+
+/// The staging-generic body of [`run_lane_tier`]: `stage` converts each
+/// source activation into the tier's lane element (`E::from_f32` on the
+/// f32 path; the identity on the lossless f64 → f64 path of
+/// [`InferenceBackend::run64`]). Everything after staging is identical,
+/// so the two entry points share the numeric pipeline bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn run_lane_tier_from<S: Copy, E: LaneElem>(
+    st: &mut LaneState<E>,
+    x: &[S],
+    rows: usize,
+    d: usize,
+    h: usize,
+    c: usize,
+    out: &mut Vec<f32>,
+    stage: impl Fn(S) -> E,
     mut timer: Option<&mut StageTimer>,
 ) {
     let mut t = Instant::now();
     st.xt.resize(d * rows, E::ZERO);
-    transpose_map(x, &mut st.xt, rows, d, E::from_f32);
+    transpose_map(x, &mut st.xt, rows, d, stage);
     mark(&mut timer, Stage::Staging, &mut t);
     st.ht.resize(h * rows, E::ZERO);
     gemm::par_gemm_encoded_fast(&st.wt1, &st.xt, &mut st.ht, rows);
@@ -418,6 +529,8 @@ impl NativeBackend {
             ht: Vec::new(),
             lt: Vec::new(),
             out: Vec::new(),
+            certify: None,
+            certify_shrink: false,
         })
     }
 
@@ -425,6 +538,68 @@ impl NativeBackend {
     pub fn format(&self) -> WeightFormat {
         self.format
     }
+
+    /// Test-only fault injection: replace every certified bound with a
+    /// deliberately wrong (shrunk past the true upper endpoint) interval
+    /// so the served logit always falls outside it. Proves the
+    /// `positron_certify_violations_total` wiring end to end; never set
+    /// in production paths.
+    #[doc(hidden)]
+    pub fn inject_certify_violation(&mut self, on: bool) {
+        self.certify_shrink = on;
+    }
+
+    /// Decode the served weights into the interval twin once. `None`
+    /// only on an internal shape inconsistency (construction validated
+    /// the shapes, so this is fail-closed paranoia, not a live path).
+    fn build_certify_model(&self) -> Option<CertifyModel> {
+        let (d, h, c) = (self.d, self.h, self.c);
+        match &self.layers {
+            Layers::Bp32(st) => {
+                let mut w1t = vec![0f32; h * d];
+                st.wt1.decode_into(&mut w1t);
+                let mut w2t = vec![0f32; c * h];
+                st.wt2.decode_into(&mut w2t);
+                IntervalModel::new(d, h, c, w1t, st.b1.clone(), w2t, st.b2.clone())
+                    .map(CertifyModel::F32)
+            }
+            Layers::F32 { wt1, wt2, b1, b2 } => IntervalModel::new(
+                d,
+                h,
+                c,
+                wt1.as_ref().clone(),
+                b1.clone(),
+                wt2.as_ref().clone(),
+                b2.clone(),
+            )
+            .map(CertifyModel::F32),
+            Layers::Bp64(st) => {
+                let mut w1t = vec![0f64; h * d];
+                st.wt1.decode_into(&mut w1t);
+                let mut w2t = vec![0f64; c * h];
+                st.wt2.decode_into(&mut w2t);
+                IntervalModel::new(d, h, c, w1t, st.b1.clone(), w2t, st.b2.clone())
+                    .map(CertifyModel::F64)
+            }
+        }
+    }
+}
+
+/// Fold per-logit interval bounds into a [`CertifyReport`].
+/// `contained(j)` says whether served logit `j` lies inside `bounds[j]`
+/// (the f64-width tiers check through the f32 readout narrowing, so the
+/// compare differs per width).
+fn certify_report(widths: &[f64], contained: &[bool]) -> CertifyReport {
+    let mut max_width = 0.0f64;
+    let mut sum = 0.0f64;
+    for &w in widths {
+        if w > max_width {
+            max_width = w;
+        }
+        sum += w;
+    }
+    let mean_width = if widths.is_empty() { 0.0 } else { sum / widths.len() as f64 };
+    CertifyReport { max_width, mean_width, violation: contained.iter().any(|&ok| !ok) }
 }
 
 impl InferenceBackend for NativeBackend {
@@ -450,6 +625,108 @@ impl InferenceBackend for NativeBackend {
 
     fn run_traced(&mut self, x: &[f32], rows: usize, timer: &mut StageTimer) -> Result<&[f32]> {
         self.run_inner(x, rows, Some(timer))
+    }
+
+    fn supports_f64_activations(&self) -> bool {
+        matches!(self.layers, Layers::Bp64(_))
+    }
+
+    fn run64(&mut self, x: &[f64], rows: usize) -> Result<&[f32]> {
+        let (d, h, c) = (self.d, self.h, self.c);
+        if x.len() != rows * d {
+            return Err(anyhow!("native backend: {} f64 values staged for {rows}×{d}", x.len()));
+        }
+        match &mut self.layers {
+            Layers::Bp64(st) => {
+                // Identity staging: the f64 activations enter the f64
+                // kernel family untouched (for f32-exact inputs this is
+                // bit-identical to the widening `run` path).
+                run_lane_tier_from(st, x, rows, d, h, c, &mut self.out, |v| v, None);
+                Ok(&self.out[..rows * c]) // lint:allow(no-indexing): out was resized to rows*c above
+            }
+            _ => Err(anyhow!(
+                "native backend ({}) does not accept f64 activations",
+                self.format.name()
+            )),
+        }
+    }
+
+    fn certify(&mut self, raw: FeatureRow<'_>, logits: &[f32]) -> Option<CertifyReport> {
+        if raw.len() != self.d || logits.len() != self.c {
+            return None;
+        }
+        if self.certify.is_none() {
+            self.certify = self.build_certify_model();
+        }
+        let quantizes = self.format.quantizes_inputs();
+        let shrink = self.certify_shrink;
+        // Shrunk-bounds injection (test only): a point interval one
+        // float *above* the true upper endpoint can never contain the
+        // served logit (which is ≤ hi < next(hi)).
+        let maim32 = |b: Interval<f32>| -> Interval<f32> {
+            if shrink && !b.is_poisoned() {
+                Interval { lo: b.hi.next_float(), hi: b.hi.next_float() }
+            } else {
+                b
+            }
+        };
+        let maim64 = |b: Interval<f64>| -> Interval<f64> {
+            if shrink && !b.is_poisoned() {
+                Interval { lo: b.hi.next_float(), hi: b.hi.next_float() }
+            } else {
+                b
+            }
+        };
+        match self.certify.as_ref()? {
+            CertifyModel::F32(m) => {
+                // Per-feature quantization hull `[raw, staged]` — the
+                // exact pair the serving contract relates (bp32
+                // roundtrips inputs; the f32 baseline serves them raw).
+                let hull32 = |v: f32| -> Interval<f32> {
+                    if quantizes {
+                        let q: f32 = quantizer::dequantize_one(quantizer::quantize_one(v));
+                        Interval::hull(v, q)
+                    } else {
+                        Interval::point(v)
+                    }
+                };
+                let xints: Vec<Interval<f32>> = match raw {
+                    FeatureRow::F32(x) => x.iter().map(|&v| hull32(v)).collect(),
+                    // 32-bit tiers narrow f64 submissions at admission;
+                    // certify from the same narrowed row.
+                    FeatureRow::F64(x) => x.iter().map(|&v| hull32(v as f32)).collect(),
+                };
+                let bounds = interval_forward(m, &xints);
+                let widths: Vec<f64> = bounds.iter().map(|b| maim32(*b).width_f64()).collect();
+                let contained: Vec<bool> =
+                    bounds.iter().zip(logits).map(|(b, &l)| maim32(*b).contains(l)).collect();
+                Some(certify_report(&widths, &contained))
+            }
+            CertifyModel::F64(m) => {
+                // The bp64 tier stages activations exactly (f32 widens
+                // losslessly, run64 is the identity), so every input is
+                // a point interval.
+                let xints: Vec<Interval<f64>> = match raw {
+                    FeatureRow::F32(x) => x.iter().map(|&v| Interval::point(v as f64)).collect(),
+                    FeatureRow::F64(x) => x.iter().map(|&v| Interval::point(v)).collect(),
+                };
+                let bounds = interval_forward(m, &xints);
+                let widths: Vec<f64> = bounds.iter().map(|b| maim64(*b).width_f64()).collect();
+                // The served logit is the f32 *readout* of the f64
+                // accumulator. RNE narrowing is monotone, so any z in
+                // [lo, hi] narrows into [fl32(lo), fl32(hi)] — check
+                // containment through that narrowed interval.
+                let contained: Vec<bool> = bounds
+                    .iter()
+                    .zip(logits)
+                    .map(|(b, &l)| {
+                        let b = maim64(*b);
+                        !b.is_poisoned() && !l.is_nan() && b.lo as f32 <= l && l <= b.hi as f32
+                    })
+                    .collect();
+                Some(certify_report(&widths, &contained))
+            }
+        }
     }
 }
 
@@ -670,29 +947,43 @@ pub fn reference_forward(w: &ModelWeights, format: WeightFormat, x: &[f32]) -> V
             out
         }
         WeightFormat::Bp64 => {
-            let dq = |v: f32| -> f64 {
-                quantizer::dequantize64_one(quantizer::quantize64_one(v as f64))
-            };
-            let mut hid = vec![0f64; h];
-            for i in 0..h {
-                let mut acc = 0f64;
-                for p in 0..d {
-                    acc += dq(w.w1[p * h + i]) * x[p] as f64;
-                }
-                let v = acc + w.b1[i] as f64;
-                hid[i] = if v > 0.0 { v } else { 0.0 };
-            }
-            let mut out = vec![0f32; c];
-            for q in 0..c {
-                let mut acc = 0f64;
-                for i in 0..h {
-                    acc += dq(w.w2[i * c + q]) * hid[i];
-                }
-                out[q] = (acc + w.b2[q] as f64) as f32;
-            }
-            out
+            // Widening f32 → f64 is exact, so staging through the f64
+            // reference is bit-identical to the historical inline arm.
+            let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+            reference_forward64(w, &x64)
         }
     }
+}
+
+/// f64-activation reference for the BP64 tier: the exact chain of the
+/// `Bp64` arm of [`reference_forward`], but with the staged activations
+/// entering as f64 — the independent reference for the lossless 64-bit
+/// HTTP path ([`InferenceBackend::run64`]), which the native backend
+/// must match **bit-for-bit**.
+// lint:allow(no-indexing): every index ranges over the d×h×c shapes that
+// ModelWeights construction validates; x.len() == d is asserted on entry
+pub fn reference_forward64(w: &ModelWeights, x: &[f64]) -> Vec<f32> {
+    assert_eq!(x.len(), w.d, "reference_forward64: feature length");
+    let (d, h, c) = (w.d, w.h, w.c);
+    let dq = |v: f32| -> f64 { quantizer::dequantize64_one(quantizer::quantize64_one(v as f64)) };
+    let mut hid = vec![0f64; h];
+    for i in 0..h {
+        let mut acc = 0f64;
+        for p in 0..d {
+            acc += dq(w.w1[p * h + i]) * x[p];
+        }
+        let v = acc + w.b1[i] as f64;
+        hid[i] = if v > 0.0 { v } else { 0.0 };
+    }
+    let mut out = vec![0f32; c];
+    for q in 0..c {
+        let mut acc = 0f64;
+        for i in 0..h {
+            acc += dq(w.w2[i * c + q]) * hid[i];
+        }
+        out[q] = (acc + w.b2[q] as f64) as f32;
+    }
+    out
 }
 
 /// Deterministic synthetic model in the `weights.json` shape: random
@@ -929,6 +1220,111 @@ mod tests {
             xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "identity formats stay identities under timing"
         );
+    }
+
+    fn bits32(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn certify_contains_served_logits_all_formats() {
+        let w = synth_weights(6, 9, 4, 5, 0x5ee5);
+        for format in [WeightFormat::Bp32, WeightFormat::F32, WeightFormat::Bp64] {
+            let mut be = NativeBackend::from_weights(&w, format).unwrap();
+            for g in 0..w.batch {
+                let raw = &w.golden_x[g * 6..(g + 1) * 6];
+                let staged = stage_inputs(format, raw);
+                let served = be.run(&staged, 1).unwrap().to_vec();
+                let rep = be.certify(FeatureRow::F32(raw), &served).unwrap();
+                assert!(
+                    !rep.violation,
+                    "{} row {g}: served logit escaped its certified bound",
+                    format.name()
+                );
+                assert!(
+                    rep.max_width.is_finite() && rep.max_width > 0.0,
+                    "{} row {g}: width {} not finite-positive",
+                    format.name(),
+                    rep.max_width
+                );
+                assert!(rep.mean_width > 0.0 && rep.mean_width <= rep.max_width);
+            }
+            // Shape mismatches certify to None, not a bogus report.
+            assert!(be.certify(FeatureRow::F32(&[0.0; 3]), &[0.0; 4]).is_none());
+        }
+    }
+
+    #[test]
+    fn certify_off_grid_inputs_have_nontrivial_hulls_and_contain() {
+        // Off the 1/64 grid the bp32 input roundtrip genuinely moves
+        // values, so the hulls (and the certified widths) are nonzero.
+        let w = synth_weights(5, 8, 3, 2, 0xbead);
+        let mut be = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..25 {
+            let raw: Vec<f32> = (0..5).map(|_| (rng.f64() * 2.0 - 1.0) as f32 * 1.7).collect();
+            let staged = stage_inputs(WeightFormat::Bp32, &raw);
+            let served = be.run(&staged, 1).unwrap().to_vec();
+            let rep = be.certify(FeatureRow::F32(&raw), &served).unwrap();
+            assert!(!rep.violation);
+            assert!(rep.max_width.is_finite() && rep.max_width > 0.0);
+        }
+    }
+
+    #[test]
+    fn injected_shrunk_bounds_report_violation() {
+        let w = synth_weights(4, 6, 2, 1, 3);
+        let mut be = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        let raw = w.golden_x[..4].to_vec();
+        // Golden features are grid-exact, so staging is the identity.
+        let served = be.run(&raw, 1).unwrap().to_vec();
+        assert!(!be.certify(FeatureRow::F32(&raw), &served).unwrap().violation);
+        be.inject_certify_violation(true);
+        assert!(be.certify(FeatureRow::F32(&raw), &served).unwrap().violation);
+        be.inject_certify_violation(false);
+        assert!(!be.certify(FeatureRow::F32(&raw), &served).unwrap().violation);
+    }
+
+    #[test]
+    fn run64_matches_reference64_and_widened_run_bitwise() {
+        let w = synth_weights(5, 7, 3, 4, 0x64);
+        let mut be = NativeBackend::from_weights(&w, WeightFormat::Bp64).unwrap();
+        assert!(be.supports_f64_activations());
+        // f32-exact activations: the widened f64 staging must reproduce
+        // the f32 entry point bit-for-bit.
+        let x64: Vec<f64> = w.golden_x.iter().map(|&v| v as f64).collect();
+        let via32 = be.run(&w.golden_x, w.batch).unwrap().to_vec();
+        let via64 = be.run64(&x64, w.batch).unwrap().to_vec();
+        assert_eq!(bits32(&via32), bits32(&via64));
+        // Genuinely-64-bit activations against the f64 reference.
+        let mut rng = Rng::new(9);
+        let y64: Vec<f64> = (0..w.batch * 5).map(|_| (rng.f64() - 0.5) * 3.0).collect();
+        let got = be.run64(&y64, w.batch).unwrap().to_vec();
+        for g in 0..w.batch {
+            let want = reference_forward64(&w, &y64[g * 5..(g + 1) * 5]);
+            assert_eq!(bits32(&got[g * 3..(g + 1) * 3]), bits32(&want), "row {g}");
+        }
+        assert!(be.run64(&y64[..7], 1).is_err(), "bad shape must err");
+        // 32-bit tiers refuse f64 staging.
+        let mut be32 = NativeBackend::from_weights(&w, WeightFormat::Bp32).unwrap();
+        assert!(!be32.supports_f64_activations());
+        assert!(be32.run64(&x64, w.batch).is_err());
+    }
+
+    #[test]
+    fn certify_bp64_checks_through_f32_readout() {
+        let w = synth_weights(5, 7, 3, 2, 0x99);
+        let mut be = NativeBackend::from_weights(&w, WeightFormat::Bp64).unwrap();
+        let mut rng = Rng::new(11);
+        for _ in 0..10 {
+            let raw: Vec<f64> = (0..5).map(|_| (rng.f64() - 0.5) * 2.0).collect();
+            let served = be.run64(&raw, 1).unwrap().to_vec();
+            let rep = be.certify(FeatureRow::F64(&raw), &served).unwrap();
+            assert!(!rep.violation, "f32 readout of the f64 logit escaped its bound");
+            assert!(rep.max_width.is_finite() && rep.max_width > 0.0);
+        }
+        assert_eq!(FeatureRow::F64(&[1.0, 2.0]).len(), 2);
+        assert!(!FeatureRow::F32(&[1.0]).is_empty());
     }
 
     #[test]

@@ -67,7 +67,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Context, Result};
 use crate::json::Json;
 
-use super::server::{InferError, InferenceServer, ModelRegistry, Response};
+use super::server::{Features, InferError, InferenceServer, ModelRegistry, Response};
 use super::trace::{SpanRecord, Stage, StageTimer, TRACE_RING_CAP};
 
 #[cfg(unix)]
@@ -680,13 +680,21 @@ fn models_route(reg: &ModelRegistry) -> Reply {
     Reply::new(200, "OK", "application/json", body)
 }
 
-fn parse_features(body: &[u8]) -> std::result::Result<Vec<f32>, String> {
+/// Parse the `{"features": [..]}` body at the width the target tier
+/// serves: 64-bit activation tiers read full-precision f64 (staged
+/// losslessly), everything else reads f32 as before.
+fn parse_features(body: &[u8], f64_wanted: bool) -> std::result::Result<Features, String> {
     let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let missing = || "body must be {\"features\": [..]}".to_string();
     match Json::parse(text) {
-        Ok(j) => j
-            .get("features")
-            .and_then(|f| f.as_f32_vec())
-            .ok_or_else(|| "body must be {\"features\": [..]}".to_string()),
+        Ok(j) => {
+            let f = j.get("features").ok_or_else(missing)?;
+            if f64_wanted {
+                f.as_f64_vec().map(Features::F64).ok_or_else(missing)
+            } else {
+                f.as_f32_vec().map(Features::F32).ok_or_else(missing)
+            }
+        }
         Err(e) => Err(format!("bad JSON: {e}")),
     }
 }
@@ -729,10 +737,22 @@ fn render_infer_ok(resp: &Response, tracing: bool) -> Reply {
         out.push_str(&format!("{v:?}"));
     }
     out.push_str(&format!(
-        "],\"latency_us\":{},\"trace_id\":{}}}",
+        "],\"latency_us\":{},\"trace_id\":{}",
         resp.latency.as_micros(),
         resp.trace_id
     ));
+    // Sampled (certified) requests echo the max logit error bound so
+    // clients can see the guarantee without scraping /metrics. A
+    // poisoned (non-finite) bound serializes as null: "we sampled this
+    // request but could not certify it" is different from silence.
+    if let Some(w) = resp.certified_error_bound {
+        if w.is_finite() {
+            out.push_str(&format!(",\"certified_error_bound\":{w:?}"));
+        } else {
+            out.push_str(",\"certified_error_bound\":null");
+        }
+    }
+    out.push('}');
     let mut reply = Reply::new(200, "OK", "application/json", out);
     if tracing {
         let mut stages = resp.stages;
@@ -977,7 +997,7 @@ fn infer_blocking(
     accept: Duration,
 ) -> Reply {
     let t_parse = Instant::now();
-    let features = match parse_features(&req.body) {
+    let features = match parse_features(&req.body, srv.weight_format().f64_activations()) {
         Ok(f) => f,
         Err(msg) => return api_reply(ApiError::BadRequest(msg)),
     };
@@ -1298,7 +1318,7 @@ impl EventLoop {
                 } else {
                     let accept = req_start.elapsed();
                     let t_parse = Instant::now();
-                    match parse_features(&req.body) {
+                    match parse_features(&req.body, srv.weight_format().f64_activations()) {
                         Err(msg) => Slot::Ready(Rendered {
                             reply: api_reply(ApiError::BadRequest(msg)),
                             keep_alive,
@@ -1835,6 +1855,63 @@ mod tests {
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
         assert!(text.contains("Retry-After: 1\r\n"), "{text}");
         assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    /// Tier-width feature parsing: f64 tiers keep full precision
+    /// (values an f32 parse would collapse stay distinct), f32 tiers
+    /// keep the historical narrowing, and both reject non-arrays.
+    #[test]
+    fn parse_features_honours_requested_width() {
+        let body = br#"{"features": [0.1, 1.0000000000000002, -3.5]}"#;
+        match parse_features(body, true).unwrap() {
+            Features::F64(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[0].to_bits(), 0.1f64.to_bits());
+                assert_eq!(v[1].to_bits(), 1.0000000000000002f64.to_bits());
+            }
+            Features::F32(_) => panic!("asked for f64, got f32"),
+        }
+        match parse_features(body, false).unwrap() {
+            Features::F32(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[0].to_bits(), 0.1f32.to_bits());
+                assert_eq!(v[1].to_bits(), 1.0f32.to_bits(), "narrowing collapses the ULP");
+            }
+            Features::F64(_) => panic!("asked for f32, got f64"),
+        }
+        for wanted in [false, true] {
+            assert!(parse_features(br#"{"features": "nope"}"#, wanted).is_err());
+            assert!(parse_features(b"not json", wanted).is_err());
+        }
+    }
+
+    /// The optional `certified_error_bound` field: omitted for
+    /// unsampled requests, a finite f64 for certified ones, and null
+    /// when the sampled bound is poisoned (non-finite).
+    #[test]
+    fn infer_response_echoes_certified_bound() {
+        let mut resp = Response {
+            logits: vec![1.5, -2.0],
+            latency: Duration::from_micros(7),
+            trace_id: 42,
+            batch_id: 1,
+            batch_rows: 1,
+            stages: StageTimer::default(),
+            certified_error_bound: None,
+        };
+        let body = |r: &Response| render_infer_ok(r, false).body;
+        assert!(!body(&resp).contains("certified_error_bound"));
+
+        resp.certified_error_bound = Some(2.5e-6);
+        let text = body(&resp);
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("certified_error_bound").unwrap().as_f64(), Some(2.5e-6));
+        assert_eq!(j.get("trace_id").unwrap().as_f64(), Some(42.0));
+
+        resp.certified_error_bound = Some(f64::INFINITY);
+        let text = body(&resp);
+        assert!(text.contains("\"certified_error_bound\":null"), "{text}");
+        Json::parse(&text).unwrap();
     }
 
     #[test]

@@ -136,6 +136,32 @@ pub struct Metrics {
     hist_codec_ns: LogHistogram,
     /// Per-batch execute wall time distribution (ns buckets).
     hist_execute_ns: LogHistogram,
+    /// Requests certified through the interval twin (monotone).
+    certified_requests: AtomicU64,
+    /// Certified requests whose served logits fell OUTSIDE their
+    /// certified bounds. Must stay 0 — CI gates on it.
+    certify_violations: AtomicU64,
+    /// Per-certified-request max bound width (femtounits: 1 = 1e-15 in
+    /// logit units).
+    hist_certify_max_fm: LogHistogram,
+    /// Per-certified-request mean bound width (femtounits).
+    hist_certify_mean_fm: LogHistogram,
+}
+
+/// Convert a certified bound width to histogram femtounits (1e-15 of a
+/// logit unit): small enough that sub-quantization-noise widths still
+/// land in distinct power-of-2 buckets, while +∞ (poisoned bounds)
+/// saturates into the +Inf bucket.
+fn width_femtos(w: f64) -> u64 {
+    if !(w >= 0.0) {
+        return u64::MAX; // NaN-defensive: fail into the +Inf bucket
+    }
+    let f = w * 1e15;
+    if f >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        f as u64
+    }
 }
 
 /// Point-in-time view.
@@ -195,6 +221,17 @@ pub struct MetricsSnapshot {
     pub hist_codec_ns: HistSnapshot,
     /// Per-batch execute wall-time histogram (ns buckets).
     pub hist_execute_ns: HistSnapshot,
+    /// Requests certified through the interval twin.
+    pub certified_requests: u64,
+    /// Certified requests whose served logits escaped their bounds
+    /// (must be 0).
+    pub certify_violations: u64,
+    /// Max certified bound width per certified request (femtounit
+    /// buckets).
+    pub hist_certify_max_fm: HistSnapshot,
+    /// Mean certified bound width per certified request (femtounit
+    /// buckets).
+    pub hist_certify_mean_fm: HistSnapshot,
 }
 
 impl Metrics {
@@ -300,6 +337,18 @@ impl Metrics {
         self.codec_threads.store(threads as u64, Ordering::Relaxed);
     }
 
+    /// Record one certified request: its max/mean certified bound widths
+    /// (in logit units; converted to femtounit buckets) and whether the
+    /// served logits escaped their bounds (a violation — never expected).
+    pub fn record_certified(&self, max_width: f64, mean_width: f64, violation: bool) {
+        self.certified_requests.fetch_add(1, Ordering::Relaxed);
+        if violation {
+            self.certify_violations.fetch_add(1, Ordering::Relaxed);
+        }
+        self.hist_certify_max_fm.record(width_femtos(max_width));
+        self.hist_certify_mean_fm.record(width_femtos(mean_width));
+    }
+
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.max_us.fetch_max(us, Ordering::Relaxed);
@@ -351,6 +400,10 @@ impl Metrics {
             hist_queue_us: self.hist_queue_us.snapshot(),
             hist_codec_ns: self.hist_codec_ns.snapshot(),
             hist_execute_ns: self.hist_execute_ns.snapshot(),
+            certified_requests: self.certified_requests.load(Ordering::Relaxed),
+            certify_violations: self.certify_violations.load(Ordering::Relaxed),
+            hist_certify_max_fm: self.hist_certify_max_fm.snapshot(),
+            hist_certify_mean_fm: self.hist_certify_mean_fm.snapshot(),
         }
     }
 }
@@ -418,11 +471,15 @@ impl MetricsSnapshot {
                 self.conn_states[i]
             ));
         }
+        s.push_str(&format!("positron_certified_requests_total {}\n", self.certified_requests));
+        s.push_str(&format!("positron_certify_violations_total {}\n", self.certify_violations));
         self.hist_keepalive.render_into(&mut s, "positron_keepalive_requests");
         self.hist_latency_us.render_into(&mut s, "positron_request_latency_us");
         self.hist_queue_us.render_into(&mut s, "positron_queue_wait_us");
         self.hist_codec_ns.render_into(&mut s, "positron_codec_batch_ns");
         self.hist_execute_ns.render_into(&mut s, "positron_execute_batch_ns");
+        self.hist_certify_max_fm.render_into(&mut s, "positron_certify_bound_max_fm");
+        self.hist_certify_mean_fm.render_into(&mut s, "positron_certify_bound_mean_fm");
         s
     }
 }
@@ -640,6 +697,39 @@ mod tests {
                 assert!(docs.contains(name), "metric `{name}` missing from docs/OBSERVABILITY.md");
             }
         }
+    }
+
+    #[test]
+    fn certify_counters_and_width_histograms_render() {
+        let m = Metrics::default();
+        // Two clean certifications plus one violation.
+        m.record_certified(2e-6, 1e-6, false);
+        m.record_certified(4e-6, 2e-6, false);
+        m.record_certified(8e-6, 4e-6, true);
+        let s = m.snapshot();
+        assert_eq!(s.certified_requests, 3);
+        assert_eq!(s.certify_violations, 1);
+        assert_eq!(s.hist_certify_max_fm.count, 3);
+        assert_eq!(s.hist_certify_mean_fm.count, 3);
+        // femtounit conversion: 2e-6 → ~2e9 fm (float truncation may
+        // shave the last unit, so bound rather than pin the sum).
+        let sum = s.hist_certify_max_fm.sum;
+        assert!((13_999_999_990..=14_000_000_010).contains(&sum), "sum = {sum}");
+        let text = s.render();
+        for line in [
+            "positron_certified_requests_total 3",
+            "positron_certify_violations_total 1",
+            "positron_certify_bound_max_fm_count 3",
+            "positron_certify_bound_mean_fm_count 3",
+        ] {
+            assert!(text.contains(line), "missing `{line}` in:\n{text}");
+        }
+        // Poisoned (infinite-width) bounds saturate, never panic.
+        m.record_certified(f64::INFINITY, f64::INFINITY, true);
+        assert_eq!(m.snapshot().certify_violations, 2);
+        assert_eq!(super::width_femtos(f64::INFINITY), u64::MAX);
+        assert_eq!(super::width_femtos(f64::NAN), u64::MAX);
+        assert_eq!(super::width_femtos(0.0), 0);
     }
 
     #[test]

@@ -94,6 +94,13 @@ pub struct ServerConfig {
     /// `max_batch` (the builder validates this) or admission control
     /// would starve the batcher of full batches.
     pub max_inflight: usize,
+    /// Certify 1 in this many served requests through the backend's
+    /// interval twin ([`backend::InferenceBackend::certify`]): the
+    /// worker keeps a per-tier request counter and certifies every
+    /// `certify_rate`-th answered request — deterministic, no wallclock
+    /// or randomness in the choice. `0` disables (the default; the
+    /// interval model is then never even built).
+    pub certify_rate: usize,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +116,7 @@ impl Default for ServerConfig {
             deadline: None,
             tracing: true,
             max_inflight: 256,
+            certify_rate: 0,
         }
     }
 }
@@ -228,6 +236,13 @@ impl ServerConfigBuilder {
         self
     }
 
+    /// Certify 1 in `n` served requests through the backend's interval
+    /// twin (`0` disables — the default).
+    pub fn certify_rate(mut self, n: usize) -> Self {
+        self.cfg.certify_rate = n;
+        self
+    }
+
     /// Validate and produce the config.
     pub fn build(self) -> Result<ServerConfig> {
         let c = &self.cfg;
@@ -310,9 +325,57 @@ impl fmt::Display for InferError {
 /// instead of polling its receivers.
 pub type Notify = Arc<dyn Fn() + Send + Sync>;
 
+/// A submitted feature row at the width the client provided. f64 rows
+/// are staged losslessly only on 64-bit activation tiers
+/// ([`WeightFormat::f64_activations`] + a backend implementing
+/// [`backend::InferenceBackend::run64`]); on 32-bit tiers they are
+/// narrowed to f32 at admission, exactly as if the client had sent f32.
+#[derive(Clone, Debug)]
+pub enum Features {
+    /// f32 features (the common path).
+    F32(Vec<f32>),
+    /// f64 features (the lossless 64-bit activation path).
+    F64(Vec<f64>),
+}
+
+impl Features {
+    /// Number of features in the row.
+    pub fn len(&self) -> usize {
+        match self {
+            Features::F32(v) => v.len(),
+            Features::F64(v) => v.len(),
+        }
+    }
+
+    /// True when the row is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as the backend-facing raw-row view.
+    fn as_row(&self) -> backend::FeatureRow<'_> {
+        match self {
+            Features::F32(v) => backend::FeatureRow::F32(v),
+            Features::F64(v) => backend::FeatureRow::F64(v),
+        }
+    }
+}
+
+impl From<Vec<f32>> for Features {
+    fn from(v: Vec<f32>) -> Features {
+        Features::F32(v)
+    }
+}
+
+impl From<Vec<f64>> for Features {
+    fn from(v: Vec<f64>) -> Features {
+        Features::F64(v)
+    }
+}
+
 /// One inference request (internal).
 struct Request {
-    features: Vec<f32>,
+    features: Features,
     submitted: Instant,
     resp: SyncSender<ServeResult>,
     /// Process-unique trace id, echoed back in the [`Response`].
@@ -361,6 +424,11 @@ pub struct Response {
     /// Per-stage breakdown: the caller's pre-submit stages plus this
     /// request's queue wait plus the executing batch's shared stages.
     pub stages: StageTimer,
+    /// When this request was sampled by the certify hook
+    /// (`cfg.certify_rate`): the largest certified per-logit error-bound
+    /// width, echoed to HTTP clients as `certified_error_bound`. `None`
+    /// for unsampled requests or backends without an interval twin.
+    pub certified_error_bound: Option<f64>,
 }
 
 /// Handle to a running server.
@@ -512,7 +580,7 @@ impl InferenceServer {
     /// can be included before it is retained.
     pub fn try_infer_traced(
         &self,
-        features: Vec<f32>,
+        features: impl Into<Features>,
         pre: StageTimer,
     ) -> std::result::Result<Response, InferError> {
         let pending = self.submit(features, pre, None)?;
@@ -531,16 +599,26 @@ impl InferenceServer {
     /// of blocking a thread per request.
     pub fn submit(
         &self,
-        features: Vec<f32>,
+        features: impl Into<Features>,
         pre: StageTimer,
         notify: Option<Notify>,
     ) -> std::result::Result<Pending, InferError> {
+        let mut features = features.into();
         if features.len() != self.dims.0 {
             return Err(InferError::BadRequest(format!(
                 "expected {} features, got {}",
                 self.dims.0,
                 features.len()
             )));
+        }
+        // 32-bit tiers narrow f64 submissions at admission: the batch
+        // staging (and the certify hull) then see exactly what an f32
+        // client would have sent. 64-bit tiers keep the full row for
+        // lossless staging through `run64`.
+        if let Features::F64(v) = &features {
+            if !self.format.f64_activations() {
+                features = Features::F32(v.iter().map(|&x| x as f32).collect());
+            }
         }
         let (rtx, rrx) = sync_channel(1);
         let submitted = Instant::now();
@@ -770,9 +848,19 @@ fn worker_loop(
     let (d, c) = backend.dims();
     let max_batch = cfg.max_batch.min(backend.max_batch()).clamp(1, MAX_STAGED_BATCH);
     metrics.set_codec_threads(crate::vector::parallel::num_threads());
+    // Staging width, decided once: a 64-bit activation tier over a
+    // backend with a lossless f64 path stages f64 (f32 submissions
+    // widen exactly, so this is bit-identical to f32 staging for them);
+    // everything else stages f32.
+    let stage64 = cfg.weight_format.f64_activations() && backend.supports_f64_activations();
     // Persistent staging buffer: the steady-state loop performs no
     // per-request heap allocation on the quantize path.
-    let mut x = vec![0f32; max_batch * d];
+    let mut x = vec![0f32; if stage64 { 0 } else { max_batch * d }];
+    let mut x64 = vec![0f64; if stage64 { max_batch * d } else { 0 }];
+    // Deterministic certify sampling: a plain per-tier answered-request
+    // counter — every `certify_rate`-th request is certified (no
+    // wallclock, no randomness; restart ⇒ same schedule).
+    let mut certified_seq: u64 = 0;
     // Deadline admission: a queued request past its deadline is answered
     // immediately and never occupies a batch slot.
     let admit = |r: Request, batch: &mut Vec<Request>| {
@@ -837,13 +925,37 @@ fn worker_loop(
         // is reused, so this path performs zero per-request allocation.
         let t_stage = Instant::now();
         for (i, r) in batch.iter().enumerate() {
-            // lint:allow(no-indexing): x is resized to rows×d above and
-            // admission rejects any request whose feature length is not d
-            x[i * d..(i + 1) * d].copy_from_slice(&r.features);
+            // x/x64 are sized to max_batch×d above and admission
+            // rejects any request whose feature length is not d.
+            if stage64 {
+                // lint:allow(no-indexing): see staging-size note above
+                let dst = &mut x64[i * d..(i + 1) * d];
+                match &r.features {
+                    Features::F32(v) => {
+                        for (o, &s) in dst.iter_mut().zip(v) {
+                            *o = s as f64; // exact widening
+                        }
+                    }
+                    Features::F64(v) => dst.copy_from_slice(v),
+                }
+            } else {
+                // lint:allow(no-indexing): see staging-size note above
+                let dst = &mut x[i * d..(i + 1) * d];
+                match &r.features {
+                    Features::F32(v) => dst.copy_from_slice(v),
+                    // Unreachable in practice: submit narrows f64 rows
+                    // for 32-bit tiers at admission. Kept total anyway.
+                    Features::F64(v) => {
+                        for (o, &s) in dst.iter_mut().zip(v) {
+                            *o = s as f32;
+                        }
+                    }
+                }
+            }
         }
         bt.add_duration(Stage::Staging, t_stage.elapsed());
         let mut codec_worker_ns = 0u64;
-        if cfg.quantize_inputs && cfg.weight_format.quantizes_inputs() {
+        if !stage64 && cfg.quantize_inputs && cfg.weight_format.quantizes_inputs() {
             let t_codec = Instant::now();
             codec_worker_ns =
                 // lint:allow(no-indexing): x is resized to rows×d above
@@ -855,24 +967,56 @@ fn worker_loop(
         }
 
         let t_exec = Instant::now();
-        // lint:allow(no-indexing): x is resized to rows×d above
-        match backend.run_traced(&x[..rows * d], rows, &mut bt) {
+        let run_res = if stage64 {
+            // lint:allow(no-indexing): x64 is sized to max_batch×d above
+            backend.run64(&x64[..rows * d], rows)
+        } else {
+            // lint:allow(no-indexing): x is sized to max_batch×d above
+            backend.run_traced(&x[..rows * d], rows, &mut bt)
+        };
+        match run_res {
             Ok(out) => {
+                // Copy the logits out per request now — this ends the
+                // borrow of `backend`, so the certify hook below can
+                // take it mutably. (Each response owns its logits
+                // anyway; this is the same allocation as before, moved
+                // earlier.)
+                let logit_rows: Vec<Vec<f32>> = (0..rows)
+                    // lint:allow(no-indexing): the backend contract returns
+                    // at least rows×c logits (checked inside run/run_traced)
+                    .map(|i| out[i * c..(i + 1) * c].to_vec())
+                    .collect();
                 let exec_wall = t_exec.elapsed();
                 metrics.record_execute(exec_wall);
                 if bt.get(Stage::Execute) == 0 && bt.get(Stage::Readout) == 0 {
                     // Backend without stage attribution (the run_traced
-                    // default): charge the whole call to Execute.
+                    // default and the run64 path): charge the whole call
+                    // to Execute.
                     bt.add_duration(Stage::Execute, exec_wall);
                 }
                 metrics.record_batch_stages(bt.get(Stage::Staging), bt.get(Stage::Readout));
                 let tracing = tracer.enabled();
                 let batch_id = trace::next_trace_id();
                 let mut members = Vec::with_capacity(if tracing { rows } else { 0 });
-                for (i, r) in batch.into_iter().enumerate() {
-                    // lint:allow(no-indexing): the backend contract returns
-                    // at least rows×c logits (checked inside run/run_traced)
-                    let logits = out[i * c..(i + 1) * c].to_vec();
+                for (r, logits) in batch.into_iter().zip(logit_rows) {
+                    // Deterministic 1-in-N certification of the answer
+                    // being sent: the interval twin re-derives this
+                    // request's logit bounds from its *raw* features and
+                    // the served logits must lie inside them.
+                    let mut certified_error_bound = None;
+                    if cfg.certify_rate > 0 {
+                        certified_seq += 1;
+                        if certified_seq % cfg.certify_rate as u64 == 0 {
+                            if let Some(rep) = backend.certify(r.features.as_row(), &logits) {
+                                metrics.record_certified(
+                                    rep.max_width,
+                                    rep.mean_width,
+                                    rep.violation,
+                                );
+                                certified_error_bound = Some(rep.max_width);
+                            }
+                        }
+                    }
                     let latency = r.submitted.elapsed();
                     metrics.record_latency(latency);
                     let queue_wait = t_batch.saturating_duration_since(r.submitted);
@@ -891,6 +1035,7 @@ fn worker_loop(
                         batch_id,
                         batch_rows: rows as u32,
                         stages,
+                        certified_error_bound,
                     }));
                 }
                 if tracing {
@@ -996,6 +1141,84 @@ mod tests {
         assert_eq!(m.snapshot().requests, 2);
         // Budget is the sum across tiers (two defaults).
         assert_eq!(reg.max_inflight(), 512);
+    }
+
+    /// Deterministic 1-in-N certification: with `certify_rate = 2`,
+    /// exactly every second answered request carries a certified bound
+    /// and lands in the certified-request counter — and none violate.
+    #[test]
+    fn certify_rate_samples_deterministically() {
+        let w = backend::synth_weights(4, 8, 3, 4, 0xC0DE);
+        let cfg = ServerConfig::builder().certify_rate(2).build().unwrap();
+        let srv = InferenceServer::start_native(w.clone(), cfg).unwrap();
+        let mut bounds = Vec::new();
+        for _ in 0..6 {
+            // Sequential blocking requests ⇒ one per batch ⇒ the
+            // per-tier counter advances once per request.
+            let resp = srv.try_infer(w.golden_x[..4].to_vec()).unwrap();
+            bounds.push(resp.certified_error_bound);
+        }
+        let sampled: Vec<bool> = bounds.iter().map(|b| b.is_some()).collect();
+        assert_eq!(sampled, [false, true, false, true, false, true], "{bounds:?}");
+        for b in bounds.into_iter().flatten() {
+            assert!(b.is_finite() && b > 0.0, "certified bound {b} not finite-positive");
+        }
+        let s = srv.metrics().snapshot();
+        assert_eq!(s.certified_requests, 3);
+        assert_eq!(s.certify_violations, 0);
+        assert_eq!(s.hist_certify_max_fm.count, 3);
+        // Rate 0 (the default): nothing sampled, nothing recorded.
+        let srv0 = InferenceServer::start_native(w.clone(), ServerConfig::default()).unwrap();
+        let resp = srv0.try_infer(w.golden_x[..4].to_vec()).unwrap();
+        assert!(resp.certified_error_bound.is_none());
+        assert_eq!(srv0.metrics().snapshot().certified_requests, 0);
+    }
+
+    /// f64 submissions: narrowed at admission on 32-bit tiers (bit-equal
+    /// to sending the narrowed f32s), staged losslessly on the bp64 tier
+    /// (bit-equal to the f64 reference chain).
+    #[test]
+    fn f64_features_narrow_or_stage_losslessly_by_tier() {
+        let w = backend::synth_weights(4, 6, 3, 2, 0xF00D);
+        // A value that is NOT f32-exact: narrowing must round it.
+        let x64: Vec<f64> = vec![0.1, -0.7, 1.0 + 1e-12, 0.25];
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+
+        let srv32 = InferenceServer::start_native(
+            w.clone(),
+            ServerConfig::for_format(WeightFormat::Bp32),
+        )
+        .unwrap();
+        let via64 = srv32.try_infer_traced(x64.clone(), StageTimer::default()).unwrap();
+        let via32 = srv32.try_infer(x32.clone()).unwrap();
+        assert_eq!(
+            via64.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            via32.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "32-bit tier must treat f64 rows as their f32 narrowing"
+        );
+
+        let srv64 = InferenceServer::start_native(
+            w.clone(),
+            ServerConfig::for_format(WeightFormat::Bp64),
+        )
+        .unwrap();
+        let got = srv64.try_infer_traced(x64.clone(), StageTimer::default()).unwrap();
+        let want = backend::reference_forward64(&w, &x64);
+        assert_eq!(
+            got.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "bp64 tier must serve f64 rows losslessly (reference_forward64)"
+        );
+        // And f32 rows on the bp64 tier still match the widened chain.
+        let got32 = srv64.try_infer(x32.clone()).unwrap();
+        let want32 =
+            backend::reference_forward64(&w, &x32.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert_eq!(
+            got32.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want32.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Length validation applies to f64 rows too.
+        assert!(srv64.try_infer_traced(vec![0.5f64; 3], StageTimer::default()).is_err());
     }
 
     /// The completion notify fires exactly once per answered request —

@@ -78,6 +78,12 @@ impl Json {
         Some(self.as_arr()?.iter().filter_map(|v| v.as_f64()).map(|x| x as f32).collect())
     }
 
+    /// Array of numbers as f64, full precision (the 64-bit activation
+    /// tiers stage these losslessly).
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        Some(self.as_arr()?.iter().filter_map(|v| v.as_f64()).collect())
+    }
+
     /// Array of numbers as i64 (for bit patterns stored as integers).
     pub fn as_i64_vec(&self) -> Option<Vec<i64>> {
         Some(self.as_arr()?.iter().filter_map(|v| v.as_f64()).map(|x| x as i64).collect())

@@ -31,6 +31,11 @@
 //!   trajectories: the f32/bp32/quire32/f64/bp64/quire64 accumulation
 //!   tiers made comparable on one operator (see docs/SOLVERS.md and
 //!   `positron solver-bench`).
+//! - [`certify`] — interval-arithmetic error certification: directed-
+//!   rounding `Interval<E>` ops (outward `next_float`/`prev_float`
+//!   steps, NaN-poisoning) and an interval twin of the serving forward
+//!   pass producing per-logit certified error bounds, sampled 1-in-N in
+//!   production (see docs/CERTIFY.md and `positron certify-bench`).
 //! - [`hw`] — gate-level substrate (cell library, netlists, logic sim, STA,
 //!   power) and the six decoder/encoder circuits of Figs 8–13.
 //! - [`accuracy`] — decimal-accuracy curves, Golden Zone and fovea analysis
@@ -74,6 +79,7 @@ pub mod error;
 pub mod formats;
 pub mod solver;
 pub mod vector;
+pub mod certify;
 pub mod hw;
 pub mod accuracy;
 pub mod runtime;

@@ -94,6 +94,11 @@ fn run(cmd: Command) -> positron::error::Result<()> {
                 println!("{line}");
             }
         }
+        Command::CertifyBench(o) => {
+            for line in cli::run_certify_bench(&o).map_err(positron::error::Error::msg)? {
+                println!("{line}");
+            }
+        }
     }
     Ok(())
 }
@@ -103,7 +108,8 @@ fn serve(o: ServeOpts) -> positron::error::Result<()> {
         let mut b = ServerConfig::builder()
             .backend(o.backend)
             .format(format)
-            .tracing(o.tracing);
+            .tracing(o.tracing)
+            .certify_rate(o.certify_rate);
         if let Some(ms) = o.deadline_ms {
             b = b.deadline(Duration::from_millis(ms));
         }

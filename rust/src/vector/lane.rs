@@ -168,6 +168,13 @@ pub trait LaneElem:
     fn is_nan(self) -> bool;
     /// Raw bit pattern widened to u64 (tests and hashing).
     fn to_bits_u64(self) -> u64;
+    /// Next representable float toward +∞ (NaN and +∞ return self;
+    /// ±0 → smallest positive subnormal). The outward-rounding step of
+    /// the certify interval twin.
+    fn next_float(self) -> Self;
+    /// Previous representable float toward −∞ (NaN and −∞ return self;
+    /// ±0 → smallest-magnitude negative subnormal).
+    fn prev_float(self) -> Self;
 
     /// Word → u64 (zero-extending; feeds the general `PositSpec` codec).
     fn word_to_u64(w: Self::Word) -> u64;
@@ -412,6 +419,38 @@ macro_rules! lane_elem_impl {
             #[inline(always)]
             fn to_bits_u64(self) -> u64 {
                 self.to_bits() as u64
+            }
+
+            #[inline(always)]
+            fn next_float(self) -> Self {
+                if self.is_nan() || self == <$f>::INFINITY {
+                    return self;
+                }
+                if self == 0.0 {
+                    return <$f>::from_bits(1);
+                }
+                let b = self.to_bits();
+                if b >> ($word_bits - 1) == 0 {
+                    <$f>::from_bits(b + 1)
+                } else {
+                    <$f>::from_bits(b - 1)
+                }
+            }
+
+            #[inline(always)]
+            fn prev_float(self) -> Self {
+                if self.is_nan() || self == <$f>::NEG_INFINITY {
+                    return self;
+                }
+                if self == 0.0 {
+                    return <$f>::from_bits(((1 as $w) << ($word_bits - 1)) | 1);
+                }
+                let b = self.to_bits();
+                if b >> ($word_bits - 1) == 0 {
+                    <$f>::from_bits(b - 1)
+                } else {
+                    <$f>::from_bits(b + 1)
+                }
             }
 
             #[inline(always)]
@@ -791,6 +830,32 @@ mod tests {
         assert!(<f32 as LaneElem>::spec_supported(&BP16));
         assert!(!<f32 as LaneElem>::spec_supported(&BP64));
         assert!(<f64 as LaneElem>::spec_supported(&BP64));
+    }
+
+    #[test]
+    fn next_prev_float_edges_both_widths() {
+        // Mirror of test_next_prev_float_edges in the Python certify
+        // mirror: zero crossings, subnormal steps, infinities, NaN.
+        assert_eq!(0.0f32.next_float().to_bits(), 1);
+        assert_eq!(0.0f32.prev_float().to_bits(), 0x8000_0001);
+        assert_eq!((-0.0f32).next_float().to_bits(), 1);
+        assert_eq!(f32::from_bits(1).prev_float(), 0.0);
+        assert_eq!(f32::MAX.next_float(), f32::INFINITY);
+        assert_eq!(f32::INFINITY.next_float(), f32::INFINITY);
+        assert_eq!(f32::NEG_INFINITY.next_float(), f32::MIN);
+        assert_eq!(f32::NEG_INFINITY.prev_float(), f32::NEG_INFINITY);
+        assert!(f32::NAN.next_float().is_nan() && f32::NAN.prev_float().is_nan());
+        assert!(1.0f32.next_float() > 1.0 && 1.0f32.prev_float() < 1.0);
+
+        assert_eq!(0.0f64.next_float().to_bits(), 1);
+        assert_eq!(0.0f64.prev_float().to_bits(), 0x8000_0000_0000_0001);
+        assert_eq!(f64::MAX.next_float(), f64::INFINITY);
+        assert_eq!(f64::NEG_INFINITY.prev_float(), f64::NEG_INFINITY);
+        assert!(f64::NAN.prev_float().is_nan());
+        let x = 1.5f64;
+        assert_eq!(x.next_float().prev_float(), x);
+        assert_eq!(x.prev_float().next_float(), x);
+        assert_eq!((-x).next_float().to_bits(), (-x).to_bits() - 1);
     }
 
     #[test]

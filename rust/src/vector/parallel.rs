@@ -108,6 +108,46 @@ where
     });
 }
 
+/// Fork-join over **explicit** contiguous row blocks: `bounds` is an
+/// ascending row-boundary list starting at 0 and ending at the row count
+/// (shard `i` covers rows `bounds[i]..bounds[i + 1]`; empty shards spawn
+/// nothing). The variable-boundary form of [`for_each_row_block`] for
+/// callers whose per-row cost is non-uniform — the sparse kernels pass
+/// boundaries balanced by stored-entry count instead of row count. The
+/// contract is unchanged: `f` must produce each row independently of the
+/// split, so results are bit-identical to serial for any boundary
+/// choice.
+pub fn for_each_row_block_at<T, F>(bounds: &[usize], width: usize, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(bounds.len() >= 2 && bounds[0] == 0, "row bounds: must start at 0");
+    assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "row bounds: must be ascending");
+    let rows = bounds[bounds.len() - 1];
+    assert_eq!(data.len(), rows * width, "row sharding: shape mismatch");
+    let shards = bounds.len() - 1;
+    if shards <= 1 {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest = data;
+        for i in 0..shards {
+            let nrows = bounds[i + 1] - bounds[i];
+            let (block, tail) = std::mem::take(&mut rest).split_at_mut(nrows * width);
+            rest = tail;
+            let r0 = bounds[i];
+            if i == shards - 1 {
+                fr(r0, block);
+            } else if nrows > 0 {
+                s.spawn(move || fr(r0, block));
+            }
+        }
+    });
+}
+
 /// Fork-join over contiguous element blocks of `out`: `f(offset, block)`.
 pub fn for_each_block<T, F>(threads: usize, out: &mut [T], f: F)
 where
@@ -400,6 +440,36 @@ mod tests {
             let expect: Vec<u32> = (1..=(rows * width) as u32).collect();
             assert_eq!(data, expect, "t={t}");
         }
+    }
+
+    #[test]
+    fn explicit_bounds_cover_exactly_once() {
+        // Variable boundaries (including empty shards) write every
+        // element exactly once with the right row index.
+        let (rows, width) = (13usize, 5usize);
+        for bounds in [
+            vec![0, 13],
+            vec![0, 1, 13],
+            vec![0, 0, 4, 4, 9, 13],
+            vec![0, 2, 2, 2, 13, 13],
+        ] {
+            let mut data = vec![0u32; rows * width];
+            for_each_row_block_at(&bounds, width, &mut data, |r0, block| {
+                let nrows = block.len() / width;
+                for r in 0..nrows {
+                    for c in 0..width {
+                        block[r * width + c] += ((r0 + r) * width + c) as u32 + 1;
+                    }
+                }
+            });
+            let expect: Vec<u32> = (1..=(rows * width) as u32).collect();
+            assert_eq!(data, expect, "bounds={bounds:?}");
+        }
+        // Zero-row degenerate forms: the single (or last) shard still
+        // gets one call, with an empty block.
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_row_block_at(&[0, 0], 3, &mut empty, |_, b| assert!(b.is_empty()));
+        for_each_row_block_at(&[0, 0, 0], 3, &mut empty, |_, b| assert!(b.is_empty()));
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Sparse (CSR) matrix type and SpMV kernels in the same three flavors
 //! as the dense [`super::kernels`] gemv family — **fast**, **quire-exact**,
 //! and **decode-fused quantized-weight** — plus row-sharded `par_spmv_*`
-//! forms that are bit-identical to serial for any thread count.
+//! forms that are bit-identical to serial for any thread count. The
+//! sparse shards are **nnz-balanced** ([`nnz_shard_bounds`]): boundaries
+//! land where the CSR prefix-nnz crosses `i·nnz/t`, not at equal row
+//! counts, so skewed (power-law) nnz profiles still spread work evenly.
 //!
 //! The fast row kernel is *chunk-aware*: a stored entry at column `c`
 //! lands in accumulator `c & 7` while `c < cols - cols % 8`, and the
@@ -310,14 +313,44 @@ pub fn spmv_bp_weights_fast<E: LaneElem>(m: &CsrWords<E>, x: &[E], y: &mut [E]) 
 // ----------------------------------------------------------------------
 // Row-sharded forms (the unified par_* family): contiguous row blocks,
 // one serial worker per shard, bit-identical to serial for any thread
-// count.
+// count. Unlike the dense kernels (uniform per-row cost → equal row
+// counts), the sparse shards balance **stored entries**: boundaries come
+// from a binary search over the monotone CSR `row_ptr`, so a power-law
+// nnz profile (most entries in a few rows) no longer serializes behind
+// an equal-rows split. The split never changes results — each output
+// row is one self-contained serial kernel call either way.
 // ----------------------------------------------------------------------
+
+/// Row boundaries splitting `rows = row_ptr.len() - 1` rows into at most
+/// `threads` contiguous shards of near-equal stored-entry count:
+/// boundary `i` is the first row whose prefix nnz (`row_ptr[r]`) reaches
+/// `i·nnz/threads`, found with [`slice::partition_point`] over the
+/// monotone prefix array. Rows are never split, so one pathological row
+/// bounds the achievable balance, but every shard's nnz is otherwise
+/// within one row of the ideal `nnz/threads`. Always starts at 0, ends
+/// at `rows`, and is non-decreasing — the
+/// [`parallel::for_each_row_block_at`] contract.
+pub fn nnz_shard_bounds(row_ptr: &[usize], threads: usize) -> Vec<usize> {
+    let rows = row_ptr.len().saturating_sub(1);
+    let nnz = row_ptr.last().copied().unwrap_or(0);
+    let t = threads.clamp(1, rows.max(1));
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for i in 1..t {
+        let target = ((i as u128 * nnz as u128) / t as u128) as usize;
+        let b = row_ptr.partition_point(|&p| p < target).min(rows);
+        let prev = bounds[bounds.len() - 1];
+        bounds.push(b.max(prev));
+    }
+    bounds.push(rows);
+    bounds
+}
 
 /// Sharded fast SpMV with an explicit thread count.
 pub fn par_spmv_with<E: LaneElem>(threads: usize, m: &Csr<E>, x: &[E], y: &mut [E]) {
     assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
     assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
-    parallel::for_each_row_block(threads, m.rows, 1, y, |r0, yb| {
+    parallel::for_each_row_block_at(&nnz_shard_bounds(&m.row_ptr, threads), 1, y, |r0, yb| {
         spmv_rows(m, x, r0, yb);
     });
 }
@@ -332,7 +365,7 @@ pub fn par_spmv<E: LaneElem>(m: &Csr<E>, x: &[E], y: &mut [E]) {
 pub fn par_spmv_quire_with<E: LaneElem>(threads: usize, m: &Csr<E>, x: &[E], y: &mut [E]) {
     assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
     assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
-    parallel::for_each_row_block(threads, m.rows, 1, y, |r0, yb| {
+    parallel::for_each_row_block_at(&nnz_shard_bounds(&m.row_ptr, threads), 1, y, |r0, yb| {
         let mut q = E::quire();
         spmv_quire_rows(&mut q, m, x, r0, yb);
     });
@@ -352,7 +385,7 @@ pub fn par_spmv_bp_weights_fast_with<E: LaneElem>(
 ) {
     assert_eq!(x.len(), m.cols, "spmv: x length mismatch");
     assert_eq!(y.len(), m.rows, "spmv: y length mismatch");
-    parallel::for_each_row_block(threads, m.rows, 1, y, |r0, yb| {
+    parallel::for_each_row_block_at(&nnz_shard_bounds(&m.row_ptr, threads), 1, y, |r0, yb| {
         spmv_bp_rows(m, x, r0, yb);
     });
 }
@@ -483,6 +516,93 @@ mod tests {
                 assert_eq!(yw[r].to_bits(), want.to_bits(), "bp row {r}");
             }
             assert_eq!(mw.decode().to_dense().len(), rows * cols);
+        }
+    }
+
+    #[test]
+    fn nnz_shard_bounds_are_valid_and_balanced() {
+        // Degenerate shapes.
+        assert_eq!(nnz_shard_bounds(&[0], 4), vec![0, 0]);
+        assert_eq!(nnz_shard_bounds(&[0, 0, 0], 2), vec![0, 0, 2]);
+        assert_eq!(nnz_shard_bounds(&[0, 3, 5], 1), vec![0, 2]);
+        // More threads than rows clamps to one row per shard at most.
+        assert_eq!(nnz_shard_bounds(&[0, 1, 2], 16), vec![0, 1, 2]);
+
+        // Power-law profile: row r holds ~n/(r+1) entries, so an
+        // equal-rows split would put over half the work in shard 0.
+        let rows = 64usize;
+        let mut row_ptr = vec![0usize; rows + 1];
+        for r in 0..rows {
+            row_ptr[r + 1] = row_ptr[r] + (1024 / (r + 1)).max(1);
+        }
+        let nnz = row_ptr[rows];
+        for t in [2usize, 3, 7, 16] {
+            let b = nnz_shard_bounds(&row_ptr, t);
+            assert_eq!(b.len(), t + 1, "t={t}");
+            assert_eq!(b[0], 0, "t={t}");
+            assert_eq!(b[t], rows, "t={t}");
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "t={t}: not ascending");
+            // Each shard's nnz is within one row of the ideal: the
+            // boundary lands at the first row whose prefix crosses the
+            // target, so a shard can overshoot by at most its boundary
+            // row's nnz (max single-row nnz = 1024 here).
+            let max_row = (0..rows).map(|r| row_ptr[r + 1] - row_ptr[r]).max().unwrap();
+            for i in 0..t {
+                let shard = row_ptr[b[i + 1]] - row_ptr[b[i]];
+                assert!(
+                    shard <= nnz / t + max_row + 1,
+                    "t={t} shard {i}: {shard} nnz vs ideal {}",
+                    nnz / t
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_spmv_power_law_nnz_bit_identical_for_any_thread_count() {
+        // Zipf-style operator: row r dense in its first ~cols/(r+1)
+        // columns — the shape the nnz-balanced boundaries exist for.
+        // Every flavor must stay bit-identical to serial at every t.
+        let mut rng = Rng::new(0x5a05);
+        let (rows, cols) = (48usize, 96usize);
+        let raw = mk_f32(&mut rng, rows * cols);
+        let mut trips = Vec::new();
+        for r in 0..rows {
+            let k = (cols / (r + 1)).max(1);
+            for c in 0..k {
+                trips.push((r, c, raw[r * cols + c]));
+            }
+        }
+        let m = Csr::from_triplets(rows, cols, &trips).unwrap();
+        let mw = m.encode_bp();
+        let x = mk_f32(&mut rng, cols);
+        let mut serial = vec![0f32; rows];
+        spmv(&m, &x, &mut serial);
+        let mut serial_q = vec![0f32; rows];
+        let mut q = <f32 as LaneElem>::quire();
+        spmv_quire(&mut q, &m, &x, &mut serial_q);
+        let mut serial_w = vec![0f32; rows];
+        spmv_bp_weights_fast(&mw, &x, &mut serial_w);
+        for t in [1, 2, 7] {
+            let mut y = vec![0f32; rows];
+            par_spmv_with(t, &m, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fast t={t}"
+            );
+            par_spmv_quire_with(t, &m, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_q.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "quire t={t}"
+            );
+            par_spmv_bp_weights_fast_with(t, &mw, &x, &mut y);
+            assert_eq!(
+                y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial_w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "bp t={t}"
+            );
         }
     }
 
